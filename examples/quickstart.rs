@@ -1,0 +1,66 @@
+//! Quickstart: build the SLO-aware scaler for DeepSeek-V2 on the paper's
+//! testbed profile and ask it for a deployment plan.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use janus::config::hardware::paper_testbed;
+use janus::config::models;
+use janus::config::serving::{self, SchedulerKind, Slo};
+use janus::routing::gate::{ExpertPopularity, GateSim};
+use janus::routing::trace::ActivationTrace;
+use janus::scaling::{AmaxTable, Scaler};
+use janus::util::rng::Rng;
+
+fn main() {
+    // 1. Pick a model + hardware profile from the catalog.
+    let model = models::deepseek_v2();
+    let hw = paper_testbed();
+    let capacity = serving::default_capacity(&model, &hw);
+    println!(
+        "{}: {} experts x {} MoE layers, C = {capacity} expert slots/GPU",
+        model.name,
+        model.experts,
+        model.moe_layers()
+    );
+
+    // 2. Warm an activation trace (in production this is the live gate
+    //    output; here a ShareGPT-like synthetic stream).
+    let mut rng = Rng::seed_from_u64(7);
+    let gate = GateSim::new(
+        model.experts,
+        model.top_k,
+        &ExpertPopularity::Zipf { s: 0.4 },
+        &mut rng,
+    );
+    let mut trace = ActivationTrace::new(model.experts, model.top_k, 8192);
+    trace.record_batch(&gate.sample_batch(&mut rng, 8192));
+
+    // 3. Build the Monte-Carlo â_max table + scaler (§3.5).
+    let n_e_min = model.experts.div_ceil(capacity);
+    let n_e_values: Vec<usize> = (n_e_min..=16).collect();
+    let amax = AmaxTable::build(
+        &trace,
+        &n_e_values,
+        &AmaxTable::default_grid(4096),
+        capacity,
+        SchedulerKind::Aebs,
+        8,
+        &mut rng,
+    );
+    let scaler = Scaler::new(model, hw, amax, 16);
+
+    // 4. Ask for plans across a demand sweep.
+    println!("\ndemand (tok/s) -> chosen deployment");
+    for demand in [500.0, 2000.0, 5000.0, 10_000.0, 20_000.0] {
+        match scaler.optimize(demand, Slo::from_ms(200.0), 512.0) {
+            Some(p) => println!(
+                "  {demand:>7.0}  {}  B*={:<5.0} TPOT={:>5.1}ms  TPG={:>4.0}",
+                p.deployment,
+                p.b_star,
+                p.tpot * 1e3,
+                p.tpg
+            ),
+            None => println!("  {demand:>7.0}  infeasible"),
+        }
+    }
+}

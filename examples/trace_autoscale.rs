@@ -1,0 +1,67 @@
+//! Replay a 24-hour diurnal production-like trace through the Janus
+//! autoscaler and the baselines, printing per-interval decisions and the
+//! GPU-hour comparison (the Fig 11 experiment as a library example).
+//!
+//! Run: `cargo run --release --example trace_autoscale -- [--hours H]`
+
+use janus::baselines::{JanusSystem, MegaScaleInfer, SgLang};
+use janus::config::hardware::autoscale_pool;
+use janus::config::models;
+use janus::config::serving::Slo;
+use janus::routing::gate::ExpertPopularity;
+use janus::sim::autoscale_sim::AutoscaleSim;
+use janus::util::cli::Args;
+use janus::util::table::{fnum, Table};
+use janus::workload::lengths::LengthModel;
+use janus::workload::trace::{DiurnalTrace, TraceConfig};
+
+fn main() {
+    let args = Args::from_env();
+    let mut cfg = TraceConfig::one_day();
+    cfg.hours = args.f64_or("hours", 24.0);
+    cfg.mean_rate = args.f64_or("rate", 40.0);
+    let trace = DiurnalTrace::generate(cfg);
+    println!(
+        "trace: {:.0}h, mean {:.1} req/s, peak/mean {:.1}",
+        trace.config.hours,
+        trace.config.mean_rate,
+        trace.peak_to_mean()
+    );
+    // Tokens per request from the ShareGPT-like length model's mean.
+    let lengths = LengthModel::sharegpt();
+    let _ = lengths; // avg output 256 — used directly below
+    let sim = AutoscaleSim::new(900.0, 256.0, Slo::from_ms(200.0));
+    let hw = autoscale_pool();
+    let model = models::deepseek_v2();
+    let pop = ExpertPopularity::Zipf { s: 0.4 };
+
+    let mut janus = JanusSystem::build(model.clone(), hw.clone(), &pop, 32, 1);
+    let mut sgl = SgLang::build(model.clone(), hw.clone(), &pop, 2);
+    let mut msi = MegaScaleInfer::build(model, hw, &pop, 32, 3);
+    let rj = sim.run(&mut janus, &trace);
+    let rs = sim.run(&mut sgl, &trace);
+    let rm = sim.run(&mut msi, &trace);
+
+    let mut t = Table::new(["hour", "demand tok/s", "Janus", "SGLang", "MSI"]);
+    for (i, rec) in rj.intervals.iter().enumerate().step_by(2) {
+        t.row([
+            fnum(rec.t_start / 3600.0, 1),
+            fnum(rec.demand, 0),
+            format!("{:>2} ({})", rec.gpus, rec.label),
+            rs.intervals[i].gpus.to_string(),
+            rm.intervals[i].gpus.to_string(),
+        ]);
+    }
+    t.print();
+
+    println!();
+    let mut s = Table::new(["system", "GPU-hours", "savings vs SGLang"]);
+    for r in [&rj, &rm, &rs] {
+        s.row([
+            r.system.to_string(),
+            fnum(r.gpu_hours, 1),
+            format!("{:.1}%", (1.0 - r.gpu_hours / rs.gpu_hours) * 100.0),
+        ]);
+    }
+    s.print();
+}

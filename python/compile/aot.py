@@ -1,0 +1,162 @@
+"""AOT bridge: lower TinyMoE's disaggregated blocks to HLO *text* and
+export the weights for the Rust runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Outputs (in --out, default ../artifacts):
+  embed.hlo.txt  attn.hlo.txt  moe.hlo.txt  head.hlo.txt  gate.hlo.txt
+  weights.bin    meta.json     .stamp
+
+`make artifacts` is a no-op when inputs are unchanged (the Makefile
+dependency-checks this package's sources).
+
+Weight container (weights.bin, little-endian):
+  magic "JWB1" | u32 count | count × tensor
+  tensor: u16 name_len | name utf-8 | u8 dtype (0=f32, 1=i32)
+        | u8 ndim | ndim × u32 dims | raw data
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as m
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_weights(path: str, params: dict) -> None:
+    with open(path, "wb") as f:
+        f.write(b"JWB1")
+        f.write(struct.pack("<I", len(params)))
+        for name in sorted(params):
+            arr = np.asarray(params[name])
+            if arr.dtype == np.float32:
+                dt = 0
+            elif arr.dtype == np.int32:
+                dt = 1
+            else:
+                raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", dt, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def specs(cfg: m.TinyMoeConfig):
+    """Example-argument ShapeDtypeStructs per block (static shapes)."""
+    t, d = cfg.batch_tokens, cfg.d_model
+    f32 = jnp.float32
+    i32 = jnp.int32
+    s = jax.ShapeDtypeStruct
+    cache = s((t, cfg.max_ctx, cfg.n_kv_heads, cfg.head_dim), f32)
+    return {
+        "embed": (s((t,), i32), s((cfg.vocab, d), f32)),
+        "attn": (
+            s((t, d), f32),                     # x
+            s((d,), f32), s((d,), f32),         # norm1, norm2
+            s((d, cfg.qkv_dim), f32),           # wq
+            s((d, cfg.n_kv_heads * cfg.head_dim), f32),  # wk
+            s((d, cfg.n_kv_heads * cfg.head_dim), f32),  # wv
+            s((cfg.qkv_dim, d), f32),           # wo
+            cache, cache,                       # k_cache, v_cache
+            s((t,), i32),                       # lengths
+        ),
+        "moe": (
+            s((t, d), f32),                              # hn
+            s((d, cfg.experts), f32),                    # wgate
+            s((cfg.experts, d, cfg.d_expert), f32),      # w1
+            s((cfg.experts, d, cfg.d_expert), f32),      # w3
+            s((cfg.experts, cfg.d_expert, d), f32),      # w2
+            s((cfg.experts, 16), i32),                   # host_matrix (n_e≤16)
+            s((), i32),                                  # self_id
+        ),
+        "head": (s((t, d), f32), s((d,), f32), s((cfg.vocab, d), f32)),
+        "gate": (s((t, d), f32), s((d, cfg.experts), f32)),
+    }
+
+
+def lower_all(cfg: m.TinyMoeConfig):
+    sp = specs(cfg)
+    gate_fn = lambda x, wg: __import__(  # noqa: E731 — tiny wrapper
+        "compile.kernels.topk_gate", fromlist=["topk_gate"]
+    ).topk_gate(x, wg, cfg.top_k)
+    blocks = {
+        "embed": (m.embed_block, sp["embed"]),
+        "attn": (m.attn_block, sp["attn"]),
+        "moe": (m.moe_instance_block, sp["moe"]),
+        "head": (m.head_block, sp["head"]),
+        "gate": (gate_fn, sp["gate"]),
+    }
+    out = {}
+    for name, (fn, args) in blocks.items():
+        lowered = jax.jit(fn).lower(*args)
+        out[name] = to_hlo_text(lowered)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    cfg = m.CFG
+
+    hlos = lower_all(cfg)
+    for name, text in hlos.items():
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    params = m.init_params(cfg, seed=args.seed)
+    wpath = os.path.join(args.out, "weights.bin")
+    write_weights(wpath, {k: np.asarray(v) for k, v in params.items()})
+    print(f"wrote {wpath} ({os.path.getsize(wpath)} bytes)")
+
+    meta = {
+        "model": "TinyMoE",
+        "layers": cfg.layers,
+        "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads,
+        "n_kv_heads": cfg.n_kv_heads,
+        "head_dim": cfg.head_dim,
+        "experts": cfg.experts,
+        "top_k": cfg.top_k,
+        "d_expert": cfg.d_expert,
+        "vocab": cfg.vocab,
+        "max_ctx": cfg.max_ctx,
+        "batch_tokens": cfg.batch_tokens,
+        "max_moe_instances": 16,
+        "seed": args.seed,
+        "blocks": sorted(hlos),
+    }
+    with open(os.path.join(args.out, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    with open(os.path.join(args.out, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print("artifacts complete")
+
+
+if __name__ == "__main__":
+    main()

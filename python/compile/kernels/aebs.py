@@ -1,0 +1,93 @@
+"""L1 kernel: Activated-Expert-Balanced Scheduling (Algorithm 1) on the
+accelerator.
+
+The paper implements AEBS as a GPU kernel to avoid CPU-GPU sync (§3.4).
+Structure here mirrors that kernel's phases:
+
+  1. *Union scan* — collect the set of activated logical experts from the
+     (T, k) routing results. Token-parallel; authored as a Pallas kernel
+     (a one-hot OR-reduce over the token axis — the VPU-friendly TPU
+     rendition of the paper's CUDA atomic bitmap).
+  2. *Greedy replica selection* — inherently sequential over experts
+     (each decision reads the loads the previous one wrote), exactly as
+     in the paper's single-block kernel phase; expressed as a
+     `lax.fori_loop` so it lowers into the same HLO artifact.
+  3. *Rewrite* — token-parallel gather from the per-expert decision.
+
+The production coordinator hot path uses the Rust implementation
+(`rust/src/scheduler/aebs.rs`); this kernel exists so the full AEBS can
+run device-side inside the lowered MoE block, and both are validated
+against the same oracle (`ref.aebs_ref`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _union_kernel(n_experts: int, ids_ref, act_ref):
+    ids = ids_ref[...]  # (T, k) int32
+    t, k = ids.shape
+    eids = jax.lax.broadcasted_iota(jnp.int32, (t, k, n_experts), 2)
+    hit = (ids[:, :, None] == eids).any(axis=(0, 1))  # (E,)
+    act_ref[...] = hit.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_experts", "interpret"))
+def activated_union(routing, n_experts: int, interpret=True):
+    """(T, k) routing → (E,) 0/1 activation bitmap (Step 1 of Fig 7)."""
+    kernel = functools.partial(_union_kernel, n_experts)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n_experts,), jnp.int32),
+        interpret=interpret,
+    )(routing)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def aebs_assign(routing, host_matrix, interpret=True):
+    """Full AEBS: routing (T, k) int32 + host_matrix (E, n_e) 0/1 →
+    (instance_of (T, k) int32, loads (n_e,) int32).
+
+    Deterministic: single-replica experts pinned first, then multi-replica
+    experts in ascending id to the least-loaded host (ties → lowest id) —
+    identical rules to the Rust scheduler, so every MoE instance running
+    this kernel on identical inputs computes the same global assignment.
+    """
+    n_experts, n_inst = host_matrix.shape
+    active = activated_union(routing, n_experts, interpret=interpret)  # (E,)
+    hosts = host_matrix.astype(jnp.int32)
+    replica_count = hosts.sum(axis=1)  # (E,)
+
+    # Phase 2a: pin active single-replica experts (vectorized — no
+    # sequential dependency among them).
+    single = (replica_count == 1) & (active == 1)
+    # the unique host of a single-replica expert: argmax over its row
+    unique_host = jnp.argmax(hosts, axis=1)
+    loads = jnp.zeros(n_inst, jnp.int32).at[unique_host].add(
+        single.astype(jnp.int32)
+    )
+    chosen = jnp.where(single, unique_host, -1)
+
+    # Phase 2b: greedy over multi-replica experts, ascending id.
+    def body(e, state):
+        loads, chosen = state
+        is_multi_active = (replica_count[e] > 1) & (active[e] == 1)
+        # least-loaded hosting instance; non-hosts get +inf load
+        masked = jnp.where(hosts[e] == 1, loads, jnp.iinfo(jnp.int32).max)
+        g_star = jnp.argmin(masked)  # ties → lowest index (argmin rule)
+        loads = loads.at[g_star].add(is_multi_active.astype(jnp.int32))
+        chosen = chosen.at[e].set(
+            jnp.where(is_multi_active, g_star, chosen[e])
+        )
+        return loads, chosen
+
+    loads, chosen = jax.lax.fori_loop(0, n_experts, body, (loads, chosen))
+
+    # Phase 3: token-parallel rewrite.
+    instance_of = chosen[routing]
+    return instance_of.astype(jnp.int32), loads

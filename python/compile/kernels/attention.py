@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: single-token GQA decode attention over a KV cache.
+
+Grid over the batch: each grid step loads one sequence's KV block into
+VMEM (the HBM→VMEM schedule a CUDA version would express with
+threadblocks; see DESIGN.md §Hardware-Adaptation), computes masked
+softmax(q·Kᵀ)·V for all heads of that sequence, and writes one output
+row.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(scale: float, q_ref, k_ref, v_ref, len_ref, o_ref):
+    q = q_ref[0]  # (H, dh)
+    k = k_ref[0]  # (S, Hkv, dh)
+    v = v_ref[0]
+    n = len_ref[0]  # valid prefix length
+    s, hkv, dh = k.shape
+    h = q.shape[0]
+    group = h // hkv
+    # Broadcast KV heads across their query-head group.
+    kq = jnp.repeat(k, group, axis=1)  # (S, H, dh)
+    vq = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("hd,shd->hs", q, kq) * scale  # (H, S)
+    mask = jax.lax.broadcasted_iota(jnp.int32, (h, s), 1) < n
+    scores = jnp.where(mask, scores, -1e30)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    o_ref[0] = jnp.einsum("hs,shd->hd", p, vq)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention(q, k_cache, v_cache, lengths, interpret=True):
+    """q: (B, H, dh); k/v_cache: (B, S, Hkv, dh); lengths: (B,) int32."""
+    b, h, dh = q.shape
+    _, s, hkv, _ = k_cache.shape
+    scale = 1.0 / float(dh) ** 0.5
+    kernel = functools.partial(_kernel, scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, hkv, dh), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, s, hkv, dh), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), jnp.float32),
+        interpret=interpret,
+    )(q, k_cache, v_cache, lengths)

@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: grouped MoE expert FFN.
+
+TPU-idiom adaptation of the paper's CUDA grouped-GEMM hot spot (see
+DESIGN.md §Hardware-Adaptation): the expert loop is the *grid* — one grid
+step per expert streams that expert's (w1, w3, w2) block HBM→VMEM exactly
+once, which is the memory-bound behaviour Fig 2-right measures (latency
+linear in the number of activated experts). Tokens stay resident in VMEM
+across grid steps; the (T, E) dense routing-weight matrix masks experts a
+given MoE instance does not serve, so one compiled artifact serves every
+instance regardless of its expert subset.
+
+Lowered with interpret=True: the CPU PJRT plugin executes the resulting
+plain-HLO; a real TPU build would emit a Mosaic custom-call instead.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _silu(x):
+    return x * (1.0 / (1.0 + jnp.exp(-x)))
+
+
+def _kernel(x_ref, w1_ref, w3_ref, w2_ref, wt_ref, o_ref):
+    e = pl.program_id(0)
+
+    @pl.when(e == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # (T, d) resident across grid steps
+    h = _silu(x @ w1_ref[0]) * (x @ w3_ref[0])  # (T, d_e)
+    y = h @ w2_ref[0]  # (T, d)
+    o_ref[...] += wt_ref[...] * y  # mask+scale by routing weight
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def moe_ffn(x, w1, w3, w2, dense_weights, interpret=True):
+    """out[t] = Σ_e dense_weights[t, e] · FFN_e(x[t]).
+
+    x: (T, d) f32; w1/w3: (E, d, d_e); w2: (E, d_e, d);
+    dense_weights: (T, E) f32 (zero ⇒ expert e skipped for token t).
+    """
+    t, d = x.shape
+    n_experts, _, d_e = w1.shape
+    assert dense_weights.shape == (t, n_experts)
+    return pl.pallas_call(
+        _kernel,
+        grid=(n_experts,),
+        in_specs=[
+            pl.BlockSpec((t, d), lambda e: (0, 0)),
+            pl.BlockSpec((1, d, d_e), lambda e: (e, 0, 0)),
+            pl.BlockSpec((1, d, d_e), lambda e: (e, 0, 0)),
+            pl.BlockSpec((1, d_e, d), lambda e: (e, 0, 0)),
+            pl.BlockSpec((t, 1), lambda e: (0, e)),
+        ],
+        out_specs=pl.BlockSpec((t, d), lambda e: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.float32),
+        interpret=interpret,
+    )(x, w1, w3, w2, dense_weights)
+
+
+def vmem_bytes(t: int, d: int, d_e: int) -> int:
+    """Estimated VMEM footprint of one grid step (f32): the token block,
+    one expert's three weight blocks, the hidden block, and the output
+    accumulator. Used by DESIGN.md §Perf to check the ≤16 MB target."""
+    return 4 * (t * d  # x
+                + 2 * d * d_e  # w1, w3
+                + d_e * d  # w2
+                + t * d_e  # h
+                + t * d  # out
+                + t)  # weights column

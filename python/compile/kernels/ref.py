@@ -1,0 +1,121 @@
+"""Pure-jnp / numpy reference oracles for every L1 kernel.
+
+These are the correctness ground truth: pytest checks each Pallas kernel
+against its oracle with `assert_allclose`, and hypothesis sweeps shapes
+and dtypes. Keep these boring and obviously-correct.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def rmsnorm_ref(x, w, eps=1e-6):
+    """RMSNorm over the last axis."""
+    var = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return (x * jnp.reciprocal(jnp.sqrt(var + eps)) * w).astype(x.dtype)
+
+
+def _silu(x):
+    return x * (1.0 / (1.0 + jnp.exp(-x)))
+
+
+def topk_gate_ref(x, w_gate, k):
+    """Router: logits = x @ w_gate; top-k ids (desc) + softmaxed weights.
+
+    Returns (ids, weights): ids int32 (T, k), weights f32 (T, k) summing
+    to 1 over the selected experts.
+    """
+    logits = x.astype(jnp.float32) @ w_gate.astype(jnp.float32)  # (T, E)
+    ids = jnp.argsort(-logits, axis=-1)[:, :k].astype(jnp.int32)
+    sel = jnp.take_along_axis(logits, ids, axis=-1)
+    weights = jnp.exp(sel - sel.max(axis=-1, keepdims=True))
+    weights = weights / weights.sum(axis=-1, keepdims=True)
+    return ids, weights
+
+
+def moe_ffn_ref(x, w1, w3, w2, dense_weights):
+    """MoE FFN with dense per-expert weights.
+
+    x:  (T, d)
+    w1, w3: (E, d, d_e); w2: (E, d_e, d)
+    dense_weights: (T, E) - gate weight of expert e for token t, zero when
+    not routed (the disaggregated coordinator zeroes experts an instance
+    does not serve; see model.py).
+
+    out[t] = sum_e dense_weights[t, e] * FFN_e(x[t]),
+    FFN_e(x) = (silu(x @ w1[e]) * (x @ w3[e])) @ w2[e]
+    """
+    xf = x.astype(jnp.float32)
+    out = jnp.zeros_like(xf)
+    E = w1.shape[0]
+    for e in range(E):
+        h = _silu(xf @ w1[e].astype(jnp.float32))
+        h = h * (xf @ w3[e].astype(jnp.float32))
+        y = h @ w2[e].astype(jnp.float32)
+        out = out + dense_weights[:, e : e + 1].astype(jnp.float32) * y
+    return out.astype(x.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """Single-token GQA decode attention against a KV cache.
+
+    q:        (B, H, dh)       - one new token per sequence
+    k_cache:  (B, S, Hkv, dh)
+    v_cache:  (B, S, Hkv, dh)
+    lengths:  (B,) int32       - valid prefix length per sequence
+    Returns (B, H, dh).
+    """
+    B, H, dh = q.shape
+    S = k_cache.shape[1]
+    hkv = k_cache.shape[2]
+    group = H // hkv
+    scale = 1.0 / np.sqrt(dh)
+    qf = q.astype(jnp.float32)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    # Broadcast KV heads to query heads.
+    kq = jnp.repeat(kf, group, axis=2)  # (B, S, H, dh)
+    vq = jnp.repeat(vf, group, axis=2)
+    scores = jnp.einsum("bhd,bshd->bhs", qf, kq) * scale  # (B, H, S)
+    mask = jnp.arange(S)[None, None, :] < lengths[:, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhs,bshd->bhd", p, vq)
+    return out.astype(q.dtype)
+
+
+def aebs_ref(routing, hosts, n_instances):
+    """Reference AEBS (Algorithm 1) in plain numpy.
+
+    routing:     (T, k) int array of logical expert ids
+    hosts:       list over experts of sorted instance-id lists (G(e))
+    n_instances: number of MoE instances
+
+    Returns (instance_of (T, k), loads (n_instances,), a_max).
+    Mirrors the rust implementation's determinism rules: single-replica
+    experts pinned first; multi-replica experts in ascending expert id to
+    the least-loaded host (ties -> lowest instance id).
+    """
+    routing = np.asarray(routing)
+    active = []
+    seen = set()
+    for e in routing.flatten():
+        if int(e) not in seen:
+            seen.add(int(e))
+            active.append(int(e))
+    loads = np.zeros(n_instances, dtype=np.int64)
+    chosen = {}
+    for e in active:
+        if len(hosts[e]) == 1:
+            g = hosts[e][0]
+            chosen[e] = g
+            loads[g] += 1
+    for e in sorted(x for x in active if len(hosts[x]) > 1):
+        g = min(hosts[e], key=lambda g: (loads[g], g))
+        chosen[e] = g
+        loads[g] += 1
+    instance_of = np.vectorize(lambda e: chosen[int(e)])(routing)
+    return instance_of, loads, int(loads.max(initial=0))

@@ -1,0 +1,54 @@
+"""L1 Pallas kernel: router top-k gate.
+
+MXU-friendly: one (T, d)×(d, E) logits matmul, then k mask-and-argmax
+passes (k is small and static — no sort network needed on the VPU).
+Janus runs this on the *MoE side* (EGate, §3.3), redundantly and
+deterministically on every MoE instance.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(k: int, x_ref, wg_ref, ids_ref, wts_ref):
+    logits = x_ref[...] @ wg_ref[...]  # (T, E) f32
+    t, n_experts = logits.shape
+    masked = logits
+    sel_vals = []
+    for i in range(k):  # k is static — unrolled mask-and-argmax
+        idx = jnp.argmax(masked, axis=-1)  # (T,)
+        val = jnp.max(masked, axis=-1)
+        ids_ref[:, i] = idx.astype(jnp.int32)
+        sel_vals.append(val)
+        onehot = jax.nn.one_hot(idx, n_experts, dtype=jnp.bool_)
+        masked = jnp.where(onehot, -jnp.inf, masked)
+    sel = jnp.stack(sel_vals, axis=-1)  # (T, k)
+    w = jnp.exp(sel - sel.max(axis=-1, keepdims=True))
+    wts_ref[...] = w / w.sum(axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def topk_gate(x, w_gate, k: int, interpret=True):
+    """ids (T, k) int32 + normalized weights (T, k) f32."""
+    t, _ = x.shape
+    kernel = functools.partial(_kernel, k)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((t, k), jnp.int32),
+            jax.ShapeDtypeStruct((t, k), jnp.float32),
+        ),
+        interpret=interpret,
+    )(x, w_gate)
+
+
+def dense_routing_weights(ids, weights, n_experts: int):
+    """Scatter (ids, weights) into the dense (T, E) matrix `moe_ffn`
+    consumes. Pure jnp — it is part of the lowered gate block."""
+    onehot = jax.nn.one_hot(ids, n_experts, dtype=weights.dtype)  # (T,k,E)
+    return jnp.einsum("tke,tk->te", onehot, weights)

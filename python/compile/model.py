@@ -1,0 +1,191 @@
+"""L2: TinyMoE — the real (small) MoE transformer served end-to-end.
+
+The decode step is split exactly along Janus's disaggregation boundary
+into independently-lowered blocks:
+
+  embed_block   token ids → hidden                      (attention side)
+  attn_block    pre-norm + GQA attention + residual +
+                post-norm; updates the KV cache         (attention side)
+  moe_instance_block
+                EGate top-k gating + device-side AEBS +
+                grouped expert FFN over the instance's
+                assigned experts                        (MoE side)
+  head_block    final norm + greedy LM head             (attention side)
+
+Every block takes its weights as *runtime inputs*, so one compiled
+artifact per block serves every layer and every instance; the Rust
+coordinator owns the weights (exported by aot.py) and the KV caches, and
+performs the dispatch/combine data movement between the pools.
+
+Shapes must stay in sync with `rust/src/config/models.rs::tiny_moe` and
+the `meta.json` emitted by aot.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import aebs as aebs_k
+from .kernels import attention as attn_k
+from .kernels import moe_ffn as moe_k
+from .kernels import ref
+from .kernels import topk_gate as gate_k
+
+
+@dataclasses.dataclass(frozen=True)
+class TinyMoeConfig:
+    layers: int = 4
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    head_dim: int = 32
+    experts: int = 8
+    top_k: int = 2
+    d_expert: int = 256
+    vocab: int = 512
+    max_ctx: int = 64       # KV-cache length S
+    batch_tokens: int = 8   # static decode batch T per attention instance
+
+    @property
+    def qkv_dim(self):
+        return self.n_heads * self.head_dim
+
+
+CFG = TinyMoeConfig()
+
+
+def init_params(cfg: TinyMoeConfig = CFG, seed: int = 0):
+    """Deterministic parameter init; returns a flat {name: array} dict."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+
+    def take(shape, scale):
+        nonlocal key
+        key, sub = jax.random.split(key)
+        return (jax.random.normal(sub, shape, jnp.float32) * scale)
+
+    d, dh = cfg.d_model, cfg.head_dim
+    params["embed"] = take((cfg.vocab, d), 0.02)
+    for l in range(cfg.layers):
+        p = f"l{l}."
+        params[p + "norm1"] = jnp.ones((d,), jnp.float32)
+        params[p + "norm2"] = jnp.ones((d,), jnp.float32)
+        params[p + "wq"] = take((d, cfg.n_heads * dh), d ** -0.5)
+        params[p + "wk"] = take((d, cfg.n_kv_heads * dh), d ** -0.5)
+        params[p + "wv"] = take((d, cfg.n_kv_heads * dh), d ** -0.5)
+        params[p + "wo"] = take((cfg.n_heads * dh, d), (cfg.n_heads * dh) ** -0.5)
+        params[p + "wgate"] = take((d, cfg.experts), d ** -0.5)
+        params[p + "w1"] = take((cfg.experts, d, cfg.d_expert), d ** -0.5)
+        params[p + "w3"] = take((cfg.experts, d, cfg.d_expert), d ** -0.5)
+        params[p + "w2"] = take((cfg.experts, cfg.d_expert, d), cfg.d_expert ** -0.5)
+    params["norm_f"] = jnp.ones((d,), jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Disaggregated blocks (each is lowered to its own HLO artifact)
+# ---------------------------------------------------------------------------
+
+
+def embed_block(token_ids, embed):
+    """(T,) int32 → (T, d) f32."""
+    return (jnp.take(embed, token_ids, axis=0),)
+
+
+def attn_block(x, norm1, norm2, wq, wk, wv, wo, k_cache, v_cache, lengths,
+               cfg: TinyMoeConfig = CFG):
+    """One attention layer for T sequences, one new token each.
+
+    x: (T, d); k/v_cache: (T, S, Hkv, dh); lengths: (T,) int32 — the
+    position the new token is written to.
+
+    Returns (h, hn, k_cache', v_cache'):
+      h  = x + attn_out          (residual stream)
+      hn = rmsnorm(h) * norm2    (the activation dispatched to MoE side)
+    """
+    t, d = x.shape
+    xn = ref.rmsnorm_ref(x, norm1)
+    q = (xn @ wq).reshape(t, cfg.n_heads, cfg.head_dim)
+    k_new = (xn @ wk).reshape(t, cfg.n_kv_heads, cfg.head_dim)
+    v_new = (xn @ wv).reshape(t, cfg.n_kv_heads, cfg.head_dim)
+    # Scatter the new KV row at each sequence's current length.
+    slot = jax.nn.one_hot(lengths, cfg.max_ctx, dtype=x.dtype)  # (T, S)
+    k_cache = k_cache * (1.0 - slot[:, :, None, None]) + (
+        slot[:, :, None, None] * k_new[:, None, :, :]
+    )
+    v_cache = v_cache * (1.0 - slot[:, :, None, None]) + (
+        slot[:, :, None, None] * v_new[:, None, :, :]
+    )
+    attn = attn_k.decode_attention(q, k_cache, v_cache, lengths + 1)
+    h = x + attn.reshape(t, cfg.n_heads * cfg.head_dim) @ wo
+    hn = ref.rmsnorm_ref(h, norm2)
+    return h, hn, k_cache, v_cache
+
+
+def moe_instance_block(hn, wgate, w1, w3, w2, host_matrix, self_id,
+                       cfg: TinyMoeConfig = CFG):
+    """The MoE-side layer executed by ONE MoE instance (EGate + AEBS +
+    grouped expert FFN), returning this instance's partial output.
+
+    hn:          (T, d) the full batch's activations (EGate broadcast)
+    host_matrix: (E, n_e) int32 replica layout (AEBS metadata)
+    self_id:     () int32 — this instance's id
+
+    Every instance runs the same gate + AEBS deterministically (§3.4) and
+    masks the dense routing weights down to the experts AEBS assigned to
+    *this* instance; the attention side sums the partials (combine).
+    """
+    ids, weights = gate_k.topk_gate(hn, wgate, cfg.top_k)
+    instance_of, _loads = aebs_k.aebs_assign(ids, host_matrix)
+    mine = (instance_of == self_id).astype(weights.dtype)  # (T, k)
+    dense = gate_k.dense_routing_weights(ids, weights * mine, cfg.experts)
+    partial = moe_k.moe_ffn(hn, w1, w3, w2, dense)
+    return (partial,)
+
+
+def head_block(h, norm_f, embed):
+    """Final norm + greedy next-token: (T, d) → (T,) int32."""
+    hn = ref.rmsnorm_ref(h, norm_f)
+    logits = hn @ embed.T
+    return (jnp.argmax(logits, axis=-1).astype(jnp.int32),)
+
+
+# ---------------------------------------------------------------------------
+# Monolithic reference step (for tests: disaggregated == monolithic)
+# ---------------------------------------------------------------------------
+
+
+def reference_decode_step(params, token_ids, caches, lengths,
+                          cfg: TinyMoeConfig = CFG):
+    """Full decode step with no disaggregation/masking — the oracle the
+    partial-sum composition must reproduce."""
+    (x,) = embed_block(token_ids, params["embed"])
+    new_caches = []
+    for l in range(cfg.layers):
+        p = f"l{l}."
+        h, hn, kc, vc = attn_block(
+            x, params[p + "norm1"], params[p + "norm2"], params[p + "wq"],
+            params[p + "wk"], params[p + "wv"], params[p + "wo"],
+            caches[l][0], caches[l][1], lengths, cfg,
+        )
+        new_caches.append((kc, vc))
+        ids, weights = gate_k.topk_gate(hn, params[p + "wgate"], cfg.top_k)
+        dense = gate_k.dense_routing_weights(ids, weights, cfg.experts)
+        moe_out = moe_k.moe_ffn(
+            hn, params[p + "w1"], params[p + "w3"], params[p + "w2"], dense
+        )
+        x = h + moe_out
+    (next_ids,) = head_block(x, params["norm_f"], params["embed"])
+    return next_ids, new_caches
+
+
+def empty_caches(cfg: TinyMoeConfig = CFG):
+    shape = (cfg.batch_tokens, cfg.max_ctx, cfg.n_kv_heads, cfg.head_dim)
+    return [
+        (jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32))
+        for _ in range(cfg.layers)
+    ]

@@ -1,0 +1,57 @@
+//! AEBS scheduling-latency bench (Fig 15 companion).
+//!
+//! Target (DESIGN.md §Perf): ≤ 90 µs at B = 4096, E = 16 — the paper's
+//! GPU-kernel budget, met here natively on CPU.
+
+use janus::config::serving::SchedulerKind;
+use janus::placement::ExpertPlacement;
+use janus::routing::gate::{ExpertPopularity, GateSim};
+use janus::routing::trace::ActivationTrace;
+use janus::scaling::AmaxTable;
+use janus::scheduler::{aebs, baselines};
+use janus::util::bench::bench;
+use janus::util::rng::Rng;
+
+fn main() {
+    let experts = 160;
+    let top_k = 6;
+    let mut rng = Rng::seed_from_u64(1);
+    let gate = GateSim::new(experts, top_k, &ExpertPopularity::Zipf { s: 0.4 }, &mut rng);
+    let mut trace = ActivationTrace::new(experts, top_k, 8192);
+    trace.record_batch(&gate.sample_batch(&mut rng, 8192));
+
+    println!("AEBS vs baselines scheduling latency (DeepSeek-V2 shape)\n");
+    for n_e in [8usize, 16] {
+        let amax = AmaxTable::build(
+            &trace,
+            &[n_e],
+            &[64],
+            27,
+            SchedulerKind::Aebs,
+            2,
+            &mut rng,
+        );
+        let placement = amax.placement_for(n_e).unwrap().clone();
+        let mut ws = aebs::Workspace::new(experts, n_e);
+        for batch in [64usize, 256, 1024, 4096] {
+            let b = gate.sample_batch(&mut rng, batch);
+            let r = bench(&format!("aebs/full      E={n_e} B={batch}"), || {
+                std::hint::black_box(aebs::assign_with(&mut ws, &b, &placement));
+            });
+            if batch == 4096 && n_e == 16 {
+                assert!(
+                    r.mean_ns < 90_000.0,
+                    "AEBS at B=4096/E=16 exceeded the 90 µs paper budget: {} ns",
+                    r.mean_ns
+                );
+            }
+            bench(&format!("aebs/a_max_only E={n_e} B={batch}"), || {
+                std::hint::black_box(aebs::a_max_only(&mut ws, &b, &placement));
+            });
+            bench(&format!("eplb/token_bal  E={n_e} B={batch}"), || {
+                std::hint::black_box(baselines::token_balanced(&b, &placement));
+            });
+        }
+        println!();
+    }
+}

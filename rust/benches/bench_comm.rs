@@ -1,0 +1,40 @@
+//! Two-phase communication planning bench: plan construction + adaptive
+//! case selection run on the per-layer critical path of the performance
+//! model and must stay at ns-µs scale.
+
+use janus::comm::CommModel;
+use janus::config::hardware::paper_testbed;
+use janus::config::serving::{CommScheme, GatingSide};
+use janus::util::bench::bench;
+
+fn main() {
+    let hw = paper_testbed();
+    let comm = CommModel::new(hw.node.clone(), 5120, 6);
+    println!("Communication plan construction + costing\n");
+    for (n_a, n_e) in [(2usize, 6usize), (4, 12), (8, 32)] {
+        for batch in [64.0f64, 1024.0] {
+            bench(
+                &format!("plan/2PC-adaptive EGate {n_a}A{n_e}E B={batch}"),
+                || {
+                    std::hint::black_box(comm.layer_cost(
+                        CommScheme::TwoPhaseAdaptive,
+                        GatingSide::Moe,
+                        n_a,
+                        n_e,
+                        batch,
+                    ));
+                },
+            );
+            bench(&format!("plan/1PC AGate {n_a}A{n_e}E B={batch}"), || {
+                std::hint::black_box(comm.layer_cost(
+                    CommScheme::OnePhase,
+                    GatingSide::Attention,
+                    n_a,
+                    n_e,
+                    batch,
+                ));
+            });
+        }
+        println!();
+    }
+}

@@ -1,0 +1,38 @@
+//! Replica allocation + Algorithm 3 placement bench — the periodic
+//! reconfiguration path (§3.5 runs it at ~15-minute scale; it must be
+//! far below that).
+
+use janus::placement::{allocate_replicas, place_replicas};
+use janus::routing::coactivation::CoactivationStats;
+use janus::routing::gate::{ExpertPopularity, GateSim};
+use janus::routing::trace::ActivationTrace;
+use janus::util::bench::bench;
+use janus::util::rng::Rng;
+
+fn main() {
+    println!("Replica allocation + activation-aware placement (Appendix B)\n");
+    for (name, experts, top_k, n_e, cap) in [
+        ("DeepSeek-V2", 160usize, 6usize, 8usize, 27usize),
+        ("DeepSeek-V2 wide", 160, 6, 16, 27),
+        ("DS-V3 scale", 256, 8, 16, 22),
+    ] {
+        let mut rng = Rng::seed_from_u64(3);
+        let gate = GateSim::new(experts, top_k, &ExpertPopularity::Zipf { s: 0.6 }, &mut rng);
+        let mut trace = ActivationTrace::new(experts, top_k, 8192);
+        trace.record_batch(&gate.sample_batch(&mut rng, 8192));
+        let counts = trace.expert_counts();
+        let coact = CoactivationStats::from_trace(&trace, 64);
+
+        bench(&format!("allocate_replicas/{name}"), || {
+            std::hint::black_box(allocate_replicas(&counts, n_e, cap));
+        });
+        let replicas = allocate_replicas(&counts, n_e, cap);
+        bench(&format!("place_replicas(alg3)/{name}"), || {
+            std::hint::black_box(place_replicas(&replicas, &counts, &coact, n_e, cap));
+        });
+        bench(&format!("coactivation_stats/{name}"), || {
+            std::hint::black_box(CoactivationStats::from_trace(&trace, 64));
+        });
+        println!();
+    }
+}

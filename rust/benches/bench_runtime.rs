@@ -1,0 +1,62 @@
+//! Real-execution bench: TinyMoE blocks through the PJRT CPU backend —
+//! the L2/L3 boundary cost of the end-to-end driver. Requires
+//! `make artifacts`.
+
+use janus::config::hardware::paper_testbed;
+use janus::coordinator::Leader;
+use janus::placement::ExpertPlacement;
+use janus::runtime::artifacts::ArtifactBundle;
+use janus::runtime::literal_util as lu;
+use janus::runtime::Engine;
+use janus::util::bench::bench_cfg;
+
+fn main() -> anyhow::Result<()> {
+    let dir = ArtifactBundle::default_dir();
+    if !dir.join("meta.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        return Ok(());
+    }
+    let bundle = ArtifactBundle::load(&dir)?;
+    let mut engine = Engine::cpu()?;
+    for b in ["embed", "attn", "moe", "head", "gate"] {
+        engine.load_hlo(b, &bundle.hlo_path(b))?;
+    }
+    let m = &bundle.meta;
+    let (t, d) = (m.batch_tokens, m.d_model);
+    let x: Vec<f32> = (0..t * d).map(|i| (i % 7) as f32 * 0.1).collect();
+
+    println!("TinyMoE block execution on PJRT CPU (per call)\n");
+    bench_cfg("runtime/gate block", 500.0, 8, &mut || {
+        let out = engine
+            .execute(
+                "gate",
+                &[
+                    lu::f32_literal(&x, &[t, d]).unwrap(),
+                    lu::tensor_literal(bundle.weights.get("l0.wgate").unwrap()).unwrap(),
+                ],
+            )
+            .unwrap();
+        std::hint::black_box(out);
+    });
+
+    // Full MoE-side block (gate + AEBS + experts on one instance).
+    let placement = ExpertPlacement::round_robin(m.experts, 2, m.experts / 2 + 1);
+    let workers =
+        janus::coordinator::moe_pool::MoeWorker::pool(&bundle, &placement);
+    bench_cfg("runtime/moe instance block (E-gate+AEBS+FFN)", 500.0, 8, &mut || {
+        std::hint::black_box(workers[0].run_layer(&engine, &bundle, 0, &x).unwrap());
+    });
+
+    // Whole decode step through the leader.
+    let bundle2 = ArtifactBundle::load(&dir)?;
+    let mut leader = Leader::new(bundle2, &placement, &paper_testbed())?;
+    for i in 0..m.batch_tokens {
+        leader.queue.submit(vec![(i as i32) + 1], 1_000_000);
+    }
+    // Fill slots once.
+    let _ = leader.step()?;
+    bench_cfg("runtime/full decode step (4 layers, 2 MoE inst)", 1000.0, 5, &mut || {
+        std::hint::black_box(leader.step().unwrap());
+    });
+    Ok(())
+}

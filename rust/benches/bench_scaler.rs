@@ -1,0 +1,71 @@
+//! Algorithm 2 (SLO-aware scaling) decision latency — the paper claims
+//! negligible runtime overhead; DESIGN.md §Perf budgets ≤ 10 ms per full
+//! enumeration.
+
+use janus::config::hardware::paper_testbed;
+use janus::config::models;
+use janus::config::serving::{self, SchedulerKind, Slo};
+use janus::routing::gate::{ExpertPopularity, GateSim};
+use janus::routing::trace::ActivationTrace;
+use janus::scaling::{AmaxTable, Scaler};
+use janus::util::bench::bench;
+use janus::util::rng::Rng;
+
+fn main() {
+    let model = models::deepseek_v2();
+    let hw = paper_testbed();
+    let capacity = serving::default_capacity(&model, &hw);
+    let mut rng = Rng::seed_from_u64(5);
+    let gate = GateSim::new(
+        model.experts,
+        model.top_k,
+        &ExpertPopularity::Zipf { s: 0.4 },
+        &mut rng,
+    );
+    let mut trace = ActivationTrace::new(model.experts, model.top_k, 8192);
+    trace.record_batch(&gate.sample_batch(&mut rng, 8192));
+    let n_e_min = model.experts.div_ceil(capacity);
+    let n_e_values: Vec<usize> = (n_e_min..=16).collect();
+
+    println!("Scaler construction + decision latency (DeepSeek-V2)\n");
+    bench("amax_table/build (11 n_e x 14 B-grid x 8 samples)", || {
+        let mut r = Rng::seed_from_u64(6);
+        std::hint::black_box(AmaxTable::build(
+            &trace,
+            &n_e_values,
+            &AmaxTable::default_grid(4096),
+            capacity,
+            SchedulerKind::Aebs,
+            8,
+            &mut r,
+        ));
+    });
+
+    let amax = AmaxTable::build(
+        &trace,
+        &n_e_values,
+        &AmaxTable::default_grid(4096),
+        capacity,
+        SchedulerKind::Aebs,
+        8,
+        &mut rng,
+    );
+    let scaler = Scaler::new(model, hw, amax, 16);
+    let slo = Slo::from_ms(200.0);
+    for demand in [500.0, 5000.0, 20000.0] {
+        let r = bench(&format!("algorithm2/optimize demand={demand}"), || {
+            std::hint::black_box(scaler.optimize(demand, slo, 512.0));
+        });
+        assert!(
+            r.mean_ns < 10_000_000.0,
+            "scaling decision exceeded 10 ms budget: {} ns",
+            r.mean_ns
+        );
+    }
+    bench("algorithm2/optimize_fixed_batch B=256", || {
+        std::hint::black_box(scaler.optimize_fixed_batch(256.0, slo, 512.0));
+    });
+    bench("algorithm2/enumerate (Fig 16 grid)", || {
+        std::hint::black_box(scaler.enumerate_fixed_batch(256.0, slo, 512.0));
+    });
+}

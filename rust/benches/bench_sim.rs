@@ -1,0 +1,42 @@
+//! End-to-end simulation throughput: decode-step evaluation and the
+//! trace-driven autoscaler (the harness behind Figs 8 and 11).
+//! DESIGN.md §Perf target: ≥ 10k simulated decode steps/s.
+
+use janus::baselines::{JanusSystem, ServingSystem};
+use janus::config::hardware::paper_testbed;
+use janus::config::models;
+use janus::config::serving::Slo;
+use janus::routing::gate::ExpertPopularity;
+use janus::util::bench::bench;
+use janus::util::rng::Rng;
+
+fn main() {
+    println!("Simulated decode-step throughput (Janus system model)\n");
+    let mut sys = JanusSystem::build(
+        models::deepseek_v2(),
+        paper_testbed(),
+        &ExpertPopularity::Zipf { s: 0.4 },
+        16,
+        42,
+    );
+    sys.configure(256, Slo::from_ms(200.0)).expect("feasible");
+    let mut rng = Rng::seed_from_u64(1);
+    for batch in [64usize, 256, 1024] {
+        let r = bench(&format!("janus_system/step B={batch}"), || {
+            std::hint::black_box(sys.step(batch, &mut rng));
+        });
+        let steps_per_s = 1e9 / r.mean_ns;
+        println!("    -> {:.0} simulated steps/s", steps_per_s);
+        if batch == 256 {
+            assert!(
+                steps_per_s > 10_000.0,
+                "decode-sim below the 10k steps/s target: {steps_per_s:.0}"
+            );
+        }
+    }
+
+    println!("\nScaling decision inside the autoscale loop");
+    bench("janus_system/configure_for_demand", || {
+        std::hint::black_box(sys.configure_for_demand(4000.0, Slo::from_ms(200.0)));
+    });
+}

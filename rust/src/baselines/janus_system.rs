@@ -1,0 +1,168 @@
+//! Janus as a `ServingSystem`: Algorithm 2 scaling + AEBS + EGate + 2PC.
+
+use crate::config::hardware::HardwareProfile;
+use crate::config::models::MoeModel;
+use crate::config::serving::{self, Deployment, SchedulerKind, Slo};
+use crate::placement::ExpertPlacement;
+use crate::routing::gate::{ExpertPopularity, GateSim};
+use crate::routing::trace::ActivationTrace;
+use crate::scaling::{AmaxTable, Scaler};
+use crate::scheduler::aebs;
+use crate::util::rng::Rng;
+
+use super::system::{ConfigInfo, ServingSystem, StepOutcome};
+
+/// Fully-assembled Janus (the paper's system).
+pub struct JanusSystem {
+    pub scaler: Scaler,
+    gate: GateSim,
+    deployment: Option<Deployment>,
+    placement: Option<ExpertPlacement>,
+    ws: aebs::Workspace,
+    s_ctx: f64,
+}
+
+impl JanusSystem {
+    /// Build from a model + hardware, warming the â_max table from a
+    /// synthetic activation trace under the given popularity skew.
+    pub fn build(
+        model: MoeModel,
+        hw: HardwareProfile,
+        pop: &ExpertPopularity,
+        n_max: usize,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let capacity = serving::default_capacity(&model, &hw);
+        let gate = GateSim::new(model.experts, model.top_k, pop, &mut rng);
+        let mut trace = ActivationTrace::new(model.experts, model.top_k, 8192);
+        trace.record_batch(&gate.sample_batch(&mut rng, 8192));
+        let n_e_min = model.experts.div_ceil(capacity);
+        let n_e_values: Vec<usize> = (n_e_min..=n_max).collect();
+        let amax = AmaxTable::build(
+            &trace,
+            &n_e_values,
+            &AmaxTable::default_grid(4096),
+            capacity,
+            SchedulerKind::Aebs,
+            8,
+            &mut rng,
+        );
+        let ws = aebs::Workspace::new(model.experts, n_max);
+        let scaler = Scaler::new(model, hw, amax, n_max);
+        JanusSystem {
+            scaler,
+            gate,
+            deployment: None,
+            placement: None,
+            ws,
+            s_ctx: 512.0,
+        }
+    }
+
+    fn apply(&mut self, d: Deployment) {
+        self.placement = self
+            .scaler
+            .amax
+            .placement_for(d.n_moe)
+            .cloned();
+        self.deployment = Some(d);
+    }
+
+    pub fn deployment(&self) -> Option<Deployment> {
+        self.deployment
+    }
+}
+
+impl ServingSystem for JanusSystem {
+    fn name(&self) -> &'static str {
+        "Janus"
+    }
+
+    fn configure(&mut self, batch: usize, slo: Slo) -> Option<ConfigInfo> {
+        let plan = self
+            .scaler
+            .optimize_fixed_batch(batch as f64, slo, self.s_ctx)?;
+        self.apply(plan.deployment);
+        Some(ConfigInfo {
+            label: plan.deployment.label(),
+            gpus: plan.deployment.total_gpus(),
+        })
+    }
+
+    fn configure_for_demand(&mut self, lambda: f64, slo: Slo) -> Option<ConfigInfo> {
+        let plan = self.scaler.optimize(lambda, slo, self.s_ctx)?;
+        self.apply(plan.deployment);
+        Some(ConfigInfo {
+            label: plan.deployment.label(),
+            gpus: plan.deployment.total_gpus(),
+        })
+    }
+
+    fn step(&mut self, batch: usize, rng: &mut Rng) -> StepOutcome {
+        let d = self.deployment.expect("configure before step");
+        let placement = self.placement.as_ref().expect("placement");
+        let routing = self.gate.sample_batch(rng, batch);
+        let a_max = aebs::a_max_only(&mut self.ws, &routing, placement);
+        let lat = self.scaler.tpot_model.tpot(
+            batch as f64,
+            d.n_attn,
+            d.n_moe,
+            self.s_ctx,
+            a_max,
+        );
+        StepOutcome {
+            tpot: lat.tpot,
+            a_max,
+        }
+    }
+
+    fn gpus(&self) -> usize {
+        self.deployment.map(|d| d.total_gpus()).unwrap_or(0)
+    }
+
+    fn label(&self) -> String {
+        self.deployment
+            .map(|d| d.label())
+            .unwrap_or_else(|| "-".to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::paper_testbed;
+    use crate::config::models::deepseek_v2;
+
+    #[test]
+    fn configure_and_step() {
+        let mut sys = JanusSystem::build(
+            deepseek_v2(),
+            paper_testbed(),
+            &ExpertPopularity::Uniform,
+            16,
+            42,
+        );
+        let cfg = sys.configure(64, Slo::from_ms(200.0)).expect("feasible");
+        assert!(cfg.gpus >= 7, "{}", cfg.label);
+        let mut rng = Rng::seed_from_u64(1);
+        let out = sys.step(64, &mut rng);
+        assert!(out.tpot > 0.0 && out.tpot <= 0.2 * 1.2);
+        assert!(out.a_max > 0);
+    }
+
+    #[test]
+    fn demand_configuration() {
+        let mut sys = JanusSystem::build(
+            deepseek_v2(),
+            paper_testbed(),
+            &ExpertPopularity::Uniform,
+            16,
+            43,
+        );
+        let cfg = sys
+            .configure_for_demand(2000.0, Slo::from_ms(200.0))
+            .expect("feasible");
+        assert!(cfg.gpus > 0);
+    }
+}

@@ -1,0 +1,316 @@
+//! MegaScale-Infer baseline (§5.1 baseline 2).
+//!
+//! Disaggregated like Janus, but: (a) random expert scheduling instead of
+//! AEBS, (b) gating on the attention side (routed activations + metadata
+//! cross the wire), and (c) a coarser scaling policy that restricts the
+//! configuration space to plans balancing attention-side and MoE-side
+//! execution times for pipelined operation — which skips many
+//! resource-efficient asymmetric configurations (Fig 8/11).
+
+use crate::config::hardware::HardwareProfile;
+use crate::config::models::MoeModel;
+use crate::config::serving::{
+    self, CommScheme, Deployment, GatingSide, SchedulerKind, Slo,
+};
+use crate::perfmodel::TpotModel;
+use crate::placement::ExpertPlacement;
+use crate::routing::gate::{ExpertPopularity, GateSim};
+use crate::routing::trace::ActivationTrace;
+use crate::scaling::littles_law::{self, FixedPoint};
+use crate::scaling::memory::AttnMemoryModel;
+use crate::scaling::AmaxTable;
+use crate::scheduler::baselines as sched;
+use crate::util::rng::Rng;
+
+use super::system::{ConfigInfo, ServingSystem, StepOutcome};
+
+/// Attention-to-MoE time-balance tolerance of the scaling policy.
+const BALANCE_TOL: f64 = 0.30;
+
+pub struct MegaScaleInfer {
+    model: MoeModel,
+    tpot_model: TpotModel,
+    amax: AmaxTable,
+    mem: AttnMemoryModel,
+    gate: GateSim,
+    deployment: Option<Deployment>,
+    placement: Option<ExpertPlacement>,
+    n_max: usize,
+    capacity: usize,
+    s_ctx: f64,
+    hw: HardwareProfile,
+}
+
+impl MegaScaleInfer {
+    pub fn build(
+        model: MoeModel,
+        hw: HardwareProfile,
+        pop: &ExpertPopularity,
+        n_max: usize,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let capacity = serving::default_capacity(&model, &hw);
+        let gate = GateSim::new(model.experts, model.top_k, pop, &mut rng);
+        let mut trace = ActivationTrace::new(model.experts, model.top_k, 8192);
+        trace.record_batch(&gate.sample_batch(&mut rng, 8192));
+        let n_e_min = model.experts.div_ceil(capacity);
+        let n_e_values: Vec<usize> = (n_e_min..=n_max).collect();
+        // Random scheduling drives this system's â_max.
+        let amax = AmaxTable::build(
+            &trace,
+            &n_e_values,
+            &AmaxTable::default_grid(4096),
+            capacity,
+            SchedulerKind::Random,
+            8,
+            &mut rng,
+        );
+        let tpot_model = TpotModel::new(
+            &model,
+            &hw,
+            CommScheme::TwoPhaseAdaptive,
+            GatingSide::Attention,
+        );
+        let mem = AttnMemoryModel::new(&model);
+        MegaScaleInfer {
+            model,
+            tpot_model,
+            amax,
+            mem,
+            gate,
+            deployment: None,
+            placement: None,
+            n_max,
+            capacity,
+            s_ctx: 512.0,
+            hw,
+        }
+    }
+
+    fn n_e_min(&self) -> usize {
+        self.model.experts.div_ceil(self.capacity)
+    }
+
+    fn tpot_at(&self, b: f64, d: Deployment) -> f64 {
+        let a_max = self.amax.lookup(d.n_moe, b).round() as u32;
+        self.tpot_model
+            .tpot(b, d.n_attn, d.n_moe, self.s_ctx, a_max)
+            .tpot
+    }
+
+    /// The time-balance restriction: attention-side step time must match
+    /// the MoE-side (expert + comm) time within tolerance, so micro-batch
+    /// pipelining keeps both pools busy.
+    fn balanced(&self, b: f64, d: Deployment) -> bool {
+        let a_max = self.amax.lookup(d.n_moe, b).round() as u32;
+        let lat = self
+            .tpot_model
+            .tpot(b, d.n_attn, d.n_moe, self.s_ctx, a_max);
+        let attn = lat.attn;
+        let moe_side = lat.moe + lat.comm;
+        if attn <= 0.0 || moe_side <= 0.0 {
+            return false;
+        }
+        let ratio = attn / moe_side;
+        (1.0 - BALANCE_TOL..=1.0 + BALANCE_TOL).contains(&ratio)
+    }
+
+    fn pick(&mut self, b: f64, slo: Slo) -> Option<Deployment> {
+        // Pass 1: the time-balanced configuration space MegaScale's
+        // pipelined design requires. Pass 2 (fallback): when no balanced
+        // plan exists (e.g. attention is far cheaper than the MoE side at
+        // small batch), it still deploys — just without the pipelining
+        // benefit — searching the unrestricted space. The paper's point
+        // stands either way: the restriction skips resource-efficient
+        // configurations (§2.3).
+        for require_balance in [true, false] {
+            let mut best: Option<(usize, Deployment)> = None;
+            for n_e in self.n_e_min()..=self.n_max {
+                if self.amax.placement_for(n_e).is_none() {
+                    continue;
+                }
+                for n_a in 1..=self.n_max {
+                    let d = Deployment::new(n_a, n_e);
+                    let b_local = b / n_a as f64;
+                    if !self.mem.feasible(b_local, self.s_ctx, &self.hw.gpu) {
+                        continue;
+                    }
+                    if require_balance && !self.balanced(b, d) {
+                        continue;
+                    }
+                    if self.tpot_at(b, d) > slo.tpot {
+                        continue;
+                    }
+                    let better = match &best {
+                        None => true,
+                        Some((g, _)) => d.total_gpus() < *g,
+                    };
+                    if better {
+                        best = Some((d.total_gpus(), d));
+                    }
+                }
+            }
+            if let Some((_, d)) = best {
+                return Some(d);
+            }
+        }
+        None
+    }
+
+    fn apply(&mut self, d: Deployment) {
+        self.placement = self.amax.placement_for(d.n_moe).cloned();
+        self.deployment = Some(d);
+    }
+}
+
+impl ServingSystem for MegaScaleInfer {
+    fn name(&self) -> &'static str {
+        "MegaScale-Infer"
+    }
+
+    fn configure(&mut self, batch: usize, slo: Slo) -> Option<ConfigInfo> {
+        match self.pick(batch as f64, slo) {
+            Some(d) => {
+                self.apply(d);
+                Some(ConfigInfo {
+                    label: d.label(),
+                    gpus: d.total_gpus(),
+                })
+            }
+            None => {
+                // Fall back to the largest balanced configuration; report
+                // violation by returning None.
+                let d = Deployment::new(self.n_max / 2, self.n_max);
+                self.apply(d);
+                None
+            }
+        }
+    }
+
+    fn configure_for_demand(&mut self, lambda: f64, slo: Slo) -> Option<ConfigInfo> {
+        // Solve B* per candidate with its own TPOT curve. Like `pick`,
+        // prefer time-balanced plans, fall back to unbalanced ones, and
+        // only report a violation when nothing meets the SLO at all.
+        for require_balance in [true, false] {
+            let mut best: Option<Deployment> = None;
+            for n_e in self.n_e_min()..=self.n_max {
+                if self.amax.placement_for(n_e).is_none() {
+                    continue;
+                }
+                for n_a in 1..=self.n_max {
+                    let d = Deployment::new(n_a, n_e);
+                    if let Some(b) = &best {
+                        if d.total_gpus() >= b.total_gpus() {
+                            continue;
+                        }
+                    }
+                    let b_max = self.mem.max_local_batch(self.s_ctx, &self.hw.gpu)
+                        * n_a as f64;
+                    if b_max < 1.0 {
+                        continue;
+                    }
+                    let fp = littles_law::solve(lambda, b_max, |b| self.tpot_at(b, d));
+                    let b_star = match fp {
+                        FixedPoint::Saturated => continue,
+                        other => other.batch().unwrap(),
+                    };
+                    if require_balance && !self.balanced(b_star, d) {
+                        continue;
+                    }
+                    if self.tpot_at(b_star, d) > slo.tpot {
+                        continue;
+                    }
+                    best = Some(d);
+                }
+            }
+            if let Some(d) = best {
+                self.apply(d);
+                return Some(ConfigInfo {
+                    label: d.label(),
+                    gpus: d.total_gpus(),
+                });
+            }
+        }
+        let d = Deployment::new(self.n_max / 2, self.n_max);
+        self.apply(d);
+        None
+    }
+
+    fn step(&mut self, batch: usize, rng: &mut Rng) -> StepOutcome {
+        let d = self.deployment.expect("configure before step");
+        let placement = self.placement.as_ref().expect("placement");
+        let routing = self.gate.sample_batch(rng, batch);
+        let a_max = sched::random(&routing, placement, rng).a_max;
+        let lat = self
+            .tpot_model
+            .tpot(batch as f64, d.n_attn, d.n_moe, self.s_ctx, a_max);
+        StepOutcome {
+            tpot: lat.tpot,
+            a_max,
+        }
+    }
+
+    fn gpus(&self) -> usize {
+        self.deployment.map(|d| d.total_gpus()).unwrap_or(0)
+    }
+
+    fn label(&self) -> String {
+        self.deployment
+            .map(|d| d.label())
+            .unwrap_or_else(|| "-".to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::paper_testbed;
+    use crate::config::models::deepseek_v2;
+
+    #[test]
+    fn configures_and_steps() {
+        let mut sys = MegaScaleInfer::build(
+            deepseek_v2(),
+            paper_testbed(),
+            &ExpertPopularity::Uniform,
+            16,
+            50,
+        );
+        let cfg = sys.configure(256, Slo::from_ms(200.0));
+        // Even if the balance restriction makes this infeasible, the
+        // system must still land on *some* deployment.
+        let _ = cfg;
+        assert!(sys.gpus() > 0);
+        let mut rng = Rng::seed_from_u64(2);
+        let out = sys.step(256, &mut rng);
+        assert!(out.tpot > 0.0);
+    }
+
+    #[test]
+    fn never_selects_fewer_gpus_than_janus() {
+        use crate::baselines::janus_system::JanusSystem;
+        let slo = Slo::from_ms(200.0);
+        let mut msi = MegaScaleInfer::build(
+            deepseek_v2(),
+            paper_testbed(),
+            &ExpertPopularity::Uniform,
+            16,
+            51,
+        );
+        let mut janus = JanusSystem::build(
+            deepseek_v2(),
+            paper_testbed(),
+            &ExpertPopularity::Uniform,
+            16,
+            42,
+        );
+        for batch in [64usize, 256] {
+            let j = janus.configure(batch, slo).map(|c| c.gpus);
+            let m = msi.configure(batch, slo).map(|c| c.gpus);
+            if let (Some(j), Some(m)) = (j, m) {
+                assert!(m >= j, "B={batch}: MSI {m} < Janus {j}");
+            }
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! Serving-system models: Janus and the three baselines of §5.1, all
+//! built on the same substrate (scheduler + placement + perfmodel + comm)
+//! with only their *policies* differing — mirroring how the paper
+//! implements MegaScale-Infer and xDeepServe on Janus's codebase.
+//!
+//! | System          | Scheduling      | Gating | Comm       | Scaling           |
+//! |-----------------|-----------------|--------|------------|-------------------|
+//! | Janus           | AEBS            | EGate  | 2PC adapt. | Algorithm 2       |
+//! | MegaScale-Infer | Random          | AGate  | 2PC        | time-balanced     |
+//! | xDeepServe      | EPLB (token)    | AGate  | 1PC (A2A)  | 4-GPU units       |
+//! | SGLang          | Static EP       | local  | TP/EP coll.| full replicas ×8  |
+
+pub mod janus_system;
+pub mod megascale;
+pub mod sglang;
+pub mod system;
+pub mod xdeepserve;
+
+pub use janus_system::JanusSystem;
+pub use megascale::MegaScaleInfer;
+pub use sglang::SgLang;
+pub use system::{ConfigInfo, ServingSystem, StepOutcome};
+pub use xdeepserve::XDeepServe;

@@ -1,0 +1,50 @@
+//! The common serving-system interface the simulator drives.
+
+use crate::config::serving::Slo;
+use crate::util::rng::Rng;
+
+/// A system's chosen resource configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConfigInfo {
+    /// Paper-style label ("1A6E" for disaggregated, "16G" for monolithic).
+    pub label: String,
+    pub gpus: usize,
+}
+
+/// One simulated decode step.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StepOutcome {
+    /// Wall time of the step (= TPOT for every in-flight request).
+    pub tpot: f64,
+    /// Straggler activated-expert count this step (0 if N/A).
+    pub a_max: u32,
+}
+
+/// A serving system under evaluation: pick resources, then simulate
+/// decode steps. Implementations differ only in policy (scheduler,
+/// gating side, comm scheme, configuration space).
+pub trait ServingSystem {
+    fn name(&self) -> &'static str;
+
+    /// Choose a configuration to serve batch-level `batch` under `slo`.
+    /// Returns None if no configuration in the system's space is feasible
+    /// (the system then runs its largest config and violates the SLO —
+    /// matching how the paper reports violations rather than dropping
+    /// points).
+    fn configure(&mut self, batch: usize, slo: Slo) -> Option<ConfigInfo>;
+
+    /// Choose a configuration for an arrival-rate demand (Fig 11). The
+    /// default derives the steady-state batch via each system's own
+    /// latency model; implementations may override the config space.
+    fn configure_for_demand(&mut self, lambda: f64, slo: Slo) -> Option<ConfigInfo>;
+
+    /// Simulate one decode step at total batch `batch` under the current
+    /// configuration.
+    fn step(&mut self, batch: usize, rng: &mut Rng) -> StepOutcome;
+
+    /// GPUs in the current configuration.
+    fn gpus(&self) -> usize;
+
+    /// Current configuration label.
+    fn label(&self) -> String;
+}

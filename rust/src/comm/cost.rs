@@ -1,0 +1,348 @@
+//! Link-level cost evaluation of transfer plans, and the adaptive
+//! scheme/payload selection for a full dispatch+combine round trip.
+
+use crate::config::hardware::NodeSpec;
+use crate::config::serving::{CommScheme, GatingSide};
+
+use super::plan::{self, TransferPlan, TwoPhaseCase};
+
+/// Per-layer communication cost breakdown (seconds).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CommBreakdown {
+    /// Attention → MoE dispatch time.
+    pub dispatch: f64,
+    /// MoE → attention combine time.
+    pub combine: f64,
+    /// Inter-node messages per layer (both directions).
+    pub messages: usize,
+    /// Inter-node bytes per layer (both directions).
+    pub volume: f64,
+    /// Chosen two-phase case (None for 1PC).
+    pub case: Option<TwoPhaseCase>,
+}
+
+impl CommBreakdown {
+    pub fn total(&self) -> f64 {
+        self.dispatch + self.combine
+    }
+}
+
+/// The communication cost model: evaluates plans against the link specs.
+#[derive(Clone, Debug)]
+pub struct CommModel {
+    pub node: NodeSpec,
+    /// Activation bytes per token (d_model × 2 for BF16).
+    pub token_bytes: f64,
+    /// Routing metadata bytes per token under AGate (top-k ids + weights).
+    pub meta_bytes_per_token: f64,
+    /// Extra per-message CPU/packing latency under AGate's per-expert
+    /// tensor re-layout (§3.3 "packing and memory re-layout overheads").
+    pub packing_latency: f64,
+    /// Per-message overhead on *unoptimized* send paths (1PC pairwise
+    /// sends, per-expert dispatch): kernel launch + metadata handling +
+    /// RC-queue contention. Janus's tuned NVSHMEM/IBGDA one-sided path
+    /// avoids this (§4), which is why the paper's 1PC+EGate strawman blows
+    /// up to 350 ms at B=512 (Fig 12) — the per-message software cost,
+    /// not the wire time, dominates many-small-message plans.
+    pub msg_overhead_unoptimized: f64,
+    /// top-k of the model (drives AGate routed volume).
+    pub top_k: usize,
+}
+
+impl CommModel {
+    pub fn new(node: NodeSpec, d_model: usize, top_k: usize) -> Self {
+        CommModel {
+            node,
+            token_bytes: d_model as f64 * 2.0,
+            // 4B expert id + 4B gate weight per selected expert.
+            meta_bytes_per_token: top_k as f64 * 8.0,
+            packing_latency: 20e-6,
+            msg_overhead_unoptimized: 15e-6,
+            top_k,
+        }
+    }
+
+    /// Time for one NIC to push `msgs` messages of the given sizes:
+    /// messages on the same NIC serialize; each pays the per-message
+    /// latency plus wire time.
+    fn nic_time(&self, sizes: &[f64]) -> f64 {
+        sizes
+            .iter()
+            .map(|b| self.node.nic_latency + b / self.node.nic_bw)
+            .sum()
+    }
+
+    /// Evaluate a plan: the slowest source NIC's serialization, plus the
+    /// slowest receiver's inbound serialization, plus intra-node phases.
+    ///
+    /// `unoptimized` marks software-mediated send paths (1PC pairwise
+    /// dispatch); each message then pays `msg_overhead_unoptimized` on top
+    /// of wire time.
+    pub fn plan_time_with(&self, p: &TransferPlan, agate: bool, unoptimized: bool) -> f64 {
+        let base = self.plan_time_inner(p, agate);
+        if unoptimized {
+            // The per-message software cost serializes on the busiest NIC.
+            let max_msgs_per_node = {
+                let mut counts: std::collections::HashMap<u32, usize> = Default::default();
+                for m in &p.messages {
+                    *counts.entry(m.src_node).or_default() += 1;
+                }
+                counts.values().copied().max().unwrap_or(0)
+            };
+            base + self.msg_overhead_unoptimized * max_msgs_per_node as f64
+        } else {
+            base
+        }
+    }
+
+    /// Optimized-path plan time (Janus's tuned NVSHMEM/IBGDA sends).
+    pub fn plan_time(&self, p: &TransferPlan, agate: bool) -> f64 {
+        self.plan_time_inner(p, agate)
+    }
+
+    fn plan_time_inner(&self, p: &TransferPlan, agate: bool) -> f64 {
+        // Group message sizes per source node and per destination node.
+        let mut per_src: std::collections::HashMap<u32, Vec<f64>> = Default::default();
+        let mut per_dst: std::collections::HashMap<u32, Vec<f64>> = Default::default();
+        for m in &p.messages {
+            per_src.entry(m.src_node).or_default().push(m.bytes);
+            per_dst.entry(m.dst_node).or_default().push(m.bytes);
+        }
+        let send = per_src
+            .values()
+            .map(|s| self.nic_time(s))
+            .fold(0.0, f64::max);
+        let recv = per_dst
+            .values()
+            .map(|s| self.nic_time(s))
+            .fold(0.0, f64::max);
+        // Send and receive overlap when messages pipeline; charge the max
+        // plus one message latency for the first-byte propagation.
+        let inter = send.max(recv) + self.node.nic_latency;
+
+        let intra = |bytes: f64| {
+            if bytes <= 0.0 {
+                0.0
+            } else {
+                self.node.nvlink_latency + bytes / self.node.nvlink_bw
+            }
+        };
+        let ring = if p.ring_bytes > 0.0 {
+            self.node.nic_latency + p.ring_bytes / self.node.nic_bw
+        } else {
+            0.0
+        };
+        let packing = if agate {
+            self.packing_latency * p.num_messages() as f64
+        } else {
+            0.0
+        };
+        intra(p.intra_src_bytes) + inter + ring + intra(p.intra_dst_bytes) + packing
+    }
+
+    /// Build the dispatch plan (attention → MoE) for a scheme/gating
+    /// combination. `b_per_attn` is each attention instance's local batch.
+    pub fn dispatch_plan(
+        &self,
+        scheme: CommScheme,
+        gating: GatingSide,
+        n_attn: usize,
+        n_moe: usize,
+        b_per_attn: f64,
+    ) -> TransferPlan {
+        let per_node = self.node.gpus_per_node;
+        let moe_nodes = plan::nodes_for(n_moe, per_node);
+        // Payload one attention instance contributes, and the fraction a
+        // destination node needs.
+        let (inst_bytes, dst_fraction) = match gating {
+            // EGate: full activations to every MoE node (gating + AEBS run
+            // redundantly MoE-side over the full batch).
+            GatingSide::Moe => (b_per_attn * self.token_bytes, 1.0),
+            // AGate: only tokens routed to experts on the destination node,
+            // plus per-token metadata. A token reaches up to top_k distinct
+            // nodes; expected node coverage ≈ min(k, nodes)/nodes.
+            GatingSide::Attention => {
+                let cover = (self.top_k as f64).min(moe_nodes as f64) / moe_nodes as f64;
+                (
+                    b_per_attn * (self.token_bytes + self.meta_bytes_per_token),
+                    cover,
+                )
+            }
+        };
+        match scheme {
+            CommScheme::OnePhase => {
+                // Instance-pairwise. Under EGate every MoE instance needs
+                // the full payload; under AGate only its routed share.
+                let pair_bytes = match gating {
+                    GatingSide::Moe => inst_bytes,
+                    GatingSide::Attention => {
+                        let cover =
+                            (self.top_k as f64).min(n_moe as f64) / n_moe as f64;
+                        inst_bytes * cover
+                    }
+                };
+                plan::one_phase(n_attn, n_moe, per_node, pair_bytes)
+            }
+            CommScheme::TwoPhaseAdaptive => {
+                let direct = plan::two_phase_direct(
+                    n_attn, n_moe, per_node, inst_bytes, dst_fraction,
+                );
+                let one2one = plan::two_phase_one_to_one(
+                    n_attn, n_moe, per_node, inst_bytes, dst_fraction,
+                );
+                let agate = gating == GatingSide::Attention;
+                if self.plan_time(&direct, agate) <= self.plan_time(&one2one, agate) {
+                    direct
+                } else {
+                    one2one
+                }
+            }
+        }
+    }
+
+    /// Build the combine plan (MoE → attention): expert outputs per token
+    /// return to the owning attention instance. The MoE side pre-reduces
+    /// partial sums intra-node (two-phase) so each token's result crosses
+    /// the wire once per source MoE node.
+    pub fn combine_plan(
+        &self,
+        scheme: CommScheme,
+        n_attn: usize,
+        n_moe: usize,
+        b_total: f64,
+    ) -> TransferPlan {
+        let per_node = self.node.gpus_per_node;
+        match scheme {
+            CommScheme::OnePhase => {
+                // Every MoE instance returns its slice to every attention
+                // instance that owns affected tokens ⇒ n×m small messages.
+                let pair = b_total / n_attn as f64 * self.token_bytes
+                    * (self.top_k as f64).min(n_moe as f64)
+                    / n_moe as f64;
+                plan::one_phase(n_moe, n_attn, per_node, pair)
+            }
+            CommScheme::TwoPhaseAdaptive => {
+                // Intra-node all-reduce of partial expert sums, then each
+                // MoE node sends each attention node the results for its
+                // tokens (b_total / attn_nodes per destination).
+                let attn_nodes = plan::nodes_for(n_attn, per_node);
+                let inst_bytes = b_total / n_moe as f64 * self.token_bytes;
+                plan::two_phase_direct(
+                    n_moe,
+                    n_attn,
+                    per_node,
+                    inst_bytes,
+                    1.0 / attn_nodes as f64,
+                )
+            }
+        }
+    }
+
+    /// Full per-layer round-trip cost for a deployment.
+    pub fn layer_cost(
+        &self,
+        scheme: CommScheme,
+        gating: GatingSide,
+        n_attn: usize,
+        n_moe: usize,
+        batch_total: f64,
+    ) -> CommBreakdown {
+        let b_per_attn = batch_total / n_attn as f64;
+        let dp = self.dispatch_plan(scheme, gating, n_attn, n_moe, b_per_attn);
+        let cp = self.combine_plan(scheme, n_attn, n_moe, batch_total);
+        let agate = gating == GatingSide::Attention;
+        let unoptimized = scheme == CommScheme::OnePhase;
+        CommBreakdown {
+            dispatch: self.plan_time_with(&dp, agate, unoptimized),
+            combine: self.plan_time_with(&cp, false, unoptimized),
+            messages: dp.num_messages() + cp.num_messages(),
+            volume: dp.total_volume() + cp.total_volume(),
+            case: dp.case,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::paper_testbed;
+
+    fn model() -> CommModel {
+        CommModel::new(paper_testbed().node, 5120, 6)
+    }
+
+    #[test]
+    fn two_phase_beats_one_phase_egate() {
+        // Fig 12's headline: 1PC+EGate is catastrophic at larger batch
+        // because ungated full activations go to every instance pairwise.
+        let m = model();
+        for batch in [256.0, 512.0] {
+            let c1 = m.layer_cost(CommScheme::OnePhase, GatingSide::Moe, 4, 16, batch);
+            let c2 = m.layer_cost(
+                CommScheme::TwoPhaseAdaptive,
+                GatingSide::Moe,
+                4,
+                16,
+                batch,
+            );
+            assert!(
+                c2.total() < c1.total() * 0.7,
+                "batch {batch}: 2PC {} vs 1PC {}",
+                c2.total(),
+                c1.total()
+            );
+        }
+    }
+
+    #[test]
+    fn egate_beats_agate_under_two_phase() {
+        // Fig 12: 2PC+EGate improves over 2PC+AGate (no per-link metadata
+        // or packing).
+        let m = model();
+        let ce = m.layer_cost(CommScheme::TwoPhaseAdaptive, GatingSide::Moe, 4, 12, 256.0);
+        let ca = m.layer_cost(
+            CommScheme::TwoPhaseAdaptive,
+            GatingSide::Attention,
+            4,
+            12,
+            256.0,
+        );
+        assert!(
+            ce.total() < ca.total(),
+            "EGate {} vs AGate {}",
+            ce.total(),
+            ca.total()
+        );
+    }
+
+    #[test]
+    fn adaptive_picks_one_to_one_for_many_destinations() {
+        let m = model();
+        // 1 attention node, 4 MoE nodes, big batch: direct would send 4
+        // full copies from one NIC; one-to-one spreads the ring over the
+        // MoE side.
+        let p = m.dispatch_plan(CommScheme::TwoPhaseAdaptive, GatingSide::Moe, 8, 32, 512.0);
+        assert_eq!(p.case, Some(TwoPhaseCase::OneToOne), "case: {:?}", p.case);
+        // Small setup: direct wins.
+        let p2 = m.dispatch_plan(CommScheme::TwoPhaseAdaptive, GatingSide::Moe, 2, 6, 16.0);
+        assert_eq!(p2.case, Some(TwoPhaseCase::Direct));
+    }
+
+    #[test]
+    fn cost_scales_with_batch() {
+        let m = model();
+        let small = m.layer_cost(CommScheme::TwoPhaseAdaptive, GatingSide::Moe, 2, 6, 32.0);
+        let large = m.layer_cost(CommScheme::TwoPhaseAdaptive, GatingSide::Moe, 2, 6, 1024.0);
+        assert!(large.total() > small.total());
+    }
+
+    #[test]
+    fn comm_is_sub_millisecond_in_paper_regime() {
+        // Sanity: per-layer comm at B=256 on 400Gbps IB must be O(100 µs),
+        // not O(10 ms) — otherwise TPOT could never meet a 200 ms SLO over
+        // 60 layers.
+        let m = model();
+        let c = m.layer_cost(CommScheme::TwoPhaseAdaptive, GatingSide::Moe, 2, 6, 256.0);
+        assert!(c.total() < 1e-3, "layer comm {}", c.total());
+    }
+}

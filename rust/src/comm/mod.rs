@@ -1,0 +1,27 @@
+//! Adaptive two-phase communication (§3.3).
+//!
+//! Disaggregation turns per-layer activation movement into cross-sub-cluster
+//! traffic between m attention instances and n MoE instances. This module
+//! models the transfer schemes the paper compares (Fig 6, Fig 12):
+//!
+//! - **1PC** (strawman): every attention instance talks to every MoE
+//!   instance directly — O(m·n) small messages on the critical path.
+//! - **2PC case-1**: instances on each source node aggregate over NVLink,
+//!   then each source node sends one bulk message per destination node.
+//! - **2PC case-2**: each source node sends one bulk message to a single
+//!   designated destination node; destination nodes then exchange payloads
+//!   among themselves (ring) and multicast locally over NVLink.
+//!
+//! The *adaptive* scheme evaluates both 2PC cases on the actual
+//! configuration and traffic and picks the cheaper (`Adaptive::select`).
+//!
+//! Gating location changes payloads (Fig 12): **EGate** ships full
+//! activations (every MoE node needs all tokens — gating and AEBS run
+//! redundantly there), **AGate** ships only routed activations but adds
+//! top-k metadata and per-expert packing overhead on every link.
+
+pub mod cost;
+pub mod plan;
+
+pub use cost::{CommBreakdown, CommModel};
+pub use plan::{TransferPlan, TwoPhaseCase};

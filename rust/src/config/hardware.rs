@@ -1,0 +1,165 @@
+//! Hardware profiles for the roofline performance model.
+//!
+//! The paper's testbed is 4 nodes × 8 H100-80GB, NVLink 900 GB/s intra-node,
+//! 400 Gbps InfiniBand inter-node. We have no GPUs in this environment, so
+//! these profiles parameterize the analytical model (`perfmodel/`) and the
+//! communication cost model (`comm/`) with the paper's own published
+//! constants (§2.2: H100 = 989 TFLOPs/s, 3.35 TB/s; A100 = 312 TFLOPs/s,
+//! 2.0 TB/s).
+
+/// One GPU class.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Peak dense BF16 FLOPs per second.
+    pub peak_flops: f64,
+    /// HBM bandwidth, bytes per second.
+    pub mem_bw: f64,
+    /// HBM capacity in bytes.
+    pub mem_capacity: f64,
+    /// Fixed per-kernel launch overhead, seconds. Drives the near-constant
+    /// latency floor the paper observes when very few experts are active.
+    pub kernel_launch: f64,
+    /// Achievable fraction of peak memory bandwidth for streaming weight
+    /// reads (large GEMV-like kernels typically reach 70-85%).
+    pub mem_efficiency: f64,
+    /// Achievable fraction of peak FLOPs for dense GEMM.
+    pub flops_efficiency: f64,
+}
+
+impl GpuSpec {
+    /// Effective streaming bandwidth (bytes/s).
+    pub fn eff_bw(&self) -> f64 {
+        self.mem_bw * self.mem_efficiency
+    }
+
+    /// Effective dense compute (FLOPs/s).
+    pub fn eff_flops(&self) -> f64 {
+        self.peak_flops * self.flops_efficiency
+    }
+
+    /// Arithmetic-intensity ridge point (FLOPs per byte) of the roofline.
+    pub fn ridge_point(&self) -> f64 {
+        self.peak_flops / self.mem_bw
+    }
+}
+
+/// Node-level interconnect description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeSpec {
+    pub gpus_per_node: usize,
+    /// NVLink bandwidth per GPU, bytes/s (unidirectional effective).
+    pub nvlink_bw: f64,
+    /// NVLink per-message latency, seconds.
+    pub nvlink_latency: f64,
+    /// Inter-node NIC bandwidth per GPU, bytes/s (400 Gbps IB = 50 GB/s).
+    pub nic_bw: f64,
+    /// Inter-node per-message latency, seconds (RDMA one-sided put).
+    pub nic_latency: f64,
+}
+
+/// A full cluster hardware profile.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HardwareProfile {
+    pub gpu: GpuSpec,
+    pub node: NodeSpec,
+    pub num_nodes: usize,
+}
+
+impl HardwareProfile {
+    pub fn total_gpus(&self) -> usize {
+        self.num_nodes * self.node.gpus_per_node
+    }
+}
+
+/// H100-80GB SXM.
+pub fn h100() -> GpuSpec {
+    GpuSpec {
+        name: "H100-80GB",
+        peak_flops: 989e12,
+        mem_bw: 3.35e12,
+        mem_capacity: 80e9,
+        kernel_launch: 4e-6,
+        mem_efficiency: 0.80,
+        flops_efficiency: 0.60,
+    }
+}
+
+/// A100-80GB SXM.
+pub fn a100() -> GpuSpec {
+    GpuSpec {
+        name: "A100-80GB",
+        peak_flops: 312e12,
+        mem_bw: 2.0e12,
+        mem_capacity: 80e9,
+        kernel_launch: 4e-6,
+        mem_efficiency: 0.80,
+        flops_efficiency: 0.60,
+    }
+}
+
+/// A bandwidth-rich "decode accelerator" for the §6 heterogeneous-hardware
+/// extension (modeled after LPX-class parts: lower peak compute, high HBM
+/// bandwidth). Used only by the heterogeneity ablation.
+pub fn lpx_like() -> GpuSpec {
+    GpuSpec {
+        name: "LPX-like",
+        peak_flops: 400e12,
+        mem_bw: 4.5e12,
+        mem_capacity: 96e9,
+        kernel_launch: 4e-6,
+        mem_efficiency: 0.85,
+        flops_efficiency: 0.60,
+    }
+}
+
+/// The paper's testbed: 4 nodes × 8 H100, NVLink 900 GB/s, 400 Gbps IB.
+pub fn paper_testbed() -> HardwareProfile {
+    HardwareProfile {
+        gpu: h100(),
+        node: NodeSpec {
+            gpus_per_node: 8,
+            nvlink_bw: 900e9 / 2.0, // 900 GB/s is bidirectional aggregate
+            nvlink_latency: 2e-6,
+            nic_bw: 50e9, // 400 Gbps
+            nic_latency: 6e-6,
+        },
+        num_nodes: 4,
+    }
+}
+
+/// A larger 8-node pool used by the trace-driven autoscaling experiments
+/// (Fig 11 scales between 7 and 64 GPUs).
+pub fn autoscale_pool() -> HardwareProfile {
+    let mut hw = paper_testbed();
+    hw.num_nodes = 8;
+    hw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h100_matches_paper_constants() {
+        let g = h100();
+        assert_eq!(g.peak_flops, 989e12);
+        assert_eq!(g.mem_bw, 3.35e12);
+        // §2.2: the roofline ridge for H100 ≈ 295 FLOPs/byte.
+        assert!((g.ridge_point() - 295.2).abs() < 1.0);
+    }
+
+    #[test]
+    fn a100_ridge() {
+        // §2.2: A100 = 312 TF / 2 TB/s = 156 FLOPs/byte.
+        assert!((a100().ridge_point() - 156.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn testbed_shape() {
+        let hw = paper_testbed();
+        assert_eq!(hw.total_gpus(), 32);
+        assert!(hw.node.nic_bw < hw.node.nvlink_bw);
+        assert!(hw.node.nvlink_latency < hw.node.nic_latency);
+    }
+}

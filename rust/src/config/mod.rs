@@ -1,0 +1,12 @@
+//! Configuration layer: hardware profiles, the MoE model catalog, and
+//! serving-level (SLO / policy / deployment) configuration.
+
+pub mod hardware;
+pub mod models;
+pub mod serving;
+
+pub use hardware::{GpuSpec, HardwareProfile, NodeSpec};
+pub use models::MoeModel;
+pub use serving::{
+    CommScheme, Deployment, GatingSide, SchedulerKind, ServingConfig, Slo,
+};

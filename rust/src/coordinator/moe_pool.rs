@@ -1,0 +1,156 @@
+//! MoE workers: each runs the MoE-side block (EGate gating + device-side
+//! AEBS + grouped expert FFN) for one instance of the disaggregated pool.
+
+use anyhow::Result;
+
+use crate::placement::ExpertPlacement;
+use crate::runtime::artifacts::ArtifactBundle;
+use crate::runtime::literal_util as lu;
+use crate::runtime::Engine;
+
+/// One MoE instance.
+pub struct MoeWorker {
+    pub id: u32,
+    /// (E, max_moe_instances) replica-layout matrix fed to the artifact's
+    /// device-side AEBS (identical on every worker — the §3.4
+    /// synchronization-free design).
+    host_matrix: Vec<i32>,
+    experts: usize,
+    max_instances: usize,
+}
+
+impl MoeWorker {
+    /// Build the pool for a placement (all workers share the layout).
+    pub fn pool(bundle: &ArtifactBundle, placement: &ExpertPlacement) -> Vec<MoeWorker> {
+        let m = &bundle.meta;
+        assert_eq!(placement.experts, m.experts);
+        assert!(placement.n_instances <= m.max_moe_instances);
+        let mut host_matrix = vec![0i32; m.experts * m.max_moe_instances];
+        for e in 0..m.experts as u16 {
+            for &g in placement.hosts(e) {
+                host_matrix[e as usize * m.max_moe_instances + g as usize] = 1;
+            }
+        }
+        (0..placement.n_instances as u32)
+            .map(|id| MoeWorker {
+                id,
+                host_matrix: host_matrix.clone(),
+                experts: m.experts,
+                max_instances: m.max_moe_instances,
+            })
+            .collect()
+    }
+
+    /// Execute this instance's partial for one layer.
+    ///
+    /// `hn` is the full batch's activations (EGate broadcast); the
+    /// artifact's embedded gate + AEBS mask the experts this instance
+    /// doesn't serve, so the returned (T, d) partial sums with the other
+    /// instances' partials to the full MoE output.
+    pub fn run_layer(
+        &self,
+        engine: &Engine,
+        bundle: &ArtifactBundle,
+        layer: usize,
+        hn: &[f32],
+    ) -> Result<Vec<f32>> {
+        let m = &bundle.meta;
+        let (t, d) = (m.batch_tokens, m.d_model);
+        let p = |w: &str| format!("l{layer}.{w}");
+        let w = &bundle.weights;
+        let out = engine.execute(
+            "moe",
+            &[
+                lu::f32_literal(hn, &[t, d])?,
+                lu::tensor_literal(w.get(&p("wgate"))?)?,
+                lu::tensor_literal(w.get(&p("w1"))?)?,
+                lu::tensor_literal(w.get(&p("w3"))?)?,
+                lu::tensor_literal(w.get(&p("w2"))?)?,
+                lu::i32_literal(
+                    &self.host_matrix,
+                    &[self.experts, self.max_instances],
+                )?,
+                lu::i32_scalar(self.id as i32),
+            ],
+        )?;
+        lu::to_f32_vec(&out[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> Option<(ArtifactBundle, Engine)> {
+        let dir = ArtifactBundle::default_dir();
+        if !dir.join("meta.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let bundle = ArtifactBundle::load(&dir).unwrap();
+        let mut engine = Engine::cpu().unwrap();
+        engine.load_hlo("moe", &bundle.hlo_path("moe")).unwrap();
+        Some((bundle, engine))
+    }
+
+    fn test_hn(bundle: &ArtifactBundle) -> Vec<f32> {
+        let n = bundle.meta.batch_tokens * bundle.meta.d_model;
+        (0..n).map(|i| ((i % 17) as f32 - 8.0) * 0.11).collect()
+    }
+
+    #[test]
+    fn partials_sum_to_full_moe_output() {
+        // The combine invariant, now across the *real PJRT artifacts*:
+        // Σ_g partial_g == single-instance full output.
+        let Some((bundle, engine)) = setup() else { return };
+        let m = &bundle.meta;
+        let hn = test_hn(&bundle);
+
+        // Full output: one instance hosting every expert.
+        let full_placement = ExpertPlacement::contiguous(m.experts, 1, m.experts);
+        let solo = MoeWorker::pool(&bundle, &full_placement);
+        let full = solo[0].run_layer(&engine, &bundle, 0, &hn).unwrap();
+
+        // Disaggregated: 4 instances, round-robin with redundancy.
+        let placement = ExpertPlacement::round_robin(m.experts, 4, 3);
+        let pool = MoeWorker::pool(&bundle, &placement);
+        let mut sum = vec![0.0f32; full.len()];
+        for w in &pool {
+            let part = w.run_layer(&engine, &bundle, 0, &hn).unwrap();
+            for (s, p) in sum.iter_mut().zip(part) {
+                *s += p;
+            }
+        }
+        for (a, b) in sum.iter().zip(full.iter()) {
+            assert!((a - b).abs() < 2e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn device_aebs_uses_one_replica_per_expert() {
+        // With full double-replication, instance partials must not double
+        // count: sum over 2-instance pool == full output.
+        let Some((bundle, engine)) = setup() else { return };
+        let m = &bundle.meta;
+        let hn = test_hn(&bundle);
+        let full_placement = ExpertPlacement::contiguous(m.experts, 1, m.experts);
+        let solo = MoeWorker::pool(&bundle, &full_placement);
+        let full = solo[0].run_layer(&engine, &bundle, 0, &hn).unwrap();
+
+        let mut placement = ExpertPlacement::empty(m.experts, 2, m.experts);
+        for e in 0..m.experts as u16 {
+            placement.seat(e, 0).unwrap();
+            placement.seat(e, 1).unwrap();
+        }
+        let pool = MoeWorker::pool(&bundle, &placement);
+        let p0 = pool[0].run_layer(&engine, &bundle, 0, &hn).unwrap();
+        let p1 = pool[1].run_layer(&engine, &bundle, 0, &hn).unwrap();
+        let sum: Vec<f32> = p0.iter().zip(&p1).map(|(a, b)| a + b).collect();
+        for (a, b) in sum.iter().zip(full.iter()) {
+            assert!((a - b).abs() < 2e-4, "{a} vs {b}");
+        }
+        // And the balancing actually splits work: both partials non-zero.
+        assert!(p0.iter().any(|&v| v.abs() > 1e-6));
+        assert!(p1.iter().any(|&v| v.abs() > 1e-6));
+    }
+}

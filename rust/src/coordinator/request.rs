@@ -1,0 +1,192 @@
+//! Requests and the admission queue.
+
+use std::collections::VecDeque;
+
+/// One generation request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Prompt token ids (vocabulary of the served model).
+    pub prompt: Vec<i32>,
+    /// Tokens to generate.
+    pub max_new_tokens: usize,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        assert!(!prompt.is_empty(), "empty prompt");
+        assert!(max_new_tokens > 0);
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+        }
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.prompt.len() + self.max_new_tokens
+    }
+}
+
+/// FIFO admission queue (the paper's request controller assigns incoming
+/// requests to attention instances; with one attention worker this is a
+/// plain queue).
+#[derive(Debug, Default)]
+pub struct RequestQueue {
+    queue: VecDeque<Request>,
+    next_id: u64,
+}
+
+impl RequestQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn submit(&mut self, prompt: Vec<i32>, max_new_tokens: usize) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(Request::new(id, prompt, max_new_tokens));
+        id
+    }
+
+    pub fn pop(&mut self) -> Option<Request> {
+        self.queue.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+}
+
+/// The per-slot state of the continuous batcher. A slot walks through its
+/// request's prompt one token per step ("light prefill" through the
+/// decode path — the decode-centric setting of §2.1), then generates.
+#[derive(Clone, Debug)]
+pub struct Slot {
+    pub request: Option<Request>,
+    /// Tokens consumed so far (prompt prefix + generated).
+    pub tokens: Vec<i32>,
+    /// Position of the next input token within `tokens`.
+    pub pos: usize,
+    /// Generated (post-prompt) tokens.
+    pub generated: Vec<i32>,
+}
+
+impl Slot {
+    pub fn empty() -> Self {
+        Slot {
+            request: None,
+            tokens: Vec::new(),
+            pos: 0,
+            generated: Vec::new(),
+        }
+    }
+
+    pub fn assign(&mut self, r: Request) {
+        self.tokens = r.prompt.clone();
+        self.pos = 0;
+        self.generated = Vec::new();
+        self.request = Some(r);
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.request.is_some()
+    }
+
+    /// Input token for the current step (0 when idle).
+    pub fn input_token(&self) -> i32 {
+        if self.is_active() {
+            self.tokens[self.pos]
+        } else {
+            0
+        }
+    }
+
+    /// Whether the current step's output is a generated token (the slot
+    /// has consumed its whole prompt) rather than prefill.
+    pub fn is_generating(&self) -> bool {
+        match &self.request {
+            Some(r) => self.pos + 1 >= r.prompt.len(),
+            None => false,
+        }
+    }
+
+    /// Advance after a step that produced `next_token`. Returns the
+    /// completed request when it just finished.
+    pub fn advance(&mut self, next_token: i32) -> Option<Request> {
+        let Some(r) = &self.request else { return None };
+        if self.is_generating() {
+            self.generated.push(next_token);
+            if self.generated.len() >= r.max_new_tokens {
+                let done = self.request.take();
+                return done;
+            }
+            self.tokens.push(next_token);
+        }
+        self.pos += 1;
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_fifo() {
+        let mut q = RequestQueue::new();
+        let a = q.submit(vec![1, 2], 3);
+        let b = q.submit(vec![3], 1);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop().unwrap().id, a);
+        assert_eq!(q.pop().unwrap().id, b);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn slot_prefill_then_generate() {
+        let mut s = Slot::empty();
+        s.assign(Request::new(0, vec![10, 11, 12], 2));
+        // Step 1: input 10, prefill (output ignored).
+        assert_eq!(s.input_token(), 10);
+        assert!(!s.is_generating());
+        assert!(s.advance(99).is_none());
+        // Step 2: input 11, still prefill.
+        assert_eq!(s.input_token(), 11);
+        assert!(!s.is_generating());
+        assert!(s.advance(98).is_none());
+        // Step 3: input 12 (last prompt token) — output is generated.
+        assert_eq!(s.input_token(), 12);
+        assert!(s.is_generating());
+        assert!(s.advance(42).is_none());
+        assert_eq!(s.generated, vec![42]);
+        // Step 4: input 42, generates the final token → request completes.
+        assert_eq!(s.input_token(), 42);
+        let done = s.advance(43).expect("completed");
+        assert_eq!(done.id, 0);
+        assert_eq!(s.generated, vec![42, 43]);
+        assert!(!s.is_active());
+    }
+
+    #[test]
+    fn single_token_prompt_generates_immediately() {
+        let mut s = Slot::empty();
+        s.assign(Request::new(7, vec![5], 1));
+        assert!(s.is_generating());
+        let done = s.advance(9).unwrap();
+        assert_eq!(done.id, 7);
+        assert_eq!(s.generated, vec![9]);
+    }
+
+    #[test]
+    fn idle_slot_is_inert() {
+        let mut s = Slot::empty();
+        assert!(!s.is_active());
+        assert_eq!(s.input_token(), 0);
+        assert!(s.advance(1).is_none());
+    }
+}

@@ -1,0 +1,33 @@
+//! # Janus — disaggregated attention/expert MoE inference (reproduction)
+//!
+//! A from-scratch reproduction of *"Janus: Disaggregating Attention and
+//! Experts for Scalable MoE Inference"* (CS.DC 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the coordinator: AEBS activation scheduling
+//!   (§3.4), adaptive two-phase communication (§3.3), activation-aware
+//!   replica placement (Appendix B), and SLO-aware resource scaling
+//!   (§3.5), plus the simulated cluster substrate, baseline systems, and
+//!   the evaluation harness that regenerates every paper table and figure.
+//! - **L2/L1 (python/, build-time only)** — a real small MoE model
+//!   (TinyMoE) whose disaggregated blocks are AOT-lowered (JAX → HLO text)
+//!   and executed by the Rust runtime through PJRT; the expert FFN, gate,
+//!   attention, and AEBS hot spots are authored as Pallas kernels.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index.
+
+pub mod baselines;
+pub mod comm;
+pub mod coordinator;
+pub mod scaling;
+pub mod config;
+pub mod metrics;
+pub mod perfmodel;
+pub mod placement;
+pub mod routing;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod testing;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,190 @@
+//! `janus` — the leader entrypoint / CLI.
+//!
+//! Subcommands:
+//!   serve     end-to-end disaggregated TinyMoE serving on PJRT
+//!   scale     run the SLO-aware scaler (Algorithm 2) for a demand level
+//!   simulate  fixed-batch system comparison (one Fig-8-style row)
+//!   info      print model catalog + environment
+//!
+//! Figure/table regeneration lives in the `figures` binary.
+
+use janus::baselines::JanusSystem;
+use janus::config::hardware::paper_testbed;
+use janus::config::models;
+use janus::config::serving::Slo;
+use janus::coordinator::Leader;
+use janus::placement::ExpertPlacement;
+use janus::routing::gate::ExpertPopularity;
+use janus::runtime::artifacts::ArtifactBundle;
+use janus::scaling::{AmaxTable, Scaler};
+use janus::sim::decode_sim::evaluate_fixed_batch;
+use janus::util::cli::Args;
+use janus::util::rng::Rng;
+use janus::util::table::{fnum, Table};
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
+    let result = match cmd {
+        "serve" => serve(&args),
+        "scale" => scale(&args),
+        "simulate" => simulate(&args),
+        "info" => info(&args),
+        other => {
+            eprintln!("unknown command '{other}'. commands: serve scale simulate info");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// End-to-end serving of batched requests on the PJRT CPU backend.
+fn serve(args: &Args) -> anyhow::Result<()> {
+    let n_moe = args.usize_or("moe-instances", 2);
+    let requests = args.usize_or("requests", 8);
+    let out_tokens = args.usize_or("tokens", 16);
+    let bundle = ArtifactBundle::load(&ArtifactBundle::default_dir())?;
+    let experts = bundle.meta.experts;
+    let capacity = experts.div_ceil(n_moe) + 1;
+    let placement = ExpertPlacement::round_robin(experts, n_moe, capacity);
+    println!(
+        "TinyMoE serving: {} layers, {} experts, {} MoE instances, batch {}",
+        bundle.meta.layers, experts, n_moe, bundle.meta.batch_tokens
+    );
+    let mut leader = Leader::new(bundle, &placement, &paper_testbed())?;
+    let mut rng = Rng::seed_from_u64(args.u64_or("seed", 1));
+    for _ in 0..requests {
+        let len = 1 + rng.usize_below(4);
+        let prompt: Vec<i32> = (0..len).map(|_| rng.usize_below(500) as i32 + 1).collect();
+        leader.queue.submit(prompt, out_tokens);
+    }
+    let report = leader.serve(10_000)?;
+    println!(
+        "completed {} requests, {} tokens in {:.2}s ({:.1} tok/s)",
+        report.completed_requests,
+        report.generated_tokens,
+        report.wall_seconds,
+        report.tokens_per_second
+    );
+    println!(
+        "step TPOT: mean {:.1} ms, p99 {:.1} ms | modeled comm {:.2} ms total",
+        report.tpot.mean() * 1e3,
+        report.tpot.p99() * 1e3,
+        report.modeled_comm_seconds * 1e3
+    );
+    Ok(())
+}
+
+/// Run Algorithm 2 for a given demand + SLO.
+fn scale(args: &Args) -> anyhow::Result<()> {
+    let model = models::by_name(args.get_or("model", "dsv2"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let lambda = args.f64_or("demand", 2000.0);
+    let slo = Slo::from_ms(args.f64_or("slo", 200.0));
+    let hw = paper_testbed();
+    let capacity = janus::config::serving::default_capacity(&model, &hw);
+    let mut rng = Rng::seed_from_u64(args.u64_or("seed", 1));
+    let gate = janus::routing::gate::GateSim::new(
+        model.experts,
+        model.top_k,
+        &ExpertPopularity::Zipf { s: 0.4 },
+        &mut rng,
+    );
+    let mut trace =
+        janus::routing::trace::ActivationTrace::new(model.experts, model.top_k, 8192);
+    trace.record_batch(&gate.sample_batch(&mut rng, 8192));
+    let n_e_min = model.experts.div_ceil(capacity);
+    let n_e_values: Vec<usize> = (n_e_min..=16).collect();
+    let amax = AmaxTable::build(
+        &trace,
+        &n_e_values,
+        &AmaxTable::default_grid(4096),
+        capacity,
+        janus::config::serving::SchedulerKind::Aebs,
+        8,
+        &mut rng,
+    );
+    let scaler = Scaler::new(model, hw, amax, 16);
+    match scaler.optimize(lambda, slo, 512.0) {
+        Some(plan) => {
+            println!("demand {lambda:.0} tok/s, SLO {:.0} ms:", slo.ms());
+            println!(
+                "  deployment {}  B*={:.0}  TPOT {:.1} ms  TPG {:.0} tok/s/GPU  a_max {:.1}",
+                plan.deployment,
+                plan.b_star,
+                plan.tpot * 1e3,
+                plan.tpg,
+                plan.a_max
+            );
+        }
+        None => println!("no feasible configuration within the cluster bound"),
+    }
+    Ok(())
+}
+
+/// One fixed-batch evaluation of Janus (Fig-8-style row).
+fn simulate(args: &Args) -> anyhow::Result<()> {
+    let model = models::by_name(args.get_or("model", "dsv2"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let batch = args.usize_or("batch", 256);
+    let slo = Slo::from_ms(args.f64_or("slo", 200.0));
+    let steps = args.usize_or("steps", 50);
+    let mut sys = JanusSystem::build(
+        model,
+        paper_testbed(),
+        &ExpertPopularity::Zipf { s: 0.4 },
+        16,
+        args.u64_or("seed", 42),
+    );
+    let r = evaluate_fixed_batch(&mut sys, batch, slo, steps, 7);
+    let mut t = Table::new(["system", "config", "gpus", "TPOT ms", "P99 ms", "TPG", "SLO"]);
+    t.row([
+        r.system.to_string(),
+        r.config_label,
+        r.gpus.to_string(),
+        fnum(r.tpot_mean * 1e3, 1),
+        fnum(r.tpot_p99 * 1e3, 1),
+        fnum(r.tpg, 0),
+        format!("{:.0}%", r.slo_attainment * 100.0),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn info(_: &Args) -> anyhow::Result<()> {
+    println!("Janus reproduction — disaggregated MoE inference\n");
+    let mut t = Table::new(["model", "layers", "experts", "top-k", "total GB", "expert %"]);
+    for m in [
+        models::deepseek_v2(),
+        models::deepseek_v3(),
+        models::qwen3_235b(),
+        models::grok1(),
+        models::scaled_ds_1(),
+        models::scaled_ds_2(),
+        models::tiny_moe(),
+    ] {
+        t.row([
+            m.name.to_string(),
+            m.layers.to_string(),
+            m.experts.to_string(),
+            m.top_k.to_string(),
+            fnum(m.total_mem_gb(), 1),
+            fnum(m.expert_ratio_pct(), 1),
+        ]);
+    }
+    t.print();
+    let dir = ArtifactBundle::default_dir();
+    println!(
+        "\nartifacts: {} ({})",
+        dir.display(),
+        if dir.join("meta.json").exists() {
+            "built"
+        } else {
+            "missing — run `make artifacts`"
+        }
+    );
+    Ok(())
+}

@@ -1,0 +1,122 @@
+//! Serving metrics (§5.1): TPOT (mean/P99), per-GPU throughput (TPG),
+//! SLO attainment, and GPU-hours for the autoscaling comparison.
+
+use crate::util::stats;
+
+/// TPOT sample collection with percentile reporting.
+#[derive(Clone, Debug, Default)]
+pub struct TpotStats {
+    samples: Vec<f64>,
+}
+
+impl TpotStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, tpot_seconds: f64) {
+        self.samples.push(tpot_seconds);
+    }
+
+    pub fn extend(&mut self, xs: &[f64]) {
+        self.samples.extend_from_slice(xs);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn p50(&self) -> f64 {
+        stats::percentile(&self.samples, 50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        stats::percentile(&self.samples, 99.0)
+    }
+
+    pub fn max(&self) -> f64 {
+        stats::max(&self.samples)
+    }
+
+    /// Fraction of samples within the SLO.
+    pub fn attainment(&self, slo_seconds: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 1.0;
+        }
+        self.samples.iter().filter(|&&s| s <= slo_seconds).count() as f64
+            / self.samples.len() as f64
+    }
+}
+
+/// Throughput-per-GPU (tokens/s/GPU).
+pub fn tpg(total_output_tokens: f64, wall_seconds: f64, gpus: usize) -> f64 {
+    if wall_seconds <= 0.0 || gpus == 0 {
+        return 0.0;
+    }
+    total_output_tokens / wall_seconds / gpus as f64
+}
+
+/// GPU-hours accumulator for autoscaling traces (Fig 11).
+#[derive(Clone, Debug, Default)]
+pub struct GpuHours {
+    total: f64,
+}
+
+impl GpuHours {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `gpus` in use for `seconds`.
+    pub fn add(&mut self, gpus: usize, seconds: f64) {
+        self.total += gpus as f64 * seconds / 3600.0;
+    }
+
+    pub fn total(&self) -> f64 {
+        self.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tpot_stats_basics() {
+        let mut t = TpotStats::new();
+        t.extend(&[0.1, 0.2, 0.3, 0.4]);
+        assert_eq!(t.count(), 4);
+        assert!((t.mean() - 0.25).abs() < 1e-12);
+        assert_eq!(t.attainment(0.25), 0.5);
+        assert_eq!(t.attainment(1.0), 1.0);
+    }
+
+    #[test]
+    fn p99_on_skewed_data() {
+        let mut t = TpotStats::new();
+        for _ in 0..99 {
+            t.push(0.1);
+        }
+        t.push(1.0);
+        assert!(t.p99() > 0.1);
+        assert!(t.p50() < 0.11);
+    }
+
+    #[test]
+    fn tpg_math() {
+        assert!((tpg(7000.0, 10.0, 7) - 100.0).abs() < 1e-9);
+        assert_eq!(tpg(100.0, 0.0, 4), 0.0);
+    }
+
+    #[test]
+    fn gpu_hours_accumulate() {
+        let mut g = GpuHours::new();
+        g.add(16, 900.0); // 16 GPUs × 15 min = 4 GPU-hours
+        g.add(32, 900.0); // 8
+        assert!((g.total() - 12.0).abs() < 1e-9);
+    }
+}

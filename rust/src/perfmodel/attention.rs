@@ -1,0 +1,101 @@
+//! Attention-layer latency (Eq. 1b) with optional tensor parallelism
+//! (monolithic baselines shard attention; Janus replicates it).
+
+use super::coeffs::LayerCoeffs;
+
+/// Decode attention latency for a local batch `b` at context `s_ctx`,
+/// running on a single instance (Janus's data-parallel attention).
+///
+/// Eq. (1b): max(c_a, α·b + c_kv·b·S_ctx). c_a is the weight-read floor
+/// that dominates at small workloads.
+pub fn attn_latency(c: &LayerCoeffs, b: f64, s_ctx: f64) -> f64 {
+    let floor = c.c_a;
+    let work = c.alpha * b + c.c_kv * b * s_ctx;
+    floor.max(work) + c.launch
+}
+
+/// Cost of one ring all-reduce over `bytes` across `t` GPUs on NVLink
+/// (per-layer TP synchronization for monolithic attention).
+pub fn tp_allreduce(bytes: f64, t: f64, link_bw: f64, link_latency: f64) -> f64 {
+    if t <= 1.0 {
+        return 0.0;
+    }
+    // Ring all-reduce: 2(t-1)/t of the data crosses each link, plus
+    // 2(t-1) latency hops.
+    2.0 * (t - 1.0) / t * bytes / link_bw + 2.0 * (t - 1.0) * link_latency
+}
+
+/// Attention latency under tensor parallelism of degree `t`: weights, KV
+/// and compute shard 1/t, but each layer pays an all-reduce over the
+/// activations (b × d_model × 2 bytes). This is what flattens Fig 1's
+/// attention scaling at small batch.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_latency_tp(
+    c: &LayerCoeffs,
+    b: f64,
+    s_ctx: f64,
+    t: f64,
+    hidden_bytes_per_token: f64,
+    link_bw: f64,
+    link_latency: f64,
+) -> f64 {
+    let floor = c.c_a / t;
+    let work = (c.alpha * b + c.c_kv * b * s_ctx) / t;
+    let ar = tp_allreduce(b * hidden_bytes_per_token, t, link_bw, link_latency);
+    floor.max(work) + c.launch + ar
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::h100;
+    use crate::config::models::deepseek_v2;
+    use crate::perfmodel::coeffs::LayerCoeffs;
+
+    fn c() -> LayerCoeffs {
+        LayerCoeffs::derive(&deepseek_v2(), &h100())
+    }
+
+    #[test]
+    fn plateau_at_small_batch() {
+        // Paper Fig 2-left: attention latency is flat at small/moderate
+        // batch, then rises.
+        let c = c();
+        let l1 = attn_latency(&c, 1.0, 512.0);
+        let l16 = attn_latency(&c, 16.0, 512.0);
+        let l1024 = attn_latency(&c, 1024.0, 512.0);
+        assert!((l16 - l1).abs() / l1 < 0.05, "flat at small batch");
+        assert!(l1024 > 2.0 * l16, "rises at large batch: {l1024} vs {l16}");
+    }
+
+    #[test]
+    fn longer_context_costs_more_at_scale() {
+        let c = c();
+        assert!(attn_latency(&c, 256.0, 4096.0) > attn_latency(&c, 256.0, 512.0));
+    }
+
+    #[test]
+    fn tp_helps_large_batch_more_than_small() {
+        // Paper Fig 1 attention panels: little benefit at B=16/64, real
+        // benefit at B=512.
+        let c = c();
+        let hw = h100();
+        let _ = hw;
+        let hidden_bytes = 5120.0 * 2.0;
+        let (bw, lat) = (450e9, 2e-6);
+        let speedup = |b: f64| {
+            attn_latency_tp(&c, b, 512.0, 1.0, hidden_bytes, bw, lat)
+                / attn_latency_tp(&c, b, 512.0, 8.0, hidden_bytes, bw, lat)
+        };
+        let s16 = speedup(16.0);
+        let s512 = speedup(512.0 * 8.0); // 512 per-GPU-scale batch
+        assert!(s16 < 3.0, "small-batch TP speedup should be weak: {s16}");
+        assert!(s512 > s16, "large batch benefits more: {s512} vs {s16}");
+        assert!(s512 < 8.0, "sublinear vs ideal 8x: {s512}");
+    }
+
+    #[test]
+    fn allreduce_zero_for_single_gpu() {
+        assert_eq!(tp_allreduce(1e6, 1.0, 450e9, 2e-6), 0.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Roofline performance model (§2.2, §3.5 Eq. 1).
+//!
+//! The paper fits Eq. (1)'s coefficients by one-time offline profiling on
+//! H100s. We have no GPUs, so the coefficients are *derived* from the
+//! hardware profile + model architecture instead (`coeffs.rs`); the model
+//! reproduces the paper's qualitative behaviour — attention's latency
+//! plateau at small batch, MoE latency linear in a_max, sublinear
+//! parallelism speedups — which is what the evaluation figures exercise.
+
+pub mod attention;
+pub mod coeffs;
+pub mod moe;
+pub mod tpot;
+
+pub use coeffs::LayerCoeffs;
+pub use tpot::{DisaggLatency, TpotModel};

@@ -1,0 +1,112 @@
+//! MoE-layer latency (Eq. 1c): linear in the activated-expert count of the
+//! straggler instance, with a compute-bound correction far outside the
+//! online regime.
+
+use super::coeffs::LayerCoeffs;
+
+/// Latency of one MoE instance activating `a` distinct experts over
+/// `tokens` routed token-activations.
+///
+/// Per activated expert the instance must stream the expert's weights from
+/// HBM (β). If the per-expert token count is ever large enough to cross
+/// the roofline ridge, compute dominates instead — the `max` term; in the
+/// online decode regime (§2.2) the memory term always wins, matching the
+/// paper's observation that latency is insensitive to token volume (Fig 3).
+pub fn moe_instance_latency(c: &LayerCoeffs, a: u32, tokens: u32) -> f64 {
+    if a == 0 {
+        return c.launch; // empty dispatch still costs a sync
+    }
+    let a = a as f64;
+    let per_expert_tokens = tokens as f64 / a;
+    let per_expert = c
+        .beta
+        .max(c.expert_compute_per_token * per_expert_tokens);
+    a * per_expert + c.c_e
+}
+
+/// Layer latency = straggler instance (Eq. 1c with a_max), assuming the
+/// scheduler also balances token counts to within a constant factor so the
+/// straggler is the max-a instance.
+pub fn moe_layer_latency(c: &LayerCoeffs, a_max: u32, total_tokens: u32, n_instances: u32) -> f64 {
+    let tokens_on_straggler = if n_instances == 0 {
+        total_tokens
+    } else {
+        (total_tokens + n_instances - 1) / n_instances
+    };
+    moe_instance_latency(c, a_max, tokens_on_straggler.max(a_max))
+}
+
+/// Shared-expert execution on the attention side (§4): dense FFN over the
+/// local batch, overlapped with dispatch communication.
+pub fn shared_expert_latency(c: &LayerCoeffs, b: f64) -> f64 {
+    if c.shared_expert_per_token == 0.0 {
+        return 0.0;
+    }
+    (c.shared_expert_per_token * b).max(c.shared_expert_floor) + c.launch
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::h100;
+    use crate::config::models::deepseek_v2;
+    use crate::perfmodel::coeffs::LayerCoeffs;
+
+    fn c() -> LayerCoeffs {
+        LayerCoeffs::derive(&deepseek_v2(), &h100())
+    }
+
+    #[test]
+    fn linear_in_activated_experts() {
+        // Paper Fig 2-right: latency ≈ linear in activated experts at
+        // fixed batch 64.
+        let c = c();
+        let l8 = moe_instance_latency(&c, 8, 64);
+        let l16 = moe_instance_latency(&c, 16, 64);
+        let l32 = moe_instance_latency(&c, 32, 64);
+        let slope1 = l16 - l8;
+        let slope2 = l32 - l16;
+        assert!((slope2 / 2.0 - slope1 / 1.0).abs() / slope1 < 0.05);
+    }
+
+    #[test]
+    fn insensitive_to_token_volume_online() {
+        // Paper Fig 3: with all 32 experts active, batch 64 vs 512 barely
+        // moves latency (memory-bound regime).
+        let c = c();
+        let l64 = moe_instance_latency(&c, 32, 64);
+        let l512 = moe_instance_latency(&c, 32, 512);
+        assert!((l512 - l64) / l64 < 0.02, "{l64} vs {l512}");
+    }
+
+    #[test]
+    fn compute_bound_far_from_online_regime() {
+        // Only at thousands of tokens *per expert* does compute take over.
+        let c = c();
+        let mem_per_expert = c.beta;
+        let crossover_tokens = mem_per_expert / c.expert_compute_per_token;
+        assert!(
+            crossover_tokens > 100.0,
+            "crossover at {crossover_tokens} tokens/expert"
+        );
+        let l_huge = moe_instance_latency(&c, 32, 32 * 20_000);
+        let l_small = moe_instance_latency(&c, 32, 64);
+        assert!(l_huge > 2.0 * l_small);
+    }
+
+    #[test]
+    fn empty_instance_costs_only_launch() {
+        let c = c();
+        assert_eq!(moe_instance_latency(&c, 0, 0), c.launch);
+    }
+
+    #[test]
+    fn shared_expert_overlappable_scale() {
+        // DS-V2's 2 shared experts at b=64 should be well under the MoE
+        // layer time (so overlapping with comm is plausible).
+        let c = c();
+        let sh = shared_expert_latency(&c, 64.0);
+        let moe = moe_instance_latency(&c, 20, 64);
+        assert!(sh < moe, "shared {sh} vs moe {moe}");
+    }
+}

@@ -1,0 +1,229 @@
+//! Activation-aware replica placement (Appendix B, Algorithm 3).
+//!
+//! Places replicas in descending load order; each replica goes to the
+//! feasible instance (free slot, not already hosting that expert) with the
+//! smallest incremental co-activation load. When no instance is feasible,
+//! a bounded swap relocates one existing replica to make room, choosing
+//! the swap with minimal co-activation penalty.
+
+use crate::routing::coactivation::CoactivationStats;
+
+use super::layout::ExpertPlacement;
+
+/// One replica awaiting placement.
+#[derive(Clone, Copy, Debug)]
+struct PendingReplica {
+    expert: u16,
+    /// Per-replica load l_i = c(e)/R(e); drives the descending sort.
+    load: f64,
+}
+
+/// Build a placement from replica counts + co-activation stats.
+///
+/// * `replica_counts` — R(e) from `allocate_replicas`.
+/// * `counts` — activation counts c(e) (same window).
+/// * `coact` — co-activation statistics a(e,e').
+pub fn place_replicas(
+    replica_counts: &[usize],
+    counts: &[u64],
+    coact: &CoactivationStats,
+    n_instances: usize,
+    capacity: usize,
+) -> ExpertPlacement {
+    let experts = replica_counts.len();
+    let mut placement = ExpertPlacement::empty(experts, n_instances, capacity);
+
+    // Expand into individual replicas with per-replica loads (line 3).
+    let mut pending: Vec<PendingReplica> = Vec::new();
+    for e in 0..experts {
+        let r = replica_counts[e];
+        assert!(r >= 1 && r <= n_instances, "R({e}) = {r}");
+        let load = counts[e] as f64 / r as f64;
+        for _ in 0..r {
+            pending.push(PendingReplica {
+                expert: e as u16,
+                load,
+            });
+        }
+    }
+    // Descending load, ties by expert id for determinism.
+    pending.sort_by(|a, b| {
+        b.load
+            .partial_cmp(&a.load)
+            .unwrap()
+            .then(a.expert.cmp(&b.expert))
+    });
+
+    // Cache of seated experts per instance, mirrored alongside `placement`
+    // to avoid re-collecting on every candidate evaluation.
+    let mut seated: Vec<Vec<usize>> = vec![Vec::new(); n_instances];
+
+    for rep in &pending {
+        let e = rep.expert;
+        // Feasible set G_i (line 5).
+        let feasible: Vec<u32> = (0..n_instances as u32)
+            .filter(|&g| {
+                placement.free_slots(g) > 0 && !placement.hosts(e).contains(&g)
+            })
+            .collect();
+        if !feasible.is_empty() {
+            // Greedy: min incremental co-activation load (lines 6-10).
+            let g_star = *feasible
+                .iter()
+                .min_by(|&&a, &&b| {
+                    let la = coact.incremental_load(e as usize, &seated[a as usize]);
+                    let lb = coact.incremental_load(e as usize, &seated[b as usize]);
+                    la.partial_cmp(&lb).unwrap().then(a.cmp(&b))
+                })
+                .unwrap();
+            placement.seat(e, g_star).expect("feasible seat");
+            seated[g_star as usize].push(e as usize);
+        } else {
+            // Swap path (lines 11-18): move some replica j from an
+            // instance g (which doesn't host e) to an instance h with a
+            // free slot, then seat e on g. Choose (g, j, h) minimizing the
+            // co-activation delta.
+            let mut best: Option<(f64, u32, u16, u32)> = None;
+            for g in 0..n_instances as u32 {
+                if placement.hosts(e).contains(&g) {
+                    continue;
+                }
+                for &j in &placement.seated(g) {
+                    if j == e {
+                        continue;
+                    }
+                    for h in 0..n_instances as u32 {
+                        if h == g
+                            || placement.free_slots(h) == 0
+                            || placement.hosts(j).contains(&h)
+                        {
+                            continue;
+                        }
+                        // ΔI = [load(e on g\{j}) − load(j with g\{j})]
+                        //      + load(j on h)
+                        let g_wo_j: Vec<usize> = seated[g as usize]
+                            .iter()
+                            .copied()
+                            .filter(|&x| x != j as usize)
+                            .collect();
+                        let delta = coact.incremental_load(e as usize, &g_wo_j)
+                            - coact.incremental_load(j as usize, &g_wo_j)
+                            + coact.incremental_load(j as usize, &seated[h as usize]);
+                        let better = match best {
+                            None => true,
+                            Some((bd, ..)) => delta < bd,
+                        };
+                        if better {
+                            best = Some((delta, g, j, h));
+                        }
+                    }
+                }
+            }
+            let (_, g, j, h) = best.unwrap_or_else(|| {
+                panic!("no feasible swap for expert {e}; layout over-constrained")
+            });
+            placement.unseat(j, g).expect("swap unseat");
+            placement.seat(j, h).expect("swap reseat");
+            placement.seat(e, g).expect("swap seat");
+            seated[g as usize].retain(|&x| x != j as usize);
+            seated[h as usize].push(j as usize);
+            seated[g as usize].push(e as usize);
+        }
+    }
+    placement
+}
+
+/// The min-max objective value of Eq. (7): max_g I(g).
+pub fn max_coactivation_load(placement: &ExpertPlacement, coact: &CoactivationStats) -> f64 {
+    (0..placement.n_instances as u32)
+        .map(|g| {
+            let set: Vec<usize> = placement.seated(g).iter().map(|&e| e as usize).collect();
+            coact.set_load(&set)
+        })
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::replicas::allocate_replicas;
+    use crate::routing::gate::{ExpertPopularity, GateSim};
+    use crate::routing::trace::ActivationTrace;
+    use crate::util::rng::Rng;
+
+    fn make_stats(
+        experts: usize,
+        top_k: usize,
+        skew: f64,
+        seed: u64,
+    ) -> (Vec<u64>, CoactivationStats) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let pop = if skew == 0.0 {
+            ExpertPopularity::Uniform
+        } else {
+            ExpertPopularity::Zipf { s: skew }
+        };
+        let g = GateSim::new(experts, top_k, &pop, &mut rng);
+        let mut trace = ActivationTrace::new(experts, top_k, 8192);
+        for _ in 0..64 {
+            trace.record_batch(&g.sample_batch(&mut rng, 128));
+        }
+        let coact = CoactivationStats::from_trace(&trace, 64);
+        (trace.expert_counts(), coact)
+    }
+
+    #[test]
+    fn placement_is_valid_and_complete() {
+        let (counts, coact) = make_stats(32, 4, 1.0, 7);
+        let r = allocate_replicas(&counts, 8, 6); // 48 slots for 32 experts
+        let p = place_replicas(&r, &counts, &coact, 8, 6);
+        p.validate().unwrap();
+        assert_eq!(p.total_replicas(), 48);
+        for e in 0..32 {
+            assert_eq!(p.replica_count(e as u16), r[e], "expert {e}");
+        }
+    }
+
+    #[test]
+    fn beats_round_robin_on_coactivation() {
+        let (counts, coact) = make_stats(64, 6, 1.2, 11);
+        let r = allocate_replicas(&counts, 8, 10);
+        let smart = place_replicas(&r, &counts, &coact, 8, 10);
+        let naive = ExpertPlacement::round_robin(64, 8, 10);
+        let smart_load = max_coactivation_load(&smart, &coact);
+        let naive_load = max_coactivation_load(&naive, &coact);
+        assert!(
+            smart_load <= naive_load * 1.02,
+            "smart {smart_load} vs naive {naive_load}"
+        );
+    }
+
+    #[test]
+    fn tight_layout_uses_swaps_if_needed() {
+        // Exactly one slot per expert: any ordering must still complete.
+        let (counts, coact) = make_stats(24, 3, 0.8, 13);
+        let r = allocate_replicas(&counts, 6, 4); // 24 slots = E exactly
+        let p = place_replicas(&r, &counts, &coact, 6, 4);
+        p.validate().unwrap();
+        assert_eq!(p.total_replicas(), 24);
+    }
+
+    #[test]
+    fn full_redundancy_layout() {
+        // Slots = 2E: every expert gets exactly 2 replicas under uniform load.
+        let (counts, coact) = make_stats(16, 2, 0.0, 17);
+        let r = allocate_replicas(&counts, 8, 4);
+        assert_eq!(r.iter().sum::<usize>(), 32);
+        let p = place_replicas(&r, &counts, &coact, 8, 4);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn deterministic_given_same_inputs() {
+        let (counts, coact) = make_stats(32, 4, 1.0, 23);
+        let r = allocate_replicas(&counts, 8, 6);
+        let p1 = place_replicas(&r, &counts, &coact, 8, 6);
+        let p2 = place_replicas(&r, &counts, &coact, 8, 6);
+        assert_eq!(p1, p2);
+    }
+}

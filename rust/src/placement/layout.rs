@@ -1,0 +1,268 @@
+//! Replica layout: the expert→instances mapping the AEBS scheduler reads.
+
+/// Where every replica of every logical expert lives.
+///
+/// Physical replica IDs are encoded as `instance * capacity + slot`, which
+/// is stable across scheduler runs — the property the synchronization-free
+/// AEBS design relies on (§3.4: all instances compute the same assignment
+/// from identical metadata).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ExpertPlacement {
+    /// Number of logical experts E.
+    pub experts: usize,
+    /// Number of MoE instances n_e.
+    pub n_instances: usize,
+    /// Expert slots per instance C.
+    pub capacity: usize,
+    /// G(e): sorted instance ids hosting a replica of each expert.
+    hosts: Vec<Vec<u32>>,
+    /// P(g): logical expert seated in each slot of each instance
+    /// (u16::MAX = empty slot).
+    slots: Vec<Vec<u16>>,
+}
+
+pub const EMPTY_SLOT: u16 = u16::MAX;
+
+impl ExpertPlacement {
+    /// Empty layout with no replicas seated.
+    pub fn empty(experts: usize, n_instances: usize, capacity: usize) -> Self {
+        assert!(experts <= EMPTY_SLOT as usize);
+        ExpertPlacement {
+            experts,
+            n_instances,
+            capacity,
+            hosts: vec![Vec::new(); experts],
+            slots: vec![vec![EMPTY_SLOT; capacity]; n_instances],
+        }
+    }
+
+    /// Static contiguous layout: expert e seated on instance
+    /// e / ceil(E / n_e), one replica each, no redundancy. The baseline
+    /// layout for monolithic/static-EP systems.
+    pub fn contiguous(experts: usize, n_instances: usize, capacity: usize) -> Self {
+        let per = experts.div_ceil(n_instances);
+        assert!(
+            per <= capacity,
+            "capacity {capacity} cannot seat {per} experts per instance"
+        );
+        let mut p = Self::empty(experts, n_instances, capacity);
+        for e in 0..experts {
+            let g = (e / per) as u32;
+            p.seat(e as u16, g).expect("contiguous seat");
+        }
+        p
+    }
+
+    /// Round-robin layout with redundancy: first one replica of every
+    /// expert, then keep cycling experts into leftover slots. A quick
+    /// redundant layout when co-activation stats are unavailable.
+    pub fn round_robin(experts: usize, n_instances: usize, capacity: usize) -> Self {
+        let mut p = Self::empty(experts, n_instances, capacity);
+        let total_slots = n_instances * capacity;
+        let mut g = 0u32;
+        let mut seated = 0usize;
+        let mut e = 0usize;
+        while seated < total_slots.min(
+            // Can't exceed E replicas per instance (an instance hosts an
+            // expert at most once), so the usable slot count is bounded.
+            n_instances * capacity,
+        ) {
+            let expert = (e % experts) as u16;
+            // Find the next instance with room that doesn't already host it.
+            let mut placed = false;
+            for off in 0..n_instances {
+                let cand = (g as usize + off) % n_instances;
+                if p.free_slots(cand as u32) > 0 && !p.hosts(expert).contains(&(cand as u32)) {
+                    p.seat(expert, cand as u32).unwrap();
+                    g = ((cand + 1) % n_instances) as u32;
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                break; // every remaining slot would duplicate an expert
+            }
+            seated += 1;
+            e += 1;
+        }
+        p
+    }
+
+    /// Seat a replica of `expert` on `instance`. Errors if full or already
+    /// hosting this expert.
+    pub fn seat(&mut self, expert: u16, instance: u32) -> Result<(), String> {
+        let g = instance as usize;
+        if g >= self.n_instances {
+            return Err(format!("instance {g} out of range"));
+        }
+        if self.hosts[expert as usize].contains(&instance) {
+            return Err(format!("instance {g} already hosts expert {expert}"));
+        }
+        let slot = self.slots[g]
+            .iter()
+            .position(|&s| s == EMPTY_SLOT)
+            .ok_or_else(|| format!("instance {g} is full"))?;
+        self.slots[g][slot] = expert;
+        let hosts = &mut self.hosts[expert as usize];
+        let at = hosts.partition_point(|&h| h < instance);
+        hosts.insert(at, instance);
+        Ok(())
+    }
+
+    /// Remove the replica of `expert` on `instance`.
+    pub fn unseat(&mut self, expert: u16, instance: u32) -> Result<(), String> {
+        let g = instance as usize;
+        let slot = self.slots[g]
+            .iter()
+            .position(|&s| s == expert)
+            .ok_or_else(|| format!("instance {g} does not host expert {expert}"))?;
+        self.slots[g][slot] = EMPTY_SLOT;
+        self.hosts[expert as usize].retain(|&h| h != instance);
+        Ok(())
+    }
+
+    /// G(e): instances hosting replicas of `expert` (sorted).
+    #[inline]
+    pub fn hosts(&self, expert: u16) -> &[u32] {
+        &self.hosts[expert as usize]
+    }
+
+    /// R(e): replica count of `expert`.
+    #[inline]
+    pub fn replica_count(&self, expert: u16) -> usize {
+        self.hosts[expert as usize].len()
+    }
+
+    /// Logical experts seated on `instance` (slot order; excludes empties).
+    pub fn seated(&self, instance: u32) -> Vec<u16> {
+        self.slots[instance as usize]
+            .iter()
+            .copied()
+            .filter(|&s| s != EMPTY_SLOT)
+            .collect()
+    }
+
+    pub fn free_slots(&self, instance: u32) -> usize {
+        self.slots[instance as usize]
+            .iter()
+            .filter(|&&s| s == EMPTY_SLOT)
+            .count()
+    }
+
+    /// P(e,g): stable physical replica id for expert `e` on instance `g`.
+    pub fn physical_id(&self, expert: u16, instance: u32) -> Option<u32> {
+        let g = instance as usize;
+        self.slots[g]
+            .iter()
+            .position(|&s| s == expert)
+            .map(|slot| instance * self.capacity as u32 + slot as u32)
+    }
+
+    /// Total seated replicas.
+    pub fn total_replicas(&self) -> usize {
+        self.hosts.iter().map(|h| h.len()).sum()
+    }
+
+    /// Validity invariants (used by tests / property checks):
+    /// every expert has ≥1 replica, no instance exceeds capacity or hosts
+    /// the same expert twice, and hosts↔slots agree.
+    pub fn validate(&self) -> Result<(), String> {
+        for e in 0..self.experts {
+            if self.hosts[e].is_empty() {
+                return Err(format!("expert {e} has no replica"));
+            }
+            for &g in &self.hosts[e] {
+                if self.physical_id(e as u16, g).is_none() {
+                    return Err(format!("hosts/slots disagree for expert {e} on {g}"));
+                }
+            }
+        }
+        for g in 0..self.n_instances {
+            let seated = self.seated(g as u32);
+            if seated.len() > self.capacity {
+                return Err(format!("instance {g} over capacity"));
+            }
+            let mut sorted = seated.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted.len() != seated.len() {
+                return Err(format!("instance {g} hosts a duplicate expert"));
+            }
+            for &e in &seated {
+                if !self.hosts[e as usize].contains(&(g as u32)) {
+                    return Err(format!("slots/hosts disagree for expert {e} on {g}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_seats_all() {
+        let p = ExpertPlacement::contiguous(160, 6, 27);
+        p.validate().unwrap();
+        assert_eq!(p.total_replicas(), 160);
+        for e in 0..160 {
+            assert_eq!(p.replica_count(e as u16), 1);
+        }
+    }
+
+    #[test]
+    fn round_robin_fills_redundancy() {
+        let p = ExpertPlacement::round_robin(8, 4, 4);
+        p.validate().unwrap();
+        // 16 slots, 8 experts → every expert gets exactly 2 replicas.
+        assert_eq!(p.total_replicas(), 16);
+        for e in 0..8 {
+            assert_eq!(p.replica_count(e as u16), 2, "expert {e}");
+        }
+    }
+
+    #[test]
+    fn seat_rejects_duplicates_and_overflow() {
+        let mut p = ExpertPlacement::empty(4, 1, 2);
+        p.seat(0, 0).unwrap();
+        assert!(p.seat(0, 0).is_err());
+        p.seat(1, 0).unwrap();
+        assert!(p.seat(2, 0).is_err()); // full
+    }
+
+    #[test]
+    fn physical_ids_stable_and_distinct() {
+        let p = ExpertPlacement::round_robin(6, 3, 3);
+        let mut ids = Vec::new();
+        for e in 0..6u16 {
+            for &g in p.hosts(e) {
+                ids.push(p.physical_id(e, g).unwrap());
+            }
+        }
+        let n = ids.len();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "physical ids must be unique");
+    }
+
+    #[test]
+    fn unseat_roundtrip() {
+        let mut p = ExpertPlacement::contiguous(8, 2, 5);
+        p.unseat(3, 0).unwrap();
+        assert_eq!(p.replica_count(3), 0);
+        assert!(p.validate().is_err()); // expert 3 now unseated
+        p.seat(3, 1).unwrap();
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn round_robin_bounded_by_distinctness() {
+        // 2 experts, 2 instances, capacity 3: each instance can host each
+        // expert at most once → at most 4 replicas despite 6 slots.
+        let p = ExpertPlacement::round_robin(2, 2, 3);
+        p.validate().unwrap();
+        assert_eq!(p.total_replicas(), 4);
+    }
+}

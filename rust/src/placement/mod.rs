@@ -1,0 +1,17 @@
+//! Expert-replica placement (§3.5 + Appendix B).
+//!
+//! - `ExpertPlacement` is the replica layout the scheduler consults:
+//!   which instances host which logical experts (G(e)), with stable
+//!   physical replica IDs (P(e,g)).
+//! - `replicas` computes per-expert replica counts from activation load
+//!   (Appendix B "Replica count").
+//! - `algorithm3` places replicas minimizing co-activation pressure
+//!   (Appendix B Algorithm 3: greedy + bounded swap).
+
+pub mod algorithm3;
+pub mod layout;
+pub mod replicas;
+
+pub use algorithm3::place_replicas;
+pub use layout::ExpertPlacement;
+pub use replicas::allocate_replicas;

@@ -1,0 +1,105 @@
+//! Replica-count allocation (Appendix B, "Replica count").
+//!
+//! Given S = n_e·C total slots and E logical experts, the first E slots
+//! seat one replica of every expert; the remaining S−E slots are granted
+//! iteratively to the expert with the highest per-replica load
+//! l(e) = c(e)/R(e), equalizing per-replica activation pressure.
+
+/// Compute R(e) for every expert.
+///
+/// * `counts` — activation counts c(e) over a sliding window.
+/// * `n_instances`, `capacity` — MoE-side shape (S = n_e·C).
+///
+/// Returns per-expert replica counts, each in [1, n_instances]
+/// (an instance hosts an expert at most once, so R(e) ≤ n_e).
+pub fn allocate_replicas(counts: &[u64], n_instances: usize, capacity: usize) -> Vec<usize> {
+    let experts = counts.len();
+    let slots = n_instances * capacity;
+    assert!(
+        slots >= experts,
+        "need at least one slot per expert: {slots} < {experts}"
+    );
+    let mut r = vec![1usize; experts];
+    let mut extra = slots - experts;
+
+    // Max-heap over per-replica load; a simple Vec-scan is O(E) per grant,
+    // fine for E ≤ 256 and a few hundred grants, and keeps determinism
+    // trivially (ties break to the lowest expert id).
+    while extra > 0 {
+        let mut best: Option<(f64, usize)> = None;
+        for e in 0..experts {
+            if r[e] >= n_instances {
+                continue; // can't exceed one replica per instance
+            }
+            let load = counts[e] as f64 / r[e] as f64;
+            let better = match best {
+                None => true,
+                Some((bl, _)) => load > bl,
+            };
+            if better {
+                best = Some((load, e));
+            }
+        }
+        match best {
+            Some((_, e)) => {
+                r[e] += 1;
+                extra -= 1;
+            }
+            None => break, // every expert is fully replicated
+        }
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_expert_gets_one() {
+        let r = allocate_replicas(&[0, 0, 0, 0], 2, 2);
+        assert_eq!(r, vec![1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn hot_expert_gets_extras() {
+        // 4 experts, 8 slots → 4 extra replicas; expert 0 is 10× hotter.
+        let r = allocate_replicas(&[1000, 100, 100, 100], 4, 2);
+        assert_eq!(r.iter().sum::<usize>(), 8);
+        assert!(r[0] > r[1], "{r:?}");
+        assert_eq!(r[0], 4, "hot expert saturates at n_instances: {r:?}");
+    }
+
+    #[test]
+    fn equalizes_per_replica_load() {
+        // counts 90/30/30/30, 6 slots → 2 extra.
+        // grant1: e0 (90) → R=[2,1,1,1]; loads 45/30/30/30
+        // grant2: e0 (45) → R=[3,1,1,1]
+        let r = allocate_replicas(&[90, 30, 30, 30], 3, 2);
+        assert_eq!(r, vec![3, 1, 1, 1]);
+    }
+
+    #[test]
+    fn replica_cap_is_n_instances() {
+        let r = allocate_replicas(&[1_000_000, 1], 2, 4);
+        assert!(r[0] <= 2 && r[1] <= 2, "{r:?}");
+    }
+
+    #[test]
+    fn cold_experts_stay_singleton() {
+        let mut counts = vec![1u64; 16];
+        counts[0] = 100_000;
+        counts[1] = 90_000;
+        let r = allocate_replicas(&counts, 4, 5); // 20 slots, 4 extra
+        for e in 2..16 {
+            assert_eq!(r[e], 1, "cold expert {e} should stay singleton");
+        }
+        assert_eq!(r[0] + r[1], 2 + 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_few_slots_panics() {
+        allocate_replicas(&[1, 1, 1], 1, 2);
+    }
+}

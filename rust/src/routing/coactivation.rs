@@ -1,0 +1,164 @@
+//! Co-activation statistics (Appendix B).
+//!
+//! `a(e, e')` estimates how often logical experts e and e' are activated in
+//! the *same decode batch*: colocating such pairs raises the distinct
+//! activated-expert count of that instance and hence MoE latency. Because
+//! batch composition depends on batch size, we accumulate over windows of a
+//! configurable size (defaulting to a typical online batch) rather than
+//! over single tokens.
+
+use super::trace::{ActivationTrace, RoutingBatch};
+
+/// Symmetric co-activation frequency matrix plus per-expert counts.
+#[derive(Clone, Debug)]
+pub struct CoactivationStats {
+    experts: usize,
+    /// Upper-triangular (e < e') co-activation counts, flattened.
+    pairs: Vec<f64>,
+    /// Per-expert activation counts over the same windows.
+    pub counts: Vec<f64>,
+    /// Number of windows accumulated.
+    pub windows: u64,
+}
+
+impl CoactivationStats {
+    pub fn new(experts: usize) -> Self {
+        CoactivationStats {
+            experts,
+            pairs: vec![0.0; experts * (experts - 1) / 2],
+            counts: vec![0.0; experts],
+            windows: 0,
+        }
+    }
+
+    #[inline]
+    fn pair_index(&self, e: usize, f: usize) -> usize {
+        debug_assert!(e < f && f < self.experts);
+        // Index into the upper triangle, row-major.
+        e * self.experts - e * (e + 1) / 2 + (f - e - 1)
+    }
+
+    /// Co-activation frequency of two experts (symmetric; 0 on diagonal).
+    pub fn coact(&self, e: usize, f: usize) -> f64 {
+        if e == f {
+            return 0.0;
+        }
+        let (lo, hi) = if e < f { (e, f) } else { (f, e) };
+        self.pairs[self.pair_index(lo, hi)]
+    }
+
+    /// Accumulate one batch-window: every pair of distinct experts
+    /// activated in the window co-activates once.
+    pub fn record_window(&mut self, batch: &RoutingBatch) {
+        let (seen, _) = batch.activated_set();
+        let active: Vec<usize> = seen
+            .iter()
+            .enumerate()
+            .filter_map(|(e, &s)| if s { Some(e) } else { None })
+            .collect();
+        for (i, &e) in active.iter().enumerate() {
+            self.counts[e] += 1.0;
+            for &f in &active[i + 1..] {
+                let idx = self.pair_index(e, f);
+                self.pairs[idx] += 1.0;
+            }
+        }
+        self.windows += 1;
+    }
+
+    /// Build from a trace, slicing it into consecutive windows of
+    /// `window_tokens` tokens.
+    pub fn from_trace(trace: &ActivationTrace, window_tokens: usize) -> Self {
+        assert!(window_tokens > 0);
+        let mut stats = CoactivationStats::new(trace.experts);
+        let n = trace.len_tokens();
+        let mut start = 0;
+        while start + window_tokens <= n {
+            let mut batch =
+                RoutingBatch::zeroed(window_tokens, trace.top_k(), trace.experts);
+            for t in 0..window_tokens {
+                batch.token_mut(t).copy_from_slice(trace.token(start + t));
+            }
+            stats.record_window(&batch);
+            start += window_tokens;
+        }
+        stats
+    }
+
+    /// Co-activation load a placement set imposes: Σ_{e<e' ∈ set} a(e,e')
+    /// — Eq. (6) of Appendix B.
+    pub fn set_load(&self, set: &[usize]) -> f64 {
+        let mut total = 0.0;
+        for (i, &e) in set.iter().enumerate() {
+            for &f in &set[i + 1..] {
+                total += self.coact(e, f);
+            }
+        }
+        total
+    }
+
+    /// Incremental load of adding `e` to `set`: Σ_{f ∈ set} a(e,f)
+    /// (the arg-min quantity in Algorithm 3 line 7).
+    pub fn incremental_load(&self, e: usize, set: &[usize]) -> f64 {
+        set.iter().map(|&f| self.coact(e, f)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::gate::{ExpertPopularity, GateSim};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pair_index_bijective() {
+        let s = CoactivationStats::new(10);
+        let mut seen = std::collections::HashSet::new();
+        for e in 0..10 {
+            for f in (e + 1)..10 {
+                assert!(seen.insert(s.pair_index(e, f)));
+            }
+        }
+        assert_eq!(seen.len(), 45);
+        assert_eq!(*seen.iter().max().unwrap(), 44);
+    }
+
+    #[test]
+    fn record_window_counts_pairs() {
+        let mut s = CoactivationStats::new(6);
+        let b = RoutingBatch::from_rows(&[vec![0, 1], vec![2, 1]], 6);
+        s.record_window(&b);
+        assert_eq!(s.coact(0, 1), 1.0);
+        assert_eq!(s.coact(1, 2), 1.0);
+        assert_eq!(s.coact(0, 2), 1.0); // both active in the window
+        assert_eq!(s.coact(0, 3), 0.0);
+        assert_eq!(s.coact(1, 0), s.coact(0, 1)); // symmetric
+    }
+
+    #[test]
+    fn set_load_and_incremental_agree() {
+        let mut rng = Rng::seed_from_u64(20);
+        let g = GateSim::new(12, 3, &ExpertPopularity::Zipf { s: 0.8 }, &mut rng);
+        let mut s = CoactivationStats::new(12);
+        for _ in 0..50 {
+            s.record_window(&g.sample_batch(&mut rng, 16));
+        }
+        let set = vec![1, 4, 7];
+        let with = {
+            let mut v = set.clone();
+            v.push(9);
+            s.set_load(&v)
+        };
+        assert!((with - s.set_load(&set) - s.incremental_load(9, &set)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_trace_window_slicing() {
+        let mut tr = ActivationTrace::new(4, 1, 100);
+        for i in 0..10u16 {
+            tr.record_token(&[i % 4]);
+        }
+        let s = CoactivationStats::from_trace(&tr, 4);
+        assert_eq!(s.windows, 2); // 10 tokens → two full windows of 4
+    }
+}

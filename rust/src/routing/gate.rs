@@ -1,0 +1,179 @@
+//! Top-k gate simulation under configurable expert popularity.
+
+use crate::util::rng::{Rng, Zipf};
+
+use super::trace::RoutingBatch;
+
+/// Expert popularity model.
+#[derive(Clone, Debug)]
+pub enum ExpertPopularity {
+    /// Every expert equally likely (the paper's "uniform" pattern, Fig 3).
+    Uniform,
+    /// Zipf-skewed popularity with exponent `s` over a random permutation
+    /// of expert ranks (the paper's "skewed" pattern). The permutation
+    /// decorrelates popularity from expert index so that contiguous
+    /// placements don't accidentally align with hotness.
+    Zipf { s: f64 },
+}
+
+impl ExpertPopularity {
+    pub fn name(&self) -> String {
+        match self {
+            ExpertPopularity::Uniform => "uniform".to_string(),
+            ExpertPopularity::Zipf { s } => format!("zipf(s={s})"),
+        }
+    }
+}
+
+/// Simulated gate: draws per-token top-k routing decisions.
+#[derive(Clone, Debug)]
+pub struct GateSim {
+    /// Number of logical experts E.
+    pub experts: usize,
+    /// Experts activated per token.
+    pub top_k: usize,
+    /// Per-expert activation probability weight (sums to 1 over experts).
+    probs: Vec<f64>,
+    /// Zipf sampler (rank space) when skewed; None when uniform.
+    zipf: Option<Zipf>,
+    /// rank -> expert id permutation for the skewed case.
+    perm: Vec<u16>,
+}
+
+impl GateSim {
+    pub fn new(experts: usize, top_k: usize, pop: &ExpertPopularity, rng: &mut Rng) -> Self {
+        assert!(top_k <= experts, "top_k {top_k} > experts {experts}");
+        assert!(experts <= u16::MAX as usize);
+        let mut perm: Vec<u16> = (0..experts as u16).collect();
+        let (probs, zipf) = match pop {
+            ExpertPopularity::Uniform => {
+                (vec![1.0 / experts as f64; experts], None)
+            }
+            ExpertPopularity::Zipf { s } => {
+                rng.shuffle(&mut perm);
+                let z = Zipf::new(experts, *s);
+                let mut p = vec![0.0; experts];
+                for rank in 0..experts {
+                    p[perm[rank] as usize] = z.pmf(rank);
+                }
+                (p, Some(z))
+            }
+        };
+        GateSim {
+            experts,
+            top_k,
+            probs,
+            zipf,
+            perm,
+        }
+    }
+
+    /// Per-expert marginal selection weight (proportional; used by the
+    /// analytic bound where p_e is the per-token activation probability,
+    /// normalized so Σp_e = K).
+    pub fn activation_probs(&self) -> Vec<f64> {
+        self.probs.iter().map(|p| p * self.top_k as f64).collect()
+    }
+
+    /// Draw one token's top-k distinct experts into `out` (len == top_k).
+    pub fn sample_token(&self, rng: &mut Rng, out: &mut [u16]) {
+        debug_assert_eq!(out.len(), self.top_k);
+        let mut picked = 0usize;
+        while picked < self.top_k {
+            let e = match &self.zipf {
+                None => rng.usize_below(self.experts) as u16,
+                Some(z) => self.perm[z.sample(rng)],
+            };
+            if !out[..picked].contains(&e) {
+                out[picked] = e;
+                picked += 1;
+            }
+        }
+    }
+
+    /// Draw a full batch of `tokens` routing decisions.
+    pub fn sample_batch(&self, rng: &mut Rng, tokens: usize) -> RoutingBatch {
+        let mut batch = RoutingBatch::zeroed(tokens, self.top_k, self.experts);
+        for t in 0..tokens {
+            let row = batch.token_mut(t);
+            self.sample_token(rng, row);
+        }
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_have_distinct_experts() {
+        let mut rng = Rng::seed_from_u64(1);
+        let g = GateSim::new(32, 6, &ExpertPopularity::Uniform, &mut rng);
+        for _ in 0..200 {
+            let b = g.sample_batch(&mut rng, 4);
+            for t in 0..4 {
+                let row = b.token(t);
+                let mut s = row.to_vec();
+                s.sort_unstable();
+                s.dedup();
+                assert_eq!(s.len(), 6, "duplicate expert in top-k");
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_marginals_are_flat() {
+        let mut rng = Rng::seed_from_u64(2);
+        let g = GateSim::new(16, 2, &ExpertPopularity::Uniform, &mut rng);
+        let b = g.sample_batch(&mut rng, 40_000);
+        let mut counts = vec![0usize; 16];
+        for t in 0..b.tokens() {
+            for &e in b.token(t) {
+                counts[e as usize] += 1;
+            }
+        }
+        let expected = 40_000.0 * 2.0 / 16.0;
+        for c in counts {
+            assert!((c as f64 - expected).abs() / expected < 0.08, "{c}");
+        }
+    }
+
+    #[test]
+    fn zipf_marginals_are_skewed() {
+        let mut rng = Rng::seed_from_u64(3);
+        let g = GateSim::new(64, 4, &ExpertPopularity::Zipf { s: 1.2 }, &mut rng);
+        let b = g.sample_batch(&mut rng, 20_000);
+        let mut counts = vec![0usize; 64];
+        for t in 0..b.tokens() {
+            for &e in b.token(t) {
+                counts[e as usize] += 1;
+            }
+        }
+        let max = *counts.iter().max().unwrap() as f64;
+        let min = *counts.iter().min().unwrap() as f64;
+        assert!(max > 10.0 * (min + 1.0), "max {max} min {min}");
+    }
+
+    #[test]
+    fn activation_probs_sum_to_k() {
+        let mut rng = Rng::seed_from_u64(4);
+        for pop in [ExpertPopularity::Uniform, ExpertPopularity::Zipf { s: 1.0 }] {
+            let g = GateSim::new(32, 6, &pop, &mut rng);
+            let sum: f64 = g.activation_probs().iter().sum();
+            assert!((sum - 6.0).abs() < 1e-9, "{}: {sum}", pop.name());
+        }
+    }
+
+    #[test]
+    fn top_k_equals_experts_works() {
+        let mut rng = Rng::seed_from_u64(5);
+        let g = GateSim::new(4, 4, &ExpertPopularity::Uniform, &mut rng);
+        let b = g.sample_batch(&mut rng, 10);
+        for t in 0..10 {
+            let mut row = b.token(t).to_vec();
+            row.sort_unstable();
+            assert_eq!(row, vec![0, 1, 2, 3]);
+        }
+    }
+}

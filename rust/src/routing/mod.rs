@@ -1,0 +1,16 @@
+//! Routing substrate: top-k gating simulation, activation traces, and
+//! co-activation statistics.
+//!
+//! The real gating network's outputs are model- and input-dependent; for
+//! the simulator we model expert *popularity* (uniform or Zipf-skewed, as
+//! in §2.2's Fig 3) and draw each token's top-k as k distinct experts
+//! weighted by popularity. The end-to-end example replaces this with the
+//! actual TinyMoE gate executed through PJRT.
+
+pub mod coactivation;
+pub mod gate;
+pub mod trace;
+
+pub use coactivation::CoactivationStats;
+pub use gate::{ExpertPopularity, GateSim};
+pub use trace::{ActivationTrace, RoutingBatch};

@@ -1,0 +1,264 @@
+//! Routing batches and activation traces.
+//!
+//! A `RoutingBatch` is the per-layer gate output: T tokens × k logical
+//! expert IDs, stored flat for cache-friendly scanning (this is the input
+//! the AEBS kernel processes in a few microseconds). An `ActivationTrace`
+//! is a sliding pool of recent token routings, feeding the Monte-Carlo
+//! â_max estimator (§3.5) and co-activation statistics (Appendix B).
+
+use crate::util::rng::Rng;
+
+/// T×k logical expert IDs, flat row-major.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RoutingBatch {
+    ids: Vec<u16>,
+    top_k: usize,
+    /// Number of logical experts (IDs are < experts).
+    pub experts: usize,
+}
+
+impl RoutingBatch {
+    pub fn zeroed(tokens: usize, top_k: usize, experts: usize) -> Self {
+        RoutingBatch {
+            ids: vec![0; tokens * top_k],
+            top_k,
+            experts,
+        }
+    }
+
+    /// Build from explicit rows (mostly for tests).
+    pub fn from_rows(rows: &[Vec<u16>], experts: usize) -> Self {
+        assert!(!rows.is_empty());
+        let top_k = rows[0].len();
+        let mut ids = Vec::with_capacity(rows.len() * top_k);
+        for r in rows {
+            assert_eq!(r.len(), top_k);
+            for &e in r {
+                assert!((e as usize) < experts);
+                ids.push(e);
+            }
+        }
+        RoutingBatch {
+            ids,
+            top_k,
+            experts,
+        }
+    }
+
+    #[inline]
+    pub fn tokens(&self) -> usize {
+        if self.top_k == 0 {
+            0
+        } else {
+            self.ids.len() / self.top_k
+        }
+    }
+
+    #[inline]
+    pub fn top_k(&self) -> usize {
+        self.top_k
+    }
+
+    #[inline]
+    pub fn token(&self, t: usize) -> &[u16] {
+        &self.ids[t * self.top_k..(t + 1) * self.top_k]
+    }
+
+    #[inline]
+    pub fn token_mut(&mut self, t: usize) -> &mut [u16] {
+        &mut self.ids[t * self.top_k..(t + 1) * self.top_k]
+    }
+
+    #[inline]
+    pub fn flat(&self) -> &[u16] {
+        &self.ids
+    }
+
+    /// The set of distinct activated experts (Step 1 of Fig 7), as a bitmap
+    /// plus the count. This is the E-length one-hot union the AEBS kernel
+    /// computes on GPU; here it's a single pass over T×k IDs.
+    pub fn activated_set(&self) -> (Vec<bool>, usize) {
+        let mut seen = vec![false; self.experts];
+        let mut count = 0usize;
+        for &e in &self.ids {
+            let e = e as usize;
+            if !seen[e] {
+                seen[e] = true;
+                count += 1;
+            }
+        }
+        (seen, count)
+    }
+
+    /// Per-expert token counts (used by EPLB-style token balancing).
+    pub fn expert_token_counts(&self) -> Vec<u32> {
+        let mut counts = vec![0u32; self.experts];
+        for &e in &self.ids {
+            counts[e as usize] += 1;
+        }
+        counts
+    }
+}
+
+/// A bounded pool of recent token routings (one entry = one token's top-k).
+#[derive(Clone, Debug)]
+pub struct ActivationTrace {
+    ids: Vec<u16>,
+    top_k: usize,
+    pub experts: usize,
+    capacity_tokens: usize,
+    /// Write cursor for ring-buffer overwrite once full.
+    cursor: usize,
+    full: bool,
+}
+
+impl ActivationTrace {
+    pub fn new(experts: usize, top_k: usize, capacity_tokens: usize) -> Self {
+        assert!(capacity_tokens > 0);
+        ActivationTrace {
+            ids: Vec::with_capacity(capacity_tokens * top_k),
+            top_k,
+            experts,
+            capacity_tokens,
+            cursor: 0,
+            full: false,
+        }
+    }
+
+    pub fn len_tokens(&self) -> usize {
+        if self.full {
+            self.capacity_tokens
+        } else {
+            self.ids.len() / self.top_k
+        }
+    }
+
+    pub fn top_k(&self) -> usize {
+        self.top_k
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Record every token of a batch.
+    pub fn record_batch(&mut self, batch: &RoutingBatch) {
+        assert_eq!(batch.top_k(), self.top_k);
+        for t in 0..batch.tokens() {
+            self.record_token(batch.token(t));
+        }
+    }
+
+    pub fn record_token(&mut self, row: &[u16]) {
+        debug_assert_eq!(row.len(), self.top_k);
+        if !self.full && self.ids.len() < self.capacity_tokens * self.top_k {
+            self.ids.extend_from_slice(row);
+            if self.ids.len() == self.capacity_tokens * self.top_k {
+                self.full = true;
+                self.cursor = 0;
+            }
+        } else {
+            let at = self.cursor * self.top_k;
+            self.ids[at..at + self.top_k].copy_from_slice(row);
+            self.cursor = (self.cursor + 1) % self.capacity_tokens;
+        }
+    }
+
+    pub fn token(&self, t: usize) -> &[u16] {
+        &self.ids[t * self.top_k..(t + 1) * self.top_k]
+    }
+
+    /// Sample a batch of `tokens` token-routings uniformly from the pool
+    /// (with replacement) — the Monte-Carlo estimator's resampling step.
+    pub fn sample_batch(&self, rng: &mut Rng, tokens: usize) -> RoutingBatch {
+        assert!(!self.is_empty(), "sampling from an empty trace");
+        let n = self.len_tokens();
+        let mut batch = RoutingBatch::zeroed(tokens, self.top_k, self.experts);
+        for t in 0..tokens {
+            let src = rng.usize_below(n);
+            batch.token_mut(t).copy_from_slice(self.token(src));
+        }
+        batch
+    }
+
+    /// Per-expert activation counts over the whole pool (replica allocation
+    /// input, Appendix B).
+    pub fn expert_counts(&self) -> Vec<u64> {
+        let mut counts = vec![0u64; self.experts];
+        for &e in &self.ids {
+            counts[e as usize] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::gate::{ExpertPopularity, GateSim};
+
+    #[test]
+    fn activated_set_counts_distinct() {
+        let b = RoutingBatch::from_rows(
+            &[vec![0, 1], vec![1, 2], vec![0, 2]],
+            8,
+        );
+        let (seen, count) = b.activated_set();
+        assert_eq!(count, 3);
+        assert_eq!(seen[..4], [true, true, true, false]);
+    }
+
+    #[test]
+    fn token_counts() {
+        let b = RoutingBatch::from_rows(&[vec![0, 1], vec![1, 2]], 4);
+        assert_eq!(b.expert_token_counts(), vec![1, 2, 1, 0]);
+    }
+
+    #[test]
+    fn trace_ring_overwrites_oldest() {
+        let mut tr = ActivationTrace::new(8, 2, 3);
+        for i in 0..5u16 {
+            tr.record_token(&[i, i]);
+        }
+        assert_eq!(tr.len_tokens(), 3);
+        // tokens 3,4 overwrote slots 0,1; slot 2 still holds token 2.
+        let counts = tr.expert_counts();
+        assert_eq!(counts[2], 2);
+        assert_eq!(counts[0], 0);
+        assert_eq!(counts[3], 2);
+        assert_eq!(counts[4], 2);
+    }
+
+    #[test]
+    fn sample_preserves_marginals_roughly() {
+        let mut rng = Rng::seed_from_u64(10);
+        let g = GateSim::new(16, 2, &ExpertPopularity::Zipf { s: 1.0 }, &mut rng);
+        let mut tr = ActivationTrace::new(16, 2, 10_000);
+        tr.record_batch(&g.sample_batch(&mut rng, 10_000));
+        let pool_counts = tr.expert_counts();
+        let sampled = tr.sample_batch(&mut rng, 10_000);
+        let s_counts = sampled.expert_token_counts();
+        // Hottest expert in the pool should be hottest in the resample.
+        let hot_pool = pool_counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, c)| **c)
+            .unwrap()
+            .0;
+        let hot_sample = s_counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, c)| **c)
+            .unwrap()
+            .0;
+        assert_eq!(hot_pool, hot_sample);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sampling_empty_trace_panics() {
+        let tr = ActivationTrace::new(8, 2, 4);
+        let mut rng = Rng::seed_from_u64(1);
+        tr.sample_batch(&mut rng, 1);
+    }
+}

@@ -1,0 +1,267 @@
+//! Artifact bundle parsing: weights.bin (JWB1 container), meta.json, and
+//! HLO text discovery.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One exported tensor.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    /// f32 data (i32 tensors are stored converted; TinyMoE only exports
+    /// f32 weights, ids are runtime inputs).
+    pub data: Vec<f32>,
+    pub is_i32: bool,
+    pub i32_data: Vec<i32>,
+}
+
+impl Tensor {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// All exported weights, by name.
+#[derive(Debug, Default)]
+pub struct WeightStore {
+    tensors: HashMap<String, Tensor>,
+}
+
+impl WeightStore {
+    /// Parse the JWB1 container (see aot.py for the format).
+    pub fn load(path: &Path) -> Result<Self> {
+        let data = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if data.len() < 8 || &data[..4] != b"JWB1" {
+            bail!("{}: bad magic", path.display());
+        }
+        let count = u32::from_le_bytes(data[4..8].try_into()?) as usize;
+        let mut off = 8usize;
+        let mut tensors = HashMap::with_capacity(count);
+        for _ in 0..count {
+            let nlen =
+                u16::from_le_bytes(data[off..off + 2].try_into()?) as usize;
+            off += 2;
+            let name = std::str::from_utf8(&data[off..off + nlen])?.to_string();
+            off += nlen;
+            let dtype = data[off];
+            let ndim = data[off + 1] as usize;
+            off += 2;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(
+                    u32::from_le_bytes(data[off..off + 4].try_into()?) as usize,
+                );
+                off += 4;
+            }
+            let n: usize = dims.iter().product();
+            let bytes = &data[off..off + n * 4];
+            off += n * 4;
+            let mut t = Tensor {
+                name: name.clone(),
+                dims,
+                data: Vec::new(),
+                is_i32: dtype == 1,
+                i32_data: Vec::new(),
+            };
+            if dtype == 0 {
+                t.data = bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+            } else {
+                t.i32_data = bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+            }
+            tensors.insert(name, t);
+        }
+        if off != data.len() {
+            bail!("{}: trailing bytes", path.display());
+        }
+        Ok(WeightStore { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("weight '{name}' not found"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.tensors.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// TinyMoE metadata (mirrors aot.py's meta.json).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TinyMoeMeta {
+    pub layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub experts: usize,
+    pub top_k: usize,
+    pub d_expert: usize,
+    pub vocab: usize,
+    pub max_ctx: usize,
+    pub batch_tokens: usize,
+    pub max_moe_instances: usize,
+}
+
+impl TinyMoeMeta {
+    /// Minimal parser for aot.py's flat meta.json (integer fields only).
+    pub fn parse(json: &str) -> Result<Self> {
+        let field = |key: &str| -> Result<usize> {
+            let pat = format!("\"{key}\":");
+            let at = json
+                .find(&pat)
+                .ok_or_else(|| anyhow!("meta.json missing '{key}'"))?;
+            let rest = &json[at + pat.len()..];
+            let digits: String = rest
+                .chars()
+                .skip_while(|c| c.is_whitespace())
+                .take_while(|c| c.is_ascii_digit())
+                .collect();
+            digits
+                .parse()
+                .map_err(|_| anyhow!("meta.json: bad value for '{key}'"))
+        };
+        Ok(TinyMoeMeta {
+            layers: field("layers")?,
+            d_model: field("d_model")?,
+            n_heads: field("n_heads")?,
+            n_kv_heads: field("n_kv_heads")?,
+            head_dim: field("head_dim")?,
+            experts: field("experts")?,
+            top_k: field("top_k")?,
+            d_expert: field("d_expert")?,
+            vocab: field("vocab")?,
+            max_ctx: field("max_ctx")?,
+            batch_tokens: field("batch_tokens")?,
+            max_moe_instances: field("max_moe_instances")?,
+        })
+    }
+}
+
+/// A complete artifact directory.
+#[derive(Debug)]
+pub struct ArtifactBundle {
+    pub dir: PathBuf,
+    pub meta: TinyMoeMeta,
+    pub weights: WeightStore,
+}
+
+impl ArtifactBundle {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let meta_text = std::fs::read_to_string(dir.join("meta.json"))
+            .with_context(|| {
+                format!(
+                    "{}: run `make artifacts` first",
+                    dir.join("meta.json").display()
+                )
+            })?;
+        let meta = TinyMoeMeta::parse(&meta_text)?;
+        let weights = WeightStore::load(&dir.join("weights.bin"))?;
+        Ok(ArtifactBundle {
+            dir: dir.to_path_buf(),
+            meta,
+            weights,
+        })
+    }
+
+    pub fn hlo_path(&self, block: &str) -> PathBuf {
+        self.dir.join(format!("{block}.hlo.txt"))
+    }
+
+    /// Default artifacts directory: $JANUS_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("JANUS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parser_handles_flat_json() {
+        let json = r#"{
+  "model": "TinyMoE",
+  "layers": 4, "d_model": 128, "n_heads": 4, "n_kv_heads": 2,
+  "head_dim": 32, "experts": 8, "top_k": 2, "d_expert": 256,
+  "vocab": 512, "max_ctx": 64, "batch_tokens": 8,
+  "max_moe_instances": 16, "seed": 0, "blocks": ["attn"]
+}"#;
+        let m = TinyMoeMeta::parse(json).unwrap();
+        assert_eq!(m.layers, 4);
+        assert_eq!(m.d_model, 128);
+        assert_eq!(m.max_moe_instances, 16);
+    }
+
+    #[test]
+    fn meta_parser_rejects_missing_field() {
+        assert!(TinyMoeMeta::parse("{}").is_err());
+    }
+
+    #[test]
+    fn weights_container_roundtrip() {
+        // Hand-build a tiny JWB1 container.
+        let mut buf: Vec<u8> = b"JWB1".to_vec();
+        buf.extend(1u32.to_le_bytes());
+        let name = b"t";
+        buf.extend((name.len() as u16).to_le_bytes());
+        buf.extend(name);
+        buf.push(0); // f32
+        buf.push(2); // ndim
+        buf.extend(2u32.to_le_bytes());
+        buf.extend(3u32.to_le_bytes());
+        for i in 0..6 {
+            buf.extend((i as f32).to_le_bytes());
+        }
+        let tmp = std::env::temp_dir().join("janus_test_weights.bin");
+        std::fs::write(&tmp, &buf).unwrap();
+        let ws = WeightStore::load(&tmp).unwrap();
+        let t = ws.get("t").unwrap();
+        assert_eq!(t.dims, vec![2, 3]);
+        assert_eq!(t.data, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!(ws.get("missing").is_err());
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn real_artifacts_load_if_present() {
+        let dir = ArtifactBundle::default_dir();
+        if !dir.join("meta.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let b = ArtifactBundle::load(&dir).unwrap();
+        assert_eq!(b.meta.d_model, 128);
+        assert!(b.weights.len() > 30);
+        assert!(b.hlo_path("moe").exists());
+        // Every layer's weights are present.
+        for l in 0..b.meta.layers {
+            for w in ["wq", "wk", "wv", "wo", "wgate", "w1", "w2", "w3"] {
+                b.weights.get(&format!("l{l}.{w}")).unwrap();
+            }
+        }
+    }
+}

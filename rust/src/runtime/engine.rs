@@ -1,0 +1,151 @@
+//! The PJRT execution engine: compiles HLO-text artifacts once and
+//! executes them with literal inputs (adapted from
+//! /opt/xla-example/load_hlo/).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Compiled-executable cache over one PJRT client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        Ok(Engine {
+            client: xla::PjRtClient::cpu()?,
+            executables: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text file under a cache key.
+    pub fn load_hlo(&mut self, key: &str, path: &Path) -> Result<()> {
+        if self.executables.contains_key(key) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        self.executables.insert(key.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, key: &str) -> bool {
+        self.executables.contains_key(key)
+    }
+
+    /// Execute a loaded computation. Inputs are literals; the output
+    /// tuple (aot.py lowers with return_tuple=True) is decomposed into
+    /// its elements.
+    pub fn execute(&self, key: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(key)
+            .ok_or_else(|| anyhow!("executable '{key}' not loaded"))?;
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let out = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("'{key}': empty result"))?
+            .to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::ArtifactBundle;
+    use crate::runtime::literal_util as lu;
+
+    fn artifacts() -> Option<ArtifactBundle> {
+        let dir = ArtifactBundle::default_dir();
+        if dir.join("meta.json").exists() {
+            Some(ArtifactBundle::load(&dir).unwrap())
+        } else {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+
+    #[test]
+    fn engine_loads_and_runs_embed_block() {
+        let Some(b) = artifacts() else { return };
+        let mut e = Engine::cpu().unwrap();
+        e.load_hlo("embed", &b.hlo_path("embed")).unwrap();
+        assert!(e.is_loaded("embed"));
+        let t = b.meta.batch_tokens;
+        let ids: Vec<i32> = (0..t as i32).collect();
+        let emb = b.weights.get("embed").unwrap();
+        let out = e
+            .execute(
+                "embed",
+                &[
+                    lu::i32_literal(&ids, &[t]).unwrap(),
+                    lu::tensor_literal(emb).unwrap(),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let x = lu::to_f32_vec(&out[0]).unwrap();
+        assert_eq!(x.len(), t * b.meta.d_model);
+        // Row 3 of the output must equal row 3 of the embedding table.
+        let d = b.meta.d_model;
+        assert_eq!(&x[3 * d..4 * d], &emb.data[3 * d..4 * d]);
+    }
+
+    #[test]
+    fn missing_executable_errors() {
+        let e = Engine::cpu().unwrap();
+        assert!(e.execute("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn gate_block_output_is_topk() {
+        let Some(b) = artifacts() else { return };
+        let mut e = Engine::cpu().unwrap();
+        e.load_hlo("gate", &b.hlo_path("gate")).unwrap();
+        let t = b.meta.batch_tokens;
+        let d = b.meta.d_model;
+        let x: Vec<f32> = (0..t * d).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+        let wg = b.weights.get("l0.wgate").unwrap();
+        let out = e
+            .execute(
+                "gate",
+                &[
+                    lu::f32_literal(&x, &[t, d]).unwrap(),
+                    lu::tensor_literal(wg).unwrap(),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        let ids = lu::to_i32_vec(&out[0]).unwrap();
+        let wts = lu::to_f32_vec(&out[1]).unwrap();
+        let k = b.meta.top_k;
+        assert_eq!(ids.len(), t * k);
+        for row in ids.chunks(k) {
+            assert!(row.iter().all(|&e| (e as usize) < b.meta.experts));
+            let mut s = row.to_vec();
+            s.dedup();
+            assert_eq!(s.len(), k, "distinct experts per token");
+        }
+        for row in wts.chunks(k) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "weights sum to 1: {sum}");
+        }
+    }
+}

@@ -1,0 +1,74 @@
+//! Conversions between host buffers and XLA literals.
+
+use anyhow::{anyhow, Result};
+
+use super::artifacts::Tensor;
+
+/// f32 literal with shape.
+pub fn f32_literal(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        return Err(anyhow!("shape {:?} != len {}", dims, data.len()));
+    }
+    let flat = xla::Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(flat.reshape(&dims_i64)?)
+}
+
+/// i32 literal with shape.
+pub fn i32_literal(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        return Err(anyhow!("shape {:?} != len {}", dims, data.len()));
+    }
+    let flat = xla::Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(flat.reshape(&dims_i64)?)
+}
+
+/// i32 scalar literal.
+pub fn i32_scalar(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Literal from an exported tensor.
+pub fn tensor_literal(t: &Tensor) -> Result<xla::Literal> {
+    if t.is_i32 {
+        i32_literal(&t.i32_data, &t.dims)
+    } else {
+        f32_literal(&t.data, &t.dims)
+    }
+}
+
+/// Extract f32 data from a literal.
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract i32 data from a literal.
+pub fn to_i32_vec(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let lit = f32_literal(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_f32_vec(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(f32_literal(&[1.0; 5], &[2, 2]).is_err());
+        assert!(i32_literal(&[1; 3], &[4]).is_err());
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let lit = i32_literal(&[7, 8], &[2]).unwrap();
+        assert_eq!(to_i32_vec(&lit).unwrap(), vec![7, 8]);
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`,
+//! `weights.bin`, `meta.json`) produced by `python/compile/aot.py` and
+//! executes them on the PJRT CPU client. Python never runs on the request
+//! path — after `make artifacts` the Rust binary is self-contained.
+
+pub mod artifacts;
+pub mod engine;
+pub mod literal_util;
+
+pub use artifacts::{ArtifactBundle, TinyMoeMeta, WeightStore};
+pub use engine::Engine;

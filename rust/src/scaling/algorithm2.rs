@@ -1,0 +1,331 @@
+//! Algorithm 2: fine-grained, SLO-aware resource scaling.
+//!
+//! Enumerates candidate (n_a, n_e) deployments over a bounded space,
+//! solves the steady-state batch for each (Eq. 2), checks the TPOT SLO
+//! and memory feasibility, and returns the feasible configuration with
+//! the smallest GPU count (which maximizes per-GPU throughput).
+
+use crate::config::hardware::HardwareProfile;
+use crate::config::models::MoeModel;
+use crate::config::serving::{CommScheme, Deployment, GatingSide, Slo};
+use crate::perfmodel::TpotModel;
+
+use super::amax::AmaxTable;
+use super::littles_law::{self, FixedPoint};
+use super::memory::AttnMemoryModel;
+
+/// The scaler's decision for one demand level.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScalePlan {
+    pub deployment: Deployment,
+    /// Steady-state total batch B*.
+    pub b_star: f64,
+    /// Predicted TPOT at B* (seconds).
+    pub tpot: f64,
+    /// Predicted per-GPU throughput (tok/s/GPU).
+    pub tpg: f64,
+    /// â_max at the chosen point.
+    pub a_max: f64,
+}
+
+/// One evaluated candidate (for the Fig 16 search-space scatter).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CandidateEval {
+    pub deployment: Deployment,
+    pub b_star: Option<f64>,
+    pub tpot: Option<f64>,
+    pub tpg: Option<f64>,
+    pub slo_feasible: bool,
+    pub mem_feasible: bool,
+}
+
+/// The SLO-aware scaler: owns the TPOT model, â_max table, and memory
+/// model for one (model, hardware) pair.
+pub struct Scaler {
+    pub model: MoeModel,
+    pub hw: HardwareProfile,
+    pub tpot_model: TpotModel,
+    pub amax: AmaxTable,
+    pub mem: AttnMemoryModel,
+    /// Upper bound on either side's instance count (cluster size).
+    pub n_max: usize,
+    /// Expert slots per MoE instance.
+    pub capacity: usize,
+}
+
+impl Scaler {
+    pub fn new(
+        model: MoeModel,
+        hw: HardwareProfile,
+        amax: AmaxTable,
+        n_max: usize,
+    ) -> Self {
+        let tpot_model = TpotModel::new(
+            &model,
+            &hw,
+            CommScheme::TwoPhaseAdaptive,
+            GatingSide::Moe,
+        );
+        let mem = AttnMemoryModel::new(&model);
+        let capacity = amax.capacity;
+        Scaler {
+            model,
+            hw,
+            tpot_model,
+            amax,
+            mem,
+            n_max,
+            capacity,
+        }
+    }
+
+    /// Minimum MoE instances to seat every expert once.
+    pub fn n_e_min(&self) -> usize {
+        self.model.experts.div_ceil(self.capacity)
+    }
+
+    /// Predicted TPOT for (B, n_a, n_e) via the â_max lookup.
+    pub fn tpot(&self, b: f64, n_attn: usize, n_moe: usize, s_ctx: f64) -> f64 {
+        let a_max = self.amax.lookup(n_moe, b).round() as u32;
+        self.tpot_model.tpot(b, n_attn, n_moe, s_ctx, a_max).tpot
+    }
+
+    /// Algorithm 2: pick the smallest feasible deployment for demand
+    /// `lambda` (decode tokens/s) under `slo`. Returns None when no
+    /// candidate within n_max is feasible.
+    pub fn optimize(&self, lambda: f64, slo: Slo, s_ctx: f64) -> Option<ScalePlan> {
+        let mut best: Option<ScalePlan> = None;
+        for n_e in self.candidate_n_e() {
+            for n_a in 1..=self.n_max {
+                // Prune: can't beat the incumbent on GPU count.
+                if let Some(ref b) = best {
+                    if n_a + n_e >= b.deployment.total_gpus() {
+                        continue;
+                    }
+                }
+                let b_max = self.mem.max_local_batch(s_ctx, &self.hw.gpu) * n_a as f64;
+                if b_max < 1.0 {
+                    continue;
+                }
+                let fp = littles_law::solve(lambda, b_max, |b| {
+                    self.tpot(b, n_a, n_e, s_ctx)
+                });
+                let b_star = match fp {
+                    FixedPoint::Saturated => continue,
+                    other => other.batch().unwrap(),
+                };
+                let tpot = self.tpot(b_star, n_a, n_e, s_ctx);
+                if tpot > slo.tpot {
+                    continue;
+                }
+                if !self
+                    .mem
+                    .feasible(b_star / n_a as f64, s_ctx, &self.hw.gpu)
+                {
+                    continue;
+                }
+                let deployment = Deployment::new(n_a, n_e);
+                let tpg = b_star / tpot / deployment.total_gpus() as f64;
+                let better = match &best {
+                    None => true,
+                    Some(b) => {
+                        deployment.total_gpus() < b.deployment.total_gpus()
+                            || (deployment.total_gpus() == b.deployment.total_gpus()
+                                && tpg > b.tpg)
+                    }
+                };
+                if better {
+                    best = Some(ScalePlan {
+                        deployment,
+                        b_star,
+                        tpot,
+                        tpg,
+                        a_max: self.amax.lookup(n_e, b_star),
+                    });
+                }
+            }
+        }
+        best
+    }
+
+    /// Variant used by the batch-sweep figures (Fig 8/9/16): the total
+    /// batch is pinned (the experiment drives it), and the scaler picks
+    /// the smallest deployment whose TPOT at that batch meets the SLO.
+    pub fn optimize_fixed_batch(&self, b: f64, slo: Slo, s_ctx: f64) -> Option<ScalePlan> {
+        let mut best: Option<ScalePlan> = None;
+        for n_e in self.candidate_n_e() {
+            for n_a in 1..=self.n_max {
+                let b_local = b / n_a as f64;
+                if !self.mem.feasible(b_local, s_ctx, &self.hw.gpu) {
+                    continue;
+                }
+                let tpot = self.tpot(b, n_a, n_e, s_ctx);
+                if tpot > slo.tpot {
+                    continue;
+                }
+                let deployment = Deployment::new(n_a, n_e);
+                let tpg = b / tpot / deployment.total_gpus() as f64;
+                let better = match &best {
+                    None => true,
+                    Some(best_plan) => {
+                        deployment.total_gpus() < best_plan.deployment.total_gpus()
+                            || (deployment.total_gpus() == best_plan.deployment.total_gpus()
+                                && tpg > best_plan.tpg)
+                    }
+                };
+                if better {
+                    best = Some(ScalePlan {
+                        deployment,
+                        b_star: b,
+                        tpot,
+                        tpg,
+                        a_max: self.amax.lookup(n_e, b),
+                    });
+                }
+            }
+        }
+        best
+    }
+
+    /// Evaluate the whole candidate space at a fixed batch (Fig 16).
+    pub fn enumerate_fixed_batch(&self, b: f64, slo: Slo, s_ctx: f64) -> Vec<CandidateEval> {
+        let mut out = Vec::new();
+        for n_e in self.candidate_n_e() {
+            for n_a in 1..=self.n_max {
+                let deployment = Deployment::new(n_a, n_e);
+                let b_local = b / n_a as f64;
+                let mem_feasible = self.mem.feasible(b_local, s_ctx, &self.hw.gpu);
+                let tpot = self.tpot(b, n_a, n_e, s_ctx);
+                let tpg = b / tpot / deployment.total_gpus() as f64;
+                out.push(CandidateEval {
+                    deployment,
+                    b_star: Some(b),
+                    tpot: Some(tpot),
+                    tpg: Some(tpg),
+                    slo_feasible: tpot <= slo.tpot && mem_feasible,
+                    mem_feasible,
+                });
+            }
+        }
+        out
+    }
+
+    fn candidate_n_e(&self) -> Vec<usize> {
+        self.amax
+            .n_e_values
+            .iter()
+            .copied()
+            .filter(|&n| n >= self.n_e_min() && n <= self.n_max)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::paper_testbed;
+    use crate::config::models::deepseek_v2;
+    use crate::config::serving::{self, SchedulerKind};
+    use crate::routing::gate::{ExpertPopularity, GateSim};
+    use crate::routing::trace::ActivationTrace;
+    use crate::util::rng::Rng;
+
+    fn build_scaler() -> Scaler {
+        let model = deepseek_v2();
+        let hw = paper_testbed();
+        let capacity = serving::default_capacity(&model, &hw);
+        let mut rng = Rng::seed_from_u64(99);
+        let gate = GateSim::new(model.experts, model.top_k, &ExpertPopularity::Uniform, &mut rng);
+        let mut trace = ActivationTrace::new(model.experts, model.top_k, 8192);
+        trace.record_batch(&gate.sample_batch(&mut rng, 8192));
+        let n_e_values: Vec<usize> = (6..=16).collect();
+        let amax = AmaxTable::build(
+            &trace,
+            &n_e_values,
+            &AmaxTable::default_grid(4096),
+            capacity,
+            SchedulerKind::Aebs,
+            6,
+            &mut rng,
+        );
+        Scaler::new(model, hw, amax, 16)
+    }
+
+    #[test]
+    fn picks_compact_config_at_low_load() {
+        // Fig 8/9: at low demand Janus selects asymmetric configs like
+        // 1A6E, putting almost everything on the MoE side.
+        let s = build_scaler();
+        let plan = s
+            .optimize(500.0, Slo::from_ms(200.0), 512.0)
+            .expect("feasible");
+        assert_eq!(plan.deployment.n_attn, 1, "{}", plan.deployment);
+        assert!(plan.deployment.n_moe <= 8, "{}", plan.deployment);
+        assert!(plan.tpot <= 0.2);
+    }
+
+    #[test]
+    fn higher_demand_grows_deployment() {
+        let s = build_scaler();
+        let lo = s.optimize(500.0, Slo::from_ms(200.0), 512.0).unwrap();
+        let hi = s.optimize(20_000.0, Slo::from_ms(200.0), 512.0).unwrap();
+        assert!(
+            hi.deployment.total_gpus() >= lo.deployment.total_gpus(),
+            "lo {} hi {}",
+            lo.deployment,
+            hi.deployment
+        );
+        assert!(hi.b_star > lo.b_star);
+    }
+
+    #[test]
+    fn tighter_slo_needs_no_fewer_gpus() {
+        let s = build_scaler();
+        let loose = s.optimize_fixed_batch(512.0, Slo::from_ms(300.0), 512.0).unwrap();
+        let tight = s.optimize_fixed_batch(512.0, Slo::from_ms(150.0), 512.0);
+        if let Some(tight) = tight {
+            assert!(
+                tight.deployment.total_gpus() >= loose.deployment.total_gpus(),
+                "tight {} loose {}",
+                tight.deployment,
+                loose.deployment
+            );
+            assert!(tight.tpot <= 0.15);
+        }
+        // (tight may be infeasible — that's Fig 9's "strictest SLO
+        // infeasible at B=512" observation.)
+    }
+
+    #[test]
+    fn respects_expert_seating_constraint() {
+        let s = build_scaler();
+        let plan = s.optimize(500.0, Slo::from_ms(500.0), 512.0).unwrap();
+        assert!(plan.deployment.n_moe >= s.n_e_min());
+    }
+
+    #[test]
+    fn infeasible_demand_returns_none() {
+        let s = build_scaler();
+        // Demand far beyond what 16+16 GPUs can serve.
+        let plan = s.optimize(1e9, Slo::from_ms(100.0), 512.0);
+        assert!(plan.is_none());
+    }
+
+    #[test]
+    fn enumerate_contains_selected_optimum() {
+        let s = build_scaler();
+        let plan = s.optimize_fixed_batch(256.0, Slo::from_ms(200.0), 512.0).unwrap();
+        let all = s.enumerate_fixed_batch(256.0, Slo::from_ms(200.0), 512.0);
+        let found = all
+            .iter()
+            .find(|c| c.deployment == plan.deployment)
+            .unwrap();
+        assert!(found.slo_feasible);
+        // No feasible candidate uses fewer GPUs.
+        for c in &all {
+            if c.slo_feasible {
+                assert!(c.deployment.total_gpus() >= plan.deployment.total_gpus());
+            }
+        }
+    }
+}

@@ -1,0 +1,297 @@
+//! â_max estimation: Monte-Carlo lookup table (§3.5) and the analytic
+//! balls-into-bins upper bound (Appendix A, Eq. 5).
+
+use crate::config::serving::SchedulerKind;
+use crate::placement::{allocate_replicas, place_replicas, ExpertPlacement};
+use crate::routing::coactivation::CoactivationStats;
+use crate::routing::trace::ActivationTrace;
+use crate::scheduler::{self, aebs};
+use crate::util::rng::Rng;
+
+/// Monte-Carlo â_max(n_e, B) lookup table.
+///
+/// For each candidate MoE-side size n_e, the estimator builds the replica
+/// placement Janus would deploy (Appendix B pipeline: replica counts from
+/// trace loads, activation-aware placement) and replays sampled batches
+/// through the configured scheduler, recording the mean a_max on a
+/// geometric batch grid. Lookups interpolate linearly in B.
+#[derive(Clone, Debug)]
+pub struct AmaxTable {
+    /// Candidate n_e values, ascending.
+    pub n_e_values: Vec<usize>,
+    /// Batch grid, ascending.
+    pub batch_grid: Vec<usize>,
+    /// table[i][j] = mean a_max for n_e_values[i], batch_grid[j].
+    table: Vec<Vec<f64>>,
+    /// The placements built per n_e (reused by the coordinator when the
+    /// chosen configuration is applied).
+    pub placements: Vec<ExpertPlacement>,
+    pub capacity: usize,
+}
+
+impl AmaxTable {
+    /// Build from a trace. `samples` batches are drawn per (n_e, B) cell.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        trace: &ActivationTrace,
+        n_e_values: &[usize],
+        batch_grid: &[usize],
+        capacity: usize,
+        scheduler: SchedulerKind,
+        samples: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        assert!(!trace.is_empty(), "â_max estimation needs a trace");
+        let counts = trace.expert_counts();
+        // Co-activation windows at a typical online batch size.
+        let coact = CoactivationStats::from_trace(trace, 64.min(trace.len_tokens()));
+        let mut table = Vec::with_capacity(n_e_values.len());
+        let mut placements = Vec::with_capacity(n_e_values.len());
+        for &n_e in n_e_values {
+            assert!(
+                n_e * capacity >= trace.experts,
+                "n_e {n_e} × C {capacity} cannot seat {} experts",
+                trace.experts
+            );
+            let replicas = allocate_replicas(&counts, n_e, capacity);
+            let placement = place_replicas(&replicas, &counts, &coact, n_e, capacity);
+            let mut ws = aebs::Workspace::new(trace.experts, n_e);
+            let mut row = Vec::with_capacity(batch_grid.len());
+            for &b in batch_grid {
+                let mut acc = 0.0;
+                for _ in 0..samples {
+                    let batch = trace.sample_batch(rng, b);
+                    let a_max = match scheduler {
+                        SchedulerKind::Aebs => aebs::a_max_only(&mut ws, &batch, &placement),
+                        other => scheduler::schedule(other, &batch, &placement, rng).a_max,
+                    };
+                    acc += a_max as f64;
+                }
+                row.push(acc / samples as f64);
+            }
+            table.push(row);
+            placements.push(placement);
+        }
+        AmaxTable {
+            n_e_values: n_e_values.to_vec(),
+            batch_grid: batch_grid.to_vec(),
+            table,
+            placements,
+            capacity,
+        }
+    }
+
+    /// Default geometric batch grid up to `b_max`.
+    pub fn default_grid(b_max: usize) -> Vec<usize> {
+        let mut grid = vec![1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096];
+        grid.retain(|&b| b <= b_max);
+        if grid.last().copied() != Some(b_max) {
+            grid.push(b_max);
+        }
+        grid
+    }
+
+    /// Interpolated â_max for (n_e, B). `n_e` must be one of the candidate
+    /// values; B interpolates within the grid (clamped at the ends).
+    pub fn lookup(&self, n_e: usize, b: f64) -> f64 {
+        let i = self
+            .n_e_values
+            .iter()
+            .position(|&v| v == n_e)
+            .unwrap_or_else(|| panic!("n_e {n_e} not in table {:?}", self.n_e_values));
+        let row = &self.table[i];
+        let grid = &self.batch_grid;
+        if b <= grid[0] as f64 {
+            return row[0];
+        }
+        if b >= *grid.last().unwrap() as f64 {
+            return *row.last().unwrap();
+        }
+        let j = grid.partition_point(|&g| (g as f64) < b);
+        let (g0, g1) = (grid[j - 1] as f64, grid[j] as f64);
+        let frac = (b - g0) / (g1 - g0);
+        row[j - 1] * (1.0 - frac) + row[j] * frac
+    }
+
+    /// Placement built for a candidate n_e.
+    pub fn placement_for(&self, n_e: usize) -> Option<&ExpertPlacement> {
+        self.n_e_values
+            .iter()
+            .position(|&v| v == n_e)
+            .map(|i| &self.placements[i])
+    }
+}
+
+/// Analytic upper bound on a_max (Appendix A, Eq. 5).
+///
+/// * `probs` — per-token activation probabilities p_e with Σp_e = K.
+/// * `placement` — the replica layout (the bound takes the adversarial
+///   view: every replicated activation lands on the analyzed instance).
+/// * `b` — batch size; returns the ceil'd bound, capped at C + 1.
+pub fn amax_bound(probs: &[f64], placement: &ExpertPlacement, b: f64) -> f64 {
+    let n_e = placement.n_instances;
+    // E[a_g] ≤ Σ_{e ∈ P(g)} [1 − (1 − p_e)^B]  (Eq. 4)
+    let mut a_bar_max: f64 = 0.0;
+    for g in 0..n_e as u32 {
+        let mut a_bar = 0.0;
+        for e in placement.seated(g) {
+            let p = probs[e as usize].min(1.0);
+            a_bar += 1.0 - (1.0 - p).powf(b);
+        }
+        a_bar_max = a_bar_max.max(a_bar);
+    }
+    let c = placement.capacity as f64;
+    let tail = (2.0 * a_bar_max * (n_e as f64).ln().max(0.0)).sqrt();
+    (a_bar_max + tail).min(c).ceil() + 1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::gate::{ExpertPopularity, GateSim};
+
+    fn trace(experts: usize, top_k: usize, skew: f64, seed: u64) -> (ActivationTrace, GateSim) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let pop = if skew == 0.0 {
+            ExpertPopularity::Uniform
+        } else {
+            ExpertPopularity::Zipf { s: skew }
+        };
+        let gate = GateSim::new(experts, top_k, &pop, &mut rng);
+        let mut tr = ActivationTrace::new(experts, top_k, 16384);
+        tr.record_batch(&gate.sample_batch(&mut rng, 16384));
+        (tr, gate)
+    }
+
+    #[test]
+    fn table_monotone_in_batch() {
+        let (tr, _) = trace(64, 6, 0.0, 1);
+        let mut rng = Rng::seed_from_u64(2);
+        let t = AmaxTable::build(
+            &tr,
+            &[6, 8],
+            &[1, 16, 64, 256],
+            16,
+            SchedulerKind::Aebs,
+            8,
+            &mut rng,
+        );
+        for &n_e in &[6usize, 8] {
+            let mut prev = 0.0;
+            for &b in &[1usize, 16, 64, 256] {
+                let v = t.lookup(n_e, b as f64);
+                assert!(v >= prev - 1e-9, "a_max must grow with B: {v} < {prev}");
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn more_instances_reduce_amax() {
+        // Fig 13: spreading experts over more instances lowers a_max.
+        let (tr, _) = trace(160, 6, 0.3, 3);
+        let mut rng = Rng::seed_from_u64(4);
+        let t = AmaxTable::build(
+            &tr,
+            &[6, 12, 16],
+            &[64, 256],
+            27,
+            SchedulerKind::Aebs,
+            8,
+            &mut rng,
+        );
+        assert!(t.lookup(16, 256.0) < t.lookup(6, 256.0));
+    }
+
+    #[test]
+    fn saturates_near_experts_per_instance() {
+        // Appendix A regime (ii): at huge B, a_max plateaus near
+        // min(C, ~E/n_e + replication slack).
+        let (tr, _) = trace(64, 6, 0.0, 5);
+        let mut rng = Rng::seed_from_u64(6);
+        let t = AmaxTable::build(
+            &tr,
+            &[8],
+            &[1024, 4096],
+            10,
+            SchedulerKind::Aebs,
+            4,
+            &mut rng,
+        );
+        let v = t.lookup(8, 4096.0);
+        assert!(v <= 10.0 + 1e-9, "plateau {v} exceeds capacity");
+        assert!(v >= 8.0 - 1.0, "plateau {v} too low for E/n_e = 8");
+    }
+
+    #[test]
+    fn interpolation_is_sane() {
+        let (tr, _) = trace(32, 4, 0.0, 7);
+        let mut rng = Rng::seed_from_u64(8);
+        let t = AmaxTable::build(
+            &tr,
+            &[4],
+            &[16, 64],
+            10,
+            SchedulerKind::Aebs,
+            8,
+            &mut rng,
+        );
+        let lo = t.lookup(4, 16.0);
+        let hi = t.lookup(4, 64.0);
+        let mid = t.lookup(4, 40.0);
+        assert!(mid >= lo.min(hi) - 1e-9 && mid <= lo.max(hi) + 1e-9);
+        // Clamping beyond the ends.
+        assert_eq!(t.lookup(4, 0.5), lo);
+        assert_eq!(t.lookup(4, 1e9), hi);
+    }
+
+    #[test]
+    fn bound_dominates_monte_carlo() {
+        // Fig 17's property: the analytic bound never under-predicts the
+        // Monte-Carlo estimate.
+        for skew in [0.0, 0.8] {
+            let (tr, gate) = trace(96, 6, skew, 11);
+            let mut rng = Rng::seed_from_u64(12);
+            let grid = [8usize, 32, 128, 512];
+            let t = AmaxTable::build(
+                &tr,
+                &[8, 12],
+                &grid,
+                16,
+                SchedulerKind::Aebs,
+                12,
+                &mut rng,
+            );
+            let probs = gate.activation_probs();
+            for &n_e in &[8usize, 12] {
+                let placement = t.placement_for(n_e).unwrap();
+                for &b in &grid {
+                    let mc = t.lookup(n_e, b as f64);
+                    let bd = amax_bound(&probs, placement, b as f64);
+                    assert!(
+                        bd + 1e-9 >= mc,
+                        "bound {bd} < MC {mc} at n_e={n_e} B={b} skew={skew}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bound_capped_at_capacity_plus_one() {
+        let (tr, gate) = trace(64, 8, 0.0, 13);
+        let mut rng = Rng::seed_from_u64(14);
+        let t = AmaxTable::build(
+            &tr,
+            &[8],
+            &[4096],
+            9,
+            SchedulerKind::Aebs,
+            2,
+            &mut rng,
+        );
+        let placement = t.placement_for(8).unwrap();
+        let bd = amax_bound(&gate.activation_probs(), placement, 1e6);
+        assert!(bd <= 10.0, "bound {bd} must cap at C+1 = 10");
+    }
+}

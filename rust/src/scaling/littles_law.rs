@@ -1,0 +1,103 @@
+//! Steady-state batch fixed point (Eq. 2): B* = λ · TPOT(B*).
+//!
+//! Under steady-state decode serving, the in-flight batch is whatever
+//! Little's Law says it is — demand λ (tokens/s) times the per-token
+//! latency at that batch. Janus solves the fixed point with a bounded
+//! binary search on the residual f(B) = B − λ·TPOT(B), which is monotone
+//! increasing in the profiled operating range (TPOT grows sublinearly
+//! with B).
+
+/// Outcome of the fixed-point solve.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FixedPoint {
+    /// Demand too light to form a batch: B* = 1 (f(1) ≥ 0).
+    Light,
+    /// Interior solution.
+    Solved(f64),
+    /// Even B_max cannot sustain the demand (f(B_max) < 0): infeasible.
+    Saturated,
+}
+
+impl FixedPoint {
+    /// The batch to use, or None when the configuration can't keep up.
+    pub fn batch(&self) -> Option<f64> {
+        match self {
+            FixedPoint::Light => Some(1.0),
+            FixedPoint::Solved(b) => Some(*b),
+            FixedPoint::Saturated => None,
+        }
+    }
+}
+
+/// Solve B = λ·TPOT(B) for B ∈ [1, b_max]. `tpot` maps batch → seconds.
+pub fn solve<F: FnMut(f64) -> f64>(lambda: f64, b_max: f64, mut tpot: F) -> FixedPoint {
+    assert!(lambda > 0.0 && b_max >= 1.0);
+    let mut f = |b: f64| b - lambda * tpot(b);
+    if f(1.0) >= 0.0 {
+        return FixedPoint::Light;
+    }
+    if f(b_max) < 0.0 {
+        return FixedPoint::Saturated;
+    }
+    let (mut lo, mut hi) = (1.0, b_max);
+    // ~48 iterations: |hi-lo| < b_max·2^-48, far below token granularity.
+    for _ in 0..48 {
+        let mid = 0.5 * (lo + hi);
+        if f(mid) < 0.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    FixedPoint::Solved(0.5 * (lo + hi))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solves_linear_tpot() {
+        // TPOT(B) = 0.01 + 1e-4·B, λ = 1000:
+        // B = 1000·(0.01 + 1e-4·B) → B = 10 + 0.1B → B* = 100/9 ≈ 11.11
+        let fp = solve(1000.0, 10_000.0, |b| 0.01 + 1e-4 * b);
+        match fp {
+            FixedPoint::Solved(b) => assert!((b - 100.0 / 9.0).abs() < 1e-6, "{b}"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn light_load_pins_to_one() {
+        // λ·TPOT(1) ≤ 1 ⇒ Light.
+        let fp = solve(10.0, 1000.0, |_| 0.01);
+        assert_eq!(fp, FixedPoint::Light);
+        assert_eq!(fp.batch(), Some(1.0));
+    }
+
+    #[test]
+    fn saturation_detected() {
+        // TPOT ≥ 1s regardless of batch, λ = 1e6: can never keep up.
+        let fp = solve(1e6, 4096.0, |_| 1.0);
+        assert_eq!(fp, FixedPoint::Saturated);
+        assert_eq!(fp.batch(), None);
+    }
+
+    #[test]
+    fn fixed_point_satisfies_equation() {
+        let lambda = 5000.0;
+        let tpot = |b: f64| 0.02 + 2e-5 * b + 1e-9 * b * b;
+        if let FixedPoint::Solved(b) = solve(lambda, 1e5, tpot) {
+            assert!((b - lambda * tpot(b)).abs() < 1e-3, "residual at {b}");
+        } else {
+            panic!("expected interior solution");
+        }
+    }
+
+    #[test]
+    fn boundary_exactly_balanced() {
+        // λ·TPOT(1) exactly 1 → Light (f(1) = 0 ≥ 0).
+        let fp = solve(100.0, 10.0, |_| 0.01);
+        assert_eq!(fp, FixedPoint::Light);
+    }
+}

@@ -1,0 +1,107 @@
+//! Per-GPU memory feasibility (the M_a(b*, S_ctx) ≤ M constraint of
+//! Eq. 3). MoE-side memory is dominated by the C pinned expert replicas
+//! and is enforced structurally by the capacity constraint n_e·C ≥ E.
+
+use crate::config::hardware::GpuSpec;
+use crate::config::models::MoeModel;
+
+/// Attention-instance memory model: full attention-weight replica +
+/// KV cache for the in-flight local batch + activation buffers.
+#[derive(Clone, Debug)]
+pub struct AttnMemoryModel {
+    /// Static bytes: attention weights + embeddings + shared experts
+    /// (Janus hosts the shared expert attention-side, §4).
+    pub static_bytes: f64,
+    /// KV bytes per resident token (per request × context length).
+    pub kv_bytes_per_token: f64,
+    /// Activation/workspace bytes per in-flight request.
+    pub buffer_bytes_per_req: f64,
+    /// Usable fraction of GPU HBM (the rest is runtime/fragmentation).
+    pub usable_fraction: f64,
+}
+
+impl AttnMemoryModel {
+    pub fn new(model: &MoeModel) -> Self {
+        let shared_bytes =
+            model.params_per_expert() * model.shared_experts as f64 * model.moe_layers() as f64
+                * 2.0;
+        let dense_bytes = model.dense_ffn_params() * 2.0;
+        AttnMemoryModel {
+            static_bytes: model.attn_params() * 2.0
+                + model.embedding_params() * 2.0
+                + shared_bytes
+                + dense_bytes,
+            kv_bytes_per_token: model.kv_bytes_per_token_layer * model.layers as f64,
+            // A few d_model-sized activation tensors per request.
+            buffer_bytes_per_req: 8.0 * model.d_model as f64 * 2.0,
+            usable_fraction: 0.90,
+        }
+    }
+
+    /// M_a(b, s_ctx): memory used by one attention instance at local batch
+    /// b and average context s_ctx.
+    pub fn usage(&self, b_local: f64, s_ctx: f64) -> f64 {
+        self.static_bytes
+            + b_local * s_ctx * self.kv_bytes_per_token
+            + b_local * self.buffer_bytes_per_req
+    }
+
+    /// Is a local batch feasible on the given GPU?
+    pub fn feasible(&self, b_local: f64, s_ctx: f64, gpu: &GpuSpec) -> bool {
+        self.usage(b_local, s_ctx) <= gpu.mem_capacity * self.usable_fraction
+    }
+
+    /// Largest feasible local batch (B_max per instance in Algorithm 2).
+    pub fn max_local_batch(&self, s_ctx: f64, gpu: &GpuSpec) -> f64 {
+        let budget = gpu.mem_capacity * self.usable_fraction - self.static_bytes;
+        if budget <= 0.0 {
+            return 0.0;
+        }
+        (budget / (s_ctx * self.kv_bytes_per_token + self.buffer_bytes_per_req)).floor()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::h100;
+    use crate::config::models::{deepseek_v2, qwen3_235b};
+
+    #[test]
+    fn dsv2_attention_replica_fits_one_h100() {
+        // Janus's architecture premise (§3.2 n.2): one GPU holds a full
+        // attention replica with room for KV.
+        let m = AttnMemoryModel::new(&deepseek_v2());
+        let gpu = h100();
+        assert!(
+            m.static_bytes < 0.5 * gpu.mem_capacity,
+            "static {} too large",
+            m.static_bytes
+        );
+        assert!(m.feasible(64.0, 512.0, &gpu));
+    }
+
+    #[test]
+    fn kv_eventually_exhausts_memory() {
+        let m = AttnMemoryModel::new(&qwen3_235b());
+        let gpu = h100();
+        let bmax = m.max_local_batch(4096.0, &gpu);
+        assert!(bmax > 0.0);
+        assert!(!m.feasible(bmax + 1.0, 4096.0, &gpu));
+        assert!(m.feasible(bmax, 4096.0, &gpu));
+    }
+
+    #[test]
+    fn longer_context_shrinks_max_batch() {
+        let m = AttnMemoryModel::new(&deepseek_v2());
+        let gpu = h100();
+        assert!(m.max_local_batch(512.0, &gpu) > m.max_local_batch(8192.0, &gpu));
+    }
+
+    #[test]
+    fn usage_monotone() {
+        let m = AttnMemoryModel::new(&deepseek_v2());
+        assert!(m.usage(128.0, 512.0) > m.usage(64.0, 512.0));
+        assert!(m.usage(64.0, 1024.0) > m.usage(64.0, 512.0));
+    }
+}

@@ -1,0 +1,16 @@
+//! Fine-grained, SLO-aware resource scaling (§3.5 + Appendices A/B).
+//!
+//! - [`amax`] — the Monte-Carlo â_max(n_e, B) estimator built from recent
+//!   activation traces, plus the closed-form upper bound of Eq. (5).
+//! - [`littles_law`] — the steady-state batch fixed point B* = λ·TPOT(B*)
+//!   (Eq. 2) via bounded binary search.
+//! - [`algorithm2`] — the (n_a, n_e) enumeration that minimizes GPU count
+//!   under TPOT-SLO and memory constraints (Eq. 3 / Algorithm 2).
+
+pub mod algorithm2;
+pub mod amax;
+pub mod littles_law;
+pub mod memory;
+
+pub use algorithm2::{CandidateEval, ScalePlan, Scaler};
+pub use amax::{amax_bound, AmaxTable};

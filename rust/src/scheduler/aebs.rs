@@ -1,0 +1,289 @@
+//! Activated-Expert-Balanced Scheduling — the paper's Algorithm 1.
+//!
+//! Steps (Fig 7):
+//!  1. Scan the batch's top-k routing results; collect the set of
+//!     activated logical experts (E).
+//!  2. Pick one physical replica per activated expert: single-replica
+//!     experts go to their unique host; multi-replica experts go to the
+//!     currently least-loaded hosting instance, where load = number of
+//!     activated experts already assigned there.
+//!  3. Rewrite each request's logical EID to the chosen replica.
+//!
+//! The whole pass is deterministic (ties break to the lowest instance id),
+//! which is what lets every MoE instance run it redundantly with identical
+//! inputs and reach the same global assignment without synchronization
+//! (§3.4). The paper implements this as a GPU kernel; our production
+//! coordinator runs this Rust implementation on the request path, and
+//! `python/compile/kernels/aebs.py` provides the Pallas-kernel rendition
+//! validated against the same oracle.
+//!
+//! Hot-path notes: this function runs per MoE layer per decode step, so it
+//! must stay at microsecond scale for B up to 4096 (paper Fig 15: < 90 µs).
+//! `Workspace` holds the reusable buffers; `assign` is the allocating
+//! convenience wrapper.
+
+use crate::placement::ExpertPlacement;
+use crate::routing::RoutingBatch;
+
+use super::assignment::Assignment;
+
+/// Reusable buffers for repeated AEBS runs (avoids per-layer allocation).
+pub struct Workspace {
+    /// Epoch-stamped "seen" marks per expert (epoch trick avoids clearing).
+    seen_epoch: Vec<u32>,
+    /// Activated logical experts, in first-seen order.
+    active: Vec<u16>,
+    /// Chosen instance per expert (valid where seen_epoch == epoch).
+    chosen: Vec<u32>,
+    /// Activated-expert count per instance.
+    loads: Vec<u32>,
+    epoch: u32,
+}
+
+impl Workspace {
+    pub fn new(experts: usize, n_instances: usize) -> Self {
+        Workspace {
+            seen_epoch: vec![0; experts],
+            active: Vec::with_capacity(experts),
+            chosen: vec![0; experts],
+            loads: vec![0; n_instances],
+            epoch: 0,
+        }
+    }
+
+    fn reset(&mut self, experts: usize, n_instances: usize) {
+        if self.seen_epoch.len() < experts {
+            self.seen_epoch.resize(experts, 0);
+            self.chosen.resize(experts, 0);
+        }
+        if self.loads.len() != n_instances {
+            self.loads.resize(n_instances, 0);
+        }
+        self.loads.fill(0);
+        self.active.clear();
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            // wrapped: clear stamps and restart at 1
+            self.seen_epoch.fill(0);
+            self.epoch = 1;
+        }
+    }
+}
+
+/// Run AEBS with a caller-provided workspace; returns the assignment.
+pub fn assign_with(
+    ws: &mut Workspace,
+    batch: &RoutingBatch,
+    placement: &ExpertPlacement,
+) -> Assignment {
+    let n_e = placement.n_instances;
+    ws.reset(batch.experts, n_e);
+    let epoch = ws.epoch;
+
+    // Step 1: union of activated EIDs (first-seen order — deterministic).
+    for &e in batch.flat() {
+        let ei = e as usize;
+        if ws.seen_epoch[ei] != epoch {
+            ws.seen_epoch[ei] = epoch;
+            ws.active.push(e);
+        }
+    }
+
+    // Step 2a: single-replica experts first (Algorithm 1 lines 4-7).
+    for &e in &ws.active {
+        let hosts = placement.hosts(e);
+        if hosts.len() == 1 {
+            let g = hosts[0];
+            ws.chosen[e as usize] = g;
+            ws.loads[g as usize] += 1;
+        }
+    }
+    // Step 2b: multi-replica experts to the least-loaded host (lines 8-11),
+    // in ascending expert id for determinism across instances (matching
+    // the paper's "for all e ∈ E" set iteration and making the result
+    // independent of token order). Perf note: an ascending scan over the
+    // epoch bitmap replaces the earlier collect+sort of the active list —
+    // O(E) with no allocation vs O(A log A) + a Vec per call (see
+    // EXPERIMENTS.md §Perf iteration 1).
+    for e in 0..batch.experts as u16 {
+        if ws.seen_epoch[e as usize] != epoch {
+            continue;
+        }
+        let hosts = placement.hosts(e);
+        if hosts.len() <= 1 {
+            continue;
+        }
+        let g_star = *hosts
+            .iter()
+            .min_by_key(|&&g| (ws.loads[g as usize], g))
+            .unwrap();
+        ws.chosen[e as usize] = g_star;
+        ws.loads[g_star as usize] += 1;
+    }
+
+    // Step 3: rewrite requests to chosen instances.
+    let mut instance_of = Vec::with_capacity(batch.flat().len());
+    for &e in batch.flat() {
+        instance_of.push(ws.chosen[e as usize]);
+    }
+
+    // Token loads (dispatch volume) in one more pass.
+    let mut token_loads = vec![0u32; n_e];
+    for &g in &instance_of {
+        token_loads[g as usize] += 1;
+    }
+
+    let a_max = ws.loads.iter().copied().max().unwrap_or(0);
+    Assignment {
+        instance_of,
+        loads: ws.loads.clone(),
+        token_loads,
+        a_max,
+    }
+}
+
+/// Allocate-and-run convenience wrapper.
+pub fn assign(batch: &RoutingBatch, placement: &ExpertPlacement) -> Assignment {
+    let mut ws = Workspace::new(batch.experts, placement.n_instances);
+    assign_with(&mut ws, batch, placement)
+}
+
+/// Just a_max (for the Monte-Carlo estimator, which doesn't need the
+/// per-token rewrite) — same algorithm, skips Step 3.
+pub fn a_max_only(ws: &mut Workspace, batch: &RoutingBatch, placement: &ExpertPlacement) -> u32 {
+    let n_e = placement.n_instances;
+    ws.reset(batch.experts, n_e);
+    let epoch = ws.epoch;
+    for &e in batch.flat() {
+        let ei = e as usize;
+        if ws.seen_epoch[ei] != epoch {
+            ws.seen_epoch[ei] = epoch;
+            ws.active.push(e);
+        }
+    }
+    for &e in &ws.active {
+        let hosts = placement.hosts(e);
+        if hosts.len() == 1 {
+            ws.loads[hosts[0] as usize] += 1;
+        }
+    }
+    for e in 0..batch.experts as u16 {
+        if ws.seen_epoch[e as usize] != epoch {
+            continue;
+        }
+        let hosts = placement.hosts(e);
+        if hosts.len() <= 1 {
+            continue;
+        }
+        let g_star = *hosts
+            .iter()
+            .min_by_key(|&&g| (ws.loads[g as usize], g))
+            .unwrap();
+        ws.loads[g_star as usize] += 1;
+    }
+    ws.loads.iter().copied().max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::gate::{ExpertPopularity, GateSim};
+    use crate::util::rng::Rng;
+
+    /// Paper Fig 7's worked example shape: replicated experts must land on
+    /// the instance balancing *activated-expert* counts, not token counts.
+    #[test]
+    fn balances_activated_experts_not_tokens() {
+        // 4 experts, 2 instances, capacity 3.
+        // Expert 0: replicas on g0 and g1. Experts 1,2 on g0; expert 3 on g1.
+        let mut p = ExpertPlacement::empty(4, 2, 3);
+        p.seat(0, 0).unwrap();
+        p.seat(0, 1).unwrap();
+        p.seat(1, 0).unwrap();
+        p.seat(2, 0).unwrap();
+        p.seat(3, 1).unwrap();
+        // Batch activates experts {0,1,2,3}. Singles: 1,2 → g0 (load 2);
+        // 3 → g1 (load 1). Multi: 0 → least-loaded = g1 → loads (2,2).
+        let batch = RoutingBatch::from_rows(
+            &[vec![0, 1], vec![2, 3], vec![0, 3]],
+            4,
+        );
+        let asg = assign(&batch, &p);
+        assert_eq!(asg.loads, vec![2, 2]);
+        assert_eq!(asg.a_max, 2);
+        // All requests for expert 0 go to g1.
+        for (i, &e) in batch.flat().iter().enumerate() {
+            if e == 0 {
+                assert_eq!(asg.instance_of[i], 1);
+            }
+        }
+    }
+
+    #[test]
+    fn single_replica_experts_are_pinned() {
+        let p = ExpertPlacement::contiguous(8, 4, 2);
+        let mut rng = Rng::seed_from_u64(5);
+        let gate = GateSim::new(8, 2, &ExpertPopularity::Uniform, &mut rng);
+        let batch = gate.sample_batch(&mut rng, 64);
+        let asg = assign(&batch, &p);
+        for (&e, &g) in batch.flat().iter().zip(asg.instance_of.iter()) {
+            assert_eq!(p.hosts(e), &[g]);
+        }
+    }
+
+    #[test]
+    fn a_max_only_matches_full_assign() {
+        let mut rng = Rng::seed_from_u64(6);
+        let p = ExpertPlacement::round_robin(32, 6, 7);
+        let gate = GateSim::new(32, 4, &ExpertPopularity::Zipf { s: 1.0 }, &mut rng);
+        let mut ws = Workspace::new(32, 6);
+        for _ in 0..30 {
+            let batch = gate.sample_batch(&mut rng, 96);
+            let full = assign(&batch, &p);
+            let fast = a_max_only(&mut ws, &batch, &p);
+            assert_eq!(full.a_max, fast);
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_is_clean() {
+        let p = ExpertPlacement::round_robin(16, 4, 5);
+        let mut rng = Rng::seed_from_u64(7);
+        let gate = GateSim::new(16, 2, &ExpertPopularity::Uniform, &mut rng);
+        let mut ws = Workspace::new(16, 4);
+        let b1 = gate.sample_batch(&mut rng, 32);
+        let b2 = gate.sample_batch(&mut rng, 32);
+        let r1 = assign_with(&mut ws, &b1, &p);
+        let _ = assign_with(&mut ws, &b2, &p);
+        let r1_again = assign_with(&mut ws, &b1, &p);
+        assert_eq!(r1, r1_again, "workspace reuse must not leak state");
+    }
+
+    #[test]
+    fn all_requests_of_one_expert_share_one_replica() {
+        // AEBS picks one replica per activated expert per layer — requests
+        // are never split across replicas (that would activate the expert
+        // on several instances and raise Σ a_g).
+        let mut rng = Rng::seed_from_u64(8);
+        let p = ExpertPlacement::round_robin(24, 6, 5);
+        let gate = GateSim::new(24, 3, &ExpertPopularity::Zipf { s: 1.3 }, &mut rng);
+        let batch = gate.sample_batch(&mut rng, 128);
+        let asg = assign(&batch, &p);
+        let mut chosen: Vec<Option<u32>> = vec![None; 24];
+        for (&e, &g) in batch.flat().iter().zip(asg.instance_of.iter()) {
+            match chosen[e as usize] {
+                None => chosen[e as usize] = Some(g),
+                Some(prev) => assert_eq!(prev, g, "expert {e} split across replicas"),
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch() {
+        let p = ExpertPlacement::contiguous(8, 2, 4);
+        let batch = RoutingBatch::zeroed(0, 2, 8);
+        let asg = assign(&batch, &p);
+        assert_eq!(asg.a_max, 0);
+        assert!(asg.instance_of.is_empty());
+    }
+}

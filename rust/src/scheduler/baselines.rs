@@ -1,0 +1,136 @@
+//! Baseline activation schedulers (§2.3, §5.1).
+//!
+//! - `token_balanced` — EPLB-style: spread *token counts* evenly across an
+//!   expert's replicas. Reduces token imbalance but does not minimize
+//!   a_max: splitting one expert's tokens across two replicas activates it
+//!   on both instances.
+//! - `random` — uniform random replica per request (MegaScale-Infer's
+//!   expert scheduling as modeled by the paper's evaluation).
+//! - `static_first` — always the first (lowest-id) replica; equivalent to
+//!   no replica redundancy (static expert parallelism).
+
+use crate::placement::ExpertPlacement;
+use crate::routing::RoutingBatch;
+use crate::util::rng::Rng;
+
+use super::assignment::Assignment;
+
+/// EPLB-like token balancing: per request, choose the hosting instance
+/// with the fewest tokens assigned so far (deterministic tie-break).
+pub fn token_balanced(batch: &RoutingBatch, placement: &ExpertPlacement) -> Assignment {
+    let n_e = placement.n_instances;
+    let mut token_so_far = vec![0u32; n_e];
+    let mut instance_of = Vec::with_capacity(batch.flat().len());
+    for &e in batch.flat() {
+        let hosts = placement.hosts(e);
+        let g = *hosts
+            .iter()
+            .min_by_key(|&&g| (token_so_far[g as usize], g))
+            .unwrap();
+        token_so_far[g as usize] += 1;
+        instance_of.push(g);
+    }
+    Assignment::finalize(instance_of, batch, n_e)
+}
+
+/// Uniform random replica choice per request.
+pub fn random(batch: &RoutingBatch, placement: &ExpertPlacement, rng: &mut Rng) -> Assignment {
+    let n_e = placement.n_instances;
+    let mut instance_of = Vec::with_capacity(batch.flat().len());
+    for &e in batch.flat() {
+        let hosts = placement.hosts(e);
+        instance_of.push(hosts[rng.usize_below(hosts.len())]);
+    }
+    Assignment::finalize(instance_of, batch, n_e)
+}
+
+/// First replica always (static expert-parallel routing).
+pub fn static_first(batch: &RoutingBatch, placement: &ExpertPlacement) -> Assignment {
+    let n_e = placement.n_instances;
+    let instance_of = batch
+        .flat()
+        .iter()
+        .map(|&e| placement.hosts(e)[0])
+        .collect();
+    Assignment::finalize(instance_of, batch, n_e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::gate::{ExpertPopularity, GateSim};
+    use crate::scheduler::aebs;
+    use crate::util::rng::Rng;
+
+    fn redundant_setup(seed: u64) -> (ExpertPlacement, RoutingBatch, Rng) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let placement = ExpertPlacement::round_robin(32, 8, 6); // 48 slots
+        let gate = GateSim::new(32, 4, &ExpertPopularity::Zipf { s: 1.0 }, &mut rng);
+        let batch = gate.sample_batch(&mut rng, 256);
+        (placement, batch, rng)
+    }
+
+    #[test]
+    fn token_balanced_flattens_token_loads() {
+        let (p, b, _) = redundant_setup(1);
+        let asg = token_balanced(&b, &p);
+        let max_t = *asg.token_loads.iter().max().unwrap();
+        let min_t = *asg.token_loads.iter().min().unwrap();
+        // Token counts should be tightly balanced under full redundancy...
+        assert!(max_t - min_t <= 160, "spread {max_t}-{min_t}");
+        // ...but it fragments experts across replicas.
+        let aebs_asg = aebs::assign(&b, &p);
+        assert!(
+            asg.loads.iter().sum::<u32>() >= aebs_asg.loads.iter().sum::<u32>(),
+            "token balancing should not reduce total activations below AEBS"
+        );
+    }
+
+    #[test]
+    fn aebs_beats_token_balancing_on_amax_with_redundancy() {
+        // The paper's central claim (Figs 13-14): token balancing leaves
+        // a_max high; AEBS reduces it. Averaged over draws to be robust.
+        let mut total_aebs = 0u64;
+        let mut total_tb = 0u64;
+        for seed in 0..20 {
+            let (p, b, _) = redundant_setup(seed);
+            total_aebs += aebs::assign(&b, &p).a_max as u64;
+            total_tb += token_balanced(&b, &p).a_max as u64;
+        }
+        assert!(
+            total_aebs < total_tb,
+            "AEBS {total_aebs} should beat token-balanced {total_tb}"
+        );
+    }
+
+    #[test]
+    fn random_is_valid_but_noisy() {
+        let (p, b, mut rng) = redundant_setup(3);
+        let asg = random(&b, &p, &mut rng);
+        asg.validate(&b, &p).unwrap();
+    }
+
+    #[test]
+    fn static_uses_first_replica_only() {
+        let (p, b, _) = redundant_setup(4);
+        let asg = static_first(&b, &p);
+        for (&e, &g) in b.flat().iter().zip(asg.instance_of.iter()) {
+            assert_eq!(g, p.hosts(e)[0]);
+        }
+    }
+
+    #[test]
+    fn without_redundancy_all_schedulers_agree() {
+        // Single-replica layout: there is no choice to make, so every
+        // scheduler must produce the same a_max.
+        let mut rng = Rng::seed_from_u64(5);
+        let p = ExpertPlacement::contiguous(32, 8, 4);
+        let gate = GateSim::new(32, 4, &ExpertPopularity::Uniform, &mut rng);
+        let b = gate.sample_batch(&mut rng, 128);
+        let a = aebs::assign(&b, &p).a_max;
+        let t = token_balanced(&b, &p).a_max;
+        let r = random(&b, &p, &mut rng).a_max;
+        let s = static_first(&b, &p).a_max;
+        assert!(a == t && t == r && r == s, "{a} {t} {r} {s}");
+    }
+}

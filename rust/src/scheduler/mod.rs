@@ -1,0 +1,105 @@
+//! Layer-wise activation scheduling (§3.4).
+//!
+//! Given a `RoutingBatch` (gate output) and an `ExpertPlacement`, a
+//! scheduler maps every (token, slot) activation request to a physical
+//! replica. The figure of merit is `a_max` — the maximum number of
+//! *distinct* activated experts on any MoE instance — which determines
+//! MoE-layer latency in the memory-bound online regime (§2.2, R2).
+//!
+//! Schedulers:
+//! - [`aebs`] — Janus's Activated-Expert-Balanced Scheduling (Algorithm 1).
+//! - [`baselines`] — EPLB-like token balancing, random replica choice,
+//!   and static first-replica routing.
+
+pub mod aebs;
+pub mod assignment;
+pub mod baselines;
+
+use crate::config::serving::SchedulerKind;
+use crate::placement::ExpertPlacement;
+use crate::routing::RoutingBatch;
+use crate::util::rng::Rng;
+
+pub use assignment::Assignment;
+
+/// Dispatch by configured policy. `rng` is only consumed by the Random
+/// scheduler; AEBS and token-balancing are deterministic (§3.4's
+/// synchronization-free property requires it).
+pub fn schedule(
+    kind: SchedulerKind,
+    batch: &RoutingBatch,
+    placement: &ExpertPlacement,
+    rng: &mut Rng,
+) -> Assignment {
+    match kind {
+        SchedulerKind::Aebs => aebs::assign(batch, placement),
+        SchedulerKind::TokenBalanced => baselines::token_balanced(batch, placement),
+        SchedulerKind::Random => baselines::random(batch, placement, rng),
+        SchedulerKind::Static => baselines::static_first(batch, placement),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::gate::{ExpertPopularity, GateSim};
+    use crate::testing::prop;
+
+    /// Property: every scheduler must produce a *valid* assignment —
+    /// each (token, slot) goes to an instance that actually hosts the
+    /// logical expert — and a_max must equal the recount from scratch.
+    #[test]
+    fn all_schedulers_produce_valid_assignments() {
+        prop::check("scheduler validity", 60, |rng| {
+            let experts = 8 + rng.usize_below(56);
+            let top_k = 1 + rng.usize_below(6.min(experts - 1));
+            let n_e = 2 + rng.usize_below(8);
+            let capacity = experts.div_ceil(n_e) + rng.usize_below(4);
+            let placement = ExpertPlacement::round_robin(experts, n_e, capacity);
+            let gate = GateSim::new(
+                experts,
+                top_k,
+                &ExpertPopularity::Zipf { s: rng.f64_range(0.0, 1.5) },
+                rng,
+            );
+            let tokens = 1 + rng.usize_below(256);
+            let batch = gate.sample_batch(rng, tokens);
+            for kind in [
+                SchedulerKind::Aebs,
+                SchedulerKind::TokenBalanced,
+                SchedulerKind::Random,
+                SchedulerKind::Static,
+            ] {
+                let asg = schedule(kind, &batch, &placement, rng);
+                asg.validate(&batch, &placement).unwrap_or_else(|e| {
+                    panic!("{}: {e}", kind.name());
+                });
+            }
+        });
+    }
+
+    /// Property: AEBS never does worse than Static on a_max (it has static
+    /// placement as a feasible choice), and is deterministic.
+    #[test]
+    fn aebs_dominates_static_and_is_deterministic() {
+        prop::check("aebs ≤ static a_max", 60, |rng| {
+            let experts = 16 + rng.usize_below(48);
+            let top_k = 2 + rng.usize_below(4);
+            let n_e = 4 + rng.usize_below(6);
+            let capacity = experts.div_ceil(n_e) + 1 + rng.usize_below(4);
+            let placement = ExpertPlacement::round_robin(experts, n_e, capacity);
+            let gate = GateSim::new(experts, top_k, &ExpertPopularity::Uniform, rng);
+            let batch = gate.sample_batch(rng, 64);
+            let a = aebs::assign(&batch, &placement);
+            let s = baselines::static_first(&batch, &placement);
+            assert!(
+                a.a_max <= s.a_max,
+                "AEBS a_max {} > static {}",
+                a.a_max,
+                s.a_max
+            );
+            let a2 = aebs::assign(&batch, &placement);
+            assert_eq!(a.instance_of, a2.instance_of, "AEBS must be deterministic");
+        });
+    }
+}

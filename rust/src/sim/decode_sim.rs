@@ -1,0 +1,102 @@
+//! Fixed-batch decode-loop evaluation.
+
+use crate::baselines::system::ServingSystem;
+use crate::config::serving::Slo;
+use crate::metrics::TpotStats;
+use crate::util::rng::Rng;
+
+/// Result of evaluating one system at one batch size.
+#[derive(Clone, Debug)]
+pub struct FixedBatchResult {
+    pub system: &'static str,
+    pub batch: usize,
+    pub config_label: String,
+    pub gpus: usize,
+    /// Whether the system found an SLO-feasible config at all.
+    pub feasible: bool,
+    pub tpot_mean: f64,
+    pub tpot_p99: f64,
+    /// Tokens/s/GPU at the measured mean TPOT.
+    pub tpg: f64,
+    /// Mean straggler activated-expert count across steps.
+    pub a_max_mean: f64,
+    pub slo_attainment: f64,
+}
+
+/// Run `steps` decode steps at a fixed total batch and report the
+/// distributional metrics the paper plots in Fig 8.
+pub fn evaluate_fixed_batch<S: ServingSystem + ?Sized>(
+    system: &mut S,
+    batch: usize,
+    slo: Slo,
+    steps: usize,
+    seed: u64,
+) -> FixedBatchResult {
+    let cfg = system.configure(batch, slo);
+    let feasible = cfg.is_some();
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut stats = TpotStats::new();
+    let mut a_sum = 0.0;
+    for _ in 0..steps {
+        let out = system.step(batch, &mut rng);
+        stats.push(out.tpot);
+        a_sum += out.a_max as f64;
+    }
+    let gpus = system.gpus();
+    let tpot_mean = stats.mean();
+    FixedBatchResult {
+        system: system.name(),
+        batch,
+        config_label: system.label(),
+        gpus,
+        feasible,
+        tpot_mean,
+        tpot_p99: stats.p99(),
+        tpg: batch as f64 / tpot_mean / gpus.max(1) as f64,
+        a_max_mean: a_sum / steps.max(1) as f64,
+        slo_attainment: stats.attainment(slo.tpot),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::JanusSystem;
+    use crate::config::hardware::paper_testbed;
+    use crate::config::models::deepseek_v2;
+    use crate::routing::gate::ExpertPopularity;
+
+    #[test]
+    fn janus_meets_slo_in_simulation() {
+        let mut sys = JanusSystem::build(
+            deepseek_v2(),
+            paper_testbed(),
+            &ExpertPopularity::Uniform,
+            16,
+            77,
+        );
+        let r = evaluate_fixed_batch(&mut sys, 64, Slo::from_ms(200.0), 50, 1);
+        assert!(r.feasible);
+        assert!(r.tpot_mean <= 0.2, "mean {}", r.tpot_mean);
+        assert!(r.slo_attainment > 0.95, "attainment {}", r.slo_attainment);
+        assert!(r.tpg > 0.0);
+        assert!(r.tpot_p99 >= r.tpot_mean);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let build = || {
+            JanusSystem::build(
+                deepseek_v2(),
+                paper_testbed(),
+                &ExpertPopularity::Uniform,
+                16,
+                78,
+            )
+        };
+        let r1 = evaluate_fixed_batch(&mut build(), 128, Slo::from_ms(200.0), 20, 5);
+        let r2 = evaluate_fixed_batch(&mut build(), 128, Slo::from_ms(200.0), 20, 5);
+        assert_eq!(r1.tpot_mean, r2.tpot_mean);
+        assert_eq!(r1.config_label, r2.config_label);
+    }
+}

@@ -1,0 +1,16 @@
+//! Discrete-event evaluation harness.
+//!
+//! - [`decode_sim`] — fixed-batch decode-loop evaluation (drives Figs
+//!   8/9/10/12): many decode steps with per-step routing draws, yielding
+//!   TPOT distributions (mean + P99) and per-GPU throughput.
+//! - [`autoscale_sim`] — trace-driven scaling over a diurnal trace with a
+//!   periodic decision interval (drives Fig 11), mirroring the paper's
+//!   trace-driven simulation methodology ("continuously running all
+//!   systems over the full trace would require substantial cluster
+//!   time" — §5.2).
+
+pub mod autoscale_sim;
+pub mod decode_sim;
+
+pub use autoscale_sim::{AutoscaleResult, AutoscaleSim};
+pub use decode_sim::{evaluate_fixed_batch, FixedBatchResult};

@@ -1,0 +1,6 @@
+//! Test support. `proptest` is unavailable in this offline build
+//! environment, so `prop` provides a small seeded property-test harness
+//! with the same spirit: generate many random cases, assert an invariant,
+//! and report the failing seed for reproduction.
+
+pub mod prop;

@@ -1,0 +1,87 @@
+//! Lightweight property-testing harness (offline substitute for proptest).
+//!
+//! Usage:
+//! ```rust,no_run
+//! use janus::testing::prop::check;
+//! check("sum is commutative", 100, |rng| {
+//!     let a = rng.usize_below(1000) as i64;
+//!     let b = rng.usize_below(1000) as i64;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//! On failure the panic message includes the per-case seed so the case can
+//! be replayed with `check_one`.
+
+use crate::util::rng::Rng;
+
+/// Base seed; override with `JANUS_PROP_SEED` to replay a failure sweep.
+fn base_seed() -> u64 {
+    std::env::var("JANUS_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x4A4E_5553) // "JNUS"
+}
+
+/// Run `cases` random cases of property `f`. Panics with the failing seed.
+pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(name: &str, cases: u64, f: F) {
+    let base = base_seed();
+    for i in 0..cases {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::seed_from_u64(seed);
+            f(&mut rng);
+        });
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {i} (seed {seed:#x}): {msg}\n\
+                 replay with janus::testing::prop::check_one({seed:#x}, ..)"
+            );
+        }
+    }
+}
+
+/// Replay a single case by seed.
+pub fn check_one<F: FnOnce(&mut Rng)>(seed: u64, f: F) {
+    let mut rng = Rng::seed_from_u64(seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("trivial", 50, |rng| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("always-fails", 3, |_rng| {
+                panic!("boom");
+            });
+        });
+        let err = r.expect_err("property should fail");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("seed"), "message was: {msg}");
+        assert!(msg.contains("boom"), "message was: {msg}");
+    }
+
+    #[test]
+    fn check_one_replays() {
+        let mut seen = 0u64;
+        check_one(42, |rng| seen = rng.next_u64());
+        let mut again = 0u64;
+        check_one(42, |rng| again = rng.next_u64());
+        assert_eq!(seen, again);
+    }
+}

@@ -1,0 +1,102 @@
+//! Minimal benchmarking harness (criterion is unavailable in this
+//! offline build environment — see DESIGN.md). Measures wall time over
+//! repeated runs with warmup, reporting mean/median/min per iteration.
+
+use std::time::Instant;
+
+/// One benchmark result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        let fmt = |ns: f64| -> String {
+            if ns >= 1e9 {
+                format!("{:.3} s", ns / 1e9)
+            } else if ns >= 1e6 {
+                format!("{:.3} ms", ns / 1e6)
+            } else if ns >= 1e3 {
+                format!("{:.3} us", ns / 1e3)
+            } else {
+                format!("{:.0} ns", ns)
+            }
+        };
+        println!(
+            "{:<52} {:>12}/iter  (median {:>12}, min {:>12}, {} iters)",
+            self.name,
+            fmt(self.mean_ns),
+            fmt(self.median_ns),
+            fmt(self.min_ns),
+            self.iters
+        );
+    }
+}
+
+/// Benchmark `f`, auto-scaling the iteration count to ~`target_ms` of
+/// total measurement time, in `samples` batches.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench_cfg(name, 300.0, 10, &mut f)
+}
+
+/// Configurable variant.
+pub fn bench_cfg<F: FnMut()>(
+    name: &str,
+    target_ms: f64,
+    samples: usize,
+    f: &mut F,
+) -> BenchResult {
+    // Warmup + calibration: how many iters fit in one sample budget?
+    let t0 = Instant::now();
+    let mut calib_iters = 0u64;
+    while t0.elapsed().as_secs_f64() < target_ms / 1e3 / samples as f64 {
+        f();
+        calib_iters += 1;
+        if calib_iters >= 1_000_000 {
+            break;
+        }
+    }
+    let per_sample = calib_iters.max(1);
+    let mut sample_ns: Vec<f64> = Vec::with_capacity(samples);
+    let mut total_iters = 0u64;
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..per_sample {
+            f();
+        }
+        sample_ns.push(t.elapsed().as_nanos() as f64 / per_sample as f64);
+        total_iters += per_sample;
+    }
+    sample_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = sample_ns.iter().sum::<f64>() / sample_ns.len() as f64;
+    let result = BenchResult {
+        name: name.to_string(),
+        iters: total_iters,
+        mean_ns: mean,
+        median_ns: sample_ns[sample_ns.len() / 2],
+        min_ns: sample_ns[0],
+    };
+    result.report();
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut x = 0u64;
+        let r = bench_cfg("spin", 5.0, 3, &mut || {
+            x = std::hint::black_box(x.wrapping_add(1));
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters > 0);
+        assert!(r.min_ns <= r.median_ns);
+    }
+}

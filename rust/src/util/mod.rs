@@ -1,0 +1,7 @@
+//! Shared utilities: deterministic RNG, statistics, CLI parsing, tables.
+
+pub mod bench;
+pub mod cli;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,94 @@
+//! Arrival processes (BurstGPT-like).
+//!
+//! BurstGPT shows that production LLM arrivals are burstier than Poisson:
+//! the arrival *rate* itself fluctuates. We model a doubly-stochastic
+//! (Cox) process — a Gamma-modulated Poisson — whose coefficient of
+//! variation exceeds 1, plus a plain Poisson baseline.
+
+use crate::util::rng::Rng;
+
+/// Per-interval request-count generator.
+pub trait ArrivalProcess {
+    /// Number of requests arriving in an interval of `dt` seconds given a
+    /// mean rate `rate` (req/s).
+    fn arrivals(&self, rng: &mut Rng, rate: f64, dt: f64) -> u64;
+}
+
+/// Plain Poisson arrivals.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Poisson;
+
+impl ArrivalProcess for Poisson {
+    fn arrivals(&self, rng: &mut Rng, rate: f64, dt: f64) -> u64 {
+        rng.poisson(rate * dt)
+    }
+}
+
+/// Gamma-modulated Poisson (BurstGPT-like burstiness): each interval's
+/// rate is Gamma(shape=1/cv², scale=rate·cv²) so E[rate] = rate and the
+/// rate's squared coefficient of variation is `cv2`.
+#[derive(Clone, Copy, Debug)]
+pub struct BurstyPoisson {
+    /// Squared coefficient of variation of the modulating rate (>0).
+    pub cv2: f64,
+}
+
+impl BurstyPoisson {
+    pub fn new(cv2: f64) -> Self {
+        assert!(cv2 > 0.0);
+        BurstyPoisson { cv2 }
+    }
+
+    /// Calibration loosely matched to BurstGPT's reported burstiness.
+    pub fn burstgpt_like() -> Self {
+        BurstyPoisson { cv2: 0.5 }
+    }
+}
+
+impl ArrivalProcess for BurstyPoisson {
+    fn arrivals(&self, rng: &mut Rng, rate: f64, dt: f64) -> u64 {
+        if rate <= 0.0 {
+            return 0;
+        }
+        let shape = 1.0 / self.cv2;
+        let modulated = rng.gamma(shape, rate * self.cv2);
+        rng.poisson(modulated * dt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn moments<P: ArrivalProcess>(p: &P, rate: f64, dt: f64, n: usize, seed: u64) -> (f64, f64) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let xs: Vec<f64> = (0..n).map(|_| p.arrivals(&mut rng, rate, dt) as f64).collect();
+        (stats::mean(&xs), stats::variance(&xs))
+    }
+
+    #[test]
+    fn poisson_mean_matches_rate() {
+        let (m, v) = moments(&Poisson, 50.0, 1.0, 20_000, 1);
+        assert!((m - 50.0).abs() < 0.5, "mean {m}");
+        assert!((v - 50.0).abs() / 50.0 < 0.1, "var {v}");
+    }
+
+    #[test]
+    fn bursty_is_overdispersed() {
+        // Cox process: Var = mean + mean²·cv² > mean.
+        let (m, v) = moments(&BurstyPoisson::new(0.5), 50.0, 1.0, 20_000, 2);
+        assert!((m - 50.0).abs() < 1.0, "mean {m}");
+        let expected_var = 50.0 + 50.0_f64.powi(2) * 0.5;
+        assert!(
+            (v - expected_var).abs() / expected_var < 0.15,
+            "var {v} vs {expected_var}"
+        );
+    }
+
+    #[test]
+    fn zero_rate_yields_zero() {
+        let mut rng = Rng::seed_from_u64(3);
+        assert_eq!(BurstyPoisson::new(0.5).arrivals(&mut rng, 0.0, 1.0), 0);
+    }
+}

@@ -1,0 +1,86 @@
+//! Request length model (ShareGPT-like).
+//!
+//! ShareGPT conversations have short prompts and long generations; the
+//! paper uses avg input 16 / avg output 256 tokens. We model lengths as
+//! log-normal (heavy-tailed, strictly positive) calibrated to those means,
+//! clamped to sane ranges.
+
+use crate::util::rng::Rng;
+
+/// Sampled request shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RequestLen {
+    pub input_tokens: u32,
+    pub output_tokens: u32,
+}
+
+/// Log-normal length sampler with configurable means.
+#[derive(Clone, Debug)]
+pub struct LengthModel {
+    mu_in: f64,
+    mu_out: f64,
+    sigma: f64,
+    pub max_input: u32,
+    pub max_output: u32,
+}
+
+impl LengthModel {
+    /// ShareGPT-like: avg in 16 / avg out 256 (paper §5.1).
+    pub fn sharegpt() -> Self {
+        Self::with_means(16.0, 256.0, 0.6)
+    }
+
+    /// Arbitrary means; sigma is the log-space spread.
+    /// For log-normal, mean = exp(mu + sigma²/2) ⇒ mu = ln(mean) − sigma²/2.
+    pub fn with_means(mean_in: f64, mean_out: f64, sigma: f64) -> Self {
+        LengthModel {
+            mu_in: mean_in.ln() - sigma * sigma / 2.0,
+            mu_out: mean_out.ln() - sigma * sigma / 2.0,
+            sigma,
+            max_input: 4096,
+            max_output: 4096,
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> RequestLen {
+        let input = rng.lognormal(self.mu_in, self.sigma).round().max(1.0) as u32;
+        let output = rng.lognormal(self.mu_out, self.sigma).round().max(1.0) as u32;
+        RequestLen {
+            input_tokens: input.min(self.max_input),
+            output_tokens: output.min(self.max_output),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sharegpt_means_match_paper() {
+        let m = LengthModel::sharegpt();
+        let mut rng = Rng::seed_from_u64(1);
+        let n = 50_000;
+        let (mut si, mut so) = (0.0, 0.0);
+        for _ in 0..n {
+            let r = m.sample(&mut rng);
+            si += r.input_tokens as f64;
+            so += r.output_tokens as f64;
+        }
+        let (mi, mo) = (si / n as f64, so / n as f64);
+        assert!((mi - 16.0).abs() < 1.5, "mean input {mi}");
+        assert!((mo - 256.0).abs() < 15.0, "mean output {mo}");
+    }
+
+    #[test]
+    fn lengths_positive_and_clamped() {
+        let mut m = LengthModel::with_means(1000.0, 4000.0, 1.5);
+        m.max_output = 2048;
+        let mut rng = Rng::seed_from_u64(2);
+        for _ in 0..10_000 {
+            let r = m.sample(&mut rng);
+            assert!(r.input_tokens >= 1);
+            assert!(r.output_tokens >= 1 && r.output_tokens <= 2048);
+        }
+    }
+}

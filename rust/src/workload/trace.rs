@@ -1,0 +1,223 @@
+//! Diurnal production-trace synthesis (Fig 4: one week, peaks ≈ 7.5× the
+//! trace-wide mean; Fig 11: 24-hour autoscaling trace).
+
+use crate::util::rng::Rng;
+
+use super::arrivals::{ArrivalProcess, BurstyPoisson};
+use super::lengths::{LengthModel, RequestLen};
+
+/// One synthesized request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Request {
+    /// Arrival time, seconds from trace start.
+    pub arrival: f64,
+    pub len: RequestLen,
+}
+
+/// Trace shape parameters.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Trace length in hours.
+    pub hours: f64,
+    /// Mean request rate over the whole trace (req/s).
+    pub mean_rate: f64,
+    /// Peak-to-mean ratio of the diurnal envelope (paper: ~7.5).
+    pub peak_to_mean: f64,
+    /// Short-term burstiness (Gamma cv²).
+    pub burst_cv2: f64,
+    /// Resolution of the rate envelope, seconds.
+    pub step: f64,
+    pub seed: u64,
+}
+
+impl TraceConfig {
+    /// Fig 4's one-week trace.
+    pub fn one_week() -> Self {
+        TraceConfig {
+            hours: 24.0 * 7.0,
+            mean_rate: 10.0,
+            peak_to_mean: 7.5,
+            burst_cv2: 0.3,
+            step: 60.0,
+            seed: 2025,
+        }
+    }
+
+    /// Fig 11's 24-hour autoscaling trace.
+    pub fn one_day() -> Self {
+        TraceConfig {
+            hours: 24.0,
+            mean_rate: 10.0,
+            peak_to_mean: 7.5,
+            burst_cv2: 0.3,
+            step: 60.0,
+            seed: 1111,
+        }
+    }
+}
+
+/// A synthesized diurnal trace: a rate envelope plus sampled requests.
+#[derive(Clone, Debug)]
+pub struct DiurnalTrace {
+    pub config: TraceConfig,
+    /// Rate envelope (req/s) per step.
+    pub envelope: Vec<f64>,
+}
+
+impl DiurnalTrace {
+    /// Build the envelope: a raised-cosine diurnal cycle shaped so that
+    /// peak/mean ≈ `peak_to_mean`, with mild day-to-day amplitude jitter.
+    ///
+    /// A raised cosine `1 + a·cos` has max/mean = 1 + a ≤ 2, so for higher
+    /// ratios we sharpen the day peak with an exponent: envelope ∝
+    /// ((1+cos)/2)^p, whose peak/mean ratio grows with p; p is solved
+    /// numerically.
+    pub fn generate(config: TraceConfig) -> Self {
+        let steps = (config.hours * 3600.0 / config.step).round() as usize;
+        let p = solve_sharpness(config.peak_to_mean);
+        let mut rng = Rng::seed_from_u64(config.seed);
+        // Day-level amplitude jitter (weekday/weekend variation).
+        let days = (config.hours / 24.0).ceil() as usize;
+        let day_scale: Vec<f64> = (0..days.max(1))
+            .map(|_| rng.f64_range(0.85, 1.15))
+            .collect();
+        let mut envelope = Vec::with_capacity(steps);
+        let mut sum = 0.0;
+        for i in 0..steps {
+            let t_hours = i as f64 * config.step / 3600.0;
+            let day = (t_hours / 24.0) as usize;
+            let phase = 2.0 * std::f64::consts::PI * (t_hours % 24.0) / 24.0;
+            // Peak at 14:00, trough at 02:00.
+            let base = (1.0 + (phase - 2.0 * std::f64::consts::PI * 14.0 / 24.0).cos()) / 2.0;
+            // A small constant floor keeps the overnight trough non-zero
+            // (production services never fully idle), preserving the
+            // target peak-to-mean ratio to first order.
+            let v = (0.03 + 0.97 * base.powf(p))
+                * day_scale[day.min(day_scale.len() - 1)];
+            sum += v;
+            envelope.push(v);
+        }
+        // Normalize to the requested mean rate.
+        let mean = sum / steps as f64;
+        for v in envelope.iter_mut() {
+            *v *= config.mean_rate / mean;
+        }
+        DiurnalTrace { config, envelope }
+    }
+
+    /// Peak-to-mean ratio of the envelope.
+    pub fn peak_to_mean(&self) -> f64 {
+        let mean: f64 =
+            self.envelope.iter().sum::<f64>() / self.envelope.len() as f64;
+        self.envelope.iter().cloned().fold(0.0, f64::max) / mean
+    }
+
+    /// Envelope rate at time t (seconds).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let i = ((t / self.config.step) as usize).min(self.envelope.len() - 1);
+        self.envelope[i]
+    }
+
+    /// Mean rate over [t0, t1] (the autoscaler's per-interval demand).
+    pub fn mean_rate_in(&self, t0: f64, t1: f64) -> f64 {
+        let i0 = ((t0 / self.config.step) as usize).min(self.envelope.len() - 1);
+        let i1 = ((t1 / self.config.step) as usize).clamp(i0 + 1, self.envelope.len());
+        self.envelope[i0..i1].iter().sum::<f64>() / (i1 - i0) as f64
+    }
+
+    /// Sample concrete requests over the whole trace.
+    pub fn sample_requests(&self, lengths: &LengthModel) -> Vec<Request> {
+        let mut rng = Rng::seed_from_u64(self.config.seed ^ 0xDEAD_BEEF);
+        let bursty = BurstyPoisson::new(self.config.burst_cv2);
+        let mut out = Vec::new();
+        for (i, &rate) in self.envelope.iter().enumerate() {
+            let t0 = i as f64 * self.config.step;
+            let n = bursty.arrivals(&mut rng, rate, self.config.step);
+            for _ in 0..n {
+                out.push(Request {
+                    arrival: t0 + rng.f64() * self.config.step,
+                    len: lengths.sample(&mut rng),
+                });
+            }
+        }
+        out.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        out
+    }
+}
+
+/// Solve for the cosine-sharpening exponent p with peak/mean(p) = target.
+/// peak/mean of ((1+cos x)/2)^p over a period has the closed form
+/// Γ(p+1)·Γ(1/2) / Γ(p + 1/2) ... we just bisect on a numeric integral.
+fn solve_sharpness(target: f64) -> f64 {
+    assert!(target >= 1.0);
+    let ratio = |p: f64| {
+        let n = 2048;
+        let mut sum = 0.0;
+        for i in 0..n {
+            let x = 2.0 * std::f64::consts::PI * i as f64 / n as f64;
+            sum += ((1.0 + x.cos()) / 2.0).powf(p);
+        }
+        let mean = sum / n as f64;
+        1.0 / mean // peak value is 1.0
+    };
+    let (mut lo, mut hi) = (0.0, 64.0);
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        if ratio(mid) < target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_week_peak_to_mean_near_7_5() {
+        let tr = DiurnalTrace::generate(TraceConfig::one_week());
+        let r = tr.peak_to_mean();
+        assert!((r - 7.5).abs() < 1.2, "peak/mean {r}");
+    }
+
+    #[test]
+    fn envelope_mean_matches_config() {
+        let tr = DiurnalTrace::generate(TraceConfig::one_day());
+        let mean: f64 = tr.envelope.iter().sum::<f64>() / tr.envelope.len() as f64;
+        assert!((mean - tr.config.mean_rate).abs() / tr.config.mean_rate < 1e-9);
+    }
+
+    #[test]
+    fn requests_sorted_and_plausible() {
+        let mut cfg = TraceConfig::one_day();
+        cfg.mean_rate = 2.0;
+        let tr = DiurnalTrace::generate(cfg);
+        let reqs = tr.sample_requests(&LengthModel::sharegpt());
+        assert!(!reqs.is_empty());
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        let expected = 2.0 * 24.0 * 3600.0;
+        let n = reqs.len() as f64;
+        assert!((n - expected).abs() / expected < 0.15, "count {n} vs {expected}");
+    }
+
+    #[test]
+    fn diurnal_structure_visible() {
+        // 14:00 rate should far exceed 02:00 rate.
+        let tr = DiurnalTrace::generate(TraceConfig::one_day());
+        let afternoon = tr.rate_at(14.0 * 3600.0);
+        let night = tr.rate_at(2.0 * 3600.0);
+        assert!(afternoon > 5.0 * (night + 1e-9), "{afternoon} vs {night}");
+    }
+
+    #[test]
+    fn mean_rate_in_interval() {
+        let tr = DiurnalTrace::generate(TraceConfig::one_day());
+        let m = tr.mean_rate_in(13.0 * 3600.0, 15.0 * 3600.0);
+        assert!(m > tr.config.mean_rate, "afternoon window above mean");
+    }
+}

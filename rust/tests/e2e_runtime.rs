@@ -1,0 +1,97 @@
+//! Integration tests over the real PJRT runtime + coordinator (require
+//! `make artifacts`; skip gracefully otherwise).
+
+use janus::config::hardware::paper_testbed;
+use janus::coordinator::Leader;
+use janus::placement::ExpertPlacement;
+use janus::runtime::artifacts::ArtifactBundle;
+
+fn bundle() -> Option<ArtifactBundle> {
+    let dir = ArtifactBundle::default_dir();
+    if !dir.join("meta.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(ArtifactBundle::load(&dir).unwrap())
+}
+
+/// Greedy decode produces identical token streams across MoE pool sizes
+/// 1/2/3 — the disaggregation-transparency invariant at system level.
+#[test]
+fn pool_size_transparency_full_sweep() {
+    let Some(b0) = bundle() else { return };
+    let experts = b0.meta.experts;
+    let mut outputs = Vec::new();
+    for n_moe in [1usize, 2, 3] {
+        let bundle = ArtifactBundle::load(&b0.dir).unwrap();
+        let cap = experts.div_ceil(n_moe) + 1;
+        let placement = ExpertPlacement::round_robin(experts, n_moe, cap);
+        let mut leader = Leader::new(bundle, &placement, &paper_testbed()).unwrap();
+        leader.queue.submit(vec![3, 141, 59], 6);
+        leader.queue.submit(vec![265], 6);
+        leader.queue.submit(vec![271, 828], 6);
+        let r = leader.serve(64).unwrap();
+        assert_eq!(r.completed_requests, 3);
+        let mut c = r.completions.clone();
+        c.sort_by_key(|(id, _)| *id);
+        outputs.push(c);
+    }
+    assert_eq!(outputs[0], outputs[1]);
+    assert_eq!(outputs[1], outputs[2]);
+}
+
+/// Continuous batching: more requests than slots — later requests admit
+/// as earlier ones finish, and everything completes.
+#[test]
+fn continuous_batching_oversubscribed() {
+    let Some(b) = bundle() else { return };
+    let experts = b.meta.experts;
+    let slots = b.meta.batch_tokens;
+    let placement = ExpertPlacement::round_robin(experts, 2, experts / 2 + 1);
+    let mut leader = Leader::new(b, &placement, &paper_testbed()).unwrap();
+    let n = slots * 2 + 3;
+    for i in 0..n {
+        leader.queue.submit(vec![(i % 400) as i32 + 1], 3);
+    }
+    let r = leader.serve(500).unwrap();
+    assert_eq!(r.completed_requests, n);
+    assert_eq!(r.generated_tokens, n * 3);
+    assert!(leader.queue.is_empty());
+}
+
+/// Long generation exercises KV growth up to the context limit without
+/// corruption (lengths clamp at max_ctx - 1).
+#[test]
+fn long_generation_within_context() {
+    let Some(b) = bundle() else { return };
+    let experts = b.meta.experts;
+    let max_new = b.meta.max_ctx - 4;
+    let placement = ExpertPlacement::round_robin(experts, 2, experts / 2 + 1);
+    let mut leader = Leader::new(b, &placement, &paper_testbed()).unwrap();
+    leader.queue.submit(vec![7, 8, 9], max_new);
+    let r = leader.serve(200).unwrap();
+    assert_eq!(r.completed_requests, 1);
+    assert_eq!(r.completions[0].1.len(), max_new);
+}
+
+/// Mixed prompt lengths in one batch (ragged prefill through the decode
+/// path) all complete with the right output counts.
+#[test]
+fn ragged_prompts_complete() {
+    let Some(b) = bundle() else { return };
+    let experts = b.meta.experts;
+    let placement = ExpertPlacement::round_robin(experts, 3, experts / 3 + 2);
+    let mut leader = Leader::new(b, &placement, &paper_testbed()).unwrap();
+    let specs = [(1usize, 2usize), (5, 4), (2, 7), (9, 1)];
+    for (plen, out) in specs {
+        let prompt: Vec<i32> = (1..=plen as i32).collect();
+        leader.queue.submit(prompt, out);
+    }
+    let r = leader.serve(200).unwrap();
+    assert_eq!(r.completed_requests, specs.len());
+    let mut c = r.completions.clone();
+    c.sort_by_key(|(id, _)| *id);
+    for ((_, toks), (_, out)) in c.iter().zip(specs.iter()) {
+        assert_eq!(toks.len(), *out);
+    }
+}

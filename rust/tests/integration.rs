@@ -1,0 +1,243 @@
+//! Cross-module integration tests: the full policy pipeline (trace →
+//! placement → scheduling → performance model → scaling), system-level
+//! invariants, and failure injection.
+
+use janus::baselines::{JanusSystem, MegaScaleInfer, ServingSystem, SgLang, XDeepServe};
+use janus::config::hardware::paper_testbed;
+use janus::config::models;
+use janus::config::serving::{self, SchedulerKind, Slo};
+use janus::placement::{allocate_replicas, place_replicas, ExpertPlacement};
+use janus::routing::coactivation::CoactivationStats;
+use janus::routing::gate::{ExpertPopularity, GateSim};
+use janus::routing::trace::ActivationTrace;
+use janus::scaling::{amax_bound, AmaxTable, Scaler};
+use janus::scheduler::{self, aebs};
+use janus::sim::autoscale_sim::AutoscaleSim;
+use janus::sim::decode_sim::evaluate_fixed_batch;
+use janus::testing::prop;
+use janus::util::rng::Rng;
+use janus::workload::trace::{DiurnalTrace, TraceConfig};
+
+/// The full §3.5 pipeline end to end: synthetic trace → replica counts →
+/// Algorithm 3 placement → AEBS scheduling → a_max beats every baseline
+/// scheduler on average.
+#[test]
+fn pipeline_trace_to_scheduling_beats_baselines() {
+    let mut rng = Rng::seed_from_u64(1);
+    let model = models::deepseek_v2();
+    let gate = GateSim::new(
+        model.experts,
+        model.top_k,
+        &ExpertPopularity::Zipf { s: 0.6 },
+        &mut rng,
+    );
+    let mut trace = ActivationTrace::new(model.experts, model.top_k, 8192);
+    trace.record_batch(&gate.sample_batch(&mut rng, 8192));
+    let counts = trace.expert_counts();
+    let coact = CoactivationStats::from_trace(&trace, 64);
+    let (n_e, cap) = (12, 27);
+    let replicas = allocate_replicas(&counts, n_e, cap);
+    let placement = place_replicas(&replicas, &counts, &coact, n_e, cap);
+    placement.validate().unwrap();
+
+    let mut ws = aebs::Workspace::new(model.experts, n_e);
+    let (mut a_aebs, mut a_tb, mut a_rand) = (0u64, 0u64, 0u64);
+    for _ in 0..40 {
+        let b = gate.sample_batch(&mut rng, 256);
+        a_aebs += aebs::a_max_only(&mut ws, &b, &placement) as u64;
+        a_tb += scheduler::baselines::token_balanced(&b, &placement).a_max as u64;
+        a_rand += scheduler::baselines::random(&b, &placement, &mut rng).a_max as u64;
+    }
+    assert!(a_aebs < a_tb, "AEBS {a_aebs} vs token-balanced {a_tb}");
+    assert!(a_aebs < a_rand, "AEBS {a_aebs} vs random {a_rand}");
+}
+
+/// Property: over random workloads and MoE-side sizes, the analytic bound
+/// (Eq. 5) dominates the Monte-Carlo estimate at every grid point — the
+/// Fig 17 invariant, exercised across model shapes.
+#[test]
+fn bound_dominates_mc_across_shapes() {
+    prop::check("bound >= MC", 10, |rng| {
+        let experts = 64 + rng.usize_below(3) * 48; // 64/112/160
+        let top_k = 2 + rng.usize_below(5);
+        let skew = rng.f64_range(0.0, 1.0);
+        let gate = GateSim::new(experts, top_k, &ExpertPopularity::Zipf { s: skew }, rng);
+        let mut trace = ActivationTrace::new(experts, top_k, 4096);
+        trace.record_batch(&gate.sample_batch(rng, 4096));
+        let capacity = experts / 6 + 2;
+        let n_e = experts.div_ceil(capacity) + rng.usize_below(4);
+        let grid = [8usize, 64, 256];
+        let table = AmaxTable::build(
+            &trace,
+            &[n_e],
+            &grid,
+            capacity,
+            SchedulerKind::Aebs,
+            6,
+            rng,
+        );
+        let probs = gate.activation_probs();
+        let placement = table.placement_for(n_e).unwrap();
+        for &b in &grid {
+            let mc = table.lookup(n_e, b as f64);
+            let bd = amax_bound(&probs, placement, b as f64);
+            assert!(bd + 1e-9 >= mc, "n_e={n_e} B={b}: bound {bd} < MC {mc}");
+        }
+    });
+}
+
+/// All four systems produce valid, SLO-meeting-or-flagged evaluations at
+/// every batch size, and Janus never violates.
+#[test]
+fn four_system_comparison_is_well_formed() {
+    let model = models::deepseek_v2();
+    let hw = paper_testbed();
+    let pop = ExpertPopularity::Uniform;
+    let slo = Slo::from_ms(200.0);
+    let mut janus = JanusSystem::build(model.clone(), hw.clone(), &pop, 16, 1);
+    let mut sgl = SgLang::build(model.clone(), hw.clone(), &pop, 2);
+    let mut msi = MegaScaleInfer::build(model.clone(), hw.clone(), &pop, 16, 3);
+    let mut xds = XDeepServe::build(model, hw, &pop, 32, 4);
+    for batch in [64usize, 256, 1024] {
+        let systems: Vec<&mut dyn ServingSystem> =
+            vec![&mut janus, &mut sgl, &mut msi, &mut xds];
+        for sys in systems {
+            let r = evaluate_fixed_batch(sys, batch, slo, 10, 5);
+            assert!(r.tpot_mean > 0.0, "{}: zero TPOT", r.system);
+            assert!(r.gpus > 0, "{}: no GPUs", r.system);
+            assert!(r.tpot_p99 >= r.tpot_mean * 0.999);
+            if r.system == "Janus" {
+                assert!(r.feasible, "Janus must find a config at B={batch}");
+                assert!(
+                    r.slo_attainment > 0.99,
+                    "Janus attainment {} at B={batch}",
+                    r.slo_attainment
+                );
+            }
+        }
+    }
+}
+
+/// Autoscaling over a compressed trace: Janus tracks demand with finer
+/// steps than SGLang's tiers and never exceeds the pool.
+#[test]
+fn autoscale_tracks_demand_within_pool() {
+    // Full day at hourly decisions (the trace's first hours sit in the
+    // overnight trough; the 14:00 peak is what forces scale-up).
+    let mut cfg = TraceConfig::one_day();
+    cfg.mean_rate = 30.0;
+    let trace = DiurnalTrace::generate(cfg);
+    let sim = AutoscaleSim::new(3600.0, 256.0, Slo::from_ms(200.0));
+    let hw = janus::config::hardware::autoscale_pool();
+    let mut janus = JanusSystem::build(
+        models::deepseek_v2(),
+        hw,
+        &ExpertPopularity::Uniform,
+        32,
+        9,
+    );
+    let r = sim.run(&mut janus, &trace);
+    assert!(r.max_gpus <= 64);
+    assert!(r.min_gpus >= 7);
+    // Distinct GPU counts across intervals — fine-grained steps, not tiers.
+    let mut counts: Vec<usize> = r.intervals.iter().map(|i| i.gpus).collect();
+    counts.sort_unstable();
+    counts.dedup();
+    assert!(counts.len() >= 2, "Janus should use multiple configurations");
+}
+
+/// Failure injection: scaler behaviour at impossible demands, degenerate
+/// SLOs, and capacity edges.
+#[test]
+fn scaler_failure_modes() {
+    let model = models::deepseek_v2();
+    let hw = paper_testbed();
+    let capacity = serving::default_capacity(&model, &hw);
+    let mut rng = Rng::seed_from_u64(10);
+    let gate = GateSim::new(model.experts, model.top_k, &ExpertPopularity::Uniform, &mut rng);
+    let mut trace = ActivationTrace::new(model.experts, model.top_k, 4096);
+    trace.record_batch(&gate.sample_batch(&mut rng, 4096));
+    let n_e_min = model.experts.div_ceil(capacity);
+    let n_e_values: Vec<usize> = (n_e_min..=12).collect();
+    let amax = AmaxTable::build(
+        &trace,
+        &n_e_values,
+        &AmaxTable::default_grid(2048),
+        capacity,
+        SchedulerKind::Aebs,
+        4,
+        &mut rng,
+    );
+    let scaler = Scaler::new(model, hw, amax, 12);
+    // Impossible demand.
+    assert!(scaler.optimize(1e12, Slo::from_ms(200.0), 512.0).is_none());
+    // Impossible SLO (1 µs).
+    assert!(scaler
+        .optimize(1000.0, Slo { tpot: 1e-6 }, 512.0)
+        .is_none());
+    // Tiny demand still seats all experts (n_e ≥ n_e_min).
+    let plan = scaler.optimize(1.0, Slo::from_ms(500.0), 512.0).unwrap();
+    assert!(plan.deployment.n_moe >= scaler.n_e_min());
+    // Very long contexts shrink feasibility but must not panic.
+    let _ = scaler.optimize(1000.0, Slo::from_ms(200.0), 100_000.0);
+}
+
+/// Placement stress: random replica-count vectors always yield valid
+/// layouts through Algorithm 3, even at exact-fit capacity.
+#[test]
+fn placement_fuzz_always_valid() {
+    prop::check("algorithm3 validity", 25, |rng| {
+        let experts = 16 + rng.usize_below(64);
+        let n_e = 4 + rng.usize_below(8);
+        let capacity = experts.div_ceil(n_e) + rng.usize_below(3);
+        let slots = n_e * capacity;
+        let counts: Vec<u64> = (0..experts).map(|_| rng.next_u64() % 1000).collect();
+        if slots < experts {
+            return;
+        }
+        let replicas = allocate_replicas(&counts, n_e, capacity);
+        let gate = GateSim::new(experts, 2.min(experts), &ExpertPopularity::Uniform, rng);
+        let mut trace = ActivationTrace::new(experts, 2.min(experts), 1024);
+        trace.record_batch(&gate.sample_batch(rng, 1024));
+        let coact = CoactivationStats::from_trace(&trace, 32);
+        let placement = place_replicas(&replicas, &counts, &coact, n_e, capacity);
+        placement.validate().unwrap();
+        for e in 0..experts {
+            assert_eq!(placement.replica_count(e as u16), replicas[e]);
+        }
+    });
+}
+
+/// Determinism: the whole evaluation pipeline is reproducible bit-for-bit
+/// from the seed (the property the synchronization-free AEBS requires and
+/// the experiments rely on).
+#[test]
+fn end_to_end_determinism() {
+    let run = || {
+        let mut sys = JanusSystem::build(
+            models::deepseek_v2(),
+            paper_testbed(),
+            &ExpertPopularity::Zipf { s: 0.4 },
+            16,
+            123,
+        );
+        let r = evaluate_fixed_batch(&mut sys, 256, Slo::from_ms(200.0), 20, 99);
+        (r.config_label, r.tpot_mean.to_bits(), r.tpg.to_bits())
+    };
+    assert_eq!(run(), run());
+}
+
+/// Static expert parallelism (no redundancy) leaves no scheduling choice:
+/// AEBS degenerates gracefully and still matches baselines exactly.
+#[test]
+fn no_redundancy_degenerate_case() {
+    let mut rng = Rng::seed_from_u64(17);
+    let placement = ExpertPlacement::contiguous(160, 8, 20);
+    let gate = GateSim::new(160, 6, &ExpertPopularity::Uniform, &mut rng);
+    for _ in 0..10 {
+        let b = gate.sample_batch(&mut rng, 128);
+        let a1 = aebs::assign(&b, &placement);
+        let a2 = scheduler::baselines::static_first(&b, &placement);
+        assert_eq!(a1.instance_of, a2.instance_of);
+    }
+}
