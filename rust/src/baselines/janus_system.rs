@@ -20,6 +20,9 @@ pub struct JanusSystem {
     placement: Option<ExpertPlacement>,
     ws: aebs::Workspace,
     s_ctx: f64,
+    /// Full per-side instance budget; `scaler.n_max` shrinks below this
+    /// while GPUs are failed (see `fail_gpus`/`restore_gpus`).
+    base_n_max: usize,
 }
 
 impl JanusSystem {
@@ -57,6 +60,7 @@ impl JanusSystem {
             placement: None,
             ws,
             s_ctx: 512.0,
+            base_n_max: n_max,
         }
     }
 
@@ -72,6 +76,44 @@ impl JanusSystem {
     pub fn deployment(&self) -> Option<Deployment> {
         self.deployment
     }
+
+    /// Best-effort deployment when no candidate meets the SLO: the
+    /// largest layout the surviving pool can host (lowest â_max); when
+    /// even one replica of every expert no longer fits the pool, the
+    /// smallest seatable layout — the caller reports infeasibility
+    /// either way, matching how the paper reports violations rather
+    /// than dropping points.
+    fn fallback_deployment(&self) -> Deployment {
+        let n_max = self.scaler.n_max.max(1);
+        let n_e = self
+            .scaler
+            .amax
+            .n_e_values
+            .iter()
+            .copied()
+            .filter(|&n| n <= n_max)
+            .max()
+            .unwrap_or_else(|| {
+                self.scaler
+                    .amax
+                    .n_e_values
+                    .iter()
+                    .copied()
+                    .min()
+                    .expect("â_max table has at least one candidate")
+            });
+        Deployment::new(n_max, n_e)
+    }
+
+    /// Apply the fallback only when nothing is deployed yet; with a live
+    /// deployment the system keeps running it (and violates), which is
+    /// also what keeps trace replays identical to the pre-engine runs.
+    fn ensure_deployed(&mut self) {
+        if self.deployment.is_none() {
+            let d = self.fallback_deployment();
+            self.apply(d);
+        }
+    }
 }
 
 impl ServingSystem for JanusSystem {
@@ -80,23 +122,35 @@ impl ServingSystem for JanusSystem {
     }
 
     fn configure(&mut self, batch: usize, slo: Slo) -> Option<ConfigInfo> {
-        let plan = self
-            .scaler
-            .optimize_fixed_batch(batch as f64, slo, self.s_ctx)?;
-        self.apply(plan.deployment);
-        Some(ConfigInfo {
-            label: plan.deployment.label(),
-            gpus: plan.deployment.total_gpus(),
-        })
+        match self.scaler.optimize_fixed_batch(batch as f64, slo, self.s_ctx) {
+            Some(plan) => {
+                self.apply(plan.deployment);
+                Some(ConfigInfo {
+                    label: plan.deployment.label(),
+                    gpus: plan.deployment.total_gpus(),
+                })
+            }
+            None => {
+                self.ensure_deployed();
+                None
+            }
+        }
     }
 
     fn configure_for_demand(&mut self, lambda: f64, slo: Slo) -> Option<ConfigInfo> {
-        let plan = self.scaler.optimize(lambda, slo, self.s_ctx)?;
-        self.apply(plan.deployment);
-        Some(ConfigInfo {
-            label: plan.deployment.label(),
-            gpus: plan.deployment.total_gpus(),
-        })
+        match self.scaler.optimize(lambda, slo, self.s_ctx) {
+            Some(plan) => {
+                self.apply(plan.deployment);
+                Some(ConfigInfo {
+                    label: plan.deployment.label(),
+                    gpus: plan.deployment.total_gpus(),
+                })
+            }
+            None => {
+                self.ensure_deployed();
+                None
+            }
+        }
     }
 
     fn step(&mut self, batch: usize, rng: &mut Rng) -> StepOutcome {
@@ -125,6 +179,32 @@ impl ServingSystem for JanusSystem {
         self.deployment
             .map(|d| d.label())
             .unwrap_or_else(|| "-".to_string())
+    }
+
+    fn fail_gpus(&mut self, gpus: usize) {
+        self.scaler.n_max = self.scaler.n_max.saturating_sub(gpus);
+    }
+
+    fn restore_gpus(&mut self, gpus: usize) {
+        self.scaler.n_max = (self.scaler.n_max + gpus).min(self.base_n_max);
+    }
+
+    fn reconfigure_for_pool(&mut self, lambda: f64, slo: Slo) -> Option<ConfigInfo> {
+        // Re-placement: drop the dead deployment, rebuild on the
+        // surviving pool (a different n_e selects a different replica
+        // placement from the â_max table), and fall back to the best
+        // seatable layout when the survivors cannot meet the SLO.
+        self.deployment = None;
+        self.placement = None;
+        let cfg = self.scaler.optimize(lambda, slo, self.s_ctx).map(|plan| {
+            self.apply(plan.deployment);
+            ConfigInfo {
+                label: plan.deployment.label(),
+                gpus: plan.deployment.total_gpus(),
+            }
+        });
+        self.ensure_deployed();
+        cfg
     }
 }
 
@@ -164,5 +244,29 @@ mod tests {
             .configure_for_demand(2000.0, Slo::from_ms(200.0))
             .expect("feasible");
         assert!(cfg.gpus > 0);
+    }
+
+    #[test]
+    fn pool_failure_shrinks_and_restores() {
+        let mut sys = JanusSystem::build(
+            deepseek_v2(),
+            paper_testbed(),
+            &ExpertPopularity::Uniform,
+            16,
+            44,
+        );
+        let slo = Slo::from_ms(200.0);
+        assert!(sys.reconfigure_for_pool(2000.0, slo).is_some());
+        // 4 instances per side left: cannot seat 160 experts (n_e_min = 6).
+        sys.fail_gpus(12);
+        assert!(
+            sys.reconfigure_for_pool(2000.0, slo).is_none(),
+            "4-instance pool cannot seat every expert"
+        );
+        assert!(sys.gpus() > 0, "emergency layout still serves");
+        let mut rng = Rng::seed_from_u64(1);
+        assert!(sys.step(64, &mut rng).tpot > 0.0, "degraded step must not panic");
+        sys.restore_gpus(12);
+        assert!(sys.reconfigure_for_pool(2000.0, slo).is_some());
     }
 }

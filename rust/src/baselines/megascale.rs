@@ -36,6 +36,9 @@ pub struct MegaScaleInfer {
     deployment: Option<Deployment>,
     placement: Option<ExpertPlacement>,
     n_max: usize,
+    /// Full per-side budget; `n_max` shrinks below this while GPUs are
+    /// failed (see `fail_gpus`/`restore_gpus`).
+    base_n_max: usize,
     capacity: usize,
     s_ctx: f64,
     hw: HardwareProfile,
@@ -82,10 +85,20 @@ impl MegaScaleInfer {
             deployment: None,
             placement: None,
             n_max,
+            base_n_max: n_max,
             capacity,
             s_ctx: 512.0,
             hw,
         }
+    }
+
+    /// Largest balanced-ish layout the surviving pool can host; the
+    /// â_max table's candidates are contiguous (n_e_min..=base_n_max),
+    /// so the clamped n_e always has a placement.
+    fn fallback_deployment(&self) -> Deployment {
+        let lo = *self.amax.n_e_values.first().expect("candidates");
+        let hi = *self.amax.n_e_values.last().expect("candidates");
+        Deployment::new((self.n_max / 2).max(1), self.n_max.clamp(lo, hi))
     }
 
     fn n_e_min(&self) -> usize {
@@ -179,9 +192,9 @@ impl ServingSystem for MegaScaleInfer {
                 })
             }
             None => {
-                // Fall back to the largest balanced configuration; report
-                // violation by returning None.
-                let d = Deployment::new(self.n_max / 2, self.n_max);
+                // Fall back to the largest balanced configuration the
+                // pool can host; report violation by returning None.
+                let d = self.fallback_deployment();
                 self.apply(d);
                 None
             }
@@ -232,9 +245,17 @@ impl ServingSystem for MegaScaleInfer {
                 });
             }
         }
-        let d = Deployment::new(self.n_max / 2, self.n_max);
+        let d = self.fallback_deployment();
         self.apply(d);
         None
+    }
+
+    fn fail_gpus(&mut self, gpus: usize) {
+        self.n_max = self.n_max.saturating_sub(gpus);
+    }
+
+    fn restore_gpus(&mut self, gpus: usize) {
+        self.n_max = (self.n_max + gpus).min(self.base_n_max);
     }
 
     fn step(&mut self, batch: usize, rng: &mut Rng) -> StepOutcome {

@@ -38,6 +38,10 @@ pub struct SgLang {
     /// Static expert partition for the current tier.
     placement: Option<ExpertPlacement>,
     gpus: usize,
+    /// Healthy GPUs in the replication pool (failure injection caps the
+    /// usable tiers; the smallest tier always stays available — a
+    /// monolithic replica cannot shrink below one full model).
+    pool_gpus: usize,
     s_ctx: f64,
 }
 
@@ -63,8 +67,21 @@ impl SgLang {
             gate,
             placement: None,
             gpus: 0,
+            pool_gpus: *TIERS.last().unwrap(),
             s_ctx: 512.0,
         }
+    }
+
+    /// Tiers the surviving pool can still host. Empty when the pool is
+    /// smaller than one full replica — the configure paths then run the
+    /// smallest tier as an emergency layout but report infeasibility
+    /// (the same convention the disaggregated systems use).
+    fn usable_tiers(&self) -> Vec<usize> {
+        TIERS
+            .iter()
+            .copied()
+            .filter(|&t| t <= self.pool_gpus)
+            .collect()
     }
 
     /// TPOT model for a tier at batch B: TP attention within a node, DP
@@ -142,7 +159,13 @@ impl ServingSystem for SgLang {
 
     fn configure(&mut self, batch: usize, slo: Slo) -> Option<ConfigInfo> {
         let mut rng = Rng::seed_from_u64(7);
-        for &tier in TIERS.iter() {
+        let tiers = self.usable_tiers();
+        if tiers.is_empty() {
+            self.placement = None;
+            self.gpus = TIERS[0];
+            return None;
+        }
+        for &tier in tiers.iter() {
             self.placement = None;
             if (batch as f64) > self.tier_b_max(tier) {
                 continue; // KV would not fit beside the weights
@@ -156,15 +179,21 @@ impl ServingSystem for SgLang {
                 });
             }
         }
-        // Nothing fits: run the largest tier (and violate).
+        // Nothing fits: run the largest usable tier (and violate).
         self.placement = None;
-        self.gpus = *TIERS.last().unwrap();
+        self.gpus = *tiers.last().unwrap();
         None
     }
 
     fn configure_for_demand(&mut self, lambda: f64, slo: Slo) -> Option<ConfigInfo> {
         let mut rng = Rng::seed_from_u64(11);
-        for &tier in TIERS.iter() {
+        let tiers = self.usable_tiers();
+        if tiers.is_empty() {
+            self.placement = None;
+            self.gpus = TIERS[0];
+            return None;
+        }
+        for &tier in tiers.iter() {
             self.placement = None;
             // Solve the steady-state batch for this tier, then check SLO.
             let b_max = self.tier_b_max(tier);
@@ -197,8 +226,16 @@ impl ServingSystem for SgLang {
                 });
             }
         }
-        self.gpus = *TIERS.last().unwrap();
+        self.gpus = *tiers.last().unwrap();
         None
+    }
+
+    fn fail_gpus(&mut self, gpus: usize) {
+        self.pool_gpus = self.pool_gpus.saturating_sub(gpus);
+    }
+
+    fn restore_gpus(&mut self, gpus: usize) {
+        self.pool_gpus = (self.pool_gpus + gpus).min(*TIERS.last().unwrap());
     }
 
     fn step(&mut self, batch: usize, rng: &mut Rng) -> StepOutcome {

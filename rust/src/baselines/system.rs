@@ -47,4 +47,23 @@ pub trait ServingSystem {
 
     /// Current configuration label.
     fn label(&self) -> String;
+
+    /// Failure injection: remove `gpus` GPUs from the pool the system may
+    /// configure over (for disaggregated systems this shrinks the
+    /// per-side instance budget). The running deployment is untouched
+    /// until the next (re)configuration. Default: failures not modeled.
+    fn fail_gpus(&mut self, _gpus: usize) {}
+
+    /// Restore `gpus` previously failed GPUs, saturating at the full
+    /// pool. Default: failures not modeled.
+    fn restore_gpus(&mut self, _gpus: usize) {}
+
+    /// Re-place after a pool change (failure or recovery): drop the
+    /// current deployment and reconfigure from scratch on the surviving
+    /// pool for demand `lambda`. Returns None when no configuration on
+    /// the survivors meets the SLO — the system still lands on a
+    /// best-effort deployment so the decode loop keeps serving.
+    fn reconfigure_for_pool(&mut self, lambda: f64, slo: Slo) -> Option<ConfigInfo> {
+        self.configure_for_demand(lambda, slo)
+    }
 }

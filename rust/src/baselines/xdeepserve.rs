@@ -33,6 +33,10 @@ pub struct XDeepServe {
     deployment: Option<Deployment>,
     placement: Option<ExpertPlacement>,
     max_units: usize,
+    /// GPUs currently failed (failure injection); shrinks the usable
+    /// unit count, floored at `min_units` (xDeepServe cannot re-place
+    /// below one replica of every expert).
+    failed_gpus: usize,
     capacity: usize,
     s_ctx: f64,
 }
@@ -74,9 +78,25 @@ impl XDeepServe {
             deployment: None,
             placement: None,
             max_units,
+            failed_gpus: 0,
             capacity,
             s_ctx: 512.0,
         }
+    }
+
+    /// Units usable on the surviving pool (never below `min_units` — the
+    /// emergency layout keeps serving, but `pool_degraded` makes the
+    /// configure paths report such decisions infeasible).
+    fn usable_units(&self) -> usize {
+        let lost = self.failed_gpus.div_ceil(UNIT_ATTN + UNIT_MOE);
+        self.max_units.saturating_sub(lost).max(self.min_units())
+    }
+
+    /// True when the survivors cannot host even the minimum layout, so
+    /// any "feasible" configuration would run on phantom hardware.
+    fn pool_degraded(&self) -> bool {
+        let lost = self.failed_gpus.div_ceil(UNIT_ATTN + UNIT_MOE);
+        self.max_units.saturating_sub(lost) < self.min_units()
     }
 
     fn min_units(&self) -> usize {
@@ -110,8 +130,13 @@ impl ServingSystem for XDeepServe {
     }
 
     fn configure(&mut self, batch: usize, slo: Slo) -> Option<ConfigInfo> {
+        if self.pool_degraded() {
+            let d = Self::deployment_for_units(self.min_units());
+            self.apply(d);
+            return None;
+        }
         let mut least_bad: Option<(f64, Deployment)> = None;
-        for units in self.min_units()..=self.max_units {
+        for units in self.min_units()..=self.usable_units() {
             let d = Self::deployment_for_units(units);
             let tpot = self.tpot_at(batch as f64, d);
             if tpot <= slo.tpot {
@@ -134,7 +159,12 @@ impl ServingSystem for XDeepServe {
     }
 
     fn configure_for_demand(&mut self, lambda: f64, slo: Slo) -> Option<ConfigInfo> {
-        for units in self.min_units()..=self.max_units {
+        if self.pool_degraded() {
+            let d = Self::deployment_for_units(self.min_units());
+            self.apply(d);
+            return None;
+        }
+        for units in self.min_units()..=self.usable_units() {
             let d = Self::deployment_for_units(units);
             let fp = littles_law::solve(lambda, 8192.0, |b| self.tpot_at(b, d));
             let b = match fp {
@@ -152,6 +182,14 @@ impl ServingSystem for XDeepServe {
         let d = Self::deployment_for_units(self.min_units());
         self.apply(d);
         None
+    }
+
+    fn fail_gpus(&mut self, gpus: usize) {
+        self.failed_gpus += gpus;
+    }
+
+    fn restore_gpus(&mut self, gpus: usize) {
+        self.failed_gpus = self.failed_gpus.saturating_sub(gpus);
     }
 
     fn step(&mut self, batch: usize, rng: &mut Rng) -> StepOutcome {

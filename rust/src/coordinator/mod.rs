@@ -4,12 +4,12 @@
 //! on the PJRT CPU backend with TinyMoE:
 //!
 //! - a [`request::RequestQueue`] feeds a continuous batcher;
-//! - an attention worker ([`attention_pool::AttentionWorker`]) owns the
+//! - an attention worker (`attention_pool::AttentionWorker`) owns the
 //!   KV caches and runs the embed/attn/head artifacts;
-//! - a pool of MoE workers ([`moe_pool::MoeWorker`]) each runs the
+//! - a pool of MoE workers (`moe_pool::MoeWorker`) each runs the
 //!   MoE-side block (EGate gating + device-side AEBS + grouped expert
 //!   FFN) for the experts AEBS assigns to it;
-//! - the [`leader::Leader`] drives the per-layer dispatch → expert →
+//! - the `leader::Leader` drives the per-layer dispatch → expert →
 //!   combine loop, accounts communication via the §3.3 cost model, and
 //!   records serving metrics.
 //!
@@ -18,11 +18,19 @@
 //! client (the CPU plugin serializes execution anyway), with the
 //! communication *plans* built and costed by the same `comm` module the
 //! simulator uses. See DESIGN.md's substitution table.
+//!
+//! The request/batching substrate ([`request`]) is always available; the
+//! worker pools and the leader execute PJRT artifacts and are gated
+//! behind the `pjrt` cargo feature.
 
+#[cfg(feature = "pjrt")]
 pub mod attention_pool;
+#[cfg(feature = "pjrt")]
 pub mod leader;
+#[cfg(feature = "pjrt")]
 pub mod moe_pool;
 pub mod request;
 
+#[cfg(feature = "pjrt")]
 pub use leader::{Leader, ServeReport};
 pub use request::{Request, RequestQueue};

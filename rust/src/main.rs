@@ -12,7 +12,9 @@ use janus::baselines::JanusSystem;
 use janus::config::hardware::paper_testbed;
 use janus::config::models;
 use janus::config::serving::Slo;
+#[cfg(feature = "pjrt")]
 use janus::coordinator::Leader;
+#[cfg(feature = "pjrt")]
 use janus::placement::ExpertPlacement;
 use janus::routing::gate::ExpertPopularity;
 use janus::runtime::artifacts::ArtifactBundle;
@@ -41,7 +43,18 @@ fn main() {
     }
 }
 
+/// End-to-end serving is unavailable without the PJRT feature.
+#[cfg(not(feature = "pjrt"))]
+fn serve(_args: &Args) -> anyhow::Result<()> {
+    anyhow::bail!(
+        "the `serve` command needs the PJRT runtime: rebuild with \
+         `--features pjrt` (and the real XLA bindings in place of the \
+         vendored stub; see rust/Cargo.toml)"
+    )
+}
+
 /// End-to-end serving of batched requests on the PJRT CPU backend.
+#[cfg(feature = "pjrt")]
 fn serve(args: &Args) -> anyhow::Result<()> {
     let n_moe = args.usize_or("moe-instances", 2);
     let requests = args.usize_or("requests", 8);

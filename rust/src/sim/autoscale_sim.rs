@@ -1,4 +1,5 @@
-//! Trace-driven autoscaling simulation (Fig 11).
+//! Trace-driven autoscaling simulation (Fig 11) — a thin scenario
+//! configuration on top of [`crate::sim::engine`].
 //!
 //! Replays a diurnal demand trace against a system's scaling policy at a
 //! fixed decision interval (paper: 15 minutes), accumulating GPU-hours
@@ -6,31 +7,10 @@
 
 use crate::baselines::system::ServingSystem;
 use crate::config::serving::Slo;
-use crate::metrics::GpuHours;
+use crate::sim::engine::{self, AutoscaleScenario};
 use crate::workload::trace::DiurnalTrace;
 
-/// Per-interval scaling record.
-#[derive(Clone, Debug)]
-pub struct IntervalRecord {
-    pub t_start: f64,
-    pub demand: f64,
-    pub gpus: usize,
-    pub label: String,
-    pub feasible: bool,
-}
-
-/// Full autoscaling run result.
-#[derive(Clone, Debug)]
-pub struct AutoscaleResult {
-    pub system: &'static str,
-    pub intervals: Vec<IntervalRecord>,
-    pub gpu_hours: f64,
-    /// Fraction of intervals where the policy found an SLO-feasible
-    /// configuration.
-    pub feasible_fraction: f64,
-    pub min_gpus: usize,
-    pub max_gpus: usize,
-}
+pub use crate::sim::engine::{AutoscaleResult, IntervalRecord};
 
 /// The autoscaling simulator.
 pub struct AutoscaleSim {
@@ -59,40 +39,13 @@ impl AutoscaleSim {
         system: &mut S,
         trace: &DiurnalTrace,
     ) -> AutoscaleResult {
-        let horizon = trace.config.hours * 3600.0;
-        let mut t = 0.0;
-        let mut records = Vec::new();
-        let mut hours = GpuHours::new();
-        let mut feasible_count = 0usize;
-        while t < horizon {
-            let t_end = (t + self.interval).min(horizon);
-            let req_rate = trace.mean_rate_in(t, t_end);
-            let token_demand = req_rate * self.tokens_per_request;
-            let cfg = system.configure_for_demand(token_demand.max(1.0), self.slo);
-            let feasible = cfg.is_some();
-            if feasible {
-                feasible_count += 1;
-            }
-            let gpus = system.gpus();
-            hours.add(gpus, t_end - t);
-            records.push(IntervalRecord {
-                t_start: t,
-                demand: token_demand,
-                gpus,
-                label: system.label(),
-                feasible,
-            });
-            t = t_end;
-        }
-        let n = records.len().max(1);
-        AutoscaleResult {
-            system: system.name(),
-            gpu_hours: hours.total(),
-            feasible_fraction: feasible_count as f64 / n as f64,
-            min_gpus: records.iter().map(|r| r.gpus).min().unwrap_or(0),
-            max_gpus: records.iter().map(|r| r.gpus).max().unwrap_or(0),
-            intervals: records,
-        }
+        let scenario = AutoscaleScenario {
+            interval: self.interval,
+            tokens_per_request: self.tokens_per_request,
+            slo: self.slo,
+            trace: trace.clone(),
+        };
+        engine::autoscale(system, &scenario)
     }
 }
 

@@ -1,27 +1,11 @@
-//! Fixed-batch decode-loop evaluation.
+//! Fixed-batch decode-loop evaluation — a thin scenario configuration on
+//! top of [`crate::sim::engine`].
 
 use crate::baselines::system::ServingSystem;
 use crate::config::serving::Slo;
-use crate::metrics::TpotStats;
-use crate::util::rng::Rng;
+use crate::sim::engine::{self, FixedBatchScenario};
 
-/// Result of evaluating one system at one batch size.
-#[derive(Clone, Debug)]
-pub struct FixedBatchResult {
-    pub system: &'static str,
-    pub batch: usize,
-    pub config_label: String,
-    pub gpus: usize,
-    /// Whether the system found an SLO-feasible config at all.
-    pub feasible: bool,
-    pub tpot_mean: f64,
-    pub tpot_p99: f64,
-    /// Tokens/s/GPU at the measured mean TPOT.
-    pub tpg: f64,
-    /// Mean straggler activated-expert count across steps.
-    pub a_max_mean: f64,
-    pub slo_attainment: f64,
-}
+pub use crate::sim::engine::FixedBatchResult;
 
 /// Run `steps` decode steps at a fixed total batch and report the
 /// distributional metrics the paper plots in Fig 8.
@@ -32,30 +16,7 @@ pub fn evaluate_fixed_batch<S: ServingSystem + ?Sized>(
     steps: usize,
     seed: u64,
 ) -> FixedBatchResult {
-    let cfg = system.configure(batch, slo);
-    let feasible = cfg.is_some();
-    let mut rng = Rng::seed_from_u64(seed);
-    let mut stats = TpotStats::new();
-    let mut a_sum = 0.0;
-    for _ in 0..steps {
-        let out = system.step(batch, &mut rng);
-        stats.push(out.tpot);
-        a_sum += out.a_max as f64;
-    }
-    let gpus = system.gpus();
-    let tpot_mean = stats.mean();
-    FixedBatchResult {
-        system: system.name(),
-        batch,
-        config_label: system.label(),
-        gpus,
-        feasible,
-        tpot_mean,
-        tpot_p99: stats.p99(),
-        tpg: batch as f64 / tpot_mean / gpus.max(1) as f64,
-        a_max_mean: a_sum / steps.max(1) as f64,
-        slo_attainment: stats.attainment(slo.tpot),
-    }
+    engine::fixed_batch(system, &FixedBatchScenario { batch, slo, steps }, seed)
 }
 
 #[cfg(test)]
@@ -98,5 +59,25 @@ mod tests {
         let r2 = evaluate_fixed_batch(&mut build(), 128, Slo::from_ms(200.0), 20, 5);
         assert_eq!(r1.tpot_mean, r2.tpot_mean);
         assert_eq!(r1.config_label, r2.config_label);
+    }
+
+    #[test]
+    fn infeasible_slo_reports_instead_of_panicking() {
+        // A 1 µs TPOT SLO is impossible; the system must fall back to a
+        // best-effort deployment, report infeasibility, and keep stepping
+        // (the paper reports violations rather than dropping points).
+        let mut sys = JanusSystem::build(
+            deepseek_v2(),
+            paper_testbed(),
+            &ExpertPopularity::Uniform,
+            16,
+            79,
+        );
+        let slo = Slo { tpot: 1e-6 };
+        let r = evaluate_fixed_batch(&mut sys, 256, slo, 10, 3);
+        assert!(!r.feasible, "1 µs SLO cannot be feasible");
+        assert!(r.gpus > 0, "fallback deployment must exist");
+        assert!(r.tpot_mean > slo.tpot, "fallback must violate the SLO");
+        assert_eq!(r.slo_attainment, 0.0);
     }
 }

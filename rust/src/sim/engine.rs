@@ -1,0 +1,762 @@
+//! The unified discrete-event cluster simulator.
+//!
+//! One event engine drives every evaluation scenario over any
+//! [`ServingSystem`]: a seeded, deterministic event queue carries request
+//! arrivals, decode steps, periodic scaling decisions, and instance
+//! failure/recovery events. The three scenarios are thin configurations:
+//!
+//! - [`FixedBatchScenario`] — fixed-batch decode-loop evaluation (Figs
+//!   8/9/10/12); [`super::decode_sim::evaluate_fixed_batch`] wraps it.
+//! - [`AutoscaleScenario`] — trace-driven diurnal autoscaling at a fixed
+//!   decision interval (Fig 11); [`super::autoscale_sim::AutoscaleSim`]
+//!   wraps it.
+//! - [`FailureScenario`] — failure injection: kill and restore MoE/GPU
+//!   capacity mid-trace while bursty arrivals keep flowing, and measure
+//!   SLO attainment through the system's replica re-placement.
+//!
+//! Seeded-determinism contract: running any scenario twice with the same
+//! seed (and a freshly built system) yields **bit-identical** metrics.
+//! Event-queue ties break on insertion order, every random draw flows
+//! from one seeded [`Rng`], and no wall-clock time enters the loop. The
+//! golden regression tests pin this contract.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+use crate::baselines::system::ServingSystem;
+use crate::config::serving::Slo;
+use crate::metrics::{GpuHours, TpotStats};
+use crate::util::rng::Rng;
+use crate::workload::arrivals::{ArrivalProcess, BurstyPoisson};
+use crate::workload::lengths::LengthModel;
+use crate::workload::trace::DiurnalTrace;
+
+// ------------------------------------------------------------------ events
+
+/// What happens when an event fires.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// Sample the next one-second arrival window (keeps the queue
+    /// bounded instead of pre-pushing every arrival over the horizon).
+    ArrivalWindow,
+    /// One request joins the in-flight pool with this many output tokens.
+    Arrival { output_tokens: u32 },
+    /// Execute one decode step over the current in-flight batch.
+    DecodeStep,
+    /// Periodic scaling decision over the demand estimate.
+    ScalingDecision,
+    /// `gpus` GPUs drop out of the pool for `downtime` seconds.
+    Failure { gpus: usize, downtime: f64 },
+    /// Previously failed GPUs return to the pool.
+    Recovery { gpus: usize },
+}
+
+/// A scheduled event.
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// Simulated time, seconds from scenario start.
+    pub time: f64,
+    pub kind: EventKind,
+}
+
+#[derive(Debug)]
+struct Entry {
+    time: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.time.total_cmp(&other.time) == Ordering::Equal && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Earliest time first; ties break on insertion order so replays
+        // are bit-identical regardless of heap internals.
+        self.time
+            .total_cmp(&other.time)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Deterministic min-time event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Entry>>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `kind` at `time` (seconds). NaN times are rejected.
+    pub fn push(&mut self, time: f64, kind: EventKind) {
+        assert!(!time.is_nan(), "event time must not be NaN");
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Entry { time, seq, kind }));
+    }
+
+    /// Pop the earliest event (insertion order on ties).
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|Reverse(e)| Event {
+            time: e.time,
+            kind: e.kind,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+// --------------------------------------------------------------- scenarios
+
+/// Fixed-batch decode-loop evaluation (Fig 8): `steps` decode steps at a
+/// constant total batch, distributional TPOT metrics out.
+#[derive(Clone, Debug)]
+pub struct FixedBatchScenario {
+    pub batch: usize,
+    pub slo: Slo,
+    pub steps: usize,
+}
+
+/// Trace-driven autoscaling (Fig 11): replay a diurnal demand trace
+/// against the system's scaling policy at a fixed decision interval.
+#[derive(Clone, Debug)]
+pub struct AutoscaleScenario {
+    /// Decision interval, seconds (paper: 900).
+    pub interval: f64,
+    /// Decode-token demand per request (≈ average output length).
+    pub tokens_per_request: f64,
+    pub slo: Slo,
+    pub trace: DiurnalTrace,
+}
+
+/// One planned outage.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FailurePlan {
+    /// Failure time, seconds from scenario start.
+    pub at: f64,
+    /// GPUs lost (per-side instance budget for disaggregated systems).
+    pub gpus: usize,
+    /// Seconds until the capacity returns.
+    pub downtime: f64,
+}
+
+/// Failure injection: bursty request arrivals drive a live decode loop
+/// while planned outages remove capacity; the system re-places replicas
+/// (reconfigures on the surviving pool) at each failure/recovery and at
+/// the periodic scaling decisions.
+#[derive(Clone, Debug)]
+pub struct FailureScenario {
+    pub slo: Slo,
+    /// Mean request arrival rate (req/s) when no rate trace is given.
+    pub arrival_rate: f64,
+    /// Mean output tokens per request (drives demand = rate × tokens).
+    pub tokens_per_request: f64,
+    /// Scenario horizon, seconds.
+    pub horizon: f64,
+    /// Scaling-decision cadence, seconds.
+    pub decision_interval: f64,
+    /// Short-term arrival burstiness (Gamma cv², see `workload::arrivals`).
+    pub burst_cv2: f64,
+    /// Optional diurnal rate envelope; when set, the instantaneous arrival
+    /// rate follows `trace.rate_at(t)` (its `mean_rate` is in req/s) and
+    /// failures land mid-trace.
+    pub rate_trace: Option<DiurnalTrace>,
+    pub failures: Vec<FailurePlan>,
+}
+
+impl FailureScenario {
+    /// Constant-rate scenario with 60 s decisions and mild burstiness.
+    pub fn new(slo: Slo, arrival_rate: f64, tokens_per_request: f64, horizon: f64) -> Self {
+        FailureScenario {
+            slo,
+            arrival_rate,
+            tokens_per_request,
+            horizon,
+            decision_interval: 60.0,
+            burst_cv2: 0.3,
+            rate_trace: None,
+            failures: Vec::new(),
+        }
+    }
+
+    /// Add one outage.
+    pub fn with_failure(mut self, at: f64, gpus: usize, downtime: f64) -> Self {
+        self.failures.push(FailurePlan { at, gpus, downtime });
+        self
+    }
+}
+
+/// Any scenario, for the single-entry [`run`] API.
+#[derive(Clone, Debug)]
+pub enum Scenario {
+    FixedBatch(FixedBatchScenario),
+    Autoscale(AutoscaleScenario),
+    FailureInjection(FailureScenario),
+}
+
+// ----------------------------------------------------------------- results
+
+/// Result of evaluating one system at one batch size.
+#[derive(Clone, Debug)]
+pub struct FixedBatchResult {
+    pub system: &'static str,
+    pub batch: usize,
+    pub config_label: String,
+    pub gpus: usize,
+    /// Whether the system found an SLO-feasible config at all.
+    pub feasible: bool,
+    pub tpot_mean: f64,
+    pub tpot_p99: f64,
+    /// Tokens/s/GPU at the measured mean TPOT.
+    pub tpg: f64,
+    /// Mean straggler activated-expert count across steps.
+    pub a_max_mean: f64,
+    pub slo_attainment: f64,
+}
+
+/// Per-interval scaling record.
+#[derive(Clone, Debug)]
+pub struct IntervalRecord {
+    pub t_start: f64,
+    pub demand: f64,
+    pub gpus: usize,
+    pub label: String,
+    pub feasible: bool,
+}
+
+/// Full autoscaling run result.
+#[derive(Clone, Debug)]
+pub struct AutoscaleResult {
+    pub system: &'static str,
+    pub intervals: Vec<IntervalRecord>,
+    pub gpu_hours: f64,
+    /// Fraction of intervals where the policy found an SLO-feasible
+    /// configuration.
+    pub feasible_fraction: f64,
+    pub min_gpus: usize,
+    pub max_gpus: usize,
+}
+
+/// Failure-injection run result.
+#[derive(Clone, Debug)]
+pub struct FailureResult {
+    pub system: &'static str,
+    /// Decode steps executed.
+    pub steps: usize,
+    pub completed_requests: usize,
+    pub generated_tokens: usize,
+    /// Per-step TPOT distribution.
+    pub tpot: TpotStats,
+    /// Fraction of decode steps meeting the SLO (1.0 with zero steps).
+    pub slo_attainment: f64,
+    /// Attainment restricted to steps while capacity was degraded.
+    pub attainment_degraded: f64,
+    /// Attainment restricted to steps on the healthy pool.
+    pub attainment_healthy: f64,
+    /// Decode steps that ran while capacity was degraded.
+    pub degraded_steps: usize,
+    /// Fraction of scaling/re-placement decisions that were feasible.
+    pub feasible_fraction: f64,
+    /// Failure + recovery re-placements performed.
+    pub reconfigurations: usize,
+    pub gpu_hours: f64,
+    pub min_gpus: usize,
+    pub max_gpus: usize,
+}
+
+/// Outcome of [`run`], tagged by scenario.
+#[derive(Clone, Debug)]
+pub enum ScenarioOutcome {
+    FixedBatch(FixedBatchResult),
+    Autoscale(AutoscaleResult),
+    FailureInjection(FailureResult),
+}
+
+// --------------------------------------------------------------- execution
+
+/// Run any scenario for any system from one entry point.
+pub fn run<S: ServingSystem + ?Sized>(
+    system: &mut S,
+    scenario: &Scenario,
+    seed: u64,
+) -> ScenarioOutcome {
+    match scenario {
+        Scenario::FixedBatch(sc) => ScenarioOutcome::FixedBatch(fixed_batch(system, sc, seed)),
+        Scenario::Autoscale(sc) => ScenarioOutcome::Autoscale(autoscale(system, sc)),
+        Scenario::FailureInjection(sc) => {
+            ScenarioOutcome::FailureInjection(failure_injection(system, sc, seed))
+        }
+    }
+}
+
+/// Fixed-batch decode evaluation: configure once, then chain decode-step
+/// events — each step schedules the next at `t + TPOT`.
+pub fn fixed_batch<S: ServingSystem + ?Sized>(
+    system: &mut S,
+    sc: &FixedBatchScenario,
+    seed: u64,
+) -> FixedBatchResult {
+    let cfg = system.configure(sc.batch, sc.slo);
+    let feasible = cfg.is_some();
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut queue = EventQueue::new();
+    if sc.steps > 0 {
+        queue.push(0.0, EventKind::DecodeStep);
+    }
+    let mut stats = TpotStats::new();
+    let mut a_sum = 0.0;
+    let mut done = 0usize;
+    while let Some(ev) = queue.pop() {
+        debug_assert!(matches!(ev.kind, EventKind::DecodeStep));
+        let out = system.step(sc.batch, &mut rng);
+        stats.push(out.tpot);
+        a_sum += out.a_max as f64;
+        done += 1;
+        if done < sc.steps {
+            queue.push(ev.time + out.tpot, EventKind::DecodeStep);
+        }
+    }
+    let gpus = system.gpus();
+    let tpot_mean = stats.mean();
+    FixedBatchResult {
+        system: system.name(),
+        batch: sc.batch,
+        config_label: system.label(),
+        gpus,
+        feasible,
+        tpot_mean,
+        tpot_p99: stats.p99(),
+        tpg: sc.batch as f64 / tpot_mean / gpus.max(1) as f64,
+        a_max_mean: a_sum / sc.steps.max(1) as f64,
+        slo_attainment: stats.attainment(sc.slo.tpot),
+    }
+}
+
+/// Trace-driven autoscaling: chained scaling-decision events walk the
+/// trace at the decision interval.
+pub fn autoscale<S: ServingSystem + ?Sized>(
+    system: &mut S,
+    sc: &AutoscaleScenario,
+) -> AutoscaleResult {
+    let horizon = sc.trace.config.hours * 3600.0;
+    let mut queue = EventQueue::new();
+    if horizon > 0.0 {
+        queue.push(0.0, EventKind::ScalingDecision);
+    }
+    let mut records = Vec::new();
+    let mut hours = GpuHours::new();
+    let mut feasible_count = 0usize;
+    while let Some(ev) = queue.pop() {
+        debug_assert!(matches!(ev.kind, EventKind::ScalingDecision));
+        let t = ev.time;
+        let t_end = (t + sc.interval).min(horizon);
+        let req_rate = sc.trace.mean_rate_in(t, t_end);
+        let token_demand = req_rate * sc.tokens_per_request;
+        let cfg = system.configure_for_demand(token_demand.max(1.0), sc.slo);
+        let feasible = cfg.is_some();
+        if feasible {
+            feasible_count += 1;
+        }
+        let gpus = system.gpus();
+        hours.add(gpus, t_end - t);
+        records.push(IntervalRecord {
+            t_start: t,
+            demand: token_demand,
+            gpus,
+            label: system.label(),
+            feasible,
+        });
+        if t_end < horizon {
+            queue.push(t_end, EventKind::ScalingDecision);
+        }
+    }
+    let n = records.len().max(1);
+    AutoscaleResult {
+        system: system.name(),
+        gpu_hours: hours.total(),
+        feasible_fraction: feasible_count as f64 / n as f64,
+        min_gpus: records.iter().map(|r| r.gpus).min().unwrap_or(0),
+        max_gpus: records.iter().map(|r| r.gpus).max().unwrap_or(0),
+        intervals: records,
+    }
+}
+
+/// Failure injection: arrivals, decode steps, scaling decisions, and
+/// planned outages all flow through one event queue.
+pub fn failure_injection<S: ServingSystem + ?Sized>(
+    system: &mut S,
+    sc: &FailureScenario,
+    seed: u64,
+) -> FailureResult {
+    assert!(sc.horizon > 0.0 && sc.decision_interval > 0.0);
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut queue = EventQueue::new();
+
+    // Initial sizing decision, then the periodic cadence.
+    queue.push(0.0, EventKind::ScalingDecision);
+
+    // Planned outages.
+    for f in &sc.failures {
+        queue.push(
+            f.at,
+            EventKind::Failure {
+                gpus: f.gpus,
+                downtime: f.downtime,
+            },
+        );
+    }
+
+    // The arrival stream is sampled lazily, one 1-second window at a
+    // time (`ArrivalWindow` events), through the bursty (Cox) process;
+    // request output lengths come from the ShareGPT-like length model
+    // centered on `tokens_per_request`. A dedicated arrivals RNG keeps
+    // the stream independent of how many decode steps interleave, so
+    // determinism holds without pre-materializing the whole horizon.
+    let bursty = BurstyPoisson::new(sc.burst_cv2);
+    let lengths = LengthModel::with_means(16.0, sc.tokens_per_request.max(1.0), 0.6);
+    let mut arrival_rng = Rng::seed_from_u64(seed ^ 0x4152_5256_4956_414C);
+    queue.push(0.0, EventKind::ArrivalWindow);
+
+    // Demand estimate for sizing decisions (offered load).
+    let demand_at = |t0: f64, t1: f64| -> f64 {
+        let rate = match &sc.rate_trace {
+            Some(trace) => trace.mean_rate_in(t0, t1),
+            None => sc.arrival_rate,
+        };
+        (rate * sc.tokens_per_request).max(1.0)
+    };
+
+    // Live state.
+    let mut in_flight: Vec<u32> = Vec::new();
+    let mut step_pending = false;
+    let mut failed_gpus = 0usize;
+    let mut stats = TpotStats::new();
+    let mut steps = 0usize;
+    let mut ok_steps = 0usize;
+    let mut degraded_steps = 0usize;
+    let mut degraded_ok = 0usize;
+    let mut completed = 0usize;
+    let mut generated = 0usize;
+    let mut decisions = 0usize;
+    let mut feasible_decisions = 0usize;
+    let mut reconfigurations = 0usize;
+    let mut hours = GpuHours::new();
+    let mut last_account = 0.0f64;
+    let mut min_gpus = usize::MAX;
+    let mut max_gpus = 0usize;
+
+    fn account(hours: &mut GpuHours, last: &mut f64, now: f64, gpus: usize) {
+        hours.add(gpus, (now - *last).max(0.0));
+        *last = now;
+    }
+    fn track(gpus: usize, min_g: &mut usize, max_g: &mut usize) {
+        if gpus > 0 {
+            *min_g = (*min_g).min(gpus);
+            *max_g = (*max_g).max(gpus);
+        }
+    }
+
+    while let Some(ev) = queue.pop() {
+        if ev.time > sc.horizon {
+            break;
+        }
+        match ev.kind {
+            EventKind::ArrivalWindow => {
+                let dt = (sc.horizon - ev.time).min(1.0);
+                if dt > 0.0 {
+                    let rate = match &sc.rate_trace {
+                        Some(trace) => trace.rate_at(ev.time),
+                        None => sc.arrival_rate,
+                    };
+                    let n = bursty.arrivals(&mut arrival_rng, rate, dt);
+                    for _ in 0..n {
+                        let at = ev.time + arrival_rng.f64() * dt;
+                        let output_tokens = lengths.sample(&mut arrival_rng).output_tokens;
+                        queue.push(at, EventKind::Arrival { output_tokens });
+                    }
+                    let next = ev.time + dt;
+                    if next < sc.horizon {
+                        queue.push(next, EventKind::ArrivalWindow);
+                    }
+                }
+            }
+            EventKind::Arrival { output_tokens } => {
+                in_flight.push(output_tokens.max(1));
+                if !step_pending {
+                    step_pending = true;
+                    queue.push(ev.time, EventKind::DecodeStep);
+                }
+            }
+            EventKind::DecodeStep => {
+                if in_flight.is_empty() {
+                    step_pending = false;
+                    continue;
+                }
+                let batch = in_flight.len();
+                let out = system.step(batch, &mut rng);
+                stats.push(out.tpot);
+                steps += 1;
+                generated += batch;
+                let ok = out.tpot <= sc.slo.tpot;
+                if ok {
+                    ok_steps += 1;
+                }
+                if failed_gpus > 0 {
+                    degraded_steps += 1;
+                    if ok {
+                        degraded_ok += 1;
+                    }
+                }
+                let before = in_flight.len();
+                for r in in_flight.iter_mut() {
+                    *r -= 1;
+                }
+                in_flight.retain(|&r| r > 0);
+                completed += before - in_flight.len();
+                queue.push(ev.time + out.tpot, EventKind::DecodeStep);
+            }
+            EventKind::ScalingDecision => {
+                account(&mut hours, &mut last_account, ev.time, system.gpus());
+                let t_end = (ev.time + sc.decision_interval).min(sc.horizon);
+                let cfg = system.configure_for_demand(demand_at(ev.time, t_end), sc.slo);
+                decisions += 1;
+                if cfg.is_some() {
+                    feasible_decisions += 1;
+                }
+                track(system.gpus(), &mut min_gpus, &mut max_gpus);
+                if t_end < sc.horizon {
+                    queue.push(t_end, EventKind::ScalingDecision);
+                }
+            }
+            EventKind::Failure { gpus, downtime } => {
+                account(&mut hours, &mut last_account, ev.time, system.gpus());
+                failed_gpus += gpus;
+                system.fail_gpus(gpus);
+                // Re-placement on the surviving pool.
+                let t_end = (ev.time + sc.decision_interval).min(sc.horizon);
+                let cfg = system.reconfigure_for_pool(demand_at(ev.time, t_end), sc.slo);
+                decisions += 1;
+                reconfigurations += 1;
+                if cfg.is_some() {
+                    feasible_decisions += 1;
+                }
+                track(system.gpus(), &mut min_gpus, &mut max_gpus);
+                queue.push(ev.time + downtime, EventKind::Recovery { gpus });
+            }
+            EventKind::Recovery { gpus } => {
+                account(&mut hours, &mut last_account, ev.time, system.gpus());
+                failed_gpus = failed_gpus.saturating_sub(gpus);
+                system.restore_gpus(gpus);
+                let t_end = (ev.time + sc.decision_interval).min(sc.horizon);
+                let cfg = system.reconfigure_for_pool(demand_at(ev.time, t_end), sc.slo);
+                decisions += 1;
+                reconfigurations += 1;
+                if cfg.is_some() {
+                    feasible_decisions += 1;
+                }
+                track(system.gpus(), &mut min_gpus, &mut max_gpus);
+            }
+        }
+    }
+    account(&mut hours, &mut last_account, sc.horizon, system.gpus());
+
+    let att = |ok: usize, total: usize| {
+        if total == 0 {
+            1.0
+        } else {
+            ok as f64 / total as f64
+        }
+    };
+    FailureResult {
+        system: system.name(),
+        steps,
+        completed_requests: completed,
+        generated_tokens: generated,
+        slo_attainment: att(ok_steps, steps),
+        attainment_degraded: att(degraded_ok, degraded_steps),
+        attainment_healthy: att(ok_steps - degraded_ok, steps - degraded_steps),
+        degraded_steps,
+        feasible_fraction: att(feasible_decisions, decisions),
+        reconfigurations,
+        gpu_hours: hours.total(),
+        min_gpus: if min_gpus == usize::MAX { 0 } else { min_gpus },
+        max_gpus,
+        tpot: stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{JanusSystem, MegaScaleInfer, ServingSystem, SgLang, XDeepServe};
+    use crate::config::hardware::{autoscale_pool, paper_testbed};
+    use crate::config::models::deepseek_v2;
+    use crate::routing::gate::ExpertPopularity;
+    use crate::workload::trace::{DiurnalTrace, TraceConfig};
+
+    #[test]
+    fn queue_orders_by_time_then_insertion() {
+        let mut q = EventQueue::new();
+        q.push(2.0, EventKind::DecodeStep);
+        q.push(1.0, EventKind::ScalingDecision);
+        q.push(1.0, EventKind::DecodeStep);
+        q.push(0.5, EventKind::Recovery { gpus: 1 });
+        assert_eq!(q.len(), 4);
+        let order: Vec<Event> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order[0].kind, EventKind::Recovery { gpus: 1 });
+        // Tie at t=1.0 resolves in insertion order.
+        assert_eq!(order[1].kind, EventKind::ScalingDecision);
+        assert_eq!(order[2].kind, EventKind::DecodeStep);
+        assert_eq!(order[3].kind, EventKind::DecodeStep);
+        assert!(q.is_empty());
+    }
+
+    fn janus(n_max: usize, seed: u64) -> JanusSystem {
+        JanusSystem::build(
+            deepseek_v2(),
+            autoscale_pool(),
+            &ExpertPopularity::Uniform,
+            n_max,
+            seed,
+        )
+    }
+
+    #[test]
+    fn unified_run_covers_all_scenarios_for_all_systems() {
+        let model = deepseek_v2();
+        let hw = paper_testbed();
+        let pop = ExpertPopularity::Uniform;
+        let fixed = Scenario::FixedBatch(FixedBatchScenario {
+            batch: 64,
+            slo: Slo::from_ms(200.0),
+            steps: 5,
+        });
+        let mut cfg = TraceConfig::one_day();
+        cfg.hours = 2.0;
+        cfg.mean_rate = 12.0;
+        let auto = Scenario::Autoscale(AutoscaleScenario {
+            interval: 900.0,
+            tokens_per_request: 256.0,
+            slo: Slo::from_ms(200.0),
+            trace: DiurnalTrace::generate(cfg),
+        });
+        let fail = Scenario::FailureInjection(
+            FailureScenario::new(Slo::from_ms(200.0), 2.0, 32.0, 120.0)
+                .with_failure(40.0, 8, 30.0),
+        );
+        let mut j = JanusSystem::build(model.clone(), hw.clone(), &pop, 16, 1);
+        let mut s = SgLang::build(model.clone(), hw.clone(), &pop, 2);
+        let mut m = MegaScaleInfer::build(model.clone(), hw.clone(), &pop, 16, 3);
+        let mut x = XDeepServe::build(model, hw, &pop, 32, 4);
+        let systems: Vec<&mut dyn ServingSystem> = vec![&mut j, &mut s, &mut m, &mut x];
+        for sys in systems {
+            for sc in [&fixed, &auto, &fail] {
+                match run(sys, sc, 9) {
+                    ScenarioOutcome::FixedBatch(r) => {
+                        assert!(r.tpot_mean > 0.0, "{}", r.system);
+                        assert!(r.gpus > 0, "{}", r.system);
+                    }
+                    ScenarioOutcome::Autoscale(r) => {
+                        assert_eq!(r.intervals.len(), 8, "{}", r.system);
+                        assert!(r.gpu_hours > 0.0, "{}", r.system);
+                    }
+                    ScenarioOutcome::FailureInjection(r) => {
+                        assert!(r.steps > 0, "{}", r.system);
+                        assert_eq!(r.reconfigurations, 2, "{}", r.system);
+                        assert!(r.gpu_hours > 0.0, "{}", r.system);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn failure_injection_degrades_and_recovers() {
+        // Kill 28 of the 32 per-side instance budget: the survivors cannot
+        // seat every DeepSeek-V2 expert (n_e_min = 6 > 4), so re-placement
+        // must report infeasibility until recovery — while the decode loop
+        // keeps serving on the emergency layout.
+        let sc = FailureScenario::new(Slo::from_ms(200.0), 4.0, 64.0, 600.0)
+            .with_failure(120.0, 28, 240.0);
+        let mut sys = janus(32, 7);
+        let r = failure_injection(&mut sys, &sc, 11);
+        assert!(r.steps > 0);
+        assert!(r.completed_requests > 0);
+        assert_eq!(r.reconfigurations, 2);
+        assert!(r.degraded_steps > 0, "outage window saw no steps");
+        assert!(
+            r.feasible_fraction < 1.0,
+            "losing 28/32 instances must make some decision infeasible"
+        );
+        assert!(r.feasible_fraction > 0.0, "healthy decisions must succeed");
+        assert_eq!(r.tpot.count(), r.steps);
+        assert!(r.min_gpus <= r.max_gpus && r.max_gpus > 0);
+        // The pool is healthy again after recovery: a fresh decision on the
+        // restored budget is feasible.
+        assert!(sys.configure_for_demand(256.0, Slo::from_ms(200.0)).is_some());
+    }
+
+    #[test]
+    fn failure_scenario_is_bit_deterministic() {
+        let sc = FailureScenario::new(Slo::from_ms(200.0), 3.0, 48.0, 300.0)
+            .with_failure(60.0, 12, 120.0);
+        let run_once = || {
+            let mut sys = janus(16, 21);
+            let r = failure_injection(&mut sys, &sc, 33);
+            (
+                r.steps,
+                r.completed_requests,
+                r.generated_tokens,
+                r.tpot.mean().to_bits(),
+                r.tpot.p99().to_bits(),
+                r.gpu_hours.to_bits(),
+                r.slo_attainment.to_bits(),
+            )
+        };
+        assert_eq!(run_once(), run_once());
+    }
+
+    #[test]
+    fn fixed_batch_matches_legacy_decode_loop() {
+        // The engine path must be numerically identical to the pre-engine
+        // decode loop: configure once, then step with a seeded RNG.
+        let sc = FixedBatchScenario {
+            batch: 128,
+            slo: Slo::from_ms(200.0),
+            steps: 15,
+        };
+        let mut a = janus(16, 5);
+        let engine_r = fixed_batch(&mut a, &sc, 17);
+        let mut b = janus(16, 5);
+        let legacy = {
+            let cfg = b.configure(sc.batch, sc.slo);
+            assert!(cfg.is_some());
+            let mut rng = Rng::seed_from_u64(17);
+            let mut stats = TpotStats::new();
+            for _ in 0..sc.steps {
+                stats.push(b.step(sc.batch, &mut rng).tpot);
+            }
+            (stats.mean().to_bits(), stats.p99().to_bits())
+        };
+        assert_eq!(engine_r.tpot_mean.to_bits(), legacy.0);
+        assert_eq!(engine_r.tpot_p99.to_bits(), legacy.1);
+    }
+}

@@ -1,16 +1,27 @@
 //! Discrete-event evaluation harness.
 //!
+//! - [`engine`] — the unified discrete-event cluster simulator: one
+//!   seeded event queue (request arrivals, decode steps, scaling
+//!   decisions, instance failure/recovery) drives every scenario for
+//!   every [`crate::baselines::ServingSystem`].
 //! - [`decode_sim`] — fixed-batch decode-loop evaluation (drives Figs
-//!   8/9/10/12): many decode steps with per-step routing draws, yielding
-//!   TPOT distributions (mean + P99) and per-GPU throughput.
+//!   8/9/10/12), a thin wrapper over [`engine::FixedBatchScenario`].
 //! - [`autoscale_sim`] — trace-driven scaling over a diurnal trace with a
-//!   periodic decision interval (drives Fig 11), mirroring the paper's
-//!   trace-driven simulation methodology ("continuously running all
-//!   systems over the full trace would require substantial cluster
-//!   time" — §5.2).
+//!   periodic decision interval (drives Fig 11), a thin wrapper over
+//!   [`engine::AutoscaleScenario`], mirroring the paper's trace-driven
+//!   simulation methodology (§5.2).
+//!
+//! Failure injection ([`engine::FailureScenario`]) lives directly in the
+//! engine: planned outages remove capacity mid-trace and the run measures
+//! SLO attainment through the system's replica re-placement.
 
 pub mod autoscale_sim;
 pub mod decode_sim;
+pub mod engine;
 
 pub use autoscale_sim::{AutoscaleResult, AutoscaleSim};
 pub use decode_sim::{evaluate_fixed_batch, FixedBatchResult};
+pub use engine::{
+    AutoscaleScenario, EventKind, EventQueue, FailurePlan, FailureResult, FailureScenario,
+    FixedBatchScenario, IntervalRecord, Scenario, ScenarioOutcome,
+};

@@ -1,0 +1,116 @@
+//! Property tests for the AEBS scheduler invariants (§3.4), via the
+//! in-tree `testing::prop` harness: randomized placements and routing
+//! batches, deterministic seeds, failing-seed replay.
+
+use janus::placement::ExpertPlacement;
+use janus::routing::gate::{ExpertPopularity, GateSim};
+use janus::routing::trace::RoutingBatch;
+use janus::scheduler::{aebs, baselines};
+use janus::testing::prop;
+use janus::util::rng::Rng;
+
+/// A redundant round-robin placement plus a gate over it.
+fn random_setup(rng: &mut Rng) -> (ExpertPlacement, GateSim) {
+    let experts = 16 + rng.usize_below(64);
+    let top_k = 2 + rng.usize_below(5); // 2..=6, experts ≥ 16
+    let n_inst = 2 + rng.usize_below(8);
+    // At least one spare slot per instance so real replica choice exists.
+    let capacity = experts.div_ceil(n_inst) + 1 + rng.usize_below(4);
+    let placement = ExpertPlacement::round_robin(experts, n_inst, capacity);
+    let skew = rng.f64_range(0.0, 1.5);
+    let gate = GateSim::new(experts, top_k, &ExpertPopularity::Zipf { s: skew }, rng);
+    (placement, gate)
+}
+
+fn sample(rng: &mut Rng, gate: &GateSim, min_tokens: usize) -> RoutingBatch {
+    gate.sample_batch(rng, min_tokens + rng.usize_below(192))
+}
+
+/// Every activated logical expert is served by exactly one hosting
+/// replica: all of its requests land on a single instance, and that
+/// instance hosts it (splitting would raise Σ a_g — the defect AEBS
+/// exists to avoid).
+#[test]
+fn every_activated_expert_gets_exactly_one_replica() {
+    prop::check("one replica per activated expert", 40, |rng| {
+        let (placement, gate) = random_setup(rng);
+        let batch = sample(rng, &gate, 32);
+        let asg = aebs::assign(&batch, &placement);
+        let mut chosen: Vec<Option<u32>> = vec![None; batch.experts];
+        for (&e, &g) in batch.flat().iter().zip(asg.instance_of.iter()) {
+            assert!(
+                placement.hosts(e).contains(&g),
+                "expert {e} routed to non-hosting instance {g}"
+            );
+            match chosen[e as usize] {
+                None => chosen[e as usize] = Some(g),
+                Some(prev) => assert_eq!(
+                    prev, g,
+                    "expert {e} split across replicas {prev} and {g}"
+                ),
+            }
+        }
+    });
+}
+
+/// Structural validity: the assignment's cached load metrics survive a
+/// from-scratch recount against the batch and placement.
+#[test]
+fn assignments_respect_placement_and_metrics() {
+    prop::check("assignment validity", 40, |rng| {
+        let (placement, gate) = random_setup(rng);
+        let batch = sample(rng, &gate, 16);
+        let asg = aebs::assign(&batch, &placement);
+        asg.validate(&batch, &placement).unwrap();
+        assert_eq!(asg.loads.len(), placement.n_instances);
+        assert_eq!(
+            asg.loads.iter().copied().max().unwrap_or(0),
+            asg.a_max
+        );
+    });
+}
+
+/// Deterministic tie-breaking: identical inputs produce an identical
+/// `Assignment` — the property that lets every MoE instance run AEBS
+/// redundantly without synchronization (§3.4), and that the engine's
+/// seeded-determinism contract inherits.
+#[test]
+fn aebs_is_deterministic_on_identical_inputs() {
+    prop::check("deterministic tie-breaking", 40, |rng| {
+        let (placement, gate) = random_setup(rng);
+        let batch = sample(rng, &gate, 16);
+        let a1 = aebs::assign(&batch, &placement);
+        let a2 = aebs::assign(&batch, &placement);
+        assert_eq!(a1, a2, "same inputs must yield the identical Assignment");
+        // And through a reused workspace (the hot-path entry point).
+        let mut ws = aebs::Workspace::new(batch.experts, placement.n_instances);
+        let w1 = aebs::assign_with(&mut ws, &batch, &placement);
+        let _ = aebs::assign_with(&mut ws, &gate.sample_batch(rng, 64), &placement);
+        let w2 = aebs::assign_with(&mut ws, &batch, &placement);
+        assert_eq!(w1, w2, "workspace reuse must not perturb decisions");
+        assert_eq!(w1, a1);
+    });
+}
+
+/// AEBS never loses to EPLB-style token balancing on the straggler
+/// metric: summed over several online-scale batches per case,
+/// a_max(AEBS) ≤ a_max(token_balanced). (Token balancing splits hot
+/// experts across replicas, activating them on several instances; at
+/// online batch sizes that penalty dominates.)
+#[test]
+fn aebs_amax_bounded_by_token_balanced() {
+    prop::check("a_max(AEBS) ≤ a_max(EPLB)", 40, |rng| {
+        let (placement, gate) = random_setup(rng);
+        let mut sum_aebs = 0u64;
+        let mut sum_tb = 0u64;
+        for _ in 0..4 {
+            let batch = sample(rng, &gate, 64);
+            sum_aebs += aebs::assign(&batch, &placement).a_max as u64;
+            sum_tb += baselines::token_balanced(&batch, &placement).a_max as u64;
+        }
+        assert!(
+            sum_aebs <= sum_tb,
+            "AEBS a_max sum {sum_aebs} exceeds token-balanced {sum_tb}"
+        );
+    });
+}

@@ -1,0 +1,140 @@
+//! Golden regression pinning the perf model + engine: seeded fixed-batch
+//! runs for Janus and the three baselines at two batch sizes, asserting
+//! TPOT mean/P99 and tokens/s/GPU against a committed snapshot to 1e-9.
+//!
+//! Bootstrap: on a machine without the snapshot (first run after a
+//! clone, or after deleting it), the test writes
+//! `tests/golden/fixed_batch.tsv` and passes with a notice — commit the
+//! file to pin behavior. Re-bless intentionally changed numbers with
+//! `JANUS_BLESS=1 cargo test -q golden`. Any unintentional drift in the
+//! perf model, schedulers, placement, or engine then fails here before
+//! it contaminates downstream figures.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use janus::baselines::{JanusSystem, MegaScaleInfer, ServingSystem, SgLang, XDeepServe};
+use janus::config::hardware::paper_testbed;
+use janus::config::models;
+use janus::config::serving::Slo;
+use janus::sim::engine::{self, FixedBatchScenario};
+
+const STEPS: usize = 20;
+const SEED: u64 = 424242;
+const BATCHES: [usize; 2] = [64, 256];
+const TOLERANCE: f64 = 1e-9;
+
+fn snapshot_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/fixed_batch.tsv")
+}
+
+/// One snapshot row per (system, batch).
+fn current_snapshot() -> String {
+    let model = models::deepseek_v2();
+    let hw = paper_testbed();
+    let pop = janus::routing::gate::ExpertPopularity::Zipf { s: 0.4 };
+    let slo = Slo::from_ms(200.0);
+    let mut out = String::from(
+        "# Golden fixed-batch snapshot (DeepSeek-V2, paper testbed, zipf 0.4,\n\
+         # SLO 200 ms, steps 20, seed 424242). Regenerate: JANUS_BLESS=1.\n\
+         # system\tbatch\ttpot_mean\ttpot_p99\ttpg\n",
+    );
+    for &batch in &BATCHES {
+        let mut janus = JanusSystem::build(model.clone(), hw.clone(), &pop, 16, 42);
+        let mut sgl = SgLang::build(model.clone(), hw.clone(), &pop, 43);
+        let mut msi = MegaScaleInfer::build(model.clone(), hw.clone(), &pop, 16, 44);
+        let mut xds = XDeepServe::build(model.clone(), hw.clone(), &pop, 32, 45);
+        let systems: Vec<&mut dyn ServingSystem> =
+            vec![&mut janus, &mut sgl, &mut msi, &mut xds];
+        for sys in systems {
+            let r = engine::fixed_batch(
+                sys,
+                &FixedBatchScenario { batch, slo, steps: STEPS },
+                SEED,
+            );
+            writeln!(
+                out,
+                "{}\t{}\t{:.17e}\t{:.17e}\t{:.17e}",
+                r.system, batch, r.tpot_mean, r.tpot_p99, r.tpg
+            )
+            .unwrap();
+        }
+    }
+    out
+}
+
+fn parse(snapshot: &str) -> Vec<(String, usize, [f64; 3])> {
+    snapshot
+        .lines()
+        .filter(|l| !l.trim_start().starts_with('#') && !l.trim().is_empty())
+        .map(|l| {
+            let f: Vec<&str> = l.split('\t').collect();
+            assert_eq!(f.len(), 5, "malformed snapshot line: {l:?}");
+            (
+                f[0].to_string(),
+                f[1].parse().expect("batch"),
+                [
+                    f[2].parse().expect("tpot_mean"),
+                    f[3].parse().expect("tpot_p99"),
+                    f[4].parse().expect("tpg"),
+                ],
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn fixed_batch_metrics_match_snapshot() {
+    let path = snapshot_path();
+    let fresh = current_snapshot();
+    let bless = std::env::var("JANUS_BLESS").is_ok();
+    if bless || !path.exists() {
+        // Once the snapshot is committed, set JANUS_REQUIRE_GOLDEN in CI
+        // so a missing/deleted snapshot fails instead of silently
+        // re-bootstrapping (which would erase the drift baseline).
+        assert!(
+            bless || std::env::var("JANUS_REQUIRE_GOLDEN").is_err(),
+            "golden snapshot missing at {} — generate it locally \
+             (`cargo test -q golden`) and commit it",
+            path.display()
+        );
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &fresh).unwrap();
+        eprintln!(
+            "golden: {} snapshot at {} — commit it to pin behavior",
+            if bless { "re-blessed" } else { "bootstrapped" },
+            path.display()
+        );
+        return;
+    }
+    let committed = parse(&std::fs::read_to_string(&path).unwrap());
+    let current = parse(&fresh);
+    assert_eq!(
+        committed.len(),
+        current.len(),
+        "snapshot row count changed — rerun with JANUS_BLESS=1 if intended"
+    );
+    let metric_names = ["tpot_mean", "tpot_p99", "tpg"];
+    for ((c_sys, c_batch, c_vals), (n_sys, n_batch, n_vals)) in
+        committed.iter().zip(current.iter())
+    {
+        assert_eq!((c_sys, c_batch), (n_sys, n_batch), "snapshot rows reordered");
+        for (i, (c, n)) in c_vals.iter().zip(n_vals.iter()).enumerate() {
+            assert!(
+                (c - n).abs() <= TOLERANCE,
+                "{c_sys} B={c_batch} {}: committed {c:.17e} vs current {n:.17e} \
+                 (drift {:.3e} > {TOLERANCE:.0e}) — perf-model behavior changed; \
+                 rerun with JANUS_BLESS=1 only if intentional",
+                metric_names[i],
+                (c - n).abs()
+            );
+        }
+    }
+}
+
+/// The snapshot generator itself is bit-deterministic — the precondition
+/// for the golden file being meaningful across machines and runs.
+#[test]
+fn snapshot_generation_is_deterministic() {
+    assert_eq!(current_snapshot(), current_snapshot());
+}

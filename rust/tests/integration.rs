@@ -14,6 +14,9 @@ use janus::scaling::{amax_bound, AmaxTable, Scaler};
 use janus::scheduler::{self, aebs};
 use janus::sim::autoscale_sim::AutoscaleSim;
 use janus::sim::decode_sim::evaluate_fixed_batch;
+use janus::sim::engine::{
+    self, AutoscaleScenario, FailureScenario, FixedBatchScenario, Scenario, ScenarioOutcome,
+};
 use janus::testing::prop;
 use janus::util::rng::Rng;
 use janus::workload::trace::{DiurnalTrace, TraceConfig};
@@ -225,6 +228,148 @@ fn end_to_end_determinism() {
         (r.config_label, r.tpot_mean.to_bits(), r.tpg.to_bits())
     };
     assert_eq!(run(), run());
+}
+
+/// The unified engine runs all three scenarios (fixed-batch decode,
+/// diurnal autoscale, failure injection) for all four systems from one
+/// API — the acceptance criterion of the sim::engine refactor.
+#[test]
+fn engine_runs_all_scenarios_for_all_systems() {
+    let model = models::deepseek_v2();
+    let hw = janus::config::hardware::autoscale_pool();
+    let pop = ExpertPopularity::Uniform;
+    let slo = Slo::from_ms(200.0);
+    let mut cfg = TraceConfig::one_day();
+    cfg.hours = 3.0;
+    cfg.mean_rate = 12.0;
+    let scenarios = [
+        Scenario::FixedBatch(FixedBatchScenario {
+            batch: 128,
+            slo,
+            steps: 8,
+        }),
+        Scenario::Autoscale(AutoscaleScenario {
+            interval: 900.0,
+            tokens_per_request: 256.0,
+            slo,
+            trace: DiurnalTrace::generate(cfg),
+        }),
+        Scenario::FailureInjection(
+            FailureScenario::new(slo, 2.0, 32.0, 180.0).with_failure(60.0, 8, 60.0),
+        ),
+    ];
+    let mut janus = JanusSystem::build(model.clone(), hw.clone(), &pop, 16, 31);
+    let mut sgl = SgLang::build(model.clone(), hw.clone(), &pop, 32);
+    let mut msi = MegaScaleInfer::build(model.clone(), hw.clone(), &pop, 16, 33);
+    let mut xds = XDeepServe::build(model, hw, &pop, 32, 34);
+    let systems: Vec<&mut dyn ServingSystem> = vec![&mut janus, &mut sgl, &mut msi, &mut xds];
+    for sys in systems {
+        for sc in &scenarios {
+            match engine::run(sys, sc, 12) {
+                ScenarioOutcome::FixedBatch(r) => {
+                    assert!(r.tpot_mean > 0.0 && r.gpus > 0, "{}", r.system);
+                }
+                ScenarioOutcome::Autoscale(r) => {
+                    assert_eq!(r.intervals.len(), 12, "{}", r.system);
+                    assert!(r.gpu_hours > 0.0, "{}", r.system);
+                }
+                ScenarioOutcome::FailureInjection(r) => {
+                    assert!(r.steps > 0, "{}", r.system);
+                    assert_eq!(r.reconfigurations, 2, "{}", r.system);
+                    assert_eq!(r.tpot.count(), r.steps, "{}", r.system);
+                }
+            }
+        }
+    }
+}
+
+/// Seeded-determinism contract: repeating any scenario with the same seed
+/// (and a freshly built system) yields bit-identical metrics.
+#[test]
+fn engine_scenarios_are_bit_deterministic() {
+    let build = || {
+        JanusSystem::build(
+            models::deepseek_v2(),
+            janus::config::hardware::autoscale_pool(),
+            &ExpertPopularity::Zipf { s: 0.4 },
+            16,
+            55,
+        )
+    };
+    let slo = Slo::from_ms(200.0);
+    let mut cfg = TraceConfig::one_day();
+    cfg.hours = 2.0;
+    cfg.mean_rate = 12.0;
+    let scenarios = [
+        Scenario::FixedBatch(FixedBatchScenario {
+            batch: 256,
+            slo,
+            steps: 12,
+        }),
+        Scenario::Autoscale(AutoscaleScenario {
+            interval: 900.0,
+            tokens_per_request: 256.0,
+            slo,
+            trace: DiurnalTrace::generate(cfg),
+        }),
+        Scenario::FailureInjection(
+            FailureScenario::new(slo, 3.0, 48.0, 240.0).with_failure(80.0, 12, 100.0),
+        ),
+    ];
+    for sc in &scenarios {
+        let fingerprint = |outcome: ScenarioOutcome| -> Vec<u64> {
+            match outcome {
+                ScenarioOutcome::FixedBatch(r) => vec![
+                    r.tpot_mean.to_bits(),
+                    r.tpot_p99.to_bits(),
+                    r.tpg.to_bits(),
+                    r.a_max_mean.to_bits(),
+                ],
+                ScenarioOutcome::Autoscale(r) => vec![
+                    r.gpu_hours.to_bits(),
+                    r.feasible_fraction.to_bits(),
+                    r.min_gpus as u64,
+                    r.max_gpus as u64,
+                ],
+                ScenarioOutcome::FailureInjection(r) => vec![
+                    r.tpot.mean().to_bits(),
+                    r.gpu_hours.to_bits(),
+                    r.slo_attainment.to_bits(),
+                    r.steps as u64,
+                    r.completed_requests as u64,
+                ],
+            }
+        };
+        let a = fingerprint(engine::run(&mut build(), sc, 99));
+        let b = fingerprint(engine::run(&mut build(), sc, 99));
+        assert_eq!(a, b, "scenario replay must be bit-identical");
+    }
+}
+
+/// Failure injection end to end: killing most of the per-side instance
+/// budget makes re-placement infeasible (the survivors cannot seat every
+/// expert), the decode loop keeps serving on the emergency layout, and
+/// recovery restores feasibility.
+#[test]
+fn failure_injection_measures_replacement() {
+    let slo = Slo::from_ms(200.0);
+    let sc = FailureScenario::new(slo, 4.0, 64.0, 600.0).with_failure(120.0, 28, 240.0);
+    let mut janus = JanusSystem::build(
+        models::deepseek_v2(),
+        janus::config::hardware::autoscale_pool(),
+        &ExpertPopularity::Uniform,
+        32,
+        71,
+    );
+    let r = engine::failure_injection(&mut janus, &sc, 13);
+    assert!(r.steps > 0 && r.completed_requests > 0);
+    assert!(r.degraded_steps > 0 && r.degraded_steps < r.steps);
+    assert!(
+        r.feasible_fraction < 1.0,
+        "28/32 instances lost must make outage decisions infeasible"
+    );
+    assert!(r.feasible_fraction > 0.0);
+    assert!(janus.configure_for_demand(256.0, slo).is_some(), "pool recovered");
 }
 
 /// Static expert parallelism (no redundancy) leaves no scheduling choice:
