@@ -18,8 +18,11 @@ use janus::workload::trace::{DiurnalTrace, TraceConfig};
 fn main() {
     let args = Args::from_env();
     let mut cfg = TraceConfig::one_day();
-    cfg.hours = args.f64_or("hours", 24.0);
-    cfg.mean_rate = args.f64_or("rate", 40.0);
+    // The decode loop is arrival-driven (per-token continuous batching),
+    // so runtime scales with total demand; the defaults keep the example
+    // quick. Pass --hours 24 --rate 40 for the full Fig 11 run.
+    cfg.hours = args.f64_or("hours", 6.0);
+    cfg.mean_rate = args.f64_or("rate", 12.0);
     let trace = DiurnalTrace::generate(cfg);
     println!(
         "trace: {:.0}h, mean {:.1} req/s, peak/mean {:.1}",
@@ -30,7 +33,7 @@ fn main() {
     // Tokens per request from the ShareGPT-like length model's mean.
     let lengths = LengthModel::sharegpt();
     let _ = lengths; // avg output 256 — used directly below
-    let sim = AutoscaleSim::new(900.0, 256.0, Slo::from_ms(200.0));
+    let sim = AutoscaleSim::new(900.0, 256.0, Slo::from_ms(200.0)).with_seed(1);
     let hw = autoscale_pool();
     let model = models::deepseek_v2();
     let pop = ExpertPopularity::Zipf { s: 0.4 };
@@ -38,9 +41,9 @@ fn main() {
     let mut janus = JanusSystem::build(model.clone(), hw.clone(), &pop, 32, 1);
     let mut sgl = SgLang::build(model.clone(), hw.clone(), &pop, 2);
     let mut msi = MegaScaleInfer::build(model, hw, &pop, 32, 3);
-    let rj = sim.run(&mut janus, &trace);
-    let rs = sim.run(&mut sgl, &trace);
-    let rm = sim.run(&mut msi, &trace);
+    let rj = sim.run(&mut janus, &trace).expect("valid autoscale scenario");
+    let rs = sim.run(&mut sgl, &trace).expect("valid autoscale scenario");
+    let rm = sim.run(&mut msi, &trace).expect("valid autoscale scenario");
 
     let mut t = Table::new(["hour", "demand tok/s", "Janus", "SGLang", "MSI"]);
     for (i, rec) in rj.intervals.iter().enumerate().step_by(2) {
@@ -55,12 +58,22 @@ fn main() {
     t.print();
 
     println!();
-    let mut s = Table::new(["system", "GPU-hours", "savings vs SGLang"]);
+    let mut s = Table::new([
+        "system",
+        "GPU-hours",
+        "savings vs SGLang",
+        "TPOT p99 ms",
+        "adm delay p99 ms",
+        "SLO att",
+    ]);
     for r in [&rj, &rm, &rs] {
         s.row([
             r.system.to_string(),
             fnum(r.gpu_hours, 1),
             format!("{:.1}%", (1.0 - r.gpu_hours / rs.gpu_hours) * 100.0),
+            fnum(r.tpot_p99 * 1e3, 1),
+            fnum(r.admission_delay_p99 * 1e3, 1),
+            fnum(r.slo_attainment, 3),
         ]);
     }
     s.print();

@@ -175,6 +175,17 @@ impl ServingSystem for JanusSystem {
         self.deployment.map(|d| d.total_gpus()).unwrap_or(0)
     }
 
+    fn batch_capacity(&self) -> usize {
+        // KV memory on the attention side bounds the in-flight batch:
+        // each of the n_attn instances holds B/n_attn requests' caches.
+        let n_attn = self.deployment.map(|d| d.n_attn).unwrap_or(0);
+        let per_instance = self
+            .scaler
+            .mem
+            .max_local_batch(self.s_ctx, &self.scaler.hw.gpu);
+        (per_instance * n_attn as f64).max(0.0) as usize
+    }
+
     fn label(&self) -> String {
         self.deployment
             .map(|d| d.label())

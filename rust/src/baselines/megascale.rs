@@ -276,6 +276,12 @@ impl ServingSystem for MegaScaleInfer {
         self.deployment.map(|d| d.total_gpus()).unwrap_or(0)
     }
 
+    fn batch_capacity(&self) -> usize {
+        let n_attn = self.deployment.map(|d| d.n_attn).unwrap_or(0);
+        let per_instance = self.mem.max_local_batch(self.s_ctx, &self.hw.gpu);
+        (per_instance * n_attn as f64).max(0.0) as usize
+    }
+
     fn label(&self) -> String {
         self.deployment
             .map(|d| d.label())

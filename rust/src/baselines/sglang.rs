@@ -251,6 +251,12 @@ impl ServingSystem for SgLang {
         self.gpus
     }
 
+    fn batch_capacity(&self) -> usize {
+        // KV caches share HBM with the full model replica; the running
+        // tier's leftover memory bounds the in-flight batch.
+        self.tier_b_max(self.gpus.max(TIERS[0])).max(0.0) as usize
+    }
+
     fn label(&self) -> String {
         format!("{}G", self.gpus)
     }

@@ -45,6 +45,16 @@ pub trait ServingSystem {
     /// GPUs in the current configuration.
     fn gpus(&self) -> usize;
 
+    /// Effective batch capacity per decode step under the current
+    /// configuration: the largest number of in-flight requests the
+    /// deployment can decode together, bounded by attention-side KV
+    /// memory for the disaggregated systems and by the HBM left beside
+    /// the full replica for monolithic ones. The continuous-batching
+    /// admission policy in [`crate::sim::engine`] joins queued requests
+    /// into the running batch up to this many slots each step. 0 when
+    /// nothing is deployed yet (the engine clamps to at least 1).
+    fn batch_capacity(&self) -> usize;
+
     /// Current configuration label.
     fn label(&self) -> String;
 

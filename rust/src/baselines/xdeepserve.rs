@@ -15,6 +15,7 @@ use crate::placement::ExpertPlacement;
 use crate::routing::gate::{ExpertPopularity, GateSim};
 use crate::routing::trace::ActivationTrace;
 use crate::scaling::littles_law::{self, FixedPoint};
+use crate::scaling::memory::AttnMemoryModel;
 use crate::scaling::AmaxTable;
 use crate::scheduler::baselines as sched;
 use crate::util::rng::Rng;
@@ -29,6 +30,8 @@ pub struct XDeepServe {
     model: MoeModel,
     tpot_model: TpotModel,
     amax: AmaxTable,
+    mem: AttnMemoryModel,
+    hw: HardwareProfile,
     gate: GateSim,
     deployment: Option<Deployment>,
     placement: Option<ExpertPlacement>,
@@ -70,10 +73,13 @@ impl XDeepServe {
         );
         let tpot_model =
             TpotModel::new(&model, &hw, CommScheme::OnePhase, GatingSide::Attention);
+        let mem = AttnMemoryModel::new(&model);
         XDeepServe {
             model,
             tpot_model,
             amax,
+            mem,
+            hw,
             gate,
             deployment: None,
             placement: None,
@@ -208,6 +214,12 @@ impl ServingSystem for XDeepServe {
 
     fn gpus(&self) -> usize {
         self.deployment.map(|d| d.total_gpus()).unwrap_or(0)
+    }
+
+    fn batch_capacity(&self) -> usize {
+        let n_attn = self.deployment.map(|d| d.n_attn).unwrap_or(0);
+        let per_instance = self.mem.max_local_batch(self.s_ctx, &self.hw.gpu);
+        (per_instance * n_attn as f64).max(0.0) as usize
     }
 
     fn label(&self) -> String {

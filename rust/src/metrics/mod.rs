@@ -1,5 +1,6 @@
 //! Serving metrics (§5.1): TPOT (mean/P99), per-GPU throughput (TPG),
-//! SLO attainment, and GPU-hours for the autoscaling comparison.
+//! SLO attainment, GPU-hours for the autoscaling comparison, and
+//! weighted latency distributions for the arrival-driven decode loop.
 
 use crate::util::stats;
 
@@ -49,6 +50,107 @@ impl TpotStats {
         }
         self.samples.iter().filter(|&&s| s <= slo_seconds).count() as f64
             / self.samples.len() as f64
+    }
+}
+
+/// Weighted latency distribution: per-step samples weighted by how many
+/// tokens (or requests) experienced the value. Every in-flight request
+/// in a decode step shares the step's TPOT, so recording `(tpot, batch)`
+/// once per step yields exact per-token percentiles without storing one
+/// sample per token.
+#[derive(Clone, Debug, Default)]
+pub struct WeightedLatency {
+    samples: Vec<(f64, u64)>,
+    total_weight: u64,
+    weighted_sum: f64,
+}
+
+impl WeightedLatency {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `weight` observations of `value` seconds.
+    pub fn record(&mut self, value: f64, weight: u64) {
+        if weight == 0 {
+            return;
+        }
+        self.samples.push((value, weight));
+        self.total_weight += weight;
+        self.weighted_sum += value * weight as f64;
+    }
+
+    /// Total observation weight (e.g. tokens).
+    pub fn count(&self) -> u64 {
+        self.total_weight
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total_weight == 0 {
+            0.0
+        } else {
+            self.weighted_sum / self.total_weight as f64
+        }
+    }
+
+    /// Weighted percentile (nearest-rank): the smallest recorded value
+    /// whose cumulative weight reaches `q`% of the total. 0.0 on empty
+    /// input. Deterministic for identical record sequences.
+    pub fn percentile(&self, q: f64) -> f64 {
+        self.percentiles(&[q])[0]
+    }
+
+    /// Several percentiles from one sort — use this over repeated
+    /// [`Self::percentile`] calls on large sample sets.
+    pub fn percentiles(&self, qs: &[f64]) -> Vec<f64> {
+        if self.total_weight == 0 {
+            return vec![0.0; qs.len()];
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.0.total_cmp(&b.0));
+        qs.iter()
+            .map(|&q| {
+                let target = (q / 100.0 * self.total_weight as f64).ceil().max(1.0) as u64;
+                let mut cum = 0u64;
+                for (v, w) in &sorted {
+                    cum += w;
+                    if cum >= target {
+                        return *v;
+                    }
+                }
+                sorted.last().map(|(v, _)| *v).unwrap_or(0.0)
+            })
+            .collect()
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples
+            .iter()
+            .map(|(v, _)| *v)
+            .fold(f64::NEG_INFINITY, f64::max)
+            .max(0.0)
+    }
+
+    /// Fraction of weight within the SLO (1.0 when empty).
+    pub fn attainment(&self, slo_seconds: f64) -> f64 {
+        if self.total_weight == 0 {
+            return 1.0;
+        }
+        let ok: u64 = self
+            .samples
+            .iter()
+            .filter(|(v, _)| *v <= slo_seconds)
+            .map(|(_, w)| *w)
+            .sum();
+        ok as f64 / self.total_weight as f64
     }
 }
 
@@ -110,6 +212,43 @@ mod tests {
     fn tpg_math() {
         assert!((tpg(7000.0, 10.0, 7) - 100.0).abs() < 1e-9);
         assert_eq!(tpg(100.0, 0.0, 4), 0.0);
+    }
+
+    #[test]
+    fn weighted_latency_percentiles() {
+        let mut w = WeightedLatency::new();
+        // 99 tokens at 0.1s, 1 token at 1.0s.
+        w.record(0.1, 99);
+        w.record(1.0, 1);
+        assert_eq!(w.count(), 100);
+        assert!((w.mean() - 0.109).abs() < 1e-12);
+        assert_eq!(w.p50(), 0.1);
+        assert_eq!(w.percentile(99.0), 0.1);
+        assert_eq!(w.percentile(100.0), 1.0);
+        assert_eq!(w.percentiles(&[50.0, 99.0, 100.0]), vec![0.1, 0.1, 1.0]);
+        assert!((w.attainment(0.5) - 0.99).abs() < 1e-12);
+        assert_eq!(w.max(), 1.0);
+    }
+
+    #[test]
+    fn weighted_latency_empty_and_zero_weight() {
+        let mut w = WeightedLatency::new();
+        assert_eq!(w.count(), 0);
+        assert_eq!(w.mean(), 0.0);
+        assert_eq!(w.p99(), 0.0);
+        assert_eq!(w.attainment(0.1), 1.0);
+        w.record(0.2, 0); // ignored
+        assert_eq!(w.count(), 0);
+    }
+
+    #[test]
+    fn weighted_latency_unsorted_inserts() {
+        let mut w = WeightedLatency::new();
+        w.record(0.3, 1);
+        w.record(0.1, 1);
+        w.record(0.2, 2);
+        assert_eq!(w.p50(), 0.2);
+        assert_eq!(w.percentile(25.0), 0.1);
     }
 
     #[test]

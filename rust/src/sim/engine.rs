@@ -8,11 +8,21 @@
 //! - [`FixedBatchScenario`] — fixed-batch decode-loop evaluation (Figs
 //!   8/9/10/12); [`super::decode_sim::evaluate_fixed_batch`] wraps it.
 //! - [`AutoscaleScenario`] — trace-driven diurnal autoscaling at a fixed
-//!   decision interval (Fig 11); [`super::autoscale_sim::AutoscaleSim`]
-//!   wraps it.
+//!   decision interval (Fig 11) with an **arrival-driven decode loop**:
+//!   requests from the seeded bursty stream enter a bounded admission
+//!   queue and join the in-flight batch as slots free up (per-token
+//!   join/leave — continuous batching), so per-request admission delay,
+//!   TTFT, and per-token TPOT are measured against the SLO instead of
+//!   being inferred from interval-averaged capacity.
+//!   [`super::autoscale_sim::AutoscaleSim`] wraps it.
 //! - [`FailureScenario`] — failure injection: kill and restore MoE/GPU
 //!   capacity mid-trace while bursty arrivals keep flowing, and measure
 //!   SLO attainment through the system's replica re-placement.
+//!
+//! The arrival-driven scenarios (autoscale, failure injection) reject
+//! degenerate configurations (zero horizon/interval/rate/…) with a
+//! descriptive [`ScenarioError`] instead of panicking; fixed-batch runs
+//! have no panic paths (a zero-step run reports empty stats).
 //!
 //! Seeded-determinism contract: running any scenario twice with the same
 //! seed (and a freshly built system) yields **bit-identical** metrics.
@@ -21,15 +31,25 @@
 //! golden regression tests pin this contract.
 
 use std::cmp::{Ordering, Reverse};
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
+use std::fmt;
 
 use crate::baselines::system::ServingSystem;
 use crate::config::serving::Slo;
-use crate::metrics::{GpuHours, TpotStats};
+use crate::metrics::{GpuHours, TpotStats, WeightedLatency};
 use crate::util::rng::Rng;
+use crate::util::stats::Accumulator;
 use crate::workload::arrivals::{ArrivalProcess, BurstyPoisson};
 use crate::workload::lengths::LengthModel;
 use crate::workload::trace::DiurnalTrace;
+
+/// Seed salt for the dedicated arrivals RNG ("ARRVIVAL" bytes): keeps
+/// the arrival stream independent of how many decode steps interleave,
+/// so determinism holds without pre-materializing the whole horizon.
+const ARRIVAL_STREAM_SALT: u64 = 0x4152_5256_4956_414C;
+
+/// Default bound on the admission queue of the arrival-driven scenarios.
+pub const DEFAULT_QUEUE_CAPACITY: usize = 4096;
 
 // ------------------------------------------------------------------ events
 
@@ -39,7 +59,9 @@ pub enum EventKind {
     /// Sample the next one-second arrival window (keeps the queue
     /// bounded instead of pre-pushing every arrival over the horizon).
     ArrivalWindow,
-    /// One request joins the in-flight pool with this many output tokens.
+    /// One request with this many output tokens arrives: it enters the
+    /// bounded admission queue (arrival-driven scenarios) and joins the
+    /// in-flight batch when a decode slot frees up.
     Arrival { output_tokens: u32 },
     /// Execute one decode step over the current in-flight batch.
     DecodeStep,
@@ -124,6 +146,72 @@ impl EventQueue {
     }
 }
 
+// ----------------------------------------------------------------- errors
+
+/// Why a scenario was rejected before running. Scenario entry points
+/// validate their configuration and return this instead of panicking on
+/// degenerate inputs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ScenarioError {
+    /// The scenario horizon (or trace length) must be a positive, finite
+    /// number of seconds.
+    NonPositiveHorizon(f64),
+    /// The scaling-decision interval must be positive, finite seconds.
+    NonPositiveInterval(f64),
+    /// A constant-rate scenario needs a positive, finite arrival rate.
+    NonPositiveArrivalRate(f64),
+    /// Mean output tokens per request must be positive and finite.
+    NonPositiveTokensPerRequest(f64),
+    /// Short-term burstiness (Gamma cv²) must be positive and finite.
+    NonPositiveBurstiness(f64),
+    /// The admission queue needs room for at least one request.
+    ZeroQueueCapacity,
+    /// The demand trace has an empty rate envelope.
+    EmptyTrace,
+    /// A failure plan has a non-finite or negative time/downtime.
+    InvalidFailurePlan { at: f64, downtime: f64 },
+}
+
+impl fmt::Display for ScenarioError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ScenarioError::NonPositiveHorizon(h) => {
+                write!(f, "scenario horizon must be positive finite seconds, got {h}")
+            }
+            ScenarioError::NonPositiveInterval(i) => {
+                write!(f, "decision interval must be positive finite seconds, got {i}")
+            }
+            ScenarioError::NonPositiveArrivalRate(r) => write!(
+                f,
+                "arrival rate must be positive finite req/s, got {r} \
+                 (use a rate trace for time-varying load)"
+            ),
+            ScenarioError::NonPositiveTokensPerRequest(t) => {
+                write!(f, "tokens per request must be positive and finite, got {t}")
+            }
+            ScenarioError::NonPositiveBurstiness(c) => {
+                write!(f, "burstiness cv² must be positive and finite, got {c}")
+            }
+            ScenarioError::ZeroQueueCapacity => {
+                write!(f, "admission queue capacity must be at least 1")
+            }
+            ScenarioError::EmptyTrace => {
+                write!(f, "demand trace has an empty rate envelope")
+            }
+            ScenarioError::InvalidFailurePlan { at, downtime } => write!(
+                f,
+                "failure plan needs finite non-negative times, got at={at}s downtime={downtime}s"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ScenarioError {}
+
+fn positive_finite(x: f64) -> bool {
+    x.is_finite() && x > 0.0
+}
+
 // --------------------------------------------------------------- scenarios
 
 /// Fixed-batch decode-loop evaluation (Fig 8): `steps` decode steps at a
@@ -135,16 +223,66 @@ pub struct FixedBatchScenario {
     pub steps: usize,
 }
 
-/// Trace-driven autoscaling (Fig 11): replay a diurnal demand trace
-/// against the system's scaling policy at a fixed decision interval.
+/// Trace-driven autoscaling (Fig 11) with a live, arrival-driven decode
+/// loop: the trace's rate envelope drives a seeded bursty arrival
+/// stream; requests wait in a bounded admission queue, join the
+/// in-flight batch under continuous batching (per-token join/leave up to
+/// the system's [`ServingSystem::batch_capacity`]), and the scaling
+/// policy re-sizes the deployment every `interval` seconds.
 #[derive(Clone, Debug)]
 pub struct AutoscaleScenario {
     /// Decision interval, seconds (paper: 900).
     pub interval: f64,
-    /// Decode-token demand per request (≈ average output length).
+    /// Mean output tokens per request (drives both the demand estimate
+    /// `rate × tokens` and the sampled request lengths).
     pub tokens_per_request: f64,
     pub slo: Slo,
+    /// Bound on the admission queue; arrivals beyond it are rejected.
+    pub queue_capacity: usize,
+    /// Short-term arrival burstiness (Gamma cv², see `workload::arrivals`).
+    pub burst_cv2: f64,
     pub trace: DiurnalTrace,
+}
+
+impl AutoscaleScenario {
+    /// Scenario with the default bounded queue and the trace's own
+    /// short-term burstiness.
+    pub fn new(interval: f64, tokens_per_request: f64, slo: Slo, trace: DiurnalTrace) -> Self {
+        AutoscaleScenario {
+            interval,
+            tokens_per_request,
+            slo,
+            queue_capacity: DEFAULT_QUEUE_CAPACITY,
+            burst_cv2: trace.config.burst_cv2,
+            trace,
+        }
+    }
+
+    /// Reject degenerate configurations with a descriptive error.
+    pub fn validate(&self) -> Result<(), ScenarioError> {
+        let horizon = self.trace.config.hours * 3600.0;
+        if !positive_finite(horizon) {
+            return Err(ScenarioError::NonPositiveHorizon(horizon));
+        }
+        if self.trace.envelope.is_empty() {
+            return Err(ScenarioError::EmptyTrace);
+        }
+        if !positive_finite(self.interval) {
+            return Err(ScenarioError::NonPositiveInterval(self.interval));
+        }
+        if !positive_finite(self.tokens_per_request) {
+            return Err(ScenarioError::NonPositiveTokensPerRequest(
+                self.tokens_per_request,
+            ));
+        }
+        if !positive_finite(self.burst_cv2) {
+            return Err(ScenarioError::NonPositiveBurstiness(self.burst_cv2));
+        }
+        if self.queue_capacity == 0 {
+            return Err(ScenarioError::ZeroQueueCapacity);
+        }
+        Ok(())
+    }
 }
 
 /// One planned outage.
@@ -202,6 +340,41 @@ impl FailureScenario {
         self.failures.push(FailurePlan { at, gpus, downtime });
         self
     }
+
+    /// Reject degenerate configurations with a descriptive error.
+    pub fn validate(&self) -> Result<(), ScenarioError> {
+        if !positive_finite(self.horizon) {
+            return Err(ScenarioError::NonPositiveHorizon(self.horizon));
+        }
+        if !positive_finite(self.decision_interval) {
+            return Err(ScenarioError::NonPositiveInterval(self.decision_interval));
+        }
+        if self.rate_trace.is_none() && !positive_finite(self.arrival_rate) {
+            return Err(ScenarioError::NonPositiveArrivalRate(self.arrival_rate));
+        }
+        if let Some(trace) = &self.rate_trace {
+            if trace.envelope.is_empty() {
+                return Err(ScenarioError::EmptyTrace);
+            }
+        }
+        if !positive_finite(self.tokens_per_request) {
+            return Err(ScenarioError::NonPositiveTokensPerRequest(
+                self.tokens_per_request,
+            ));
+        }
+        if !positive_finite(self.burst_cv2) {
+            return Err(ScenarioError::NonPositiveBurstiness(self.burst_cv2));
+        }
+        for f in &self.failures {
+            if !f.at.is_finite() || f.at < 0.0 || !f.downtime.is_finite() || f.downtime < 0.0 {
+                return Err(ScenarioError::InvalidFailurePlan {
+                    at: f.at,
+                    downtime: f.downtime,
+                });
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Any scenario, for the single-entry [`run`] API.
@@ -232,27 +405,67 @@ pub struct FixedBatchResult {
     pub slo_attainment: f64,
 }
 
-/// Per-interval scaling record.
+/// Per-interval scaling record of the arrival-driven autoscale run.
 #[derive(Clone, Debug)]
 pub struct IntervalRecord {
     pub t_start: f64,
+    /// True interval length, seconds — the final interval is truncated
+    /// when the horizon is not a multiple of the decision interval, and
+    /// every duration-weighted aggregate uses this value.
+    pub duration: f64,
     pub demand: f64,
     pub gpus: usize,
     pub label: String,
     pub feasible: bool,
+    /// Deepest the admission queue got during the interval.
+    pub queue_depth_max: usize,
+    /// Mean queue wait of requests admitted during the interval (s).
+    pub admission_delay_mean: f64,
+    /// Per-token P99 TPOT over the interval's decode steps (s).
+    pub tpot_p99: f64,
+    /// Decode steps executed during the interval.
+    pub steps: usize,
 }
 
-/// Full autoscaling run result.
+/// Full autoscaling run result (arrival-driven decode loop).
 #[derive(Clone, Debug)]
 pub struct AutoscaleResult {
     pub system: &'static str,
     pub intervals: Vec<IntervalRecord>,
     pub gpu_hours: f64,
-    /// Fraction of intervals where the policy found an SLO-feasible
-    /// configuration.
+    /// Duration-weighted fraction of the horizon governed by an
+    /// SLO-feasible configuration (a truncated final interval counts by
+    /// its true length).
     pub feasible_fraction: f64,
     pub min_gpus: usize,
     pub max_gpus: usize,
+    /// Decode steps executed by the live loop.
+    pub steps: usize,
+    /// Requests admitted into the decode batch.
+    pub admitted_requests: usize,
+    /// Requests that emitted their full output within the horizon.
+    pub completed_requests: usize,
+    /// Arrivals dropped because the bounded admission queue was full.
+    pub rejected_requests: usize,
+    /// Output tokens generated across all decode steps.
+    pub generated_tokens: usize,
+    /// Queue wait from arrival to joining the decode batch (s).
+    pub admission_delay_mean: f64,
+    pub admission_delay_p50: f64,
+    pub admission_delay_p99: f64,
+    /// Admission delay + first decode step (time to first token, s).
+    pub ttft_p50: f64,
+    pub ttft_p99: f64,
+    /// Per-token latency: every in-flight token in a step shares the
+    /// step's TPOT, so these are batch-weighted step latencies.
+    pub tpot_mean: f64,
+    pub tpot_p50: f64,
+    pub tpot_p99: f64,
+    /// Fraction of generated tokens within the TPOT SLO.
+    pub slo_attainment: f64,
+    /// Admission-queue depth sampled at each decode step.
+    pub queue_depth_mean: f64,
+    pub queue_depth_max: usize,
 }
 
 /// Failure-injection run result.
@@ -292,19 +505,20 @@ pub enum ScenarioOutcome {
 
 // --------------------------------------------------------------- execution
 
-/// Run any scenario for any system from one entry point.
+/// Run any scenario for any system from one entry point. Degenerate
+/// scenario configurations come back as [`ScenarioError`]s.
 pub fn run<S: ServingSystem + ?Sized>(
     system: &mut S,
     scenario: &Scenario,
     seed: u64,
-) -> ScenarioOutcome {
-    match scenario {
+) -> Result<ScenarioOutcome, ScenarioError> {
+    Ok(match scenario {
         Scenario::FixedBatch(sc) => ScenarioOutcome::FixedBatch(fixed_batch(system, sc, seed)),
-        Scenario::Autoscale(sc) => ScenarioOutcome::Autoscale(autoscale(system, sc)),
+        Scenario::Autoscale(sc) => ScenarioOutcome::Autoscale(autoscale(system, sc, seed)?),
         Scenario::FailureInjection(sc) => {
-            ScenarioOutcome::FailureInjection(failure_injection(system, sc, seed))
+            ScenarioOutcome::FailureInjection(failure_injection(system, sc, seed)?)
         }
-    }
+    })
 }
 
 /// Fixed-batch decode evaluation: configure once, then chain decode-step
@@ -344,59 +558,293 @@ pub fn fixed_batch<S: ServingSystem + ?Sized>(
         feasible,
         tpot_mean,
         tpot_p99: stats.p99(),
-        tpg: sc.batch as f64 / tpot_mean / gpus.max(1) as f64,
+        // Zero-step (or zero-latency) runs report 0 throughput, not inf.
+        tpg: if tpot_mean > 0.0 {
+            sc.batch as f64 / tpot_mean / gpus.max(1) as f64
+        } else {
+            0.0
+        },
         a_max_mean: a_sum / sc.steps.max(1) as f64,
         slo_attainment: stats.attainment(sc.slo.tpot),
     }
 }
 
-/// Trace-driven autoscaling: chained scaling-decision events walk the
-/// trace at the decision interval.
+fn account(hours: &mut GpuHours, last: &mut f64, now: f64, gpus: usize) {
+    hours.add(gpus, (now - *last).max(0.0));
+    *last = now;
+}
+
+fn track(gpus: usize, min_g: &mut usize, max_g: &mut usize) {
+    if gpus > 0 {
+        *min_g = (*min_g).min(gpus);
+        *max_g = (*max_g).max(gpus);
+    }
+}
+
+/// Trace-driven autoscaling over a live decode loop: arrivals, decode
+/// steps, and scaling decisions all flow through one event queue.
+///
+/// Continuous-batching admission: each decode step first moves queued
+/// requests into the in-flight batch while slots (up to the system's
+/// current [`ServingSystem::batch_capacity`]) are free, then executes one
+/// step over whatever is in flight — requests join and leave per token,
+/// not in fixed batches. Arrivals beyond the bounded admission queue are
+/// rejected and counted.
 pub fn autoscale<S: ServingSystem + ?Sized>(
     system: &mut S,
     sc: &AutoscaleScenario,
-) -> AutoscaleResult {
+    seed: u64,
+) -> Result<AutoscaleResult, ScenarioError> {
+    sc.validate()?;
     let horizon = sc.trace.config.hours * 3600.0;
     let mut queue = EventQueue::new();
-    if horizon > 0.0 {
-        queue.push(0.0, EventKind::ScalingDecision);
-    }
-    let mut records = Vec::new();
+    // Order matters at t = 0: the sizing decision lands before the first
+    // arrival window so admission sees a configured system.
+    queue.push(0.0, EventKind::ScalingDecision);
+    queue.push(0.0, EventKind::ArrivalWindow);
+
+    let bursty = BurstyPoisson::new(sc.burst_cv2);
+    let lengths = LengthModel::with_means(16.0, sc.tokens_per_request.max(1.0), 0.6);
+    let mut decode_rng = Rng::seed_from_u64(seed);
+    let mut arrival_rng = Rng::seed_from_u64(seed ^ ARRIVAL_STREAM_SALT);
+
+    // Live state: the bounded admission queue holds (arrival time,
+    // output tokens); the in-flight vector holds remaining tokens.
+    let mut waiting: VecDeque<(f64, u32)> = VecDeque::new();
+    let mut in_flight: Vec<u32> = Vec::new();
+    let mut step_pending = false;
+    let mut joined_delays: Vec<f64> = Vec::new();
+
+    // Aggregate metrics.
     let mut hours = GpuHours::new();
-    let mut feasible_count = 0usize;
-    while let Some(ev) = queue.pop() {
-        debug_assert!(matches!(ev.kind, EventKind::ScalingDecision));
-        let t = ev.time;
-        let t_end = (t + sc.interval).min(horizon);
-        let req_rate = sc.trace.mean_rate_in(t, t_end);
-        let token_demand = req_rate * sc.tokens_per_request;
-        let cfg = system.configure_for_demand(token_demand.max(1.0), sc.slo);
-        let feasible = cfg.is_some();
-        if feasible {
-            feasible_count += 1;
-        }
-        let gpus = system.gpus();
-        hours.add(gpus, t_end - t);
-        records.push(IntervalRecord {
-            t_start: t,
-            demand: token_demand,
-            gpus,
-            label: system.label(),
-            feasible,
-        });
-        if t_end < horizon {
-            queue.push(t_end, EventKind::ScalingDecision);
+    let mut last_account = 0.0f64;
+    let mut min_gpus = usize::MAX;
+    let mut max_gpus = 0usize;
+    let mut steps = 0usize;
+    let mut admitted = 0usize;
+    let mut completed = 0usize;
+    let mut rejected = 0usize;
+    let mut generated = 0usize;
+    let mut ok_tokens = 0usize;
+    let mut adm_delay = WeightedLatency::new();
+    let mut ttft = WeightedLatency::new();
+    let mut token_tpot = WeightedLatency::new();
+    let mut depth_acc = Accumulator::new();
+    let mut queue_depth_max = 0usize;
+
+    // Per-interval accumulator, flushed into an IntervalRecord at the
+    // next scaling decision (or at the horizon).
+    struct OpenInterval {
+        t_start: f64,
+        t_end: f64,
+        demand: f64,
+        gpus: usize,
+        label: String,
+        feasible: bool,
+        queue_depth_max: usize,
+        adm_delay: Accumulator,
+        tpot: WeightedLatency,
+        steps: usize,
+    }
+
+    fn flush_interval(
+        open: Option<OpenInterval>,
+        records: &mut Vec<IntervalRecord>,
+        feasible_seconds: &mut f64,
+        total_seconds: &mut f64,
+    ) {
+        if let Some(iv) = open {
+            let duration = iv.t_end - iv.t_start;
+            *total_seconds += duration;
+            if iv.feasible {
+                *feasible_seconds += duration;
+            }
+            records.push(IntervalRecord {
+                t_start: iv.t_start,
+                duration,
+                demand: iv.demand,
+                gpus: iv.gpus,
+                label: iv.label,
+                feasible: iv.feasible,
+                queue_depth_max: iv.queue_depth_max,
+                admission_delay_mean: iv.adm_delay.mean(),
+                tpot_p99: iv.tpot.p99(),
+                steps: iv.steps,
+            });
         }
     }
-    let n = records.len().max(1);
-    AutoscaleResult {
+
+    let mut open: Option<OpenInterval> = None;
+    let mut records: Vec<IntervalRecord> = Vec::new();
+    let mut feasible_seconds = 0.0f64;
+    let mut total_seconds = 0.0f64;
+
+    while let Some(ev) = queue.pop() {
+        if ev.time > horizon {
+            break;
+        }
+        match ev.kind {
+            EventKind::ArrivalWindow => {
+                let dt = (horizon - ev.time).min(1.0);
+                if dt > 0.0 {
+                    let rate = sc.trace.rate_at(ev.time);
+                    let n = bursty.arrivals(&mut arrival_rng, rate, dt);
+                    for _ in 0..n {
+                        let at = ev.time + arrival_rng.f64() * dt;
+                        let output_tokens = lengths.sample(&mut arrival_rng).output_tokens;
+                        queue.push(at, EventKind::Arrival { output_tokens });
+                    }
+                    let next = ev.time + dt;
+                    if next < horizon {
+                        queue.push(next, EventKind::ArrivalWindow);
+                    }
+                }
+            }
+            EventKind::Arrival { output_tokens } => {
+                if waiting.len() < sc.queue_capacity {
+                    waiting.push_back((ev.time, output_tokens.max(1)));
+                    queue_depth_max = queue_depth_max.max(waiting.len());
+                    if let Some(iv) = open.as_mut() {
+                        iv.queue_depth_max = iv.queue_depth_max.max(waiting.len());
+                    }
+                    if !step_pending {
+                        step_pending = true;
+                        queue.push(ev.time, EventKind::DecodeStep);
+                    }
+                } else {
+                    rejected += 1;
+                }
+            }
+            EventKind::DecodeStep => {
+                // Continuous-batching admission: queued requests join the
+                // running batch while slots are free.
+                let cap = system.batch_capacity().max(1);
+                joined_delays.clear();
+                while in_flight.len() < cap {
+                    match waiting.pop_front() {
+                        Some((arrived, tokens)) => {
+                            let delay = ev.time - arrived;
+                            adm_delay.record(delay, 1);
+                            if let Some(iv) = open.as_mut() {
+                                iv.adm_delay.push(delay);
+                            }
+                            admitted += 1;
+                            in_flight.push(tokens);
+                            joined_delays.push(delay);
+                        }
+                        None => break,
+                    }
+                }
+                if in_flight.is_empty() {
+                    step_pending = false;
+                    continue;
+                }
+                let batch = in_flight.len();
+                let out = system.step(batch, &mut decode_rng);
+                steps += 1;
+                generated += batch;
+                token_tpot.record(out.tpot, batch as u64);
+                if out.tpot <= sc.slo.tpot {
+                    ok_tokens += batch;
+                }
+                // A newly joined request's first token lands at the end
+                // of this step: TTFT = queue wait + one step.
+                for &delay in &joined_delays {
+                    ttft.record(delay + out.tpot, 1);
+                }
+                depth_acc.push(waiting.len() as f64);
+                if let Some(iv) = open.as_mut() {
+                    iv.tpot.record(out.tpot, batch as u64);
+                    iv.steps += 1;
+                }
+                let before = in_flight.len();
+                for r in in_flight.iter_mut() {
+                    *r -= 1;
+                }
+                in_flight.retain(|&r| r > 0);
+                completed += before - in_flight.len();
+                queue.push(ev.time + out.tpot, EventKind::DecodeStep);
+            }
+            EventKind::ScalingDecision => {
+                account(&mut hours, &mut last_account, ev.time, system.gpus());
+                flush_interval(
+                    open.take(),
+                    &mut records,
+                    &mut feasible_seconds,
+                    &mut total_seconds,
+                );
+                let t_end = (ev.time + sc.interval).min(horizon);
+                let req_rate = sc.trace.mean_rate_in(ev.time, t_end);
+                let token_demand = (req_rate * sc.tokens_per_request).max(1.0);
+                let cfg = system.configure_for_demand(token_demand, sc.slo);
+                let feasible = cfg.is_some();
+                let gpus = system.gpus();
+                track(gpus, &mut min_gpus, &mut max_gpus);
+                open = Some(OpenInterval {
+                    t_start: ev.time,
+                    t_end,
+                    demand: token_demand,
+                    gpus,
+                    label: system.label(),
+                    feasible,
+                    queue_depth_max: waiting.len(),
+                    adm_delay: Accumulator::new(),
+                    tpot: WeightedLatency::new(),
+                    steps: 0,
+                });
+                if t_end < horizon {
+                    queue.push(t_end, EventKind::ScalingDecision);
+                }
+            }
+            EventKind::Failure { .. } | EventKind::Recovery { .. } => {
+                unreachable!("autoscale scenario schedules no failure events")
+            }
+        }
+    }
+    account(&mut hours, &mut last_account, horizon, system.gpus());
+    flush_interval(
+        open.take(),
+        &mut records,
+        &mut feasible_seconds,
+        &mut total_seconds,
+    );
+
+    // One sort per distribution for both percentiles.
+    let adm_pcts = adm_delay.percentiles(&[50.0, 99.0]);
+    let ttft_pcts = ttft.percentiles(&[50.0, 99.0]);
+    let tpot_pcts = token_tpot.percentiles(&[50.0, 99.0]);
+    Ok(AutoscaleResult {
         system: system.name(),
         gpu_hours: hours.total(),
-        feasible_fraction: feasible_count as f64 / n as f64,
-        min_gpus: records.iter().map(|r| r.gpus).min().unwrap_or(0),
-        max_gpus: records.iter().map(|r| r.gpus).max().unwrap_or(0),
+        feasible_fraction: if total_seconds > 0.0 {
+            feasible_seconds / total_seconds
+        } else {
+            1.0
+        },
+        min_gpus: if min_gpus == usize::MAX { 0 } else { min_gpus },
+        max_gpus,
+        steps,
+        admitted_requests: admitted,
+        completed_requests: completed,
+        rejected_requests: rejected,
+        generated_tokens: generated,
+        admission_delay_mean: adm_delay.mean(),
+        admission_delay_p50: adm_pcts[0],
+        admission_delay_p99: adm_pcts[1],
+        ttft_p50: ttft_pcts[0],
+        ttft_p99: ttft_pcts[1],
+        tpot_mean: token_tpot.mean(),
+        tpot_p50: tpot_pcts[0],
+        tpot_p99: tpot_pcts[1],
+        slo_attainment: if generated == 0 {
+            1.0
+        } else {
+            ok_tokens as f64 / generated as f64
+        },
+        queue_depth_mean: depth_acc.mean(),
+        queue_depth_max,
         intervals: records,
-    }
+    })
 }
 
 /// Failure injection: arrivals, decode steps, scaling decisions, and
@@ -405,8 +853,8 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
     system: &mut S,
     sc: &FailureScenario,
     seed: u64,
-) -> FailureResult {
-    assert!(sc.horizon > 0.0 && sc.decision_interval > 0.0);
+) -> Result<FailureResult, ScenarioError> {
+    sc.validate()?;
     let mut rng = Rng::seed_from_u64(seed);
     let mut queue = EventQueue::new();
 
@@ -432,7 +880,7 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
     // determinism holds without pre-materializing the whole horizon.
     let bursty = BurstyPoisson::new(sc.burst_cv2);
     let lengths = LengthModel::with_means(16.0, sc.tokens_per_request.max(1.0), 0.6);
-    let mut arrival_rng = Rng::seed_from_u64(seed ^ 0x4152_5256_4956_414C);
+    let mut arrival_rng = Rng::seed_from_u64(seed ^ ARRIVAL_STREAM_SALT);
     queue.push(0.0, EventKind::ArrivalWindow);
 
     // Demand estimate for sizing decisions (offered load).
@@ -462,17 +910,6 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
     let mut last_account = 0.0f64;
     let mut min_gpus = usize::MAX;
     let mut max_gpus = 0usize;
-
-    fn account(hours: &mut GpuHours, last: &mut f64, now: f64, gpus: usize) {
-        hours.add(gpus, (now - *last).max(0.0));
-        *last = now;
-    }
-    fn track(gpus: usize, min_g: &mut usize, max_g: &mut usize) {
-        if gpus > 0 {
-            *min_g = (*min_g).min(gpus);
-            *max_g = (*max_g).max(gpus);
-        }
-    }
 
     while let Some(ev) = queue.pop() {
         if ev.time > sc.horizon {
@@ -585,7 +1022,7 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
             ok as f64 / total as f64
         }
     };
-    FailureResult {
+    Ok(FailureResult {
         system: system.name(),
         steps,
         completed_requests: completed,
@@ -600,12 +1037,13 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
         min_gpus: if min_gpus == usize::MAX { 0 } else { min_gpus },
         max_gpus,
         tpot: stats,
-    }
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::baselines::system::{ConfigInfo, StepOutcome};
     use crate::baselines::{JanusSystem, MegaScaleInfer, ServingSystem, SgLang, XDeepServe};
     use crate::config::hardware::{autoscale_pool, paper_testbed};
     use crate::config::models::deepseek_v2;
@@ -639,6 +1077,70 @@ mod tests {
         )
     }
 
+    /// Deterministic mock for engine-mechanics tests: scripted
+    /// feasibility per decision, constant step time and capacity.
+    struct ScriptedSystem {
+        feasibility: Vec<bool>,
+        decisions: usize,
+        gpus: usize,
+        capacity: usize,
+        tpot: f64,
+    }
+
+    impl ScriptedSystem {
+        fn new(feasibility: Vec<bool>, gpus: usize, capacity: usize, tpot: f64) -> Self {
+            ScriptedSystem {
+                feasibility,
+                decisions: 0,
+                gpus,
+                capacity,
+                tpot,
+            }
+        }
+    }
+
+    impl ServingSystem for ScriptedSystem {
+        fn name(&self) -> &'static str {
+            "scripted"
+        }
+
+        fn configure(&mut self, _batch: usize, slo: Slo) -> Option<ConfigInfo> {
+            self.configure_for_demand(1.0, slo)
+        }
+
+        fn configure_for_demand(&mut self, _lambda: f64, _slo: Slo) -> Option<ConfigInfo> {
+            let ok = self.feasibility.get(self.decisions).copied().unwrap_or(true);
+            self.decisions += 1;
+            if ok {
+                Some(ConfigInfo {
+                    label: "scripted".into(),
+                    gpus: self.gpus,
+                })
+            } else {
+                None
+            }
+        }
+
+        fn step(&mut self, _batch: usize, _rng: &mut Rng) -> StepOutcome {
+            StepOutcome {
+                tpot: self.tpot,
+                a_max: 1,
+            }
+        }
+
+        fn gpus(&self) -> usize {
+            self.gpus
+        }
+
+        fn batch_capacity(&self) -> usize {
+            self.capacity
+        }
+
+        fn label(&self) -> String {
+            "scripted".into()
+        }
+    }
+
     #[test]
     fn unified_run_covers_all_scenarios_for_all_systems() {
         let model = deepseek_v2();
@@ -649,15 +1151,14 @@ mod tests {
             slo: Slo::from_ms(200.0),
             steps: 5,
         });
-        let mut cfg = TraceConfig::one_day();
-        cfg.hours = 2.0;
-        cfg.mean_rate = 12.0;
-        let auto = Scenario::Autoscale(AutoscaleScenario {
-            interval: 900.0,
-            tokens_per_request: 256.0,
-            slo: Slo::from_ms(200.0),
-            trace: DiurnalTrace::generate(cfg),
-        });
+        // 900 s ramp at 300 s decisions: three intervals of live,
+        // arrival-driven decode.
+        let auto = Scenario::Autoscale(AutoscaleScenario::new(
+            300.0,
+            32.0,
+            Slo::from_ms(200.0),
+            DiurnalTrace::ramp(0.25, 30.0, 1.0, 8.0, 5),
+        ));
         let fail = Scenario::FailureInjection(
             FailureScenario::new(Slo::from_ms(200.0), 2.0, 32.0, 120.0)
                 .with_failure(40.0, 8, 30.0),
@@ -669,14 +1170,27 @@ mod tests {
         let systems: Vec<&mut dyn ServingSystem> = vec![&mut j, &mut s, &mut m, &mut x];
         for sys in systems {
             for sc in [&fixed, &auto, &fail] {
-                match run(sys, sc, 9) {
+                match run(sys, sc, 9).expect("valid scenario") {
                     ScenarioOutcome::FixedBatch(r) => {
                         assert!(r.tpot_mean > 0.0, "{}", r.system);
                         assert!(r.gpus > 0, "{}", r.system);
                     }
                     ScenarioOutcome::Autoscale(r) => {
-                        assert_eq!(r.intervals.len(), 8, "{}", r.system);
+                        assert_eq!(r.intervals.len(), 3, "{}", r.system);
                         assert!(r.gpu_hours > 0.0, "{}", r.system);
+                        assert!(r.steps > 0, "{}: no decode steps", r.system);
+                        assert!(r.admitted_requests > 0, "{}", r.system);
+                        assert!(r.completed_requests > 0, "{}", r.system);
+                        assert!(
+                            r.generated_tokens >= r.completed_requests,
+                            "{}",
+                            r.system
+                        );
+                        assert!(r.tpot_p99 >= r.tpot_p50, "{}", r.system);
+                        assert!(r.ttft_p99 >= r.admission_delay_p99, "{}", r.system);
+                        for iv in &r.intervals {
+                            assert!(iv.duration > 0.0, "{}", r.system);
+                        }
                     }
                     ScenarioOutcome::FailureInjection(r) => {
                         assert!(r.steps > 0, "{}", r.system);
@@ -689,6 +1203,189 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_scenarios_are_rejected_not_panicking() {
+        let slo = Slo::from_ms(200.0);
+        // Failure scenario: horizon / interval / rate / tokens / cv².
+        let base = FailureScenario::new(slo, 2.0, 32.0, 100.0);
+        assert!(base.validate().is_ok());
+        let mut sc = base.clone();
+        sc.horizon = 0.0;
+        assert_eq!(sc.validate(), Err(ScenarioError::NonPositiveHorizon(0.0)));
+        let mut sc = base.clone();
+        sc.horizon = f64::NAN;
+        assert!(matches!(
+            sc.validate(),
+            Err(ScenarioError::NonPositiveHorizon(_))
+        ));
+        let mut sc = base.clone();
+        sc.decision_interval = -5.0;
+        assert_eq!(sc.validate(), Err(ScenarioError::NonPositiveInterval(-5.0)));
+        let mut sc = base.clone();
+        sc.arrival_rate = 0.0;
+        assert_eq!(
+            sc.validate(),
+            Err(ScenarioError::NonPositiveArrivalRate(0.0))
+        );
+        let mut sc = base.clone();
+        sc.tokens_per_request = 0.0;
+        assert_eq!(
+            sc.validate(),
+            Err(ScenarioError::NonPositiveTokensPerRequest(0.0))
+        );
+        let mut sc = base.clone();
+        sc.burst_cv2 = 0.0;
+        assert_eq!(sc.validate(), Err(ScenarioError::NonPositiveBurstiness(0.0)));
+        let sc = base.clone().with_failure(-1.0, 4, 10.0);
+        assert!(matches!(
+            sc.validate(),
+            Err(ScenarioError::InvalidFailurePlan { .. })
+        ));
+
+        // Autoscale scenario: interval / tokens / queue / cv² / trace.
+        let trace = DiurnalTrace::ramp(0.1, 30.0, 1.0, 2.0, 1);
+        let good = AutoscaleScenario::new(60.0, 32.0, slo, trace.clone());
+        assert!(good.validate().is_ok());
+        let mut sc = good.clone();
+        sc.interval = 0.0;
+        assert_eq!(sc.validate(), Err(ScenarioError::NonPositiveInterval(0.0)));
+        let mut sc = good.clone();
+        sc.tokens_per_request = -1.0;
+        assert_eq!(
+            sc.validate(),
+            Err(ScenarioError::NonPositiveTokensPerRequest(-1.0))
+        );
+        let mut sc = good.clone();
+        sc.queue_capacity = 0;
+        assert_eq!(sc.validate(), Err(ScenarioError::ZeroQueueCapacity));
+        let mut sc = good.clone();
+        sc.burst_cv2 = f64::INFINITY;
+        assert!(matches!(
+            sc.validate(),
+            Err(ScenarioError::NonPositiveBurstiness(_))
+        ));
+        let empty = DiurnalTrace {
+            config: TraceConfig::one_day(),
+            envelope: vec![],
+        };
+        let sc = AutoscaleScenario::new(60.0, 32.0, slo, empty);
+        assert_eq!(sc.validate(), Err(ScenarioError::EmptyTrace));
+
+        // The entry points surface the same errors instead of panicking.
+        let mut sys = ScriptedSystem::new(vec![], 8, 16, 0.05);
+        let mut bad_auto = good.clone();
+        bad_auto.interval = 0.0;
+        assert!(autoscale(&mut sys, &bad_auto, 1).is_err());
+        let mut bad_fail = base.clone();
+        bad_fail.horizon = -1.0;
+        assert!(failure_injection(&mut sys, &bad_fail, 1).is_err());
+        assert!(run(&mut sys, &Scenario::Autoscale(bad_auto), 1).is_err());
+        // Errors render descriptively.
+        let msg = ScenarioError::NonPositiveArrivalRate(0.0).to_string();
+        assert!(msg.contains("arrival rate"), "{msg}");
+    }
+
+    #[test]
+    fn partial_final_interval_weighted_by_true_duration() {
+        // Horizon 1350 s at a 900 s interval: intervals [0, 900) and
+        // [900, 1350). The first decision is feasible, the second is
+        // not, so the duration-weighted feasible fraction is exactly
+        // 900/1350 = 2/3 (a count-based average would say 1/2), and the
+        // 8-GPU pool accrues exactly 8 × 1350 s = 3 GPU-hours.
+        let trace = DiurnalTrace::ramp(0.375, 50.0, 1.0, 1.0, 3);
+        let sc = AutoscaleScenario::new(900.0, 8.0, Slo::from_ms(200.0), trace);
+        let mut sys = ScriptedSystem::new(vec![true, false], 8, 16, 0.05);
+        let r = autoscale(&mut sys, &sc, 17).expect("valid scenario");
+        assert_eq!(r.intervals.len(), 2);
+        assert_eq!(r.intervals[0].duration, 900.0);
+        assert_eq!(r.intervals[1].duration, 450.0);
+        assert!(r.intervals[0].feasible);
+        assert!(!r.intervals[1].feasible);
+        assert!(
+            (r.feasible_fraction - 2.0 / 3.0).abs() < 1e-15,
+            "duration-weighted fraction {} != 2/3",
+            r.feasible_fraction
+        );
+        assert!((r.gpu_hours - 3.0).abs() < 1e-12, "gpu_hours {}", r.gpu_hours);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_and_measures_backlog() {
+        // Capacity-1 decode at 1 s per step against ~20 req/s: the
+        // 4-deep admission queue must overflow, and admitted requests
+        // must see real queue wait.
+        let trace = DiurnalTrace::ramp(60.0 / 3600.0, 10.0, 20.0, 20.0, 9);
+        let mut sc = AutoscaleScenario::new(30.0, 4.0, Slo::from_ms(200.0), trace);
+        sc.queue_capacity = 4;
+        let mut sys = ScriptedSystem::new(vec![], 4, 1, 1.0);
+        let r = autoscale(&mut sys, &sc, 23).expect("valid scenario");
+        assert!(r.steps > 40, "steps {}", r.steps);
+        assert!(r.rejected_requests > 0, "queue never overflowed");
+        assert!(r.queue_depth_max <= 4);
+        assert!(r.admission_delay_p99 > 0.0);
+        assert!(r.ttft_p99 >= r.admission_delay_p99 + sc.slo.tpot);
+        // Constant 1 s step time: per-token latency is exactly 1 s and
+        // always violates the 200 ms SLO.
+        assert_eq!(r.tpot_mean, 1.0);
+        assert_eq!(r.tpot_p99, 1.0);
+        assert_eq!(r.slo_attainment, 0.0);
+        assert_eq!(r.generated_tokens, r.steps); // batch capacity 1
+    }
+
+    #[test]
+    fn autoscale_is_bit_deterministic_for_all_systems() {
+        let model = deepseek_v2();
+        let hw = autoscale_pool();
+        let pop = ExpertPopularity::Zipf { s: 0.4 };
+        let trace = DiurnalTrace::ramp(0.1, 30.0, 1.0, 6.0, 11);
+        let sc = AutoscaleScenario::new(120.0, 32.0, Slo::from_ms(200.0), trace);
+        let fingerprint = |r: &AutoscaleResult| -> Vec<u64> {
+            vec![
+                r.gpu_hours.to_bits(),
+                r.feasible_fraction.to_bits(),
+                r.tpot_mean.to_bits(),
+                r.tpot_p99.to_bits(),
+                r.admission_delay_p99.to_bits(),
+                r.ttft_p99.to_bits(),
+                r.slo_attainment.to_bits(),
+                r.queue_depth_mean.to_bits(),
+                r.steps as u64,
+                r.admitted_requests as u64,
+                r.completed_requests as u64,
+                r.rejected_requests as u64,
+                r.generated_tokens as u64,
+            ]
+        };
+        // Each system twice, freshly built: bit-identical metrics.
+        for which in 0..4usize {
+            let run_once = || -> Vec<u64> {
+                let r = match which {
+                    0 => {
+                        let mut s =
+                            JanusSystem::build(model.clone(), hw.clone(), &pop, 16, 41);
+                        autoscale(&mut s, &sc, 77).unwrap()
+                    }
+                    1 => {
+                        let mut s = SgLang::build(model.clone(), hw.clone(), &pop, 42);
+                        autoscale(&mut s, &sc, 77).unwrap()
+                    }
+                    2 => {
+                        let mut s =
+                            MegaScaleInfer::build(model.clone(), hw.clone(), &pop, 16, 43);
+                        autoscale(&mut s, &sc, 77).unwrap()
+                    }
+                    _ => {
+                        let mut s =
+                            XDeepServe::build(model.clone(), hw.clone(), &pop, 32, 44);
+                        autoscale(&mut s, &sc, 77).unwrap()
+                    }
+                };
+                fingerprint(&r)
+            };
+            assert_eq!(run_once(), run_once(), "system #{which} not deterministic");
+        }
+    }
+
+    #[test]
     fn failure_injection_degrades_and_recovers() {
         // Kill 28 of the 32 per-side instance budget: the survivors cannot
         // seat every DeepSeek-V2 expert (n_e_min = 6 > 4), so re-placement
@@ -697,7 +1394,7 @@ mod tests {
         let sc = FailureScenario::new(Slo::from_ms(200.0), 4.0, 64.0, 600.0)
             .with_failure(120.0, 28, 240.0);
         let mut sys = janus(32, 7);
-        let r = failure_injection(&mut sys, &sc, 11);
+        let r = failure_injection(&mut sys, &sc, 11).expect("valid scenario");
         assert!(r.steps > 0);
         assert!(r.completed_requests > 0);
         assert_eq!(r.reconfigurations, 2);
@@ -720,7 +1417,7 @@ mod tests {
             .with_failure(60.0, 12, 120.0);
         let run_once = || {
             let mut sys = janus(16, 21);
-            let r = failure_injection(&mut sys, &sc, 33);
+            let r = failure_injection(&mut sys, &sc, 33).expect("valid scenario");
             (
                 r.steps,
                 r.completed_requests,

@@ -8,12 +8,20 @@
 //!   8/9/10/12), a thin wrapper over [`engine::FixedBatchScenario`].
 //! - [`autoscale_sim`] — trace-driven scaling over a diurnal trace with a
 //!   periodic decision interval (drives Fig 11), a thin wrapper over
-//!   [`engine::AutoscaleScenario`], mirroring the paper's trace-driven
-//!   simulation methodology (§5.2).
+//!   [`engine::AutoscaleScenario`]. The scenario runs a live,
+//!   arrival-driven decode loop with a bounded admission queue and
+//!   continuous batching (per-token join/leave), reporting per-request
+//!   admission delay, TTFT, and per-token TPOT percentiles alongside
+//!   GPU-hours.
 //!
 //! Failure injection ([`engine::FailureScenario`]) lives directly in the
 //! engine: planned outages remove capacity mid-trace and the run measures
 //! SLO attainment through the system's replica re-placement.
+//!
+//! The arrival-driven scenario entry points (autoscale, failure
+//! injection) validate their configuration and return a descriptive
+//! [`engine::ScenarioError`] on degenerate inputs (zero
+//! horizon/interval/rate/…) instead of panicking.
 
 pub mod autoscale_sim;
 pub mod decode_sim;
@@ -23,5 +31,6 @@ pub use autoscale_sim::{AutoscaleResult, AutoscaleSim};
 pub use decode_sim::{evaluate_fixed_batch, FixedBatchResult};
 pub use engine::{
     AutoscaleScenario, EventKind, EventQueue, FailurePlan, FailureResult, FailureScenario,
-    FixedBatchScenario, IntervalRecord, Scenario, ScenarioOutcome,
+    FixedBatchScenario, IntervalRecord, Scenario, ScenarioError, ScenarioOutcome,
+    DEFAULT_QUEUE_CAPACITY,
 };

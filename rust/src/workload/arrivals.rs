@@ -39,6 +39,18 @@ impl BurstyPoisson {
         BurstyPoisson { cv2 }
     }
 
+    /// Non-panicking constructor for caller-supplied configuration.
+    /// (The simulator pre-validates `burst_cv2` in its scenario
+    /// `validate()` methods and then uses `new`; use this when wiring
+    /// user input straight into an arrival process.)
+    pub fn try_new(cv2: f64) -> Result<Self, String> {
+        if cv2.is_finite() && cv2 > 0.0 {
+            Ok(BurstyPoisson { cv2 })
+        } else {
+            Err(format!("burstiness cv² must be a positive finite number, got {cv2}"))
+        }
+    }
+
     /// Calibration loosely matched to BurstGPT's reported burstiness.
     pub fn burstgpt_like() -> Self {
         BurstyPoisson { cv2: 0.5 }
@@ -90,5 +102,13 @@ mod tests {
     fn zero_rate_yields_zero() {
         let mut rng = Rng::seed_from_u64(3);
         assert_eq!(BurstyPoisson::new(0.5).arrivals(&mut rng, 0.0, 1.0), 0);
+    }
+
+    #[test]
+    fn try_new_rejects_degenerate_cv2() {
+        assert!(BurstyPoisson::try_new(0.5).is_ok());
+        assert!(BurstyPoisson::try_new(0.0).is_err());
+        assert!(BurstyPoisson::try_new(-1.0).is_err());
+        assert!(BurstyPoisson::try_new(f64::NAN).is_err());
     }
 }

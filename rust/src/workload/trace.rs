@@ -105,6 +105,38 @@ impl DiurnalTrace {
         DiurnalTrace { config, envelope }
     }
 
+    /// Synthetic linear-ramp trace: the rate climbs from `rate_lo` to
+    /// `rate_hi` over `hours`, at `step`-second envelope resolution.
+    /// Short-horizon live-decode runs (and tests) use this to exercise
+    /// scale-up/scale-down without simulating a full diurnal day
+    /// token by token.
+    pub fn ramp(hours: f64, step: f64, rate_lo: f64, rate_hi: f64, seed: u64) -> Self {
+        let steps = ((hours * 3600.0 / step.max(1e-9)).round() as usize).max(1);
+        let envelope: Vec<f64> = (0..steps)
+            .map(|i| {
+                let frac = if steps == 1 {
+                    0.0
+                } else {
+                    i as f64 / (steps - 1) as f64
+                };
+                rate_lo + (rate_hi - rate_lo) * frac
+            })
+            .collect();
+        let mean_rate = envelope.iter().sum::<f64>() / steps as f64;
+        let peak = envelope.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        DiurnalTrace {
+            config: TraceConfig {
+                hours,
+                mean_rate,
+                peak_to_mean: if mean_rate > 0.0 { peak / mean_rate } else { 1.0 },
+                burst_cv2: 0.3,
+                step,
+                seed,
+            },
+            envelope,
+        }
+    }
+
     /// Peak-to-mean ratio of the envelope.
     pub fn peak_to_mean(&self) -> f64 {
         let mean: f64 =
@@ -212,6 +244,16 @@ mod tests {
         let afternoon = tr.rate_at(14.0 * 3600.0);
         let night = tr.rate_at(2.0 * 3600.0);
         assert!(afternoon > 5.0 * (night + 1e-9), "{afternoon} vs {night}");
+    }
+
+    #[test]
+    fn ramp_trace_spans_requested_rates() {
+        let tr = DiurnalTrace::ramp(0.5, 60.0, 2.0, 20.0, 7);
+        assert_eq!(tr.envelope.len(), 30);
+        assert!((tr.rate_at(0.0) - 2.0).abs() < 1e-9);
+        assert!((tr.rate_at(0.5 * 3600.0) - 20.0).abs() < 1e-9);
+        assert!((tr.config.mean_rate - 11.0).abs() < 1e-9);
+        assert!(tr.mean_rate_in(0.0, 600.0) < tr.mean_rate_in(1200.0, 1800.0));
     }
 
     #[test]

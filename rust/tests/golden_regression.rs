@@ -1,35 +1,142 @@
-//! Golden regression pinning the perf model + engine: seeded fixed-batch
-//! runs for Janus and the three baselines at two batch sizes, asserting
-//! TPOT mean/P99 and tokens/s/GPU against a committed snapshot to 1e-9.
+//! Golden regressions pinning the perf model + engine:
 //!
-//! Bootstrap: on a machine without the snapshot (first run after a
-//! clone, or after deleting it), the test writes
-//! `tests/golden/fixed_batch.tsv` and passes with a notice — commit the
-//! file to pin behavior. Re-bless intentionally changed numbers with
-//! `JANUS_BLESS=1 cargo test -q golden`. Any unintentional drift in the
-//! perf model, schedulers, placement, or engine then fails here before
-//! it contaminates downstream figures.
+//! - `fixed_batch.tsv` — seeded fixed-batch runs for Janus and the three
+//!   baselines at two batch sizes (TPOT mean/P99, tokens/s/GPU).
+//! - `autoscale.tsv` — the arrival-driven autoscale scenario (continuous
+//!   batching + bounded admission queue) for all four systems: GPU-hours,
+//!   duration-weighted feasible fraction, per-token TPOT percentiles,
+//!   admission-delay P99, SLO attainment, and the integer flow counters.
+//!
+//! Bootstrap: on a machine without a snapshot (first run after a clone,
+//! or after deleting it), the test writes the file and passes with a
+//! notice — commit it to pin behavior. With `JANUS_REQUIRE_GOLDEN` set
+//! (the CI test step sets it), a missing snapshot FAILS instead of
+//! silently re-bootstrapping, so an accidentally deleted baseline cannot
+//! erase the drift reference. Re-bless intentionally changed numbers
+//! with `JANUS_BLESS=1 cargo test -q golden`.
 
 use std::fmt::Write as _;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use janus::baselines::{JanusSystem, MegaScaleInfer, ServingSystem, SgLang, XDeepServe};
 use janus::config::hardware::paper_testbed;
 use janus::config::models;
 use janus::config::serving::Slo;
-use janus::sim::engine::{self, FixedBatchScenario};
+use janus::sim::engine::{self, AutoscaleScenario, FixedBatchScenario};
+use janus::workload::trace::DiurnalTrace;
 
 const STEPS: usize = 20;
 const SEED: u64 = 424242;
 const BATCHES: [usize; 2] = [64, 256];
 const TOLERANCE: f64 = 1e-9;
 
-fn snapshot_path() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/fixed_batch.tsv")
+fn snapshot_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(format!("tests/golden/{name}"))
+}
+
+/// Shared bootstrap/bless/require logic: returns the committed snapshot
+/// when a comparison should run, None when the fresh snapshot was just
+/// (re-)written.
+fn committed_or_bootstrap(path: &Path, fresh: &str) -> Option<String> {
+    let bless = std::env::var("JANUS_BLESS").is_ok();
+    if bless || !path.exists() {
+        // With JANUS_REQUIRE_GOLDEN set (CI), a missing snapshot fails
+        // instead of silently re-bootstrapping — re-bootstrapping would
+        // erase the drift baseline.
+        assert!(
+            bless || std::env::var("JANUS_REQUIRE_GOLDEN").is_err(),
+            "golden snapshot missing at {} — generate it locally \
+             (`cargo test -q golden`) and commit it",
+            path.display()
+        );
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(path, fresh).unwrap();
+        eprintln!(
+            "golden: {} snapshot at {} — commit it to pin behavior",
+            if bless { "re-blessed" } else { "bootstrapped" },
+            path.display()
+        );
+        return None;
+    }
+    Some(std::fs::read_to_string(path).unwrap())
+}
+
+/// Parse `name \t f64 × n_floats \t u64 × n_ints` rows, skipping comments.
+fn parse_rows(snapshot: &str, n_floats: usize, n_ints: usize) -> Vec<(String, Vec<f64>, Vec<u64>)> {
+    snapshot
+        .lines()
+        .filter(|l| !l.trim_start().starts_with('#') && !l.trim().is_empty())
+        .map(|l| {
+            let f: Vec<&str> = l.split('\t').collect();
+            assert_eq!(
+                f.len(),
+                1 + n_floats + n_ints,
+                "malformed snapshot line: {l:?}"
+            );
+            let floats: Vec<f64> = f[1..1 + n_floats]
+                .iter()
+                .map(|x| x.parse().expect("float field"))
+                .collect();
+            let ints: Vec<u64> = f[1 + n_floats..]
+                .iter()
+                .map(|x| x.parse().expect("int field"))
+                .collect();
+            (f[0].to_string(), floats, ints)
+        })
+        .collect()
+}
+
+/// Compare two parsed snapshots within `TOLERANCE` on floats, exactly on
+/// integer counters.
+fn compare_rows(
+    committed: &[(String, Vec<f64>, Vec<u64>)],
+    current: &[(String, Vec<f64>, Vec<u64>)],
+    float_names: &[&str],
+    int_names: &[&str],
+) {
+    assert_eq!(
+        committed.len(),
+        current.len(),
+        "snapshot row count changed — rerun with JANUS_BLESS=1 if intended"
+    );
+    for ((c_key, c_f, c_i), (n_key, n_f, n_i)) in committed.iter().zip(current.iter()) {
+        assert_eq!(c_key, n_key, "snapshot rows reordered");
+        for (i, (c, n)) in c_f.iter().zip(n_f.iter()).enumerate() {
+            assert!(
+                (c - n).abs() <= TOLERANCE,
+                "{c_key} {}: committed {c:.17e} vs current {n:.17e} \
+                 (drift {:.3e} > {TOLERANCE:.0e}) — simulator behavior changed; \
+                 rerun with JANUS_BLESS=1 only if intentional",
+                float_names[i],
+                (c - n).abs()
+            );
+        }
+        for (i, (c, n)) in c_i.iter().zip(n_i.iter()).enumerate() {
+            assert_eq!(
+                c, n,
+                "{c_key} {}: committed {c} vs current {n} — simulator \
+                 behavior changed; rerun with JANUS_BLESS=1 only if intentional",
+                int_names[i]
+            );
+        }
+    }
+}
+
+fn build_systems(
+    model: &janus::config::models::MoeModel,
+    hw: &janus::config::hardware::HardwareProfile,
+    pop: &janus::routing::gate::ExpertPopularity,
+) -> (JanusSystem, SgLang, MegaScaleInfer, XDeepServe) {
+    (
+        JanusSystem::build(model.clone(), hw.clone(), pop, 16, 42),
+        SgLang::build(model.clone(), hw.clone(), pop, 43),
+        MegaScaleInfer::build(model.clone(), hw.clone(), pop, 16, 44),
+        XDeepServe::build(model.clone(), hw.clone(), pop, 32, 45),
+    )
 }
 
 /// One snapshot row per (system, batch).
-fn current_snapshot() -> String {
+fn current_fixed_batch_snapshot() -> String {
     let model = models::deepseek_v2();
     let hw = paper_testbed();
     let pop = janus::routing::gate::ExpertPopularity::Zipf { s: 0.4 };
@@ -37,13 +144,10 @@ fn current_snapshot() -> String {
     let mut out = String::from(
         "# Golden fixed-batch snapshot (DeepSeek-V2, paper testbed, zipf 0.4,\n\
          # SLO 200 ms, steps 20, seed 424242). Regenerate: JANUS_BLESS=1.\n\
-         # system\tbatch\ttpot_mean\ttpot_p99\ttpg\n",
+         # system/batch\ttpot_mean\ttpot_p99\ttpg\n",
     );
     for &batch in &BATCHES {
-        let mut janus = JanusSystem::build(model.clone(), hw.clone(), &pop, 16, 42);
-        let mut sgl = SgLang::build(model.clone(), hw.clone(), &pop, 43);
-        let mut msi = MegaScaleInfer::build(model.clone(), hw.clone(), &pop, 16, 44);
-        let mut xds = XDeepServe::build(model.clone(), hw.clone(), &pop, 32, 45);
+        let (mut janus, mut sgl, mut msi, mut xds) = build_systems(&model, &hw, &pop);
         let systems: Vec<&mut dyn ServingSystem> =
             vec![&mut janus, &mut sgl, &mut msi, &mut xds];
         for sys in systems {
@@ -54,7 +158,7 @@ fn current_snapshot() -> String {
             );
             writeln!(
                 out,
-                "{}\t{}\t{:.17e}\t{:.17e}\t{:.17e}",
+                "{}/B{}\t{:.17e}\t{:.17e}\t{:.17e}",
                 r.system, batch, r.tpot_mean, r.tpot_p99, r.tpg
             )
             .unwrap();
@@ -63,78 +167,89 @@ fn current_snapshot() -> String {
     out
 }
 
-fn parse(snapshot: &str) -> Vec<(String, usize, [f64; 3])> {
-    snapshot
-        .lines()
-        .filter(|l| !l.trim_start().starts_with('#') && !l.trim().is_empty())
-        .map(|l| {
-            let f: Vec<&str> = l.split('\t').collect();
-            assert_eq!(f.len(), 5, "malformed snapshot line: {l:?}");
-            (
-                f[0].to_string(),
-                f[1].parse().expect("batch"),
-                [
-                    f[2].parse().expect("tpot_mean"),
-                    f[3].parse().expect("tpot_p99"),
-                    f[4].parse().expect("tpg"),
-                ],
-            )
-        })
-        .collect()
+/// One snapshot row per system over the arrival-driven autoscale ramp.
+/// The 720 s horizon is deliberately NOT a multiple of the 300 s
+/// decision interval, so the truncated final interval's duration
+/// weighting is pinned too.
+fn current_autoscale_snapshot() -> String {
+    let model = models::deepseek_v2();
+    let hw = paper_testbed();
+    let pop = janus::routing::gate::ExpertPopularity::Zipf { s: 0.4 };
+    let trace = DiurnalTrace::ramp(720.0 / 3600.0, 30.0, 1.0, 8.0, 4242);
+    let scenario = AutoscaleScenario::new(300.0, 64.0, Slo::from_ms(200.0), trace);
+    let mut out = String::from(
+        "# Golden arrival-driven autoscale snapshot (DeepSeek-V2, paper\n\
+         # testbed, zipf 0.4, SLO 200 ms, 720 s ramp 1->8 req/s, 64\n\
+         # tok/req, 300 s decisions, seed 424242). Regenerate: JANUS_BLESS=1.\n\
+         # system\tgpu_hours\tfeasible_fraction\ttpot_mean\ttpot_p99\tadm_p99\tattainment\
+\tsteps\tadmitted\tcompleted\trejected\tgenerated\n",
+    );
+    let (mut janus, mut sgl, mut msi, mut xds) = build_systems(&model, &hw, &pop);
+    let systems: Vec<&mut dyn ServingSystem> = vec![&mut janus, &mut sgl, &mut msi, &mut xds];
+    for sys in systems {
+        let r = engine::autoscale(sys, &scenario, SEED).expect("valid scenario");
+        writeln!(
+            out,
+            "{}\t{:.17e}\t{:.17e}\t{:.17e}\t{:.17e}\t{:.17e}\t{:.17e}\t{}\t{}\t{}\t{}\t{}",
+            r.system,
+            r.gpu_hours,
+            r.feasible_fraction,
+            r.tpot_mean,
+            r.tpot_p99,
+            r.admission_delay_p99,
+            r.slo_attainment,
+            r.steps,
+            r.admitted_requests,
+            r.completed_requests,
+            r.rejected_requests,
+            r.generated_tokens
+        )
+        .unwrap();
+    }
+    out
 }
 
 #[test]
 fn fixed_batch_metrics_match_snapshot() {
-    let path = snapshot_path();
-    let fresh = current_snapshot();
-    let bless = std::env::var("JANUS_BLESS").is_ok();
-    if bless || !path.exists() {
-        // Once the snapshot is committed, set JANUS_REQUIRE_GOLDEN in CI
-        // so a missing/deleted snapshot fails instead of silently
-        // re-bootstrapping (which would erase the drift baseline).
-        assert!(
-            bless || std::env::var("JANUS_REQUIRE_GOLDEN").is_err(),
-            "golden snapshot missing at {} — generate it locally \
-             (`cargo test -q golden`) and commit it",
-            path.display()
-        );
-        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
-        std::fs::write(&path, &fresh).unwrap();
-        eprintln!(
-            "golden: {} snapshot at {} — commit it to pin behavior",
-            if bless { "re-blessed" } else { "bootstrapped" },
-            path.display()
-        );
+    let path = snapshot_path("fixed_batch.tsv");
+    let fresh = current_fixed_batch_snapshot();
+    let Some(committed) = committed_or_bootstrap(&path, &fresh) else {
         return;
-    }
-    let committed = parse(&std::fs::read_to_string(&path).unwrap());
-    let current = parse(&fresh);
-    assert_eq!(
-        committed.len(),
-        current.len(),
-        "snapshot row count changed — rerun with JANUS_BLESS=1 if intended"
+    };
+    compare_rows(
+        &parse_rows(&committed, 3, 0),
+        &parse_rows(&fresh, 3, 0),
+        &["tpot_mean", "tpot_p99", "tpg"],
+        &[],
     );
-    let metric_names = ["tpot_mean", "tpot_p99", "tpg"];
-    for ((c_sys, c_batch, c_vals), (n_sys, n_batch, n_vals)) in
-        committed.iter().zip(current.iter())
-    {
-        assert_eq!((c_sys, c_batch), (n_sys, n_batch), "snapshot rows reordered");
-        for (i, (c, n)) in c_vals.iter().zip(n_vals.iter()).enumerate() {
-            assert!(
-                (c - n).abs() <= TOLERANCE,
-                "{c_sys} B={c_batch} {}: committed {c:.17e} vs current {n:.17e} \
-                 (drift {:.3e} > {TOLERANCE:.0e}) — perf-model behavior changed; \
-                 rerun with JANUS_BLESS=1 only if intentional",
-                metric_names[i],
-                (c - n).abs()
-            );
-        }
-    }
 }
 
-/// The snapshot generator itself is bit-deterministic — the precondition
-/// for the golden file being meaningful across machines and runs.
+#[test]
+fn autoscale_metrics_match_snapshot() {
+    let path = snapshot_path("autoscale.tsv");
+    let fresh = current_autoscale_snapshot();
+    let Some(committed) = committed_or_bootstrap(&path, &fresh) else {
+        return;
+    };
+    compare_rows(
+        &parse_rows(&committed, 6, 5),
+        &parse_rows(&fresh, 6, 5),
+        &[
+            "gpu_hours",
+            "feasible_fraction",
+            "tpot_mean",
+            "tpot_p99",
+            "adm_p99",
+            "attainment",
+        ],
+        &["steps", "admitted", "completed", "rejected", "generated"],
+    );
+}
+
+/// The snapshot generators are bit-deterministic — the precondition for
+/// the golden files being meaningful across machines and runs.
 #[test]
 fn snapshot_generation_is_deterministic() {
-    assert_eq!(current_snapshot(), current_snapshot());
+    assert_eq!(current_fixed_batch_snapshot(), current_fixed_batch_snapshot());
+    assert_eq!(current_autoscale_snapshot(), current_autoscale_snapshot());
 }
