@@ -1,12 +1,13 @@
 //! Janus as a `ServingSystem`: Algorithm 2 scaling + AEBS + EGate + 2PC.
 
+use crate::comm::CommScratch;
 use crate::config::hardware::HardwareProfile;
 use crate::config::models::MoeModel;
 use crate::config::serving::{self, Deployment, SchedulerKind, Slo};
 use crate::placement::ExpertPlacement;
 use crate::routing::gate::{ExpertPopularity, GateSim};
-use crate::routing::trace::ActivationTrace;
-use crate::scaling::{AmaxTable, Scaler};
+use crate::routing::trace::{ActivationTrace, RoutingBatch};
+use crate::scaling::{AmaxTable, DecisionCache, DecisionKind, Scaler};
 use crate::scheduler::aebs;
 use crate::util::rng::Rng;
 
@@ -19,6 +20,15 @@ pub struct JanusSystem {
     deployment: Option<Deployment>,
     placement: Option<ExpertPlacement>,
     ws: aebs::Workspace,
+    /// Reusable routing buffer for the zero-alloc decode step.
+    routing: RoutingBatch,
+    /// Reusable comm-plan buffers for the zero-alloc TPOT evaluation.
+    comm_scratch: CommScratch,
+    /// Memoized Algorithm-2 decisions, keyed on the exact
+    /// (demand-or-batch, SLO, n_max) inputs — the search is a pure
+    /// function of those once the â_max table is built, so a hit replays
+    /// the identical deployment without re-running the enumeration.
+    decisions: DecisionCache<Option<Deployment>>,
     s_ctx: f64,
     /// Full per-side instance budget; `scaler.n_max` shrinks below this
     /// while GPUs are failed (see `fail_gpus`/`restore_gpus`).
@@ -52,6 +62,7 @@ impl JanusSystem {
             &mut rng,
         );
         let ws = aebs::Workspace::new(model.experts, n_max);
+        let routing = RoutingBatch::zeroed(0, model.top_k, model.experts);
         let scaler = Scaler::new(model, hw, amax, n_max);
         JanusSystem {
             scaler,
@@ -59,6 +70,9 @@ impl JanusSystem {
             deployment: None,
             placement: None,
             ws,
+            routing,
+            comm_scratch: CommScratch::new(),
+            decisions: DecisionCache::default(),
             s_ctx: 512.0,
             base_n_max: n_max,
         }
@@ -75,6 +89,11 @@ impl JanusSystem {
 
     pub fn deployment(&self) -> Option<Deployment> {
         self.deployment
+    }
+
+    /// (hits, misses) of the memoized scaling-decision cache.
+    pub fn decision_cache_stats(&self) -> (u64, u64) {
+        (self.decisions.hits(), self.decisions.misses())
     }
 
     /// Best-effort deployment when no candidate meets the SLO: the
@@ -114,6 +133,42 @@ impl JanusSystem {
             self.apply(d);
         }
     }
+
+    /// Memoized Algorithm-2 decision: replay the cached deployment for
+    /// `key`, or run `search` against the scaler and record it.
+    fn decide(
+        &mut self,
+        key: crate::scaling::DecisionKey,
+        search: impl FnOnce(&Scaler) -> Option<Deployment>,
+    ) -> Option<Deployment> {
+        match self.decisions.get(&key) {
+            Some(d) => d,
+            None => {
+                let d = search(&self.scaler);
+                self.decisions.insert(key, d);
+                d
+            }
+        }
+    }
+
+    /// Adopt a (possibly replayed) decision: deploy it, or — when the
+    /// search found nothing feasible — keep the live deployment /
+    /// fall back per `ensure_deployed` and report infeasibility.
+    fn adopt(&mut self, decision: Option<Deployment>) -> Option<ConfigInfo> {
+        match decision {
+            Some(d) => {
+                self.apply(d);
+                Some(ConfigInfo {
+                    label: d.label(),
+                    gpus: d.total_gpus(),
+                })
+            }
+            None => {
+                self.ensure_deployed();
+                None
+            }
+        }
+    }
 }
 
 impl ServingSystem for JanusSystem {
@@ -122,43 +177,33 @@ impl ServingSystem for JanusSystem {
     }
 
     fn configure(&mut self, batch: usize, slo: Slo) -> Option<ConfigInfo> {
-        match self.scaler.optimize_fixed_batch(batch as f64, slo, self.s_ctx) {
-            Some(plan) => {
-                self.apply(plan.deployment);
-                Some(ConfigInfo {
-                    label: plan.deployment.label(),
-                    gpus: plan.deployment.total_gpus(),
-                })
-            }
-            None => {
-                self.ensure_deployed();
-                None
-            }
-        }
+        let pool = self.scaler.n_max as u64;
+        let key = self.decisions.key(DecisionKind::FixedBatch, batch as f64, slo, pool);
+        let s_ctx = self.s_ctx;
+        let decision = self.decide(key, |sc| {
+            sc.optimize_fixed_batch(batch as f64, slo, s_ctx)
+                .map(|plan| plan.deployment)
+        });
+        self.adopt(decision)
     }
 
     fn configure_for_demand(&mut self, lambda: f64, slo: Slo) -> Option<ConfigInfo> {
-        match self.scaler.optimize(lambda, slo, self.s_ctx) {
-            Some(plan) => {
-                self.apply(plan.deployment);
-                Some(ConfigInfo {
-                    label: plan.deployment.label(),
-                    gpus: plan.deployment.total_gpus(),
-                })
-            }
-            None => {
-                self.ensure_deployed();
-                None
-            }
-        }
+        let pool = self.scaler.n_max as u64;
+        let key = self.decisions.key(DecisionKind::Demand, lambda, slo, pool);
+        let s_ctx = self.s_ctx;
+        let decision = self.decide(key, |sc| {
+            sc.optimize(lambda, slo, s_ctx).map(|plan| plan.deployment)
+        });
+        self.adopt(decision)
     }
 
     fn step(&mut self, batch: usize, rng: &mut Rng) -> StepOutcome {
         let d = self.deployment.expect("configure before step");
+        self.gate.sample_batch_into(rng, batch, &mut self.routing);
         let placement = self.placement.as_ref().expect("placement");
-        let routing = self.gate.sample_batch(rng, batch);
-        let a_max = aebs::a_max_only(&mut self.ws, &routing, placement);
-        let lat = self.scaler.tpot_model.tpot(
+        let a_max = aebs::a_max_only(&mut self.ws, &self.routing, placement);
+        let lat = self.scaler.tpot_model.tpot_with(
+            &mut self.comm_scratch,
             batch as f64,
             d.n_attn,
             d.n_moe,
@@ -204,18 +249,19 @@ impl ServingSystem for JanusSystem {
         // Re-placement: drop the dead deployment, rebuild on the
         // surviving pool (a different n_e selects a different replica
         // placement from the â_max table), and fall back to the best
-        // seatable layout when the survivors cannot meet the SLO.
+        // seatable layout when the survivors cannot meet the SLO. The
+        // decision itself goes through the same memo as
+        // `configure_for_demand` — the pool fingerprint (n_max) keys the
+        // cache, so post-failure pools never replay healthy decisions.
         self.deployment = None;
         self.placement = None;
-        let cfg = self.scaler.optimize(lambda, slo, self.s_ctx).map(|plan| {
-            self.apply(plan.deployment);
-            ConfigInfo {
-                label: plan.deployment.label(),
-                gpus: plan.deployment.total_gpus(),
-            }
+        let pool = self.scaler.n_max as u64;
+        let key = self.decisions.key(DecisionKind::Demand, lambda, slo, pool);
+        let s_ctx = self.s_ctx;
+        let decision = self.decide(key, |sc| {
+            sc.optimize(lambda, slo, s_ctx).map(|plan| plan.deployment)
         });
-        self.ensure_deployed();
-        cfg
+        self.adopt(decision)
     }
 }
 
@@ -255,6 +301,51 @@ mod tests {
             .configure_for_demand(2000.0, Slo::from_ms(200.0))
             .expect("feasible");
         assert!(cfg.gpus > 0);
+    }
+
+    #[test]
+    fn memoized_decisions_replay_identically() {
+        let build = || {
+            JanusSystem::build(
+                deepseek_v2(),
+                paper_testbed(),
+                &ExpertPopularity::Uniform,
+                16,
+                45,
+            )
+        };
+        let slo = Slo::from_ms(200.0);
+        let mut cached = build();
+        let first = cached.configure_for_demand(3000.0, slo);
+        let second = cached.configure_for_demand(3000.0, slo); // memo hit
+        assert_eq!(first, second);
+        assert!(cached.decision_cache_stats().0 >= 1, "no cache hit recorded");
+        // The replayed decision leaves the system in the same state a
+        // fresh search would.
+        let mut fresh = build();
+        assert_eq!(fresh.configure_for_demand(3000.0, slo), second);
+        assert_eq!(fresh.deployment(), cached.deployment());
+        assert_eq!(fresh.label(), cached.label());
+    }
+
+    #[test]
+    fn cache_keys_on_pool_so_failures_never_replay_healthy_decisions() {
+        let mut sys = JanusSystem::build(
+            deepseek_v2(),
+            paper_testbed(),
+            &ExpertPopularity::Uniform,
+            16,
+            46,
+        );
+        let slo = Slo::from_ms(200.0);
+        let healthy = sys.configure_for_demand(2000.0, slo).expect("feasible");
+        sys.fail_gpus(12);
+        // Same demand on the degraded pool: 4 instances cannot seat 160
+        // experts, so the cached healthy decision must NOT be replayed.
+        assert!(sys.reconfigure_for_pool(2000.0, slo).is_none());
+        sys.restore_gpus(12);
+        let again = sys.configure_for_demand(2000.0, slo).expect("feasible");
+        assert_eq!(healthy, again);
     }
 
     #[test]

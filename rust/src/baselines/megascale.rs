@@ -7,6 +7,7 @@
 //! execution times for pipelined operation — which skips many
 //! resource-efficient asymmetric configurations (Fig 8/11).
 
+use crate::comm::CommScratch;
 use crate::config::hardware::HardwareProfile;
 use crate::config::models::MoeModel;
 use crate::config::serving::{
@@ -15,10 +16,10 @@ use crate::config::serving::{
 use crate::perfmodel::TpotModel;
 use crate::placement::ExpertPlacement;
 use crate::routing::gate::{ExpertPopularity, GateSim};
-use crate::routing::trace::ActivationTrace;
+use crate::routing::trace::{ActivationTrace, RoutingBatch};
 use crate::scaling::littles_law::{self, FixedPoint};
 use crate::scaling::memory::AttnMemoryModel;
-use crate::scaling::AmaxTable;
+use crate::scaling::{AmaxTable, DecisionCache, DecisionKind};
 use crate::scheduler::baselines as sched;
 use crate::util::rng::Rng;
 
@@ -35,6 +36,17 @@ pub struct MegaScaleInfer {
     gate: GateSim,
     deployment: Option<Deployment>,
     placement: Option<ExpertPlacement>,
+    /// Reusable routing buffer for the zero-alloc decode step.
+    routing: RoutingBatch,
+    /// Reusable scheduler buffers for the a_max-only step path.
+    sched_ws: sched::BaselineWorkspace,
+    /// Reusable comm-plan buffers for the zero-alloc TPOT evaluation.
+    comm_scratch: CommScratch,
+    /// Memoized scaling decisions: (applied deployment, SLO-feasible?),
+    /// keyed on (demand-or-batch, SLO, n_max). Every search branch —
+    /// feasible pick or the balanced fallback — ends in `apply`, so the
+    /// pair replays the exact end state.
+    decisions: DecisionCache<(Deployment, bool)>,
     n_max: usize,
     /// Full per-side budget; `n_max` shrinks below this while GPUs are
     /// failed (see `fail_gpus`/`restore_gpus`).
@@ -76,6 +88,7 @@ impl MegaScaleInfer {
             GatingSide::Attention,
         );
         let mem = AttnMemoryModel::new(&model);
+        let routing = RoutingBatch::zeroed(0, model.top_k, model.experts);
         MegaScaleInfer {
             model,
             tpot_model,
@@ -84,6 +97,10 @@ impl MegaScaleInfer {
             gate,
             deployment: None,
             placement: None,
+            routing,
+            sched_ws: sched::BaselineWorkspace::new(),
+            comm_scratch: CommScratch::new(),
+            decisions: DecisionCache::default(),
             n_max,
             base_n_max: n_max,
             capacity,
@@ -175,14 +192,30 @@ impl MegaScaleInfer {
         self.placement = self.amax.placement_for(d.n_moe).cloned();
         self.deployment = Some(d);
     }
-}
 
-impl ServingSystem for MegaScaleInfer {
-    fn name(&self) -> &'static str {
-        "MegaScale-Infer"
+    /// Memoized scaling decision: replay `(deployment, feasible?)` for
+    /// `key`, or run `search` (every branch of which ends in `apply`)
+    /// and record its end state.
+    fn decide(
+        &mut self,
+        key: crate::scaling::DecisionKey,
+        search: impl FnOnce(&mut Self) -> Option<ConfigInfo>,
+    ) -> Option<ConfigInfo> {
+        if let Some((d, feasible)) = self.decisions.get(&key) {
+            self.apply(d);
+            return feasible.then(|| ConfigInfo {
+                label: d.label(),
+                gpus: d.total_gpus(),
+            });
+        }
+        let cfg = search(self);
+        let applied = self.deployment.expect("configure always deploys");
+        self.decisions.insert(key, (applied, cfg.is_some()));
+        cfg
     }
 
-    fn configure(&mut self, batch: usize, slo: Slo) -> Option<ConfigInfo> {
+    /// The full fixed-batch search (`configure` memoizes this).
+    fn configure_uncached(&mut self, batch: usize, slo: Slo) -> Option<ConfigInfo> {
         match self.pick(batch as f64, slo) {
             Some(d) => {
                 self.apply(d);
@@ -201,10 +234,11 @@ impl ServingSystem for MegaScaleInfer {
         }
     }
 
-    fn configure_for_demand(&mut self, lambda: f64, slo: Slo) -> Option<ConfigInfo> {
-        // Solve B* per candidate with its own TPOT curve. Like `pick`,
-        // prefer time-balanced plans, fall back to unbalanced ones, and
-        // only report a violation when nothing meets the SLO at all.
+    /// The full demand search: solve B* per candidate with its own TPOT
+    /// curve. Like `pick`, prefer time-balanced plans, fall back to
+    /// unbalanced ones, and only report a violation when nothing meets
+    /// the SLO at all. (`configure_for_demand` memoizes this.)
+    fn configure_for_demand_uncached(&mut self, lambda: f64, slo: Slo) -> Option<ConfigInfo> {
         for require_balance in [true, false] {
             let mut best: Option<Deployment> = None;
             for n_e in self.n_e_min()..=self.n_max {
@@ -249,6 +283,24 @@ impl ServingSystem for MegaScaleInfer {
         self.apply(d);
         None
     }
+}
+
+impl ServingSystem for MegaScaleInfer {
+    fn name(&self) -> &'static str {
+        "MegaScale-Infer"
+    }
+
+    fn configure(&mut self, batch: usize, slo: Slo) -> Option<ConfigInfo> {
+        let pool = self.n_max as u64;
+        let key = self.decisions.key(DecisionKind::FixedBatch, batch as f64, slo, pool);
+        self.decide(key, |sys| sys.configure_uncached(batch, slo))
+    }
+
+    fn configure_for_demand(&mut self, lambda: f64, slo: Slo) -> Option<ConfigInfo> {
+        let pool = self.n_max as u64;
+        let key = self.decisions.key(DecisionKind::Demand, lambda, slo, pool);
+        self.decide(key, |sys| sys.configure_for_demand_uncached(lambda, slo))
+    }
 
     fn fail_gpus(&mut self, gpus: usize) {
         self.n_max = self.n_max.saturating_sub(gpus);
@@ -260,12 +312,17 @@ impl ServingSystem for MegaScaleInfer {
 
     fn step(&mut self, batch: usize, rng: &mut Rng) -> StepOutcome {
         let d = self.deployment.expect("configure before step");
+        self.gate.sample_batch_into(rng, batch, &mut self.routing);
         let placement = self.placement.as_ref().expect("placement");
-        let routing = self.gate.sample_batch(rng, batch);
-        let a_max = sched::random(&routing, placement, rng).a_max;
-        let lat = self
-            .tpot_model
-            .tpot(batch as f64, d.n_attn, d.n_moe, self.s_ctx, a_max);
+        let a_max = sched::random_a_max(&mut self.sched_ws, &self.routing, placement, rng);
+        let lat = self.tpot_model.tpot_with(
+            &mut self.comm_scratch,
+            batch as f64,
+            d.n_attn,
+            d.n_moe,
+            self.s_ctx,
+            a_max,
+        );
         StepOutcome {
             tpot: lat.tpot,
             a_max,

@@ -12,14 +12,27 @@ use crate::config::serving::Slo;
 use crate::perfmodel::{attention, coeffs::LayerCoeffs, moe};
 use crate::placement::ExpertPlacement;
 use crate::routing::gate::{ExpertPopularity, GateSim};
+use crate::routing::trace::RoutingBatch;
 use crate::scheduler::baselines as sched;
 use crate::scaling::littles_law::{self, FixedPoint};
+use crate::scaling::{DecisionCache, DecisionKind};
 use crate::util::rng::Rng;
 
 use super::system::{ConfigInfo, ServingSystem, StepOutcome};
 
 /// Monolithic deployment tiers.
 const TIERS: [usize; 4] = [8, 16, 32, 64];
+
+/// The full post-decision state of one tier search, memoized so repeated
+/// decisions on an unchanged pool skip the tier scan (and its Little's-law
+/// solves) entirely. Restoring `placement` verbatim matters: `step`
+/// lazily reuses whatever partition the search left behind.
+#[derive(Clone)]
+struct TierDecision {
+    cfg: Option<ConfigInfo>,
+    gpus: usize,
+    placement: Option<ExpertPlacement>,
+}
 
 /// Per-decode-step framework overhead of the monolithic serving stack:
 /// a fixed CPU-side scheduling cost plus a per-request component (batch
@@ -42,6 +55,12 @@ pub struct SgLang {
     /// usable tiers; the smallest tier always stays available — a
     /// monolithic replica cannot shrink below one full model).
     pool_gpus: usize,
+    /// Reusable routing buffer for the zero-alloc decode step.
+    routing: RoutingBatch,
+    /// Reusable scheduler buffers for the a_max-only step path.
+    sched_ws: sched::BaselineWorkspace,
+    /// Memoized tier decisions keyed on (batch-or-demand, SLO, pool).
+    decisions: DecisionCache<TierDecision>,
     s_ctx: f64,
 }
 
@@ -60,6 +79,7 @@ impl SgLang {
         // dedicated MoE instance (§2.3's coupled-provisioning cost).
         coeffs.beta /= 0.75;
         let gate = GateSim::new(model.experts, model.top_k, pop, &mut rng);
+        let routing = RoutingBatch::zeroed(0, model.top_k, model.experts);
         SgLang {
             model,
             hw,
@@ -68,6 +88,9 @@ impl SgLang {
             placement: None,
             gpus: 0,
             pool_gpus: *TIERS.last().unwrap(),
+            routing,
+            sched_ws: sched::BaselineWorkspace::new(),
+            decisions: DecisionCache::default(),
             s_ctx: 512.0,
         }
     }
@@ -141,23 +164,43 @@ impl SgLang {
     }
 
     /// Static a_max estimate for a tier at batch B: experts split evenly,
-    /// straggler = max distinct activated among E/gpus experts. We sample.
+    /// straggler = max distinct activated among E/gpus experts. We sample
+    /// through the reusable routing/scheduler buffers (zero alloc at
+    /// steady state; same draws and the same a_max as the full scheduler).
     fn sample_a_max(&mut self, gpus: usize, batch: usize, rng: &mut Rng) -> u32 {
         let placement = self.placement.get_or_insert_with(|| {
             let cap = self.model.experts.div_ceil(gpus);
             ExpertPlacement::contiguous(self.model.experts, gpus, cap)
         });
-        let routing = self.gate.sample_batch(rng, batch);
-        sched::static_first(&routing, placement).a_max
-    }
-}
-
-impl ServingSystem for SgLang {
-    fn name(&self) -> &'static str {
-        "SGLang"
+        self.gate.sample_batch_into(rng, batch, &mut self.routing);
+        sched::static_first_a_max(&mut self.sched_ws, &self.routing, placement)
     }
 
-    fn configure(&mut self, batch: usize, slo: Slo) -> Option<ConfigInfo> {
+    /// Run the uncached tier search `search`, memoizing the full
+    /// post-decision state (chosen tier, expert partition) under `key`.
+    fn decide(
+        &mut self,
+        key: crate::scaling::DecisionKey,
+        search: impl FnOnce(&mut Self) -> Option<ConfigInfo>,
+    ) -> Option<ConfigInfo> {
+        if let Some(d) = self.decisions.get(&key) {
+            self.gpus = d.gpus;
+            self.placement = d.placement;
+            return d.cfg;
+        }
+        let cfg = search(self);
+        self.decisions.insert(
+            key,
+            TierDecision {
+                cfg: cfg.clone(),
+                gpus: self.gpus,
+                placement: self.placement.clone(),
+            },
+        );
+        cfg
+    }
+
+    fn configure_uncached(&mut self, batch: usize, slo: Slo) -> Option<ConfigInfo> {
         let mut rng = Rng::seed_from_u64(7);
         let tiers = self.usable_tiers();
         if tiers.is_empty() {
@@ -185,7 +228,7 @@ impl ServingSystem for SgLang {
         None
     }
 
-    fn configure_for_demand(&mut self, lambda: f64, slo: Slo) -> Option<ConfigInfo> {
+    fn configure_for_demand_uncached(&mut self, lambda: f64, slo: Slo) -> Option<ConfigInfo> {
         let mut rng = Rng::seed_from_u64(11);
         let tiers = self.usable_tiers();
         if tiers.is_empty() {
@@ -228,6 +271,24 @@ impl ServingSystem for SgLang {
         }
         self.gpus = *tiers.last().unwrap();
         None
+    }
+}
+
+impl ServingSystem for SgLang {
+    fn name(&self) -> &'static str {
+        "SGLang"
+    }
+
+    fn configure(&mut self, batch: usize, slo: Slo) -> Option<ConfigInfo> {
+        let pool = self.pool_gpus as u64;
+        let key = self.decisions.key(DecisionKind::FixedBatch, batch as f64, slo, pool);
+        self.decide(key, |sys| sys.configure_uncached(batch, slo))
+    }
+
+    fn configure_for_demand(&mut self, lambda: f64, slo: Slo) -> Option<ConfigInfo> {
+        let pool = self.pool_gpus as u64;
+        let key = self.decisions.key(DecisionKind::Demand, lambda, slo, pool);
+        self.decide(key, |sys| sys.configure_for_demand_uncached(lambda, slo))
     }
 
     fn fail_gpus(&mut self, gpus: usize) {
@@ -283,6 +344,23 @@ mod tests {
         let cfg = s.configure(64, Slo::from_ms(200.0)).expect("feasible");
         assert!(TIERS.contains(&cfg.gpus));
         assert_eq!(cfg.gpus % 8, 0);
+    }
+
+    #[test]
+    fn memoized_tier_decisions_replay_full_state() {
+        // A cache hit must restore the tier AND the lazily built expert
+        // partition, so the following steps behave exactly as if the
+        // search had re-run.
+        let mut cached = sys();
+        let slo = Slo::from_ms(200.0);
+        let first = cached.configure_for_demand(5000.0, slo);
+        let mut rng = Rng::seed_from_u64(3);
+        let step_after_miss = cached.step(128, &mut rng);
+        let second = cached.configure_for_demand(5000.0, slo); // memo hit
+        assert_eq!(first, second);
+        let mut rng = Rng::seed_from_u64(3);
+        let step_after_hit = cached.step(128, &mut rng);
+        assert_eq!(step_after_miss, step_after_hit);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! between the sub-clusters, and no resource-scaling policy — the paper
 //! scales it in fixed units of 4 GPUs (1 attention : 3 MoE per unit).
 
+use crate::comm::CommScratch;
 use crate::config::hardware::HardwareProfile;
 use crate::config::models::MoeModel;
 use crate::config::serving::{
@@ -13,10 +14,10 @@ use crate::config::serving::{
 use crate::perfmodel::TpotModel;
 use crate::placement::ExpertPlacement;
 use crate::routing::gate::{ExpertPopularity, GateSim};
-use crate::routing::trace::ActivationTrace;
+use crate::routing::trace::{ActivationTrace, RoutingBatch};
 use crate::scaling::littles_law::{self, FixedPoint};
 use crate::scaling::memory::AttnMemoryModel;
-use crate::scaling::AmaxTable;
+use crate::scaling::{AmaxTable, DecisionCache, DecisionKind};
 use crate::scheduler::baselines as sched;
 use crate::util::rng::Rng;
 
@@ -35,6 +36,18 @@ pub struct XDeepServe {
     gate: GateSim,
     deployment: Option<Deployment>,
     placement: Option<ExpertPlacement>,
+    /// Reusable routing buffer for the zero-alloc decode step.
+    routing: RoutingBatch,
+    /// Reusable scheduler buffers for the a_max-only step path.
+    sched_ws: sched::BaselineWorkspace,
+    /// Reusable comm-plan buffers for the zero-alloc TPOT evaluation.
+    comm_scratch: CommScratch,
+    /// Memoized unit-scan decisions: (applied deployment, SLO-feasible?),
+    /// keyed on (demand-or-batch, SLO, failed GPUs). Every branch of the
+    /// scans — feasible unit, least-violating fallback, degraded-pool
+    /// emergency layout — ends in `apply`, so the pair replays the exact
+    /// end state.
+    decisions: DecisionCache<(Deployment, bool)>,
     max_units: usize,
     /// GPUs currently failed (failure injection); shrinks the usable
     /// unit count, floored at `min_units` (xDeepServe cannot re-place
@@ -74,6 +87,7 @@ impl XDeepServe {
         let tpot_model =
             TpotModel::new(&model, &hw, CommScheme::OnePhase, GatingSide::Attention);
         let mem = AttnMemoryModel::new(&model);
+        let routing = RoutingBatch::zeroed(0, model.top_k, model.experts);
         XDeepServe {
             model,
             tpot_model,
@@ -83,6 +97,10 @@ impl XDeepServe {
             gate,
             deployment: None,
             placement: None,
+            routing,
+            sched_ws: sched::BaselineWorkspace::new(),
+            comm_scratch: CommScratch::new(),
+            decisions: DecisionCache::default(),
             max_units,
             failed_gpus: 0,
             capacity,
@@ -128,14 +146,30 @@ impl XDeepServe {
         self.placement = self.amax.placement_for(d.n_moe).cloned();
         self.deployment = Some(d);
     }
-}
 
-impl ServingSystem for XDeepServe {
-    fn name(&self) -> &'static str {
-        "xDeepServe"
+    /// Memoized scaling decision: replay `(deployment, feasible?)` for
+    /// `key`, or run `search` (every branch of which ends in `apply`)
+    /// and record its end state.
+    fn decide(
+        &mut self,
+        key: crate::scaling::DecisionKey,
+        search: impl FnOnce(&mut Self) -> Option<ConfigInfo>,
+    ) -> Option<ConfigInfo> {
+        if let Some((d, feasible)) = self.decisions.get(&key) {
+            self.apply(d);
+            return feasible.then(|| ConfigInfo {
+                label: format!("{} ({}u)", d.label(), d.n_attn / UNIT_ATTN),
+                gpus: d.total_gpus(),
+            });
+        }
+        let cfg = search(self);
+        let applied = self.deployment.expect("configure always deploys");
+        self.decisions.insert(key, (applied, cfg.is_some()));
+        cfg
     }
 
-    fn configure(&mut self, batch: usize, slo: Slo) -> Option<ConfigInfo> {
+    /// The full fixed-batch unit scan (`configure` memoizes this).
+    fn configure_uncached(&mut self, batch: usize, slo: Slo) -> Option<ConfigInfo> {
         if self.pool_degraded() {
             let d = Self::deployment_for_units(self.min_units());
             self.apply(d);
@@ -164,7 +198,8 @@ impl ServingSystem for XDeepServe {
         None
     }
 
-    fn configure_for_demand(&mut self, lambda: f64, slo: Slo) -> Option<ConfigInfo> {
+    /// The full demand unit scan (`configure_for_demand` memoizes this).
+    fn configure_for_demand_uncached(&mut self, lambda: f64, slo: Slo) -> Option<ConfigInfo> {
         if self.pool_degraded() {
             let d = Self::deployment_for_units(self.min_units());
             self.apply(d);
@@ -189,6 +224,24 @@ impl ServingSystem for XDeepServe {
         self.apply(d);
         None
     }
+}
+
+impl ServingSystem for XDeepServe {
+    fn name(&self) -> &'static str {
+        "xDeepServe"
+    }
+
+    fn configure(&mut self, batch: usize, slo: Slo) -> Option<ConfigInfo> {
+        let pool = self.failed_gpus as u64;
+        let key = self.decisions.key(DecisionKind::FixedBatch, batch as f64, slo, pool);
+        self.decide(key, |sys| sys.configure_uncached(batch, slo))
+    }
+
+    fn configure_for_demand(&mut self, lambda: f64, slo: Slo) -> Option<ConfigInfo> {
+        let pool = self.failed_gpus as u64;
+        let key = self.decisions.key(DecisionKind::Demand, lambda, slo, pool);
+        self.decide(key, |sys| sys.configure_for_demand_uncached(lambda, slo))
+    }
 
     fn fail_gpus(&mut self, gpus: usize) {
         self.failed_gpus += gpus;
@@ -200,12 +253,17 @@ impl ServingSystem for XDeepServe {
 
     fn step(&mut self, batch: usize, rng: &mut Rng) -> StepOutcome {
         let d = self.deployment.expect("configure before step");
+        self.gate.sample_batch_into(rng, batch, &mut self.routing);
         let placement = self.placement.as_ref().expect("placement");
-        let routing = self.gate.sample_batch(rng, batch);
-        let a_max = sched::token_balanced(&routing, placement).a_max;
-        let lat = self
-            .tpot_model
-            .tpot(batch as f64, d.n_attn, d.n_moe, self.s_ctx, a_max);
+        let a_max = sched::token_balanced_a_max(&mut self.sched_ws, &self.routing, placement);
+        let lat = self.tpot_model.tpot_with(
+            &mut self.comm_scratch,
+            batch as f64,
+            d.n_attn,
+            d.n_moe,
+            self.s_ctx,
+            a_max,
+        );
         StepOutcome {
             tpot: lat.tpot,
             a_max,

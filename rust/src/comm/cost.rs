@@ -27,6 +27,32 @@ impl CommBreakdown {
     }
 }
 
+/// Reusable buffers for allocation-free plan construction and evaluation
+/// on the decode hot path. One scratch per serving system is enough: a
+/// full [`CommModel::layer_cost_with`] round trip (dispatch candidates,
+/// combine plan, per-node NIC accounting) runs entirely inside these
+/// buffers once they have grown to the deployment's working set.
+#[derive(Clone, Debug, Default)]
+pub struct CommScratch {
+    /// Dispatch plan (and the adaptive winner).
+    dispatch: TransferPlan,
+    /// Second adaptive candidate (swapped in when it wins).
+    alt: TransferPlan,
+    /// Combine plan.
+    combine: TransferPlan,
+    /// Per-node NIC serialization times: `[0, n)` source side,
+    /// `[n, 2n)` destination side for the plan under evaluation.
+    node_time: Vec<f64>,
+    /// Per-source-node message counts (unoptimized-path overhead).
+    node_msgs: Vec<u32>,
+}
+
+impl CommScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// The communication cost model: evaluates plans against the link specs.
 #[derive(Clone, Debug)]
 pub struct CommModel {
@@ -62,16 +88,6 @@ impl CommModel {
         }
     }
 
-    /// Time for one NIC to push `msgs` messages of the given sizes:
-    /// messages on the same NIC serialize; each pays the per-message
-    /// latency plus wire time.
-    fn nic_time(&self, sizes: &[f64]) -> f64 {
-        sizes
-            .iter()
-            .map(|b| self.node.nic_latency + b / self.node.nic_bw)
-            .sum()
-    }
-
     /// Evaluate a plan: the slowest source NIC's serialization, plus the
     /// slowest receiver's inbound serialization, plus intra-node phases.
     ///
@@ -79,43 +95,51 @@ impl CommModel {
     /// dispatch); each message then pays `msg_overhead_unoptimized` on top
     /// of wire time.
     pub fn plan_time_with(&self, p: &TransferPlan, agate: bool, unoptimized: bool) -> f64 {
-        let base = self.plan_time_inner(p, agate);
-        if unoptimized {
-            // The per-message software cost serializes on the busiest NIC.
-            let max_msgs_per_node = {
-                let mut counts: std::collections::HashMap<u32, usize> = Default::default();
-                for m in &p.messages {
-                    *counts.entry(m.src_node).or_default() += 1;
-                }
-                counts.values().copied().max().unwrap_or(0)
-            };
-            base + self.msg_overhead_unoptimized * max_msgs_per_node as f64
-        } else {
-            base
-        }
+        let mut scratch = CommScratch::new();
+        self.plan_time_core(
+            p,
+            agate,
+            unoptimized,
+            &mut scratch.node_time,
+            &mut scratch.node_msgs,
+        )
     }
 
     /// Optimized-path plan time (Janus's tuned NVSHMEM/IBGDA sends).
     pub fn plan_time(&self, p: &TransferPlan, agate: bool) -> f64 {
-        self.plan_time_inner(p, agate)
+        self.plan_time_with(p, agate, false)
     }
 
-    fn plan_time_inner(&self, p: &TransferPlan, agate: bool) -> f64 {
-        // Group message sizes per source node and per destination node.
-        let mut per_src: std::collections::HashMap<u32, Vec<f64>> = Default::default();
-        let mut per_dst: std::collections::HashMap<u32, Vec<f64>> = Default::default();
+    /// [`Self::plan_time_with`] over caller-owned scratch buffers — the
+    /// zero-allocation path. Messages on the same NIC serialize (each
+    /// pays the per-message latency plus wire time, accumulated per node
+    /// in message order, so the floating-point sums are bit-identical to
+    /// the historical per-group evaluation); the slowest source and
+    /// destination NICs bound the inter-node phase.
+    fn plan_time_core(
+        &self,
+        p: &TransferPlan,
+        agate: bool,
+        unoptimized: bool,
+        node_time: &mut Vec<f64>,
+        node_msgs: &mut Vec<u32>,
+    ) -> f64 {
+        let mut max_node = 0usize;
         for m in &p.messages {
-            per_src.entry(m.src_node).or_default().push(m.bytes);
-            per_dst.entry(m.dst_node).or_default().push(m.bytes);
+            max_node = max_node.max(m.src_node as usize).max(m.dst_node as usize);
         }
-        let send = per_src
-            .values()
-            .map(|s| self.nic_time(s))
-            .fold(0.0, f64::max);
-        let recv = per_dst
-            .values()
-            .map(|s| self.nic_time(s))
-            .fold(0.0, f64::max);
+        let n = if p.messages.is_empty() { 0 } else { max_node + 1 };
+        node_time.clear();
+        node_time.resize(2 * n, 0.0);
+        for m in &p.messages {
+            let cost = self.node.nic_latency + m.bytes / self.node.nic_bw;
+            node_time[m.src_node as usize] += cost;
+            node_time[n + m.dst_node as usize] += cost;
+        }
+        // An untouched slot stays 0.0 — the same floor the old
+        // fold(0.0, max) over existing groups used.
+        let send = node_time[..n].iter().copied().fold(0.0, f64::max);
+        let recv = node_time[n..].iter().copied().fold(0.0, f64::max);
         // Send and receive overlap when messages pipeline; charge the max
         // plus one message latency for the first-byte propagation.
         let inter = send.max(recv) + self.node.nic_latency;
@@ -137,7 +161,19 @@ impl CommModel {
         } else {
             0.0
         };
-        intra(p.intra_src_bytes) + inter + ring + intra(p.intra_dst_bytes) + packing
+        let base = intra(p.intra_src_bytes) + inter + ring + intra(p.intra_dst_bytes) + packing;
+        if unoptimized {
+            // The per-message software cost serializes on the busiest NIC.
+            node_msgs.clear();
+            node_msgs.resize(n, 0);
+            for m in &p.messages {
+                node_msgs[m.src_node as usize] += 1;
+            }
+            let max_msgs_per_node = node_msgs.iter().copied().max().unwrap_or(0);
+            base + self.msg_overhead_unoptimized * max_msgs_per_node as f64
+        } else {
+            base
+        }
     }
 
     /// Build the dispatch plan (attention → MoE) for a scheme/gating
@@ -150,6 +186,23 @@ impl CommModel {
         n_moe: usize,
         b_per_attn: f64,
     ) -> TransferPlan {
+        let mut scratch = CommScratch::new();
+        self.dispatch_plan_core(scheme, gating, n_attn, n_moe, b_per_attn, &mut scratch);
+        scratch.dispatch
+    }
+
+    /// Build the dispatch plan into `scratch.dispatch` without allocating
+    /// (the adaptive scheme evaluates both candidates in place and swaps
+    /// the winner in — same selection as [`Self::dispatch_plan`]).
+    fn dispatch_plan_core(
+        &self,
+        scheme: CommScheme,
+        gating: GatingSide,
+        n_attn: usize,
+        n_moe: usize,
+        b_per_attn: f64,
+        scratch: &mut CommScratch,
+    ) {
         let per_node = self.node.gpus_per_node;
         let moe_nodes = plan::nodes_for(n_moe, per_node);
         // Payload one attention instance contributes, and the fraction a
@@ -181,20 +234,42 @@ impl CommModel {
                         inst_bytes * cover
                     }
                 };
-                plan::one_phase(n_attn, n_moe, per_node, pair_bytes)
+                plan::one_phase_into(&mut scratch.dispatch, n_attn, n_moe, per_node, pair_bytes);
             }
             CommScheme::TwoPhaseAdaptive => {
-                let direct = plan::two_phase_direct(
-                    n_attn, n_moe, per_node, inst_bytes, dst_fraction,
+                plan::two_phase_direct_into(
+                    &mut scratch.dispatch,
+                    n_attn,
+                    n_moe,
+                    per_node,
+                    inst_bytes,
+                    dst_fraction,
                 );
-                let one2one = plan::two_phase_one_to_one(
-                    n_attn, n_moe, per_node, inst_bytes, dst_fraction,
+                plan::two_phase_one_to_one_into(
+                    &mut scratch.alt,
+                    n_attn,
+                    n_moe,
+                    per_node,
+                    inst_bytes,
+                    dst_fraction,
                 );
                 let agate = gating == GatingSide::Attention;
-                if self.plan_time(&direct, agate) <= self.plan_time(&one2one, agate) {
-                    direct
-                } else {
-                    one2one
+                let t_direct = self.plan_time_core(
+                    &scratch.dispatch,
+                    agate,
+                    false,
+                    &mut scratch.node_time,
+                    &mut scratch.node_msgs,
+                );
+                let t_one2one = self.plan_time_core(
+                    &scratch.alt,
+                    agate,
+                    false,
+                    &mut scratch.node_time,
+                    &mut scratch.node_msgs,
+                );
+                if t_direct > t_one2one {
+                    std::mem::swap(&mut scratch.dispatch, &mut scratch.alt);
                 }
             }
         }
@@ -211,6 +286,21 @@ impl CommModel {
         n_moe: usize,
         b_total: f64,
     ) -> TransferPlan {
+        let mut plan = TransferPlan::default();
+        self.combine_plan_into(scheme, n_attn, n_moe, b_total, &mut plan);
+        plan
+    }
+
+    /// [`Self::combine_plan`] into a reusable plan (no allocation at
+    /// steady state).
+    fn combine_plan_into(
+        &self,
+        scheme: CommScheme,
+        n_attn: usize,
+        n_moe: usize,
+        b_total: f64,
+        plan_out: &mut TransferPlan,
+    ) {
         let per_node = self.node.gpus_per_node;
         match scheme {
             CommScheme::OnePhase => {
@@ -219,7 +309,7 @@ impl CommModel {
                 let pair = b_total / n_attn as f64 * self.token_bytes
                     * (self.top_k as f64).min(n_moe as f64)
                     / n_moe as f64;
-                plan::one_phase(n_moe, n_attn, per_node, pair)
+                plan::one_phase_into(plan_out, n_moe, n_attn, per_node, pair);
             }
             CommScheme::TwoPhaseAdaptive => {
                 // Intra-node all-reduce of partial expert sums, then each
@@ -227,13 +317,14 @@ impl CommModel {
                 // tokens (b_total / attn_nodes per destination).
                 let attn_nodes = plan::nodes_for(n_attn, per_node);
                 let inst_bytes = b_total / n_moe as f64 * self.token_bytes;
-                plan::two_phase_direct(
+                plan::two_phase_direct_into(
+                    plan_out,
                     n_moe,
                     n_attn,
                     per_node,
                     inst_bytes,
                     1.0 / attn_nodes as f64,
-                )
+                );
             }
         }
     }
@@ -247,17 +338,47 @@ impl CommModel {
         n_moe: usize,
         batch_total: f64,
     ) -> CommBreakdown {
+        self.layer_cost_with(
+            &mut CommScratch::new(),
+            scheme,
+            gating,
+            n_attn,
+            n_moe,
+            batch_total,
+        )
+    }
+
+    /// [`Self::layer_cost`] over a caller-owned scratch: the decode hot
+    /// path calls this once per simulated step with a per-system scratch,
+    /// performing zero heap allocation once the buffers are warm. Results
+    /// are bit-identical to [`Self::layer_cost`].
+    pub fn layer_cost_with(
+        &self,
+        scratch: &mut CommScratch,
+        scheme: CommScheme,
+        gating: GatingSide,
+        n_attn: usize,
+        n_moe: usize,
+        batch_total: f64,
+    ) -> CommBreakdown {
         let b_per_attn = batch_total / n_attn as f64;
-        let dp = self.dispatch_plan(scheme, gating, n_attn, n_moe, b_per_attn);
-        let cp = self.combine_plan(scheme, n_attn, n_moe, batch_total);
+        self.dispatch_plan_core(scheme, gating, n_attn, n_moe, b_per_attn, scratch);
+        let CommScratch {
+            dispatch,
+            alt: _,
+            combine,
+            node_time,
+            node_msgs,
+        } = scratch;
+        self.combine_plan_into(scheme, n_attn, n_moe, batch_total, combine);
         let agate = gating == GatingSide::Attention;
         let unoptimized = scheme == CommScheme::OnePhase;
         CommBreakdown {
-            dispatch: self.plan_time_with(&dp, agate, unoptimized),
-            combine: self.plan_time_with(&cp, false, unoptimized),
-            messages: dp.num_messages() + cp.num_messages(),
-            volume: dp.total_volume() + cp.total_volume(),
-            case: dp.case,
+            dispatch: self.plan_time_core(dispatch, agate, unoptimized, node_time, node_msgs),
+            combine: self.plan_time_core(combine, false, unoptimized, node_time, node_msgs),
+            messages: dispatch.num_messages() + combine.num_messages(),
+            volume: dispatch.total_volume() + combine.total_volume(),
+            case: dispatch.case,
         }
     }
 }
@@ -334,6 +455,33 @@ mod tests {
         let small = m.layer_cost(CommScheme::TwoPhaseAdaptive, GatingSide::Moe, 2, 6, 32.0);
         let large = m.layer_cost(CommScheme::TwoPhaseAdaptive, GatingSide::Moe, 2, 6, 1024.0);
         assert!(large.total() > small.total());
+    }
+
+    #[test]
+    fn scratch_path_is_bit_identical_to_allocating_path() {
+        // The zero-alloc layer_cost_with must reproduce layer_cost
+        // bit-for-bit across schemes, gating sides, and shapes, even when
+        // one scratch is reused across differently shaped calls — this is
+        // what keeps the golden snapshots byte-identical across the
+        // hot-path rewrite.
+        let m = model();
+        let mut scratch = CommScratch::new();
+        for scheme in [CommScheme::OnePhase, CommScheme::TwoPhaseAdaptive] {
+            for gating in [GatingSide::Moe, GatingSide::Attention] {
+                for (n_attn, n_moe, batch) in
+                    [(1usize, 6usize, 16.0), (4, 16, 512.0), (8, 32, 2048.0), (2, 6, 64.0)]
+                {
+                    let fresh = m.layer_cost(scheme, gating, n_attn, n_moe, batch);
+                    let reused =
+                        m.layer_cost_with(&mut scratch, scheme, gating, n_attn, n_moe, batch);
+                    assert_eq!(fresh.dispatch.to_bits(), reused.dispatch.to_bits());
+                    assert_eq!(fresh.combine.to_bits(), reused.combine.to_bits());
+                    assert_eq!(fresh.messages, reused.messages);
+                    assert_eq!(fresh.volume.to_bits(), reused.volume.to_bits());
+                    assert_eq!(fresh.case, reused.case);
+                }
+            }
+        }
     }
 
     #[test]

@@ -23,5 +23,5 @@
 pub mod cost;
 pub mod plan;
 
-pub use cost::{CommBreakdown, CommModel};
+pub use cost::{CommBreakdown, CommModel, CommScratch};
 pub use plan::{TransferPlan, TwoPhaseCase};

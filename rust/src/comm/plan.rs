@@ -21,7 +21,7 @@ pub struct Message {
 }
 
 /// A full per-layer transfer plan in one direction.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct TransferPlan {
     /// Inter-node messages (the expensive part).
     pub messages: Vec<Message>,
@@ -42,6 +42,16 @@ impl TransferPlan {
     pub fn total_volume(&self) -> f64 {
         self.messages.iter().map(|m| m.bytes).sum()
     }
+
+    /// Clear for rebuilding in place; the message buffer keeps its
+    /// capacity so steady-state plan construction never allocates.
+    fn reset(&mut self) {
+        self.messages.clear();
+        self.intra_src_bytes = 0.0;
+        self.intra_dst_bytes = 0.0;
+        self.ring_bytes = 0.0;
+        self.case = None;
+    }
 }
 
 /// Node layout: instances packed `per_node` to a node.
@@ -57,26 +67,32 @@ pub fn one_phase(
     per_node: usize,
     bytes_per_pair: f64,
 ) -> TransferPlan {
+    let mut plan = TransferPlan::default();
+    one_phase_into(&mut plan, src_instances, dst_instances, per_node, bytes_per_pair);
+    plan
+}
+
+/// [`one_phase`] into a reusable plan (no allocation at steady state).
+pub fn one_phase_into(
+    plan: &mut TransferPlan,
+    src_instances: usize,
+    dst_instances: usize,
+    per_node: usize,
+    bytes_per_pair: f64,
+) {
     // Source and destination sub-clusters are disjoint node sets in the
     // disaggregated architecture, so destination node ids are offset past
     // the source nodes and every pair crosses the NIC.
+    plan.reset();
     let src_nodes = nodes_for(src_instances, per_node) as u32;
-    let mut messages = Vec::with_capacity(src_instances * dst_instances);
     for s in 0..src_instances {
         for d in 0..dst_instances {
-            messages.push(Message {
+            plan.messages.push(Message {
                 src_node: (s / per_node) as u32,
                 dst_node: src_nodes + (d / per_node) as u32,
                 bytes: bytes_per_pair,
             });
         }
-    }
-    TransferPlan {
-        messages,
-        intra_src_bytes: 0.0,
-        intra_dst_bytes: 0.0,
-        ring_bytes: 0.0,
-        case: None,
     }
 }
 
@@ -95,28 +111,47 @@ pub fn two_phase_direct(
     bytes_per_src_instance: f64,
     dst_needs_fraction: f64,
 ) -> TransferPlan {
+    let mut plan = TransferPlan::default();
+    two_phase_direct_into(
+        &mut plan,
+        src_instances,
+        dst_instances,
+        per_node,
+        bytes_per_src_instance,
+        dst_needs_fraction,
+    );
+    plan
+}
+
+/// [`two_phase_direct`] into a reusable plan (no allocation at steady
+/// state).
+pub fn two_phase_direct_into(
+    plan: &mut TransferPlan,
+    src_instances: usize,
+    dst_instances: usize,
+    per_node: usize,
+    bytes_per_src_instance: f64,
+    dst_needs_fraction: f64,
+) {
+    plan.reset();
     let src_nodes = nodes_for(src_instances, per_node);
     let dst_nodes = nodes_for(dst_instances, per_node);
-    let mut messages = Vec::with_capacity(src_nodes * dst_nodes);
     for sn in 0..src_nodes {
         let inst_on_node = instances_on_node(src_instances, per_node, sn);
         let node_bytes = bytes_per_src_instance * inst_on_node as f64;
         for dn in 0..dst_nodes {
-            messages.push(Message {
+            plan.messages.push(Message {
                 src_node: sn as u32,
                 dst_node: (src_nodes + dn) as u32,
                 bytes: node_bytes * dst_needs_fraction,
             });
         }
     }
-    let agg = bytes_per_src_instance * (per_node.min(src_instances) as f64 - 1.0).max(0.0);
-    TransferPlan {
-        messages,
-        intra_src_bytes: agg,
-        intra_dst_bytes: bytes_per_src_instance * src_instances as f64 * dst_needs_fraction,
-        ring_bytes: 0.0,
-        case: Some(TwoPhaseCase::Direct),
-    }
+    plan.intra_src_bytes =
+        bytes_per_src_instance * (per_node.min(src_instances) as f64 - 1.0).max(0.0);
+    plan.intra_dst_bytes =
+        bytes_per_src_instance * src_instances as f64 * dst_needs_fraction;
+    plan.case = Some(TwoPhaseCase::Direct);
 }
 
 /// 2PC case-2 (OneToOne): each source node sends its aggregate to one
@@ -130,15 +165,37 @@ pub fn two_phase_one_to_one(
     bytes_per_src_instance: f64,
     dst_needs_fraction: f64,
 ) -> TransferPlan {
+    let mut plan = TransferPlan::default();
+    two_phase_one_to_one_into(
+        &mut plan,
+        src_instances,
+        dst_instances,
+        per_node,
+        bytes_per_src_instance,
+        dst_needs_fraction,
+    );
+    plan
+}
+
+/// [`two_phase_one_to_one`] into a reusable plan (no allocation at
+/// steady state).
+pub fn two_phase_one_to_one_into(
+    plan: &mut TransferPlan,
+    src_instances: usize,
+    dst_instances: usize,
+    per_node: usize,
+    bytes_per_src_instance: f64,
+    dst_needs_fraction: f64,
+) {
+    plan.reset();
     let src_nodes = nodes_for(src_instances, per_node);
     let dst_nodes = nodes_for(dst_instances, per_node);
-    let mut messages = Vec::with_capacity(src_nodes);
     let mut total_payload = 0.0;
     for sn in 0..src_nodes {
         let inst_on_node = instances_on_node(src_instances, per_node, sn);
         let node_bytes = bytes_per_src_instance * inst_on_node as f64 * dst_needs_fraction;
         total_payload += node_bytes;
-        messages.push(Message {
+        plan.messages.push(Message {
             src_node: sn as u32,
             dst_node: (src_nodes + (sn % dst_nodes)) as u32,
             bytes: node_bytes,
@@ -146,19 +203,15 @@ pub fn two_phase_one_to_one(
     }
     // Ring exchange among destination nodes: each node forwards what it
     // received; (dst_nodes - 1) steps each carrying ~total/dst_nodes.
-    let ring_bytes = if dst_nodes > 1 {
+    plan.ring_bytes = if dst_nodes > 1 {
         total_payload * (dst_nodes as f64 - 1.0) / dst_nodes as f64
     } else {
         0.0
     };
-    let agg = bytes_per_src_instance * (per_node.min(src_instances) as f64 - 1.0).max(0.0);
-    TransferPlan {
-        messages,
-        intra_src_bytes: agg,
-        intra_dst_bytes: total_payload,
-        ring_bytes,
-        case: Some(TwoPhaseCase::OneToOne),
-    }
+    plan.intra_src_bytes =
+        bytes_per_src_instance * (per_node.min(src_instances) as f64 - 1.0).max(0.0);
+    plan.intra_dst_bytes = total_payload;
+    plan.case = Some(TwoPhaseCase::OneToOne);
 }
 
 fn instances_on_node(total: usize, per_node: usize, node: usize) -> usize {
@@ -198,6 +251,19 @@ mod tests {
     fn one_to_one_no_ring_for_single_dst_node() {
         let p = two_phase_one_to_one(8, 4, 8, 100.0, 1.0);
         assert_eq!(p.ring_bytes, 0.0);
+    }
+
+    #[test]
+    fn into_variants_match_fresh_construction() {
+        // A reused plan buffer (whatever its previous contents) must be
+        // indistinguishable from a freshly built plan.
+        let mut reuse = one_phase(8, 8, 8, 123.0);
+        one_phase_into(&mut reuse, 4, 6, 8, 1000.0);
+        assert_eq!(reuse, one_phase(4, 6, 8, 1000.0));
+        two_phase_direct_into(&mut reuse, 8, 16, 8, 100.0, 0.5);
+        assert_eq!(reuse, two_phase_direct(8, 16, 8, 100.0, 0.5));
+        two_phase_one_to_one_into(&mut reuse, 16, 16, 8, 100.0, 1.0);
+        assert_eq!(reuse, two_phase_one_to_one(16, 16, 8, 100.0, 1.0));
     }
 
     #[test]

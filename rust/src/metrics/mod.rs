@@ -2,12 +2,23 @@
 //! SLO attainment, GPU-hours for the autoscaling comparison, and
 //! weighted latency distributions for the arrival-driven decode loop.
 
+use std::cell::RefCell;
+
 use crate::util::stats;
 
 /// TPOT sample collection with percentile reporting.
+///
+/// Percentile queries run against a lazily maintained sorted view: the
+/// first query after new samples sorts once into a reused buffer, and
+/// every further query (any quantile) reads the cached sort — no more
+/// clone-and-sort per call. Recording invalidates the cache implicitly
+/// (the view's length no longer matches), so results are always exactly
+/// what a fresh sort would produce.
 #[derive(Clone, Debug, Default)]
 pub struct TpotStats {
     samples: Vec<f64>,
+    /// Cached ascending sort of `samples`; stale iff lengths differ.
+    sorted: RefCell<Vec<f64>>,
 }
 
 impl TpotStats {
@@ -31,12 +42,29 @@ impl TpotStats {
         stats::mean(&self.samples)
     }
 
+    /// Run `f` over the cached sorted view, rebuilding it (one sort into
+    /// a reused buffer) only when samples arrived since the last query.
+    fn with_sorted<R>(&self, f: impl FnOnce(&[f64]) -> R) -> R {
+        let mut sorted = self.sorted.borrow_mut();
+        if sorted.len() != self.samples.len() {
+            sorted.clear();
+            sorted.extend_from_slice(&self.samples);
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        }
+        f(&sorted)
+    }
+
+    /// Arbitrary percentile (linear interpolation), via the cached sort.
+    pub fn percentile(&self, q: f64) -> f64 {
+        self.with_sorted(|sorted| stats::percentile_sorted(sorted, q))
+    }
+
     pub fn p50(&self) -> f64 {
-        stats::percentile(&self.samples, 50.0)
+        self.percentile(50.0)
     }
 
     pub fn p99(&self) -> f64 {
-        stats::percentile(&self.samples, 99.0)
+        self.percentile(99.0)
     }
 
     pub fn max(&self) -> f64 {
@@ -58,11 +86,19 @@ impl TpotStats {
 /// in a decode step shares the step's TPOT, so recording `(tpot, batch)`
 /// once per step yields exact per-token percentiles without storing one
 /// sample per token.
+/// Percentile queries share one lazily maintained value-sorted view
+/// (rebuilt into a reused buffer only after new records), so any number
+/// of single-quantile calls after a batch of records costs one sort
+/// total — the old clone-and-sort-per-query behavior is gone, and
+/// [`Self::percentile`] is now exactly as cheap as batching through
+/// [`Self::percentiles`] once the view is warm.
 #[derive(Clone, Debug, Default)]
 pub struct WeightedLatency {
     samples: Vec<(f64, u64)>,
     total_weight: u64,
     weighted_sum: f64,
+    /// Cached value-sorted copy of `samples`; stale iff lengths differ.
+    sorted: RefCell<Vec<(f64, u64)>>,
 }
 
 impl WeightedLatency {
@@ -93,34 +129,54 @@ impl WeightedLatency {
         }
     }
 
-    /// Weighted percentile (nearest-rank): the smallest recorded value
-    /// whose cumulative weight reaches `q`% of the total. 0.0 on empty
-    /// input. Deterministic for identical record sequences.
-    pub fn percentile(&self, q: f64) -> f64 {
-        self.percentiles(&[q])[0]
+    /// Run `f` over the cached value-sorted view, rebuilding it (one
+    /// stable sort into a reused buffer) only when records arrived since
+    /// the last query.
+    fn with_sorted<R>(&self, f: impl FnOnce(&[(f64, u64)]) -> R) -> R {
+        let mut sorted = self.sorted.borrow_mut();
+        if sorted.len() != self.samples.len() {
+            sorted.clear();
+            sorted.extend_from_slice(&self.samples);
+            sorted.sort_by(|a, b| a.0.total_cmp(&b.0));
+        }
+        f(&sorted)
     }
 
-    /// Several percentiles from one sort — use this over repeated
-    /// [`Self::percentile`] calls on large sample sets.
+    /// Nearest-rank lookup over an already-sorted sample view.
+    fn percentile_of_sorted(&self, sorted: &[(f64, u64)], q: f64) -> f64 {
+        let target = (q / 100.0 * self.total_weight as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (v, w) in sorted {
+            cum += w;
+            if cum >= target {
+                return *v;
+            }
+        }
+        sorted.last().map(|(v, _)| *v).unwrap_or(0.0)
+    }
+
+    /// Weighted percentile (nearest-rank): the smallest recorded value
+    /// whose cumulative weight reaches `q`% of the total. 0.0 on empty
+    /// input. Deterministic for identical record sequences. Served from
+    /// the cached sorted view, so single-quantile calls no longer pay a
+    /// clone + sort each.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.total_weight == 0 {
+            return 0.0;
+        }
+        self.with_sorted(|sorted| self.percentile_of_sorted(sorted, q))
+    }
+
+    /// Several percentiles from one sorted view.
     pub fn percentiles(&self, qs: &[f64]) -> Vec<f64> {
         if self.total_weight == 0 {
             return vec![0.0; qs.len()];
         }
-        let mut sorted = self.samples.clone();
-        sorted.sort_by(|a, b| a.0.total_cmp(&b.0));
-        qs.iter()
-            .map(|&q| {
-                let target = (q / 100.0 * self.total_weight as f64).ceil().max(1.0) as u64;
-                let mut cum = 0u64;
-                for (v, w) in &sorted {
-                    cum += w;
-                    if cum >= target {
-                        return *v;
-                    }
-                }
-                sorted.last().map(|(v, _)| *v).unwrap_or(0.0)
-            })
-            .collect()
+        self.with_sorted(|sorted| {
+            qs.iter()
+                .map(|&q| self.percentile_of_sorted(sorted, q))
+                .collect()
+        })
     }
 
     pub fn p50(&self) -> f64 {
@@ -249,6 +305,33 @@ mod tests {
         w.record(0.2, 2);
         assert_eq!(w.p50(), 0.2);
         assert_eq!(w.percentile(25.0), 0.1);
+    }
+
+    #[test]
+    fn cached_sort_invalidates_on_record() {
+        // Queries between records must not see a stale sorted view, and
+        // results must match a never-queried instance's.
+        let mut w = WeightedLatency::new();
+        let mut fresh = WeightedLatency::new();
+        for (i, v) in [0.5, 0.1, 0.9, 0.2, 0.7].iter().enumerate() {
+            w.record(*v, (i + 1) as u64);
+            fresh.record(*v, (i + 1) as u64);
+            let _ = w.p99(); // interleaved query warms (and re-warms) the cache
+        }
+        for q in [0.0, 25.0, 50.0, 99.0, 100.0] {
+            assert_eq!(w.percentile(q), fresh.percentile(q));
+        }
+        assert_eq!(w.percentiles(&[50.0, 99.0]), vec![w.p50(), w.p99()]);
+
+        let mut t = TpotStats::new();
+        let mut t_fresh = TpotStats::new();
+        for v in [0.3, 0.1, 0.4, 0.1, 0.5] {
+            t.push(v);
+            t_fresh.push(v);
+            let _ = t.p50();
+        }
+        assert_eq!(t.p99(), t_fresh.p99());
+        assert_eq!(t.percentile(37.5), t_fresh.percentile(37.5));
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! End-to-end TPOT assembly (Eq. 1a): attention + MoE + communication per
 //! layer, summed over layers, for a disaggregated deployment.
 
-use crate::comm::CommModel;
+use crate::comm::{CommModel, CommScratch};
 use crate::config::hardware::HardwareProfile;
 use crate::config::models::MoeModel;
 use crate::config::serving::{CommScheme, GatingSide};
@@ -63,6 +63,20 @@ impl TpotModel {
         s_ctx: f64,
         a_max: u32,
     ) -> DisaggLatency {
+        self.tpot_with(&mut CommScratch::new(), b_total, n_attn, n_moe, s_ctx, a_max)
+    }
+
+    /// [`Self::tpot`] over a caller-owned communication scratch — the
+    /// decode hot path's zero-allocation variant. Bit-identical results.
+    pub fn tpot_with(
+        &self,
+        scratch: &mut CommScratch,
+        b_total: f64,
+        n_attn: usize,
+        n_moe: usize,
+        s_ctx: f64,
+        a_max: u32,
+    ) -> DisaggLatency {
         assert!(n_attn > 0 && n_moe > 0);
         let b_local = b_total / n_attn as f64;
         let t_attn = attention::attn_latency(&self.coeffs, b_local, s_ctx);
@@ -75,7 +89,7 @@ impl TpotModel {
         );
         let t_comm = self
             .comm
-            .layer_cost(self.scheme, self.gating, n_attn, n_moe, b_total)
+            .layer_cost_with(scratch, self.scheme, self.gating, n_attn, n_moe, b_total)
             .total();
         let t_shared = moe::shared_expert_latency(&self.coeffs, b_local);
         // Shared expert overlaps with communication.

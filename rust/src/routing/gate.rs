@@ -94,11 +94,21 @@ impl GateSim {
     /// Draw a full batch of `tokens` routing decisions.
     pub fn sample_batch(&self, rng: &mut Rng, tokens: usize) -> RoutingBatch {
         let mut batch = RoutingBatch::zeroed(tokens, self.top_k, self.experts);
+        self.sample_batch_into(rng, tokens, &mut batch);
+        batch
+    }
+
+    /// Draw a full batch into a caller-owned `RoutingBatch`, reusing its
+    /// buffer (zero heap allocation once the buffer has grown to the
+    /// steady-state batch). Consumes the RNG in exactly the same order as
+    /// [`Self::sample_batch`], so replacing one with the other changes no
+    /// simulated outcome.
+    pub fn sample_batch_into(&self, rng: &mut Rng, tokens: usize, out: &mut RoutingBatch) {
+        out.reset(tokens, self.top_k, self.experts);
         for t in 0..tokens {
-            let row = batch.token_mut(t);
+            let row = out.token_mut(t);
             self.sample_token(rng, row);
         }
-        batch
     }
 }
 
@@ -163,6 +173,26 @@ mod tests {
             let sum: f64 = g.activation_probs().iter().sum();
             assert!((sum - 6.0).abs() < 1e-9, "{}: {sum}", pop.name());
         }
+    }
+
+    #[test]
+    fn sample_batch_into_matches_allocating_path() {
+        // The reusable-buffer path must consume the RNG identically and
+        // produce the same routing, regardless of the buffer's previous
+        // shape/contents — this is what lets the serving systems reuse
+        // one batch across decode steps without changing any outcome.
+        let mut rng = Rng::seed_from_u64(6);
+        let g = GateSim::new(48, 4, &ExpertPopularity::Zipf { s: 0.7 }, &mut rng);
+        let mut reuse = RoutingBatch::zeroed(7, 2, 3); // wrong shape on purpose
+        let mut a = rng.clone();
+        let mut b = rng.clone();
+        for tokens in [64usize, 16, 128, 128] {
+            let fresh = g.sample_batch(&mut a, tokens);
+            g.sample_batch_into(&mut b, tokens, &mut reuse);
+            assert_eq!(fresh, reuse);
+        }
+        // Both paths left the RNGs in the same state.
+        assert_eq!(a.next_u64(), b.next_u64());
     }
 
     #[test]

@@ -26,6 +26,18 @@ impl RoutingBatch {
         }
     }
 
+    /// Re-shape in place for reuse on the decode hot path: the id buffer
+    /// is cleared and re-zeroed at the new shape, allocating only when
+    /// `tokens × top_k` grows past the buffer's high-water mark. After
+    /// the call the batch is indistinguishable from
+    /// [`RoutingBatch::zeroed`] with the same arguments.
+    pub fn reset(&mut self, tokens: usize, top_k: usize, experts: usize) {
+        self.top_k = top_k;
+        self.experts = experts;
+        self.ids.clear();
+        self.ids.resize(tokens * top_k, 0);
+    }
+
     /// Build from explicit rows (mostly for tests).
     pub fn from_rows(rows: &[Vec<u16>], experts: usize) -> Self {
         assert!(!rows.is_empty());

@@ -1,0 +1,244 @@
+//! Deterministic memoization of scaling decisions.
+//!
+//! Algorithm-2-style searches (and the baselines' tier/unit scans) are
+//! pure functions of (demand, SLO, healthy pool) once a system is built:
+//! the â_max table, the performance model, and the context length are all
+//! fixed, and the searches either draw no randomness or re-seed a local
+//! RNG from a constant. Re-running the search for an unchanged pool at a
+//! repeated demand level — every decision interval of a constant-rate
+//! scenario, every re-query inside the autoscale loop — is pure waste.
+//!
+//! [`DecisionCache`] memoizes those decisions behind a small, bounded,
+//! deterministic map: keys are the exact decision inputs (demand bits,
+//! SLO bits, a pool fingerprint such as the per-side instance budget),
+//! lookups are linear scans over at most [`DecisionCache::capacity`]
+//! entries, and eviction is FIFO — no hashing, no wall-clock, nothing
+//! that could vary across runs. Pool changes (failures/recoveries) need
+//! no explicit invalidation because the pool fingerprint is part of the
+//! key.
+//!
+//! Demand quantization: by default the key uses the demand's exact f64
+//! bit pattern, so a cache hit replays a decision whose inputs were
+//! bit-identical — memoization then provably changes no simulated
+//! outcome (the golden snapshots and same-seed fingerprints stay
+//! byte-identical). [`DecisionCache::set_quantum`] optionally buckets
+//! demand to a grid for higher hit rates on near-repeating traces; that
+//! trades exactness for speed and is therefore off everywhere the
+//! determinism contract applies.
+
+use crate::config::serving::Slo;
+
+/// Which configure family a key belongs to (the two entry points search
+/// different spaces, so their decisions must never alias).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecisionKind {
+    /// `configure(batch, slo)` — fixed total batch.
+    FixedBatch,
+    /// `configure_for_demand(lambda, slo)` — steady-state demand.
+    Demand,
+}
+
+/// One decision's inputs, quantized (exactly, by default).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DecisionKey {
+    kind: DecisionKind,
+    /// Demand (or batch) key: raw f64 bits when the quantum is 0,
+    /// otherwise the rounded bucket index.
+    demand: u64,
+    /// SLO TPOT bits.
+    slo: u64,
+    /// Healthy-pool fingerprint (per-side budget, usable tiers, failed
+    /// GPUs — whatever the system's decision actually depends on).
+    pool: u64,
+}
+
+/// Bounded deterministic memo table for scaling decisions.
+#[derive(Clone, Debug)]
+pub struct DecisionCache<V> {
+    entries: Vec<(DecisionKey, V)>,
+    /// FIFO eviction cursor.
+    next_evict: usize,
+    capacity: usize,
+    quantum: f64,
+    hits: u64,
+    misses: u64,
+}
+
+/// Default entry bound: decision inputs recur within a scenario, not
+/// across unbounded space, so a small table captures the useful reuse.
+pub const DEFAULT_DECISION_CACHE_CAPACITY: usize = 64;
+
+impl<V: Clone> Default for DecisionCache<V> {
+    fn default() -> Self {
+        Self::new(DEFAULT_DECISION_CACHE_CAPACITY)
+    }
+}
+
+impl<V: Clone> DecisionCache<V> {
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        DecisionCache {
+            entries: Vec::with_capacity(capacity),
+            next_evict: 0,
+            capacity,
+            quantum: 0.0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Bucket demand keys to multiples of `quantum` (0 restores exact
+    /// keying). Clears the cache: entries keyed under a different
+    /// quantization must not be replayed.
+    pub fn set_quantum(&mut self, quantum: f64) {
+        assert!(quantum >= 0.0 && quantum.is_finite());
+        self.quantum = quantum;
+        self.clear();
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.next_evict = 0;
+    }
+
+    /// Build a key under the cache's quantization policy.
+    pub fn key(&self, kind: DecisionKind, demand: f64, slo: Slo, pool: u64) -> DecisionKey {
+        let demand = if self.quantum > 0.0 {
+            // Bucket index; demands in simulation are finite and ≥ 0.
+            (demand / self.quantum).round() as u64
+        } else {
+            demand.to_bits()
+        };
+        DecisionKey {
+            kind,
+            demand,
+            slo: slo.tpot.to_bits(),
+            pool,
+        }
+    }
+
+    /// Replay a memoized decision, if one exists for this exact key.
+    pub fn get(&mut self, key: &DecisionKey) -> Option<V> {
+        match self.entries.iter().find(|(k, _)| k == key) {
+            Some((_, v)) => {
+                self.hits += 1;
+                Some(v.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Record a decision. Overwrites an existing entry for the key;
+    /// otherwise appends, evicting FIFO once at capacity (the entry
+    /// storage is pre-reserved, so steady-state inserts don't allocate).
+    pub fn insert(&mut self, key: DecisionKey, value: V) {
+        if let Some(slot) = self.entries.iter_mut().find(|(k, _)| *k == key) {
+            slot.1 = value;
+            return;
+        }
+        if self.entries.len() < self.capacity {
+            self.entries.push((key, value));
+        } else {
+            self.entries[self.next_evict] = (key, value);
+            self.next_evict = (self.next_evict + 1) % self.capacity;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slo() -> Slo {
+        Slo { tpot: 0.2 }
+    }
+
+    #[test]
+    fn hit_replays_and_counts() {
+        let mut c: DecisionCache<u32> = DecisionCache::new(4);
+        let k = c.key(DecisionKind::Demand, 1000.0, slo(), 16);
+        assert_eq!(c.get(&k), None);
+        c.insert(k, 7);
+        assert_eq!(c.get(&k), Some(7));
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 1);
+    }
+
+    #[test]
+    fn keys_separate_kind_demand_slo_and_pool() {
+        let c: DecisionCache<u32> = DecisionCache::new(4);
+        let base = c.key(DecisionKind::Demand, 1000.0, slo(), 16);
+        assert_ne!(base, c.key(DecisionKind::FixedBatch, 1000.0, slo(), 16));
+        assert_ne!(base, c.key(DecisionKind::Demand, 1000.1, slo(), 16));
+        assert_ne!(base, c.key(DecisionKind::Demand, 1000.0, Slo { tpot: 0.15 }, 16));
+        assert_ne!(base, c.key(DecisionKind::Demand, 1000.0, slo(), 12));
+    }
+
+    #[test]
+    fn exact_keying_by_default_quantized_on_request() {
+        let mut c: DecisionCache<u32> = DecisionCache::new(4);
+        // Exact: nearby demands are distinct keys.
+        assert_ne!(
+            c.key(DecisionKind::Demand, 1000.0, slo(), 1),
+            c.key(DecisionKind::Demand, 1000.0001, slo(), 1)
+        );
+        // Quantized: they collapse into one bucket (and the cache was
+        // cleared when the policy changed).
+        let k = c.key(DecisionKind::Demand, 1000.0, slo(), 1);
+        c.insert(k, 1);
+        c.set_quantum(10.0);
+        assert!(c.is_empty());
+        assert_eq!(
+            c.key(DecisionKind::Demand, 1000.0, slo(), 1),
+            c.key(DecisionKind::Demand, 1004.0, slo(), 1)
+        );
+    }
+
+    #[test]
+    fn fifo_eviction_is_deterministic_and_bounded() {
+        let mut c: DecisionCache<usize> = DecisionCache::new(2);
+        let keys: Vec<DecisionKey> = (0..3)
+            .map(|i| c.key(DecisionKind::Demand, i as f64, slo(), 0))
+            .collect();
+        c.insert(keys[0], 0);
+        c.insert(keys[1], 1);
+        c.insert(keys[2], 2); // evicts keys[0]
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&keys[0]), None);
+        assert_eq!(c.get(&keys[1]), Some(1));
+        assert_eq!(c.get(&keys[2]), Some(2));
+    }
+
+    #[test]
+    fn insert_overwrites_same_key() {
+        let mut c: DecisionCache<u32> = DecisionCache::new(2);
+        let k = c.key(DecisionKind::FixedBatch, 64.0, slo(), 3);
+        c.insert(k, 1);
+        c.insert(k, 2);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(&k), Some(2));
+    }
+}

@@ -7,10 +7,16 @@
 //! - [`algorithm2`] — the (n_a, n_e) enumeration that minimizes GPU count
 //!   under TPOT-SLO and memory constraints (Eq. 3 / Algorithm 2).
 
+//! - [`decision_cache`] — deterministic memoization of repeated scaling
+//!   decisions keyed on (demand, SLO, healthy pool); exact keys by
+//!   default so memoization changes no simulated outcome.
+
 pub mod algorithm2;
 pub mod amax;
+pub mod decision_cache;
 pub mod littles_law;
 pub mod memory;
 
 pub use algorithm2::{CandidateEval, ScalePlan, Scaler};
 pub use amax::{amax_bound, AmaxTable};
+pub use decision_cache::{DecisionCache, DecisionKey, DecisionKind};

@@ -148,8 +148,13 @@ pub fn assign(batch: &RoutingBatch, placement: &ExpertPlacement) -> Assignment {
     assign_with(&mut ws, batch, placement)
 }
 
-/// Just a_max (for the Monte-Carlo estimator, which doesn't need the
-/// per-token rewrite) — same algorithm, skips Step 3.
+/// Just a_max (for the Monte-Carlo estimator and the simulated decode
+/// hot path, which don't need the per-token rewrite) — same algorithm,
+/// skips Step 3, and runs per simulated decode step, so every scan is
+/// tightened: the straggler count is tracked incrementally as loads grow
+/// (no final O(n_e) max scan), and the ascending epoch-bitmap pass stops
+/// as soon as the last multi-replica activated expert has been placed
+/// instead of walking the remaining expert-id space.
 pub fn a_max_only(ws: &mut Workspace, batch: &RoutingBatch, placement: &ExpertPlacement) -> u32 {
     let n_e = placement.n_instances;
     ws.reset(batch.experts, n_e);
@@ -161,27 +166,44 @@ pub fn a_max_only(ws: &mut Workspace, batch: &RoutingBatch, placement: &ExpertPl
             ws.active.push(e);
         }
     }
+    // Loads only grow, so the running max after every increment equals
+    // the final max over instances.
+    let mut a_max = 0u32;
+    let mut multi_pending = 0usize;
     for &e in &ws.active {
         let hosts = placement.hosts(e);
-        if hosts.len() == 1 {
-            ws.loads[hosts[0] as usize] += 1;
+        match hosts.len() {
+            0 => {}
+            1 => {
+                let g = hosts[0] as usize;
+                ws.loads[g] += 1;
+                a_max = a_max.max(ws.loads[g]);
+            }
+            _ => multi_pending += 1,
         }
     }
-    for e in 0..batch.experts as u16 {
-        if ws.seen_epoch[e as usize] != epoch {
-            continue;
+    if multi_pending > 0 {
+        for e in 0..batch.experts as u16 {
+            if ws.seen_epoch[e as usize] != epoch {
+                continue;
+            }
+            let hosts = placement.hosts(e);
+            if hosts.len() <= 1 {
+                continue;
+            }
+            let g_star = *hosts
+                .iter()
+                .min_by_key(|&&g| (ws.loads[g as usize], g))
+                .unwrap();
+            ws.loads[g_star as usize] += 1;
+            a_max = a_max.max(ws.loads[g_star as usize]);
+            multi_pending -= 1;
+            if multi_pending == 0 {
+                break;
+            }
         }
-        let hosts = placement.hosts(e);
-        if hosts.len() <= 1 {
-            continue;
-        }
-        let g_star = *hosts
-            .iter()
-            .min_by_key(|&&g| (ws.loads[g as usize], g))
-            .unwrap();
-        ws.loads[g_star as usize] += 1;
     }
-    ws.loads.iter().copied().max().unwrap_or(0)
+    a_max
 }
 
 #[cfg(test)]

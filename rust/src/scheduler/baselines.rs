@@ -8,12 +8,117 @@
 //!   expert scheduling as modeled by the paper's evaluation).
 //! - `static_first` — always the first (lowest-id) replica; equivalent to
 //!   no replica redundancy (static expert parallelism).
+//!
+//! Each scheduler has two renditions: the full `Assignment`-building one
+//! (analysis, validation, figures) and an `*_a_max` variant over a
+//! reusable [`BaselineWorkspace`] that computes only the straggler
+//! activated-expert count — the value the simulated decode step needs —
+//! with zero heap allocation at steady state. The `*_a_max` variants make
+//! identical replica choices (and, for `random_a_max`, identical RNG
+//! draws), so swapping one for the other changes no simulated outcome.
 
 use crate::placement::ExpertPlacement;
 use crate::routing::RoutingBatch;
 use crate::util::rng::Rng;
 
 use super::assignment::Assignment;
+
+/// Reusable buffers for the `*_a_max` baseline-scheduler paths.
+#[derive(Clone, Debug, Default)]
+pub struct BaselineWorkspace {
+    /// Per-instance token counts (token balancing's greedy key).
+    token_so_far: Vec<u32>,
+    /// Per-instance distinct-expert bitset, `n_instances × words` u64s.
+    bits: Vec<u64>,
+    /// Distinct activated experts per instance (a_g).
+    loads: Vec<u32>,
+}
+
+impl BaselineWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn reset(&mut self, n_instances: usize, experts: usize) -> usize {
+        let words = experts.div_ceil(64);
+        self.token_so_far.clear();
+        self.token_so_far.resize(n_instances, 0);
+        self.bits.clear();
+        self.bits.resize(n_instances * words, 0);
+        self.loads.clear();
+        self.loads.resize(n_instances, 0);
+        words
+    }
+
+    /// Count expert `e` as activated on instance `g` if not already
+    /// marked; returns the running straggler count. Mirrors
+    /// [`Assignment::finalize`]'s distinct-(instance, expert) counting.
+    #[inline]
+    fn mark(&mut self, words: usize, g: u32, e: u16, a_max: u32) -> u32 {
+        let w = g as usize * words + e as usize / 64;
+        let mask = 1u64 << (e as usize % 64);
+        if self.bits[w] & mask == 0 {
+            self.bits[w] |= mask;
+            self.loads[g as usize] += 1;
+            a_max.max(self.loads[g as usize])
+        } else {
+            a_max
+        }
+    }
+}
+
+/// [`token_balanced`]'s a_max without building the assignment.
+pub fn token_balanced_a_max(
+    ws: &mut BaselineWorkspace,
+    batch: &RoutingBatch,
+    placement: &ExpertPlacement,
+) -> u32 {
+    let words = ws.reset(placement.n_instances, batch.experts);
+    let mut a_max = 0u32;
+    for &e in batch.flat() {
+        let hosts = placement.hosts(e);
+        let g = *hosts
+            .iter()
+            .min_by_key(|&&g| (ws.token_so_far[g as usize], g))
+            .unwrap();
+        ws.token_so_far[g as usize] += 1;
+        a_max = ws.mark(words, g, e, a_max);
+    }
+    a_max
+}
+
+/// [`random`]'s a_max without building the assignment; consumes `rng`
+/// in exactly the same order.
+pub fn random_a_max(
+    ws: &mut BaselineWorkspace,
+    batch: &RoutingBatch,
+    placement: &ExpertPlacement,
+    rng: &mut Rng,
+) -> u32 {
+    let words = ws.reset(placement.n_instances, batch.experts);
+    let mut a_max = 0u32;
+    for &e in batch.flat() {
+        let hosts = placement.hosts(e);
+        let g = hosts[rng.usize_below(hosts.len())];
+        a_max = ws.mark(words, g, e, a_max);
+    }
+    a_max
+}
+
+/// [`static_first`]'s a_max without building the assignment.
+pub fn static_first_a_max(
+    ws: &mut BaselineWorkspace,
+    batch: &RoutingBatch,
+    placement: &ExpertPlacement,
+) -> u32 {
+    let words = ws.reset(placement.n_instances, batch.experts);
+    let mut a_max = 0u32;
+    for &e in batch.flat() {
+        let g = placement.hosts(e)[0];
+        a_max = ws.mark(words, g, e, a_max);
+    }
+    a_max
+}
 
 /// EPLB-like token balancing: per request, choose the hosting instance
 /// with the fewest tokens assigned so far (deterministic tie-break).
@@ -116,6 +221,33 @@ mod tests {
         let asg = static_first(&b, &p);
         for (&e, &g) in b.flat().iter().zip(asg.instance_of.iter()) {
             assert_eq!(g, p.hosts(e)[0]);
+        }
+    }
+
+    #[test]
+    fn a_max_variants_match_full_schedulers() {
+        // The zero-alloc a_max paths must make the same replica choices
+        // (and, for random, the same RNG draws) as the full schedulers —
+        // the precondition for swapping them into the decode hot path
+        // without changing any simulated outcome.
+        let mut ws = BaselineWorkspace::new();
+        for seed in [1u64, 9, 17] {
+            let (p, b, mut rng) = redundant_setup(seed);
+            assert_eq!(
+                token_balanced(&b, &p).a_max,
+                token_balanced_a_max(&mut ws, &b, &p)
+            );
+            assert_eq!(
+                static_first(&b, &p).a_max,
+                static_first_a_max(&mut ws, &b, &p)
+            );
+            let mut rng_fast = rng.clone();
+            assert_eq!(
+                random(&b, &p, &mut rng).a_max,
+                random_a_max(&mut ws, &b, &p, &mut rng_fast)
+            );
+            // Both random paths consumed the RNG identically.
+            assert_eq!(rng.next_u64(), rng_fast.next_u64());
         }
     }
 

@@ -17,7 +17,9 @@
 //!   [`super::autoscale_sim::AutoscaleSim`] wraps it.
 //! - [`FailureScenario`] — failure injection: kill and restore MoE/GPU
 //!   capacity mid-trace while bursty arrivals keep flowing, and measure
-//!   SLO attainment through the system's replica re-placement.
+//!   SLO attainment through the system's replica re-placement. Arrivals
+//!   use the same bounded admission queue + `batch_capacity()` join
+//!   policy as the autoscale scenario.
 //!
 //! The arrival-driven scenarios (autoscale, failure injection) reject
 //! degenerate configurations (zero horizon/interval/rate/…) with a
@@ -313,6 +315,12 @@ pub struct FailureScenario {
     pub decision_interval: f64,
     /// Short-term arrival burstiness (Gamma cv², see `workload::arrivals`).
     pub burst_cv2: f64,
+    /// Bound on the admission queue; arrivals beyond it are rejected.
+    /// Same continuous-batching admission as the autoscale scenario:
+    /// queued requests join the in-flight batch only while slots (up to
+    /// the system's [`ServingSystem::batch_capacity`]) are free, so
+    /// overload can no longer step batches the KV model could not hold.
+    pub queue_capacity: usize,
     /// Optional diurnal rate envelope; when set, the instantaneous arrival
     /// rate follows `trace.rate_at(t)` (its `mean_rate` is in req/s) and
     /// failures land mid-trace.
@@ -330,6 +338,7 @@ impl FailureScenario {
             horizon,
             decision_interval: 60.0,
             burst_cv2: 0.3,
+            queue_capacity: DEFAULT_QUEUE_CAPACITY,
             rate_trace: None,
             failures: Vec::new(),
         }
@@ -364,6 +373,9 @@ impl FailureScenario {
         }
         if !positive_finite(self.burst_cv2) {
             return Err(ScenarioError::NonPositiveBurstiness(self.burst_cv2));
+        }
+        if self.queue_capacity == 0 {
+            return Err(ScenarioError::ZeroQueueCapacity);
         }
         for f in &self.failures {
             if !f.at.is_finite() || f.at < 0.0 || !f.downtime.is_finite() || f.downtime < 0.0 {
@@ -474,8 +486,16 @@ pub struct FailureResult {
     pub system: &'static str,
     /// Decode steps executed.
     pub steps: usize,
+    /// Requests admitted from the bounded queue into the decode batch.
+    pub admitted_requests: usize,
     pub completed_requests: usize,
+    /// Arrivals dropped because the bounded admission queue was full.
+    pub rejected_requests: usize,
     pub generated_tokens: usize,
+    /// Queue wait from arrival to joining the decode batch (s).
+    pub admission_delay_mean: f64,
+    /// Deepest the admission queue got over the run.
+    pub queue_depth_max: usize,
     /// Per-step TPOT distribution.
     pub tpot: TpotStats,
     /// Fraction of decode steps meeting the SLO (1.0 with zero steps).
@@ -572,6 +592,19 @@ pub fn fixed_batch<S: ServingSystem + ?Sized>(
 fn account(hours: &mut GpuHours, last: &mut f64, now: f64, gpus: usize) {
     hours.add(gpus, (now - *last).max(0.0));
     *last = now;
+}
+
+/// One decode step's bookkeeping on the in-flight batch: decrement every
+/// request's remaining tokens and compact the finished ones out in a
+/// single order-preserving pass (the old decrement-then-`retain` walked
+/// the batch twice). Returns how many requests completed.
+fn decrement_and_compact(in_flight: &mut Vec<u32>) -> usize {
+    let before = in_flight.len();
+    in_flight.retain_mut(|remaining| {
+        *remaining -= 1;
+        *remaining > 0
+    });
+    before - in_flight.len()
 }
 
 fn track(gpus: usize, min_g: &mut usize, max_g: &mut usize) {
@@ -757,12 +790,7 @@ pub fn autoscale<S: ServingSystem + ?Sized>(
                     iv.tpot.record(out.tpot, batch as u64);
                     iv.steps += 1;
                 }
-                let before = in_flight.len();
-                for r in in_flight.iter_mut() {
-                    *r -= 1;
-                }
-                in_flight.retain(|&r| r > 0);
-                completed += before - in_flight.len();
+                completed += decrement_and_compact(&mut in_flight);
                 queue.push(ev.time + out.tpot, EventKind::DecodeStep);
             }
             EventKind::ScalingDecision => {
@@ -848,7 +876,11 @@ pub fn autoscale<S: ServingSystem + ?Sized>(
 }
 
 /// Failure injection: arrivals, decode steps, scaling decisions, and
-/// planned outages all flow through one event queue.
+/// planned outages all flow through one event queue. Arrivals pass
+/// through the same bounded admission queue + continuous-batching join
+/// policy as the autoscale scenario (`queue_capacity`, overflow counted
+/// as rejects), so overload and outages can no longer inflate the
+/// in-flight batch beyond the deployment's [`ServingSystem::batch_capacity`].
 pub fn failure_injection<S: ServingSystem + ?Sized>(
     system: &mut S,
     sc: &FailureScenario,
@@ -892,7 +924,13 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
         (rate * sc.tokens_per_request).max(1.0)
     };
 
-    // Live state.
+    // Live state: the bounded admission queue holds (arrival time,
+    // output tokens); the in-flight vector holds remaining tokens.
+    // Admission mirrors the autoscale scenario's continuous batching —
+    // queued requests join only while the system's `batch_capacity()`
+    // has free slots, so outages that shrink the deployment also shrink
+    // what the decode loop may hold in flight.
+    let mut waiting: VecDeque<(f64, u32)> = VecDeque::new();
     let mut in_flight: Vec<u32> = Vec::new();
     let mut step_pending = false;
     let mut failed_gpus = 0usize;
@@ -901,8 +939,12 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
     let mut ok_steps = 0usize;
     let mut degraded_steps = 0usize;
     let mut degraded_ok = 0usize;
+    let mut admitted = 0usize;
     let mut completed = 0usize;
+    let mut rejected = 0usize;
     let mut generated = 0usize;
+    let mut adm_delay = Accumulator::new();
+    let mut queue_depth_max = 0usize;
     let mut decisions = 0usize;
     let mut feasible_decisions = 0usize;
     let mut reconfigurations = 0usize;
@@ -936,13 +978,31 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                 }
             }
             EventKind::Arrival { output_tokens } => {
-                in_flight.push(output_tokens.max(1));
-                if !step_pending {
-                    step_pending = true;
-                    queue.push(ev.time, EventKind::DecodeStep);
+                if waiting.len() < sc.queue_capacity {
+                    waiting.push_back((ev.time, output_tokens.max(1)));
+                    queue_depth_max = queue_depth_max.max(waiting.len());
+                    if !step_pending {
+                        step_pending = true;
+                        queue.push(ev.time, EventKind::DecodeStep);
+                    }
+                } else {
+                    rejected += 1;
                 }
             }
             EventKind::DecodeStep => {
+                // Continuous-batching admission: queued requests join the
+                // running batch while slots are free.
+                let cap = system.batch_capacity().max(1);
+                while in_flight.len() < cap {
+                    match waiting.pop_front() {
+                        Some((arrived, tokens)) => {
+                            adm_delay.push(ev.time - arrived);
+                            admitted += 1;
+                            in_flight.push(tokens);
+                        }
+                        None => break,
+                    }
+                }
                 if in_flight.is_empty() {
                     step_pending = false;
                     continue;
@@ -962,12 +1022,7 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                         degraded_ok += 1;
                     }
                 }
-                let before = in_flight.len();
-                for r in in_flight.iter_mut() {
-                    *r -= 1;
-                }
-                in_flight.retain(|&r| r > 0);
-                completed += before - in_flight.len();
+                completed += decrement_and_compact(&mut in_flight);
                 queue.push(ev.time + out.tpot, EventKind::DecodeStep);
             }
             EventKind::ScalingDecision => {
@@ -1025,8 +1080,12 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
     Ok(FailureResult {
         system: system.name(),
         steps,
+        admitted_requests: admitted,
         completed_requests: completed,
+        rejected_requests: rejected,
         generated_tokens: generated,
+        admission_delay_mean: adm_delay.mean(),
+        queue_depth_max,
         slo_attainment: att(ok_steps, steps),
         attainment_degraded: att(degraded_ok, degraded_steps),
         attainment_healthy: att(ok_steps - degraded_ok, steps - degraded_steps),
@@ -1235,6 +1294,9 @@ mod tests {
         let mut sc = base.clone();
         sc.burst_cv2 = 0.0;
         assert_eq!(sc.validate(), Err(ScenarioError::NonPositiveBurstiness(0.0)));
+        let mut sc = base.clone();
+        sc.queue_capacity = 0;
+        assert_eq!(sc.validate(), Err(ScenarioError::ZeroQueueCapacity));
         let sc = base.clone().with_failure(-1.0, 4, 10.0);
         assert!(matches!(
             sc.validate(),
@@ -1412,6 +1474,25 @@ mod tests {
     }
 
     #[test]
+    fn failure_queue_bounds_batch_and_rejects_overflow() {
+        // Capacity-1 decode at 1 s per step against ~20 req/s: the 4-deep
+        // admission queue must overflow, admitted requests must see real
+        // queue wait, and the in-flight batch can never exceed the
+        // system's capacity (generated == steps at capacity 1) — the
+        // bound the pre-queue failure loop lacked.
+        let mut sc = FailureScenario::new(Slo::from_ms(200.0), 20.0, 4.0, 120.0);
+        sc.queue_capacity = 4;
+        let mut sys = ScriptedSystem::new(vec![], 4, 1, 1.0);
+        let r = failure_injection(&mut sys, &sc, 5).expect("valid scenario");
+        assert!(r.steps > 40, "steps {}", r.steps);
+        assert!(r.rejected_requests > 0, "queue never overflowed");
+        assert!(r.queue_depth_max <= 4);
+        assert_eq!(r.generated_tokens, r.steps); // batch capacity 1
+        assert!(r.admission_delay_mean > 0.0);
+        assert!(r.admitted_requests >= r.completed_requests);
+    }
+
+    #[test]
     fn failure_scenario_is_bit_deterministic() {
         let sc = FailureScenario::new(Slo::from_ms(200.0), 3.0, 48.0, 300.0)
             .with_failure(60.0, 12, 120.0);
@@ -1420,12 +1501,15 @@ mod tests {
             let r = failure_injection(&mut sys, &sc, 33).expect("valid scenario");
             (
                 r.steps,
+                r.admitted_requests,
                 r.completed_requests,
+                r.rejected_requests,
                 r.generated_tokens,
                 r.tpot.mean().to_bits(),
                 r.tpot.p99().to_bits(),
                 r.gpu_hours.to_bits(),
                 r.slo_attainment.to_bits(),
+                r.admission_delay_mean.to_bits(),
             )
         };
         assert_eq!(run_once(), run_once());

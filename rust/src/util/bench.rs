@@ -1,7 +1,11 @@
 //! Minimal benchmarking harness (criterion is unavailable in this
 //! offline build environment — see DESIGN.md). Measures wall time over
-//! repeated runs with warmup, reporting mean/median/min per iteration.
+//! repeated runs with warmup, reporting mean/median/min per iteration,
+//! and serializes machine-readable `BENCH_*.json` trajectory files so
+//! each PR's perf numbers accumulate as CI artifacts.
 
+use std::io;
+use std::path::Path;
 use std::time::Instant;
 
 /// One benchmark result.
@@ -85,6 +89,84 @@ pub fn bench_cfg<F: FnMut()>(
     result
 }
 
+/// One row of a `BENCH_*.json` trajectory: a bench's mean per-iteration
+/// time and the equivalent rate (steps/s for decode-step benches).
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    pub name: String,
+    pub mean_ns: f64,
+    pub steps_per_s: f64,
+}
+
+impl BenchRecord {
+    /// Derive a record from a harness result (rate = 1e9 / mean ns).
+    pub fn from_result(r: &BenchResult) -> Self {
+        BenchRecord {
+            name: r.name.clone(),
+            mean_ns: r.mean_ns,
+            steps_per_s: if r.mean_ns > 0.0 { 1e9 / r.mean_ns } else { 0.0 },
+        }
+    }
+}
+
+/// Minimal JSON string escaping (bench names are plain ASCII, but don't
+/// trust that).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a `BENCH_*.json` trajectory document. `timestamp_unix_s` is
+/// passed in by the caller (the bench binary) — the harness itself never
+/// reads a clock for anything but interval measurement, and simulation
+/// code never reads one at all. Non-finite values serialize as 0 to keep
+/// the document valid JSON.
+pub fn bench_json(timestamp_unix_s: u64, records: &[BenchRecord]) -> String {
+    let num = |x: f64| -> String {
+        if x.is_finite() {
+            format!("{x:.3}")
+        } else {
+            "0".to_string()
+        }
+    };
+    let mut out = String::from("{\n");
+    out.push_str("  \"schema\": \"janus-bench-v1\",\n");
+    out.push_str(&format!("  \"generated_unix_s\": {timestamp_unix_s},\n"));
+    out.push_str("  \"benches\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"mean_ns\": {}, \"steps_per_s\": {}}}{}\n",
+            json_escape(&r.name),
+            num(r.mean_ns),
+            num(r.steps_per_s),
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write the trajectory document to `path` (the benches put it at the
+/// repo root as `BENCH_sim.json`; CI uploads it as an artifact).
+pub fn write_bench_json(
+    path: &Path,
+    timestamp_unix_s: u64,
+    records: &[BenchRecord],
+) -> io::Result<()> {
+    std::fs::write(path, bench_json(timestamp_unix_s, records))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -98,5 +180,44 @@ mod tests {
         assert!(r.mean_ns > 0.0);
         assert!(r.iters > 0);
         assert!(r.min_ns <= r.median_ns);
+    }
+
+    #[test]
+    fn json_document_shape() {
+        let records = vec![
+            BenchRecord {
+                name: "janus/step B=256".to_string(),
+                mean_ns: 12_345.678,
+                steps_per_s: 81_000.5,
+            },
+            BenchRecord {
+                name: "quote\"and\\slash".to_string(),
+                mean_ns: f64::NAN,
+                steps_per_s: f64::INFINITY,
+            },
+        ];
+        let doc = bench_json(1_753_000_000, &records);
+        assert!(doc.contains("\"schema\": \"janus-bench-v1\""));
+        assert!(doc.contains("\"generated_unix_s\": 1753000000"));
+        assert!(doc.contains("\"mean_ns\": 12345.678"));
+        assert!(doc.contains("\"steps_per_s\": 81000.500"));
+        // Escaping + non-finite fallback keep the document valid.
+        assert!(doc.contains("quote\\\"and\\\\slash"));
+        assert!(doc.contains("\"mean_ns\": 0, \"steps_per_s\": 0"));
+        // Exactly one trailing-comma-free last element.
+        assert!(!doc.contains(",\n  ]"));
+    }
+
+    #[test]
+    fn record_from_result_inverts_rate() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 2e6,
+            median_ns: 2e6,
+            min_ns: 2e6,
+        };
+        let rec = BenchRecord::from_result(&r);
+        assert!((rec.steps_per_s - 500.0).abs() < 1e-9);
     }
 }

@@ -213,10 +213,19 @@ impl Rng {
 }
 
 /// Precomputed Zipf sampler over {0, .., n-1} with exponent s ≥ 0
-/// (s = 0 reduces to uniform). Uses the inverse-CDF table, O(log n) draws.
+/// (s = 0 reduces to uniform). Inverse-CDF lookups are accelerated by a
+/// guide table (first CDF index per uniform u-bucket), so a draw costs
+/// ~1 probe instead of an O(log n) binary search — this sits on the
+/// decode hot path via `GateSim::sample_token` (top_k draws per token
+/// per step). The guided lookup returns exactly the index the binary
+/// search would (first rank whose CDF reaches u), so draws stay
+/// bit-identical.
 #[derive(Clone, Debug)]
 pub struct Zipf {
     cdf: Vec<f64>,
+    /// `guide[b]` = first index j with `(cdf[j] * buckets) as usize >= b`
+    /// — a draw whose u lands in bucket b starts its scan there.
+    guide: Vec<u32>,
 }
 
 impl Zipf {
@@ -232,7 +241,23 @@ impl Zipf {
         for v in cdf.iter_mut() {
             *v /= total;
         }
-        Zipf { cdf }
+        // ~4 buckets per rank keeps the expected scan length below one
+        // extra probe even for a flat (s = 0) distribution. Each guide
+        // entry is derived from the CDF values' OWN bucket indices —
+        // computed with the exact float expression `index_of` applies to
+        // u — so the skip is sound at 1-ulp bucket boundaries: x ↦
+        // (x·buckets) as usize is monotone, hence bucket(cdf[j]) <
+        // bucket(u) implies cdf[j] < u.
+        let buckets = (4 * n).max(16);
+        let mut guide = Vec::with_capacity(buckets);
+        let mut j = 0usize;
+        for b in 0..buckets {
+            while j < cdf.len() && ((cdf[j] * buckets as f64) as usize) < b {
+                j += 1;
+            }
+            guide.push(j as u32);
+        }
+        Zipf { cdf, guide }
     }
 
     /// Probability mass of rank i.
@@ -252,15 +277,23 @@ impl Zipf {
         self.cdf.is_empty()
     }
 
-    pub fn sample(&self, rng: &mut Rng) -> usize {
-        let u = rng.f64();
-        match self
-            .cdf
-            .binary_search_by(|p| p.partial_cmp(&u).unwrap())
-        {
-            Ok(i) => i,
-            Err(i) => i.min(self.cdf.len() - 1),
+    /// First rank whose CDF reaches `u` (capped at n-1) — the same index
+    /// `cdf.binary_search_by(partial_cmp(&u))` resolves to, found from
+    /// the bucket's guide entry instead.
+    fn index_of(&self, u: f64) -> usize {
+        let buckets = self.guide.len();
+        let bucket = ((u * buckets as f64) as usize).min(buckets - 1);
+        // Every index before guide[bucket] has bucket(cdf) < bucket(u),
+        // hence cdf < u (monotone bucket map — see the constructor).
+        let mut j = self.guide[bucket] as usize;
+        while j < self.cdf.len() && self.cdf[j] < u {
+            j += 1;
         }
+        j.min(self.cdf.len() - 1)
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        self.index_of(rng.f64())
     }
 }
 
@@ -351,6 +384,53 @@ mod tests {
         assert!((m1 - 3.0).abs() < 0.05, "m1 {m1}");
         let m2 = (0..n).map(|_| r.poisson(100.0)).sum::<u64>() as f64 / n as f64;
         assert!((m2 - 100.0).abs() < 0.5, "m2 {m2}");
+    }
+
+    #[test]
+    fn guided_lookup_matches_binary_search() {
+        // The guide-table fast path must resolve every u to exactly the
+        // index the plain binary search gives — that is what keeps gate
+        // draws bit-identical across the hot-path optimization.
+        for s in [0.0, 0.4, 1.2, 2.5] {
+            for n in [1usize, 2, 7, 160, 1000] {
+                let z = Zipf::new(n, s);
+                let mut rng = Rng::seed_from_u64(991);
+                let reference = |u: f64| -> usize {
+                    match z.cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+                        Ok(i) => i,
+                        Err(i) => i.min(z.cdf.len() - 1),
+                    }
+                };
+                // Random draws, the exact CDF boundaries (± 1 ulp), and
+                // the exact bucket edges (± 1 ulp) — the 1-ulp cases are
+                // where a naive threshold-built guide table over-skips.
+                for _ in 0..2000 {
+                    let u = rng.f64();
+                    assert_eq!(z.index_of(u), reference(u), "n={n} s={s} u={u}");
+                }
+                let ulp_up = |x: f64| f64::from_bits(x.to_bits() + 1);
+                let ulp_down = |x: f64| {
+                    if x > 0.0 {
+                        f64::from_bits(x.to_bits() - 1)
+                    } else {
+                        x
+                    }
+                };
+                for i in 0..n {
+                    for u in [ulp_down(z.cdf[i]), z.cdf[i], ulp_up(z.cdf[i]).min(1.0)] {
+                        assert_eq!(z.index_of(u), reference(u), "cdf edge n={n} s={s} i={i}");
+                    }
+                }
+                let buckets = z.guide.len();
+                for b in 1..buckets.min(64) {
+                    let edge = b as f64 / buckets as f64;
+                    for u in [ulp_down(edge), edge, ulp_up(edge)] {
+                        assert_eq!(z.index_of(u), reference(u), "bucket edge n={n} s={s} b={b}");
+                    }
+                }
+                assert_eq!(z.index_of(0.0), reference(0.0));
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,117 @@
+//! Allocation regression for the decode hot path.
+//!
+//! The PR-3 hot-path contract: once a serving system is configured and
+//! its reusable buffers are warm, `JanusSystem::step` performs ZERO heap
+//! allocations per simulated decode step — the routing batch, the AEBS
+//! workspace, and the comm-plan scratch are all reused. The baselines
+//! share the same buffer plumbing; they get a loose bound rather than an
+//! exact zero so platform quirks can't make the suite brittle.
+//!
+//! Measured with a counting `#[global_allocator]`. The file holds a
+//! single test so no sibling test thread can allocate concurrently and
+//! pollute the counters.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use janus::baselines::{
+    JanusSystem, MegaScaleInfer, ServingSystem, SgLang, XDeepServe,
+};
+use janus::config::hardware::paper_testbed;
+use janus::config::models;
+use janus::config::serving::Slo;
+use janus::routing::gate::ExpertPopularity;
+use janus::util::rng::Rng;
+
+struct CountingAllocator;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAllocator = CountingAllocator;
+
+fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// Warm a system's reusable buffers, then count allocations over a
+/// steady-state run of decode steps.
+fn steady_state_allocs(sys: &mut dyn ServingSystem, batch: usize, steps: usize) -> u64 {
+    let mut rng = Rng::seed_from_u64(7);
+    // Warm-up: grow the routing buffer, scheduler workspaces, and comm
+    // scratch to the working set for this batch.
+    for _ in 0..20 {
+        std::hint::black_box(sys.step(batch, &mut rng));
+    }
+    let before = allocations();
+    for _ in 0..steps {
+        std::hint::black_box(sys.step(batch, &mut rng));
+    }
+    allocations() - before
+}
+
+/// Single test on purpose — see module docs.
+#[test]
+fn steady_state_decode_steps_do_not_allocate() {
+    let model = models::deepseek_v2();
+    let hw = paper_testbed();
+    let pop = ExpertPopularity::Zipf { s: 0.4 };
+    let slo = Slo::from_ms(200.0);
+    const BATCH: usize = 256;
+    const STEPS: usize = 1000;
+
+    // The paper's system: exactly zero allocations per steady-state step.
+    let mut janus = JanusSystem::build(model.clone(), hw.clone(), &pop, 16, 42);
+    janus.configure(BATCH, slo).expect("feasible at B=256");
+    let janus_allocs = steady_state_allocs(&mut janus, BATCH, STEPS);
+    assert_eq!(
+        janus_allocs, 0,
+        "JanusSystem::step allocated {janus_allocs} times over {STEPS} \
+         steady-state steps — the zero-alloc decode contract is broken"
+    );
+
+    // Baselines: the same buffer plumbing, held to a loose bound (< 2
+    // allocations per step on average) so an incidental platform alloc
+    // can't flake the suite while a real per-step regression still fails.
+    let mut sgl = SgLang::build(model.clone(), hw.clone(), &pop, 43);
+    let _ = sgl.configure(BATCH, slo);
+    let mut msi = MegaScaleInfer::build(model.clone(), hw.clone(), &pop, 16, 44);
+    let _ = msi.configure(BATCH, slo);
+    let mut xds = XDeepServe::build(model, hw, &pop, 32, 45);
+    let _ = xds.configure(BATCH, slo);
+    let baselines: [(&str, &mut dyn ServingSystem); 3] = [
+        ("SGLang", &mut sgl),
+        ("MegaScale-Infer", &mut msi),
+        ("xDeepServe", &mut xds),
+    ];
+    for (name, sys) in baselines {
+        let allocs = steady_state_allocs(sys, BATCH, STEPS);
+        assert!(
+            allocs < 2 * STEPS as u64,
+            "{name}::step allocated {allocs} times over {STEPS} steps \
+             (bound: < {})",
+            2 * STEPS
+        );
+    }
+}

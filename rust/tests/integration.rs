@@ -380,6 +380,41 @@ fn failure_injection_measures_replacement() {
     assert!(janus.configure_for_demand(256.0, slo).is_some(), "pool recovered");
 }
 
+/// Memoized scaling decisions are observationally invisible: for every
+/// system, repeating a decision on an unchanged pool (a guaranteed cache
+/// hit) returns the same configuration and leaves the system stepping
+/// exactly as a cold-cache search would — the property that lets the
+/// decision cache sit on the autoscale loop without moving a single
+/// golden-snapshot bit.
+#[test]
+fn decision_memoization_changes_no_outcome() {
+    let model = models::deepseek_v2();
+    let hw = paper_testbed();
+    let pop = ExpertPopularity::Uniform;
+    let slo = Slo::from_ms(200.0);
+    let mut janus = JanusSystem::build(model.clone(), hw.clone(), &pop, 16, 91);
+    let mut sgl = SgLang::build(model.clone(), hw.clone(), &pop, 92);
+    let mut msi = MegaScaleInfer::build(model.clone(), hw.clone(), &pop, 16, 93);
+    let mut xds = XDeepServe::build(model, hw, &pop, 32, 94);
+    let systems: Vec<&mut dyn ServingSystem> = vec![&mut janus, &mut sgl, &mut msi, &mut xds];
+    for sys in systems {
+        let cold = sys.configure_for_demand(3000.0, slo);
+        let cold_gpus = sys.gpus();
+        let cold_label = sys.label();
+        let cold_cap = sys.batch_capacity();
+        let mut rng = Rng::seed_from_u64(17);
+        let cold_step = sys.step(128, &mut rng);
+        let hit = sys.configure_for_demand(3000.0, slo);
+        assert_eq!(cold, hit, "{}: cache hit changed the decision", sys.name());
+        assert_eq!(cold_gpus, sys.gpus(), "{}", sys.name());
+        assert_eq!(cold_label, sys.label(), "{}", sys.name());
+        assert_eq!(cold_cap, sys.batch_capacity(), "{}", sys.name());
+        let mut rng = Rng::seed_from_u64(17);
+        let hit_step = sys.step(128, &mut rng);
+        assert_eq!(cold_step, hit_step, "{}: post-hit step diverged", sys.name());
+    }
+}
+
 /// Static expert parallelism (no redundancy) leaves no scheduling choice:
 /// AEBS degenerates gracefully and still matches baselines exactly.
 #[test]
