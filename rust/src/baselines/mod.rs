@@ -21,3 +21,31 @@ pub use megascale::MegaScaleInfer;
 pub use sglang::SgLang;
 pub use system::{ConfigInfo, ServingSystem, StepOutcome};
 pub use xdeepserve::XDeepServe;
+
+use crate::config::hardware::HardwareProfile;
+use crate::config::models::MoeModel;
+use crate::routing::gate::ExpertPopularity;
+
+/// Number of systems in the canonical evaluation lineup.
+pub const EVAL_SYSTEMS: usize = 4;
+
+/// Build system `which` (0 = Janus, 1 = SGLang, 2 = MegaScale-Infer,
+/// 3 = xDeepServe) from the **canonical evaluation constructor seeds**
+/// (42/43/44/45, n_max 16/—/16/32). The figures harness, the golden
+/// sweeps, `bench_sim`, and the sweep-determinism pin all build their
+/// four-system grids through this one helper so the lineup cannot
+/// silently diverge between surfaces.
+pub fn build_eval_system(
+    which: usize,
+    model: MoeModel,
+    hw: HardwareProfile,
+    pop: &ExpertPopularity,
+) -> Box<dyn ServingSystem> {
+    match which {
+        0 => Box::new(JanusSystem::build(model, hw, pop, 16, 42)),
+        1 => Box::new(SgLang::build(model, hw, pop, 43)),
+        2 => Box::new(MegaScaleInfer::build(model, hw, pop, 16, 44)),
+        3 => Box::new(XDeepServe::build(model, hw, pop, 32, 45)),
+        _ => panic!("eval system index {which} out of range (< {EVAL_SYSTEMS})"),
+    }
+}

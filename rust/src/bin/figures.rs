@@ -1,17 +1,30 @@
 //! Regenerates every table and figure of the paper's evaluation.
 //!
-//! Usage: `figures <id> [--steps N] [--seed S]`, where `<id>` is one of
-//! `table1 table2 fig1 fig2 fig3 fig4 fig8 fig9 fig10 fig11 fig12 fig13
-//! fig14 fig15 fig16 fig17 all`.
+//! Usage: `figures <id> [--steps N] [--seed S] [--threads N]`, where
+//! `<id>` is one of `table1 table2 fig1 fig2 fig3 fig4 fig8 fig9 fig10
+//! fig11 fig12 fig13 fig14 fig15 fig16 fig17 all`.
 //!
 //! Each subcommand prints the same rows/series the paper reports (see
 //! DESIGN.md's per-experiment index and EXPERIMENTS.md for the recorded
 //! paper-vs-measured comparison).
+//!
+//! Parallel determinism: every multi-cell panel drains its (config ×
+//! seed) grid through `sim::sweep` — independent cells, slot-per-cell
+//! results, per-cell RNG streams derived with `split_seed(panel_id,
+//! rep)` — so the rendered output is **byte-identical for any
+//! `--threads` value** (resolution: `--threads` > `JANUS_THREADS` >
+//! hardware). `figures all` parallelizes across panels (each panel
+//! renders into its own buffer, printed in registration order, inner
+//! grids at one worker), except wall-clock timing panels (fig15), which
+//! render serially after the parallel phase so their measurements own
+//! an idle machine; a single `figures <id>` gives that panel's grid all
+//! the workers instead.
 
+use std::fmt::Write as _;
 use std::time::Instant;
 
 use janus::baselines::{
-    JanusSystem, MegaScaleInfer, ServingSystem, SgLang, XDeepServe,
+    build_eval_system, JanusSystem, MegaScaleInfer, ServingSystem, SgLang,
 };
 use janus::comm::CommModel;
 use janus::config::hardware::{autoscale_pool, h100, paper_testbed, HardwareProfile};
@@ -27,54 +40,99 @@ use janus::scaling::{amax_bound, AmaxTable, Scaler};
 use janus::scheduler::{self, aebs};
 use janus::sim::autoscale_sim::AutoscaleSim;
 use janus::sim::decode_sim::evaluate_fixed_batch;
+use janus::sim::sweep;
 use janus::util::cli::Args;
-use janus::util::rng::Rng;
+use janus::util::rng::{split_seed, Rng};
 use janus::util::table::{fnum, Table};
 use janus::workload::trace::{DiurnalTrace, TraceConfig};
 
+/// Buffered `writeln!` whose io error (infallible on String) is dropped.
+macro_rules! wl {
+    ($out:expr) => { let _ = writeln!($out); };
+    ($out:expr, $($t:tt)*) => { let _ = writeln!($out, $($t)*); };
+}
+
+/// A panel renders into a buffer so `all` can run panels concurrently
+/// and still print in submission order.
+type PanelFn = fn(&Args, usize, &mut String);
+
+/// Panel registration: id, renderer, and whether the panel measures
+/// wall-clock time (timing panels must own an otherwise idle machine,
+/// so `all` runs them serially after the parallel phase).
+type PanelEntry = (&'static str, PanelFn, bool);
+
+fn render_panel(entry: PanelEntry, args: &Args, threads: usize) -> String {
+    let (id, f, _) = entry;
+    let mut out = String::new();
+    wl!(out, "\n================ {} ================", id.to_uppercase());
+    f(args, threads, &mut out);
+    out
+}
+
 fn main() {
     let args = Args::from_env();
+    let threads = sweep::resolve_threads(args.usize_opt("threads"));
     let which = args
         .positional
         .first()
         .map(|s| s.as_str())
         .unwrap_or("all")
         .to_string();
-    let all = which == "all";
-    let mut ran = false;
-    let ids: &[(&str, fn(&Args))] = &[
-        ("table1", table1),
-        ("table2", table2),
-        ("fig1", fig1),
-        ("fig2", fig2),
-        ("fig3", fig3),
-        ("fig4", fig4),
-        ("fig8", fig8),
-        ("fig9", fig9),
-        ("fig10", fig10),
-        ("fig11", fig11),
-        ("fig12", fig12),
-        ("fig13", fig13),
-        ("fig14", fig14),
-        ("fig15", fig15),
-        ("fig16", fig16),
-        ("fig17", fig17),
-        ("hetero", hetero),
-        ("pipelining", pipelining),
+    let ids: &[PanelEntry] = &[
+        ("table1", table1, false),
+        ("table2", table2, false),
+        ("fig1", fig1, false),
+        ("fig2", fig2, false),
+        ("fig3", fig3, false),
+        ("fig4", fig4, false),
+        ("fig8", fig8, false),
+        ("fig9", fig9, false),
+        ("fig10", fig10, false),
+        ("fig11", fig11, false),
+        ("fig12", fig12, false),
+        ("fig13", fig13, false),
+        ("fig14", fig14, false),
+        ("fig15", fig15, true),
+        ("fig16", fig16, false),
+        ("fig17", fig17, false),
+        ("hetero", hetero, false),
+        ("pipelining", pipelining, false),
     ];
-    for (id, f) in ids {
-        if all || which == *id {
-            println!("\n================ {} ================", id.to_uppercase());
-            f(&args);
-            ran = true;
+    if which == "all" {
+        // Panel-level sweep: each non-timing panel is one cell rendering
+        // into its own buffer; inner grids run single-worker so `all`
+        // does not oversubscribe the machine. Timing panels (fig15)
+        // render afterwards on the then-idle machine — their wall-clock
+        // micro-measurements must not share cores with fig8/fig11 cells.
+        // Buffers print in registration order either way, so the output
+        // is byte-identical for any worker count.
+        let concurrent: Vec<usize> = (0..ids.len()).filter(|&i| !ids[i].2).collect();
+        let rendered = sweep::sweep(&concurrent, threads, |_, &i| {
+            render_panel(ids[i], &args, 1)
+        });
+        let mut outputs: Vec<Option<String>> = ids.iter().map(|_| None).collect();
+        for (&i, buf) in concurrent.iter().zip(rendered) {
+            outputs[i] = Some(buf);
         }
+        for (i, entry) in ids.iter().enumerate() {
+            if entry.2 {
+                outputs[i] = Some(render_panel(*entry, &args, 1));
+            }
+        }
+        for o in outputs {
+            print!("{}", o.expect("every panel rendered"));
+        }
+        return;
     }
-    if !ran {
-        eprintln!("unknown figure '{which}'. ids (plus extension 'hetero'):");
-        for (id, _) in ids {
-            eprintln!("  {id}");
+    match ids.iter().find(|&&(id, _, _)| id == which) {
+        Some(&entry) => print!("{}", render_panel(entry, &args, threads)),
+        None => {
+            eprintln!("unknown figure '{which}'. ids (plus extension 'hetero'):");
+            for (id, _, _) in ids {
+                eprintln!("  {id}");
+            }
+            std::process::exit(2);
         }
-        std::process::exit(2);
     }
 }
 
@@ -93,11 +151,18 @@ fn build_trace(model: &MoeModel, seed: u64) -> (ActivationTrace, GateSim) {
     (trace, gate)
 }
 
+/// Stable per-rep RNG for panel `panel_id`: cell `rep`'s stream depends
+/// only on `(panel_id, rep)`, never on which reps ran before it (or on
+/// which sweep worker ran it).
+fn rep_rng(panel_id: u64, rep: usize) -> Rng {
+    Rng::seed_from_u64(split_seed(panel_id, rep as u64))
+}
+
 // ---------------------------------------------------------------- table 1
 
-fn table1(_: &Args) {
-    println!("Memory footprint of state-of-the-art MoE models");
-    println!("(computed from architecture; paper's Table 1 in parentheses)\n");
+fn table1(_: &Args, _threads: usize, out: &mut String) {
+    wl!(out, "Memory footprint of state-of-the-art MoE models");
+    wl!(out, "(computed from architecture; paper's Table 1 in parentheses)\n");
     let paper = [
         ("Qwen3-235B", 423.0, 438.0, 96.5),
         ("DeepSeek-V2", 421.0, 472.0, 89.2),
@@ -114,13 +179,13 @@ fn table1(_: &Args) {
             format!("{:.1} ({pr:.1})", m.expert_ratio_pct()),
         ]);
     }
-    t.print();
+    out.push_str(&t.render());
 }
 
 // ---------------------------------------------------------------- table 2
 
-fn table2(_: &Args) {
-    println!("Comparison of MoE inference systems (as implemented here)\n");
+fn table2(_: &Args, _threads: usize, out: &mut String) {
+    wl!(out, "Comparison of MoE inference systems (as implemented here)\n");
     let mut t = Table::new([
         "System",
         "Independent Provisioning",
@@ -131,14 +196,15 @@ fn table2(_: &Args) {
     t.row(["MegaScale-Infer", "yes", "x", "partial"]);
     t.row(["xDeepServe", "yes", "x", "x"]);
     t.row(["Janus", "yes", "yes", "yes"]);
-    t.print();
+    out.push_str(&t.render());
 }
 
 // ---------------------------------------------------------------- fig 1
 
-fn fig1(_: &Args) {
-    println!("DeepSeek-V2 layer latency vs parallelism degree (normalized to");
-    println!("degree 1; 'ideal' = linear scaling). Paper Fig 1.\n");
+fn fig1(_: &Args, threads: usize, out: &mut String) {
+    const PANEL: u64 = 1;
+    wl!(out, "DeepSeek-V2 layer latency vs parallelism degree (normalized to");
+    wl!(out, "degree 1; 'ideal' = linear scaling). Paper Fig 1.\n");
     let model = models::deepseek_v2();
     let hw = paper_testbed();
     let c = LayerCoeffs::derive(&model, &hw.gpu);
@@ -163,45 +229,59 @@ fn fig1(_: &Args) {
             ]);
         }
     }
-    // MoE panel: experts spread over p instances, static placement.
-    let mut rng = Rng::seed_from_u64(11);
-    let gate = GateSim::new(model.experts, model.top_k, &ExpertPopularity::Uniform, &mut rng);
-    for &b in &[16usize, 64, 512] {
-        let mut lat_at = |p: usize| {
-            let cap = model.experts.div_ceil(p);
-            let placement = ExpertPlacement::contiguous(model.experts, p, cap);
-            let mut acc = 0.0;
-            for _ in 0..16 {
-                let batch = gate.sample_batch(&mut rng, b);
-                let asg = scheduler::baselines::static_first(&batch, &placement);
-                acc += moe::moe_layer_latency(
-                    &c, asg.a_max, (b * model.top_k) as u32, p as u32,
-                );
-            }
-            acc / 16.0
-        };
-        let base = lat_at(1);
-        for &p in &[1usize, 2, 4, 8] {
+    // MoE panel: experts spread over p instances, static placement. One
+    // sweep cell per (B, degree); each of a cell's 16 reps owns a
+    // derived RNG stream (the shared gate is rebuilt per cell from its
+    // fixed construction seed).
+    const REPS: usize = 16;
+    let bs = [16usize, 64, 512];
+    let degrees = [1usize, 2, 4, 8];
+    let cells: Vec<(usize, usize)> = bs
+        .iter()
+        .flat_map(|&b| degrees.iter().map(move |&p| (b, p)))
+        .collect();
+    let lat = sweep::sweep(&cells, threads, |ci, &(b, p)| {
+        let mut grng = Rng::seed_from_u64(11);
+        let gate =
+            GateSim::new(model.experts, model.top_k, &ExpertPopularity::Uniform, &mut grng);
+        let cap = model.experts.div_ceil(p);
+        let placement = ExpertPlacement::contiguous(model.experts, p, cap);
+        let mut acc = 0.0;
+        for rep in 0..REPS {
+            let mut rng = rep_rng(PANEL, ci * REPS + rep);
+            let batch = gate.sample_batch(&mut rng, b);
+            let asg = scheduler::baselines::static_first(&batch, &placement);
+            acc += moe::moe_layer_latency(
+                &c, asg.a_max, (b * model.top_k) as u32, p as u32,
+            );
+        }
+        acc / REPS as f64
+    });
+    for (bi, &b) in bs.iter().enumerate() {
+        let base = lat[bi * degrees.len()]; // degree 1 cell of this B
+        for (pi, &p) in degrees.iter().enumerate() {
             t.row([
                 "moe".to_string(),
                 b.to_string(),
                 p.to_string(),
-                fnum(lat_at(p) / base, 3),
+                fnum(lat[bi * degrees.len() + pi] / base, 3),
                 fnum(1.0 / p as f64, 3),
             ]);
         }
     }
-    t.print();
+    out.push_str(&t.render());
 }
 
 // ---------------------------------------------------------------- fig 2
 
-fn fig2(_: &Args) {
+fn fig2(_: &Args, _threads: usize, out: &mut String) {
+    // Closed-form latency lookups; per-row work is microseconds, so this
+    // panel stays serial (each row already owns a fresh fixed-seed RNG).
     let model = models::deepseek_v2();
     let c = LayerCoeffs::derive(&model, &h100());
-    println!("Left: attention vs MoE layer latency across batch sizes");
-    println!("(1 H100; attention S_ctx=512; MoE: 32 experts hosted, top-1");
-    println!("balanced routing). Paper Fig 2 left.\n");
+    wl!(out, "Left: attention vs MoE layer latency across batch sizes");
+    wl!(out, "(1 H100; attention S_ctx=512; MoE: 32 experts hosted, top-1");
+    wl!(out, "balanced routing). Paper Fig 2 left.\n");
     let mut t = Table::new(["B", "attn (us)", "moe (us)"]);
     for &b in &[1usize, 16, 64, 256, 512, 1024, 2048, 4096] {
         let attn = attention::attn_latency(&c, b as f64, 512.0);
@@ -214,60 +294,68 @@ fn fig2(_: &Args) {
         let m = moe::moe_instance_latency(&c, a, b as u32);
         t.row([b.to_string(), fnum(attn * 1e6, 1), fnum(m * 1e6, 1)]);
     }
-    t.print();
+    out.push_str(&t.render());
 
-    println!("\nRight: MoE layer latency vs #activated experts (B=64).");
-    println!("Paper Fig 2 right: ~linear.\n");
+    wl!(out, "\nRight: MoE layer latency vs #activated experts (B=64).");
+    wl!(out, "Paper Fig 2 right: ~linear.\n");
     let mut t2 = Table::new(["activated experts", "latency (us)"]);
     for a in [1u32, 4, 8, 12, 16, 20, 24, 28, 32] {
         t2.row([a.to_string(), fnum(moe::moe_instance_latency(&c, a, 64) * 1e6, 1)]);
     }
-    t2.print();
+    out.push_str(&t2.render());
 }
 
 // ---------------------------------------------------------------- fig 3
 
-fn fig3(_: &Args) {
+fn fig3(_: &Args, threads: usize, out: &mut String) {
+    const PANEL: u64 = 3;
     let model = models::deepseek_v2();
     let c = LayerCoeffs::derive(&model, &h100());
-    println!("MoE-layer latency under uniform vs skewed activation, all 32");
-    println!("experts activated (token-volume insensitivity). Paper Fig 3.\n");
+    wl!(out, "MoE-layer latency under uniform vs skewed activation, all 32");
+    wl!(out, "experts activated (token-volume insensitivity). Paper Fig 3.\n");
     let mut t = Table::new(["B", "pattern", "max tokens/expert", "latency (us)"]);
-    let mut rng = Rng::seed_from_u64(5);
-    for &b in &[64usize, 256, 512, 1024] {
-        for (name, pop) in [
-            ("uniform", ExpertPopularity::Uniform),
-            ("skewed", ExpertPopularity::Zipf { s: 1.0 }),
-        ] {
-            let gate = GateSim::new(32, 1, &pop, &mut rng);
-            // Resample until all 32 experts are hit (paper's setup).
-            let mut batch = gate.sample_batch(&mut rng, b);
-            for _ in 0..50 {
-                if batch.activated_set().1 == 32 {
-                    break;
-                }
-                batch = gate.sample_batch(&mut rng, b);
+    let patterns = [
+        ("uniform", ExpertPopularity::Uniform),
+        ("skewed", ExpertPopularity::Zipf { s: 1.0 }),
+    ];
+    let cells: Vec<(usize, usize)> = [64usize, 256, 512, 1024]
+        .iter()
+        .flat_map(|&b| (0..patterns.len()).map(move |pi| (b, pi)))
+        .collect();
+    let rows = sweep::sweep(&cells, threads, |ci, &(b, pi)| {
+        let mut rng = rep_rng(PANEL, ci);
+        let gate = GateSim::new(32, 1, &patterns[pi].1, &mut rng);
+        // Resample until all 32 experts are hit (paper's setup).
+        let mut batch = gate.sample_batch(&mut rng, b);
+        for _ in 0..50 {
+            if batch.activated_set().1 == 32 {
+                break;
             }
-            let counts = batch.expert_token_counts();
-            let max_tok = counts.iter().max().copied().unwrap_or(0);
-            let a = batch.activated_set().1 as u32;
-            let lat = moe::moe_instance_latency(&c, a, b as u32);
-            t.row([
-                b.to_string(),
-                name.to_string(),
-                max_tok.to_string(),
-                fnum(lat * 1e6, 1),
-            ]);
+            batch = gate.sample_batch(&mut rng, b);
         }
+        let counts = batch.expert_token_counts();
+        let max_tok = counts.iter().max().copied().unwrap_or(0);
+        let a = batch.activated_set().1 as u32;
+        let lat = moe::moe_instance_latency(&c, a, b as u32);
+        [
+            b.to_string(),
+            patterns[pi].0.to_string(),
+            max_tok.to_string(),
+            fnum(lat * 1e6, 1),
+        ]
+    });
+    for row in rows {
+        t.row(row);
     }
-    t.print();
+    out.push_str(&t.render());
 }
 
 // ---------------------------------------------------------------- fig 4
 
-fn fig4(_: &Args) {
-    println!("One-week synthetic production trace (normalized to mean).");
-    println!("Paper Fig 4: bursty diurnal arrivals, peak ~7.5x mean.\n");
+fn fig4(_: &Args, _threads: usize, out: &mut String) {
+    // One shared synthetic trace, per-row lookups: serial by design.
+    wl!(out, "One-week synthetic production trace (normalized to mean).");
+    wl!(out, "Paper Fig 4: bursty diurnal arrivals, peak ~7.5x mean.\n");
     let trace = DiurnalTrace::generate(TraceConfig::one_week());
     let mean: f64 =
         trace.envelope.iter().sum::<f64>() / trace.envelope.len() as f64;
@@ -282,45 +370,54 @@ fn fig4(_: &Args) {
             ]);
         }
     }
-    t.print();
-    println!("\npeak-to-mean ratio: {:.2} (paper: ~7.5)", trace.peak_to_mean());
+    out.push_str(&t.render());
+    wl!(out, "\npeak-to-mean ratio: {:.2} (paper: ~7.5)", trace.peak_to_mean());
 }
 
 // ---------------------------------------------------------------- fig 8
 
-fn fig8(args: &Args) {
+fn fig8(args: &Args, threads: usize, out: &mut String) {
     let steps = args.usize_or("steps", 40);
-    for (panel, model, slo_ms) in [
+    let panels: [(&str, MoeModel, f64); 3] = [
         ("(a) DeepSeek-V2, SLO=200ms", models::deepseek_v2(), 200.0),
         ("(b) DeepSeek-V2, SLO=150ms", models::deepseek_v2(), 150.0),
         ("(c) Qwen3-MoE, SLO=200ms", models::qwen3_235b(), 200.0),
-    ] {
-        println!("\n--- Fig 8{panel} ---");
-        let slo = Slo::from_ms(slo_ms);
-        let hw = paper_testbed();
-        let pop = eval_popularity();
+    ];
+    let hw = paper_testbed();
+    let pop = eval_popularity();
+    let batches = [64usize, 128, 256, 512, 1024];
+    const SYSTEMS: usize = janus::baselines::EVAL_SYSTEMS;
+    // One cell per (panel, batch, system): each builds its own fresh
+    // system (fixed ctor seeds 42..45, as the serial loop did) and runs
+    // the fixed-batch scenario at eval seed 7 — numerically identical to
+    // the pre-sweep output, now independent of execution order.
+    let cells: Vec<(usize, usize, usize)> = (0..panels.len())
+        .flat_map(|p| {
+            batches
+                .iter()
+                .enumerate()
+                .flat_map(move |(bi, _)| (0..SYSTEMS).map(move |s| (p, bi, s)))
+        })
+        .collect();
+    let results = sweep::sweep(&cells, threads, |_, &(p, bi, s)| {
+        let model = panels[p].1.clone();
+        let slo = Slo::from_ms(panels[p].2);
+        let batch = batches[bi];
+        let mut sys = build_eval_system(s, model, hw.clone(), &pop);
+        evaluate_fixed_batch(sys.as_mut(), batch, slo, steps, 7)
+    });
+    let cell = |p: usize, bi: usize, s: usize| -> usize {
+        (p * batches.len() + bi) * SYSTEMS + s
+    };
+    for (p, (panel, _, _)) in panels.iter().enumerate() {
+        wl!(out, "\n--- Fig 8{panel} ---");
         let mut t = Table::new([
             "B", "system", "config", "gpus", "TPOT ms", "P99 ms", "TPG", "norm TPG", "SLO ok",
         ]);
-        for &batch in &[64usize, 128, 256, 512, 1024] {
-            let mut janus = JanusSystem::build(model.clone(), hw.clone(), &pop, 16, 42);
-            let mut sgl = SgLang::build(model.clone(), hw.clone(), &pop, 43);
-            let mut msi = MegaScaleInfer::build(model.clone(), hw.clone(), &pop, 16, 44);
-            let mut xds = XDeepServe::build(model.clone(), hw.clone(), &pop, 32, 45);
-            let mut rows = Vec::new();
-            let mut janus_tpg = 1.0;
-            {
-                let systems: Vec<&mut dyn ServingSystem> =
-                    vec![&mut janus, &mut sgl, &mut msi, &mut xds];
-                for sys in systems {
-                    let r = evaluate_fixed_batch(sys, batch, slo, steps, 7);
-                    if r.system == "Janus" {
-                        janus_tpg = r.tpg;
-                    }
-                    rows.push(r);
-                }
-            }
-            for r in rows {
+        for (bi, &batch) in batches.iter().enumerate() {
+            let janus_tpg = results[cell(p, bi, 0)].tpg;
+            for s in 0..SYSTEMS {
+                let r = &results[cell(p, bi, s)];
                 t.row([
                     batch.to_string(),
                     r.system.to_string(),
@@ -338,81 +435,99 @@ fn fig8(args: &Args) {
                 ]);
             }
         }
-        t.print();
+        out.push_str(&t.render());
     }
 }
 
 // ---------------------------------------------------------------- fig 9
 
-fn fig9(_: &Args) {
-    println!("Janus under various TPOT SLOs (DeepSeek-V2). Paper Fig 9.\n");
+fn fig9(_: &Args, threads: usize, out: &mut String) {
+    wl!(out, "Janus under various TPOT SLOs (DeepSeek-V2). Paper Fig 9.\n");
     let model = models::deepseek_v2();
     let hw = paper_testbed();
     let mut t = Table::new(["B", "SLO ms", "config", "gpus", "TPOT ms", "TPG"]);
-    for &batch in &[64usize, 256, 512] {
-        for &slo_ms in &[60.0f64, 100.0, 150.0, 200.0, 300.0] {
-            let mut janus =
-                JanusSystem::build(model.clone(), hw.clone(), &eval_popularity(), 16, 42);
-            match janus.configure(batch, Slo::from_ms(slo_ms)) {
-                Some(cfg) => {
-                    let mut rng = Rng::seed_from_u64(9);
-                    let out = janus.step(batch, &mut rng);
-                    t.row([
-                        batch.to_string(),
-                        fnum(slo_ms, 0),
-                        cfg.label,
-                        cfg.gpus.to_string(),
-                        fnum(out.tpot * 1e3, 1),
-                        fnum(batch as f64 / out.tpot / cfg.gpus as f64, 0),
-                    ]);
-                }
-                None => {
-                    t.row([
-                        batch.to_string(),
-                        fnum(slo_ms, 0),
-                        "infeasible".to_string(),
-                        "-".to_string(),
-                        "-".to_string(),
-                        "-".to_string(),
-                    ]);
-                }
+    let cells: Vec<(usize, f64)> = [64usize, 256, 512]
+        .iter()
+        .flat_map(|&b| {
+            [60.0f64, 100.0, 150.0, 200.0, 300.0]
+                .into_iter()
+                .map(move |s| (b, s))
+        })
+        .collect();
+    // Each cell builds its own Janus (ctor seed 42) and steps once with
+    // the fixed eval seed 9 — same numbers as the serial loop.
+    let rows = sweep::sweep(&cells, threads, |_, &(batch, slo_ms)| {
+        let mut janus =
+            JanusSystem::build(model.clone(), hw.clone(), &eval_popularity(), 16, 42);
+        match janus.configure(batch, Slo::from_ms(slo_ms)) {
+            Some(cfg) => {
+                let mut rng = Rng::seed_from_u64(9);
+                let out = janus.step(batch, &mut rng);
+                [
+                    batch.to_string(),
+                    fnum(slo_ms, 0),
+                    cfg.label,
+                    cfg.gpus.to_string(),
+                    fnum(out.tpot * 1e3, 1),
+                    fnum(batch as f64 / out.tpot / cfg.gpus as f64, 0),
+                ]
             }
+            None => [
+                batch.to_string(),
+                fnum(slo_ms, 0),
+                "infeasible".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+            ],
         }
+    });
+    for row in rows {
+        t.row(row);
     }
-    t.print();
+    out.push_str(&t.render());
 }
 
 // ---------------------------------------------------------------- fig 10
 
-fn fig10(args: &Args) {
-    println!("Scaled-DS variants: Janus vs MegaScale-Infer, equal resources");
-    println!("(normalized TPOT, MegaScale = 1.0). Paper Fig 10.\n");
+fn fig10(args: &Args, threads: usize, out: &mut String) {
+    wl!(out, "Scaled-DS variants: Janus vs MegaScale-Infer, equal resources");
+    wl!(out, "(normalized TPOT, MegaScale = 1.0). Paper Fig 10.\n");
     let steps = args.usize_or("steps", 30);
     let hw = paper_testbed();
     let pop = eval_popularity();
     let mut t = Table::new([
         "variant", "E", "B", "Janus TPOT ms", "MSI TPOT ms", "norm", "reduction %",
     ]);
+    let mut cells: Vec<(MoeModel, usize, usize)> = Vec::new();
     for (model, n_es) in [
         (models::scaled_ds_1(), vec![8usize]),
         (models::scaled_ds_2(), vec![8usize, 16]),
     ] {
         for &n_e in &n_es {
             for &batch in &[64usize, 256, 512, 1024] {
-                let (j, m) = fixed_deployment_tpot(&model, &hw, &pop, 4, n_e, batch, steps);
-                t.row([
-                    model.name.to_string(),
-                    n_e.to_string(),
-                    batch.to_string(),
-                    fnum(j * 1e3, 1),
-                    fnum(m * 1e3, 1),
-                    fnum(j / m, 3),
-                    fnum((1.0 - j / m) * 100.0, 1),
-                ]);
+                cells.push((model.clone(), n_e, batch));
             }
         }
     }
-    t.print();
+    // fixed_deployment_tpot rebuilds its trace/table from fixed seeds on
+    // every call, so each cell is self-contained already.
+    let rows = sweep::sweep(&cells, threads, |_, (model, n_e, batch)| {
+        let (j, m) = fixed_deployment_tpot(model, &hw, &pop, 4, *n_e, *batch, steps);
+        [
+            model.name.to_string(),
+            n_e.to_string(),
+            batch.to_string(),
+            fnum(j * 1e3, 1),
+            fnum(m * 1e3, 1),
+            fnum(j / m, 3),
+            fnum((1.0 - j / m) * 100.0, 1),
+        ]
+    });
+    for row in rows {
+        t.row(row);
+    }
+    out.push_str(&t.render());
 }
 
 /// TPOT of Janus vs MegaScale policies on an identical (n_a, n_e)
@@ -450,12 +565,12 @@ fn fixed_deployment_tpot(
 
 // ---------------------------------------------------------------- fig 11
 
-fn fig11(args: &Args) {
-    println!("Trace-driven scaling over a live arrival-driven decode loop,");
-    println!("15-minute decision interval. Paper Fig 11: Janus -39% GPU-hours");
-    println!("vs SGLang, -16% vs MSI.");
-    println!("(default: 6 h / 12 req/s — pass --hours 24 --rate 40 for the");
-    println!("full-day run; the per-token decode loop scales with demand.)\n");
+fn fig11(args: &Args, threads: usize, out: &mut String) {
+    wl!(out, "Trace-driven scaling over a live arrival-driven decode loop,");
+    wl!(out, "15-minute decision interval. Paper Fig 11: Janus -39% GPU-hours");
+    wl!(out, "vs SGLang, -16% vs MSI.");
+    wl!(out, "(default: 6 h / 12 req/s — pass --hours 24 --rate 40 for the");
+    wl!(out, "full-day run; the per-token decode loop scales with demand.)\n");
     let hours = args.f64_or("hours", 6.0);
     let mut cfg = TraceConfig::one_day();
     cfg.hours = hours;
@@ -466,12 +581,18 @@ fn fig11(args: &Args) {
     let model = models::deepseek_v2();
     let pop = eval_popularity();
 
-    let mut janus = JanusSystem::build(model.clone(), hw.clone(), &pop, 32, 80);
-    let mut sgl = SgLang::build(model.clone(), hw.clone(), &pop, 81);
-    let mut msi = MegaScaleInfer::build(model.clone(), hw.clone(), &pop, 32, 82);
-    let rj = sim.run(&mut janus, &trace).expect("valid autoscale scenario");
-    let rs = sim.run(&mut sgl, &trace).expect("valid autoscale scenario");
-    let rm = sim.run(&mut msi, &trace).expect("valid autoscale scenario");
+    // One autoscale run per system — the heaviest cells of the whole
+    // harness, and exactly the sweep's sweet spot.
+    let cells: [usize; 3] = [0, 1, 2];
+    let results = sweep::sweep(&cells, threads, |_, &which| {
+        let mut sys: Box<dyn ServingSystem> = match which {
+            0 => Box::new(JanusSystem::build(model.clone(), hw.clone(), &pop, 32, 80)),
+            1 => Box::new(SgLang::build(model.clone(), hw.clone(), &pop, 81)),
+            _ => Box::new(MegaScaleInfer::build(model.clone(), hw.clone(), &pop, 32, 82)),
+        };
+        sim.run(sys.as_mut(), &trace).expect("valid autoscale scenario")
+    });
+    let (rj, rs, rm) = (&results[0], &results[1], &results[2]);
 
     let mut t = Table::new(["hour", "demand tok/s", "Janus", "SGLang", "MSI"]);
     for rec in rj.intervals.iter().step_by(4) {
@@ -484,8 +605,8 @@ fn fig11(args: &Args) {
             rm.intervals[i].gpus.to_string(),
         ]);
     }
-    t.print();
-    println!();
+    out.push_str(&t.render());
+    wl!(out);
     let mut s = Table::new([
         "system",
         "GPU-hours",
@@ -496,7 +617,7 @@ fn fig11(args: &Args) {
         "SLO att",
         "rejected",
     ]);
-    for r in [&rj, &rs, &rm] {
+    for r in [rj, rs, rm] {
         s.row([
             r.system.to_string(),
             fnum(r.gpu_hours, 1),
@@ -508,19 +629,23 @@ fn fig11(args: &Args) {
             r.rejected_requests.to_string(),
         ]);
     }
-    s.print();
+    out.push_str(&s.render());
 }
 
 // ---------------------------------------------------------------- fig 12
 
-fn fig12(args: &Args) {
-    println!("Ablation: communication scheme x gating side x AEBS");
-    println!("(DeepSeek-V2, fixed 4A12E). Paper Fig 12.\n");
+fn fig12(args: &Args, threads: usize, out: &mut String) {
+    const PANEL: u64 = 12;
+    wl!(out, "Ablation: communication scheme x gating side x AEBS");
+    wl!(out, "(DeepSeek-V2, fixed 4A12E). Paper Fig 12.\n");
     let steps = args.usize_or("steps", 30);
     let model = models::deepseek_v2();
     let hw = paper_testbed();
     let (n_a, n_e) = (4usize, 12usize);
     let capacity = serving::default_capacity(&model, &hw);
+    // Shared read-only setup (trace, gate, placement) from fixed seeds;
+    // the per-(batch, variant) cells below draw their routing batches
+    // from derived per-rep streams.
     let (trace, gate) = build_trace(&model, 90);
     let mut rng = Rng::seed_from_u64(91);
     let amax = AmaxTable::build(
@@ -528,7 +653,6 @@ fn fig12(args: &Args) {
         SchedulerKind::Aebs, 6, &mut rng,
     );
     let placement = amax.placement_for(n_e).unwrap().clone();
-    let mut ws = aebs::Workspace::new(model.experts, n_e);
 
     let variants: Vec<(&str, CommScheme, GatingSide, SchedulerKind)> = vec![
         ("1PC+EGate", CommScheme::OnePhase, GatingSide::Moe, SchedulerKind::Random),
@@ -536,24 +660,34 @@ fn fig12(args: &Args) {
         ("2PC+EGate", CommScheme::TwoPhaseAdaptive, GatingSide::Moe, SchedulerKind::Random),
         ("2PC+EGate+AEBS (Janus)", CommScheme::TwoPhaseAdaptive, GatingSide::Moe, SchedulerKind::Aebs),
     ];
-    let mut t = Table::new(["B", "variant", "TPOT ms", "norm throughput"]);
-    for &batch in &[64usize, 256, 512] {
-        let mut results = Vec::new();
-        for (name, scheme, gating, sched) in &variants {
-            let tm = TpotModel::new(&model, &hw, *scheme, *gating);
-            let mut acc = 0.0;
-            for _ in 0..steps {
-                let b = gate.sample_batch(&mut rng, batch);
-                let a = match sched {
-                    SchedulerKind::Aebs => aebs::a_max_only(&mut ws, &b, &placement),
-                    other => scheduler::schedule(*other, &b, &placement, &mut rng).a_max,
-                };
-                acc += tm.tpot(batch as f64, n_a, n_e, 512.0, a).tpot;
-            }
-            results.push((*name, acc / steps as f64));
+    let batches = [64usize, 256, 512];
+    let cells: Vec<(usize, usize)> = batches
+        .iter()
+        .enumerate()
+        .flat_map(|(bi, _)| (0..variants.len()).map(move |vi| (bi, vi)))
+        .collect();
+    let tpots = sweep::sweep(&cells, threads, |ci, &(bi, vi)| {
+        let batch = batches[bi];
+        let (_, scheme, gating, sched) = &variants[vi];
+        let tm = TpotModel::new(&model, &hw, *scheme, *gating);
+        let mut ws = aebs::Workspace::new(model.experts, n_e);
+        let mut acc = 0.0;
+        for rep in 0..steps {
+            let mut rng = rep_rng(PANEL, ci * steps + rep);
+            let b = gate.sample_batch(&mut rng, batch);
+            let a = match sched {
+                SchedulerKind::Aebs => aebs::a_max_only(&mut ws, &b, &placement),
+                other => scheduler::schedule(*other, &b, &placement, &mut rng).a_max,
+            };
+            acc += tm.tpot(batch as f64, n_a, n_e, 512.0, a).tpot;
         }
-        let full = results.last().unwrap().1;
-        for (name, tpot) in results {
+        acc / steps as f64
+    });
+    let mut t = Table::new(["B", "variant", "TPOT ms", "norm throughput"]);
+    for (bi, &batch) in batches.iter().enumerate() {
+        let full = tpots[bi * variants.len() + variants.len() - 1];
+        for (vi, (name, ..)) in variants.iter().enumerate() {
+            let tpot = tpots[bi * variants.len() + vi];
             t.row([
                 batch.to_string(),
                 name.to_string(),
@@ -562,164 +696,214 @@ fn fig12(args: &Args) {
             ]);
         }
     }
-    t.print();
+    out.push_str(&t.render());
 }
 
 // ---------------------------------------------------------------- fig 13
 
-fn fig13(_: &Args) {
-    println!("Maximum activated-expert count a_max: AEBS vs EPLB across");
-    println!("batch sizes and MoE-side scales (DeepSeek-V2). Paper Fig 13.\n");
+fn fig13(_: &Args, threads: usize, out: &mut String) {
+    const PANEL: u64 = 13;
+    wl!(out, "Maximum activated-expert count a_max: AEBS vs EPLB across");
+    wl!(out, "batch sizes and MoE-side scales (DeepSeek-V2). Paper Fig 13.\n");
     let model = models::deepseek_v2();
     let hw = paper_testbed();
     let capacity = serving::default_capacity(&model, &hw);
     let (trace, gate) = build_trace(&model, 100);
-    let mut rng = Rng::seed_from_u64(101);
-    let mut t = Table::new(["B", "E", "AEBS", "EPLB", "reduction %"]);
-    for &n_e in &[8usize, 12, 16] {
+    let n_es = [8usize, 12, 16];
+    // Stage 1: one placement per MoE-side scale (the expensive â_max
+    // Monte-Carlo builds), each cell with its own derived RNG stream.
+    let placements = sweep::sweep(&n_es, threads, |_, &n_e| {
+        let mut rng = Rng::seed_from_u64(split_seed(PANEL, n_e as u64));
         let amax = AmaxTable::build(
             &trace, &[n_e], &AmaxTable::default_grid(4096), capacity,
             SchedulerKind::Aebs, 6, &mut rng,
         );
-        let placement = amax.placement_for(n_e).unwrap().clone();
-        let mut ws = aebs::Workspace::new(model.experts, n_e);
-        for &batch in &[16usize, 64, 256, 512] {
-            let (mut a_aebs, mut a_eplb) = (0.0, 0.0);
-            let reps = 16;
-            for _ in 0..reps {
-                let b = gate.sample_batch(&mut rng, batch);
-                a_aebs += aebs::a_max_only(&mut ws, &b, &placement) as f64;
-                a_eplb +=
-                    scheduler::baselines::token_balanced(&b, &placement).a_max as f64;
-            }
-            a_aebs /= reps as f64;
-            a_eplb /= reps as f64;
-            t.row([
-                batch.to_string(),
-                n_e.to_string(),
-                fnum(a_aebs, 1),
-                fnum(a_eplb, 1),
-                fnum((1.0 - a_aebs / a_eplb) * 100.0, 1),
-            ]);
+        amax.placement_for(n_e).unwrap().clone()
+    });
+    // Stage 2: the (E, B) measurement grid over the shared placements.
+    const REPS: usize = 16;
+    let batches = [16usize, 64, 256, 512];
+    let cells: Vec<(usize, usize)> = (0..n_es.len())
+        .flat_map(|ei| batches.iter().map(move |&b| (ei, b)))
+        .collect();
+    let rows = sweep::sweep(&cells, threads, |ci, &(ei, batch)| {
+        let placement = &placements[ei];
+        let mut ws = aebs::Workspace::new(model.experts, n_es[ei]);
+        let (mut a_aebs, mut a_eplb) = (0.0, 0.0);
+        for rep in 0..REPS {
+            let mut rng = rep_rng(PANEL, 1000 + ci * REPS + rep);
+            let b = gate.sample_batch(&mut rng, batch);
+            a_aebs += aebs::a_max_only(&mut ws, &b, placement) as f64;
+            a_eplb += scheduler::baselines::token_balanced(&b, placement).a_max as f64;
         }
+        a_aebs /= REPS as f64;
+        a_eplb /= REPS as f64;
+        [
+            batch.to_string(),
+            n_es[ei].to_string(),
+            fnum(a_aebs, 1),
+            fnum(a_eplb, 1),
+            fnum((1.0 - a_aebs / a_eplb) * 100.0, 1),
+        ]
+    });
+    let mut t = Table::new(["B", "E", "AEBS", "EPLB", "reduction %"]);
+    for row in rows {
+        t.row(row);
     }
-    t.print();
+    out.push_str(&t.render());
 }
 
 // ---------------------------------------------------------------- fig 14
 
-fn fig14(_: &Args) {
-    println!("MoE-layer latency: static baseline vs EPLB vs Janus (AEBS),");
-    println!("E=8 and E=16 (DeepSeek-V2). Paper Fig 14.\n");
+fn fig14(_: &Args, threads: usize, out: &mut String) {
+    const PANEL: u64 = 14;
+    wl!(out, "MoE-layer latency: static baseline vs EPLB vs Janus (AEBS),");
+    wl!(out, "E=8 and E=16 (DeepSeek-V2). Paper Fig 14.\n");
     let model = models::deepseek_v2();
     let hw = paper_testbed();
     let c = LayerCoeffs::derive(&model, &hw.gpu);
     let capacity = serving::default_capacity(&model, &hw);
     let (trace, gate) = build_trace(&model, 110);
-    let mut rng = Rng::seed_from_u64(111);
-    let mut t = Table::new(["B", "E", "Base us", "EPLB us", "Janus us", "Janus vs Base %"]);
-    for &n_e in &[8usize, 16] {
+    let n_es = [8usize, 16];
+    let placements = sweep::sweep(&n_es, threads, |_, &n_e| {
+        let mut rng = Rng::seed_from_u64(split_seed(PANEL, n_e as u64));
         let amax = AmaxTable::build(
             &trace, &[n_e], &AmaxTable::default_grid(4096), capacity,
             SchedulerKind::Aebs, 6, &mut rng,
         );
-        let placement = amax.placement_for(n_e).unwrap().clone();
+        amax.placement_for(n_e).unwrap().clone()
+    });
+    // Appendix A's high-leverage window B ∈ [10, 100]: where a_max is
+    // most sensitive to scheduling. Beyond saturation (B >~ 256 with
+    // this gate) every expert is active and an even static split is
+    // already structurally optimal — no scheduler can beat E/n_e.
+    const REPS: usize = 16;
+    let batches = [16usize, 32, 64, 128];
+    let cells: Vec<(usize, usize)> = (0..n_es.len())
+        .flat_map(|ei| batches.iter().map(move |&b| (ei, b)))
+        .collect();
+    let rows = sweep::sweep(&cells, threads, |ci, &(ei, batch)| {
+        let n_e = n_es[ei];
+        let placement = &placements[ei];
         let static_placement = ExpertPlacement::contiguous(
             model.experts, n_e, model.experts.div_ceil(n_e),
         );
         let mut ws = aebs::Workspace::new(model.experts, n_e);
-        // Appendix A's high-leverage window B ∈ [10, 100]: where a_max is
-        // most sensitive to scheduling. Beyond saturation (B >~ 256 with
-        // this gate) every expert is active and an even static split is
-        // already structurally optimal — no scheduler can beat E/n_e.
-        for &batch in &[16usize, 32, 64, 128] {
-            let reps = 16;
-            let (mut l_base, mut l_eplb, mut l_janus) = (0.0, 0.0, 0.0);
-            for _ in 0..reps {
-                let b = gate.sample_batch(&mut rng, batch);
-                let tok = (batch * model.top_k) as u32;
-                let a0 = scheduler::baselines::static_first(&b, &static_placement).a_max;
-                let a1 = scheduler::baselines::token_balanced(&b, &placement).a_max;
-                let a2 = aebs::a_max_only(&mut ws, &b, &placement);
-                l_base += moe::moe_layer_latency(&c, a0, tok, n_e as u32);
-                l_eplb += moe::moe_layer_latency(&c, a1, tok, n_e as u32);
-                l_janus += moe::moe_layer_latency(&c, a2, tok, n_e as u32);
-            }
-            t.row([
-                batch.to_string(),
-                n_e.to_string(),
-                fnum(l_base / reps as f64 * 1e6, 1),
-                fnum(l_eplb / reps as f64 * 1e6, 1),
-                fnum(l_janus / reps as f64 * 1e6, 1),
-                fnum((1.0 - l_janus / l_base) * 100.0, 1),
-            ]);
+        let (mut l_base, mut l_eplb, mut l_janus) = (0.0, 0.0, 0.0);
+        for rep in 0..REPS {
+            // 1000+ offset keeps rep streams disjoint from the stage-1
+            // placement streams (indexed by n_e).
+            let mut rng = rep_rng(PANEL, 1000 + ci * REPS + rep);
+            let b = gate.sample_batch(&mut rng, batch);
+            let tok = (batch * model.top_k) as u32;
+            let a0 = scheduler::baselines::static_first(&b, &static_placement).a_max;
+            let a1 = scheduler::baselines::token_balanced(&b, placement).a_max;
+            let a2 = aebs::a_max_only(&mut ws, &b, placement);
+            l_base += moe::moe_layer_latency(&c, a0, tok, n_e as u32);
+            l_eplb += moe::moe_layer_latency(&c, a1, tok, n_e as u32);
+            l_janus += moe::moe_layer_latency(&c, a2, tok, n_e as u32);
         }
+        [
+            batch.to_string(),
+            n_e.to_string(),
+            fnum(l_base / REPS as f64 * 1e6, 1),
+            fnum(l_eplb / REPS as f64 * 1e6, 1),
+            fnum(l_janus / REPS as f64 * 1e6, 1),
+            fnum((1.0 - l_janus / l_base) * 100.0, 1),
+        ]
+    });
+    let mut t = Table::new(["B", "E", "Base us", "EPLB us", "Janus us", "Janus vs Base %"]);
+    for row in rows {
+        t.row(row);
     }
-    t.print();
+    out.push_str(&t.render());
 }
 
 // ---------------------------------------------------------------- fig 15
 
-fn fig15(_: &Args) {
-    println!("AEBS scheduling overhead (measured on this machine's CPU,");
-    println!("Rust implementation). Paper Fig 15: <20us small B, <90us at");
-    println!("B=4096 on GPU.\n");
+fn fig15(_: &Args, threads: usize, out: &mut String) {
+    const PANEL: u64 = 15;
+    wl!(out, "AEBS scheduling overhead (measured on this machine's CPU,");
+    wl!(out, "Rust implementation). Paper Fig 15: <20us small B, <90us at");
+    wl!(out, "B=4096 on GPU.\n");
     let model = models::deepseek_v2();
     let hw = paper_testbed();
     let capacity = serving::default_capacity(&model, &hw);
     let (trace, gate) = build_trace(&model, 120);
-    let mut rng = Rng::seed_from_u64(121);
-    let mut t = Table::new(["B", "E", "AEBS us", "EPLB us"]);
-    for &n_e in &[8usize, 16] {
+    // Stage 1: one placement per n_e (not timing-sensitive, so it may
+    // use all workers), shared read-only by the timed cells below.
+    let n_es = [8usize, 16];
+    let placements = sweep::sweep(&n_es, threads, |_, &n_e| {
+        let mut rng = Rng::seed_from_u64(split_seed(PANEL, n_e as u64));
         let amax = AmaxTable::build(
             &trace, &[n_e], &[64], capacity, SchedulerKind::Aebs, 2, &mut rng,
         );
-        let placement = amax.placement_for(n_e).unwrap().clone();
+        amax.placement_for(n_e).unwrap().clone()
+    });
+    let cells: Vec<(usize, usize)> = (0..n_es.len())
+        .flat_map(|ei| [64usize, 256, 1024, 4096].into_iter().map(move |b| (ei, b)))
+        .collect();
+    // Wall-clock micro-timings: concurrent cells would contend for the
+    // same cores and misreport the scheduler's overhead, so the timed
+    // cells pin the sweep to one worker regardless of --threads (the
+    // cell isolation — shared read-only placement, own per-rep sample
+    // streams — still holds, so the measured work is order-independent).
+    let rows = sweep::sweep(&cells, 1, |ci, &(ei, batch)| {
+        let n_e = n_es[ei];
+        let placement = &placements[ei];
         let mut ws = aebs::Workspace::new(model.experts, n_e);
-        for &batch in &[64usize, 256, 1024, 4096] {
-            let batches: Vec<_> =
-                (0..32).map(|_| gate.sample_batch(&mut rng, batch)).collect();
-            // Warm up.
-            for b in &batches {
-                let _ = aebs::a_max_only(&mut ws, b, &placement);
-            }
-            let t0 = Instant::now();
-            let mut sink = 0u32;
-            for _ in 0..4 {
-                for b in &batches {
-                    sink = sink.wrapping_add(aebs::assign_with(&mut ws, b, &placement).a_max);
-                }
-            }
-            let aebs_us = t0.elapsed().as_secs_f64() / (32.0 * 4.0) * 1e6;
-            let t1 = Instant::now();
-            for _ in 0..4 {
-                for b in &batches {
-                    sink = sink.wrapping_add(
-                        scheduler::baselines::token_balanced(b, &placement).a_max,
-                    );
-                }
-            }
-            let eplb_us = t1.elapsed().as_secs_f64() / (32.0 * 4.0) * 1e6;
-            std::hint::black_box(sink);
-            t.row([
-                batch.to_string(),
-                n_e.to_string(),
-                fnum(aebs_us, 1),
-                fnum(eplb_us, 1),
-            ]);
+        let batches: Vec<_> = (0..32)
+            .map(|rep| {
+                let mut rng = rep_rng(PANEL, 1000 + ci * 32 + rep);
+                gate.sample_batch(&mut rng, batch)
+            })
+            .collect();
+        // Warm up.
+        for b in &batches {
+            let _ = aebs::a_max_only(&mut ws, b, placement);
         }
+        let t0 = Instant::now();
+        let mut sink = 0u32;
+        for _ in 0..4 {
+            for b in &batches {
+                sink = sink.wrapping_add(aebs::assign_with(&mut ws, b, placement).a_max);
+            }
+        }
+        let aebs_us = t0.elapsed().as_secs_f64() / (32.0 * 4.0) * 1e6;
+        let t1 = Instant::now();
+        for _ in 0..4 {
+            for b in &batches {
+                sink = sink.wrapping_add(
+                    scheduler::baselines::token_balanced(b, placement).a_max,
+                );
+            }
+        }
+        let eplb_us = t1.elapsed().as_secs_f64() / (32.0 * 4.0) * 1e6;
+        std::hint::black_box(sink);
+        [
+            batch.to_string(),
+            n_e.to_string(),
+            fnum(aebs_us, 1),
+            fnum(eplb_us, 1),
+        ]
+    });
+    let mut t = Table::new(["B", "E", "AEBS us", "EPLB us"]);
+    for row in rows {
+        t.row(row);
     }
-    t.print();
+    out.push_str(&t.render());
 }
 
 // ---------------------------------------------------------------- fig 16
 
-fn fig16(_: &Args) {
-    println!("Scaling-policy search space: every candidate (n_a, n_e) with");
-    println!("TPG and feasibility; '>>>' marks Janus's selection. Paper Fig 16.\n");
+fn fig16(_: &Args, threads: usize, out: &mut String) {
+    wl!(out, "Scaling-policy search space: every candidate (n_a, n_e) with");
+    wl!(out, "TPG and feasibility; '>>>' marks Janus's selection. Paper Fig 16.\n");
     let model = models::deepseek_v2();
     let hw = paper_testbed();
     let capacity = serving::default_capacity(&model, &hw);
+    // One shared scaler (the expensive â_max table over every n_e);
+    // the three SLO cases sweep over it read-only.
     let (trace, _) = build_trace(&model, 130);
     let mut rng = Rng::seed_from_u64(131);
     let n_e_values: Vec<usize> = (6..=16).collect();
@@ -728,14 +912,17 @@ fn fig16(_: &Args) {
         SchedulerKind::Aebs, 6, &mut rng,
     );
     let scaler = Scaler::new(model, hw, amax, 16);
-    for (case, batch, slo_ms) in [
+    let cases = [
         ("case 1", 64usize, 200.0),
         ("case 2", 256usize, 150.0),
         ("case 3", 512usize, 200.0),
-    ] {
+    ];
+    let blocks = sweep::sweep(&cases, threads, |_, &(case, batch, slo_ms)| {
+        let mut block = String::new();
         let slo = Slo::from_ms(slo_ms);
         let plan = scaler.optimize_fixed_batch(batch as f64, slo, 512.0);
-        println!(
+        wl!(
+            block,
             "\n{case}: B={batch}, SLO={slo_ms}ms, selected {}",
             plan.as_ref().map(|p| p.deployment.label()).unwrap_or_else(|| "none".into())
         );
@@ -756,15 +943,21 @@ fn fig16(_: &Args) {
                 if sel { ">>>" } else { "" }.to_string(),
             ]);
         }
-        t.print();
+        block.push_str(&t.render());
+        block
+    });
+    for b in blocks {
+        out.push_str(&b);
     }
 }
 
 // ---------------------------------------------------------------- fig 17
 
-fn fig17(_: &Args) {
-    println!("Analytic a_max bound (Eq. 5) vs Monte-Carlo estimate,");
-    println!("ShareGPT-like routing. Paper Fig 17 (Appendix A).\n");
+fn fig17(_: &Args, _threads: usize, out: &mut String) {
+    // One shared Monte-Carlo table; the grid rows are lookups plus the
+    // closed-form bound — serial by design.
+    wl!(out, "Analytic a_max bound (Eq. 5) vs Monte-Carlo estimate,");
+    wl!(out, "ShareGPT-like routing. Paper Fig 17 (Appendix A).\n");
     let model = models::deepseek_v2();
     let hw = paper_testbed();
     let capacity = serving::default_capacity(&model, &hw);
@@ -798,9 +991,9 @@ fn fig17(_: &Args) {
             ]);
         }
     }
-    t.print();
-    println!("\nbound >= MC on every cell; gap shrinks in saturation (paper's");
-    println!("one-sided-conservative property).");
+    out.push_str(&t.render());
+    wl!(out, "\nbound >= MC on every cell; gap shrinks in saturation (paper's");
+    wl!(out, "one-sided-conservative property).");
 }
 
 
@@ -812,9 +1005,10 @@ fn fig17(_: &Args) {
 /// β ∝ 1/HBM-bandwidth, the bandwidth-specialized part cuts the
 /// dominant term while attention stays on compute-balanced silicon —
 /// exactly the mapping Janus's disaggregation makes possible.
-fn hetero(_: &Args) {
-    println!("Extension (paper §6): heterogeneous pools — H100 attention +");
-    println!("LPX-like (high-bandwidth) MoE instances vs uniform H100.\n");
+fn hetero(_: &Args, threads: usize, out: &mut String) {
+    const PANEL: u64 = 100;
+    wl!(out, "Extension (paper §6): heterogeneous pools — H100 attention +");
+    wl!(out, "LPX-like (high-bandwidth) MoE instances vs uniform H100.\n");
     let model = models::deepseek_v2();
     let hw = paper_testbed();
     let h100c = LayerCoeffs::derive(&model, &h100());
@@ -829,11 +1023,13 @@ fn hetero(_: &Args) {
     );
     let placement = amax.placement_for(n_e).unwrap().clone();
     let comm = CommModel::new(hw.node.clone(), model.d_model, model.top_k);
-    let mut ws = aebs::Workspace::new(model.experts, n_e);
-    let mut t = Table::new(["B", "uniform H100 ms", "hetero ms", "speedup"]);
-    for &batch in &[64usize, 256, 512, 1024] {
+    const REPS: usize = 20;
+    let batches = [64usize, 256, 512, 1024];
+    let rows = sweep::sweep(&batches, threads, |ci, &batch| {
+        let mut ws = aebs::Workspace::new(model.experts, n_e);
         let (mut uni, mut het) = (0.0, 0.0);
-        for _ in 0..20 {
+        for rep in 0..REPS {
+            let mut rng = rep_rng(PANEL, ci * REPS + rep);
             let b = gate.sample_batch(&mut rng, batch);
             let a = aebs::a_max_only(&mut ws, &b, &placement);
             let tok = (batch * model.top_k) as u32;
@@ -847,16 +1043,20 @@ fn hetero(_: &Args) {
             uni += (attn + c + moe_h100) * layers;
             het += (attn + c + moe_lpx) * layers;
         }
-        t.row([
+        [
             batch.to_string(),
-            fnum(uni / 20.0 * 1e3, 1),
-            fnum(het / 20.0 * 1e3, 1),
+            fnum(uni / REPS as f64 * 1e3, 1),
+            fnum(het / REPS as f64 * 1e3, 1),
             fnum(uni / het, 2),
-        ]);
+        ]
+    });
+    let mut t = Table::new(["B", "uniform H100 ms", "hetero ms", "speedup"]);
+    for row in rows {
+        t.row(row);
     }
-    t.print();
-    println!("\nJanus's pool separation lets each layer type run on matched");
-    println!("silicon; monolithic designs cannot exploit this split.");
+    out.push_str(&t.render());
+    wl!(out, "\nJanus's pool separation lets each layer type run on matched");
+    wl!(out, "silicon; monolithic designs cannot exploit this split.");
 }
 
 
@@ -870,9 +1070,10 @@ fn hetero(_: &Args) {
 /// batches the per-micro-batch latency benefit is small while the extra
 /// synchronization costs real time. This harness quantifies the
 /// crossover.
-fn pipelining(_: &Args) {
-    println!("Extension (paper §6): micro-batch pipelining benefit vs batch");
-    println!("size (DeepSeek-V2, 2A8E, sync overhead 30 us/microbatch).\n");
+fn pipelining(_: &Args, threads: usize, out: &mut String) {
+    const PANEL: u64 = 101;
+    wl!(out, "Extension (paper §6): micro-batch pipelining benefit vs batch");
+    wl!(out, "size (DeepSeek-V2, 2A8E, sync overhead 30 us/microbatch).\n");
     let model = models::deepseek_v2();
     let hw = paper_testbed();
     let c = LayerCoeffs::derive(&model, &hw.gpu);
@@ -886,56 +1087,62 @@ fn pipelining(_: &Args) {
     );
     let placement = amax.placement_for(n_e).unwrap().clone();
     let comm = CommModel::new(hw.node.clone(), model.d_model, model.top_k);
-    let mut ws = aebs::Workspace::new(model.experts, n_e);
     let sync = 30e-6;
-    let mut t = Table::new(["B", "m", "sequential ms", "pipelined ms", "benefit %"]);
-    for &batch in &[32usize, 64, 256, 1024, 4096] {
-        for &m in &[2usize, 4] {
-            let reps = 12;
-            let (mut seq, mut pip) = (0.0, 0.0);
-            for _ in 0..reps {
-                let layers = model.moe_layers() as f64;
-                // Sequential: full batch through attention then MoE.
-                let b = gate.sample_batch(&mut rng, batch);
-                let a = aebs::a_max_only(&mut ws, &b, &placement);
-                let tok = (batch * model.top_k) as u32;
-                let t_attn = attention::attn_latency(&c, batch as f64 / n_a as f64, 512.0);
-                let t_comm = comm
-                    .layer_cost(CommScheme::TwoPhaseAdaptive, GatingSide::Moe,
-                                n_a, n_e, batch as f64)
-                    .total();
-                let t_moe = moe::moe_layer_latency(&c, a, tok, n_e as u32);
-                seq += (t_attn + t_comm + t_moe) * layers;
-                // Pipelined: m micro-batches of B/m; each side runs per
-                // micro-batch, stages overlap; a_max per micro-batch is
-                // nearly as large as per full batch (distinct experts do
-                // not shrink linearly with tokens) — the key inefficiency.
-                let mb = (batch / m).max(1);
-                let bm = gate.sample_batch(&mut rng, mb);
-                let am = aebs::a_max_only(&mut ws, &bm, &placement);
-                let tokm = (mb * model.top_k) as u32;
-                let ta = attention::attn_latency(&c, mb as f64 / n_a as f64, 512.0);
-                let tc = comm
-                    .layer_cost(CommScheme::TwoPhaseAdaptive, GatingSide::Moe,
-                                n_a, n_e, mb as f64)
-                    .total();
-                let tm = moe::moe_layer_latency(&c, am, tokm, n_e as u32);
-                let stage = ta.max(tc + tm);
-                pip += (stage * m as f64 + ta.min(tc + tm) + sync * (m as f64 - 1.0))
-                    * layers;
-            }
-            t.row([
-                batch.to_string(),
-                m.to_string(),
-                fnum(seq / reps as f64 * 1e3, 1),
-                fnum(pip / reps as f64 * 1e3, 1),
-                fnum((1.0 - pip / seq) * 100.0, 1),
-            ]);
+    const REPS: usize = 12;
+    let cells: Vec<(usize, usize)> = [32usize, 64, 256, 1024, 4096]
+        .iter()
+        .flat_map(|&b| [2usize, 4].into_iter().map(move |m| (b, m)))
+        .collect();
+    let rows = sweep::sweep(&cells, threads, |ci, &(batch, m)| {
+        let mut ws = aebs::Workspace::new(model.experts, n_e);
+        let (mut seq, mut pip) = (0.0, 0.0);
+        for rep in 0..REPS {
+            let mut rng = rep_rng(PANEL, ci * REPS + rep);
+            let layers = model.moe_layers() as f64;
+            // Sequential: full batch through attention then MoE.
+            let b = gate.sample_batch(&mut rng, batch);
+            let a = aebs::a_max_only(&mut ws, &b, &placement);
+            let tok = (batch * model.top_k) as u32;
+            let t_attn = attention::attn_latency(&c, batch as f64 / n_a as f64, 512.0);
+            let t_comm = comm
+                .layer_cost(CommScheme::TwoPhaseAdaptive, GatingSide::Moe,
+                            n_a, n_e, batch as f64)
+                .total();
+            let t_moe = moe::moe_layer_latency(&c, a, tok, n_e as u32);
+            seq += (t_attn + t_comm + t_moe) * layers;
+            // Pipelined: m micro-batches of B/m; each side runs per
+            // micro-batch, stages overlap; a_max per micro-batch is
+            // nearly as large as per full batch (distinct experts do
+            // not shrink linearly with tokens) — the key inefficiency.
+            let mb = (batch / m).max(1);
+            let bm = gate.sample_batch(&mut rng, mb);
+            let am = aebs::a_max_only(&mut ws, &bm, &placement);
+            let tokm = (mb * model.top_k) as u32;
+            let ta = attention::attn_latency(&c, mb as f64 / n_a as f64, 512.0);
+            let tc = comm
+                .layer_cost(CommScheme::TwoPhaseAdaptive, GatingSide::Moe,
+                            n_a, n_e, mb as f64)
+                .total();
+            let tm = moe::moe_layer_latency(&c, am, tokm, n_e as u32);
+            let stage = ta.max(tc + tm);
+            pip += (stage * m as f64 + ta.min(tc + tm) + sync * (m as f64 - 1.0))
+                * layers;
         }
+        [
+            batch.to_string(),
+            m.to_string(),
+            fnum(seq / REPS as f64 * 1e3, 1),
+            fnum(pip / REPS as f64 * 1e3, 1),
+            fnum((1.0 - pip / seq) * 100.0, 1),
+        ]
+    });
+    let mut t = Table::new(["B", "m", "sequential ms", "pipelined ms", "benefit %"]);
+    for row in rows {
+        t.row(row);
     }
-    t.print();
-    println!("\nNegative benefit at online batch sizes (B <= ~1024): micro-batch");
-    println!("a_max barely shrinks (distinct experts are not token-divisible),");
-    println!("so pipelining repeats near-full MoE passes — the paper's §6");
-    println!("observation. Gains only appear far beyond the online regime.");
+    out.push_str(&t.render());
+    wl!(out, "\nNegative benefit at online batch sizes (B <= ~1024): micro-batch");
+    wl!(out, "a_max barely shrinks (distinct experts are not token-divisible),");
+    wl!(out, "so pipelining repeats near-full MoE passes — the paper's §6");
+    wl!(out, "observation. Gains only appear far beyond the online regime.");
 }

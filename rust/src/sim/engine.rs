@@ -28,9 +28,15 @@
 //!
 //! Seeded-determinism contract: running any scenario twice with the same
 //! seed (and a freshly built system) yields **bit-identical** metrics.
-//! Event-queue ties break on insertion order, every random draw flows
-//! from one seeded [`Rng`], and no wall-clock time enters the loop. The
-//! golden regression tests pin this contract.
+//! Event-queue ties break on insertion order (the `(time, seq)` ordering
+//! invariant — see [`Entry::key_cmp`]), every random draw flows from one
+//! seeded [`Rng`], and no wall-clock time enters the loop. The golden
+//! regression tests pin this contract.
+//!
+//! The production [`EventQueue`] is a calendar queue (amortized O(1)
+//! push/pop for the clustered near-future events continuous batching
+//! generates); [`BinaryHeapEventQueue`] is the O(log n) reference
+//! implementation the property tests compare it against event-for-event.
 
 use std::cmp::{Ordering, Reverse};
 use std::collections::{BinaryHeap, VecDeque};
@@ -83,16 +89,33 @@ pub struct Event {
     pub kind: EventKind,
 }
 
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 struct Entry {
     time: f64,
     seq: u64,
     kind: EventKind,
 }
 
+impl Entry {
+    /// The event-queue **ordering invariant**: events dequeue in strictly
+    /// ascending `(time, seq)` order, where `time` compares by
+    /// `f64::total_cmp` and `seq` is the queue's global insertion
+    /// counter. Because `seq` is unique, the order is total — in
+    /// particular, equal-timestamp events come out in FIFO (insertion)
+    /// order. Every implementation of the queue must realize exactly
+    /// this order; `tests/event_queue_props.rs` pins the calendar queue
+    /// against the reference heap event-for-event, ties included.
+    #[inline]
+    fn key_cmp(&self, other: &Self) -> Ordering {
+        self.time
+            .total_cmp(&other.time)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
 impl PartialEq for Entry {
     fn eq(&self, other: &Self) -> bool {
-        self.time.total_cmp(&other.time) == Ordering::Equal && self.seq == other.seq
+        self.key_cmp(other) == Ordering::Equal
     }
 }
 impl Eq for Entry {}
@@ -103,29 +126,30 @@ impl PartialOrd for Entry {
 }
 impl Ord for Entry {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Earliest time first; ties break on insertion order so replays
-        // are bit-identical regardless of heap internals.
-        self.time
-            .total_cmp(&other.time)
-            .then(self.seq.cmp(&other.seq))
+        self.key_cmp(other)
     }
 }
 
-/// Deterministic min-time event queue.
+/// The pre-calendar-queue implementation, kept as the executable
+/// specification of the ordering invariant (see [`Entry::key_cmp`]):
+/// a binary min-heap over `(time, seq)`. O(log n) per operation, used
+/// only by the equivalence tests — production scenarios run on the
+/// amortized-O(1) [`EventQueue`] calendar queue, which must produce the
+/// identical event stream for any input.
 #[derive(Debug, Default)]
-pub struct EventQueue {
+pub struct BinaryHeapEventQueue {
     heap: BinaryHeap<Reverse<Entry>>,
     seq: u64,
 }
 
-impl EventQueue {
+impl BinaryHeapEventQueue {
     pub fn new() -> Self {
         Self::default()
     }
 
-    /// Schedule `kind` at `time` (seconds). NaN times are rejected.
+    /// Schedule `kind` at `time` (seconds). Non-finite times are rejected.
     pub fn push(&mut self, time: f64, kind: EventKind) {
-        assert!(!time.is_nan(), "event time must not be NaN");
+        assert!(time.is_finite(), "event time must be finite, got {time}");
         let seq = self.seq;
         self.seq += 1;
         self.heap.push(Reverse(Entry { time, seq, kind }));
@@ -145,6 +169,209 @@ impl EventQueue {
 
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
+    }
+}
+
+/// Deterministic min-time event queue — a calendar queue (R. Brown,
+/// CACM 1988): a circular array of time buckets of uniform `width`
+/// seconds, each bucket holding its events sorted by the `(time, seq)`
+/// key of [`Entry::key_cmp`] (descending, so the bucket minimum pops
+/// from the back in O(1)).
+///
+/// Continuous batching generates exactly the access pattern calendar
+/// queues are built for: almost every push lands a few milliseconds to
+/// one second ahead of the current time (next decode step, next arrival
+/// within the current window), so pushes hash straight into a near-empty
+/// bucket and pops read the current bucket — amortized O(1) against the
+/// `BinaryHeap`'s O(log n), with the bucket count and width re-tuned to
+/// the live event population on resize.
+///
+/// Ordering is **identical** to [`BinaryHeapEventQueue`] — strictly
+/// ascending `(time, seq)`, FIFO among equal timestamps — because the
+/// key is total: within a bucket entries are kept key-sorted, across
+/// buckets the year scan visits virtual buckets in ascending time
+/// order, and equal times always share a bucket (same virtual index).
+#[derive(Debug)]
+pub struct EventQueue {
+    /// `buckets[v mod n]` holds events whose virtual bucket is ≡ v;
+    /// entries sorted descending by key so the minimum is `last()`.
+    buckets: Vec<Vec<Entry>>,
+    /// Bucket width in seconds (> 0, finite).
+    width: f64,
+    /// Virtual bucket the next pop scans from (events with a smaller
+    /// virtual index can only appear via a push, which rewinds this).
+    cur_v: i64,
+    len: usize,
+    seq: u64,
+}
+
+/// Initial/minimum bucket-array size (power of two).
+const MIN_BUCKETS: usize = 16;
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        EventQueue {
+            buckets: (0..MIN_BUCKETS).map(|_| Vec::new()).collect(),
+            // Arrival windows tick at 1 s and decode steps at ~TPOT
+            // (tens of ms); 0.1 s is a sane prior until the first
+            // resize re-tunes the width from the live population.
+            width: 0.1,
+            cur_v: i64::MIN,
+            len: 0,
+            seq: 0,
+        }
+    }
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Virtual (un-wrapped) bucket index of `time` under the current
+    /// width. Monotone in `time`; equal times always agree.
+    #[inline]
+    fn virtual_bucket(&self, time: f64) -> i64 {
+        (time / self.width).floor() as i64
+    }
+
+    #[inline]
+    fn physical(&self, v: i64) -> usize {
+        // Bucket count is a power of two but v may be negative: use
+        // euclidean remainder for a well-defined wrap.
+        v.rem_euclid(self.buckets.len() as i64) as usize
+    }
+
+    /// Schedule `kind` at `time` (seconds). Non-finite times are rejected.
+    pub fn push(&mut self, time: f64, kind: EventKind) {
+        assert!(time.is_finite(), "event time must be finite, got {time}");
+        let seq = self.seq;
+        self.seq += 1;
+        let entry = Entry { time, seq, kind };
+        let v = self.virtual_bucket(time);
+        if self.len == 0 || v < self.cur_v {
+            // First event, or an event behind the scan point: rewind so
+            // the next pop starts no later than this event's bucket.
+            self.cur_v = v;
+        }
+        let idx = self.physical(v);
+        let bucket = &mut self.buckets[idx];
+        // Keep the bucket sorted descending by key: find the first
+        // position whose entry does not compare greater than the new one.
+        let pos = bucket.partition_point(|e| e.key_cmp(&entry) == Ordering::Greater);
+        bucket.insert(pos, entry);
+        self.len += 1;
+        if self.len > 2 * self.buckets.len() {
+            let target = (2 * self.buckets.len()).max(MIN_BUCKETS);
+            self.resize(target);
+        }
+    }
+
+    /// Pop the earliest event (insertion order on ties).
+    pub fn pop(&mut self) -> Option<Event> {
+        if self.len == 0 {
+            return None;
+        }
+        // Scan at most one full year of virtual buckets from the
+        // persistent scan point. A bucket's `last()` is its minimum; it
+        // belongs to the current virtual bucket iff its own virtual
+        // index is ≤ cur_v (`<` cannot happen — cur_v never skips a
+        // non-empty earlier bucket — but ≤ keeps the check local).
+        let n = self.buckets.len();
+        for _ in 0..n {
+            let idx = self.physical(self.cur_v);
+            if let Some(min) = self.buckets[idx].last() {
+                if self.virtual_bucket(min.time) <= self.cur_v {
+                    return Some(self.take_from(idx));
+                }
+            }
+            self.cur_v += 1;
+        }
+        // One full year without a hit: every event lives ≥ n buckets
+        // ahead (sparse far-future population, e.g. only a Recovery
+        // hours out). Jump the scan point straight to the global
+        // minimum — unique under the total (time, seq) key.
+        let (idx, _) = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| b.last().map(|e| (i, e)))
+            .min_by(|(_, a), (_, b)| a.key_cmp(b))
+            .expect("len > 0 but no bucket has events");
+        let min_time = self.buckets[idx].last().unwrap().time;
+        self.cur_v = self.virtual_bucket(min_time);
+        Some(self.take_from(idx))
+    }
+
+    /// Remove and return the minimum of bucket `idx` (its back element),
+    /// shrinking the calendar when the population has thinned out.
+    fn take_from(&mut self, idx: usize) -> Event {
+        let e = self.buckets[idx].pop().expect("bucket min present");
+        self.len -= 1;
+        if self.buckets.len() > MIN_BUCKETS && self.len < self.buckets.len() / 4 {
+            let target = (self.buckets.len() / 2).max(MIN_BUCKETS);
+            self.resize(target);
+        }
+        Event {
+            time: e.time,
+            kind: e.kind,
+        }
+    }
+
+    /// Rebuild with `new_n` buckets and a width re-tuned to the live
+    /// population (Brown's re-tuning, deterministic variant: twice the
+    /// median inter-event gap, so one far-future straggler cannot smear
+    /// the dense near-future cluster into a single bucket). Ordering is
+    /// unaffected: the (time, seq) keys don't change, and redistribution
+    /// inserts in globally sorted order.
+    fn resize(&mut self, new_n: usize) {
+        let mut all: Vec<Entry> = Vec::with_capacity(self.len);
+        for b in &mut self.buckets {
+            all.append(b);
+        }
+        all.sort_unstable_by(|a, b| a.key_cmp(b));
+        if all.len() >= 2 {
+            let mut gaps: Vec<f64> = all
+                .windows(2)
+                .map(|w| w[1].time - w[0].time)
+                .filter(|&g| g > 0.0)
+                .collect();
+            if !gaps.is_empty() {
+                gaps.sort_unstable_by(|a, b| a.total_cmp(b));
+                let median = gaps[gaps.len() / 2];
+                let tuned = 2.0 * median;
+                if tuned.is_finite() && tuned > 0.0 {
+                    self.width = tuned;
+                }
+            }
+        }
+        self.buckets = (0..new_n).map(|_| Vec::new()).collect();
+        // Descending iteration + push keeps every bucket sorted
+        // descending without per-entry binary searches.
+        for e in all.into_iter().rev() {
+            let idx = (self.virtual_bucket(e.time)).rem_euclid(new_n as i64) as usize;
+            self.buckets[idx].push(e);
+        }
+        self.cur_v = if self.len == 0 {
+            i64::MIN
+        } else {
+            // Restart the scan at the earliest populated bucket.
+            let min_t = self
+                .buckets
+                .iter()
+                .filter_map(|b| b.last())
+                .map(|e| e.time)
+                .fold(f64::INFINITY, f64::min);
+            self.virtual_bucket(min_t)
+        };
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
     }
 }
 
@@ -1124,6 +1351,75 @@ mod tests {
         assert_eq!(order[2].kind, EventKind::DecodeStep);
         assert_eq!(order[3].kind, EventKind::DecodeStep);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn equal_timestamp_burst_pops_fifo() {
+        // A large same-timestamp burst must come out in exact insertion
+        // order — the (time, seq) invariant's tie clause.
+        let mut q = EventQueue::new();
+        for id in 0..200u32 {
+            q.push(3.25, EventKind::Arrival { output_tokens: id });
+        }
+        for id in 0..200u32 {
+            let ev = q.pop().expect("burst event");
+            assert_eq!(ev.time, 3.25);
+            assert_eq!(ev.kind, EventKind::Arrival { output_tokens: id });
+        }
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn calendar_resizes_and_stays_sorted() {
+        // Push enough to trigger growth resizes, interleave pops to
+        // trigger shrink resizes, and verify the dequeue order against
+        // the reference heap the whole way.
+        let mut cal = EventQueue::new();
+        let mut heap = BinaryHeapEventQueue::new();
+        let mut rng = Rng::seed_from_u64(99);
+        for i in 0..600u32 {
+            // Mix of clustered near-future and spread-out times.
+            let t = if i % 3 == 0 {
+                (i / 3) as f64 * 0.001
+            } else {
+                rng.f64() * 50.0
+            };
+            cal.push(t, EventKind::Arrival { output_tokens: i });
+            heap.push(t, EventKind::Arrival { output_tokens: i });
+            if i % 5 == 4 {
+                let (a, b) = (cal.pop(), heap.pop());
+                assert_eq!(a.as_ref().map(|e| e.time.to_bits()), b.as_ref().map(|e| e.time.to_bits()));
+                assert_eq!(a.map(|e| e.kind), b.map(|e| e.kind));
+            }
+        }
+        assert_eq!(cal.len(), heap.len());
+        while let Some(b) = heap.pop() {
+            let a = cal.pop().expect("calendar drained early");
+            assert_eq!(a.time.to_bits(), b.time.to_bits());
+            assert_eq!(a.kind, b.kind);
+        }
+        assert!(cal.is_empty());
+    }
+
+    #[test]
+    fn far_future_jump_and_rewind() {
+        // A sparse far-future population forces the year-scan fallback;
+        // a subsequent push behind the scan point must rewind it.
+        let mut q = EventQueue::new();
+        q.push(0.0, EventKind::DecodeStep);
+        q.push(7200.0, EventKind::Recovery { gpus: 4 });
+        q.push(86_400.0, EventKind::ScalingDecision);
+        assert_eq!(q.pop().unwrap().kind, EventKind::DecodeStep);
+        // Nothing for hours: the pop must jump, not walk 7200/width buckets
+        // one pop at a time (correctness check; perf is the design).
+        let ev = q.pop().unwrap();
+        assert_eq!(ev.kind, EventKind::Recovery { gpus: 4 });
+        assert_eq!(ev.time, 7200.0);
+        // Rewind: a decode step scheduled before the remaining event.
+        q.push(7200.5, EventKind::DecodeStep);
+        assert_eq!(q.pop().unwrap().kind, EventKind::DecodeStep);
+        assert_eq!(q.pop().unwrap().kind, EventKind::ScalingDecision);
+        assert!(q.pop().is_none());
     }
 
     fn janus(n_max: usize, seed: u64) -> JanusSystem {

@@ -14,6 +14,12 @@
 //!   admission delay, TTFT, and per-token TPOT percentiles alongside
 //!   GPU-hours.
 //!
+//! - [`sweep`] — the deterministic parallel sweep engine: independent
+//!   (system ctor × scenario × seed) cells drained by scoped workers
+//!   over one atomic claim index, with slot-per-cell result collection
+//!   so the output is bit-identical for any worker count (figures,
+//!   golden sweeps, and `bench_sim` all run their grids through it).
+//!
 //! Failure injection ([`engine::FailureScenario`]) lives directly in the
 //! engine: planned outages remove capacity mid-trace and the run measures
 //! SLO attainment through the system's replica re-placement.
@@ -26,11 +32,13 @@
 pub mod autoscale_sim;
 pub mod decode_sim;
 pub mod engine;
+pub mod sweep;
 
 pub use autoscale_sim::{AutoscaleResult, AutoscaleSim};
 pub use decode_sim::{evaluate_fixed_batch, FixedBatchResult};
 pub use engine::{
-    AutoscaleScenario, EventKind, EventQueue, FailurePlan, FailureResult, FailureScenario,
-    FixedBatchScenario, IntervalRecord, Scenario, ScenarioError, ScenarioOutcome,
+    AutoscaleScenario, BinaryHeapEventQueue, EventKind, EventQueue, FailurePlan, FailureResult,
+    FailureScenario, FixedBatchScenario, IntervalRecord, Scenario, ScenarioError, ScenarioOutcome,
     DEFAULT_QUEUE_CAPACITY,
 };
+pub use sweep::{hardware_threads, resolve_threads, run_cells, CellResult, SweepCell};

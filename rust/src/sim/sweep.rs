@@ -1,0 +1,255 @@
+//! Deterministic parallel sweep engine for independent simulation cells.
+//!
+//! The paper's evaluation — and every figure/golden/bench grid in this
+//! repo — is an embarrassingly parallel sweep over independent
+//! configurations: (system constructor × scenario config × seed) cells
+//! that share nothing mutable. This module drains such a cell list with
+//! `std::thread::scope` workers (no crates.io access, so no rayon —
+//! hand-rolled work claiming over one atomic index) while keeping the
+//! repo's bit-identical same-seed contract:
+//!
+//! **Worker count is not an observable.** Each cell's result is written
+//! into a pre-sized slot at the cell's submission index, every cell owns
+//! its RNG streams (derive them with [`crate::util::rng::split_seed`],
+//! never by sharing a generator across cells), and no cell reads another
+//! cell's output. Therefore `sweep(cells, t, f)` returns the same
+//! `Vec<T>` — bit for bit — for any `t ≥ 1`, including `t = 1`, which
+//! simply runs the cells in submission order on the calling thread.
+//! `tests/sweep_determinism.rs` pins this.
+//!
+//! Thread-count resolution (CLI `--threads N` beats the `JANUS_THREADS`
+//! environment variable beats the hardware parallelism) lives in
+//! [`resolve_threads`] so every binary exposes the same knobs.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::baselines::system::ServingSystem;
+use crate::sim::engine::{self, Scenario, ScenarioError, ScenarioOutcome};
+
+/// Environment variable consulted when no explicit `--threads` is given.
+pub const THREADS_ENV: &str = "JANUS_THREADS";
+
+/// Number of hardware threads (1 when the query fails).
+pub fn hardware_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Resolve the worker count for a sweep: an explicit request (CLI
+/// `--threads`) wins, then the `JANUS_THREADS` environment variable,
+/// then the hardware parallelism. Zero/unparsable values fall through to
+/// the next source; the result is always ≥ 1.
+pub fn resolve_threads(explicit: Option<usize>) -> usize {
+    explicit
+        .filter(|&n| n > 0)
+        .or_else(|| {
+            std::env::var(THREADS_ENV)
+                .ok()
+                .and_then(|s| s.trim().parse().ok())
+                .filter(|&n: &usize| n > 0)
+        })
+        .unwrap_or_else(hardware_threads)
+}
+
+/// Run `f(i, &cells[i])` for every cell and return the results in
+/// submission order. `threads` workers claim cells from one atomic
+/// index (first-free-worker order — scheduling never affects which slot
+/// a result lands in, only which worker computes it). With `threads <= 1`
+/// the cells run serially on the calling thread; the output is
+/// bit-identical either way provided `f` is a pure function of
+/// `(i, cell)` — the cell-isolation contract this module documents.
+///
+/// A panic inside any cell propagates to the caller once the scope
+/// joins, like the serial loop would.
+pub fn sweep<C, T, F>(cells: &[C], threads: usize, f: F) -> Vec<T>
+where
+    C: Sync,
+    T: Send,
+    F: Fn(usize, &C) -> T + Sync,
+{
+    let workers = threads.max(1).min(cells.len());
+    if workers <= 1 {
+        return cells.iter().enumerate().map(|(i, c)| f(i, c)).collect();
+    }
+    // Slot-per-cell result buffer: submission index == output index.
+    // Each slot's mutex is locked exactly once (cells are claimed via
+    // fetch_add, so indices are disjoint across workers) — it exists to
+    // make the write safe, not to serialize anything.
+    let slots: Vec<Mutex<Option<T>>> = cells.iter().map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let out = f(i, &cells[i]);
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("sweep slot poisoned")
+                .expect("sweep cell completed without a result")
+        })
+        .collect()
+}
+
+/// One unit of isolation in a scenario sweep: a system constructor, the
+/// scenario it runs, and the seed of the run. The constructor executes
+/// inside whichever worker claims the cell; the built system never
+/// crosses a thread boundary.
+pub struct SweepCell<'a> {
+    /// Human-readable cell label (carried through to the result row).
+    pub label: String,
+    /// Builds a fresh system for this cell. Must be deterministic: two
+    /// invocations yield identically-behaving systems (fixed ctor seed).
+    pub build: Box<dyn Fn() -> Box<dyn ServingSystem> + Sync + 'a>,
+    pub scenario: Scenario,
+    pub seed: u64,
+}
+
+/// Outcome of one [`SweepCell`], tagged with its label.
+pub struct CellResult {
+    pub label: String,
+    pub outcome: Result<ScenarioOutcome, ScenarioError>,
+}
+
+/// Drain a scenario-cell work queue over `threads` workers; results come
+/// back in submission order regardless of worker count.
+pub fn run_cells(cells: &[SweepCell<'_>], threads: usize) -> Vec<CellResult> {
+    sweep(cells, threads, |_, cell| {
+        let mut sys = (cell.build)();
+        CellResult {
+            label: cell.label.clone(),
+            outcome: engine::run(sys.as_mut(), &cell.scenario, cell.seed),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::serving::Slo;
+    use crate::sim::engine::FixedBatchScenario;
+    use crate::util::rng::{split_seed, Rng};
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn results_land_in_submission_order_for_any_thread_count() {
+        let cells: Vec<u64> = (0..37).collect();
+        let expect: Vec<u64> = cells.iter().map(|&c| c * c + 1).collect();
+        for threads in [1usize, 2, 3, 4, 8, 64] {
+            let got = sweep(&cells, threads, |i, &c| {
+                assert_eq!(cells[i], c, "index/cell mismatch");
+                c * c + 1
+            });
+            assert_eq!(got, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_sweeps() {
+        let none: Vec<u32> = Vec::new();
+        assert!(sweep(&none, 8, |_, &c| c).is_empty());
+        assert_eq!(sweep(&[7u32], 8, |_, &c| c + 1), vec![8]);
+    }
+
+    #[test]
+    fn per_cell_rng_streams_do_not_depend_on_scheduling() {
+        // Cells draw from RNGs derived via split_seed(stream, index):
+        // the draw sequence is a pure function of the cell, so any
+        // worker count (and any claim interleaving) produces identical
+        // outputs, and a cell run alone reproduces its in-sweep value.
+        let cells: Vec<u64> = (0..16).collect();
+        let draw = |_, &c: &u64| {
+            let mut rng = Rng::seed_from_u64(split_seed(0xF1C5, c));
+            (0..64).fold(0u64, |acc, _| acc.wrapping_add(rng.next_u64()))
+        };
+        let serial = sweep(&cells, 1, draw);
+        let parallel = sweep(&cells, 4, draw);
+        assert_eq!(serial, parallel);
+        for k in [0usize, 7, 15] {
+            let solo = sweep(&cells[k..=k], 1, draw);
+            assert_eq!(solo[0], serial[k], "cell {k} not isolated");
+        }
+    }
+
+    #[test]
+    fn every_cell_runs_exactly_once() {
+        static RUNS: AtomicUsize = AtomicUsize::new(0);
+        RUNS.store(0, Ordering::SeqCst);
+        let cells: Vec<usize> = (0..100).collect();
+        let got = sweep(&cells, 8, |i, _| {
+            RUNS.fetch_add(1, Ordering::SeqCst);
+            i
+        });
+        assert_eq!(RUNS.load(Ordering::SeqCst), 100);
+        assert_eq!(got, cells);
+    }
+
+    #[test]
+    fn resolve_threads_precedence() {
+        // Explicit beats everything; zero falls through.
+        assert_eq!(resolve_threads(Some(3)), 3);
+        assert!(resolve_threads(Some(0)) >= 1);
+        assert!(resolve_threads(None) >= 1);
+    }
+
+    #[test]
+    fn scenario_cells_run_and_keep_order() {
+        use crate::baselines::JanusSystem;
+        use crate::config::hardware::paper_testbed;
+        use crate::config::models::deepseek_v2;
+        use crate::routing::gate::ExpertPopularity;
+
+        let model = deepseek_v2();
+        let hw = paper_testbed();
+        let pop = ExpertPopularity::Uniform;
+        let cells: Vec<SweepCell> = [64usize, 128]
+            .iter()
+            .map(|&batch| SweepCell {
+                label: format!("janus/B{batch}"),
+                build: Box::new({
+                    let (model, hw, pop) = (model.clone(), hw.clone(), pop.clone());
+                    move || {
+                        Box::new(JanusSystem::build(
+                            model.clone(),
+                            hw.clone(),
+                            &pop,
+                            16,
+                            42,
+                        )) as Box<dyn ServingSystem>
+                    }
+                }),
+                scenario: Scenario::FixedBatch(FixedBatchScenario {
+                    batch,
+                    slo: Slo::from_ms(200.0),
+                    steps: 5,
+                }),
+                seed: 7,
+            })
+            .collect();
+        let fingerprint = |rs: &[CellResult]| -> Vec<(String, u64)> {
+            rs.iter()
+                .map(|r| match &r.outcome {
+                    Ok(ScenarioOutcome::FixedBatch(f)) => {
+                        (r.label.clone(), f.tpot_mean.to_bits())
+                    }
+                    other => panic!("unexpected outcome {other:?}"),
+                })
+                .collect()
+        };
+        let serial = fingerprint(&run_cells(&cells, 1));
+        let parallel = fingerprint(&run_cells(&cells, 2));
+        assert_eq!(serial, parallel);
+        assert_eq!(serial[0].0, "janus/B64");
+        assert_eq!(serial[1].0, "janus/B128");
+    }
+}

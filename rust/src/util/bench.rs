@@ -90,12 +90,16 @@ pub fn bench_cfg<F: FnMut()>(
 }
 
 /// One row of a `BENCH_*.json` trajectory: a bench's mean per-iteration
-/// time and the equivalent rate (steps/s for decode-step benches).
+/// time, the equivalent rate (steps/s for decode-step benches), and —
+/// for sweep benches — the worker count the measurement ran at.
 #[derive(Clone, Debug)]
 pub struct BenchRecord {
     pub name: String,
     pub mean_ns: f64,
     pub steps_per_s: f64,
+    /// Sweep worker count of the measurement; `None` for single-threaded
+    /// micro-benches (serialized as absent).
+    pub threads: Option<usize>,
 }
 
 impl BenchRecord {
@@ -105,7 +109,14 @@ impl BenchRecord {
             name: r.name.clone(),
             mean_ns: r.mean_ns,
             steps_per_s: if r.mean_ns > 0.0 { 1e9 / r.mean_ns } else { 0.0 },
+            threads: None,
         }
+    }
+
+    /// Tag the record with the sweep worker count it was measured at.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
     }
 }
 
@@ -127,12 +138,18 @@ fn json_escape(s: &str) -> String {
     out
 }
 
-/// Render a `BENCH_*.json` trajectory document. `timestamp_unix_s` is
-/// passed in by the caller (the bench binary) — the harness itself never
-/// reads a clock for anything but interval measurement, and simulation
-/// code never reads one at all. Non-finite values serialize as 0 to keep
-/// the document valid JSON.
-pub fn bench_json(timestamp_unix_s: u64, records: &[BenchRecord]) -> String {
+/// Render a `BENCH_*.json` trajectory document (schema `janus-bench-v2`:
+/// v1 plus a top-level `hardware_threads` and an optional per-record
+/// `threads` field for sweep benches). `timestamp_unix_s` and
+/// `hardware_threads` are passed in by the caller (the bench binary) —
+/// the harness itself never reads a clock for anything but interval
+/// measurement, and simulation code never reads one at all. Non-finite
+/// values serialize as 0 to keep the document valid JSON.
+pub fn bench_json(
+    timestamp_unix_s: u64,
+    hardware_threads: usize,
+    records: &[BenchRecord],
+) -> String {
     let num = |x: f64| -> String {
         if x.is_finite() {
             format!("{x:.3}")
@@ -141,15 +158,21 @@ pub fn bench_json(timestamp_unix_s: u64, records: &[BenchRecord]) -> String {
         }
     };
     let mut out = String::from("{\n");
-    out.push_str("  \"schema\": \"janus-bench-v1\",\n");
+    out.push_str("  \"schema\": \"janus-bench-v2\",\n");
     out.push_str(&format!("  \"generated_unix_s\": {timestamp_unix_s},\n"));
+    out.push_str(&format!("  \"hardware_threads\": {hardware_threads},\n"));
     out.push_str("  \"benches\": [\n");
     for (i, r) in records.iter().enumerate() {
+        let threads = r
+            .threads
+            .map(|t| format!(", \"threads\": {t}"))
+            .unwrap_or_default();
         out.push_str(&format!(
-            "    {{\"name\": \"{}\", \"mean_ns\": {}, \"steps_per_s\": {}}}{}\n",
+            "    {{\"name\": \"{}\", \"mean_ns\": {}, \"steps_per_s\": {}{}}}{}\n",
             json_escape(&r.name),
             num(r.mean_ns),
             num(r.steps_per_s),
+            threads,
             if i + 1 < records.len() { "," } else { "" }
         ));
     }
@@ -162,9 +185,13 @@ pub fn bench_json(timestamp_unix_s: u64, records: &[BenchRecord]) -> String {
 pub fn write_bench_json(
     path: &Path,
     timestamp_unix_s: u64,
+    hardware_threads: usize,
     records: &[BenchRecord],
 ) -> io::Result<()> {
-    std::fs::write(path, bench_json(timestamp_unix_s, records))
+    std::fs::write(
+        path,
+        bench_json(timestamp_unix_s, hardware_threads, records),
+    )
 }
 
 #[cfg(test)]
@@ -189,18 +216,30 @@ mod tests {
                 name: "janus/step B=256".to_string(),
                 mean_ns: 12_345.678,
                 steps_per_s: 81_000.5,
+                threads: None,
+            },
+            BenchRecord {
+                name: "sweep/figures-grid".to_string(),
+                mean_ns: 1e6,
+                steps_per_s: 1e3,
+                threads: Some(4),
             },
             BenchRecord {
                 name: "quote\"and\\slash".to_string(),
                 mean_ns: f64::NAN,
                 steps_per_s: f64::INFINITY,
+                threads: None,
             },
         ];
-        let doc = bench_json(1_753_000_000, &records);
-        assert!(doc.contains("\"schema\": \"janus-bench-v1\""));
+        let doc = bench_json(1_753_000_000, 8, &records);
+        assert!(doc.contains("\"schema\": \"janus-bench-v2\""));
         assert!(doc.contains("\"generated_unix_s\": 1753000000"));
+        assert!(doc.contains("\"hardware_threads\": 8"));
         assert!(doc.contains("\"mean_ns\": 12345.678"));
         assert!(doc.contains("\"steps_per_s\": 81000.500"));
+        // Sweep records carry their worker count; micro-benches don't.
+        assert!(doc.contains("\"steps_per_s\": 1000.000, \"threads\": 4"));
+        assert_eq!(doc.matches("\"threads\":").count(), 1);
         // Escaping + non-finite fallback keep the document valid.
         assert!(doc.contains("quote\\\"and\\\\slash"));
         assert!(doc.contains("\"mean_ns\": 0, \"steps_per_s\": 0"));
@@ -219,5 +258,7 @@ mod tests {
         };
         let rec = BenchRecord::from_result(&r);
         assert!((rec.steps_per_s - 500.0).abs() < 1e-9);
+        assert_eq!(rec.threads, None);
+        assert_eq!(rec.with_threads(3).threads, Some(3));
     }
 }

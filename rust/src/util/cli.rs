@@ -54,6 +54,15 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
+    /// Optional integer option: `None` when absent, panics on garbage
+    /// (matching the `_or` accessors' strictness).
+    pub fn usize_opt(&self, name: &str) -> Option<usize> {
+        self.get(name).map(|v| {
+            v.parse()
+                .unwrap_or_else(|_| panic!("--{name} expects an integer, got {v}"))
+        })
+    }
+
     pub fn usize_or(&self, name: &str, default: usize) -> usize {
         self.get(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v}")))
@@ -97,6 +106,8 @@ mod tests {
         assert_eq!(a.usize_or("n", 0), 12);
         assert_eq!(a.f64_or("rate", 0.0), 3.5);
         assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.usize_opt("n"), Some(12));
+        assert_eq!(a.usize_opt("missing"), None);
     }
 
     #[test]

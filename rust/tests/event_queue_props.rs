@@ -1,0 +1,182 @@
+//! Ordering-equivalence property tests for the event queue.
+//!
+//! The event-queue contract (documented on `Entry::key_cmp` in
+//! `sim::engine`): events dequeue in strictly ascending `(time, seq)`
+//! order — `time` by `total_cmp`, `seq` the global insertion counter —
+//! so equal-timestamp events come out FIFO. The production calendar
+//! queue (`EventQueue`) must realize exactly the stream the reference
+//! `BinaryHeapEventQueue` produces: same Event stream in → same Event
+//! stream out, including tie order, under arbitrary interleavings of
+//! pushes (clustered, tied, far-future, behind-the-scan-point) and pops.
+
+use janus::sim::engine::{BinaryHeapEventQueue, Event, EventKind, EventQueue};
+use janus::testing::prop::check;
+use janus::util::rng::Rng;
+
+fn assert_same_event(a: Option<Event>, b: Option<Event>, ctx: &str) {
+    match (&a, &b) {
+        (None, None) => {}
+        (Some(x), Some(y)) => {
+            assert_eq!(
+                x.time.to_bits(),
+                y.time.to_bits(),
+                "{ctx}: calendar t={} vs heap t={}",
+                x.time,
+                y.time
+            );
+            assert_eq!(x.kind, y.kind, "{ctx}: kinds diverged at t={}", x.time);
+        }
+        _ => panic!("{ctx}: one queue drained early (cal={a:?}, heap={b:?})"),
+    }
+}
+
+/// Push the same event into both queues; the payload id makes every
+/// event distinguishable so a tie-order swap cannot hide.
+fn push_both(
+    cal: &mut EventQueue,
+    heap: &mut BinaryHeapEventQueue,
+    time: f64,
+    id: &mut u32,
+) {
+    let kind = EventKind::Arrival { output_tokens: *id };
+    *id += 1;
+    cal.push(time, kind.clone());
+    heap.push(time, kind);
+}
+
+#[test]
+fn calendar_queue_matches_heap_event_for_event() {
+    check("calendar ≡ heap under random interleavings", 200, |rng| {
+        let mut cal = EventQueue::new();
+        let mut heap = BinaryHeapEventQueue::new();
+        let mut id = 0u32;
+        // `now` tracks the last dequeued time, as a simulation loop
+        // would; pushes land around it in the regimes the scenarios
+        // generate (plus behind it, which the API also permits).
+        let mut now = 0.0f64;
+        let ops = 1 + rng.usize_below(300);
+        for op in 0..ops {
+            if rng.f64() < 0.6 {
+                let base = match rng.usize_below(5) {
+                    // Exact tie with the current time.
+                    0 => now,
+                    // Clustered near future — the continuous-batching
+                    // hot case (decode steps ms apart).
+                    1 => now + rng.f64() * 1e-3,
+                    // Within the next arrival window.
+                    2 => now + rng.f64(),
+                    // Far future (recovery/scaling-decision scale).
+                    3 => now + rng.f64() * 5000.0,
+                    // Behind the scan point.
+                    _ => now * rng.f64(),
+                };
+                // Bursts share a base time so equal-timestamp FIFO
+                // ordering is exercised constantly.
+                let burst = 1 + rng.usize_below(6);
+                for _ in 0..burst {
+                    let t = if rng.bool_with(0.5) {
+                        base
+                    } else {
+                        base + rng.f64() * 1e-4
+                    };
+                    push_both(&mut cal, &mut heap, t, &mut id);
+                }
+            } else {
+                let (a, b) = (cal.pop(), heap.pop());
+                if let Some(e) = &a {
+                    now = now.max(e.time);
+                }
+                assert_same_event(a, b, &format!("op {op}"));
+            }
+            assert_eq!(cal.len(), heap.len(), "op {op}: length diverged");
+        }
+        // Drain both completely — the full residual streams must match.
+        loop {
+            let (a, b) = (cal.pop(), heap.pop());
+            let done = a.is_none();
+            assert_same_event(a, b, "drain");
+            if done {
+                break;
+            }
+        }
+        assert!(cal.is_empty() && heap.is_empty());
+    });
+}
+
+#[test]
+fn equal_timestamp_bursts_always_fifo() {
+    check("equal-timestamp bursts dequeue FIFO", 100, |rng| {
+        let mut cal = EventQueue::new();
+        // Several bursts at a handful of distinct times, pushed in
+        // shuffled time order; within one timestamp, ids are assigned
+        // in push order and must come back in exactly that order.
+        let mut times: Vec<f64> = (0..1 + rng.usize_below(8))
+            .map(|_| rng.f64() * 100.0)
+            .collect();
+        rng.shuffle(&mut times);
+        let mut id = 0u32;
+        let mut expected: Vec<(u64, u32)> = Vec::new();
+        for &t in &times {
+            for _ in 0..1 + rng.usize_below(30) {
+                cal.push(t, EventKind::Arrival { output_tokens: id });
+                expected.push((t.to_bits(), id));
+                id += 1;
+            }
+        }
+        // Expected order: ascending time, then insertion (push) order.
+        // Sorting by (total_cmp bits of a non-negative f64, push id) is
+        // exactly the queue's (time, seq) key for these inputs.
+        expected.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.cmp(&b.1)));
+        for (i, (t_bits, want_id)) in expected.iter().enumerate() {
+            let ev = cal.pop().expect("event present");
+            assert_eq!(ev.time.to_bits(), *t_bits, "position {i}");
+            assert_eq!(
+                ev.kind,
+                EventKind::Arrival {
+                    output_tokens: *want_id
+                },
+                "position {i}: tie order broken"
+            );
+        }
+        assert!(cal.pop().is_none());
+    });
+}
+
+#[test]
+fn scenario_shaped_stream_is_identical() {
+    // A deterministic facsimile of what a continuous-batching scenario
+    // pushes: 1 s arrival windows, per-window arrival bursts, chained
+    // decode steps, periodic decisions, one far-future recovery.
+    let mut cal = EventQueue::new();
+    let mut heap = BinaryHeapEventQueue::new();
+    let mut rng = Rng::seed_from_u64(0xCA1E);
+    let mut id = 0u32;
+    for w in 0..120u32 {
+        let t0 = w as f64;
+        push_both(&mut cal, &mut heap, t0, &mut id); // window tick
+        for _ in 0..rng.usize_below(12) {
+            push_both(&mut cal, &mut heap, t0 + rng.f64(), &mut id);
+        }
+        let mut step_t = t0;
+        for _ in 0..rng.usize_below(25) {
+            step_t += 0.02 + rng.f64() * 0.05; // TPOT-scale chaining
+            push_both(&mut cal, &mut heap, step_t, &mut id);
+        }
+        if w % 15 == 0 {
+            push_both(&mut cal, &mut heap, t0 + 900.0, &mut id);
+        }
+    }
+    push_both(&mut cal, &mut heap, 7200.0, &mut id);
+    assert_eq!(cal.len(), heap.len());
+    let mut popped = 0usize;
+    loop {
+        let (a, b) = (cal.pop(), heap.pop());
+        let done = a.is_none();
+        assert_same_event(a, b, &format!("pop {popped}"));
+        if done {
+            break;
+        }
+        popped += 1;
+    }
+    assert!(popped > 1000, "stream too small to be meaningful: {popped}");
+}

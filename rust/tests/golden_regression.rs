@@ -14,15 +14,25 @@
 //! silently re-bootstrapping, so an accidentally deleted baseline cannot
 //! erase the drift reference. Re-bless intentionally changed numbers
 //! with `JANUS_BLESS=1 cargo test -q golden`.
+//!
+//! Both snapshot generators drain their (system × batch) grids through
+//! `sim::sweep` at the `JANUS_THREADS`-resolved worker count — every
+//! cell builds its own system from the fixed ctor seeds, so the rows
+//! (and hence the snapshot bytes) are identical to the old serial
+//! loops AND identical for any worker count. CI's thread matrix runs
+//! these tests at 2 and max workers against the same committed file;
+//! `snapshot_generation_is_deterministic` additionally pins threads=1
+//! against the resolved count in-process.
 
-use std::fmt::Write as _;
 use std::path::{Path, PathBuf};
 
-use janus::baselines::{JanusSystem, MegaScaleInfer, ServingSystem, SgLang, XDeepServe};
-use janus::config::hardware::paper_testbed;
-use janus::config::models;
+use janus::baselines::{build_eval_system, ServingSystem, EVAL_SYSTEMS};
+use janus::config::hardware::{paper_testbed, HardwareProfile};
+use janus::config::models::{self, MoeModel};
 use janus::config::serving::Slo;
+use janus::routing::gate::ExpertPopularity;
 use janus::sim::engine::{self, AutoscaleScenario, FixedBatchScenario};
+use janus::sim::sweep;
 use janus::workload::trace::DiurnalTrace;
 
 const STEPS: usize = 20;
@@ -122,59 +132,67 @@ fn compare_rows(
     }
 }
 
-fn build_systems(
-    model: &janus::config::models::MoeModel,
-    hw: &janus::config::hardware::HardwareProfile,
-    pop: &janus::routing::gate::ExpertPopularity,
-) -> (JanusSystem, SgLang, MegaScaleInfer, XDeepServe) {
-    (
-        JanusSystem::build(model.clone(), hw.clone(), pop, 16, 42),
-        SgLang::build(model.clone(), hw.clone(), pop, 43),
-        MegaScaleInfer::build(model.clone(), hw.clone(), pop, 16, 44),
-        XDeepServe::build(model.clone(), hw.clone(), pop, 32, 45),
-    )
+/// Build system `which` from the canonical eval ctor seeds
+/// (`janus::baselines::build_eval_system`). Each sweep cell builds its
+/// own fresh system, exactly as the old per-batch serial loop did, so
+/// the rows are byte-identical to the pre-sweep snapshots.
+fn build_system(
+    which: usize,
+    model: &MoeModel,
+    hw: &HardwareProfile,
+    pop: &ExpertPopularity,
+) -> Box<dyn ServingSystem> {
+    build_eval_system(which, model.clone(), hw.clone(), pop)
 }
 
-/// One snapshot row per (system, batch).
-fn current_fixed_batch_snapshot() -> String {
+const SYSTEMS: usize = EVAL_SYSTEMS;
+
+/// One snapshot row per (system, batch), produced by a parallel sweep
+/// whose output order is submission order (worker count not observable).
+fn current_fixed_batch_snapshot_at(threads: usize) -> String {
     let model = models::deepseek_v2();
     let hw = paper_testbed();
-    let pop = janus::routing::gate::ExpertPopularity::Zipf { s: 0.4 };
+    let pop = ExpertPopularity::Zipf { s: 0.4 };
     let slo = Slo::from_ms(200.0);
     let mut out = String::from(
         "# Golden fixed-batch snapshot (DeepSeek-V2, paper testbed, zipf 0.4,\n\
          # SLO 200 ms, steps 20, seed 424242). Regenerate: JANUS_BLESS=1.\n\
          # system/batch\ttpot_mean\ttpot_p99\ttpg\n",
     );
-    for &batch in &BATCHES {
-        let (mut janus, mut sgl, mut msi, mut xds) = build_systems(&model, &hw, &pop);
-        let systems: Vec<&mut dyn ServingSystem> =
-            vec![&mut janus, &mut sgl, &mut msi, &mut xds];
-        for sys in systems {
-            let r = engine::fixed_batch(
-                sys,
-                &FixedBatchScenario { batch, slo, steps: STEPS },
-                SEED,
-            );
-            writeln!(
-                out,
-                "{}/B{}\t{:.17e}\t{:.17e}\t{:.17e}",
-                r.system, batch, r.tpot_mean, r.tpot_p99, r.tpg
-            )
-            .unwrap();
-        }
+    let cells: Vec<(usize, usize)> = BATCHES
+        .iter()
+        .flat_map(|&b| (0..SYSTEMS).map(move |s| (b, s)))
+        .collect();
+    let rows = sweep::sweep(&cells, threads, |_, &(batch, which)| {
+        let mut sys = build_system(which, &model, &hw, &pop);
+        let r = engine::fixed_batch(
+            sys.as_mut(),
+            &FixedBatchScenario { batch, slo, steps: STEPS },
+            SEED,
+        );
+        format!(
+            "{}/B{}\t{:.17e}\t{:.17e}\t{:.17e}\n",
+            r.system, batch, r.tpot_mean, r.tpot_p99, r.tpg
+        )
+    });
+    for row in rows {
+        out.push_str(&row);
     }
     out
+}
+
+fn current_fixed_batch_snapshot() -> String {
+    current_fixed_batch_snapshot_at(sweep::resolve_threads(None))
 }
 
 /// One snapshot row per system over the arrival-driven autoscale ramp.
 /// The 720 s horizon is deliberately NOT a multiple of the 300 s
 /// decision interval, so the truncated final interval's duration
 /// weighting is pinned too.
-fn current_autoscale_snapshot() -> String {
+fn current_autoscale_snapshot_at(threads: usize) -> String {
     let model = models::deepseek_v2();
     let hw = paper_testbed();
-    let pop = janus::routing::gate::ExpertPopularity::Zipf { s: 0.4 };
+    let pop = ExpertPopularity::Zipf { s: 0.4 };
     let trace = DiurnalTrace::ramp(720.0 / 3600.0, 30.0, 1.0, 8.0, 4242);
     let scenario = AutoscaleScenario::new(300.0, 64.0, Slo::from_ms(200.0), trace);
     let mut out = String::from(
@@ -184,13 +202,12 @@ fn current_autoscale_snapshot() -> String {
          # system\tgpu_hours\tfeasible_fraction\ttpot_mean\ttpot_p99\tadm_p99\tattainment\
 \tsteps\tadmitted\tcompleted\trejected\tgenerated\n",
     );
-    let (mut janus, mut sgl, mut msi, mut xds) = build_systems(&model, &hw, &pop);
-    let systems: Vec<&mut dyn ServingSystem> = vec![&mut janus, &mut sgl, &mut msi, &mut xds];
-    for sys in systems {
-        let r = engine::autoscale(sys, &scenario, SEED).expect("valid scenario");
-        writeln!(
-            out,
-            "{}\t{:.17e}\t{:.17e}\t{:.17e}\t{:.17e}\t{:.17e}\t{:.17e}\t{}\t{}\t{}\t{}\t{}",
+    let cells: Vec<usize> = (0..SYSTEMS).collect();
+    let rows = sweep::sweep(&cells, threads, |_, &which| {
+        let mut sys = build_system(which, &model, &hw, &pop);
+        let r = engine::autoscale(sys.as_mut(), &scenario, SEED).expect("valid scenario");
+        format!(
+            "{}\t{:.17e}\t{:.17e}\t{:.17e}\t{:.17e}\t{:.17e}\t{:.17e}\t{}\t{}\t{}\t{}\t{}\n",
             r.system,
             r.gpu_hours,
             r.feasible_fraction,
@@ -204,9 +221,15 @@ fn current_autoscale_snapshot() -> String {
             r.rejected_requests,
             r.generated_tokens
         )
-        .unwrap();
+    });
+    for row in rows {
+        out.push_str(&row);
     }
     out
+}
+
+fn current_autoscale_snapshot() -> String {
+    current_autoscale_snapshot_at(sweep::resolve_threads(None))
 }
 
 #[test]
@@ -247,9 +270,16 @@ fn autoscale_metrics_match_snapshot() {
 }
 
 /// The snapshot generators are bit-deterministic — the precondition for
-/// the golden files being meaningful across machines and runs.
+/// the golden files being meaningful across machines and runs — and the
+/// sweep's worker count is not an observable: the serial (threads=1)
+/// bytes equal the resolved-parallel bytes.
 #[test]
 fn snapshot_generation_is_deterministic() {
     assert_eq!(current_fixed_batch_snapshot(), current_fixed_batch_snapshot());
     assert_eq!(current_autoscale_snapshot(), current_autoscale_snapshot());
+    assert_eq!(
+        current_fixed_batch_snapshot_at(1),
+        current_fixed_batch_snapshot()
+    );
+    assert_eq!(current_autoscale_snapshot_at(1), current_autoscale_snapshot());
 }

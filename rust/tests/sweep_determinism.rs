@@ -1,0 +1,144 @@
+//! Determinism pin for the parallel sweep engine (tier-1).
+//!
+//! The `sim::sweep` contract: worker count is not an observable. The
+//! same cell list produces byte-identical serialized results at
+//! `threads = 1` and at `threads = 4` (falling back to 2 when the
+//! machine has fewer than 4 hardware threads — the claim-race coverage
+//! only needs > 1 worker), and a cell's RNG streams are a pure function
+//! of the cell — worker scheduling cannot perturb them.
+
+use janus::baselines::{build_eval_system, ServingSystem};
+use janus::config::hardware::paper_testbed;
+use janus::config::models;
+use janus::config::serving::Slo;
+use janus::sim::engine::{AutoscaleScenario, FixedBatchScenario, Scenario, ScenarioOutcome};
+use janus::sim::sweep::{self, run_cells, sweep, SweepCell};
+use janus::util::rng::{split_seed, Rng};
+use janus::workload::trace::DiurnalTrace;
+
+/// Serialize a representative evaluation sweep — 4 systems × 2 batches
+/// of fixed-batch decode plus one arrival-driven autoscale cell per
+/// system, expressed as a `SweepCell` (system ctor × scenario × seed)
+/// work queue drained by `run_cells` — to an exact (bit-level hex)
+/// string. Heavy and light cells interleave in one queue so worker
+/// claiming is genuinely racy at > 1 thread.
+fn sweep_snapshot(threads: usize) -> String {
+    let model = models::deepseek_v2();
+    let hw = paper_testbed();
+    let pop = janus::routing::gate::ExpertPopularity::Zipf { s: 0.4 };
+    let trace = DiurnalTrace::ramp(300.0 / 3600.0, 30.0, 1.0, 6.0, 77);
+    let names = ["janus", "sglang", "msi", "xds"];
+    let mut cells: Vec<SweepCell> = Vec::new();
+    for s in 0..4usize {
+        for batch in [Some(64usize), Some(256), None] {
+            let scenario = match batch {
+                Some(b) => Scenario::FixedBatch(FixedBatchScenario {
+                    batch: b,
+                    slo: Slo::from_ms(200.0),
+                    steps: 12,
+                }),
+                None => Scenario::Autoscale(AutoscaleScenario::new(
+                    75.0,
+                    32.0,
+                    Slo::from_ms(200.0),
+                    trace.clone(),
+                )),
+            };
+            cells.push(SweepCell {
+                label: match batch {
+                    Some(b) => format!("{}/B{b}", names[s]),
+                    None => format!("{}/auto", names[s]),
+                },
+                build: Box::new({
+                    let (model, hw, pop) = (model.clone(), hw.clone(), pop.clone());
+                    move || -> Box<dyn ServingSystem> {
+                        build_eval_system(s, model.clone(), hw.clone(), &pop)
+                    }
+                }),
+                scenario,
+                seed: 9,
+            });
+        }
+    }
+    run_cells(&cells, threads)
+        .iter()
+        .map(|cell| match cell.outcome.as_ref().expect("valid scenario") {
+            ScenarioOutcome::FixedBatch(r) => format!(
+                "{}\t{:016x}\t{:016x}\t{:016x}\n",
+                cell.label,
+                r.tpot_mean.to_bits(),
+                r.tpot_p99.to_bits(),
+                r.tpg.to_bits()
+            ),
+            ScenarioOutcome::Autoscale(r) => format!(
+                "{}\t{:016x}\t{:016x}\t{}\t{}\t{}\n",
+                cell.label,
+                r.gpu_hours.to_bits(),
+                r.tpot_p99.to_bits(),
+                r.steps,
+                r.admitted_requests,
+                r.generated_tokens
+            ),
+            ScenarioOutcome::FailureInjection(_) => {
+                unreachable!("no failure cells in this sweep")
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn sweep_is_byte_identical_across_thread_counts() {
+    let serial = sweep_snapshot(1);
+    assert!(serial.lines().count() == 12, "unexpected cell count");
+    // 4 workers when the hardware has them, else the 2-worker fallback —
+    // plus a deliberately oversubscribed count, which must not matter
+    // either (workers beyond the cell list just find it drained).
+    let parallel = if sweep::hardware_threads() >= 4 { 4 } else { 2 };
+    assert_eq!(serial, sweep_snapshot(parallel), "threads={parallel}");
+    assert_eq!(serial, sweep_snapshot(2), "threads=2");
+    assert_eq!(serial, sweep_snapshot(64), "threads=64 (oversubscribed)");
+}
+
+#[test]
+fn worker_scheduling_cannot_perturb_per_cell_rng_streams() {
+    // Seed-ordering pin: every cell derives its RNG with
+    // split_seed(stream, cell_id). The resulting draw sequence must be
+    // a function of the cell alone — equal across worker counts, equal
+    // when the cell runs in a different submission slot, and equal when
+    // the cell runs in a sweep of one.
+    let draws = |cell: u64| -> Vec<u64> {
+        let mut rng = Rng::seed_from_u64(split_seed(0x5EED, cell));
+        (0..32).map(|_| rng.next_u64()).collect()
+    };
+    let cells: Vec<u64> = (0..24).collect();
+    let run = |threads: usize, order: &[u64]| -> Vec<Vec<u64>> {
+        sweep(order, threads, |_, &c| draws(c))
+    };
+    let serial = run(1, &cells);
+    for threads in [2usize, 4, 8] {
+        assert_eq!(serial, run(threads, &cells), "threads={threads}");
+    }
+    // Solo runs reproduce in-sweep values: no cross-cell contamination.
+    for k in [0usize, 11, 23] {
+        let solo = run(4, &cells[k..=k]);
+        assert_eq!(solo[0], serial[k], "cell {k} depends on sweep context");
+    }
+    // Permuted submission: results permute with the cells (slot i holds
+    // f(cells[i]), never a scheduling-dependent value).
+    let reversed: Vec<u64> = cells.iter().rev().copied().collect();
+    let rev_results = run(4, &reversed);
+    for (i, &c) in reversed.iter().enumerate() {
+        assert_eq!(rev_results[i], serial[c as usize], "slot {i}");
+    }
+}
+
+#[test]
+fn janus_threads_env_is_parsed_not_trusted_blindly() {
+    // resolve_threads: explicit wins over everything and is clamped to
+    // ≥ 1; the environment fallback path is covered by the CI matrix
+    // (JANUS_THREADS=2 / unset), not mutated here — tests share one
+    // process environment.
+    assert_eq!(sweep::resolve_threads(Some(7)), 7);
+    assert!(sweep::resolve_threads(Some(0)) >= 1);
+    assert!(sweep::resolve_threads(None) >= 1);
+}
