@@ -16,12 +16,18 @@
 //! measurement still runs — and is recorded — on smaller machines; only
 //! the assertion is skipped).
 //!
+//! The admission subsystem's hot path is measured too: one
+//! offer → admit → advance decode-loop cycle at a full batch, under the
+//! FIFO and KV-aware policies, with the KvAware-vs-FIFO overhead
+//! asserted ≤ 10% (the KV accounting and class queues must stay noise
+//! next to the per-slot bookkeeping both policies share).
+//!
 //! Besides the human-readable report, this bench (re)writes the
 //! machine-readable snapshot `BENCH_sim.json` at the repo root (schema
-//! `janus-bench-v2`: per-bench mean ns + steps/s, sweep worker counts,
-//! hardware threads, caller-supplied timestamp); CI uploads one such
-//! snapshot per run as an artifact, and that per-PR series of artifacts
-//! is the perf trajectory. The repo-root file is deliberately tracked:
+//! `janus-bench-v3`: per-bench mean ns + steps/s, sweep worker counts,
+//! admission-policy tags, hardware threads, caller-supplied timestamp);
+//! CI uploads one such snapshot per run as an artifact, and that per-PR
+//! series of artifacts is the perf trajectory. The repo-root file is deliberately tracked:
 //! a PR that touches the hot path is expected to refresh and commit it
 //! (one snapshot per PR), so the committed history doubles as the
 //! trajectory — local stray reruns are visible in `git status` by
@@ -35,13 +41,55 @@ use janus::config::hardware::paper_testbed;
 use janus::config::models;
 use janus::config::serving::Slo;
 use janus::routing::gate::ExpertPopularity;
+use janus::sim::admission::{
+    AdmissionConfig, AdmissionPolicy, AdmitOutcome, EngineCaps, InFlightBatch, PolicyKind, Queued,
+    StepBook,
+};
 use janus::sim::decode_sim::evaluate_fixed_batch;
 use janus::sim::sweep;
-use janus::util::bench::{bench, bench_cfg, write_bench_json, BenchRecord};
+use janus::util::bench::{bench, bench_cfg, write_bench_json, BenchRecord, BenchResult};
 use janus::util::rng::{split_seed, Rng};
 
 const FLOOR_STEPS_PER_S: f64 = 50_000.0;
 const SWEEP_SPEEDUP_FLOOR: f64 = 2.0;
+/// KvAware may cost at most 10% more than FIFO on the admission cycle.
+const ADMISSION_OVERHEAD_CEILING: f64 = 1.10;
+
+/// One admission decode-loop cycle, steady state: offer one request,
+/// run the policy's admit phase against a full batch, advance every
+/// slot one step. The per-slot bookkeeping both policies share
+/// dominates; the measurement isolates what the policy itself adds
+/// (class queues + KV accounting for KvAware vs one VecDeque for FIFO).
+fn bench_admission_cycle(kind: PolicyKind) -> BenchResult {
+    let cfg = AdmissionConfig::with_policy(kind);
+    let mut policy = cfg.build(256);
+    let mut batch = InFlightBatch::new();
+    let mut out = AdmitOutcome::new();
+    let mut book = StepBook::new();
+    let caps = EngineCaps {
+        batch_capacity: 64,
+        // Roomy budget: the ceiling compares policy bookkeeping, not a
+        // preemption storm (preemption correctness is pinned in tests).
+        kv_capacity_tokens: 1e12,
+        prefill_chunk: 64,
+    };
+    let mut rng = Rng::seed_from_u64(0xAD31);
+    let mix = cfg.class_mix;
+    let mut now = 0.0f64;
+    // 32-in/32-out requests at chunk 64: KvAware's one prefill cycle per
+    // request adds ~1/32 of residency vs FIFO, so the measured delta is
+    // the policy bookkeeping, not a different steady-state batch size.
+    bench(&format!("admission/decode-loop {}", kind.name()), || {
+        now += 0.01;
+        let class = mix.sample(&mut rng);
+        std::hint::black_box(policy.offer(Queued::fresh(now, class, 32, 32)));
+        out.clear();
+        policy.admit(now, &caps, &mut batch, &mut out);
+        book.clear();
+        batch.advance(caps.prefill_chunk, 0.01, &mut book);
+        std::hint::black_box(batch.len());
+    })
+}
 
 fn build_system(which: usize) -> Box<dyn ServingSystem> {
     build_eval_system(
@@ -150,6 +198,19 @@ fn main() {
     records.push(BenchRecord::from_result(&r));
     let (hits, misses) = janus.decision_cache_stats();
     println!("    decision cache: {hits} hits / {misses} misses");
+
+    println!("\nAdmission-policy hot path (offer + admit + advance, full batch)");
+    let fifo_cycle = bench_admission_cycle(PolicyKind::Fifo);
+    let kv_cycle = bench_admission_cycle(PolicyKind::KvAware);
+    records.push(BenchRecord::from_result(&fifo_cycle).with_policy("fifo"));
+    records.push(BenchRecord::from_result(&kv_cycle).with_policy("kv"));
+    let overhead = kv_cycle.mean_ns / fifo_cycle.mean_ns;
+    println!("    -> KvAware / FIFO admission-cycle ratio: {overhead:.3}x");
+    assert!(
+        overhead <= ADMISSION_OVERHEAD_CEILING,
+        "KvAware admission cycle {overhead:.3}x over FIFO exceeds the \
+         {ADMISSION_OVERHEAD_CEILING:.2}x ceiling"
+    );
 
     println!("\nParallel sweep engine: figures-grid wall time by worker count");
     println!("({hw_threads} hardware threads on this machine)");

@@ -231,6 +231,39 @@ impl ServingSystem for JanusSystem {
         (per_instance * n_attn as f64).max(0.0) as usize
     }
 
+    fn kv_capacity_tokens(&self) -> f64 {
+        // Same attention-side memory model as `batch_capacity`, counted
+        // in tokens: every per-instance batch slot holds an average
+        // s_ctx-token KV cache.
+        let n_attn = self.deployment.map(|d| d.n_attn).unwrap_or(0);
+        let per_instance = self
+            .scaler
+            .mem
+            .max_local_batch(self.s_ctx, &self.scaler.hw.gpu);
+        (per_instance * n_attn as f64 * self.s_ctx).max(0.0)
+    }
+
+    fn prefill_cost(&mut self, tokens: u32) -> f64 {
+        if tokens == 0 {
+            return 0.0;
+        }
+        match self.deployment {
+            // Price the chunk through Janus's own latency model: one
+            // step at batch = tokens, with the â_max table's estimate
+            // for that batch (deterministic closed-form lookup — no RNG,
+            // so the decode streams are untouched).
+            Some(d) => {
+                let b = tokens as f64;
+                let a = self.scaler.amax.lookup(d.n_moe, b).round().max(1.0) as u32;
+                self.scaler
+                    .tpot_model
+                    .tpot_with(&mut self.comm_scratch, b, d.n_attn, d.n_moe, self.s_ctx, a)
+                    .tpot
+            }
+            None => tokens as f64 * 5e-6,
+        }
+    }
+
     fn label(&self) -> String {
         self.deployment
             .map(|d| d.label())

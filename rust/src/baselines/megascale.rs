@@ -339,6 +339,24 @@ impl ServingSystem for MegaScaleInfer {
         (per_instance * n_attn as f64).max(0.0) as usize
     }
 
+    fn kv_capacity_tokens(&self) -> f64 {
+        let n_attn = self.deployment.map(|d| d.n_attn).unwrap_or(0);
+        let per_instance = self.mem.max_local_batch(self.s_ctx, &self.hw.gpu);
+        (per_instance * n_attn as f64 * self.s_ctx).max(0.0)
+    }
+
+    fn prefill_cost(&mut self, tokens: u32) -> f64 {
+        if tokens == 0 {
+            return 0.0;
+        }
+        match self.deployment {
+            // One step of this system's own latency model at batch =
+            // tokens (â_max via the deterministic table lookup).
+            Some(d) => self.tpot_at(tokens as f64, d),
+            None => tokens as f64 * 5e-6,
+        }
+    }
+
     fn label(&self) -> String {
         self.deployment
             .map(|d| d.label())

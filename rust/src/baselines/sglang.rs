@@ -318,6 +318,25 @@ impl ServingSystem for SgLang {
         self.tier_b_max(self.gpus.max(TIERS[0])).max(0.0) as usize
     }
 
+    fn kv_capacity_tokens(&self) -> f64 {
+        // The same tier memory budget counted in tokens: each batch
+        // slot of `tier_b_max` holds an s_ctx-token cache.
+        (self.tier_b_max(self.gpus.max(TIERS[0])) * self.s_ctx).max(0.0)
+    }
+
+    fn prefill_cost(&mut self, tokens: u32) -> f64 {
+        if tokens == 0 {
+            return 0.0;
+        }
+        // One tier step at batch = tokens with the static-EP saturated
+        // a_max estimate (deterministic — the sampled estimate would
+        // draw RNG, which admission costing must not).
+        let gpus = self.gpus.max(TIERS[0]);
+        let per_gpu = self.model.experts.div_ceil(gpus);
+        let activated = (tokens as usize * self.model.top_k).min(per_gpu).max(1) as u32;
+        self.tier_tpot(gpus, tokens as f64, activated)
+    }
+
     fn label(&self) -> String {
         format!("{}G", self.gpus)
     }

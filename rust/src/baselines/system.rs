@@ -55,6 +55,28 @@ pub trait ServingSystem {
     /// nothing is deployed yet (the engine clamps to at least 1).
     fn batch_capacity(&self) -> usize;
 
+    /// KV token capacity of the current deployment: how many tokens of
+    /// KV cache (prompt + generated context across all in-flight
+    /// requests) the serving side can hold. Derived from the same
+    /// memory model as [`Self::batch_capacity`] (which assumes every
+    /// request holds an average-context cache); the KV-aware admission
+    /// policy accounts occupancy token-by-token against this instead.
+    /// Default: the batch capacity at a 512-token average context.
+    fn kv_capacity_tokens(&self) -> f64 {
+        self.batch_capacity() as f64 * 512.0
+    }
+
+    /// Estimated seconds to process `tokens` prompt (prefill) tokens
+    /// under the current configuration — the cost the engine charges
+    /// when chunked prefill runs alongside a decode step. Must be a
+    /// deterministic pure function of configuration state (no RNG, no
+    /// wall clock) and 0 for 0 tokens. Implementations price it through
+    /// their own latency model (one step at batch = `tokens`); the
+    /// default is a flat per-token estimate.
+    fn prefill_cost(&mut self, tokens: u32) -> f64 {
+        tokens as f64 * 5e-6
+    }
+
     /// Current configuration label.
     fn label(&self) -> String;
 

@@ -1,8 +1,15 @@
 //! Regenerates every table and figure of the paper's evaluation.
 //!
-//! Usage: `figures <id> [--steps N] [--seed S] [--threads N]`, where
-//! `<id>` is one of `table1 table2 fig1 fig2 fig3 fig4 fig8 fig9 fig10
-//! fig11 fig12 fig13 fig14 fig15 fig16 fig17 all`.
+//! Usage: `figures <id> [--steps N] [--seed S] [--threads N]
+//! [--cells SUBSTR]`, where `<id>` is one of `table1 table2 fig1 fig2
+//! fig3 fig4 fig8 fig9 fig10 fig11 fig12 fig13 fig14 fig15 fig16 fig17
+//! admission all`.
+//!
+//! `--cells SUBSTR` regenerates only the sweep cells whose label
+//! contains SUBSTR in panels built on labeled cells (currently the
+//! `admission` panel, e.g. `--cells kv`): because every cell is a pure
+//! function of (index, cell), the filtered rows are byte-identical to
+//! the corresponding rows of a full run (pinned in `sim::sweep`).
 //!
 //! Each subcommand prints the same rows/series the paper reports (see
 //! DESIGN.md's per-experiment index and EXPERIMENTS.md for the recorded
@@ -38,9 +45,11 @@ use janus::routing::gate::{ExpertPopularity, GateSim};
 use janus::routing::trace::ActivationTrace;
 use janus::scaling::{amax_bound, AmaxTable, Scaler};
 use janus::scheduler::{self, aebs};
+use janus::sim::admission::{AdmissionConfig, PolicyKind, Priority};
 use janus::sim::autoscale_sim::AutoscaleSim;
 use janus::sim::decode_sim::evaluate_fixed_batch;
-use janus::sim::sweep;
+use janus::sim::engine::{AutoscaleScenario, Scenario, ScenarioOutcome};
+use janus::sim::sweep::{self, SweepCell};
 use janus::util::cli::Args;
 use janus::util::rng::{split_seed, Rng};
 use janus::util::table::{fnum, Table};
@@ -97,6 +106,7 @@ fn main() {
         ("fig17", fig17, false),
         ("hetero", hetero, false),
         ("pipelining", pipelining, false),
+        ("admission", admission, false),
     ];
     if which == "all" {
         // Panel-level sweep: each non-timing panel is one cell rendering
@@ -1059,6 +1069,91 @@ fn hetero(_: &Args, threads: usize, out: &mut String) {
     wl!(out, "silicon; monolithic designs cannot exploit this split.");
 }
 
+
+// --------------------------------------- extension: admission policies
+
+/// Per-class SLO-attainment panel for the `sim::admission` subsystem:
+/// the four serving systems under an overload ramp, once per admission
+/// policy (FIFO / SLO-class / KV-aware), drained through the sweep
+/// engine as labeled cells. `--cells SUBSTR` regenerates only matching
+/// cells (e.g. `--cells janus`, `--cells /kv`) — filtered rows are
+/// byte-identical to the corresponding rows of a full run.
+fn admission(args: &Args, threads: usize, out: &mut String) {
+    wl!(out, "Admission policies under an overload ramp (4 -> 24 req/s, 64");
+    wl!(out, "tok/req): per-class TTFT attainment (1 s target), token SLO");
+    wl!(out, "attainment, and flow counters, per system x policy.");
+    wl!(out, "(--cells SUBSTR regenerates matching cells only.)\n");
+    let model = models::deepseek_v2();
+    let hw = paper_testbed();
+    let pop = eval_popularity();
+    let trace = DiurnalTrace::ramp(240.0 / 3600.0, 30.0, 4.0, 24.0, 777);
+    const SYSTEMS: usize = janus::baselines::EVAL_SYSTEMS;
+    let names = ["janus", "sglang", "msi", "xds"];
+    let cells: Vec<SweepCell> = (0..SYSTEMS)
+        .flat_map(|s| PolicyKind::ALL.into_iter().map(move |p| (s, p)))
+        .map(|(s, policy)| {
+            let mut sc = AutoscaleScenario::new(60.0, 64.0, Slo::from_ms(200.0), trace.clone());
+            sc.admission = AdmissionConfig::with_policy(policy);
+            SweepCell {
+                label: format!("{}/{}", names[s], policy.name()),
+                build: Box::new({
+                    let (model, hw, pop) = (model.clone(), hw.clone(), pop.clone());
+                    move || build_eval_system(s, model.clone(), hw.clone(), &pop)
+                }),
+                scenario: Scenario::Autoscale(sc),
+                seed: 4242,
+            }
+        })
+        .collect();
+    let results = sweep::run_cells_filtered(&cells, threads, args.get("cells"));
+    if results.is_empty() {
+        wl!(out, "(no cells match --cells filter)");
+        return;
+    }
+    let mut t = Table::new([
+        "cell",
+        "class",
+        "TTFT att",
+        "TPOT att",
+        "admitted",
+        "rejected",
+        "preempted",
+        "completed",
+    ]);
+    let mut s = Table::new([
+        "cell", "steps", "generated", "preemptions", "agg SLO att", "TTFT p99 ms",
+    ]);
+    for cell in &results {
+        let r = match &cell.outcome {
+            Ok(ScenarioOutcome::Autoscale(r)) => r,
+            other => panic!("unexpected outcome {other:?}"),
+        };
+        for class in Priority::ALL {
+            let c = &r.per_class[class.rank()];
+            t.row([
+                cell.label.clone(),
+                class.name().to_string(),
+                fnum(c.ttft_attainment(), 3),
+                fnum(c.token_attainment(), 3),
+                c.admitted.to_string(),
+                c.rejected.to_string(),
+                c.preempted.to_string(),
+                c.completed.to_string(),
+            ]);
+        }
+        s.row([
+            cell.label.clone(),
+            r.steps.to_string(),
+            r.generated_tokens.to_string(),
+            r.preemptions.to_string(),
+            fnum(r.slo_attainment, 3),
+            fnum(r.ttft_p99 * 1e3, 1),
+        ]);
+    }
+    out.push_str(&t.render());
+    wl!(out);
+    out.push_str(&s.render());
+}
 
 // --------------------------------------------- extension: §6 pipelining
 

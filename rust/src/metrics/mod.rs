@@ -1,6 +1,7 @@
 //! Serving metrics (§5.1): TPOT (mean/P99), per-GPU throughput (TPG),
-//! SLO attainment, GPU-hours for the autoscaling comparison, and
-//! weighted latency distributions for the arrival-driven decode loop.
+//! SLO attainment, GPU-hours for the autoscaling comparison, weighted
+//! latency distributions for the arrival-driven decode loop, and
+//! per-SLO-class flow/attainment counters for the admission subsystem.
 
 use std::cell::RefCell;
 
@@ -210,6 +211,53 @@ impl WeightedLatency {
     }
 }
 
+/// Per-SLO-class flow and attainment counters for the admission
+/// subsystem (`sim::admission`). One instance per class, indexed by
+/// `workload::classes::Priority::rank` in the engine's result arrays.
+/// All counters are exact integers so per-class rows snapshot cleanly
+/// into the golden files; attainments derive on demand.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ClassStats {
+    /// Requests admitted into the decode batch (fresh admissions only —
+    /// a preempted request re-entering the batch is counted in
+    /// `preempted`, not again here).
+    pub admitted: u64,
+    /// Requests that emitted their full output.
+    pub completed: u64,
+    /// Arrivals dropped because the bounded admission queue was full.
+    pub rejected: u64,
+    /// Decodes preempted out of the batch under KV pressure.
+    pub preempted: u64,
+    /// Requests that emitted their first output token.
+    pub first_tokens: u64,
+    /// Of those, how many within the TTFT SLO.
+    pub ttft_ok: u64,
+    /// Decode tokens generated for this class.
+    pub tokens: u64,
+    /// Of those, how many in steps within the TPOT SLO.
+    pub tokens_ok: u64,
+}
+
+impl ClassStats {
+    /// Fraction of first tokens within the TTFT SLO (1.0 when none).
+    pub fn ttft_attainment(&self) -> f64 {
+        if self.first_tokens == 0 {
+            1.0
+        } else {
+            self.ttft_ok as f64 / self.first_tokens as f64
+        }
+    }
+
+    /// Fraction of decode tokens within the TPOT SLO (1.0 when none).
+    pub fn token_attainment(&self) -> f64 {
+        if self.tokens == 0 {
+            1.0
+        } else {
+            self.tokens_ok as f64 / self.tokens as f64
+        }
+    }
+}
+
 /// Throughput-per-GPU (tokens/s/GPU).
 pub fn tpg(total_output_tokens: f64, wall_seconds: f64, gpus: usize) -> f64 {
     if wall_seconds <= 0.0 || gpus == 0 {
@@ -332,6 +380,19 @@ mod tests {
         }
         assert_eq!(t.p99(), t_fresh.p99());
         assert_eq!(t.percentile(37.5), t_fresh.percentile(37.5));
+    }
+
+    #[test]
+    fn class_stats_attainments() {
+        let mut c = ClassStats::default();
+        assert_eq!(c.ttft_attainment(), 1.0);
+        assert_eq!(c.token_attainment(), 1.0);
+        c.first_tokens = 4;
+        c.ttft_ok = 3;
+        c.tokens = 100;
+        c.tokens_ok = 99;
+        assert!((c.ttft_attainment() - 0.75).abs() < 1e-12);
+        assert!((c.token_attainment() - 0.99).abs() < 1e-12);
     }
 
     #[test]

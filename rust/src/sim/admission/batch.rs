@@ -1,0 +1,314 @@
+//! The in-flight batch the admission policies schedule into.
+//!
+//! One [`Slot`] per resident request. A slot is either *prefilling*
+//! (`prefill_remaining > 0`: its prompt KV is being built chunk by
+//! chunk, it occupies a batch slot but emits no tokens) or *decoding*
+//! (one output token per step). KV occupancy is accounted per slot —
+//! prompt KV materializes as prefill chunks are processed, decode KV
+//! grows one token per emitted token — so the `KvAware` policy can make
+//! preemption decisions against the serving system's KV capacity.
+//!
+//! Migration-safety note: with the `Fifo` policy every join is a pure
+//! decode join (`prefill_remaining == 0`), `advance` performs exactly
+//! the decrement-and-compact pass the pre-subsystem engine ran, and the
+//! TTFT arithmetic (`wait_delay + in_service`) reproduces the legacy
+//! `delay + tpot` float operations bit for bit (`service_elapsed` is
+//! exactly `0.0` on a join step, and `0.0 + t == t` for every positive
+//! `t`).
+
+use crate::workload::classes::Priority;
+
+use super::policy::Queued;
+
+/// One resident request.
+#[derive(Clone, Copy, Debug)]
+pub struct Slot {
+    /// Original arrival time (preserved across preemption).
+    pub arrived: f64,
+    /// Queue wait measured at join time (`join_time - arrival_time`).
+    pub wait_delay: f64,
+    /// Seconds of batch residency accumulated before the current step
+    /// (prefill chunks execute here; exactly 0.0 on the join step).
+    pub service_elapsed: f64,
+    pub class: Priority,
+    /// Prompt length (for KV-recompute charging on preemption).
+    pub input_tokens: u32,
+    /// Prefill tokens still to process before decoding starts.
+    pub prefill_remaining: u32,
+    /// Output tokens still to emit.
+    pub remaining_output: u32,
+    /// KV tokens currently resident for this request.
+    pub kv_tokens: u32,
+    /// Whether the first output token was already recorded (carried
+    /// across preemption so TTFT is never double-counted).
+    pub emitted_first: bool,
+    /// Admission sequence number: deterministic preemption tie-breaker
+    /// (equal-class victims preempt newest-first).
+    pub seq: u64,
+}
+
+/// Per-step bookkeeping produced by [`InFlightBatch::advance`], in slot
+/// (= admission) order. Buffers are reused across steps.
+#[derive(Debug, Default)]
+pub struct StepBook {
+    /// `(ttft_seconds, class)` for every slot that emitted its first
+    /// output token this step.
+    pub first_tokens: Vec<(f64, Priority)>,
+    /// Class of every request that completed this step.
+    pub completed: Vec<Priority>,
+    /// Decode tokens emitted this step, per class rank.
+    pub decode_tokens: [u64; crate::workload::classes::NUM_CLASSES],
+}
+
+impl StepBook {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn clear(&mut self) {
+        self.first_tokens.clear();
+        self.completed.clear();
+        self.decode_tokens = [0; crate::workload::classes::NUM_CLASSES];
+    }
+}
+
+/// The in-flight request batch, in admission order.
+#[derive(Debug, Default)]
+pub struct InFlightBatch {
+    slots: Vec<Slot>,
+    /// Total resident KV tokens (kept in sync with the slots).
+    kv_tokens: u64,
+    /// Prefill tokens not yet processed across all slots: KV that is
+    /// committed but not yet resident (chunked joins materialize it
+    /// chunk by chunk).
+    prefill_outstanding: u64,
+    next_seq: u64,
+}
+
+impl InFlightBatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn slots(&self) -> &[Slot] {
+        &self.slots
+    }
+
+    /// Resident KV tokens across all slots.
+    pub fn kv_tokens(&self) -> f64 {
+        self.kv_tokens as f64
+    }
+
+    /// Committed KV tokens: resident plus the outstanding prefill that
+    /// will materialize as chunks are processed. Admission headroom
+    /// checks use this, so two long prompts cannot both slip in while
+    /// neither's KV is resident yet.
+    pub fn kv_reserved(&self) -> f64 {
+        (self.kv_tokens + self.prefill_outstanding) as f64
+    }
+
+    /// Slots currently decoding (prefill drained).
+    pub fn decoding_count(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| s.prefill_remaining == 0)
+            .count()
+    }
+
+    /// Prefill tokens the next step will process at chunk size `chunk`.
+    pub fn pending_prefill_tokens(&self, chunk: u32) -> u32 {
+        self.slots
+            .iter()
+            .map(|s| s.prefill_remaining.min(chunk))
+            .sum()
+    }
+
+    /// Join a request. `prefill_remaining > 0` means chunked prefill
+    /// (the KV materializes as chunks are processed); `0` means the
+    /// legacy instant-prefill join, whose prompt KV counts immediately.
+    pub fn join(&mut self, req: &Queued, now: f64, prefill_remaining: u32) {
+        // Instant-prefill joins count their full context KV immediately;
+        // chunked joins start at whatever the chunks have not yet built
+        // (a re-admitted request rebuilds its whole context through
+        // chunks, so this is 0 when prefill_remaining covers it all).
+        let kv_tokens = req
+            .input_tokens
+            .max(req.recompute_tokens)
+            .saturating_sub(prefill_remaining);
+        self.kv_tokens += kv_tokens as u64;
+        self.prefill_outstanding += prefill_remaining as u64;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.slots.push(Slot {
+            arrived: req.arrived,
+            wait_delay: now - req.arrived,
+            service_elapsed: 0.0,
+            class: req.class,
+            input_tokens: req.input_tokens,
+            prefill_remaining,
+            remaining_output: req.remaining_output.max(1),
+            kv_tokens,
+            emitted_first: req.emitted_first,
+            seq,
+        });
+    }
+
+    /// Deterministic preemption victim under KV pressure: among
+    /// *decoding* slots, the lowest class (max rank), newest admission
+    /// (max seq) — so latency-sensitive and long-resident work survives.
+    /// Returns the removed slot; `None` when nothing is decoding.
+    pub fn preempt_victim(&mut self) -> Option<Slot> {
+        let idx = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.prefill_remaining == 0)
+            .max_by_key(|(_, s)| (s.class.rank(), s.seq))
+            .map(|(i, _)| i)?;
+        let slot = self.slots.remove(idx);
+        self.kv_tokens -= slot.kv_tokens as u64;
+        self.prefill_outstanding -= slot.prefill_remaining as u64;
+        Some(slot)
+    }
+
+    /// One engine step of duration `step_time`: prefilling slots consume
+    /// one `chunk` of prompt tokens (KV grows by the chunk), decoding
+    /// slots emit one token (KV grows by one) and leave when their
+    /// output is done. Order-preserving single pass; bookkeeping lands
+    /// in `book` in slot order. Returns the number of completions.
+    pub fn advance(&mut self, chunk: u32, step_time: f64, book: &mut StepBook) -> usize {
+        let kv = &mut self.kv_tokens;
+        let outstanding = &mut self.prefill_outstanding;
+        let before = self.slots.len();
+        self.slots.retain_mut(|slot| {
+            if slot.prefill_remaining > 0 {
+                let processed = slot.prefill_remaining.min(chunk);
+                slot.prefill_remaining -= processed;
+                slot.kv_tokens += processed;
+                *kv += processed as u64;
+                *outstanding -= processed as u64;
+                slot.service_elapsed += step_time;
+                return true;
+            }
+            if !slot.emitted_first {
+                slot.emitted_first = true;
+                let in_service = slot.service_elapsed + step_time;
+                book.first_tokens.push((slot.wait_delay + in_service, slot.class));
+            }
+            book.decode_tokens[slot.class.rank()] += 1;
+            slot.kv_tokens += 1;
+            *kv += 1;
+            slot.remaining_output -= 1;
+            if slot.remaining_output == 0 {
+                *kv -= slot.kv_tokens as u64;
+                book.completed.push(slot.class);
+                return false;
+            }
+            slot.service_elapsed += step_time;
+            true
+        });
+        before - self.slots.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::admission::policy::Queued;
+
+    fn fresh(arrived: f64, class: Priority, input: u32, output: u32) -> Queued {
+        Queued::fresh(arrived, class, input, output)
+    }
+
+    #[test]
+    fn decode_join_matches_legacy_decrement_and_compact() {
+        let mut b = InFlightBatch::new();
+        let mut book = StepBook::new();
+        b.join(&fresh(0.0, Priority::Standard, 16, 2), 1.0, 0);
+        b.join(&fresh(0.5, Priority::Standard, 16, 1), 1.0, 0);
+        assert_eq!(b.decoding_count(), 2);
+        assert_eq!(b.pending_prefill_tokens(64), 0);
+        // Step 1: both emit; the 1-token request completes.
+        let done = b.advance(64, 0.05, &mut book);
+        assert_eq!(done, 1);
+        assert_eq!(b.len(), 1);
+        assert_eq!(book.first_tokens.len(), 2);
+        // Legacy TTFT arithmetic: wait + one step, bit-exact.
+        let (ttft0, _) = book.first_tokens[0];
+        assert_eq!(ttft0.to_bits(), ((1.0 - 0.0) + 0.05f64).to_bits());
+        book.clear();
+        let done = b.advance(64, 0.05, &mut book);
+        assert_eq!(done, 1);
+        assert!(b.is_empty());
+        assert_eq!(book.first_tokens.len(), 0, "first token only once");
+    }
+
+    #[test]
+    fn chunked_prefill_delays_first_token_and_grows_kv() {
+        let mut b = InFlightBatch::new();
+        let mut book = StepBook::new();
+        // 100-token prompt at chunk 64: two prefill steps, then decode.
+        b.join(&fresh(0.0, Priority::Interactive, 100, 3), 0.0, 100);
+        assert_eq!(b.kv_tokens(), 0.0);
+        assert_eq!(b.decoding_count(), 0);
+        assert_eq!(b.pending_prefill_tokens(64), 64);
+        b.advance(64, 0.1, &mut book);
+        assert_eq!(b.kv_tokens(), 64.0);
+        assert!(book.first_tokens.is_empty());
+        b.advance(64, 0.1, &mut book);
+        assert_eq!(b.kv_tokens(), 100.0);
+        assert_eq!(b.decoding_count(), 1);
+        book.clear();
+        b.advance(64, 0.1, &mut book);
+        assert_eq!(book.first_tokens.len(), 1);
+        // TTFT = wait (0) + two prefill steps + the decode step.
+        let (ttft, class) = book.first_tokens[0];
+        assert!((ttft - 0.3).abs() < 1e-12, "{ttft}");
+        assert_eq!(class, Priority::Interactive);
+        assert_eq!(b.kv_tokens(), 101.0);
+    }
+
+    #[test]
+    fn preemption_picks_lowest_class_newest_and_releases_kv() {
+        let mut b = InFlightBatch::new();
+        b.join(&fresh(0.0, Priority::Interactive, 10, 5), 0.0, 0);
+        b.join(&fresh(0.0, Priority::Batch, 20, 5), 0.0, 0);
+        b.join(&fresh(0.0, Priority::Batch, 30, 5), 0.0, 0);
+        // Still-prefilling slots are never victims.
+        b.join(&fresh(0.0, Priority::Batch, 40, 5), 0.0, 40);
+        let kv_before = b.kv_tokens();
+        let v = b.preempt_victim().expect("victim");
+        assert_eq!(v.class, Priority::Batch);
+        assert_eq!(v.input_tokens, 30, "newest batch-class decode loses");
+        assert_eq!(b.kv_tokens(), kv_before - 30.0);
+        let v2 = b.preempt_victim().expect("victim");
+        assert_eq!(v2.input_tokens, 20);
+        let v3 = b.preempt_victim().expect("victim");
+        assert_eq!(v3.class, Priority::Interactive);
+        assert!(b.preempt_victim().is_none(), "prefilling slot not preemptible");
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn kv_accounting_stays_consistent() {
+        let mut b = InFlightBatch::new();
+        let mut book = StepBook::new();
+        b.join(&fresh(0.0, Priority::Standard, 8, 2), 0.0, 0);
+        b.join(&fresh(0.0, Priority::Standard, 12, 1), 0.0, 12);
+        for _ in 0..6 {
+            book.clear();
+            b.advance(4, 0.01, &mut book);
+            let per_slot: u64 = b.slots().iter().map(|s| s.kv_tokens as u64).sum();
+            assert_eq!(per_slot as f64, b.kv_tokens());
+        }
+        assert!(b.is_empty());
+    }
+}

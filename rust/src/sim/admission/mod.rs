@@ -1,0 +1,202 @@
+//! `sim::admission` — SLO-class admission scheduling for the
+//! arrival-driven scenarios.
+//!
+//! The engine's arrival path used to be one inline FIFO `VecDeque`:
+//! every request identical, no notion of class, prefill cost, or KV
+//! pressure. This subsystem replaces it with a pluggable
+//! [`AdmissionPolicy`] and three deterministic implementations:
+//!
+//! - [`Fifo`] — bit-identical to the legacy inline queue (same pop
+//!   order, same float operations), the migration-safety baseline the
+//!   golden snapshots pin.
+//! - [`SloClass`] — requests carry a [`Priority`] sampled from the
+//!   workload's seeded [`ClassMix`]; higher classes are admitted first,
+//!   with bounded starvation via deterministic aging (one priority
+//!   level per [`AdmissionConfig::aging_secs`] seconds waited).
+//! - [`KvAware`] — chunked prefill co-scheduled alongside decode,
+//!   KV-occupancy accounting against the serving system's
+//!   [`crate::baselines::ServingSystem::kv_capacity_tokens`], and
+//!   preemption of the lowest-class/newest decode under KV pressure
+//!   (victims re-enter the queue with their lost context charged as
+//!   recompute prefill).
+//!
+//! Determinism: admission decisions are pure functions of simulated
+//! engine state plus seeded draws (the class stamp); preemption ties
+//! break on the explicit `(class rank, admission seq)` order. Same seed
+//! ⇒ bit-identical runs under every policy, for any thread count.
+//!
+//! Policy selection: scenarios default to [`AdmissionConfig::from_env`],
+//! which reads `JANUS_ADMISSION` (`fifo` / `slo` / `kv`, CI's admission
+//! matrix sets it) and falls back to FIFO. Surfaces that pin golden
+//! bytes (the fixed snapshots) construct [`AdmissionConfig::fifo`]
+//! explicitly instead.
+
+pub mod batch;
+pub mod policy;
+
+pub use batch::{InFlightBatch, Slot, StepBook};
+pub use policy::{
+    AdmissionPolicy, AdmitOutcome, EngineCaps, Fifo, JoinInfo, KvAware, Queued, SloClass,
+};
+
+pub use crate::workload::classes::{ClassMix, Priority, NUM_CLASSES};
+
+/// Environment variable selecting the default admission policy for
+/// scenarios that do not pin one (`fifo` | `slo` | `kv`).
+pub const ADMISSION_ENV: &str = "JANUS_ADMISSION";
+
+/// Which [`AdmissionPolicy`] implementation a scenario runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    Fifo,
+    SloClass,
+    KvAware,
+}
+
+impl PolicyKind {
+    pub const ALL: [PolicyKind; 3] = [PolicyKind::Fifo, PolicyKind::SloClass, PolicyKind::KvAware];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "fifo" => Some(PolicyKind::Fifo),
+            "slo" | "sloclass" | "slo-class" => Some(PolicyKind::SloClass),
+            "kv" | "kvaware" | "kv-aware" => Some(PolicyKind::KvAware),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Fifo => "fifo",
+            PolicyKind::SloClass => "slo",
+            PolicyKind::KvAware => "kv",
+        }
+    }
+}
+
+/// Admission configuration carried by the arrival-driven scenarios.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdmissionConfig {
+    pub policy: PolicyKind,
+    /// Seeded class mix arriving requests draw their [`Priority`] from.
+    /// The draw comes from a dedicated class RNG stream, so the FIFO
+    /// policy's arrival/decode streams are untouched by class sampling.
+    pub class_mix: ClassMix,
+    /// Starvation aging: a waiting request gains one priority level per
+    /// this many seconds (SloClass / KvAware head selection).
+    pub aging_secs: f64,
+    /// Chunk size for KvAware chunked prefill (tokens per step per
+    /// prefilling request).
+    pub prefill_chunk: u32,
+    /// TTFT target for the per-class attainment metrics (seconds).
+    pub ttft_slo: f64,
+}
+
+impl AdmissionConfig {
+    /// The legacy-equivalent FIFO configuration — what every golden
+    /// surface pins explicitly.
+    pub fn fifo() -> Self {
+        Self::with_policy(PolicyKind::Fifo)
+    }
+
+    pub fn with_policy(policy: PolicyKind) -> Self {
+        AdmissionConfig {
+            policy,
+            class_mix: ClassMix::default_mix(),
+            aging_secs: 30.0,
+            prefill_chunk: 64,
+            ttft_slo: 1.0,
+        }
+    }
+
+    /// Default for scenario constructors: policy from `JANUS_ADMISSION`
+    /// (unset/unparsable ⇒ FIFO), everything else at defaults.
+    pub fn from_env() -> Self {
+        let policy = std::env::var(ADMISSION_ENV)
+            .ok()
+            .and_then(|s| PolicyKind::parse(&s))
+            .unwrap_or(PolicyKind::Fifo);
+        Self::with_policy(policy)
+    }
+
+    /// Reject degenerate knobs (scenario `validate` surfaces these as a
+    /// [`crate::sim::engine::ScenarioError::InvalidAdmission`]).
+    pub fn validate(&self) -> Result<(), String> {
+        self.class_mix.validate()?;
+        if !self.aging_secs.is_finite() || self.aging_secs <= 0.0 {
+            return Err(format!(
+                "aging_secs must be positive finite seconds, got {}",
+                self.aging_secs
+            ));
+        }
+        if self.prefill_chunk == 0 {
+            return Err("prefill_chunk must be at least 1 token".to_string());
+        }
+        if !self.ttft_slo.is_finite() || self.ttft_slo <= 0.0 {
+            return Err(format!(
+                "ttft_slo must be positive finite seconds, got {}",
+                self.ttft_slo
+            ));
+        }
+        Ok(())
+    }
+
+    /// Build the policy for a run with the given bounded-queue capacity.
+    pub fn build(&self, queue_capacity: usize) -> Box<dyn AdmissionPolicy> {
+        match self.policy {
+            PolicyKind::Fifo => Box::new(Fifo::new(queue_capacity)),
+            PolicyKind::SloClass => Box::new(SloClass::new(queue_capacity, self.aging_secs)),
+            PolicyKind::KvAware => Box::new(KvAware::new(queue_capacity, self.aging_secs)),
+        }
+    }
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        Self::fifo()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_kind_parses_all_spellings() {
+        assert_eq!(PolicyKind::parse("fifo"), Some(PolicyKind::Fifo));
+        assert_eq!(PolicyKind::parse("SLO"), Some(PolicyKind::SloClass));
+        assert_eq!(PolicyKind::parse("slo-class"), Some(PolicyKind::SloClass));
+        assert_eq!(PolicyKind::parse("kv"), Some(PolicyKind::KvAware));
+        assert_eq!(PolicyKind::parse("kv-aware"), Some(PolicyKind::KvAware));
+        assert_eq!(PolicyKind::parse("nope"), None);
+        for kind in PolicyKind::ALL {
+            assert_eq!(PolicyKind::parse(kind.name()), Some(kind));
+        }
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(AdmissionConfig::fifo().validate().is_ok());
+        let mut c = AdmissionConfig::fifo();
+        c.aging_secs = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = AdmissionConfig::fifo();
+        c.prefill_chunk = 0;
+        assert!(c.validate().is_err());
+        let mut c = AdmissionConfig::fifo();
+        c.ttft_slo = f64::NAN;
+        assert!(c.validate().is_err());
+        let mut c = AdmissionConfig::fifo();
+        c.class_mix = ClassMix { weights: [0.0; 3] };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn build_dispatches_by_kind() {
+        for kind in PolicyKind::ALL {
+            let p = AdmissionConfig::with_policy(kind).build(8);
+            assert_eq!(p.name(), kind.name());
+            assert_eq!(p.queue_len(), 0);
+        }
+    }
+}

@@ -1,0 +1,522 @@
+//! The [`AdmissionPolicy`] trait and its three deterministic
+//! implementations.
+//!
+//! Determinism contract (shared with the engine): every admission
+//! decision is a pure function of simulated engine state — the current
+//! simulated time, the queue contents, the batch contents, and the
+//! [`EngineCaps`] snapshot. No wall-clock, no unseeded randomness; the
+//! only randomness a policy ever sees is the class already stamped on
+//! the request by the workload's seeded class mix. Ties break on
+//! explicit total orders (class rank, then admission/arrival sequence),
+//! so same-seed runs replay bit-identically under every policy.
+
+use std::collections::VecDeque;
+
+use crate::workload::classes::{Priority, NUM_CLASSES};
+
+use super::batch::InFlightBatch;
+
+/// A request waiting for admission.
+#[derive(Clone, Copy, Debug)]
+pub struct Queued {
+    /// Original arrival time (preserved across preemption).
+    pub arrived: f64,
+    pub class: Priority,
+    /// Prompt length (drives the chunked-prefill schedule).
+    pub input_tokens: u32,
+    /// Output tokens still to emit.
+    pub remaining_output: u32,
+    /// KV tokens to rebuild before decoding can resume (0 for fresh
+    /// arrivals; a preempted request re-enters with its lost context
+    /// charged here — the KV-recompute cost).
+    pub recompute_tokens: u32,
+    /// Whether the first output token was already emitted (preempted
+    /// requests keep it so TTFT is recorded exactly once).
+    pub emitted_first: bool,
+    /// False for re-admissions after preemption: they are not counted
+    /// as fresh admissions and record no admission delay.
+    pub fresh: bool,
+}
+
+impl Queued {
+    /// A fresh arrival.
+    pub fn fresh(arrived: f64, class: Priority, input_tokens: u32, output_tokens: u32) -> Self {
+        Queued {
+            arrived,
+            class,
+            input_tokens,
+            remaining_output: output_tokens.max(1),
+            recompute_tokens: 0,
+            emitted_first: false,
+            fresh: true,
+        }
+    }
+}
+
+/// Capacity snapshot the engine hands the policy each decode step.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineCaps {
+    /// Batch slots under the current deployment
+    /// ([`crate::baselines::ServingSystem::batch_capacity`], ≥ 1).
+    pub batch_capacity: usize,
+    /// KV token capacity of the current deployment
+    /// ([`crate::baselines::ServingSystem::kv_capacity_tokens`]).
+    pub kv_capacity_tokens: f64,
+    /// Prefill chunk size (tokens per step per prefilling request).
+    pub prefill_chunk: u32,
+}
+
+/// One fresh admission, for the engine's delay bookkeeping.
+#[derive(Clone, Copy, Debug)]
+pub struct JoinInfo {
+    /// Queue wait (join time − arrival time).
+    pub delay: f64,
+    pub class: Priority,
+}
+
+/// What one [`AdmissionPolicy::admit`] call did (buffers reused).
+#[derive(Debug, Default)]
+pub struct AdmitOutcome {
+    /// Fresh admissions, in join order.
+    pub joined: Vec<JoinInfo>,
+    /// Preemption victims' classes, in eviction order.
+    pub preempted: Vec<Priority>,
+    /// Preempted requests that re-entered the batch this call.
+    pub rejoined: usize,
+}
+
+impl AdmitOutcome {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn clear(&mut self) {
+        self.joined.clear();
+        self.preempted.clear();
+        self.rejoined = 0;
+    }
+}
+
+/// Pluggable admission: how arriving requests queue, and how queued
+/// requests (and, for KV-aware policies, preempted ones) move into the
+/// in-flight batch each decode step.
+pub trait AdmissionPolicy {
+    fn name(&self) -> &'static str;
+
+    /// An arrival asks to enter the bounded queue. `false` = rejected
+    /// (queue full). Re-queued preemption victims bypass this — they
+    /// were already admitted once and are never dropped.
+    fn offer(&mut self, req: Queued) -> bool;
+
+    /// Requests currently waiting.
+    fn queue_len(&self) -> usize;
+
+    /// The admission phase of one decode step at simulated time `now`:
+    /// fill free batch slots (and, for `KvAware`, first resolve KV
+    /// pressure by preempting). Everything done is reported in `out`.
+    fn admit(
+        &mut self,
+        now: f64,
+        caps: &EngineCaps,
+        batch: &mut InFlightBatch,
+        out: &mut AdmitOutcome,
+    );
+}
+
+// ------------------------------------------------------------------- fifo
+
+/// The migration-safety baseline: one bounded FIFO queue, join while
+/// batch slots are free, instant prefill. Bit-identical to the
+/// pre-subsystem engine (same pop order, same float ops — pinned by the
+/// golden snapshots).
+#[derive(Debug)]
+pub struct Fifo {
+    queue: VecDeque<Queued>,
+    capacity: usize,
+}
+
+impl Fifo {
+    pub fn new(queue_capacity: usize) -> Self {
+        Fifo {
+            queue: VecDeque::new(),
+            capacity: queue_capacity,
+        }
+    }
+}
+
+impl AdmissionPolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn offer(&mut self, req: Queued) -> bool {
+        if self.queue.len() < self.capacity {
+            self.queue.push_back(req);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn admit(
+        &mut self,
+        now: f64,
+        caps: &EngineCaps,
+        batch: &mut InFlightBatch,
+        out: &mut AdmitOutcome,
+    ) {
+        while batch.len() < caps.batch_capacity {
+            match self.queue.pop_front() {
+                Some(req) => {
+                    out.joined.push(JoinInfo {
+                        delay: now - req.arrived,
+                        class: req.class,
+                    });
+                    batch.join(&req, now, 0);
+                }
+                None => break,
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------- class queues
+
+/// Per-class FIFO queues with aged-priority head selection — the shared
+/// waiting structure of `SloClass` and `KvAware`.
+#[derive(Debug)]
+struct ClassQueues {
+    queues: [VecDeque<Queued>; NUM_CLASSES],
+    len: usize,
+    capacity: usize,
+    /// Starvation aging: one priority level per this many seconds
+    /// waited, so low classes are boosted deterministically instead of
+    /// starving behind a persistent high-class flood.
+    aging_secs: f64,
+}
+
+impl ClassQueues {
+    fn new(capacity: usize, aging_secs: f64) -> Self {
+        ClassQueues {
+            queues: Default::default(),
+            len: 0,
+            capacity,
+            aging_secs,
+        }
+    }
+
+    fn offer(&mut self, req: Queued) -> bool {
+        if self.len < self.capacity {
+            self.queues[req.class.rank()].push_back(req);
+            self.len += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Preemption re-entry: never rejected (the request was already
+    /// admitted once), re-queued at the back of its class.
+    fn requeue(&mut self, req: Queued) {
+        self.queues[req.class.rank()].push_back(req);
+        self.len += 1;
+    }
+
+    /// Class rank of the head with the lowest *effective* rank at
+    /// `now`: `rank − wait / aging_secs`, ties to the smaller nominal
+    /// rank (heads of distinct classes can never tie on (effective,
+    /// rank)). The single selection scan — peeking and popping both go
+    /// through it, so they can never disagree.
+    fn best_rank(&self, now: f64) -> Option<usize> {
+        let mut best: Option<(f64, usize)> = None;
+        for (rank, q) in self.queues.iter().enumerate() {
+            if let Some(head) = q.front() {
+                let effective = rank as f64 - (now - head.arrived) / self.aging_secs;
+                let better = match best {
+                    None => true,
+                    Some((b, _)) => effective < b,
+                };
+                if better {
+                    best = Some((effective, rank));
+                }
+            }
+        }
+        best.map(|(_, rank)| rank)
+    }
+
+    /// The head of class `rank` (as returned by [`Self::best_rank`]).
+    fn front(&self, rank: usize) -> Option<&Queued> {
+        self.queues[rank].front()
+    }
+
+    /// Pop the head of class `rank`.
+    fn pop_rank(&mut self, rank: usize) -> Option<Queued> {
+        let req = self.queues[rank].pop_front();
+        if req.is_some() {
+            self.len -= 1;
+        }
+        req
+    }
+
+    /// Pop the overall best head at `now` (see [`Self::best_rank`]).
+    fn pop_best(&mut self, now: f64) -> Option<Queued> {
+        let rank = self.best_rank(now)?;
+        self.pop_rank(rank)
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
+// -------------------------------------------------------------- sloclass
+
+/// SLO-class scheduling: per-class FIFO queues; higher classes join the
+/// batch first, with bounded starvation via deterministic aging.
+/// Prefill stays instant (the KV-aware policy owns chunking).
+#[derive(Debug)]
+pub struct SloClass {
+    queues: ClassQueues,
+}
+
+impl SloClass {
+    pub fn new(queue_capacity: usize, aging_secs: f64) -> Self {
+        SloClass {
+            queues: ClassQueues::new(queue_capacity, aging_secs),
+        }
+    }
+}
+
+impl AdmissionPolicy for SloClass {
+    fn name(&self) -> &'static str {
+        "slo"
+    }
+
+    fn offer(&mut self, req: Queued) -> bool {
+        self.queues.offer(req)
+    }
+
+    fn queue_len(&self) -> usize {
+        self.queues.len()
+    }
+
+    fn admit(
+        &mut self,
+        now: f64,
+        caps: &EngineCaps,
+        batch: &mut InFlightBatch,
+        out: &mut AdmitOutcome,
+    ) {
+        while batch.len() < caps.batch_capacity {
+            match self.queues.pop_best(now) {
+                Some(req) => {
+                    out.joined.push(JoinInfo {
+                        delay: now - req.arrived,
+                        class: req.class,
+                    });
+                    batch.join(&req, now, 0);
+                }
+                None => break,
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------- kv-aware
+
+/// KV-aware chunked-prefill admission: class-priority queues like
+/// [`SloClass`], plus
+///
+/// - **chunked prefill** — a joining request's prompt is processed in
+///   `prefill_chunk`-token chunks co-scheduled alongside decode steps,
+///   so a long prompt no longer stalls the whole batch;
+/// - **KV-occupancy admission** — a request only joins while the
+///   deployment's KV capacity has room for its prompt (head-of-line
+///   blocking is broken when the batch is empty so progress is always
+///   possible);
+/// - **preemption** — when resident KV exceeds capacity (decode KV
+///   growth), the lowest-class, newest decode is evicted and re-enters
+///   the queue with its lost context charged as recompute prefill.
+#[derive(Debug)]
+pub struct KvAware {
+    queues: ClassQueues,
+}
+
+impl KvAware {
+    pub fn new(queue_capacity: usize, aging_secs: f64) -> Self {
+        KvAware {
+            queues: ClassQueues::new(queue_capacity, aging_secs),
+        }
+    }
+}
+
+impl AdmissionPolicy for KvAware {
+    fn name(&self) -> &'static str {
+        "kv"
+    }
+
+    fn offer(&mut self, req: Queued) -> bool {
+        self.queues.offer(req)
+    }
+
+    fn queue_len(&self) -> usize {
+        self.queues.len()
+    }
+
+    fn admit(
+        &mut self,
+        now: f64,
+        caps: &EngineCaps,
+        batch: &mut InFlightBatch,
+        out: &mut AdmitOutcome,
+    ) {
+        // Phase 1 — resolve KV pressure: evict lowest-class/newest
+        // decodes until occupancy fits capacity again. Victims re-enter
+        // their class queue with the lost context charged as recompute.
+        while batch.kv_tokens() > caps.kv_capacity_tokens && batch.len() > 1 {
+            let Some(victim) = batch.preempt_victim() else {
+                break; // everything resident is still prefilling
+            };
+            out.preempted.push(victim.class);
+            self.queues.requeue(Queued {
+                arrived: victim.arrived,
+                class: victim.class,
+                input_tokens: victim.input_tokens,
+                remaining_output: victim.remaining_output,
+                recompute_tokens: victim.kv_tokens,
+                emitted_first: victim.emitted_first,
+                fresh: false,
+            });
+        }
+        // Phase 2 — chunked-prefill admission under the KV budget. One
+        // selection scan per join: the fit check and the pop both act
+        // on the same `best_rank` head.
+        while batch.len() < caps.batch_capacity {
+            let Some(rank) = self.queues.best_rank(now) else {
+                break;
+            };
+            let head = self.queues.front(rank).expect("best rank has a head");
+            // Reserve against committed KV (resident + pending
+            // prefill), not just what has materialized so far.
+            let need = head.input_tokens.max(head.recompute_tokens) as f64;
+            if !(batch.is_empty() || batch.kv_reserved() + need <= caps.kv_capacity_tokens) {
+                break;
+            }
+            let req = self.queues.pop_rank(rank).expect("best rank has a head");
+            if req.fresh {
+                out.joined.push(JoinInfo {
+                    delay: now - req.arrived,
+                    class: req.class,
+                });
+            } else {
+                out.rejoined += 1;
+            }
+            let prefill = req.input_tokens.max(req.recompute_tokens);
+            batch.join(&req, now, prefill);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn caps(batch: usize, kv: f64, chunk: u32) -> EngineCaps {
+        EngineCaps {
+            batch_capacity: batch,
+            kv_capacity_tokens: kv,
+            prefill_chunk: chunk,
+        }
+    }
+
+    #[test]
+    fn fifo_rejects_beyond_capacity_and_joins_in_order() {
+        let mut p = Fifo::new(2);
+        assert!(p.offer(Queued::fresh(0.0, Priority::Standard, 4, 1)));
+        assert!(p.offer(Queued::fresh(0.1, Priority::Standard, 4, 1)));
+        assert!(!p.offer(Queued::fresh(0.2, Priority::Standard, 4, 1)));
+        let mut batch = InFlightBatch::new();
+        let mut out = AdmitOutcome::new();
+        p.admit(1.0, &caps(8, 1e9, 64), &mut batch, &mut out);
+        assert_eq!(out.joined.len(), 2);
+        assert_eq!(out.joined[0].delay, 1.0);
+        assert!((out.joined[1].delay - 0.9).abs() < 1e-12);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(p.queue_len(), 0);
+    }
+
+    #[test]
+    fn slo_class_admits_high_priority_first() {
+        let mut p = SloClass::new(16, 30.0);
+        p.offer(Queued::fresh(0.0, Priority::Batch, 4, 1));
+        p.offer(Queued::fresh(0.0, Priority::Standard, 4, 1));
+        p.offer(Queued::fresh(0.0, Priority::Interactive, 4, 1));
+        let mut batch = InFlightBatch::new();
+        let mut out = AdmitOutcome::new();
+        p.admit(0.1, &caps(2, 1e9, 64), &mut batch, &mut out);
+        assert_eq!(out.joined[0].class, Priority::Interactive);
+        assert_eq!(out.joined[1].class, Priority::Standard);
+        assert_eq!(p.queue_len(), 1, "batch class still waiting");
+    }
+
+    #[test]
+    fn aging_prevents_starvation() {
+        let mut p = SloClass::new(64, 10.0);
+        // A batch request that has waited 25 s (2.5 levels) outranks a
+        // fresh interactive request (effective −0.5 < 0).
+        p.offer(Queued::fresh(0.0, Priority::Batch, 4, 1));
+        p.offer(Queued::fresh(25.0, Priority::Interactive, 4, 1));
+        let mut batch = InFlightBatch::new();
+        let mut out = AdmitOutcome::new();
+        p.admit(25.0, &caps(1, 1e9, 64), &mut batch, &mut out);
+        assert_eq!(out.joined[0].class, Priority::Batch, "aged head wins");
+    }
+
+    #[test]
+    fn kv_aware_blocks_on_headroom_but_never_deadlocks() {
+        let mut p = KvAware::new(16, 30.0);
+        p.offer(Queued::fresh(0.0, Priority::Standard, 100, 4));
+        p.offer(Queued::fresh(0.0, Priority::Standard, 100, 4));
+        let mut batch = InFlightBatch::new();
+        let mut out = AdmitOutcome::new();
+        // Capacity 150 KV tokens: the first 100-token prompt joins (empty
+        // batch always makes progress); the second must wait.
+        p.admit(0.0, &caps(8, 150.0, 32), &mut batch, &mut out);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(out.joined.len(), 1);
+        assert_eq!(p.queue_len(), 1);
+        // Chunked: the join is a prefill join.
+        assert_eq!(batch.decoding_count(), 0);
+        assert_eq!(batch.pending_prefill_tokens(32), 32);
+    }
+
+    #[test]
+    fn kv_aware_preempts_lowest_class_and_requeues_with_recompute() {
+        let mut p = KvAware::new(16, 30.0);
+        let mut batch = InFlightBatch::new();
+        let mut out = AdmitOutcome::new();
+        // Two decoding residents: interactive (40 KV) and batch (50 KV).
+        batch.join(&Queued::fresh(0.0, Priority::Interactive, 40, 8), 0.0, 0);
+        batch.join(&Queued::fresh(0.0, Priority::Batch, 50, 8), 0.0, 0);
+        assert_eq!(batch.kv_tokens(), 90.0);
+        // KV capacity 60: the batch-class decode must be evicted.
+        p.admit(1.0, &caps(8, 60.0, 32), &mut batch, &mut out);
+        assert_eq!(out.preempted, vec![Priority::Batch]);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch.kv_tokens(), 40.0);
+        // The victim waits in its class queue with recompute charged; a
+        // later admit with headroom readmits it as a chunked rejoin (no
+        // second fresh-admission record).
+        assert_eq!(p.queue_len(), 1);
+        out.clear();
+        p.admit(2.0, &caps(8, 200.0, 32), &mut batch, &mut out);
+        assert_eq!(out.joined.len(), 0);
+        assert_eq!(out.rejoined, 1);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch.pending_prefill_tokens(32), 32, "recompute prefill");
+    }
+}

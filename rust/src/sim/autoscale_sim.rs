@@ -11,6 +11,7 @@
 
 use crate::baselines::system::ServingSystem;
 use crate::config::serving::Slo;
+use crate::sim::admission::AdmissionConfig;
 use crate::sim::engine::{self, AutoscaleScenario, ScenarioError};
 use crate::workload::trace::DiurnalTrace;
 
@@ -30,6 +31,9 @@ pub struct AutoscaleSim {
     /// Short-term arrival burstiness override (Gamma cv²); `None` uses
     /// the trace's own `config.burst_cv2`.
     pub burst_cv2: Option<f64>,
+    /// Admission-policy configuration (policy kind resolved from
+    /// `JANUS_ADMISSION` by default; see `sim::admission`).
+    pub admission: AdmissionConfig,
     /// Seed for the live decode loop (arrival draws + routing draws).
     pub seed: u64,
 }
@@ -42,6 +46,7 @@ impl AutoscaleSim {
             slo,
             queue_capacity: engine::DEFAULT_QUEUE_CAPACITY,
             burst_cv2: None,
+            admission: AdmissionConfig::from_env(),
             seed: 0,
         }
     }
@@ -49,6 +54,12 @@ impl AutoscaleSim {
     /// Builder-style seed override (same seed ⇒ bit-identical run).
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    /// Builder-style admission-policy override.
+    pub fn with_admission(mut self, admission: AdmissionConfig) -> Self {
+        self.admission = admission;
         self
     }
 
@@ -67,6 +78,7 @@ impl AutoscaleSim {
             trace.clone(),
         );
         scenario.queue_capacity = self.queue_capacity;
+        scenario.admission = self.admission;
         if let Some(cv2) = self.burst_cv2 {
             scenario.burst_cv2 = cv2;
         }

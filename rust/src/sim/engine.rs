@@ -21,6 +21,16 @@
 //!   use the same bounded admission queue + `batch_capacity()` join
 //!   policy as the autoscale scenario.
 //!
+//! Both arrival-driven scenarios route admission through the pluggable
+//! [`super::admission::AdmissionPolicy`] subsystem (FIFO — the
+//! bit-identical legacy baseline — SLO-class priority with starvation
+//! aging, or KV-aware chunked-prefill admission with preemption; see
+//! `sim::admission`). Requests carry a [`Priority`] class drawn from the
+//! scenario's seeded class mix on a dedicated RNG stream, so the FIFO
+//! policy's arrival/decode draws are identical to the pre-subsystem
+//! engine. TTFT decomposes as queue wait + chunked-prefill time + first
+//! decode step (the prefill term is zero for non-chunked policies).
+//!
 //! The arrival-driven scenarios (autoscale, failure injection) reject
 //! degenerate configurations (zero horizon/interval/rate/…) with a
 //! descriptive [`ScenarioError`] instead of panicking; fixed-batch runs
@@ -39,15 +49,19 @@
 //! implementation the property tests compare it against event-for-event.
 
 use std::cmp::{Ordering, Reverse};
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::BinaryHeap;
 use std::fmt;
 
 use crate::baselines::system::ServingSystem;
 use crate::config::serving::Slo;
-use crate::metrics::{GpuHours, TpotStats, WeightedLatency};
+use crate::metrics::{ClassStats, GpuHours, TpotStats, WeightedLatency};
+use crate::sim::admission::{
+    AdmissionConfig, AdmissionPolicy, AdmitOutcome, EngineCaps, InFlightBatch, Queued, StepBook,
+};
 use crate::util::rng::Rng;
 use crate::util::stats::Accumulator;
 use crate::workload::arrivals::{ArrivalProcess, BurstyPoisson};
+use crate::workload::classes::{Priority, NUM_CLASSES};
 use crate::workload::lengths::LengthModel;
 use crate::workload::trace::DiurnalTrace;
 
@@ -55,6 +69,15 @@ use crate::workload::trace::DiurnalTrace;
 /// the arrival stream independent of how many decode steps interleave,
 /// so determinism holds without pre-materializing the whole horizon.
 const ARRIVAL_STREAM_SALT: u64 = 0x4152_5256_4956_414C;
+
+/// Seed salt for the dedicated SLO-class RNG: class draws live on their
+/// own stream so sampling a class per arrival leaves the arrival and
+/// decode streams — and hence every FIFO-policy metric — untouched.
+const CLASS_STREAM_SALT: u64 = 0x534C_4F43_4C41_5353;
+
+/// Floor on a prefill-only step's duration: a degenerate
+/// `prefill_cost` of 0 must not chain zero-length decode-step events.
+const MIN_PREFILL_STEP: f64 = 1e-6;
 
 /// Default bound on the admission queue of the arrival-driven scenarios.
 pub const DEFAULT_QUEUE_CAPACITY: usize = 4096;
@@ -67,10 +90,16 @@ pub enum EventKind {
     /// Sample the next one-second arrival window (keeps the queue
     /// bounded instead of pre-pushing every arrival over the horizon).
     ArrivalWindow,
-    /// One request with this many output tokens arrives: it enters the
-    /// bounded admission queue (arrival-driven scenarios) and joins the
-    /// in-flight batch when a decode slot frees up.
-    Arrival { output_tokens: u32 },
+    /// One request arrives: it enters the bounded admission queue
+    /// (arrival-driven scenarios) and joins the in-flight batch when the
+    /// admission policy grants it a slot. Carries the sampled prompt
+    /// length (drives chunked prefill and KV accounting) and the SLO
+    /// class drawn from the scenario's class mix.
+    Arrival {
+        input_tokens: u32,
+        output_tokens: u32,
+        class: Priority,
+    },
     /// Execute one decode step over the current in-flight batch.
     DecodeStep,
     /// Periodic scaling decision over the demand estimate.
@@ -79,6 +108,19 @@ pub enum EventKind {
     Failure { gpus: usize, downtime: f64 },
     /// Previously failed GPUs return to the pool.
     Recovery { gpus: usize },
+}
+
+impl EventKind {
+    /// Queue-test probe: an arrival whose `id` payload makes every event
+    /// distinguishable (zero prompt, Standard class). Used by the
+    /// event-queue ordering/equivalence tests.
+    pub fn probe_arrival(id: u32) -> Self {
+        EventKind::Arrival {
+            input_tokens: 0,
+            output_tokens: id,
+            class: Priority::Standard,
+        }
+    }
 }
 
 /// A scheduled event.
@@ -399,6 +441,9 @@ pub enum ScenarioError {
     EmptyTrace,
     /// A failure plan has a non-finite or negative time/downtime.
     InvalidFailurePlan { at: f64, downtime: f64 },
+    /// The admission configuration is degenerate (bad class mix, zero
+    /// aging, zero prefill chunk, …).
+    InvalidAdmission(String),
 }
 
 impl fmt::Display for ScenarioError {
@@ -431,6 +476,9 @@ impl fmt::Display for ScenarioError {
                 f,
                 "failure plan needs finite non-negative times, got at={at}s downtime={downtime}s"
             ),
+            ScenarioError::InvalidAdmission(why) => {
+                write!(f, "admission configuration invalid: {why}")
+            }
         }
     }
 }
@@ -470,6 +518,11 @@ pub struct AutoscaleScenario {
     pub queue_capacity: usize,
     /// Short-term arrival burstiness (Gamma cv², see `workload::arrivals`).
     pub burst_cv2: f64,
+    /// Admission-policy configuration (policy kind, class mix, aging,
+    /// prefill chunk, TTFT target). `new` resolves the policy from
+    /// `JANUS_ADMISSION` (default FIFO); golden surfaces pin
+    /// [`AdmissionConfig::fifo`] explicitly.
+    pub admission: AdmissionConfig,
     pub trace: DiurnalTrace,
 }
 
@@ -483,6 +536,7 @@ impl AutoscaleScenario {
             slo,
             queue_capacity: DEFAULT_QUEUE_CAPACITY,
             burst_cv2: trace.config.burst_cv2,
+            admission: AdmissionConfig::from_env(),
             trace,
         }
     }
@@ -510,6 +564,9 @@ impl AutoscaleScenario {
         if self.queue_capacity == 0 {
             return Err(ScenarioError::ZeroQueueCapacity);
         }
+        self.admission
+            .validate()
+            .map_err(ScenarioError::InvalidAdmission)?;
         Ok(())
     }
 }
@@ -552,6 +609,8 @@ pub struct FailureScenario {
     /// rate follows `trace.rate_at(t)` (its `mean_rate` is in req/s) and
     /// failures land mid-trace.
     pub rate_trace: Option<DiurnalTrace>,
+    /// Admission-policy configuration (see [`AutoscaleScenario::admission`]).
+    pub admission: AdmissionConfig,
     pub failures: Vec<FailurePlan>,
 }
 
@@ -567,6 +626,7 @@ impl FailureScenario {
             burst_cv2: 0.3,
             queue_capacity: DEFAULT_QUEUE_CAPACITY,
             rate_trace: None,
+            admission: AdmissionConfig::from_env(),
             failures: Vec::new(),
         }
     }
@@ -612,6 +672,9 @@ impl FailureScenario {
                 });
             }
         }
+        self.admission
+            .validate()
+            .map_err(ScenarioError::InvalidAdmission)?;
         Ok(())
     }
 }
@@ -705,6 +768,13 @@ pub struct AutoscaleResult {
     /// Admission-queue depth sampled at each decode step.
     pub queue_depth_mean: f64,
     pub queue_depth_max: usize,
+    /// Admission policy the run used (`fifo` / `slo` / `kv`).
+    pub policy: &'static str,
+    /// Decodes preempted out of the batch under KV pressure (KvAware).
+    pub preemptions: usize,
+    /// Per-SLO-class flow and attainment counters, indexed by
+    /// [`Priority::rank`].
+    pub per_class: [ClassStats; NUM_CLASSES],
 }
 
 /// Failure-injection run result.
@@ -740,6 +810,13 @@ pub struct FailureResult {
     pub gpu_hours: f64,
     pub min_gpus: usize,
     pub max_gpus: usize,
+    /// Admission policy the run used (`fifo` / `slo` / `kv`).
+    pub policy: &'static str,
+    /// Decodes preempted out of the batch under KV pressure (KvAware).
+    pub preemptions: usize,
+    /// Per-SLO-class flow and attainment counters, indexed by
+    /// [`Priority::rank`].
+    pub per_class: [ClassStats; NUM_CLASSES],
 }
 
 /// Outcome of [`run`], tagged by scenario.
@@ -821,19 +898,6 @@ fn account(hours: &mut GpuHours, last: &mut f64, now: f64, gpus: usize) {
     *last = now;
 }
 
-/// One decode step's bookkeeping on the in-flight batch: decrement every
-/// request's remaining tokens and compact the finished ones out in a
-/// single order-preserving pass (the old decrement-then-`retain` walked
-/// the batch twice). Returns how many requests completed.
-fn decrement_and_compact(in_flight: &mut Vec<u32>) -> usize {
-    let before = in_flight.len();
-    in_flight.retain_mut(|remaining| {
-        *remaining -= 1;
-        *remaining > 0
-    });
-    before - in_flight.len()
-}
-
 fn track(gpus: usize, min_g: &mut usize, max_g: &mut usize) {
     if gpus > 0 {
         *min_g = (*min_g).min(gpus);
@@ -844,11 +908,12 @@ fn track(gpus: usize, min_g: &mut usize, max_g: &mut usize) {
 /// Trace-driven autoscaling over a live decode loop: arrivals, decode
 /// steps, and scaling decisions all flow through one event queue.
 ///
-/// Continuous-batching admission: each decode step first moves queued
-/// requests into the in-flight batch while slots (up to the system's
-/// current [`ServingSystem::batch_capacity`]) are free, then executes one
-/// step over whatever is in flight — requests join and leave per token,
-/// not in fixed batches. Arrivals beyond the bounded admission queue are
+/// Continuous-batching admission runs through the scenario's
+/// [`AdmissionPolicy`]: each decode step first fills free batch slots
+/// (up to the system's current [`ServingSystem::batch_capacity`];
+/// KvAware resolves KV pressure first), then executes one step over
+/// whatever is in flight — requests join and leave per token, not in
+/// fixed batches. Arrivals beyond the bounded admission queue are
 /// rejected and counted.
 pub fn autoscale<S: ServingSystem + ?Sized>(
     system: &mut S,
@@ -867,13 +932,19 @@ pub fn autoscale<S: ServingSystem + ?Sized>(
     let lengths = LengthModel::with_means(16.0, sc.tokens_per_request.max(1.0), 0.6);
     let mut decode_rng = Rng::seed_from_u64(seed);
     let mut arrival_rng = Rng::seed_from_u64(seed ^ ARRIVAL_STREAM_SALT);
+    // Class draws live on their own stream: FIFO runs are bit-identical
+    // to the pre-subsystem engine even though every request now carries
+    // a sampled class.
+    let mut class_rng = Rng::seed_from_u64(seed ^ CLASS_STREAM_SALT);
 
-    // Live state: the bounded admission queue holds (arrival time,
-    // output tokens); the in-flight vector holds remaining tokens.
-    let mut waiting: VecDeque<(f64, u32)> = VecDeque::new();
-    let mut in_flight: Vec<u32> = Vec::new();
+    // Live state: the admission policy owns the bounded waiting
+    // structure; the in-flight batch tracks residency, prefill progress,
+    // and KV occupancy per slot.
+    let mut policy = sc.admission.build(sc.queue_capacity);
+    let mut batch = InFlightBatch::new();
+    let mut admit_out = AdmitOutcome::new();
+    let mut step_book = StepBook::new();
     let mut step_pending = false;
-    let mut joined_delays: Vec<f64> = Vec::new();
 
     // Aggregate metrics.
     let mut hours = GpuHours::new();
@@ -886,6 +957,8 @@ pub fn autoscale<S: ServingSystem + ?Sized>(
     let mut rejected = 0usize;
     let mut generated = 0usize;
     let mut ok_tokens = 0usize;
+    let mut preemptions = 0usize;
+    let mut class_stats = [ClassStats::default(); NUM_CLASSES];
     let mut adm_delay = WeightedLatency::new();
     let mut ttft = WeightedLatency::new();
     let mut token_tpot = WeightedLatency::new();
@@ -951,8 +1024,16 @@ pub fn autoscale<S: ServingSystem + ?Sized>(
                     let n = bursty.arrivals(&mut arrival_rng, rate, dt);
                     for _ in 0..n {
                         let at = ev.time + arrival_rng.f64() * dt;
-                        let output_tokens = lengths.sample(&mut arrival_rng).output_tokens;
-                        queue.push(at, EventKind::Arrival { output_tokens });
+                        let len = lengths.sample(&mut arrival_rng);
+                        let class = sc.admission.class_mix.sample(&mut class_rng);
+                        queue.push(
+                            at,
+                            EventKind::Arrival {
+                                input_tokens: len.input_tokens,
+                                output_tokens: len.output_tokens,
+                                class,
+                            },
+                        );
                     }
                     let next = ev.time + dt;
                     if next < horizon {
@@ -960,12 +1041,15 @@ pub fn autoscale<S: ServingSystem + ?Sized>(
                     }
                 }
             }
-            EventKind::Arrival { output_tokens } => {
-                if waiting.len() < sc.queue_capacity {
-                    waiting.push_back((ev.time, output_tokens.max(1)));
-                    queue_depth_max = queue_depth_max.max(waiting.len());
+            EventKind::Arrival {
+                input_tokens,
+                output_tokens,
+                class,
+            } => {
+                if policy.offer(Queued::fresh(ev.time, class, input_tokens, output_tokens)) {
+                    queue_depth_max = queue_depth_max.max(policy.queue_len());
                     if let Some(iv) = open.as_mut() {
-                        iv.queue_depth_max = iv.queue_depth_max.max(waiting.len());
+                        iv.queue_depth_max = iv.queue_depth_max.max(policy.queue_len());
                     }
                     if !step_pending {
                         step_pending = true;
@@ -973,52 +1057,98 @@ pub fn autoscale<S: ServingSystem + ?Sized>(
                     }
                 } else {
                     rejected += 1;
+                    class_stats[class.rank()].rejected += 1;
                 }
             }
             EventKind::DecodeStep => {
-                // Continuous-batching admission: queued requests join the
-                // running batch while slots are free.
-                let cap = system.batch_capacity().max(1);
-                joined_delays.clear();
-                while in_flight.len() < cap {
-                    match waiting.pop_front() {
-                        Some((arrived, tokens)) => {
-                            let delay = ev.time - arrived;
-                            adm_delay.record(delay, 1);
-                            if let Some(iv) = open.as_mut() {
-                                iv.adm_delay.push(delay);
-                            }
-                            admitted += 1;
-                            in_flight.push(tokens);
-                            joined_delays.push(delay);
-                        }
-                        None => break,
+                // Admission through the policy: fill free batch slots
+                // (and, for the KV-aware policy, resolve KV pressure by
+                // preempting first).
+                let caps = EngineCaps {
+                    batch_capacity: system.batch_capacity().max(1),
+                    kv_capacity_tokens: system.kv_capacity_tokens(),
+                    prefill_chunk: sc.admission.prefill_chunk.max(1),
+                };
+                admit_out.clear();
+                policy.admit(ev.time, &caps, &mut batch, &mut admit_out);
+                for j in &admit_out.joined {
+                    adm_delay.record(j.delay, 1);
+                    if let Some(iv) = open.as_mut() {
+                        iv.adm_delay.push(j.delay);
                     }
+                    admitted += 1;
+                    class_stats[j.class.rank()].admitted += 1;
                 }
-                if in_flight.is_empty() {
+                for &c in &admit_out.preempted {
+                    preemptions += 1;
+                    class_stats[c.rank()].preempted += 1;
+                }
+                // Preemption requeues can grow the queue between
+                // arrivals; fold the post-admit depth into the max (for
+                // FIFO the queue only shrinks here, so this is a no-op).
+                queue_depth_max = queue_depth_max.max(policy.queue_len());
+                if let Some(iv) = open.as_mut() {
+                    iv.queue_depth_max = iv.queue_depth_max.max(policy.queue_len());
+                }
+                if batch.is_empty() {
                     step_pending = false;
                     continue;
                 }
-                let batch = in_flight.len();
-                let out = system.step(batch, &mut decode_rng);
-                steps += 1;
-                generated += batch;
-                token_tpot.record(out.tpot, batch as u64);
-                if out.tpot <= sc.slo.tpot {
-                    ok_tokens += batch;
+                // Decoding slots emit one token each; prefilling slots
+                // consume one chunk, charged through the system's
+                // prefill-cost model. A prefill-only step advances
+                // chunks without a decode step.
+                let decoding = batch.decoding_count();
+                let chunk_tokens = batch.pending_prefill_tokens(caps.prefill_chunk);
+                let step_time = if decoding > 0 {
+                    let out = system.step(decoding, &mut decode_rng);
+                    steps += 1;
+                    if chunk_tokens > 0 {
+                        out.tpot + system.prefill_cost(chunk_tokens).max(MIN_PREFILL_STEP)
+                    } else {
+                        out.tpot
+                    }
+                } else {
+                    system.prefill_cost(chunk_tokens).max(MIN_PREFILL_STEP)
+                };
+                if decoding > 0 {
+                    generated += decoding;
+                    token_tpot.record(step_time, decoding as u64);
+                    if step_time <= sc.slo.tpot {
+                        ok_tokens += decoding;
+                    }
+                    if let Some(iv) = open.as_mut() {
+                        iv.tpot.record(step_time, decoding as u64);
+                        iv.steps += 1;
+                    }
                 }
-                // A newly joined request's first token lands at the end
-                // of this step: TTFT = queue wait + one step.
-                for &delay in &joined_delays {
-                    ttft.record(delay + out.tpot, 1);
+                step_book.clear();
+                completed += batch.advance(caps.prefill_chunk, step_time, &mut step_book);
+                // TTFT = queue wait + chunked-prefill residency + the
+                // first decode step (the middle term is zero for the
+                // instant-prefill policies).
+                for &(ttft_v, class) in &step_book.first_tokens {
+                    ttft.record(ttft_v, 1);
+                    let cs = &mut class_stats[class.rank()];
+                    cs.first_tokens += 1;
+                    if ttft_v <= sc.admission.ttft_slo {
+                        cs.ttft_ok += 1;
+                    }
                 }
-                depth_acc.push(waiting.len() as f64);
-                if let Some(iv) = open.as_mut() {
-                    iv.tpot.record(out.tpot, batch as u64);
-                    iv.steps += 1;
+                for c in &step_book.completed {
+                    class_stats[c.rank()].completed += 1;
                 }
-                completed += decrement_and_compact(&mut in_flight);
-                queue.push(ev.time + out.tpot, EventKind::DecodeStep);
+                if decoding > 0 {
+                    let ok = step_time <= sc.slo.tpot;
+                    for (rank, &n) in step_book.decode_tokens.iter().enumerate() {
+                        class_stats[rank].tokens += n;
+                        if ok {
+                            class_stats[rank].tokens_ok += n;
+                        }
+                    }
+                }
+                depth_acc.push(policy.queue_len() as f64);
+                queue.push(ev.time + step_time, EventKind::DecodeStep);
             }
             EventKind::ScalingDecision => {
                 account(&mut hours, &mut last_account, ev.time, system.gpus());
@@ -1042,7 +1172,7 @@ pub fn autoscale<S: ServingSystem + ?Sized>(
                     gpus,
                     label: system.label(),
                     feasible,
-                    queue_depth_max: waiting.len(),
+                    queue_depth_max: policy.queue_len(),
                     adm_delay: Accumulator::new(),
                     tpot: WeightedLatency::new(),
                     steps: 0,
@@ -1098,6 +1228,9 @@ pub fn autoscale<S: ServingSystem + ?Sized>(
         },
         queue_depth_mean: depth_acc.mean(),
         queue_depth_max,
+        policy: policy.name(),
+        preemptions,
+        per_class: class_stats,
         intervals: records,
     })
 }
@@ -1140,6 +1273,9 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
     let bursty = BurstyPoisson::new(sc.burst_cv2);
     let lengths = LengthModel::with_means(16.0, sc.tokens_per_request.max(1.0), 0.6);
     let mut arrival_rng = Rng::seed_from_u64(seed ^ ARRIVAL_STREAM_SALT);
+    // Dedicated class stream (see `autoscale`): FIFO runs stay
+    // bit-identical to the pre-subsystem engine.
+    let mut class_rng = Rng::seed_from_u64(seed ^ CLASS_STREAM_SALT);
     queue.push(0.0, EventKind::ArrivalWindow);
 
     // Demand estimate for sizing decisions (offered load).
@@ -1151,14 +1287,18 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
         (rate * sc.tokens_per_request).max(1.0)
     };
 
-    // Live state: the bounded admission queue holds (arrival time,
-    // output tokens); the in-flight vector holds remaining tokens.
-    // Admission mirrors the autoscale scenario's continuous batching —
+    // Live state: the admission policy owns the bounded waiting
+    // structure; the in-flight batch tracks residency, prefill progress,
+    // and KV occupancy. Admission mirrors the autoscale scenario —
     // queued requests join only while the system's `batch_capacity()`
     // has free slots, so outages that shrink the deployment also shrink
-    // what the decode loop may hold in flight.
-    let mut waiting: VecDeque<(f64, u32)> = VecDeque::new();
-    let mut in_flight: Vec<u32> = Vec::new();
+    // what the decode loop may hold in flight (and, under the KV-aware
+    // policy, trigger preemption when the surviving KV cannot hold the
+    // resident context).
+    let mut policy = sc.admission.build(sc.queue_capacity);
+    let mut batch = InFlightBatch::new();
+    let mut admit_out = AdmitOutcome::new();
+    let mut step_book = StepBook::new();
     let mut step_pending = false;
     let mut failed_gpus = 0usize;
     let mut stats = TpotStats::new();
@@ -1170,6 +1310,8 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
     let mut completed = 0usize;
     let mut rejected = 0usize;
     let mut generated = 0usize;
+    let mut preemptions = 0usize;
+    let mut class_stats = [ClassStats::default(); NUM_CLASSES];
     let mut adm_delay = Accumulator::new();
     let mut queue_depth_max = 0usize;
     let mut decisions = 0usize;
@@ -1195,8 +1337,16 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                     let n = bursty.arrivals(&mut arrival_rng, rate, dt);
                     for _ in 0..n {
                         let at = ev.time + arrival_rng.f64() * dt;
-                        let output_tokens = lengths.sample(&mut arrival_rng).output_tokens;
-                        queue.push(at, EventKind::Arrival { output_tokens });
+                        let len = lengths.sample(&mut arrival_rng);
+                        let class = sc.admission.class_mix.sample(&mut class_rng);
+                        queue.push(
+                            at,
+                            EventKind::Arrival {
+                                input_tokens: len.input_tokens,
+                                output_tokens: len.output_tokens,
+                                class,
+                            },
+                        );
                     }
                     let next = ev.time + dt;
                     if next < sc.horizon {
@@ -1204,53 +1354,97 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                     }
                 }
             }
-            EventKind::Arrival { output_tokens } => {
-                if waiting.len() < sc.queue_capacity {
-                    waiting.push_back((ev.time, output_tokens.max(1)));
-                    queue_depth_max = queue_depth_max.max(waiting.len());
+            EventKind::Arrival {
+                input_tokens,
+                output_tokens,
+                class,
+            } => {
+                if policy.offer(Queued::fresh(ev.time, class, input_tokens, output_tokens)) {
+                    queue_depth_max = queue_depth_max.max(policy.queue_len());
                     if !step_pending {
                         step_pending = true;
                         queue.push(ev.time, EventKind::DecodeStep);
                     }
                 } else {
                     rejected += 1;
+                    class_stats[class.rank()].rejected += 1;
                 }
             }
             EventKind::DecodeStep => {
-                // Continuous-batching admission: queued requests join the
-                // running batch while slots are free.
-                let cap = system.batch_capacity().max(1);
-                while in_flight.len() < cap {
-                    match waiting.pop_front() {
-                        Some((arrived, tokens)) => {
-                            adm_delay.push(ev.time - arrived);
-                            admitted += 1;
-                            in_flight.push(tokens);
-                        }
-                        None => break,
-                    }
+                // Admission through the policy (see `autoscale`): fill
+                // free slots, resolving KV pressure first for KvAware.
+                let caps = EngineCaps {
+                    batch_capacity: system.batch_capacity().max(1),
+                    kv_capacity_tokens: system.kv_capacity_tokens(),
+                    prefill_chunk: sc.admission.prefill_chunk.max(1),
+                };
+                admit_out.clear();
+                policy.admit(ev.time, &caps, &mut batch, &mut admit_out);
+                for j in &admit_out.joined {
+                    adm_delay.push(j.delay);
+                    admitted += 1;
+                    class_stats[j.class.rank()].admitted += 1;
                 }
-                if in_flight.is_empty() {
+                for &c in &admit_out.preempted {
+                    preemptions += 1;
+                    class_stats[c.rank()].preempted += 1;
+                }
+                // Preemption requeues can grow the queue between
+                // arrivals (no-op for FIFO, which only shrinks here).
+                queue_depth_max = queue_depth_max.max(policy.queue_len());
+                if batch.is_empty() {
                     step_pending = false;
                     continue;
                 }
-                let batch = in_flight.len();
-                let out = system.step(batch, &mut rng);
-                stats.push(out.tpot);
-                steps += 1;
-                generated += batch;
-                let ok = out.tpot <= sc.slo.tpot;
-                if ok {
-                    ok_steps += 1;
-                }
-                if failed_gpus > 0 {
-                    degraded_steps += 1;
+                let decoding = batch.decoding_count();
+                let chunk_tokens = batch.pending_prefill_tokens(caps.prefill_chunk);
+                let step_time = if decoding > 0 {
+                    let out = system.step(decoding, &mut rng);
+                    steps += 1;
+                    if chunk_tokens > 0 {
+                        out.tpot + system.prefill_cost(chunk_tokens).max(MIN_PREFILL_STEP)
+                    } else {
+                        out.tpot
+                    }
+                } else {
+                    system.prefill_cost(chunk_tokens).max(MIN_PREFILL_STEP)
+                };
+                if decoding > 0 {
+                    stats.push(step_time);
+                    generated += decoding;
+                    let ok = step_time <= sc.slo.tpot;
                     if ok {
-                        degraded_ok += 1;
+                        ok_steps += 1;
+                    }
+                    if failed_gpus > 0 {
+                        degraded_steps += 1;
+                        if ok {
+                            degraded_ok += 1;
+                        }
                     }
                 }
-                completed += decrement_and_compact(&mut in_flight);
-                queue.push(ev.time + out.tpot, EventKind::DecodeStep);
+                step_book.clear();
+                completed += batch.advance(caps.prefill_chunk, step_time, &mut step_book);
+                for &(ttft_v, class) in &step_book.first_tokens {
+                    let cs = &mut class_stats[class.rank()];
+                    cs.first_tokens += 1;
+                    if ttft_v <= sc.admission.ttft_slo {
+                        cs.ttft_ok += 1;
+                    }
+                }
+                for c in &step_book.completed {
+                    class_stats[c.rank()].completed += 1;
+                }
+                if decoding > 0 {
+                    let ok = step_time <= sc.slo.tpot;
+                    for (rank, &n) in step_book.decode_tokens.iter().enumerate() {
+                        class_stats[rank].tokens += n;
+                        if ok {
+                            class_stats[rank].tokens_ok += n;
+                        }
+                    }
+                }
+                queue.push(ev.time + step_time, EventKind::DecodeStep);
             }
             EventKind::ScalingDecision => {
                 account(&mut hours, &mut last_account, ev.time, system.gpus());
@@ -1322,6 +1516,9 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
         gpu_hours: hours.total(),
         min_gpus: if min_gpus == usize::MAX { 0 } else { min_gpus },
         max_gpus,
+        policy: policy.name(),
+        preemptions,
+        per_class: class_stats,
         tpot: stats,
     })
 }
@@ -1359,12 +1556,12 @@ mod tests {
         // order — the (time, seq) invariant's tie clause.
         let mut q = EventQueue::new();
         for id in 0..200u32 {
-            q.push(3.25, EventKind::Arrival { output_tokens: id });
+            q.push(3.25, EventKind::probe_arrival(id));
         }
         for id in 0..200u32 {
             let ev = q.pop().expect("burst event");
             assert_eq!(ev.time, 3.25);
-            assert_eq!(ev.kind, EventKind::Arrival { output_tokens: id });
+            assert_eq!(ev.kind, EventKind::probe_arrival(id));
         }
         assert!(q.pop().is_none());
     }
@@ -1384,8 +1581,8 @@ mod tests {
             } else {
                 rng.f64() * 50.0
             };
-            cal.push(t, EventKind::Arrival { output_tokens: i });
-            heap.push(t, EventKind::Arrival { output_tokens: i });
+            cal.push(t, EventKind::probe_arrival(i));
+            heap.push(t, EventKind::probe_arrival(i));
             if i % 5 == 4 {
                 let (a, b) = (cal.pop(), heap.pop());
                 assert_eq!(a.as_ref().map(|e| e.time.to_bits()), b.as_ref().map(|e| e.time.to_bits()));
@@ -1507,17 +1704,20 @@ mod tests {
             steps: 5,
         });
         // 900 s ramp at 300 s decisions: three intervals of live,
-        // arrival-driven decode.
-        let auto = Scenario::Autoscale(AutoscaleScenario::new(
+        // arrival-driven decode. Policies pinned to FIFO so the exact
+        // assertions hold regardless of the JANUS_ADMISSION matrix.
+        let mut auto_sc = AutoscaleScenario::new(
             300.0,
             32.0,
             Slo::from_ms(200.0),
             DiurnalTrace::ramp(0.25, 30.0, 1.0, 8.0, 5),
-        ));
-        let fail = Scenario::FailureInjection(
-            FailureScenario::new(Slo::from_ms(200.0), 2.0, 32.0, 120.0)
-                .with_failure(40.0, 8, 30.0),
         );
+        auto_sc.admission = AdmissionConfig::fifo();
+        let auto = Scenario::Autoscale(auto_sc);
+        let mut fail_sc = FailureScenario::new(Slo::from_ms(200.0), 2.0, 32.0, 120.0)
+            .with_failure(40.0, 8, 30.0);
+        fail_sc.admission = AdmissionConfig::fifo();
+        let fail = Scenario::FailureInjection(fail_sc);
         let mut j = JanusSystem::build(model.clone(), hw.clone(), &pop, 16, 1);
         let mut s = SgLang::build(model.clone(), hw.clone(), &pop, 2);
         let mut m = MegaScaleInfer::build(model.clone(), hw.clone(), &pop, 16, 3);
@@ -1598,6 +1798,18 @@ mod tests {
             sc.validate(),
             Err(ScenarioError::InvalidFailurePlan { .. })
         ));
+        let mut sc = base.clone();
+        sc.admission.prefill_chunk = 0;
+        assert!(matches!(
+            sc.validate(),
+            Err(ScenarioError::InvalidAdmission(_))
+        ));
+        let mut sc = base.clone();
+        sc.admission.aging_secs = -1.0;
+        assert!(matches!(
+            sc.validate(),
+            Err(ScenarioError::InvalidAdmission(_))
+        ));
 
         // Autoscale scenario: interval / tokens / queue / cv² / trace.
         let trace = DiurnalTrace::ramp(0.1, 30.0, 1.0, 2.0, 1);
@@ -1621,6 +1833,14 @@ mod tests {
             sc.validate(),
             Err(ScenarioError::NonPositiveBurstiness(_))
         ));
+        let mut sc = good.clone();
+        sc.admission.class_mix = crate::workload::classes::ClassMix { weights: [0.0; 3] };
+        assert!(matches!(
+            sc.validate(),
+            Err(ScenarioError::InvalidAdmission(_))
+        ));
+        let msg = ScenarioError::InvalidAdmission("zero weights".into()).to_string();
+        assert!(msg.contains("admission"), "{msg}");
         let empty = DiurnalTrace {
             config: TraceConfig::one_day(),
             envelope: vec![],
@@ -1650,7 +1870,8 @@ mod tests {
         // 900/1350 = 2/3 (a count-based average would say 1/2), and the
         // 8-GPU pool accrues exactly 8 × 1350 s = 3 GPU-hours.
         let trace = DiurnalTrace::ramp(0.375, 50.0, 1.0, 1.0, 3);
-        let sc = AutoscaleScenario::new(900.0, 8.0, Slo::from_ms(200.0), trace);
+        let mut sc = AutoscaleScenario::new(900.0, 8.0, Slo::from_ms(200.0), trace);
+        sc.admission = AdmissionConfig::fifo();
         let mut sys = ScriptedSystem::new(vec![true, false], 8, 16, 0.05);
         let r = autoscale(&mut sys, &sc, 17).expect("valid scenario");
         assert_eq!(r.intervals.len(), 2);
@@ -1673,6 +1894,7 @@ mod tests {
         // must see real queue wait.
         let trace = DiurnalTrace::ramp(60.0 / 3600.0, 10.0, 20.0, 20.0, 9);
         let mut sc = AutoscaleScenario::new(30.0, 4.0, Slo::from_ms(200.0), trace);
+        sc.admission = AdmissionConfig::fifo();
         sc.queue_capacity = 4;
         let mut sys = ScriptedSystem::new(vec![], 4, 1, 1.0);
         let r = autoscale(&mut sys, &sc, 23).expect("valid scenario");
@@ -1695,7 +1917,8 @@ mod tests {
         let hw = autoscale_pool();
         let pop = ExpertPopularity::Zipf { s: 0.4 };
         let trace = DiurnalTrace::ramp(0.1, 30.0, 1.0, 6.0, 11);
-        let sc = AutoscaleScenario::new(120.0, 32.0, Slo::from_ms(200.0), trace);
+        let mut sc = AutoscaleScenario::new(120.0, 32.0, Slo::from_ms(200.0), trace);
+        sc.admission = AdmissionConfig::fifo();
         let fingerprint = |r: &AutoscaleResult| -> Vec<u64> {
             vec![
                 r.gpu_hours.to_bits(),
@@ -1749,8 +1972,9 @@ mod tests {
         // seat every DeepSeek-V2 expert (n_e_min = 6 > 4), so re-placement
         // must report infeasibility until recovery — while the decode loop
         // keeps serving on the emergency layout.
-        let sc = FailureScenario::new(Slo::from_ms(200.0), 4.0, 64.0, 600.0)
+        let mut sc = FailureScenario::new(Slo::from_ms(200.0), 4.0, 64.0, 600.0)
             .with_failure(120.0, 28, 240.0);
+        sc.admission = AdmissionConfig::fifo();
         let mut sys = janus(32, 7);
         let r = failure_injection(&mut sys, &sc, 11).expect("valid scenario");
         assert!(r.steps > 0);
@@ -1777,6 +2001,7 @@ mod tests {
         // system's capacity (generated == steps at capacity 1) — the
         // bound the pre-queue failure loop lacked.
         let mut sc = FailureScenario::new(Slo::from_ms(200.0), 20.0, 4.0, 120.0);
+        sc.admission = AdmissionConfig::fifo();
         sc.queue_capacity = 4;
         let mut sys = ScriptedSystem::new(vec![], 4, 1, 1.0);
         let r = failure_injection(&mut sys, &sc, 5).expect("valid scenario");
@@ -1790,8 +2015,9 @@ mod tests {
 
     #[test]
     fn failure_scenario_is_bit_deterministic() {
-        let sc = FailureScenario::new(Slo::from_ms(200.0), 3.0, 48.0, 300.0)
+        let mut sc = FailureScenario::new(Slo::from_ms(200.0), 3.0, 48.0, 300.0)
             .with_failure(60.0, 12, 120.0);
+        sc.admission = AdmissionConfig::fifo();
         let run_once = || {
             let mut sys = janus(16, 21);
             let r = failure_injection(&mut sys, &sc, 33).expect("valid scenario");

@@ -14,11 +14,20 @@
 //!   admission delay, TTFT, and per-token TPOT percentiles alongside
 //!   GPU-hours.
 //!
+//! - [`admission`] — the pluggable admission subsystem behind both
+//!   arrival-driven scenarios: a deterministic [`admission::AdmissionPolicy`]
+//!   trait with FIFO (legacy-identical), SLO-class priority (starvation
+//!   aging), and KV-aware (chunked prefill, KV-occupancy accounting,
+//!   preemption) implementations, selected per scenario or via
+//!   `JANUS_ADMISSION`.
+//!
 //! - [`sweep`] — the deterministic parallel sweep engine: independent
 //!   (system ctor × scenario × seed) cells drained by scoped workers
-//!   over one atomic claim index, with slot-per-cell result collection
-//!   so the output is bit-identical for any worker count (figures,
-//!   golden sweeps, and `bench_sim` all run their grids through it).
+//!   over one atomic claim index (claims are chunked — K cells per
+//!   `fetch_add`, `JANUS_CHUNK` overridable), with slot-per-cell result
+//!   collection so the output is bit-identical for any worker count and
+//!   chunk size (figures, golden sweeps, and `bench_sim` all run their
+//!   grids through it).
 //!
 //! Failure injection ([`engine::FailureScenario`]) lives directly in the
 //! engine: planned outages remove capacity mid-trace and the run measures
@@ -29,11 +38,13 @@
 //! [`engine::ScenarioError`] on degenerate inputs (zero
 //! horizon/interval/rate/…) instead of panicking.
 
+pub mod admission;
 pub mod autoscale_sim;
 pub mod decode_sim;
 pub mod engine;
 pub mod sweep;
 
+pub use admission::{AdmissionConfig, AdmissionPolicy, PolicyKind};
 pub use autoscale_sim::{AutoscaleResult, AutoscaleSim};
 pub use decode_sim::{evaluate_fixed_batch, FixedBatchResult};
 pub use engine::{
@@ -41,4 +52,7 @@ pub use engine::{
     FailureScenario, FixedBatchScenario, IntervalRecord, Scenario, ScenarioError, ScenarioOutcome,
     DEFAULT_QUEUE_CAPACITY,
 };
-pub use sweep::{hardware_threads, resolve_threads, run_cells, CellResult, SweepCell};
+pub use sweep::{
+    hardware_threads, resolve_chunk, resolve_threads, run_cells, run_cells_filtered, CellResult,
+    SweepCell,
+};

@@ -20,6 +20,13 @@
 //! Thread-count resolution (CLI `--threads N` beats the `JANUS_THREADS`
 //! environment variable beats the hardware parallelism) lives in
 //! [`resolve_threads`] so every binary exposes the same knobs.
+//!
+//! Work claiming is **chunked**: each `fetch_add` claims K consecutive
+//! cells (K auto-sized from the grid — about four claims per worker —
+//! overridable via `JANUS_CHUNK` or [`sweep_chunked`]), so tiny-cell
+//! grids stop contending on the shared atomic. Chunking changes only
+//! which worker computes a cell, never which slot its result lands in:
+//! output stays byte-identical for every K ≥ 1 and every thread count.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -29,6 +36,10 @@ use crate::sim::engine::{self, Scenario, ScenarioError, ScenarioOutcome};
 
 /// Environment variable consulted when no explicit `--threads` is given.
 pub const THREADS_ENV: &str = "JANUS_THREADS";
+
+/// Environment variable overriding the work-claim chunk size (cells
+/// claimed per `fetch_add`).
+pub const CHUNK_ENV: &str = "JANUS_CHUNK";
 
 /// Number of hardware threads (1 when the query fails).
 pub fn hardware_threads() -> usize {
@@ -53,13 +64,31 @@ pub fn resolve_threads(explicit: Option<usize>) -> usize {
         .unwrap_or_else(hardware_threads)
 }
 
+/// Resolve the work-claim chunk size: an explicit request wins, then
+/// the `JANUS_CHUNK` environment variable, then an auto-sizing from the
+/// grid — about four claims per worker, so tiny-cell grids stop hammering
+/// the shared atomic while load balance stays fine-grained enough that a
+/// slow chunk cannot strand a worker. Always ≥ 1.
+pub fn resolve_chunk(explicit: Option<usize>, cells: usize, workers: usize) -> usize {
+    explicit
+        .filter(|&k| k > 0)
+        .or_else(|| {
+            std::env::var(CHUNK_ENV)
+                .ok()
+                .and_then(|s| s.trim().parse().ok())
+                .filter(|&k: &usize| k > 0)
+        })
+        .unwrap_or_else(|| (cells / (workers.max(1) * 4)).max(1))
+}
+
 /// Run `f(i, &cells[i])` for every cell and return the results in
 /// submission order. `threads` workers claim cells from one atomic
 /// index (first-free-worker order — scheduling never affects which slot
-/// a result lands in, only which worker computes it). With `threads <= 1`
-/// the cells run serially on the calling thread; the output is
-/// bit-identical either way provided `f` is a pure function of
-/// `(i, cell)` — the cell-isolation contract this module documents.
+/// a result lands in, only which worker computes it), `resolve_chunk`
+/// cells per claim. With `threads <= 1` the cells run serially on the
+/// calling thread; the output is bit-identical either way provided `f`
+/// is a pure function of `(i, cell)` — the cell-isolation contract this
+/// module documents.
 ///
 /// A panic inside any cell propagates to the caller once the scope
 /// joins, like the serial loop would.
@@ -70,24 +99,44 @@ where
     F: Fn(usize, &C) -> T + Sync,
 {
     let workers = threads.max(1).min(cells.len());
+    let chunk = resolve_chunk(None, cells.len(), workers);
+    sweep_chunked(cells, threads, chunk, f)
+}
+
+/// [`sweep`] with an explicit work-claim chunk size: each `fetch_add`
+/// claims the next `chunk` consecutive cells. Chunking changes only how
+/// cells are handed to workers — every cell still computes `f(i, cell)`
+/// into its own submission-indexed slot, so the output is byte-identical
+/// for any `chunk ≥ 1` (K = 1 is the classic one-cell claim; K ≥ grid
+/// size degenerates to one worker draining everything).
+pub fn sweep_chunked<C, T, F>(cells: &[C], threads: usize, chunk: usize, f: F) -> Vec<T>
+where
+    C: Sync,
+    T: Send,
+    F: Fn(usize, &C) -> T + Sync,
+{
+    let workers = threads.max(1).min(cells.len());
     if workers <= 1 {
         return cells.iter().enumerate().map(|(i, c)| f(i, c)).collect();
     }
+    let chunk = chunk.max(1);
     // Slot-per-cell result buffer: submission index == output index.
-    // Each slot's mutex is locked exactly once (cells are claimed via
-    // fetch_add, so indices are disjoint across workers) — it exists to
-    // make the write safe, not to serialize anything.
+    // Each slot's mutex is locked exactly once (claimed ranges are
+    // disjoint across workers) — it exists to make the write safe, not
+    // to serialize anything.
     let slots: Vec<Mutex<Option<T>>> = cells.iter().map(|_| Mutex::new(None)).collect();
     let next = AtomicUsize::new(0);
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= cells.len() {
+                let start = next.fetch_add(chunk, Ordering::Relaxed);
+                if start >= cells.len() {
                     break;
                 }
-                let out = f(i, &cells[i]);
-                *slots[i].lock().unwrap() = Some(out);
+                for i in start..(start + chunk).min(cells.len()) {
+                    let out = f(i, &cells[i]);
+                    *slots[i].lock().unwrap() = Some(out);
+                }
             });
         }
     });
@@ -124,7 +173,28 @@ pub struct CellResult {
 /// Drain a scenario-cell work queue over `threads` workers; results come
 /// back in submission order regardless of worker count.
 pub fn run_cells(cells: &[SweepCell<'_>], threads: usize) -> Vec<CellResult> {
-    sweep(cells, threads, |_, cell| {
+    run_cells_filtered(cells, threads, None)
+}
+
+/// [`run_cells`] restricted to cells whose label contains `filter`
+/// (substring match; `None` runs everything) — partial panel
+/// regeneration for `bin/figures --cells`. Because every cell is a pure
+/// function of (index, cell), a filtered run's rows are byte-identical
+/// to the corresponding rows of a full run, in the full run's relative
+/// order.
+pub fn run_cells_filtered(
+    cells: &[SweepCell<'_>],
+    threads: usize,
+    filter: Option<&str>,
+) -> Vec<CellResult> {
+    let selected: Vec<usize> = cells
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| filter.map_or(true, |needle| c.label.contains(needle)))
+        .map(|(i, _)| i)
+        .collect();
+    sweep(&selected, threads, |_, &i| {
+        let cell = &cells[i];
         let mut sys = (cell.build)();
         CellResult {
             label: cell.label.clone(),
@@ -200,6 +270,93 @@ mod tests {
         assert_eq!(resolve_threads(Some(3)), 3);
         assert!(resolve_threads(Some(0)) >= 1);
         assert!(resolve_threads(None) >= 1);
+    }
+
+    #[test]
+    fn resolve_chunk_explicit_and_auto() {
+        // Explicit beats everything (env-independent); the env/auto
+        // fallback is only bounded here — an exact assert would break
+        // under a set JANUS_CHUNK, the very knob this resolver adds
+        // (tests share one process environment, like resolve_threads).
+        assert_eq!(resolve_chunk(Some(5), 100, 4), 5);
+        assert!(resolve_chunk(None, 128, 4) >= 1);
+        assert!(resolve_chunk(None, 3, 8) >= 1);
+        assert!(resolve_chunk(Some(0), 3, 8) >= 1, "zero falls through");
+    }
+
+    #[test]
+    fn chunked_claims_keep_slot_per_cell_output_identical() {
+        // Chunking changes only claim granularity: for K ∈ {1, 3, grid}
+        // (and beyond) every thread count produces the serial output.
+        let cells: Vec<u64> = (0..41).collect();
+        let f = |i: usize, &c: &u64| -> u64 {
+            let mut rng = Rng::seed_from_u64(split_seed(0xC4C4, c));
+            rng.next_u64() ^ i as u64
+        };
+        let serial = sweep_chunked(&cells, 1, 1, f);
+        for chunk in [1usize, 3, cells.len(), cells.len() * 2] {
+            for threads in [2usize, 4, 8] {
+                assert_eq!(
+                    serial,
+                    sweep_chunked(&cells, threads, chunk, f),
+                    "chunk={chunk} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn filtered_cells_rows_are_byte_identical_to_full_run() {
+        use crate::baselines::JanusSystem;
+        use crate::config::hardware::paper_testbed;
+        use crate::config::models::deepseek_v2;
+        use crate::routing::gate::ExpertPopularity;
+
+        let model = deepseek_v2();
+        let hw = paper_testbed();
+        let pop = ExpertPopularity::Uniform;
+        let cells: Vec<SweepCell> = [16usize, 64, 128]
+            .iter()
+            .map(|&batch| SweepCell {
+                label: format!("janus/B{batch}"),
+                build: Box::new({
+                    let (model, hw, pop) = (model.clone(), hw.clone(), pop.clone());
+                    move || {
+                        Box::new(JanusSystem::build(model.clone(), hw.clone(), &pop, 16, 42))
+                            as Box<dyn ServingSystem>
+                    }
+                }),
+                scenario: Scenario::FixedBatch(FixedBatchScenario {
+                    batch,
+                    slo: Slo::from_ms(200.0),
+                    steps: 4,
+                }),
+                seed: 7,
+            })
+            .collect();
+        let serialize = |rs: &[CellResult]| -> Vec<String> {
+            rs.iter()
+                .map(|r| match &r.outcome {
+                    Ok(ScenarioOutcome::FixedBatch(f)) => format!(
+                        "{}\t{:016x}\t{:016x}",
+                        r.label,
+                        f.tpot_mean.to_bits(),
+                        f.tpot_p99.to_bits()
+                    ),
+                    other => panic!("unexpected outcome {other:?}"),
+                })
+                .collect()
+        };
+        let full = serialize(&run_cells(&cells, 2));
+        // Substring filter picks a strict subset; its rows must be the
+        // corresponding full-run rows, byte for byte.
+        let filtered = serialize(&run_cells_filtered(&cells, 2, Some("B64")));
+        assert_eq!(filtered, vec![full[1].clone()]);
+        let two = serialize(&run_cells_filtered(&cells, 2, Some("B1")));
+        assert_eq!(two, vec![full[0].clone(), full[2].clone()]);
+        // No-match filter → empty; None → the full run.
+        assert!(run_cells_filtered(&cells, 2, Some("nope")).is_empty());
+        assert_eq!(serialize(&run_cells_filtered(&cells, 2, None)), full);
     }
 
     #[test]

@@ -1,0 +1,125 @@
+//! A fully scripted [`ServingSystem`] for engine/admission tests and
+//! benches: constant step time, explicit batch/KV capacities, scripted
+//! per-decision feasibility. No RNG draws, no hidden state — perfect
+//! for pinning admission-policy behavior without paying for a real
+//! system build.
+
+use crate::baselines::system::{ConfigInfo, ServingSystem, StepOutcome};
+use crate::config::serving::Slo;
+use crate::util::rng::Rng;
+
+/// Deterministic mock: every knob the engine consults is a field.
+pub struct MockServingSystem {
+    pub gpus: usize,
+    /// Batch slots (`batch_capacity`).
+    pub capacity: usize,
+    /// Constant decode-step time, seconds.
+    pub tpot: f64,
+    /// KV token capacity (`kv_capacity_tokens`).
+    pub kv_capacity: f64,
+    /// Prefill cost per token, seconds (`prefill_cost` = tokens × this).
+    pub prefill_per_token: f64,
+    /// Scripted per-decision feasibility (true once exhausted).
+    pub feasibility: Vec<bool>,
+    decisions: usize,
+}
+
+impl MockServingSystem {
+    pub fn new(gpus: usize, capacity: usize, tpot: f64) -> Self {
+        MockServingSystem {
+            gpus,
+            capacity,
+            tpot,
+            kv_capacity: capacity as f64 * 512.0,
+            prefill_per_token: 5e-6,
+            feasibility: Vec::new(),
+            decisions: 0,
+        }
+    }
+
+    /// Builder-style KV capacity override (tokens).
+    pub fn with_kv_capacity(mut self, tokens: f64) -> Self {
+        self.kv_capacity = tokens;
+        self
+    }
+
+    /// Builder-style prefill cost override (seconds per token).
+    pub fn with_prefill_per_token(mut self, secs: f64) -> Self {
+        self.prefill_per_token = secs;
+        self
+    }
+}
+
+impl ServingSystem for MockServingSystem {
+    fn name(&self) -> &'static str {
+        "mock"
+    }
+
+    fn configure(&mut self, _batch: usize, slo: Slo) -> Option<ConfigInfo> {
+        self.configure_for_demand(1.0, slo)
+    }
+
+    fn configure_for_demand(&mut self, _lambda: f64, _slo: Slo) -> Option<ConfigInfo> {
+        let ok = self.feasibility.get(self.decisions).copied().unwrap_or(true);
+        self.decisions += 1;
+        ok.then(|| ConfigInfo {
+            label: "mock".into(),
+            gpus: self.gpus,
+        })
+    }
+
+    fn step(&mut self, _batch: usize, _rng: &mut Rng) -> StepOutcome {
+        StepOutcome {
+            tpot: self.tpot,
+            a_max: 1,
+        }
+    }
+
+    fn gpus(&self) -> usize {
+        self.gpus
+    }
+
+    fn batch_capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn kv_capacity_tokens(&self) -> f64 {
+        self.kv_capacity
+    }
+
+    fn prefill_cost(&mut self, tokens: u32) -> f64 {
+        tokens as f64 * self.prefill_per_token
+    }
+
+    fn label(&self) -> String {
+        "mock".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scripted_feasibility_then_default_true() {
+        let mut m = MockServingSystem::new(4, 8, 0.05);
+        m.feasibility = vec![true, false];
+        let slo = Slo::from_ms(200.0);
+        assert!(m.configure_for_demand(1.0, slo).is_some());
+        assert!(m.configure_for_demand(1.0, slo).is_none());
+        assert!(m.configure_for_demand(1.0, slo).is_some());
+    }
+
+    #[test]
+    fn capacities_and_costs_are_the_fields() {
+        let mut m = MockServingSystem::new(2, 4, 0.1)
+            .with_kv_capacity(100.0)
+            .with_prefill_per_token(1e-3);
+        assert_eq!(m.batch_capacity(), 4);
+        assert_eq!(m.kv_capacity_tokens(), 100.0);
+        assert_eq!(m.prefill_cost(0), 0.0);
+        assert!((m.prefill_cost(50) - 0.05).abs() < 1e-12);
+        let mut rng = Rng::seed_from_u64(1);
+        assert_eq!(m.step(4, &mut rng).tpot, 0.1);
+    }
+}

@@ -1,6 +1,10 @@
 //! Test support. `proptest` is unavailable in this offline build
 //! environment, so `prop` provides a small seeded property-test harness
 //! with the same spirit: generate many random cases, assert an invariant,
-//! and report the failing seed for reproduction.
+//! and report the failing seed for reproduction. `mock_system` is a
+//! fully scripted `ServingSystem` for engine/admission tests and benches.
 
+pub mod mock_system;
 pub mod prop;
+
+pub use mock_system::MockServingSystem;

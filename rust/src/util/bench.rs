@@ -100,6 +100,10 @@ pub struct BenchRecord {
     /// Sweep worker count of the measurement; `None` for single-threaded
     /// micro-benches (serialized as absent).
     pub threads: Option<usize>,
+    /// Admission policy of the measurement (`fifo` / `slo` / `kv`);
+    /// `None` for benches that don't go through admission (absent in
+    /// the JSON).
+    pub policy: Option<String>,
 }
 
 impl BenchRecord {
@@ -110,12 +114,19 @@ impl BenchRecord {
             mean_ns: r.mean_ns,
             steps_per_s: if r.mean_ns > 0.0 { 1e9 / r.mean_ns } else { 0.0 },
             threads: None,
+            policy: None,
         }
     }
 
     /// Tag the record with the sweep worker count it was measured at.
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = Some(threads);
+        self
+    }
+
+    /// Tag the record with the admission policy it was measured under.
+    pub fn with_policy(mut self, policy: &str) -> Self {
+        self.policy = Some(policy.to_string());
         self
     }
 }
@@ -138,13 +149,13 @@ fn json_escape(s: &str) -> String {
     out
 }
 
-/// Render a `BENCH_*.json` trajectory document (schema `janus-bench-v2`:
-/// v1 plus a top-level `hardware_threads` and an optional per-record
-/// `threads` field for sweep benches). `timestamp_unix_s` and
-/// `hardware_threads` are passed in by the caller (the bench binary) —
-/// the harness itself never reads a clock for anything but interval
-/// measurement, and simulation code never reads one at all. Non-finite
-/// values serialize as 0 to keep the document valid JSON.
+/// Render a `BENCH_*.json` trajectory document (schema `janus-bench-v3`:
+/// v2 plus an optional per-record `policy` field for admission-path
+/// benches). `timestamp_unix_s` and `hardware_threads` are passed in by
+/// the caller (the bench binary) — the harness itself never reads a
+/// clock for anything but interval measurement, and simulation code
+/// never reads one at all. Non-finite values serialize as 0 to keep the
+/// document valid JSON.
 pub fn bench_json(
     timestamp_unix_s: u64,
     hardware_threads: usize,
@@ -158,7 +169,7 @@ pub fn bench_json(
         }
     };
     let mut out = String::from("{\n");
-    out.push_str("  \"schema\": \"janus-bench-v2\",\n");
+    out.push_str("  \"schema\": \"janus-bench-v3\",\n");
     out.push_str(&format!("  \"generated_unix_s\": {timestamp_unix_s},\n"));
     out.push_str(&format!("  \"hardware_threads\": {hardware_threads},\n"));
     out.push_str("  \"benches\": [\n");
@@ -167,12 +178,18 @@ pub fn bench_json(
             .threads
             .map(|t| format!(", \"threads\": {t}"))
             .unwrap_or_default();
+        let policy = r
+            .policy
+            .as_ref()
+            .map(|p| format!(", \"policy\": \"{}\"", json_escape(p)))
+            .unwrap_or_default();
         out.push_str(&format!(
-            "    {{\"name\": \"{}\", \"mean_ns\": {}, \"steps_per_s\": {}{}}}{}\n",
+            "    {{\"name\": \"{}\", \"mean_ns\": {}, \"steps_per_s\": {}{}{}}}{}\n",
             json_escape(&r.name),
             num(r.mean_ns),
             num(r.steps_per_s),
             threads,
+            policy,
             if i + 1 < records.len() { "," } else { "" }
         ));
     }
@@ -217,22 +234,32 @@ mod tests {
                 mean_ns: 12_345.678,
                 steps_per_s: 81_000.5,
                 threads: None,
+                policy: None,
             },
             BenchRecord {
                 name: "sweep/figures-grid".to_string(),
                 mean_ns: 1e6,
                 steps_per_s: 1e3,
                 threads: Some(4),
+                policy: None,
             },
             BenchRecord {
                 name: "quote\"and\\slash".to_string(),
                 mean_ns: f64::NAN,
                 steps_per_s: f64::INFINITY,
                 threads: None,
+                policy: None,
+            },
+            BenchRecord {
+                name: "admission/decode-loop".to_string(),
+                mean_ns: 2e3,
+                steps_per_s: 5e5,
+                threads: None,
+                policy: Some("kv".to_string()),
             },
         ];
         let doc = bench_json(1_753_000_000, 8, &records);
-        assert!(doc.contains("\"schema\": \"janus-bench-v2\""));
+        assert!(doc.contains("\"schema\": \"janus-bench-v3\""));
         assert!(doc.contains("\"generated_unix_s\": 1753000000"));
         assert!(doc.contains("\"hardware_threads\": 8"));
         assert!(doc.contains("\"mean_ns\": 12345.678"));
@@ -240,6 +267,9 @@ mod tests {
         // Sweep records carry their worker count; micro-benches don't.
         assert!(doc.contains("\"steps_per_s\": 1000.000, \"threads\": 4"));
         assert_eq!(doc.matches("\"threads\":").count(), 1);
+        // Admission records carry their policy; everything else doesn't.
+        assert!(doc.contains("\"steps_per_s\": 500000.000, \"policy\": \"kv\""));
+        assert_eq!(doc.matches("\"policy\":").count(), 1);
         // Escaping + non-finite fallback keep the document valid.
         assert!(doc.contains("quote\\\"and\\\\slash"));
         assert!(doc.contains("\"mean_ns\": 0, \"steps_per_s\": 0"));

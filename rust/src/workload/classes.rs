@@ -1,0 +1,188 @@
+//! Request SLO classes (the workload side of `sim::admission`).
+//!
+//! Production MoE serving mixes request populations with very different
+//! latency expectations — interactive chat, standard API traffic, and
+//! offline batch jobs. The admission subsystem schedules across these
+//! classes; this module defines the class alphabet and the seeded mix a
+//! workload draws each arriving request's class from.
+
+use crate::util::rng::Rng;
+
+/// Number of SLO classes. Every per-class accounting surface
+/// (`metrics::ClassStats` arrays, the engine's per-class counters) is
+/// indexed by [`Priority::rank`] in `0..NUM_CLASSES`.
+pub const NUM_CLASSES: usize = 3;
+
+/// A request's SLO class, ordered from most to least latency-sensitive.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Priority {
+    /// Chat-style traffic with a tight time-to-first-token expectation.
+    Interactive,
+    /// Standard API traffic.
+    Standard,
+    /// Offline/batch traffic: throughput matters, latency barely does.
+    Batch,
+}
+
+impl Priority {
+    /// Every class, in rank order (most latency-sensitive first).
+    pub const ALL: [Priority; NUM_CLASSES] =
+        [Priority::Interactive, Priority::Standard, Priority::Batch];
+
+    /// Scheduling rank: 0 is the most latency-sensitive class. Lower
+    /// ranks are admitted first and preempted last.
+    #[inline]
+    pub fn rank(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Standard => 1,
+            Priority::Batch => 2,
+        }
+    }
+
+    /// Inverse of [`Self::rank`] (panics out of range).
+    pub fn from_rank(rank: usize) -> Self {
+        Self::ALL[rank]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Standard => "standard",
+            Priority::Batch => "batch",
+        }
+    }
+}
+
+/// Seeded class mix: the probability weights a workload draws each
+/// request's [`Priority`] from. Weights need not be normalized.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClassMix {
+    /// Weight per class, indexed by [`Priority::rank`].
+    pub weights: [f64; NUM_CLASSES],
+}
+
+impl ClassMix {
+    /// Production-like default: 30% interactive / 50% standard / 20% batch.
+    pub fn default_mix() -> Self {
+        ClassMix {
+            weights: [0.3, 0.5, 0.2],
+        }
+    }
+
+    /// Every request in one class (handy for tests and ablations).
+    pub fn single(class: Priority) -> Self {
+        let mut weights = [0.0; NUM_CLASSES];
+        weights[class.rank()] = 1.0;
+        ClassMix { weights }
+    }
+
+    /// Weights must be finite, non-negative, and not all zero.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut total = 0.0;
+        for (i, &w) in self.weights.iter().enumerate() {
+            if !w.is_finite() || w < 0.0 {
+                return Err(format!(
+                    "class weight [{i}] must be finite and non-negative, got {w}"
+                ));
+            }
+            total += w;
+        }
+        if total <= 0.0 {
+            return Err("class mix needs at least one positive weight".to_string());
+        }
+        Ok(())
+    }
+
+    /// Draw one class (a single `f64` draw from `rng`): cumulative scan
+    /// over the weights, so identical seeds give identical class streams.
+    pub fn sample(&self, rng: &mut Rng) -> Priority {
+        let total: f64 = self.weights.iter().sum();
+        let mut target = rng.f64() * total;
+        for class in Priority::ALL {
+            let w = self.weights[class.rank()];
+            if target < w {
+                return class;
+            }
+            target -= w;
+        }
+        // Rounding can leave target == residual at the upper edge; the
+        // last class with any weight takes it.
+        *Priority::ALL
+            .iter()
+            .rev()
+            .find(|c| self.weights[c.rank()] > 0.0)
+            .unwrap_or(&Priority::Standard)
+    }
+}
+
+impl Default for ClassMix {
+    fn default() -> Self {
+        Self::default_mix()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranks_round_trip() {
+        for class in Priority::ALL {
+            assert_eq!(Priority::from_rank(class.rank()), class);
+        }
+        assert_eq!(Priority::Interactive.rank(), 0);
+        assert_eq!(Priority::Batch.rank(), NUM_CLASSES - 1);
+    }
+
+    #[test]
+    fn mix_sampling_matches_weights() {
+        let mix = ClassMix::default_mix();
+        let mut rng = Rng::seed_from_u64(7);
+        let mut counts = [0usize; NUM_CLASSES];
+        let n = 50_000;
+        for _ in 0..n {
+            counts[mix.sample(&mut rng).rank()] += 1;
+        }
+        for (i, &w) in mix.weights.iter().enumerate() {
+            let frac = counts[i] as f64 / n as f64;
+            assert!((frac - w).abs() < 0.02, "class {i}: {frac} vs {w}");
+        }
+    }
+
+    #[test]
+    fn sampling_is_seed_deterministic() {
+        let mix = ClassMix::default_mix();
+        let draw = |seed| {
+            let mut rng = Rng::seed_from_u64(seed);
+            (0..256).map(|_| mix.sample(&mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(draw(42), draw(42));
+        assert_ne!(draw(42), draw(43));
+    }
+
+    #[test]
+    fn single_class_mix_always_returns_it() {
+        let mix = ClassMix::single(Priority::Batch);
+        let mut rng = Rng::seed_from_u64(1);
+        for _ in 0..100 {
+            assert_eq!(mix.sample(&mut rng), Priority::Batch);
+        }
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_mixes() {
+        assert!(ClassMix::default_mix().validate().is_ok());
+        assert!(ClassMix { weights: [0.0; 3] }.validate().is_err());
+        assert!(ClassMix {
+            weights: [1.0, -0.5, 0.0]
+        }
+        .validate()
+        .is_err());
+        assert!(ClassMix {
+            weights: [f64::NAN, 1.0, 1.0]
+        }
+        .validate()
+        .is_err());
+    }
+}

@@ -5,12 +5,16 @@
 //! arrivals, and (c) one-week/24-hour production traces with diurnal
 //! patterns peaking at ~7.5× the mean. None of those datasets ship with
 //! this environment, so this module synthesizes statistically matching
-//! equivalents (see DESIGN.md substitution table).
+//! equivalents (see DESIGN.md substitution table). `classes` adds the
+//! SLO-class alphabet + seeded mix the admission subsystem
+//! (`sim::admission`) schedules across.
 
 pub mod arrivals;
+pub mod classes;
 pub mod lengths;
 pub mod trace;
 
 pub use arrivals::{ArrivalProcess, BurstyPoisson};
+pub use classes::{ClassMix, Priority, NUM_CLASSES};
 pub use lengths::{LengthModel, RequestLen};
 pub use trace::{DiurnalTrace, Request, TraceConfig};

@@ -1,0 +1,200 @@
+//! Behavioral + determinism pins for the `sim::admission` subsystem
+//! (tier-1).
+//!
+//! The acceptance contract of the admission PR:
+//!
+//! - with `SloClass`/`KvAware` under an overload trace, high-class
+//!   (interactive) TTFT-SLO attainment strictly exceeds FIFO's while
+//!   aggregate throughput stays within 5%;
+//! - `KvAware` preempts lowest-class decodes under KV pressure and the
+//!   run stays bit-deterministic;
+//! - starvation aging keeps low classes served under a high-class flood.
+//!
+//! All scenarios run on the scripted `MockServingSystem` (constant step
+//! time, explicit capacities) so the pins are about the admission
+//! subsystem, not the serving-system models — those are covered by the
+//! `admission.tsv` golden snapshot.
+
+use janus::config::serving::Slo;
+use janus::sim::admission::{AdmissionConfig, PolicyKind};
+use janus::sim::engine::{self, AutoscaleResult, AutoscaleScenario};
+use janus::testing::MockServingSystem;
+use janus::workload::classes::Priority;
+use janus::workload::trace::DiurnalTrace;
+
+const SEED: u64 = 20260727;
+
+/// ~2× overload: capacity 8 at 62.5 ms/step serves 128 tok/s; 8 req/s
+/// at ~32 output tokens each offers ~256 tok/s. The bounded queue backs
+/// up, so FIFO queue waits (≈ queue / release rate ≈ 16 s) blow through
+/// the 1 s TTFT target, while the interactive share alone (~30% ≈ 77
+/// tok/s) fits the capacity — the class-aware policies serve it within
+/// a couple of slot releases (~0.25 s apart).
+fn overload_scenario(policy: PolicyKind) -> AutoscaleScenario {
+    let trace = DiurnalTrace::ramp(240.0 / 3600.0, 30.0, 8.0, 8.0, 11);
+    let mut sc = AutoscaleScenario::new(60.0, 32.0, Slo::from_ms(300.0), trace);
+    sc.queue_capacity = 64;
+    sc.admission = AdmissionConfig::with_policy(policy);
+    sc
+}
+
+fn run_overload(policy: PolicyKind) -> AutoscaleResult {
+    let mut sys = MockServingSystem::new(4, 8, 0.0625);
+    engine::autoscale(&mut sys, &overload_scenario(policy), SEED).expect("valid scenario")
+}
+
+#[test]
+fn high_class_attainment_beats_fifo_within_throughput_budget() {
+    let fifo = run_overload(PolicyKind::Fifo);
+    assert_eq!(fifo.policy, "fifo");
+    let interactive = Priority::Interactive.rank();
+    // The overload must actually hurt FIFO's interactive class,
+    // otherwise the comparison is vacuous.
+    let fifo_att = fifo.per_class[interactive].ttft_attainment();
+    assert!(
+        fifo_att < 0.5,
+        "overload too mild: FIFO interactive TTFT attainment {fifo_att}"
+    );
+    for policy in [PolicyKind::SloClass, PolicyKind::KvAware] {
+        let r = run_overload(policy);
+        let att = r.per_class[interactive].ttft_attainment();
+        assert!(
+            att > fifo_att,
+            "{}: interactive TTFT attainment {att} must strictly exceed FIFO's {fifo_att}",
+            r.policy
+        );
+        // Aggregate throughput within 5% of FIFO's.
+        let (f, g) = (fifo.generated_tokens as f64, r.generated_tokens as f64);
+        assert!(
+            (g - f).abs() <= 0.05 * f,
+            "{}: generated {g} vs FIFO {f} drifts > 5%",
+            r.policy
+        );
+        // Priority admission reorders service, it must not lose work.
+        assert!(r.completed_requests > 0, "{}", r.policy);
+    }
+}
+
+#[test]
+fn per_class_counters_are_consistent() {
+    for policy in PolicyKind::ALL {
+        let r = run_overload(policy);
+        let sum = |f: fn(&janus::metrics::ClassStats) -> u64| -> u64 {
+            r.per_class.iter().map(f).sum()
+        };
+        assert_eq!(sum(|c| c.admitted) as usize, r.admitted_requests, "{}", r.policy);
+        assert_eq!(sum(|c| c.rejected) as usize, r.rejected_requests, "{}", r.policy);
+        assert_eq!(sum(|c| c.completed) as usize, r.completed_requests, "{}", r.policy);
+        assert_eq!(sum(|c| c.preempted) as usize, r.preemptions, "{}", r.policy);
+        assert_eq!(sum(|c| c.tokens) as usize, r.generated_tokens, "{}", r.policy);
+        assert!(sum(|c| c.first_tokens) >= sum(|c| c.completed), "{}", r.policy);
+        for c in &r.per_class {
+            assert!(c.ttft_ok <= c.first_tokens);
+            assert!(c.tokens_ok <= c.tokens);
+        }
+    }
+}
+
+#[test]
+fn every_policy_is_bit_deterministic() {
+    let fingerprint = |r: &AutoscaleResult| -> Vec<u64> {
+        let mut v = vec![
+            r.gpu_hours.to_bits(),
+            r.tpot_mean.to_bits(),
+            r.ttft_p99.to_bits(),
+            r.admission_delay_p99.to_bits(),
+            r.slo_attainment.to_bits(),
+            r.steps as u64,
+            r.admitted_requests as u64,
+            r.completed_requests as u64,
+            r.rejected_requests as u64,
+            r.generated_tokens as u64,
+            r.preemptions as u64,
+        ];
+        for c in &r.per_class {
+            v.extend([c.admitted, c.completed, c.rejected, c.preempted, c.ttft_ok]);
+        }
+        v
+    };
+    for policy in PolicyKind::ALL {
+        let a = fingerprint(&run_overload(policy));
+        let b = fingerprint(&run_overload(policy));
+        assert_eq!(a, b, "{} not bit-deterministic", policy.name());
+    }
+}
+
+#[test]
+fn kv_aware_preempts_lowest_classes_under_kv_pressure() {
+    // Long decodes (mean 64 output tokens) against a 160-token KV
+    // budget: resident context outgrows capacity mid-decode, forcing
+    // preemption; preempted requests must still complete after their
+    // recompute prefill.
+    let trace = DiurnalTrace::ramp(90.0 / 3600.0, 30.0, 1.0, 1.0, 13);
+    let mut sc = AutoscaleScenario::new(45.0, 64.0, Slo::from_ms(300.0), trace);
+    sc.queue_capacity = 64;
+    sc.admission = AdmissionConfig::with_policy(PolicyKind::KvAware);
+    let run = || {
+        let mut sys = MockServingSystem::new(4, 4, 0.05).with_kv_capacity(160.0);
+        engine::autoscale(&mut sys, &sc, SEED).expect("valid scenario")
+    };
+    let r = run();
+    assert_eq!(r.policy, "kv");
+    assert!(r.preemptions > 0, "KV pressure never triggered preemption");
+    assert!(r.completed_requests > 0, "preempted work never finished");
+    // Same seed ⇒ bit-identical preemption schedule.
+    let r2 = run();
+    assert_eq!(r.preemptions, r2.preemptions);
+    assert_eq!(r.completed_requests, r2.completed_requests);
+    assert_eq!(r.ttft_p99.to_bits(), r2.ttft_p99.to_bits());
+}
+
+#[test]
+fn aging_keeps_low_classes_served_under_high_class_flood() {
+    // 4 req/s at ~8 tokens ≈ 32 tok/s offered against 8 tok/s of
+    // capacity: interactive traffic alone can saturate the batch, so
+    // without aging the batch class would starve outright.
+    let trace = DiurnalTrace::ramp(120.0 / 3600.0, 30.0, 4.0, 4.0, 17);
+    let mut sc = AutoscaleScenario::new(60.0, 8.0, Slo::from_ms(300.0), trace);
+    sc.queue_capacity = 128;
+    sc.admission = AdmissionConfig::with_policy(PolicyKind::SloClass);
+    sc.admission.aging_secs = 5.0;
+    let mut sys = MockServingSystem::new(4, 2, 0.25);
+    let r = engine::autoscale(&mut sys, &sc, SEED).expect("valid scenario");
+    let batch_rank = Priority::Batch.rank();
+    assert!(
+        r.per_class[batch_rank].first_tokens > 0,
+        "batch class starved despite aging: {:?}",
+        r.per_class[batch_rank]
+    );
+    // And the priority order still holds where it matters: interactive
+    // waits less than batch on average (admission order is class-aware).
+    assert!(
+        r.per_class[Priority::Interactive.rank()].ttft_attainment()
+            >= r.per_class[batch_rank].ttft_attainment(),
+        "aging inverted the priority order"
+    );
+}
+
+#[test]
+fn failure_scenario_supports_all_policies() {
+    use janus::sim::engine::FailureScenario;
+    for policy in PolicyKind::ALL {
+        let mut sc = FailureScenario::new(Slo::from_ms(300.0), 2.0, 8.0, 90.0)
+            .with_failure(30.0, 2, 20.0);
+        sc.queue_capacity = 64;
+        sc.admission = AdmissionConfig::with_policy(policy);
+        let run = || {
+            let mut sys = MockServingSystem::new(4, 2, 0.25);
+            engine::failure_injection(&mut sys, &sc, SEED).expect("valid scenario")
+        };
+        let r = run();
+        assert_eq!(r.policy, policy.name());
+        assert!(r.steps > 0 && r.completed_requests > 0, "{}", r.policy);
+        let sum: u64 = r.per_class.iter().map(|c| c.admitted).sum();
+        assert_eq!(sum as usize, r.admitted_requests, "{}", r.policy);
+        // Bit-deterministic under every policy.
+        let r2 = run();
+        assert_eq!(r.tpot.mean().to_bits(), r2.tpot.mean().to_bits());
+        assert_eq!(r.admitted_requests, r2.admitted_requests);
+    }
+}

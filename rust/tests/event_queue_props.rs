@@ -38,7 +38,7 @@ fn push_both(
     time: f64,
     id: &mut u32,
 ) {
-    let kind = EventKind::Arrival { output_tokens: *id };
+    let kind = EventKind::probe_arrival(*id);
     *id += 1;
     cal.push(time, kind.clone());
     heap.push(time, kind);
@@ -118,7 +118,7 @@ fn equal_timestamp_bursts_always_fifo() {
         let mut expected: Vec<(u64, u32)> = Vec::new();
         for &t in &times {
             for _ in 0..1 + rng.usize_below(30) {
-                cal.push(t, EventKind::Arrival { output_tokens: id });
+                cal.push(t, EventKind::probe_arrival(id));
                 expected.push((t.to_bits(), id));
                 id += 1;
             }
@@ -132,13 +132,134 @@ fn equal_timestamp_bursts_always_fifo() {
             assert_eq!(ev.time.to_bits(), *t_bits, "position {i}");
             assert_eq!(
                 ev.kind,
-                EventKind::Arrival {
-                    output_tokens: *want_id
-                },
+                EventKind::probe_arrival(*want_id),
                 "position {i}: tie order broken"
             );
         }
         assert!(cal.pop().is_none());
+    });
+}
+
+/// Re-tune on a drained-then-refilled queue: the first population tunes
+/// the bucket width to millisecond gaps; after a full drain, a refill in
+/// a completely different time regime (hour-scale gaps, plus ties) must
+/// still dequeue in exact `(time, seq)` order. The stale width from the
+/// first life of the queue cannot corrupt the second.
+#[test]
+fn drained_then_refilled_queue_stays_exact() {
+    let mut cal = EventQueue::new();
+    let mut heap = BinaryHeapEventQueue::new();
+    let mut id = 0u32;
+    // Life 1: dense millisecond-scale population, big enough to force
+    // growth resizes (and the width re-tune that comes with them).
+    for i in 0..200 {
+        push_both(&mut cal, &mut heap, i as f64 * 1e-3, &mut id);
+    }
+    loop {
+        let (a, b) = (cal.pop(), heap.pop());
+        let done = a.is_none();
+        assert_same_event(a, b, "life-1 drain");
+        if done {
+            break;
+        }
+    }
+    assert!(cal.is_empty());
+    // Life 2: sparse hour-scale events with equal-timestamp bursts,
+    // pushed out of time order.
+    for &t in &[7200.0, 3600.0, 10800.0, 3600.0, 7200.0, 3600.0] {
+        push_both(&mut cal, &mut heap, t, &mut id);
+    }
+    for i in 0..100 {
+        push_both(&mut cal, &mut heap, 5000.0 + i as f64 * 3600.0, &mut id);
+    }
+    let mut popped = 0usize;
+    loop {
+        let (a, b) = (cal.pop(), heap.pop());
+        let done = a.is_none();
+        assert_same_event(a, b, &format!("life-2 pop {popped}"));
+        if done {
+            break;
+        }
+        popped += 1;
+    }
+    assert_eq!(popped, 106);
+}
+
+/// All-equal-timestamp workload: every event hashes to one bucket, the
+/// resize gap list is all zeros (so the width re-tune must not divide by
+/// or adopt a zero), and FIFO order must survive growth resizes, shrink
+/// resizes, and interleaved pops.
+#[test]
+fn all_equal_timestamps_single_bucket_stays_fifo() {
+    let mut cal = EventQueue::new();
+    let mut next_id = 0u32;
+    let mut expect_front = 0u32;
+    // Push 400 (forces several growth resizes with every entry in one
+    // bucket), pop 300 (forces shrink resizes mid-tie-stream), push
+    // another burst at the same timestamp, then drain.
+    for _ in 0..400 {
+        cal.push(42.0, EventKind::probe_arrival(next_id));
+        next_id += 1;
+    }
+    for _ in 0..300 {
+        let ev = cal.pop().expect("event");
+        assert_eq!(ev.time, 42.0);
+        assert_eq!(ev.kind, EventKind::probe_arrival(expect_front));
+        expect_front += 1;
+    }
+    for _ in 0..100 {
+        cal.push(42.0, EventKind::probe_arrival(next_id));
+        next_id += 1;
+    }
+    while let Some(ev) = cal.pop() {
+        assert_eq!(ev.kind, EventKind::probe_arrival(expect_front));
+        expect_front += 1;
+    }
+    assert_eq!(expect_front, next_id, "events lost or reordered");
+}
+
+/// Property pin: heap equivalence holds across *forced* mid-stream
+/// resizes — each case pushes enough to guarantee growth resizes, then
+/// drains below the shrink threshold, then pushes a second wave into the
+/// re-tuned calendar, comparing event-for-event the whole way.
+#[test]
+fn equivalence_holds_across_forced_midstream_resize() {
+    check("calendar ≡ heap across forced resizes", 100, |rng| {
+        let mut cal = EventQueue::new();
+        let mut heap = BinaryHeapEventQueue::new();
+        let mut id = 0u32;
+        // Wave 1: > 2×16 events forces at least one growth resize.
+        let wave1 = 40 + rng.usize_below(200);
+        let spread = [1e-4, 1.0, 1000.0][rng.usize_below(3)];
+        for _ in 0..wave1 {
+            push_both(&mut cal, &mut heap, rng.f64() * spread, &mut id);
+        }
+        // Drain to < len/4 of the grown bucket count: forces shrinks.
+        let keep = rng.usize_below(8);
+        while cal.len() > keep {
+            let (a, b) = (cal.pop(), heap.pop());
+            assert_same_event(a, b, "forced-shrink drain");
+        }
+        // Wave 2 in a (possibly) different regime, behind and ahead of
+        // the scan point, with ties on a shared base.
+        let spread2 = [1e-3, 60.0, 86_400.0][rng.usize_below(3)];
+        let base = rng.f64() * spread2;
+        for _ in 0..20 + rng.usize_below(60) {
+            let t = if rng.bool_with(0.3) {
+                base
+            } else {
+                rng.f64() * spread2
+            };
+            push_both(&mut cal, &mut heap, t, &mut id);
+        }
+        loop {
+            let (a, b) = (cal.pop(), heap.pop());
+            let done = a.is_none();
+            assert_same_event(a, b, "final drain");
+            if done {
+                break;
+            }
+        }
     });
 }
 

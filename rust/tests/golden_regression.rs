@@ -3,9 +3,15 @@
 //! - `fixed_batch.tsv` — seeded fixed-batch runs for Janus and the three
 //!   baselines at two batch sizes (TPOT mean/P99, tokens/s/GPU).
 //! - `autoscale.tsv` — the arrival-driven autoscale scenario (continuous
-//!   batching + bounded admission queue) for all four systems: GPU-hours,
-//!   duration-weighted feasible fraction, per-token TPOT percentiles,
-//!   admission-delay P99, SLO attainment, and the integer flow counters.
+//!   batching + bounded admission queue, FIFO admission pinned
+//!   explicitly) for all four systems: GPU-hours, duration-weighted
+//!   feasible fraction, per-token TPOT percentiles, admission-delay P99,
+//!   SLO attainment, and the integer flow counters.
+//! - `admission.tsv` — the admission subsystem: one row per (system ×
+//!   policy ∈ {fifo, slo, kv}) over a short overload ramp, pinning
+//!   per-class TTFT attainment, aggregate token attainment, and the
+//!   flow/preemption counters. Policies are enumerated explicitly, so
+//!   the snapshot is identical under every `JANUS_ADMISSION` matrix leg.
 //!
 //! Bootstrap: on a machine without a snapshot (first run after a clone,
 //! or after deleting it), the test writes the file and passes with a
@@ -31,6 +37,7 @@ use janus::config::hardware::{paper_testbed, HardwareProfile};
 use janus::config::models::{self, MoeModel};
 use janus::config::serving::Slo;
 use janus::routing::gate::ExpertPopularity;
+use janus::sim::admission::{AdmissionConfig, PolicyKind};
 use janus::sim::engine::{self, AutoscaleScenario, FixedBatchScenario};
 use janus::sim::sweep;
 use janus::workload::trace::DiurnalTrace;
@@ -194,7 +201,11 @@ fn current_autoscale_snapshot_at(threads: usize) -> String {
     let hw = paper_testbed();
     let pop = ExpertPopularity::Zipf { s: 0.4 };
     let trace = DiurnalTrace::ramp(720.0 / 3600.0, 30.0, 1.0, 8.0, 4242);
-    let scenario = AutoscaleScenario::new(300.0, 64.0, Slo::from_ms(200.0), trace);
+    let mut scenario = AutoscaleScenario::new(300.0, 64.0, Slo::from_ms(200.0), trace);
+    // The pre-admission-subsystem baseline: FIFO pinned explicitly, so
+    // this snapshot stays byte-identical under the JANUS_ADMISSION CI
+    // matrix (the per-policy rows live in admission.tsv).
+    scenario.admission = AdmissionConfig::fifo();
     let mut out = String::from(
         "# Golden arrival-driven autoscale snapshot (DeepSeek-V2, paper\n\
          # testbed, zipf 0.4, SLO 200 ms, 720 s ramp 1->8 req/s, 64\n\
@@ -230,6 +241,58 @@ fn current_autoscale_snapshot_at(threads: usize) -> String {
 
 fn current_autoscale_snapshot() -> String {
     current_autoscale_snapshot_at(sweep::resolve_threads(None))
+}
+
+/// One row per (system × admission policy) over a short overload ramp:
+/// per-class TTFT attainment, aggregate token attainment, and the flow
+/// counters. Policies are enumerated explicitly (never from
+/// `JANUS_ADMISSION`), so one committed snapshot pins all three and the
+/// CI admission matrix compares against the same bytes.
+fn current_admission_snapshot_at(threads: usize) -> String {
+    let model = models::deepseek_v2();
+    let hw = paper_testbed();
+    let pop = ExpertPopularity::Zipf { s: 0.4 };
+    let trace = DiurnalTrace::ramp(240.0 / 3600.0, 30.0, 4.0, 24.0, 777);
+    let mut out = String::from(
+        "# Golden admission snapshot (DeepSeek-V2, paper testbed, zipf 0.4,\n\
+         # SLO 200 ms / TTFT 1 s, 240 s overload ramp 4->24 req/s, 64\n\
+         # tok/req, 60 s decisions, seed 424242). One row per system x\n\
+         # admission policy. Regenerate: JANUS_BLESS=1.\n\
+         # system/policy\tttft_att_interactive\tttft_att_standard\tttft_att_batch\tattainment\
+\tadmitted\tcompleted\trejected\tpreempted\tgenerated\n",
+    );
+    let cells: Vec<(usize, PolicyKind)> = (0..SYSTEMS)
+        .flat_map(|s| PolicyKind::ALL.into_iter().map(move |p| (s, p)))
+        .collect();
+    let rows = sweep::sweep(&cells, threads, |_, &(which, policy)| {
+        let mut scenario =
+            AutoscaleScenario::new(60.0, 64.0, Slo::from_ms(200.0), trace.clone());
+        scenario.admission = AdmissionConfig::with_policy(policy);
+        let mut sys = build_system(which, &model, &hw, &pop);
+        let r = engine::autoscale(sys.as_mut(), &scenario, SEED).expect("valid scenario");
+        format!(
+            "{}/{}\t{:.17e}\t{:.17e}\t{:.17e}\t{:.17e}\t{}\t{}\t{}\t{}\t{}\n",
+            r.system,
+            policy.name(),
+            r.per_class[0].ttft_attainment(),
+            r.per_class[1].ttft_attainment(),
+            r.per_class[2].ttft_attainment(),
+            r.slo_attainment,
+            r.admitted_requests,
+            r.completed_requests,
+            r.rejected_requests,
+            r.preemptions,
+            r.generated_tokens
+        )
+    });
+    for row in rows {
+        out.push_str(&row);
+    }
+    out
+}
+
+fn current_admission_snapshot() -> String {
+    current_admission_snapshot_at(sweep::resolve_threads(None))
 }
 
 #[test]
@@ -269,6 +332,26 @@ fn autoscale_metrics_match_snapshot() {
     );
 }
 
+#[test]
+fn admission_policies_match_snapshot() {
+    let path = snapshot_path("admission.tsv");
+    let fresh = current_admission_snapshot();
+    let Some(committed) = committed_or_bootstrap(&path, &fresh) else {
+        return;
+    };
+    compare_rows(
+        &parse_rows(&committed, 4, 5),
+        &parse_rows(&fresh, 4, 5),
+        &[
+            "ttft_att_interactive",
+            "ttft_att_standard",
+            "ttft_att_batch",
+            "attainment",
+        ],
+        &["admitted", "completed", "rejected", "preempted", "generated"],
+    );
+}
+
 /// The snapshot generators are bit-deterministic — the precondition for
 /// the golden files being meaningful across machines and runs — and the
 /// sweep's worker count is not an observable: the serial (threads=1)
@@ -277,9 +360,11 @@ fn autoscale_metrics_match_snapshot() {
 fn snapshot_generation_is_deterministic() {
     assert_eq!(current_fixed_batch_snapshot(), current_fixed_batch_snapshot());
     assert_eq!(current_autoscale_snapshot(), current_autoscale_snapshot());
+    assert_eq!(current_admission_snapshot(), current_admission_snapshot());
     assert_eq!(
         current_fixed_batch_snapshot_at(1),
         current_fixed_batch_snapshot()
     );
     assert_eq!(current_autoscale_snapshot_at(1), current_autoscale_snapshot());
+    assert_eq!(current_admission_snapshot_at(1), current_admission_snapshot());
 }

@@ -4,15 +4,17 @@
 //! same cell list produces byte-identical serialized results at
 //! `threads = 1` and at `threads = 4` (falling back to 2 when the
 //! machine has fewer than 4 hardware threads — the claim-race coverage
-//! only needs > 1 worker), and a cell's RNG streams are a pure function
-//! of the cell — worker scheduling cannot perturb them.
+//! only needs > 1 worker), a cell's RNG streams are a pure function
+//! of the cell — worker scheduling cannot perturb them — and the
+//! chunked work claiming (K cells per `fetch_add`, `JANUS_CHUNK`)
+//! is equally unobservable for K ∈ {1, 3, grid-size}.
 
 use janus::baselines::{build_eval_system, ServingSystem};
 use janus::config::hardware::paper_testbed;
 use janus::config::models;
 use janus::config::serving::Slo;
 use janus::sim::engine::{AutoscaleScenario, FixedBatchScenario, Scenario, ScenarioOutcome};
-use janus::sim::sweep::{self, run_cells, sweep, SweepCell};
+use janus::sim::sweep::{self, run_cells, sweep, sweep_chunked, SweepCell};
 use janus::util::rng::{split_seed, Rng};
 use janus::workload::trace::DiurnalTrace;
 
@@ -130,6 +132,52 @@ fn worker_scheduling_cannot_perturb_per_cell_rng_streams() {
     for (i, &c) in reversed.iter().enumerate() {
         assert_eq!(rev_results[i], serial[c as usize], "slot {i}");
     }
+}
+
+#[test]
+fn chunked_claiming_is_byte_identical_for_k_1_3_and_grid_size() {
+    // Chunked work claiming (K cells per fetch_add) must not be an
+    // observable either: for K ∈ {1, 3, grid-size} the simulation sweep
+    // serializes to the same bytes as the serial run. K = 1 is the
+    // classic one-cell claim; K = grid-size degenerates to one worker
+    // draining everything while the others find the queue empty.
+    let model = models::deepseek_v2();
+    let hw = paper_testbed();
+    let pop = janus::routing::gate::ExpertPopularity::Zipf { s: 0.4 };
+    let cells: Vec<(usize, usize)> = (0..4usize)
+        .flat_map(|s| [32usize, 64, 96].into_iter().map(move |b| (s, b)))
+        .collect();
+    let grid = cells.len();
+    let run = |threads: usize, chunk: usize| -> String {
+        sweep_chunked(&cells, threads, chunk, |_, &(s, batch)| {
+            let mut sys = build_eval_system(s, model.clone(), hw.clone(), &pop);
+            let r = janus::sim::engine::fixed_batch(
+                sys.as_mut(),
+                &FixedBatchScenario {
+                    batch,
+                    slo: Slo::from_ms(200.0),
+                    steps: 6,
+                },
+                13,
+            );
+            format!(
+                "{}/B{batch}\t{:016x}\t{:016x}\n",
+                r.system,
+                r.tpot_mean.to_bits(),
+                r.tpot_p99.to_bits()
+            )
+        })
+        .concat()
+    };
+    let serial = run(1, 1);
+    for chunk in [1usize, 3, grid] {
+        assert_eq!(serial, run(2, chunk), "chunk={chunk} threads=2");
+        assert_eq!(serial, run(4, chunk), "chunk={chunk} threads=4");
+    }
+    // resolve_chunk: explicit wins, zero falls through, auto ≥ 1.
+    assert_eq!(sweep::resolve_chunk(Some(3), grid, 4), 3);
+    assert!(sweep::resolve_chunk(Some(0), grid, 4) >= 1);
+    assert!(sweep::resolve_chunk(None, grid, 4) >= 1);
 }
 
 #[test]
