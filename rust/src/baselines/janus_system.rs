@@ -7,7 +7,7 @@ use crate::config::serving::{self, Deployment, SchedulerKind, Slo};
 use crate::placement::ExpertPlacement;
 use crate::routing::gate::{ExpertPopularity, GateSim};
 use crate::routing::trace::{ActivationTrace, RoutingBatch};
-use crate::scaling::{AmaxTable, DecisionCache, DecisionKind, Scaler};
+use crate::scaling::{AmaxTable, DecisionCache, DecisionKind, Scaler, ScalingSignal};
 use crate::scheduler::aebs;
 use crate::util::rng::Rng;
 
@@ -190,6 +190,24 @@ impl ServingSystem for JanusSystem {
     fn configure_for_demand(&mut self, lambda: f64, slo: Slo) -> Option<ConfigInfo> {
         let pool = self.scaler.n_max as u64;
         let key = self.decisions.key(DecisionKind::Demand, lambda, slo, pool);
+        let s_ctx = self.s_ctx;
+        let decision = self.decide(key, |sc| {
+            sc.optimize(lambda, slo, s_ctx).map(|plan| plan.deployment)
+        });
+        self.adopt(decision)
+    }
+
+    fn configure_with_signal(&mut self, signal: &ScalingSignal, slo: Slo) -> Option<ConfigInfo> {
+        let lambda = signal.planned_demand();
+        let slo = signal.effective_slo(slo);
+        let pool = self.scaler.n_max as u64;
+        let key = self.decisions.key_with_signal(
+            DecisionKind::Demand,
+            lambda,
+            slo,
+            pool,
+            signal.fingerprint(),
+        );
         let s_ctx = self.s_ctx;
         let decision = self.decide(key, |sc| {
             sc.optimize(lambda, slo, s_ctx).map(|plan| plan.deployment)

@@ -15,7 +15,7 @@ use crate::routing::gate::{ExpertPopularity, GateSim};
 use crate::routing::trace::RoutingBatch;
 use crate::scheduler::baselines as sched;
 use crate::scaling::littles_law::{self, FixedPoint};
-use crate::scaling::{DecisionCache, DecisionKind};
+use crate::scaling::{DecisionCache, DecisionKind, ScalingSignal};
 use crate::util::rng::Rng;
 
 use super::system::{ConfigInfo, ServingSystem, StepOutcome};
@@ -288,6 +288,20 @@ impl ServingSystem for SgLang {
     fn configure_for_demand(&mut self, lambda: f64, slo: Slo) -> Option<ConfigInfo> {
         let pool = self.pool_gpus as u64;
         let key = self.decisions.key(DecisionKind::Demand, lambda, slo, pool);
+        self.decide(key, |sys| sys.configure_for_demand_uncached(lambda, slo))
+    }
+
+    fn configure_with_signal(&mut self, signal: &ScalingSignal, slo: Slo) -> Option<ConfigInfo> {
+        let lambda = signal.planned_demand();
+        let slo = signal.effective_slo(slo);
+        let pool = self.pool_gpus as u64;
+        let key = self.decisions.key_with_signal(
+            DecisionKind::Demand,
+            lambda,
+            slo,
+            pool,
+            signal.fingerprint(),
+        );
         self.decide(key, |sys| sys.configure_for_demand_uncached(lambda, slo))
     }
 

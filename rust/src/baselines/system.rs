@@ -1,6 +1,7 @@
 //! The common serving-system interface the simulator drives.
 
 use crate::config::serving::Slo;
+use crate::scaling::ScalingSignal;
 use crate::util::rng::Rng;
 
 /// A system's chosen resource configuration.
@@ -37,6 +38,17 @@ pub trait ServingSystem {
     /// default derives the steady-state batch via each system's own
     /// latency model; implementations may override the config space.
     fn configure_for_demand(&mut self, lambda: f64, slo: Slo) -> Option<ConfigInfo>;
+
+    /// Closed-loop scaling decision from a full [`ScalingSignal`]: size
+    /// for [`ScalingSignal::planned_demand`] (forecast raised by
+    /// measured throughput and backlog drain) under the signal's
+    /// [`ScalingSignal::effective_slo`] (per-class TPOT targets tighten
+    /// the global SLO). The default reuses `configure_for_demand`;
+    /// systems with decision caches override it so memoized closed-loop
+    /// decisions key on the signal's fingerprint as well.
+    fn configure_with_signal(&mut self, signal: &ScalingSignal, slo: Slo) -> Option<ConfigInfo> {
+        self.configure_for_demand(signal.planned_demand(), signal.effective_slo(slo))
+    }
 
     /// Simulate one decode step at total batch `batch` under the current
     /// configuration.

@@ -3,7 +3,7 @@
 //! Usage: `figures <id> [--steps N] [--seed S] [--threads N]
 //! [--cells SUBSTR]`, where `<id>` is one of `table1 table2 fig1 fig2
 //! fig3 fig4 fig8 fig9 fig10 fig11 fig12 fig13 fig14 fig15 fig16 fig17
-//! admission all`.
+//! admission flashcrowd all`.
 //!
 //! `--cells SUBSTR` regenerates only the sweep cells whose label
 //! contains SUBSTR in panels built on labeled cells (currently the
@@ -43,16 +43,18 @@ use janus::perfmodel::{attention, coeffs::LayerCoeffs, moe, TpotModel};
 use janus::placement::ExpertPlacement;
 use janus::routing::gate::{ExpertPopularity, GateSim};
 use janus::routing::trace::ActivationTrace;
-use janus::scaling::{amax_bound, AmaxTable, Scaler};
+use janus::scaling::{amax_bound, AmaxTable, Scaler, ScalingMode};
 use janus::scheduler::{self, aebs};
 use janus::sim::admission::{AdmissionConfig, PolicyKind, Priority};
 use janus::sim::autoscale_sim::AutoscaleSim;
 use janus::sim::decode_sim::evaluate_fixed_batch;
 use janus::sim::engine::{AutoscaleScenario, Scenario, ScenarioOutcome};
 use janus::sim::sweep::{self, SweepCell};
+use janus::testing::MockServingSystem;
 use janus::util::cli::Args;
 use janus::util::rng::{split_seed, Rng};
 use janus::util::table::{fnum, Table};
+use janus::workload::classes::ClassMix;
 use janus::workload::trace::{DiurnalTrace, TraceConfig};
 
 /// Buffered `writeln!` whose io error (infallible on String) is dropped.
@@ -107,6 +109,7 @@ fn main() {
         ("hetero", hetero, false),
         ("pipelining", pipelining, false),
         ("admission", admission, false),
+        ("flashcrowd", flashcrowd, false),
     ];
     if which == "all" {
         // Panel-level sweep: each non-timing panel is one cell rendering
@@ -166,6 +169,13 @@ fn build_trace(model: &MoeModel, seed: u64) -> (ActivationTrace, GateSim) {
 /// which sweep worker ran it).
 fn rep_rng(panel_id: u64, rep: usize) -> Rng {
     Rng::seed_from_u64(split_seed(panel_id, rep as u64))
+}
+
+/// Render an optional per-class attainment: `-` marks "no samples" (a
+/// class that served nothing has no attainment, which must not render
+/// as a perfect 1.000).
+fn fatt(att: Option<f64>) -> String {
+    att.map(|v| fnum(v, 3)).unwrap_or_else(|| "-".to_string())
 }
 
 // ---------------------------------------------------------------- table 1
@@ -1133,8 +1143,8 @@ fn admission(args: &Args, threads: usize, out: &mut String) {
             t.row([
                 cell.label.clone(),
                 class.name().to_string(),
-                fnum(c.ttft_attainment(), 3),
-                fnum(c.token_attainment(), 3),
+                fatt(c.ttft_attainment()),
+                fatt(c.token_attainment()),
                 c.admitted.to_string(),
                 c.rejected.to_string(),
                 c.preempted.to_string(),
@@ -1153,6 +1163,97 @@ fn admission(args: &Args, threads: usize, out: &mut String) {
     out.push_str(&t.render());
     wl!(out);
     out.push_str(&s.render());
+}
+
+// --------------------------------------- extension: closed-loop scaling
+
+/// Flash-crowd panel: a rectangular burst that dies before the next
+/// scaling decision, so the envelope forecast reads quiet while the
+/// spike's backlog still queues. Reactive scaling follows the forecast
+/// and strands that backlog; closed-loop scaling
+/// (`scaling::ScalingSignal`) sees the backlog and the measured token
+/// rate and holds capacity until the queue drains.
+fn flashcrowd(args: &Args, threads: usize, out: &mut String) {
+    wl!(out, "Closed-loop vs reactive scaling under a flash crowd.");
+    wl!(out, "mock/* rows isolate the mechanism: demand-responsive batch");
+    wl!(out, "capacity (1 slot per 20 tok/s) at a fixed 4-GPU footprint,");
+    wl!(out, "so both modes spend identical GPU-hours. janus/* rows run a");
+    wl!(out, "larger spike end-to-end through Algorithm 2 with the");
+    wl!(out, "signal-keyed decision cache.\n");
+    let model = models::deepseek_v2();
+    let hw = paper_testbed();
+    let pop = eval_popularity();
+    let mock_trace =
+        DiurnalTrace::flash_crowd(240.0 / 3600.0, 10.0, 1.0, 60.0, 10.0, 50.0, 19);
+    let janus_trace =
+        DiurnalTrace::flash_crowd(480.0 / 3600.0, 10.0, 2.0, 40.0, 60.0, 180.0, 23);
+    const MODES: [(ScalingMode, &str); 2] = [
+        (ScalingMode::Reactive, "reactive"),
+        (ScalingMode::Closed, "closed"),
+    ];
+    let mut cells: Vec<SweepCell> = Vec::new();
+    for (mode, name) in MODES {
+        let mut sc =
+            AutoscaleScenario::new(60.0, 8.0, Slo::from_ms(200.0), mock_trace.clone());
+        sc.admission = AdmissionConfig::fifo();
+        sc.admission.class_mix = ClassMix::single(Priority::Interactive);
+        sc.scaling = mode;
+        cells.push(SweepCell {
+            label: format!("mock/{name}"),
+            build: Box::new(|| -> Box<dyn ServingSystem> {
+                Box::new(MockServingSystem::new(4, 8, 0.05).with_demand_response(20.0, 64))
+            }),
+            scenario: Scenario::Autoscale(sc),
+            seed: 4242,
+        });
+    }
+    for (mode, name) in MODES {
+        let mut sc =
+            AutoscaleScenario::new(120.0, 64.0, Slo::from_ms(200.0), janus_trace.clone());
+        sc.admission = AdmissionConfig::fifo();
+        sc.scaling = mode;
+        cells.push(SweepCell {
+            label: format!("janus/{name}"),
+            build: Box::new({
+                let (model, hw, pop) = (model.clone(), hw.clone(), pop.clone());
+                move || build_eval_system(0, model.clone(), hw.clone(), &pop)
+            }),
+            scenario: Scenario::Autoscale(sc),
+            seed: 4242,
+        });
+    }
+    let results = sweep::run_cells_filtered(&cells, threads, args.get("cells"));
+    if results.is_empty() {
+        wl!(out, "(no cells match --cells filter)");
+        return;
+    }
+    let mut t = Table::new([
+        "cell",
+        "TTFT att (int)",
+        "TTFT p99 ms",
+        "agg SLO att",
+        "queue mean",
+        "rejected",
+        "completed",
+        "GPU-hours",
+    ]);
+    for cell in &results {
+        let r = match &cell.outcome {
+            Ok(ScenarioOutcome::Autoscale(r)) => r,
+            other => panic!("unexpected outcome {other:?}"),
+        };
+        t.row([
+            cell.label.clone(),
+            fatt(r.per_class[Priority::Interactive.rank()].ttft_attainment()),
+            fnum(r.ttft_p99 * 1e3, 1),
+            fnum(r.slo_attainment, 3),
+            fnum(r.queue_depth_mean, 1),
+            r.rejected_requests.to_string(),
+            r.completed_requests.to_string(),
+            fnum(r.gpu_hours, 3),
+        ]);
+    }
+    out.push_str(&t.render());
 }
 
 // --------------------------------------------- extension: §6 pipelining

@@ -239,22 +239,25 @@ pub struct ClassStats {
 }
 
 impl ClassStats {
-    /// Fraction of first tokens within the TTFT SLO (1.0 when none).
-    pub fn ttft_attainment(&self) -> f64 {
-        if self.first_tokens == 0 {
-            1.0
-        } else {
-            self.ttft_ok as f64 / self.first_tokens as f64
-        }
+    /// Fraction of first tokens within the TTFT SLO, or `None` when the
+    /// class emitted no first tokens. The empty case is deliberately not
+    /// 1.0: a class whose every arrival was rejected (or that never saw
+    /// traffic) must not read as perfect attainment — consumers decide
+    /// how to render the absence (`nan` in TSV rows, `-` in tables).
+    pub fn ttft_attainment(&self) -> Option<f64> {
+        (self.first_tokens > 0).then(|| self.ttft_ok as f64 / self.first_tokens as f64)
     }
 
-    /// Fraction of decode tokens within the TPOT SLO (1.0 when none).
-    pub fn token_attainment(&self) -> f64 {
-        if self.tokens == 0 {
-            1.0
-        } else {
-            self.tokens_ok as f64 / self.tokens as f64
-        }
+    /// Fraction of decode tokens within the TPOT SLO, or `None` when the
+    /// class generated no decode tokens (same rationale as
+    /// [`Self::ttft_attainment`]).
+    pub fn token_attainment(&self) -> Option<f64> {
+        (self.tokens > 0).then(|| self.tokens_ok as f64 / self.tokens as f64)
+    }
+
+    /// Whether any attainment signal exists for this class at all.
+    pub fn has_samples(&self) -> bool {
+        self.first_tokens > 0 || self.tokens > 0
     }
 }
 
@@ -385,14 +388,36 @@ mod tests {
     #[test]
     fn class_stats_attainments() {
         let mut c = ClassStats::default();
-        assert_eq!(c.ttft_attainment(), 1.0);
-        assert_eq!(c.token_attainment(), 1.0);
+        assert_eq!(c.ttft_attainment(), None);
+        assert_eq!(c.token_attainment(), None);
+        assert!(!c.has_samples());
         c.first_tokens = 4;
         c.ttft_ok = 3;
         c.tokens = 100;
         c.tokens_ok = 99;
-        assert!((c.ttft_attainment() - 0.75).abs() < 1e-12);
-        assert!((c.token_attainment() - 0.99).abs() < 1e-12);
+        assert!(c.has_samples());
+        assert!((c.ttft_attainment().unwrap() - 0.75).abs() < 1e-12);
+        assert!((c.token_attainment().unwrap() - 0.99).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejected_only_class_does_not_read_as_perfect() {
+        // Regression: a class whose every arrival was rejected used to
+        // report 100% TTFT/TPOT attainment. It must now report absence.
+        let c = ClassStats {
+            rejected: 57,
+            ..ClassStats::default()
+        };
+        assert_eq!(c.ttft_attainment(), None);
+        assert_eq!(c.token_attainment(), None);
+        assert!(!c.has_samples());
+        // A class that served even one token reports a real fraction.
+        let served = ClassStats {
+            first_tokens: 1,
+            ttft_ok: 0,
+            ..ClassStats::default()
+        };
+        assert_eq!(served.ttft_attainment(), Some(0.0));
     }
 
     #[test]

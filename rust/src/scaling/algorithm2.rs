@@ -304,6 +304,27 @@ mod tests {
     }
 
     #[test]
+    fn zero_demand_selects_minimal_deployment_without_panicking() {
+        // Closed-loop scaling feeds the measured demand straight into
+        // optimize(), and a fully idle interval legitimately measures
+        // 0 tok/s. Little's law must resolve that to the light-traffic
+        // fixed point (B* = 1) instead of panicking, and the scaler must
+        // then pick the most compact feasible deployment.
+        let s = build_scaler();
+        let idle = s
+            .optimize(0.0, Slo::from_ms(200.0), 512.0)
+            .expect("zero demand must stay feasible");
+        assert_eq!(idle.b_star, 1.0, "light-traffic fixed point");
+        let low = s.optimize(500.0, Slo::from_ms(200.0), 512.0).unwrap();
+        assert!(
+            idle.deployment.total_gpus() <= low.deployment.total_gpus(),
+            "idle {} low {}",
+            idle.deployment,
+            low.deployment
+        );
+    }
+
+    #[test]
     fn infeasible_demand_returns_none() {
         let s = build_scaler();
         // Demand far beyond what 16+16 GPUs can serve.

@@ -50,6 +50,12 @@ pub struct DecisionKey {
     /// Healthy-pool fingerprint (per-side budget, usable tiers, failed
     /// GPUs — whatever the system's decision actually depends on).
     pool: u64,
+    /// Closed-loop signal digest ([`crate::scaling::ScalingSignal::fingerprint`]):
+    /// 0 for reactive decisions (built via [`DecisionCache::key`]), the
+    /// full signal fingerprint for closed-loop ones — a memoized
+    /// closed-loop decision replays only when the entire signal, not
+    /// just the derived demand, was bit-identical.
+    signal: u64,
 }
 
 /// Bounded deterministic memo table for scaling decisions.
@@ -134,7 +140,26 @@ impl<V: Clone> DecisionCache<V> {
             demand,
             slo: slo.tpot.to_bits(),
             pool,
+            signal: 0,
         }
+    }
+
+    /// Build a key that additionally carries a closed-loop signal
+    /// digest. Reactive keys (signal lane 0) and closed-loop keys never
+    /// alias unless the digest is itself 0 — which
+    /// [`crate::scaling::ScalingSignal::fingerprint`] (FNV-1a over
+    /// non-empty input) does not produce.
+    pub fn key_with_signal(
+        &self,
+        kind: DecisionKind,
+        demand: f64,
+        slo: Slo,
+        pool: u64,
+        signal: u64,
+    ) -> DecisionKey {
+        let mut key = self.key(kind, demand, slo, pool);
+        key.signal = signal;
+        key
     }
 
     /// Replay a memoized decision, if one exists for this exact key.
@@ -195,6 +220,24 @@ mod tests {
         assert_ne!(base, c.key(DecisionKind::Demand, 1000.1, slo(), 16));
         assert_ne!(base, c.key(DecisionKind::Demand, 1000.0, Slo { tpot: 0.15 }, 16));
         assert_ne!(base, c.key(DecisionKind::Demand, 1000.0, slo(), 12));
+    }
+
+    #[test]
+    fn signal_lane_separates_closed_loop_keys() {
+        let c: DecisionCache<u32> = DecisionCache::new(4);
+        let reactive = c.key(DecisionKind::Demand, 1000.0, slo(), 16);
+        let closed = c.key_with_signal(DecisionKind::Demand, 1000.0, slo(), 16, 0xDEAD);
+        // Same (demand, slo, pool), different signal ⇒ distinct keys.
+        assert_ne!(reactive, closed);
+        assert_ne!(
+            closed,
+            c.key_with_signal(DecisionKind::Demand, 1000.0, slo(), 16, 0xBEEF)
+        );
+        // A zero digest degenerates to the reactive key by construction.
+        assert_eq!(
+            reactive,
+            c.key_with_signal(DecisionKind::Demand, 1000.0, slo(), 16, 0)
+        );
     }
 
     #[test]

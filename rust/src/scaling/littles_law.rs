@@ -30,8 +30,17 @@ impl FixedPoint {
 }
 
 /// Solve B = λ·TPOT(B) for B ∈ [1, b_max]. `tpot` maps batch → seconds.
+///
+/// `lambda <= 0.0` is a valid input, not an error: a measured arrival
+/// rate from the closed scaling loop legitimately reads zero in a
+/// diurnal trough, and zero demand trivially sustains the minimal
+/// batch — so the solve reports [`FixedPoint::Light`] instead of
+/// asserting.
 pub fn solve<F: FnMut(f64) -> f64>(lambda: f64, b_max: f64, mut tpot: F) -> FixedPoint {
-    assert!(lambda > 0.0 && b_max >= 1.0);
+    assert!(b_max >= 1.0);
+    if lambda <= 0.0 {
+        return FixedPoint::Light;
+    }
     let mut f = |b: f64| b - lambda * tpot(b);
     if f(1.0) >= 0.0 {
         return FixedPoint::Light;
@@ -99,5 +108,27 @@ mod tests {
         // λ·TPOT(1) exactly 1 → Light (f(1) = 0 ≥ 0).
         let fp = solve(100.0, 10.0, |_| 0.01);
         assert_eq!(fp, FixedPoint::Light);
+    }
+
+    #[test]
+    fn zero_demand_is_light_not_a_panic() {
+        // An idle trough measured by the closed loop: λ = 0 must report
+        // the minimal batch, never assert. The TPOT model must not even
+        // be consulted.
+        let fp = solve(0.0, 4096.0, |_| panic!("tpot queried at zero demand"));
+        assert_eq!(fp, FixedPoint::Light);
+        assert_eq!(fp.batch(), Some(1.0));
+        // Negative demand (defensive: a buggy envelope) takes the same path.
+        let fp = solve(-5.0, 4096.0, |_| panic!("tpot queried at negative demand"));
+        assert_eq!(fp, FixedPoint::Light);
+    }
+
+    #[test]
+    fn tiny_positive_demand_is_light() {
+        // λ·TPOT(1) ≪ 1 for any sane TPOT: the solve must stay on the
+        // normal Light path without numerical trouble.
+        let fp = solve(1e-12, 4096.0, |_| 0.05);
+        assert_eq!(fp, FixedPoint::Light);
+        assert_eq!(fp.batch(), Some(1.0));
     }
 }

@@ -10,13 +10,18 @@
 //! - [`decision_cache`] — deterministic memoization of repeated scaling
 //!   decisions keyed on (demand, SLO, healthy pool); exact keys by
 //!   default so memoization changes no simulated outcome.
+//! - [`signal`] — the closed-loop scaling signal: a deterministic
+//!   per-interval snapshot of admission/KV/queue state that feeds the
+//!   measured side of the demand estimate back into the decision.
 
 pub mod algorithm2;
 pub mod amax;
 pub mod decision_cache;
 pub mod littles_law;
 pub mod memory;
+pub mod signal;
 
 pub use algorithm2::{CandidateEval, ScalePlan, Scaler};
 pub use amax::{amax_bound, AmaxTable};
 pub use decision_cache::{DecisionCache, DecisionKey, DecisionKind};
+pub use signal::{ScalingMode, ScalingSignal, SCALING_ENV};

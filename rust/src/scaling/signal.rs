@@ -1,0 +1,306 @@
+//! Closed-loop scaling signal: the admission→autoscaling feedback path.
+//!
+//! The reactive scaling path sizes deployments from the trace's rate
+//! envelope alone — a forecast. This module carries the *measured* side
+//! of the loop: a [`ScalingSignal`] is a deterministic snapshot the
+//! engine assembles at each decision interval from the admission
+//! subsystem's own state (per-class counters, queue depth, KV
+//! occupancy, preemption/rejection deltas) plus the envelope forecast.
+//!
+//! The signal is a pure function of simulated state: no wall clock, no
+//! RNG, no ambient reads. Same seed ⇒ bit-identical signals ⇒
+//! bit-identical scaling decisions, so the engine's same-seed
+//! determinism contract (and the exactness of the
+//! [`super::DecisionCache`]) survives closing the loop.
+//!
+//! Mode selection mirrors the admission subsystem: scenarios default to
+//! [`ScalingMode::from_env`], which reads `JANUS_SCALING`
+//! (`reactive` | `closed`, CI's scaling matrix sets it) and falls back
+//! to reactive. Surfaces that pin golden bytes construct
+//! [`ScalingMode::Reactive`] explicitly instead.
+
+use crate::config::serving::Slo;
+use crate::workload::classes::NUM_CLASSES;
+
+/// Environment variable selecting the default scaling mode for
+/// scenarios that do not pin one (`reactive` | `closed`).
+pub const SCALING_ENV: &str = "JANUS_SCALING";
+
+/// How the periodic scaling decision sources its demand.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScalingMode {
+    /// Forecast-only: demand = envelope rate × tokens/request, clamped
+    /// to ≥ 1 token/s. The pre-signal behavior every golden pins.
+    Reactive,
+    /// Closed loop: the engine assembles a [`ScalingSignal`] and the
+    /// system sizes from [`ScalingSignal::planned_demand`] under
+    /// [`ScalingSignal::effective_slo`]. Demand is *not* clamped — a
+    /// measured trough legitimately reads zero and flows into
+    /// [`super::littles_law::solve`] as-is.
+    Closed,
+}
+
+impl ScalingMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "reactive" => Some(ScalingMode::Reactive),
+            "closed" | "closed-loop" | "closedloop" => Some(ScalingMode::Closed),
+            _ => None,
+        }
+    }
+
+    /// Mode from `JANUS_SCALING` (unset/unparsable ⇒ reactive).
+    pub fn from_env() -> Self {
+        std::env::var(SCALING_ENV)
+            .ok()
+            .and_then(|s| ScalingMode::parse(&s))
+            .unwrap_or(ScalingMode::Reactive)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ScalingMode::Reactive => "reactive",
+            ScalingMode::Closed => "closed",
+        }
+    }
+}
+
+/// One decision interval's worth of feedback, in token units.
+///
+/// Assembled by the engine at each `ScalingDecision` event; every field
+/// derives from simulated state only. Rates are tokens/s (the engine
+/// converts request rates via the scenario's tokens-per-request before
+/// the signal is built).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScalingSignal {
+    /// Forecast demand over the coming interval (envelope rate ×
+    /// tokens/request), unclamped.
+    pub envelope_demand: f64,
+    /// Measured decode throughput over the elapsed interval (generated
+    /// tokens / elapsed seconds); 0 at the first decision.
+    pub measured_demand: f64,
+    /// Backlog waiting in the admission queue, as tokens of future
+    /// decode work (queued requests × tokens/request).
+    pub backlog_tokens: f64,
+    /// Decision window the backlog should drain within, seconds.
+    pub window: f64,
+    /// KV occupancy of the in-flight batch over the deployment's
+    /// capacity, 0..1 (0 when the system reports no KV capacity).
+    pub kv_utilization: f64,
+    /// Admission-queue depth over its bound, 0..1.
+    pub queue_occupancy: f64,
+    /// Preemptions during the elapsed interval.
+    pub preemptions: u64,
+    /// Queue-overflow rejections during the elapsed interval.
+    pub rejections: u64,
+    /// Per-class TPOT targets (None ⇒ inherit the scenario's global
+    /// TPOT SLO), indexed by [`crate::workload::classes::Priority`] rank.
+    pub tpot_targets: [Option<f64>; NUM_CLASSES],
+    /// Which classes saw traffic (admissions or rejections) during the
+    /// elapsed interval — only their targets tighten the SLO.
+    pub class_active: [bool; NUM_CLASSES],
+}
+
+impl ScalingSignal {
+    /// The demand the scaler should provision for: never below the
+    /// forecast (closing the loop must not under-provision relative to
+    /// reactive scaling), raised to the measured throughput when
+    /// arrivals outran the forecast, plus the rate needed to drain the
+    /// current backlog within one decision window.
+    ///
+    /// Legitimately 0.0 when the envelope, the measured rate, and the
+    /// queue are all idle — [`super::littles_law::solve`] accepts that
+    /// and reports a light fixed point instead of panicking.
+    pub fn planned_demand(&self) -> f64 {
+        let base = self.envelope_demand.max(self.measured_demand);
+        let drain = if self.window > 0.0 {
+            self.backlog_tokens / self.window
+        } else {
+            0.0
+        };
+        base + drain
+    }
+
+    /// The TPOT target the decision must honor: the tightest per-class
+    /// target among classes that actually saw traffic, never looser
+    /// than the global SLO.
+    pub fn effective_slo(&self, base: Slo) -> Slo {
+        let mut tpot = base.tpot;
+        for (rank, target) in self.tpot_targets.iter().enumerate() {
+            if self.class_active[rank] {
+                if let Some(t) = target {
+                    tpot = tpot.min(*t);
+                }
+            }
+        }
+        Slo { tpot }
+    }
+
+    /// Deterministic 64-bit digest of every field (FNV-1a over exact
+    /// bit patterns). Decision caches fold this into their keys so a
+    /// memoized closed-loop decision replays only when the *entire*
+    /// signal — not just the derived demand — was bit-identical.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        mix(self.envelope_demand.to_bits());
+        mix(self.measured_demand.to_bits());
+        mix(self.backlog_tokens.to_bits());
+        mix(self.window.to_bits());
+        mix(self.kv_utilization.to_bits());
+        mix(self.queue_occupancy.to_bits());
+        mix(self.preemptions);
+        mix(self.rejections);
+        for target in &self.tpot_targets {
+            // Distinguish None from any real target: NaN bits never
+            // come out of a validated config.
+            mix(match target {
+                Some(t) => t.to_bits(),
+                None => f64::NAN.to_bits(),
+            });
+        }
+        let mut active_bits = 0u64;
+        for (rank, &a) in self.class_active.iter().enumerate() {
+            if a {
+                active_bits |= 1 << rank;
+            }
+        }
+        mix(active_bits);
+        h
+    }
+
+    /// An idle signal (everything zero, targets inherited): the state
+    /// before any traffic has been observed.
+    pub fn idle(window: f64) -> Self {
+        ScalingSignal {
+            envelope_demand: 0.0,
+            measured_demand: 0.0,
+            backlog_tokens: 0.0,
+            window,
+            kv_utilization: 0.0,
+            queue_occupancy: 0.0,
+            preemptions: 0,
+            rejections: 0,
+            tpot_targets: [None; NUM_CLASSES],
+            class_active: [false; NUM_CLASSES],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parses_and_defaults() {
+        assert_eq!(ScalingMode::parse("reactive"), Some(ScalingMode::Reactive));
+        assert_eq!(ScalingMode::parse("Closed"), Some(ScalingMode::Closed));
+        assert_eq!(ScalingMode::parse("closed-loop"), Some(ScalingMode::Closed));
+        assert_eq!(ScalingMode::parse("nope"), None);
+        for mode in [ScalingMode::Reactive, ScalingMode::Closed] {
+            assert_eq!(ScalingMode::parse(mode.name()), Some(mode));
+        }
+    }
+
+    #[test]
+    fn planned_demand_never_below_forecast() {
+        let mut sig = ScalingSignal::idle(60.0);
+        sig.envelope_demand = 100.0;
+        sig.measured_demand = 40.0;
+        assert_eq!(sig.planned_demand(), 100.0);
+        // Measured above forecast raises the plan.
+        sig.measured_demand = 160.0;
+        assert_eq!(sig.planned_demand(), 160.0);
+        // Backlog adds the drain rate on top.
+        sig.backlog_tokens = 600.0;
+        assert_eq!(sig.planned_demand(), 170.0);
+    }
+
+    #[test]
+    fn planned_demand_is_zero_when_idle() {
+        // The degenerate reading the Little's-law fix must absorb.
+        let sig = ScalingSignal::idle(60.0);
+        assert_eq!(sig.planned_demand(), 0.0);
+        let fp = crate::scaling::littles_law::solve(sig.planned_demand(), 4096.0, |_| 0.05);
+        assert_eq!(fp, crate::scaling::littles_law::FixedPoint::Light);
+    }
+
+    #[test]
+    fn effective_slo_takes_tightest_active_target() {
+        let base = Slo { tpot: 0.2 };
+        let mut sig = ScalingSignal::idle(60.0);
+        sig.tpot_targets = [Some(0.05), None, Some(0.5)];
+        // No traffic: targets don't apply.
+        assert_eq!(sig.effective_slo(base).tpot, 0.2);
+        // Batch-only traffic: its loose target never loosens the SLO.
+        sig.class_active = [false, false, true];
+        assert_eq!(sig.effective_slo(base).tpot, 0.2);
+        // Interactive traffic tightens to its target.
+        sig.class_active = [true, false, true];
+        assert_eq!(sig.effective_slo(base).tpot, 0.05);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_every_field() {
+        let base = ScalingSignal::idle(60.0);
+        let fp = base.fingerprint();
+        // Bit-stable: same state, same digest.
+        assert_eq!(fp, base.fingerprint());
+        let variants = [
+            {
+                let mut s = base;
+                s.envelope_demand = 1.0;
+                s
+            },
+            {
+                let mut s = base;
+                s.measured_demand = 1.0;
+                s
+            },
+            {
+                let mut s = base;
+                s.backlog_tokens = 1.0;
+                s
+            },
+            {
+                let mut s = base;
+                s.kv_utilization = 0.5;
+                s
+            },
+            {
+                let mut s = base;
+                s.queue_occupancy = 0.5;
+                s
+            },
+            {
+                let mut s = base;
+                s.preemptions = 1;
+                s
+            },
+            {
+                let mut s = base;
+                s.rejections = 1;
+                s
+            },
+            {
+                let mut s = base;
+                s.tpot_targets[0] = Some(0.05);
+                s
+            },
+            {
+                let mut s = base;
+                s.class_active[1] = true;
+                s
+            },
+        ];
+        let mut digests = vec![fp];
+        for v in variants {
+            let d = v.fingerprint();
+            assert!(!digests.contains(&d), "collision for {v:?}");
+            digests.push(d);
+        }
+    }
+}

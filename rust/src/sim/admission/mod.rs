@@ -90,6 +90,13 @@ pub struct AdmissionConfig {
     pub prefill_chunk: u32,
     /// TTFT target for the per-class attainment metrics (seconds).
     pub ttft_slo: f64,
+    /// Per-class TPOT targets (seconds), indexed by [`Priority`] rank.
+    /// `None` inherits the scenario's global TPOT SLO, so the all-`None`
+    /// default is byte-identical to the pre-per-class engine. A `Some`
+    /// target gates that class's `tokens_ok` accounting and — under
+    /// closed-loop scaling — tightens the SLO the scaler sizes against
+    /// while the class has traffic.
+    pub tpot_slo_class: [Option<f64>; NUM_CLASSES],
 }
 
 impl AdmissionConfig {
@@ -106,6 +113,7 @@ impl AdmissionConfig {
             aging_secs: 30.0,
             prefill_chunk: 64,
             ttft_slo: 1.0,
+            tpot_slo_class: [None; NUM_CLASSES],
         }
     }
 
@@ -137,6 +145,15 @@ impl AdmissionConfig {
                 "ttft_slo must be positive finite seconds, got {}",
                 self.ttft_slo
             ));
+        }
+        for (rank, target) in self.tpot_slo_class.iter().enumerate() {
+            if let Some(t) = target {
+                if !t.is_finite() || *t <= 0.0 {
+                    return Err(format!(
+                        "tpot_slo_class[{rank}] must be positive finite seconds, got {t}"
+                    ));
+                }
+            }
         }
         Ok(())
     }
@@ -188,6 +205,13 @@ mod tests {
         assert!(c.validate().is_err());
         let mut c = AdmissionConfig::fifo();
         c.class_mix = ClassMix { weights: [0.0; 3] };
+        assert!(c.validate().is_err());
+        let mut c = AdmissionConfig::fifo();
+        c.tpot_slo_class[0] = Some(0.05);
+        assert!(c.validate().is_ok());
+        c.tpot_slo_class[1] = Some(-1.0);
+        assert!(c.validate().is_err());
+        c.tpot_slo_class[1] = Some(f64::NAN);
         assert!(c.validate().is_err());
     }
 

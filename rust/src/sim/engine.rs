@@ -55,11 +55,12 @@ use std::fmt;
 use crate::baselines::system::ServingSystem;
 use crate::config::serving::Slo;
 use crate::metrics::{ClassStats, GpuHours, TpotStats, WeightedLatency};
+use crate::scaling::{ScalingMode, ScalingSignal};
 use crate::sim::admission::{
     AdmissionConfig, AdmissionPolicy, AdmitOutcome, EngineCaps, InFlightBatch, Queued, StepBook,
 };
 use crate::util::rng::Rng;
-use crate::util::stats::Accumulator;
+use crate::util::stats::{Accumulator, WeightedAccumulator};
 use crate::workload::arrivals::{ArrivalProcess, BurstyPoisson};
 use crate::workload::classes::{Priority, NUM_CLASSES};
 use crate::workload::lengths::LengthModel;
@@ -523,6 +524,12 @@ pub struct AutoscaleScenario {
     /// `JANUS_ADMISSION` (default FIFO); golden surfaces pin
     /// [`AdmissionConfig::fifo`] explicitly.
     pub admission: AdmissionConfig,
+    /// How scaling decisions source their demand: reactive (envelope
+    /// forecast only, the pre-signal behavior) or closed-loop (a
+    /// [`ScalingSignal`] assembled from admission/KV/queue state). `new`
+    /// resolves the mode from `JANUS_SCALING` (default reactive);
+    /// golden surfaces pin [`ScalingMode::Reactive`] explicitly.
+    pub scaling: ScalingMode,
     pub trace: DiurnalTrace,
 }
 
@@ -537,6 +544,7 @@ impl AutoscaleScenario {
             queue_capacity: DEFAULT_QUEUE_CAPACITY,
             burst_cv2: trace.config.burst_cv2,
             admission: AdmissionConfig::from_env(),
+            scaling: ScalingMode::from_env(),
             trace,
         }
     }
@@ -611,6 +619,10 @@ pub struct FailureScenario {
     pub rate_trace: Option<DiurnalTrace>,
     /// Admission-policy configuration (see [`AutoscaleScenario::admission`]).
     pub admission: AdmissionConfig,
+    /// Scaling-decision mode (see [`AutoscaleScenario::scaling`]).
+    /// Failure/recovery re-placements always size reactively — the pool
+    /// just changed, so the measured interval no longer describes it.
+    pub scaling: ScalingMode,
     pub failures: Vec<FailurePlan>,
 }
 
@@ -627,6 +639,7 @@ impl FailureScenario {
             queue_capacity: DEFAULT_QUEUE_CAPACITY,
             rate_trace: None,
             admission: AdmissionConfig::from_env(),
+            scaling: ScalingMode::from_env(),
             failures: Vec::new(),
         }
     }
@@ -905,6 +918,100 @@ fn track(gpus: usize, min_g: &mut usize, max_g: &mut usize) {
     }
 }
 
+/// One decision-point observation of live engine state, fed to
+/// [`SignalTracker::assemble`]. Everything here is simulated state —
+/// no clock, no RNG — so the assembled signal inherits the engine's
+/// same-seed determinism.
+struct SignalObservation {
+    /// Decision window the backlog should drain within, seconds.
+    window: f64,
+    /// Forecast demand over the coming interval (tokens/s), unclamped.
+    envelope_demand: f64,
+    /// Lifetime generated-token count at this decision.
+    generated_tokens: usize,
+    /// Lifetime preemption count at this decision.
+    preemptions: usize,
+    /// Lifetime rejection count at this decision.
+    rejections: usize,
+    tokens_per_request: f64,
+    queue_len: usize,
+    queue_capacity: usize,
+    /// KV tokens resident in the in-flight batch.
+    kv_in_flight: f64,
+    /// KV token capacity of the current deployment.
+    kv_capacity: f64,
+    tpot_targets: [Option<f64>; NUM_CLASSES],
+}
+
+/// Interval-delta tracker for closed-loop signal assembly: remembers
+/// the aggregate counters at the previous scaling decision so each
+/// [`ScalingSignal`] carries per-interval deltas, not lifetime totals.
+struct SignalTracker {
+    last_time: f64,
+    last_generated: usize,
+    last_preemptions: usize,
+    last_rejections: usize,
+    last_class_arrivals: [u64; NUM_CLASSES],
+}
+
+impl SignalTracker {
+    fn new() -> Self {
+        SignalTracker {
+            last_time: 0.0,
+            last_generated: 0,
+            last_preemptions: 0,
+            last_rejections: 0,
+            last_class_arrivals: [0; NUM_CLASSES],
+        }
+    }
+
+    fn assemble(
+        &mut self,
+        now: f64,
+        class_stats: &[ClassStats; NUM_CLASSES],
+        obs: SignalObservation,
+    ) -> ScalingSignal {
+        let elapsed = now - self.last_time;
+        let measured_demand = if elapsed > 0.0 {
+            (obs.generated_tokens - self.last_generated) as f64 / elapsed
+        } else {
+            0.0
+        };
+        let preemptions = (obs.preemptions - self.last_preemptions) as u64;
+        let rejections = (obs.rejections - self.last_rejections) as u64;
+        let mut class_active = [false; NUM_CLASSES];
+        for (rank, cs) in class_stats.iter().enumerate() {
+            let arrivals = cs.admitted + cs.rejected;
+            class_active[rank] = arrivals > self.last_class_arrivals[rank];
+            self.last_class_arrivals[rank] = arrivals;
+        }
+        self.last_time = now;
+        self.last_generated = obs.generated_tokens;
+        self.last_preemptions = obs.preemptions;
+        self.last_rejections = obs.rejections;
+        ScalingSignal {
+            envelope_demand: obs.envelope_demand,
+            measured_demand,
+            backlog_tokens: obs.queue_len as f64 * obs.tokens_per_request,
+            window: obs.window,
+            kv_utilization: if obs.kv_capacity > 0.0 {
+                obs.kv_in_flight / obs.kv_capacity
+            } else {
+                0.0
+            },
+            queue_occupancy: if obs.queue_capacity > 0 {
+                obs.queue_len as f64 / obs.queue_capacity as f64
+            } else {
+                0.0
+            },
+            preemptions,
+            rejections,
+            tpot_targets: obs.tpot_targets,
+            class_active,
+        }
+    }
+}
+
 /// Trace-driven autoscaling over a live decode loop: arrivals, decode
 /// steps, and scaling decisions all flow through one event queue.
 ///
@@ -962,8 +1069,12 @@ pub fn autoscale<S: ServingSystem + ?Sized>(
     let mut adm_delay = WeightedLatency::new();
     let mut ttft = WeightedLatency::new();
     let mut token_tpot = WeightedLatency::new();
-    let mut depth_acc = Accumulator::new();
+    // Queue depth is sampled once per decode step; steps have wildly
+    // different durations (prefill-only micro-steps vs. full decode
+    // steps), so the mean weights each sample by its step's duration.
+    let mut depth_acc = WeightedAccumulator::new();
     let mut queue_depth_max = 0usize;
+    let mut signal_tracker = SignalTracker::new();
 
     // Per-interval accumulator, flushed into an IntervalRecord at the
     // next scaling decision (or at the horizon).
@@ -1139,15 +1250,18 @@ pub fn autoscale<S: ServingSystem + ?Sized>(
                     class_stats[c.rank()].completed += 1;
                 }
                 if decoding > 0 {
-                    let ok = step_time <= sc.slo.tpot;
                     for (rank, &n) in step_book.decode_tokens.iter().enumerate() {
                         class_stats[rank].tokens += n;
-                        if ok {
+                        // Per-class TPOT target (None inherits the
+                        // scenario's global SLO, preserving the legacy
+                        // accounting bit-for-bit).
+                        let target = sc.admission.tpot_slo_class[rank].unwrap_or(sc.slo.tpot);
+                        if step_time <= target {
                             class_stats[rank].tokens_ok += n;
                         }
                     }
                 }
-                depth_acc.push(policy.queue_len() as f64);
+                depth_acc.push(policy.queue_len() as f64, step_time);
                 queue.push(ev.time + step_time, EventKind::DecodeStep);
             }
             EventKind::ScalingDecision => {
@@ -1160,8 +1274,36 @@ pub fn autoscale<S: ServingSystem + ?Sized>(
                 );
                 let t_end = (ev.time + sc.interval).min(horizon);
                 let req_rate = sc.trace.mean_rate_in(ev.time, t_end);
-                let token_demand = (req_rate * sc.tokens_per_request).max(1.0);
-                let cfg = system.configure_for_demand(token_demand, sc.slo);
+                let envelope_demand = req_rate * sc.tokens_per_request;
+                let (token_demand, cfg) = match sc.scaling {
+                    ScalingMode::Reactive => {
+                        let demand = envelope_demand.max(1.0);
+                        (demand, system.configure_for_demand(demand, sc.slo))
+                    }
+                    ScalingMode::Closed => {
+                        let sig = signal_tracker.assemble(
+                            ev.time,
+                            &class_stats,
+                            SignalObservation {
+                                window: sc.interval,
+                                envelope_demand,
+                                generated_tokens: generated,
+                                preemptions,
+                                rejections: rejected,
+                                tokens_per_request: sc.tokens_per_request,
+                                queue_len: policy.queue_len(),
+                                queue_capacity: sc.queue_capacity,
+                                kv_in_flight: batch.kv_tokens(),
+                                kv_capacity: system.kv_capacity_tokens(),
+                                tpot_targets: sc.admission.tpot_slo_class,
+                            },
+                        );
+                        (
+                            sig.planned_demand(),
+                            system.configure_with_signal(&sig, sc.slo),
+                        )
+                    }
+                };
                 let feasible = cfg.is_some();
                 let gpus = system.gpus();
                 track(gpus, &mut min_gpus, &mut max_gpus);
@@ -1278,14 +1420,18 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
     let mut class_rng = Rng::seed_from_u64(seed ^ CLASS_STREAM_SALT);
     queue.push(0.0, EventKind::ArrivalWindow);
 
-    // Demand estimate for sizing decisions (offered load).
-    let demand_at = |t0: f64, t1: f64| -> f64 {
-        let rate = match &sc.rate_trace {
+    // Offered request rate over a window (trace envelope or the
+    // constant scenario rate).
+    let offered_rate = |t0: f64, t1: f64| -> f64 {
+        match &sc.rate_trace {
             Some(trace) => trace.mean_rate_in(t0, t1),
             None => sc.arrival_rate,
-        };
-        (rate * sc.tokens_per_request).max(1.0)
+        }
     };
+    // Reactive demand estimate for sizing decisions (offered load,
+    // clamped — the closed loop uses the unclamped envelope instead).
+    let demand_at =
+        |t0: f64, t1: f64| -> f64 { (offered_rate(t0, t1) * sc.tokens_per_request).max(1.0) };
 
     // Live state: the admission policy owns the bounded waiting
     // structure; the in-flight batch tracks residency, prefill progress,
@@ -1314,6 +1460,7 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
     let mut class_stats = [ClassStats::default(); NUM_CLASSES];
     let mut adm_delay = Accumulator::new();
     let mut queue_depth_max = 0usize;
+    let mut signal_tracker = SignalTracker::new();
     let mut decisions = 0usize;
     let mut feasible_decisions = 0usize;
     let mut reconfigurations = 0usize;
@@ -1436,10 +1583,13 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                     class_stats[c.rank()].completed += 1;
                 }
                 if decoding > 0 {
-                    let ok = step_time <= sc.slo.tpot;
                     for (rank, &n) in step_book.decode_tokens.iter().enumerate() {
                         class_stats[rank].tokens += n;
-                        if ok {
+                        // Per-class TPOT target (None inherits the
+                        // scenario's global SLO, preserving the legacy
+                        // accounting bit-for-bit).
+                        let target = sc.admission.tpot_slo_class[rank].unwrap_or(sc.slo.tpot);
+                        if step_time <= target {
                             class_stats[rank].tokens_ok += n;
                         }
                     }
@@ -1449,7 +1599,32 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
             EventKind::ScalingDecision => {
                 account(&mut hours, &mut last_account, ev.time, system.gpus());
                 let t_end = (ev.time + sc.decision_interval).min(sc.horizon);
-                let cfg = system.configure_for_demand(demand_at(ev.time, t_end), sc.slo);
+                let cfg = match sc.scaling {
+                    ScalingMode::Reactive => {
+                        system.configure_for_demand(demand_at(ev.time, t_end), sc.slo)
+                    }
+                    ScalingMode::Closed => {
+                        let sig = signal_tracker.assemble(
+                            ev.time,
+                            &class_stats,
+                            SignalObservation {
+                                window: sc.decision_interval,
+                                envelope_demand: offered_rate(ev.time, t_end)
+                                    * sc.tokens_per_request,
+                                generated_tokens: generated,
+                                preemptions,
+                                rejections: rejected,
+                                tokens_per_request: sc.tokens_per_request,
+                                queue_len: policy.queue_len(),
+                                queue_capacity: sc.queue_capacity,
+                                kv_in_flight: batch.kv_tokens(),
+                                kv_capacity: system.kv_capacity_tokens(),
+                                tpot_targets: sc.admission.tpot_slo_class,
+                            },
+                        );
+                        system.configure_with_signal(&sig, sc.slo)
+                    }
+                };
                 decisions += 1;
                 if cfg.is_some() {
                     feasible_decisions += 1;
@@ -1704,8 +1879,9 @@ mod tests {
             steps: 5,
         });
         // 900 s ramp at 300 s decisions: three intervals of live,
-        // arrival-driven decode. Policies pinned to FIFO so the exact
-        // assertions hold regardless of the JANUS_ADMISSION matrix.
+        // arrival-driven decode. Policies pinned to FIFO and reactive
+        // scaling so the exact assertions hold regardless of the
+        // JANUS_ADMISSION / JANUS_SCALING matrices.
         let mut auto_sc = AutoscaleScenario::new(
             300.0,
             32.0,
@@ -1713,10 +1889,12 @@ mod tests {
             DiurnalTrace::ramp(0.25, 30.0, 1.0, 8.0, 5),
         );
         auto_sc.admission = AdmissionConfig::fifo();
+        auto_sc.scaling = ScalingMode::Reactive;
         let auto = Scenario::Autoscale(auto_sc);
         let mut fail_sc = FailureScenario::new(Slo::from_ms(200.0), 2.0, 32.0, 120.0)
             .with_failure(40.0, 8, 30.0);
         fail_sc.admission = AdmissionConfig::fifo();
+        fail_sc.scaling = ScalingMode::Reactive;
         let fail = Scenario::FailureInjection(fail_sc);
         let mut j = JanusSystem::build(model.clone(), hw.clone(), &pop, 16, 1);
         let mut s = SgLang::build(model.clone(), hw.clone(), &pop, 2);
@@ -1872,6 +2050,7 @@ mod tests {
         let trace = DiurnalTrace::ramp(0.375, 50.0, 1.0, 1.0, 3);
         let mut sc = AutoscaleScenario::new(900.0, 8.0, Slo::from_ms(200.0), trace);
         sc.admission = AdmissionConfig::fifo();
+        sc.scaling = ScalingMode::Reactive;
         let mut sys = ScriptedSystem::new(vec![true, false], 8, 16, 0.05);
         let r = autoscale(&mut sys, &sc, 17).expect("valid scenario");
         assert_eq!(r.intervals.len(), 2);
@@ -1895,6 +2074,7 @@ mod tests {
         let trace = DiurnalTrace::ramp(60.0 / 3600.0, 10.0, 20.0, 20.0, 9);
         let mut sc = AutoscaleScenario::new(30.0, 4.0, Slo::from_ms(200.0), trace);
         sc.admission = AdmissionConfig::fifo();
+        sc.scaling = ScalingMode::Reactive;
         sc.queue_capacity = 4;
         let mut sys = ScriptedSystem::new(vec![], 4, 1, 1.0);
         let r = autoscale(&mut sys, &sc, 23).expect("valid scenario");
@@ -1911,6 +2091,73 @@ mod tests {
         assert_eq!(r.generated_tokens, r.steps); // batch capacity 1
     }
 
+    /// Step durations: one 10 s stall first, then 10 ms steps — used to
+    /// pin that queue-depth averaging weights samples by step duration.
+    struct VaryingStepSystem {
+        steps: usize,
+    }
+
+    impl ServingSystem for VaryingStepSystem {
+        fn name(&self) -> &'static str {
+            "varying"
+        }
+
+        fn configure(&mut self, _batch: usize, slo: Slo) -> Option<ConfigInfo> {
+            self.configure_for_demand(1.0, slo)
+        }
+
+        fn configure_for_demand(&mut self, _lambda: f64, _slo: Slo) -> Option<ConfigInfo> {
+            Some(ConfigInfo {
+                label: "varying".into(),
+                gpus: 4,
+            })
+        }
+
+        fn step(&mut self, _batch: usize, _rng: &mut Rng) -> StepOutcome {
+            self.steps += 1;
+            let tpot = if self.steps == 1 { 10.0 } else { 0.01 };
+            StepOutcome { tpot, a_max: 1 }
+        }
+
+        fn gpus(&self) -> usize {
+            4
+        }
+
+        fn batch_capacity(&self) -> usize {
+            4
+        }
+
+        fn label(&self) -> String {
+            "varying".into()
+        }
+    }
+
+    #[test]
+    fn queue_depth_mean_is_weighted_by_step_duration() {
+        // One 10 s stall step sampled at depth ~0 (the very first arrival
+        // goes straight into the empty batch), then ~10 s of 10 ms steps
+        // with the 8-deep queue pinned full by a 30 req/s overload. A
+        // count-weighted average would sit near 8 — the ~1000 fast
+        // samples swamp the single slow one — but weighting each sample
+        // by its step's duration must pull the mean toward the midpoint
+        // (0 · 10 s + ~8 · 10 s) / 20 s ≈ 4.
+        let trace = DiurnalTrace::ramp(20.0 / 3600.0, 10.0, 30.0, 30.0, 13);
+        let mut sc = AutoscaleScenario::new(20.0, 32.0, Slo::from_ms(200.0), trace);
+        sc.admission = AdmissionConfig::fifo();
+        sc.scaling = ScalingMode::Reactive;
+        sc.queue_capacity = 8;
+        let mut sys = VaryingStepSystem { steps: 0 };
+        let r = autoscale(&mut sys, &sc, 29).expect("valid scenario");
+        assert!(r.steps > 100, "steps {}", r.steps);
+        assert!(r.rejected_requests > 0, "overload never filled the queue");
+        assert!(r.queue_depth_max <= 8);
+        assert!(
+            r.queue_depth_mean > 2.0 && r.queue_depth_mean < 6.0,
+            "duration-weighted depth mean {} should sit near 4, not near the sample-count mean of ~8",
+            r.queue_depth_mean
+        );
+    }
+
     #[test]
     fn autoscale_is_bit_deterministic_for_all_systems() {
         let model = deepseek_v2();
@@ -1919,6 +2166,7 @@ mod tests {
         let trace = DiurnalTrace::ramp(0.1, 30.0, 1.0, 6.0, 11);
         let mut sc = AutoscaleScenario::new(120.0, 32.0, Slo::from_ms(200.0), trace);
         sc.admission = AdmissionConfig::fifo();
+        sc.scaling = ScalingMode::Reactive;
         let fingerprint = |r: &AutoscaleResult| -> Vec<u64> {
             vec![
                 r.gpu_hours.to_bits(),
@@ -1975,6 +2223,7 @@ mod tests {
         let mut sc = FailureScenario::new(Slo::from_ms(200.0), 4.0, 64.0, 600.0)
             .with_failure(120.0, 28, 240.0);
         sc.admission = AdmissionConfig::fifo();
+        sc.scaling = ScalingMode::Reactive;
         let mut sys = janus(32, 7);
         let r = failure_injection(&mut sys, &sc, 11).expect("valid scenario");
         assert!(r.steps > 0);
@@ -2002,6 +2251,7 @@ mod tests {
         // bound the pre-queue failure loop lacked.
         let mut sc = FailureScenario::new(Slo::from_ms(200.0), 20.0, 4.0, 120.0);
         sc.admission = AdmissionConfig::fifo();
+        sc.scaling = ScalingMode::Reactive;
         sc.queue_capacity = 4;
         let mut sys = ScriptedSystem::new(vec![], 4, 1, 1.0);
         let r = failure_injection(&mut sys, &sc, 5).expect("valid scenario");
@@ -2018,6 +2268,7 @@ mod tests {
         let mut sc = FailureScenario::new(Slo::from_ms(200.0), 3.0, 48.0, 300.0)
             .with_failure(60.0, 12, 120.0);
         sc.admission = AdmissionConfig::fifo();
+        sc.scaling = ScalingMode::Reactive;
         let run_once = || {
             let mut sys = janus(16, 21);
             let r = failure_injection(&mut sys, &sc, 33).expect("valid scenario");

@@ -21,6 +21,12 @@ pub struct MockServingSystem {
     pub prefill_per_token: f64,
     /// Scripted per-decision feasibility (true once exhausted).
     pub feasibility: Vec<bool>,
+    /// Optional demand response: `(tokens_per_slot, max_capacity)`. When
+    /// set, each `configure_for_demand(lambda, ..)` resizes `capacity`
+    /// to `ceil(lambda / tokens_per_slot)` clamped to
+    /// `[1, max_capacity]` — at an *unchanged* GPU count, so two runs
+    /// that differ only in scaling policy accrue identical GPU-hours.
+    demand_response: Option<(f64, usize)>,
     decisions: usize,
 }
 
@@ -33,6 +39,7 @@ impl MockServingSystem {
             kv_capacity: capacity as f64 * 512.0,
             prefill_per_token: 5e-6,
             feasibility: Vec::new(),
+            demand_response: None,
             decisions: 0,
         }
     }
@@ -48,6 +55,14 @@ impl MockServingSystem {
         self.prefill_per_token = secs;
         self
     }
+
+    /// Enable the demand→capacity response: each decision provisions one
+    /// batch slot per `tokens_per_slot` of demanded token rate, up to
+    /// `max_capacity` slots, never below one. GPU count stays fixed.
+    pub fn with_demand_response(mut self, tokens_per_slot: f64, max_capacity: usize) -> Self {
+        self.demand_response = Some((tokens_per_slot, max_capacity));
+        self
+    }
 }
 
 impl ServingSystem for MockServingSystem {
@@ -59,7 +74,11 @@ impl ServingSystem for MockServingSystem {
         self.configure_for_demand(1.0, slo)
     }
 
-    fn configure_for_demand(&mut self, _lambda: f64, _slo: Slo) -> Option<ConfigInfo> {
+    fn configure_for_demand(&mut self, lambda: f64, _slo: Slo) -> Option<ConfigInfo> {
+        if let Some((tokens_per_slot, max_capacity)) = self.demand_response {
+            let want = (lambda / tokens_per_slot).ceil() as usize;
+            self.capacity = want.clamp(1, max_capacity);
+        }
         let ok = self.feasibility.get(self.decisions).copied().unwrap_or(true);
         self.decisions += 1;
         ok.then(|| ConfigInfo {
@@ -121,5 +140,19 @@ mod tests {
         assert!((m.prefill_cost(50) - 0.05).abs() < 1e-12);
         let mut rng = Rng::seed_from_u64(1);
         assert_eq!(m.step(4, &mut rng).tpot, 0.1);
+    }
+
+    #[test]
+    fn demand_response_resizes_capacity_at_fixed_gpus() {
+        let mut m = MockServingSystem::new(4, 8, 0.05).with_demand_response(20.0, 64);
+        let slo = Slo::from_ms(200.0);
+        assert!(m.configure_for_demand(163.0, slo).is_some());
+        assert_eq!(m.batch_capacity(), 9); // ceil(163/20)
+        assert_eq!(m.gpus(), 4);
+        assert!(m.configure_for_demand(0.0, slo).is_some());
+        assert_eq!(m.batch_capacity(), 1); // clamped up from zero
+        assert!(m.configure_for_demand(1e9, slo).is_some());
+        assert_eq!(m.batch_capacity(), 64); // clamped to max
+        assert_eq!(m.gpus(), 4); // GPU count never moves
     }
 }

@@ -93,6 +93,42 @@ impl Accumulator {
     }
 }
 
+/// Streaming time-weighted mean accumulator: each sample carries its
+/// own weight (e.g. the duration it was observed for), so irregularly
+/// spaced samples — decode steps of varying length — average by
+/// exposure time instead of by count.
+#[derive(Clone, Debug, Default)]
+pub struct WeightedAccumulator {
+    pub weight: f64,
+    pub sum: f64,
+}
+
+impl WeightedAccumulator {
+    pub fn new() -> Self {
+        WeightedAccumulator {
+            weight: 0.0,
+            sum: 0.0,
+        }
+    }
+
+    /// Observe `x` for weight `w` (non-positive weights are ignored —
+    /// a zero-length step contributes no exposure).
+    pub fn push(&mut self, x: f64, w: f64) {
+        if w > 0.0 {
+            self.weight += w;
+            self.sum += x * w;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.weight > 0.0 {
+            self.sum / self.weight
+        } else {
+            0.0
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -135,5 +171,23 @@ mod tests {
         assert_eq!(a.mean(), 2.0);
         assert_eq!(a.max, 3.0);
         assert_eq!(a.min, 1.0);
+    }
+
+    #[test]
+    fn weighted_accumulator_weighs_by_exposure() {
+        let mut a = WeightedAccumulator::new();
+        // 10.0 observed for 3 s, 2.0 for 1 s: mean = 32/4 = 8.
+        a.push(10.0, 3.0);
+        a.push(2.0, 1.0);
+        assert_eq!(a.mean(), 8.0);
+        // Non-positive weights contribute nothing.
+        a.push(1000.0, 0.0);
+        a.push(1000.0, -1.0);
+        assert_eq!(a.mean(), 8.0);
+    }
+
+    #[test]
+    fn weighted_accumulator_empty_is_zero() {
+        assert_eq!(WeightedAccumulator::new().mean(), 0.0);
     }
 }

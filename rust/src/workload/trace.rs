@@ -137,6 +137,51 @@ impl DiurnalTrace {
         }
     }
 
+    /// Synthetic flash-crowd trace: a flat `base` rate with a
+    /// rectangular burst to `peak` over `[spike_start, spike_end)`
+    /// seconds. The closed-loop scaling scenarios use this shape: the
+    /// interesting decision is the one right *after* the spike, when a
+    /// purely envelope-driven scaler follows the now-quiet forecast and
+    /// strands the backlog the spike left behind.
+    pub fn flash_crowd(
+        hours: f64,
+        step: f64,
+        base: f64,
+        peak: f64,
+        spike_start: f64,
+        spike_end: f64,
+        seed: u64,
+    ) -> Self {
+        let steps = ((hours * 3600.0 / step.max(1e-9)).round() as usize).max(1);
+        let envelope: Vec<f64> = (0..steps)
+            .map(|i| {
+                let t = i as f64 * step;
+                if t >= spike_start && t < spike_end {
+                    peak
+                } else {
+                    base
+                }
+            })
+            .collect();
+        let mean_rate = envelope.iter().sum::<f64>() / steps as f64;
+        let peak_rate = envelope.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        DiurnalTrace {
+            config: TraceConfig {
+                hours,
+                mean_rate,
+                peak_to_mean: if mean_rate > 0.0 {
+                    peak_rate / mean_rate
+                } else {
+                    1.0
+                },
+                burst_cv2: 0.3,
+                step,
+                seed,
+            },
+            envelope,
+        }
+    }
+
     /// Peak-to-mean ratio of the envelope.
     pub fn peak_to_mean(&self) -> f64 {
         let mean: f64 =
@@ -254,6 +299,21 @@ mod tests {
         assert!((tr.rate_at(0.5 * 3600.0) - 20.0).abs() < 1e-9);
         assert!((tr.config.mean_rate - 11.0).abs() < 1e-9);
         assert!(tr.mean_rate_in(0.0, 600.0) < tr.mean_rate_in(1200.0, 1800.0));
+    }
+
+    #[test]
+    fn flash_crowd_trace_is_rectangular() {
+        // 240 s at 10 s resolution, base 1 req/s, 30 req/s over [10, 50).
+        let tr = DiurnalTrace::flash_crowd(240.0 / 3600.0, 10.0, 1.0, 30.0, 10.0, 50.0, 7);
+        assert_eq!(tr.envelope.len(), 24);
+        assert!((tr.rate_at(0.0) - 1.0).abs() < 1e-12);
+        assert!((tr.rate_at(10.0) - 30.0).abs() < 1e-12);
+        assert!((tr.rate_at(49.9) - 30.0).abs() < 1e-12);
+        assert!((tr.rate_at(50.0) - 1.0).abs() < 1e-12);
+        assert!((tr.rate_at(200.0) - 1.0).abs() < 1e-12);
+        // Interval means: the spike lives entirely inside [0, 60).
+        assert!(tr.mean_rate_in(0.0, 60.0) > 20.0);
+        assert!((tr.mean_rate_in(60.0, 120.0) - 1.0).abs() < 1e-12);
     }
 
     #[test]

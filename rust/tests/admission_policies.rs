@@ -50,14 +50,18 @@ fn high_class_attainment_beats_fifo_within_throughput_budget() {
     let interactive = Priority::Interactive.rank();
     // The overload must actually hurt FIFO's interactive class,
     // otherwise the comparison is vacuous.
-    let fifo_att = fifo.per_class[interactive].ttft_attainment();
+    let fifo_att = fifo.per_class[interactive]
+        .ttft_attainment()
+        .expect("FIFO served interactive traffic");
     assert!(
         fifo_att < 0.5,
         "overload too mild: FIFO interactive TTFT attainment {fifo_att}"
     );
     for policy in [PolicyKind::SloClass, PolicyKind::KvAware] {
         let r = run_overload(policy);
-        let att = r.per_class[interactive].ttft_attainment();
+        let att = r.per_class[interactive]
+            .ttft_attainment()
+            .expect("policy served interactive traffic");
         assert!(
             att > fifo_att,
             "{}: interactive TTFT attainment {att} must strictly exceed FIFO's {fifo_att}",
@@ -169,8 +173,12 @@ fn aging_keeps_low_classes_served_under_high_class_flood() {
     // And the priority order still holds where it matters: interactive
     // waits less than batch on average (admission order is class-aware).
     assert!(
-        r.per_class[Priority::Interactive.rank()].ttft_attainment()
-            >= r.per_class[batch_rank].ttft_attainment(),
+        r.per_class[Priority::Interactive.rank()]
+            .ttft_attainment()
+            .expect("interactive class served")
+            >= r.per_class[batch_rank]
+                .ttft_attainment()
+                .expect("batch class served"),
         "aging inverted the priority order"
     );
 }

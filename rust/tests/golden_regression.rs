@@ -12,6 +12,14 @@
 //!   per-class TTFT attainment, aggregate token attainment, and the
 //!   flow/preemption counters. Policies are enumerated explicitly, so
 //!   the snapshot is identical under every `JANUS_ADMISSION` matrix leg.
+//! - `flash_crowd.tsv` — the closed-loop scaling acceptance surface: one
+//!   row per scaling mode ∈ {reactive, closed} over a flash-crowd trace
+//!   on the scripted mock (demand-responsive capacity at a fixed GPU
+//!   footprint). The closed row's interactive TTFT attainment strictly
+//!   exceeds the reactive row's at bit-identical GPU-hours. Modes are
+//!   enumerated explicitly, so the snapshot is identical under every
+//!   `JANUS_SCALING` matrix leg — and the other generators pin
+//!   `ScalingMode::Reactive` for the same reason.
 //!
 //! Bootstrap: on a machine without a snapshot (first run after a clone,
 //! or after deleting it), the test writes the file and passes with a
@@ -37,9 +45,12 @@ use janus::config::hardware::{paper_testbed, HardwareProfile};
 use janus::config::models::{self, MoeModel};
 use janus::config::serving::Slo;
 use janus::routing::gate::ExpertPopularity;
+use janus::scaling::ScalingMode;
 use janus::sim::admission::{AdmissionConfig, PolicyKind};
 use janus::sim::engine::{self, AutoscaleScenario, FixedBatchScenario};
 use janus::sim::sweep;
+use janus::testing::MockServingSystem;
+use janus::workload::classes::{ClassMix, Priority};
 use janus::workload::trace::DiurnalTrace;
 
 const STEPS: usize = 20;
@@ -119,8 +130,10 @@ fn compare_rows(
     for ((c_key, c_f, c_i), (n_key, n_f, n_i)) in committed.iter().zip(current.iter()) {
         assert_eq!(c_key, n_key, "snapshot rows reordered");
         for (i, (c, n)) in c_f.iter().zip(n_f.iter()).enumerate() {
+            // `nan` fields mark absent per-class samples (a class with no
+            // served traffic has no attainment); two absences agree.
             assert!(
-                (c - n).abs() <= TOLERANCE,
+                (c.is_nan() && n.is_nan()) || (c - n).abs() <= TOLERANCE,
                 "{c_key} {}: committed {c:.17e} vs current {n:.17e} \
                  (drift {:.3e} > {TOLERANCE:.0e}) — simulator behavior changed; \
                  rerun with JANUS_BLESS=1 only if intentional",
@@ -202,10 +215,12 @@ fn current_autoscale_snapshot_at(threads: usize) -> String {
     let pop = ExpertPopularity::Zipf { s: 0.4 };
     let trace = DiurnalTrace::ramp(720.0 / 3600.0, 30.0, 1.0, 8.0, 4242);
     let mut scenario = AutoscaleScenario::new(300.0, 64.0, Slo::from_ms(200.0), trace);
-    // The pre-admission-subsystem baseline: FIFO pinned explicitly, so
-    // this snapshot stays byte-identical under the JANUS_ADMISSION CI
-    // matrix (the per-policy rows live in admission.tsv).
+    // The pre-admission-subsystem baseline: FIFO + reactive scaling
+    // pinned explicitly, so this snapshot stays byte-identical under the
+    // JANUS_ADMISSION and JANUS_SCALING CI matrices (the per-policy rows
+    // live in admission.tsv, the per-mode rows in flash_crowd.tsv).
     scenario.admission = AdmissionConfig::fifo();
+    scenario.scaling = ScalingMode::Reactive;
     let mut out = String::from(
         "# Golden arrival-driven autoscale snapshot (DeepSeek-V2, paper\n\
          # testbed, zipf 0.4, SLO 200 ms, 720 s ramp 1->8 req/s, 64\n\
@@ -243,6 +258,16 @@ fn current_autoscale_snapshot() -> String {
     current_autoscale_snapshot_at(sweep::resolve_threads(None))
 }
 
+/// Format an optional per-class attainment: `nan` marks "no samples"
+/// (parsed back as `f64::NAN` and matched NaN-to-NaN by `compare_rows`),
+/// so an absent class can never be confused with a perfect 1.0.
+fn fmt_att(att: Option<f64>) -> String {
+    match att {
+        Some(v) => format!("{v:.17e}"),
+        None => "nan".to_string(),
+    }
+}
+
 /// One row per (system × admission policy) over a short overload ramp:
 /// per-class TTFT attainment, aggregate token attainment, and the flow
 /// counters. Policies are enumerated explicitly (never from
@@ -268,15 +293,16 @@ fn current_admission_snapshot_at(threads: usize) -> String {
         let mut scenario =
             AutoscaleScenario::new(60.0, 64.0, Slo::from_ms(200.0), trace.clone());
         scenario.admission = AdmissionConfig::with_policy(policy);
+        scenario.scaling = ScalingMode::Reactive;
         let mut sys = build_system(which, &model, &hw, &pop);
         let r = engine::autoscale(sys.as_mut(), &scenario, SEED).expect("valid scenario");
         format!(
-            "{}/{}\t{:.17e}\t{:.17e}\t{:.17e}\t{:.17e}\t{}\t{}\t{}\t{}\t{}\n",
+            "{}/{}\t{}\t{}\t{}\t{:.17e}\t{}\t{}\t{}\t{}\t{}\n",
             r.system,
             policy.name(),
-            r.per_class[0].ttft_attainment(),
-            r.per_class[1].ttft_attainment(),
-            r.per_class[2].ttft_attainment(),
+            fmt_att(r.per_class[0].ttft_attainment()),
+            fmt_att(r.per_class[1].ttft_attainment()),
+            fmt_att(r.per_class[2].ttft_attainment()),
             r.slo_attainment,
             r.admitted_requests,
             r.completed_requests,
@@ -293,6 +319,55 @@ fn current_admission_snapshot_at(threads: usize) -> String {
 
 fn current_admission_snapshot() -> String {
     current_admission_snapshot_at(sweep::resolve_threads(None))
+}
+
+/// One row per scaling mode over a flash-crowd trace on the scripted
+/// mock (demand-responsive batch capacity at a fixed 4-GPU footprint —
+/// both rows accrue bit-identical GPU-hours). Modes are enumerated
+/// explicitly (never from `JANUS_SCALING`), so one committed snapshot
+/// pins both and the CI scaling matrix compares against the same bytes.
+/// The scenario mirrors `tests/closed_loop.rs`: the burst ends before
+/// the second decision, so only the closed loop sees the backlog.
+fn current_flash_crowd_snapshot_at(threads: usize) -> String {
+    let trace = DiurnalTrace::flash_crowd(240.0 / 3600.0, 10.0, 1.0, 60.0, 10.0, 50.0, 19);
+    let mut out = String::from(
+        "# Golden flash-crowd snapshot (scripted mock with demand-responsive\n\
+         # capacity at fixed 4 GPUs, 1 req/s base + 60 req/s burst over\n\
+         # [10,50) s, 8 tok/req, 60 s decisions, TTFT 1 s, seed 424242).\n\
+         # One row per scaling mode. Regenerate: JANUS_BLESS=1.\n\
+         # mode\tgpu_hours\tttft_att_interactive\tttft_p99\
+\tsteps\tadmitted\tcompleted\trejected\tgenerated\n",
+    );
+    let modes = [ScalingMode::Reactive, ScalingMode::Closed];
+    let rows = sweep::sweep(&modes, threads, |_, &mode| {
+        let mut scenario =
+            AutoscaleScenario::new(60.0, 8.0, Slo::from_ms(200.0), trace.clone());
+        scenario.admission = AdmissionConfig::fifo();
+        scenario.admission.class_mix = ClassMix::single(Priority::Interactive);
+        scenario.scaling = mode;
+        let mut sys = MockServingSystem::new(4, 8, 0.05).with_demand_response(20.0, 64);
+        let r = engine::autoscale(&mut sys, &scenario, SEED).expect("valid scenario");
+        format!(
+            "{}\t{:.17e}\t{}\t{:.17e}\t{}\t{}\t{}\t{}\t{}\n",
+            mode.name(),
+            r.gpu_hours,
+            fmt_att(r.per_class[Priority::Interactive.rank()].ttft_attainment()),
+            r.ttft_p99,
+            r.steps,
+            r.admitted_requests,
+            r.completed_requests,
+            r.rejected_requests,
+            r.generated_tokens
+        )
+    });
+    for row in rows {
+        out.push_str(&row);
+    }
+    out
+}
+
+fn current_flash_crowd_snapshot() -> String {
+    current_flash_crowd_snapshot_at(sweep::resolve_threads(None))
 }
 
 #[test]
@@ -352,6 +427,40 @@ fn admission_policies_match_snapshot() {
     );
 }
 
+#[test]
+fn flash_crowd_scaling_matches_snapshot() {
+    let path = snapshot_path("flash_crowd.tsv");
+    let fresh = current_flash_crowd_snapshot();
+    // Acceptance invariant, checked on the fresh rows themselves (not
+    // just against committed bytes): closed-loop scaling strictly beats
+    // reactive on interactive TTFT attainment at bit-identical
+    // GPU-hours.
+    let rows = parse_rows(&fresh, 3, 5);
+    assert_eq!(rows.len(), 2);
+    assert_eq!(rows[0].0, "reactive");
+    assert_eq!(rows[1].0, "closed");
+    assert!(
+        rows[1].1[1] > rows[0].1[1],
+        "closed interactive TTFT attainment {} must strictly exceed reactive's {}",
+        rows[1].1[1],
+        rows[0].1[1]
+    );
+    assert_eq!(
+        rows[0].1[0].to_bits(),
+        rows[1].1[0].to_bits(),
+        "GPU-hours must match bit-for-bit at a fixed pool"
+    );
+    let Some(committed) = committed_or_bootstrap(&path, &fresh) else {
+        return;
+    };
+    compare_rows(
+        &parse_rows(&committed, 3, 5),
+        &parse_rows(&fresh, 3, 5),
+        &["gpu_hours", "ttft_att_interactive", "ttft_p99"],
+        &["steps", "admitted", "completed", "rejected", "generated"],
+    );
+}
+
 /// The snapshot generators are bit-deterministic — the precondition for
 /// the golden files being meaningful across machines and runs — and the
 /// sweep's worker count is not an observable: the serial (threads=1)
@@ -361,10 +470,15 @@ fn snapshot_generation_is_deterministic() {
     assert_eq!(current_fixed_batch_snapshot(), current_fixed_batch_snapshot());
     assert_eq!(current_autoscale_snapshot(), current_autoscale_snapshot());
     assert_eq!(current_admission_snapshot(), current_admission_snapshot());
+    assert_eq!(current_flash_crowd_snapshot(), current_flash_crowd_snapshot());
     assert_eq!(
         current_fixed_batch_snapshot_at(1),
         current_fixed_batch_snapshot()
     );
     assert_eq!(current_autoscale_snapshot_at(1), current_autoscale_snapshot());
     assert_eq!(current_admission_snapshot_at(1), current_admission_snapshot());
+    assert_eq!(
+        current_flash_crowd_snapshot_at(1),
+        current_flash_crowd_snapshot()
+    );
 }

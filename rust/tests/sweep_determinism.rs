@@ -13,17 +13,26 @@ use janus::baselines::{build_eval_system, ServingSystem};
 use janus::config::hardware::paper_testbed;
 use janus::config::models;
 use janus::config::serving::Slo;
+use janus::scaling::ScalingMode;
 use janus::sim::engine::{AutoscaleScenario, FixedBatchScenario, Scenario, ScenarioOutcome};
 use janus::sim::sweep::{self, run_cells, sweep, sweep_chunked, SweepCell};
 use janus::util::rng::{split_seed, Rng};
 use janus::workload::trace::DiurnalTrace;
 
+/// What the autoscale cells run: reactive (envelope-only) or the
+/// closed signal-driven loop. Pinned per cell — never `from_env` — so
+/// the sweep bytes are identical under every `JANUS_SCALING` CI leg.
+const MODES: [(ScalingMode, &str); 2] = [
+    (ScalingMode::Reactive, "auto"),
+    (ScalingMode::Closed, "closed"),
+];
+
 /// Serialize a representative evaluation sweep — 4 systems × 2 batches
-/// of fixed-batch decode plus one arrival-driven autoscale cell per
-/// system, expressed as a `SweepCell` (system ctor × scenario × seed)
-/// work queue drained by `run_cells` — to an exact (bit-level hex)
-/// string. Heavy and light cells interleave in one queue so worker
-/// claiming is genuinely racy at > 1 thread.
+/// of fixed-batch decode plus two arrival-driven autoscale cells per
+/// system (one reactive, one closed-loop), expressed as a `SweepCell`
+/// (system ctor × scenario × seed) work queue drained by `run_cells` —
+/// to an exact (bit-level hex) string. Heavy and light cells interleave
+/// in one queue so worker claiming is genuinely racy at > 1 thread.
 fn sweep_snapshot(threads: usize) -> String {
     let model = models::deepseek_v2();
     let hw = paper_testbed();
@@ -32,25 +41,32 @@ fn sweep_snapshot(threads: usize) -> String {
     let names = ["janus", "sglang", "msi", "xds"];
     let mut cells: Vec<SweepCell> = Vec::new();
     for s in 0..4usize {
-        for batch in [Some(64usize), Some(256), None] {
-            let scenario = match batch {
-                Some(b) => Scenario::FixedBatch(FixedBatchScenario {
-                    batch: b,
-                    slo: Slo::from_ms(200.0),
-                    steps: 12,
-                }),
-                None => Scenario::Autoscale(AutoscaleScenario::new(
-                    75.0,
-                    32.0,
-                    Slo::from_ms(200.0),
-                    trace.clone(),
-                )),
+        let mut auto_cell = |mode: usize| -> (Scenario, String) {
+            let mut sc =
+                AutoscaleScenario::new(75.0, 32.0, Slo::from_ms(200.0), trace.clone());
+            sc.scaling = MODES[mode].0;
+            (
+                Scenario::Autoscale(sc),
+                format!("{}/{}", names[s], MODES[mode].1),
+            )
+        };
+        // Two fixed-batch cells, then one autoscale cell per scaling mode.
+        for kind in 0..4usize {
+            let (scenario, label) = if kind < 2 {
+                let b = [64usize, 256][kind];
+                (
+                    Scenario::FixedBatch(FixedBatchScenario {
+                        batch: b,
+                        slo: Slo::from_ms(200.0),
+                        steps: 12,
+                    }),
+                    format!("{}/B{b}", names[s]),
+                )
+            } else {
+                auto_cell(kind - 2)
             };
             cells.push(SweepCell {
-                label: match batch {
-                    Some(b) => format!("{}/B{b}", names[s]),
-                    None => format!("{}/auto", names[s]),
-                },
+                label,
                 build: Box::new({
                     let (model, hw, pop) = (model.clone(), hw.clone(), pop.clone());
                     move || -> Box<dyn ServingSystem> {
@@ -91,7 +107,10 @@ fn sweep_snapshot(threads: usize) -> String {
 #[test]
 fn sweep_is_byte_identical_across_thread_counts() {
     let serial = sweep_snapshot(1);
-    assert!(serial.lines().count() == 12, "unexpected cell count");
+    assert!(serial.lines().count() == 16, "unexpected cell count");
+    // Both scaling modes made it into the queue.
+    assert_eq!(serial.lines().filter(|l| l.contains("/auto")).count(), 4);
+    assert_eq!(serial.lines().filter(|l| l.contains("/closed")).count(), 4);
     // 4 workers when the hardware has them, else the 2-worker fallback —
     // plus a deliberately oversubscribed count, which must not matter
     // either (workers beyond the cell list just find it drained).
@@ -178,6 +197,46 @@ fn chunked_claiming_is_byte_identical_for_k_1_3_and_grid_size() {
     assert_eq!(sweep::resolve_chunk(Some(3), grid, 4), 3);
     assert!(sweep::resolve_chunk(Some(0), grid, 4) >= 1);
     assert!(sweep::resolve_chunk(None, grid, 4) >= 1);
+}
+
+#[test]
+fn scaling_signal_assembly_is_pure_across_thread_counts() {
+    // The closed-loop contract: a ScalingSignal is a pure function of
+    // sim state — assembling one (and digesting it into a decision-cache
+    // key) on a sweep worker must be bit-identical no matter how many
+    // workers run or which worker claims the cell.
+    use janus::scaling::ScalingSignal;
+    let signal_for = |cell: u64| -> ScalingSignal {
+        let mut rng = Rng::seed_from_u64(split_seed(0x51C9, cell));
+        let mut sig = ScalingSignal::idle(60.0);
+        sig.envelope_demand = rng.f64() * 500.0;
+        sig.measured_demand = rng.f64() * 500.0;
+        sig.backlog_tokens = rng.f64() * 4096.0;
+        sig.kv_utilization = rng.f64();
+        sig.queue_occupancy = rng.f64();
+        sig.preemptions = rng.next_u64() % 64;
+        sig.rejections = rng.next_u64() % 64;
+        sig.tpot_targets[0] = Some(0.05 + rng.f64() * 0.1);
+        sig.class_active = [true, rng.f64() < 0.5, false];
+        sig
+    };
+    let cells: Vec<u64> = (0..24).collect();
+    let run = |threads: usize| -> Vec<(u64, u64, u64)> {
+        sweep(&cells, threads, |_, &c| {
+            let sig = signal_for(c);
+            (
+                sig.fingerprint(),
+                sig.planned_demand().to_bits(),
+                sig.effective_slo(Slo::from_ms(200.0)).tpot.to_bits(),
+            )
+        })
+    };
+    let serial = run(1);
+    // Distinct inputs digest distinctly (the cache key lane is live).
+    assert!(serial.windows(2).all(|w| w[0].0 != w[1].0));
+    for threads in [2usize, 4, 8] {
+        assert_eq!(serial, run(threads), "threads={threads}");
+    }
 }
 
 #[test]
