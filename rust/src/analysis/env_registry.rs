@@ -1,0 +1,151 @@
+//! The checked-in registry of `JANUS_*` environment variables.
+//!
+//! This file is the single source of truth: the env-registry tidy rule
+//! fails when a `JANUS_*` string literal appears anywhere in the tree
+//! but not here (an undocumented knob), *and* when an entry here is no
+//! longer referenced anywhere else (a stale doc). The DESIGN.md table
+//! between the `janus-env` markers is generated from
+//! [`markdown_table`] and compared byte-for-byte, so the docs cannot
+//! drift from the code.
+//!
+//! To add a variable: read it through a named constant, add an
+//! [`EnvVar`] row here, and paste the output of `cargo run --bin tidy
+//! -- --env-table` into DESIGN.md.
+
+/// One registered environment variable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EnvVar {
+    pub name: &'static str,
+    /// Accepted values and the default when unset.
+    pub values: &'static str,
+    /// The module or test that reads it.
+    pub read_by: &'static str,
+    pub purpose: &'static str,
+}
+
+/// Every `JANUS_*` variable the repo reads, sorted by name.
+pub const REGISTRY: &[EnvVar] = &[
+    EnvVar {
+        name: "JANUS_ADMISSION",
+        values: "`fifo` / `slo` / `kv` (default `fifo`)",
+        read_by: "`sim::admission`",
+        purpose: "Default admission policy for env-resolved scenarios; \
+                  CI runs a matrix leg per policy.",
+    },
+    EnvVar {
+        name: "JANUS_ARTIFACTS",
+        values: "directory path (default `./artifacts`)",
+        read_by: "`runtime::artifacts`",
+        purpose: "Output directory for runtime artifact dumps.",
+    },
+    EnvVar {
+        name: "JANUS_BLESS",
+        values: "set / unset (default unset)",
+        read_by: "`tests/golden_regression.rs`",
+        purpose: "Rewrite golden snapshots instead of comparing; \
+                  use only to intentionally re-pin behavior.",
+    },
+    EnvVar {
+        name: "JANUS_CHUNK",
+        values: "positive integer (default auto-sized)",
+        read_by: "`sim::sweep`",
+        purpose: "Cells claimed per `fetch_add` in parallel sweeps; \
+                  never observable in results.",
+    },
+    EnvVar {
+        name: "JANUS_PROP_SEED",
+        values: "u64 (default fixed base seed)",
+        read_by: "`testing::prop`",
+        purpose: "Property-test seed override for replaying a failing \
+                  sweep.",
+    },
+    EnvVar {
+        name: "JANUS_REQUIRE_GOLDEN",
+        values: "set / unset (default unset)",
+        read_by: "`tests/golden_regression.rs`",
+        purpose: "Fail (instead of bootstrap-write) when a golden \
+                  snapshot is missing; set in every CI job.",
+    },
+    EnvVar {
+        name: "JANUS_SCALING",
+        values: "`reactive` / `closed` (default `reactive`)",
+        read_by: "`scaling::signal`",
+        purpose: "Default scaling mode for env-resolved scenarios; \
+                  CI runs a matrix leg per mode.",
+    },
+    EnvVar {
+        name: "JANUS_THREADS",
+        values: "positive integer (default hardware threads)",
+        read_by: "`sim::sweep`",
+        purpose: "Sweep worker count; results are bit-identical at any \
+                  value (the determinism CI matrix pins 2 and max).",
+    },
+];
+
+/// Marker opening the generated table in DESIGN.md.
+pub const TABLE_BEGIN: &str = "<!-- janus-env:begin -->";
+/// Marker closing the generated table in DESIGN.md.
+pub const TABLE_END: &str = "<!-- janus-env:end -->";
+
+/// Whether `name` is a registered variable.
+pub fn contains(name: &str) -> bool {
+    REGISTRY.iter().any(|v| v.name == name)
+}
+
+/// The generated DESIGN.md table body (between the markers, exclusive).
+pub fn markdown_table() -> String {
+    let mut out = String::new();
+    out.push_str("| Variable | Values (default) | Read by | Purpose |\n");
+    out.push_str("| --- | --- | --- | --- |\n");
+    for v in REGISTRY {
+        let purpose = v.purpose.split_whitespace().collect::<Vec<_>>().join(" ");
+        out.push_str(&format!(
+            "| `{}` | {} | {} | {} |\n",
+            v.name,
+            v.values.split_whitespace().collect::<Vec<_>>().join(" "),
+            v.read_by,
+            purpose
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_sorted_and_unique() {
+        for pair in REGISTRY.windows(2) {
+            assert!(
+                pair[0].name < pair[1].name,
+                "registry must stay sorted/deduped: {} vs {}",
+                pair[0].name,
+                pair[1].name
+            );
+        }
+    }
+
+    #[test]
+    fn names_follow_the_janus_prefix_convention() {
+        for v in REGISTRY {
+            assert!(v.name.starts_with("JANUS_"), "bad name {}", v.name);
+            assert!(
+                v.name[6..]
+                    .chars()
+                    .all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_'),
+                "bad name {}",
+                v.name
+            );
+        }
+    }
+
+    #[test]
+    fn table_has_one_row_per_entry() {
+        let table = markdown_table();
+        assert_eq!(table.lines().count(), 2 + REGISTRY.len());
+        assert!(table.contains("| `JANUS_THREADS` |"));
+        assert!(contains("JANUS_THREADS"));
+        assert!(!contains("JANUS_THREAD"));
+    }
+}

@@ -1,0 +1,235 @@
+//! `janus-tidy`: a repo-native static analysis pass, in the spirit of
+//! rust-lang/rust's `tools/tidy`.
+//!
+//! The evaluation pipeline (golden snapshots, thread-count-invariant
+//! sweeps, closed-loop scaling comparisons) rests on bit-identical
+//! same-seed determinism, which runtime tests can only sample. This
+//! pass checks the invariants *statically*, on every line of `src/` and
+//! `tests/`, with six rules:
+//!
+//! | rule | enforces |
+//! |------|----------|
+//! | `no-wallclock` | no `Instant::now`/`SystemTime` outside the bench harness, figure timing, and the pjrt leader |
+//! | `no-unordered-iter` | no `HashMap`/`HashSet` iteration in deterministic modules |
+//! | `no-nan-order` | `total_cmp` instead of `partial_cmp(..).unwrap()` |
+//! | `no-panic-in-lib` | panicking calls in library paths carry a written justification |
+//! | `no-alloc-in-hot-path` | no allocation idioms inside `tidy:hot-path` regions |
+//! | `env-registry` | every `JANUS_*` var is registered and the DESIGN.md table is generated |
+//!
+//! **Suppression policy.** A violation is silenced only by an explicit
+//! `tidy:allow(rule): reason` comment on the same line or the line
+//! above; the reason is mandatory, and a suppression that no longer
+//! suppresses anything is itself an error (`unused-suppression`), so
+//! annotations cannot outlive the code they excuse. Malformed
+//! directives are errors too (`tidy-directive`) — a typo must not
+//! silently disable enforcement.
+//!
+//! Enforcement is tier-1: `tests/tidy.rs` self-scans the repo on every
+//! `cargo test`, and the `tidy` binary gives CI a standalone
+//! `file:line: rule: message` report with a nonzero exit.
+
+pub mod env_registry;
+pub mod report;
+pub mod rules;
+pub mod scanner;
+
+pub use report::{Report, Violation};
+pub use scanner::SourceFile;
+
+use rules::Hit;
+use scanner::DirectiveKind;
+use std::collections::BTreeMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Run every rule over pre-lexed sources. `design_md` is the DESIGN.md
+/// text for the env-table drift check (`None` skips it, for fixtures).
+/// The stale-registry audit runs only when the scan includes the
+/// registry file itself — i.e. on full-tree scans, not fixture subsets.
+pub fn scan_sources(files: &[SourceFile], design_md: Option<&str>) -> Report {
+    let mut report = Report::new();
+    let mut env_usage: BTreeMap<String, usize> = BTreeMap::new();
+    let full_tree = files
+        .iter()
+        .any(|f| f.rel_path == rules::env_vars::REGISTRY_PATH);
+    for file in files {
+        let mut hits: Vec<Hit> = Vec::new();
+        rules::wallclock::check(file, &mut hits);
+        rules::unordered_iter::check(file, &mut hits);
+        rules::nan_order::check(file, &mut hits);
+        rules::panic_lib::check(file, &mut hits);
+        rules::hot_path_alloc::check(file, &mut hits);
+        rules::env_vars::check(file, &mut env_usage, &mut hits);
+        apply_suppressions(file, hits, &mut report);
+    }
+    rules::env_vars::check_global(full_tree, &env_usage, design_md, &mut report);
+    report
+}
+
+/// Filter raw hits through this file's `tidy:allow` directives; report
+/// unused suppressions and malformed directives.
+fn apply_suppressions(file: &SourceFile, hits: Vec<Hit>, report: &mut Report) {
+    struct Allow<'a> {
+        line: usize,
+        rule: &'a str,
+        used: bool,
+    }
+    let mut allows: Vec<Allow<'_>> = Vec::new();
+    for d in &file.directives {
+        match &d.kind {
+            DirectiveKind::Allow { rule, .. } => {
+                if rules::RULE_NAMES.contains(&rule.as_str()) {
+                    allows.push(Allow {
+                        line: d.line,
+                        rule,
+                        used: false,
+                    });
+                } else {
+                    report.push(
+                        &file.rel_path,
+                        d.line,
+                        rules::TIDY_DIRECTIVE,
+                        format!("tidy:allow names unknown rule `{rule}`"),
+                    );
+                }
+            }
+            DirectiveKind::Malformed { message } => {
+                report.push(
+                    &file.rel_path,
+                    d.line,
+                    rules::TIDY_DIRECTIVE,
+                    message.clone(),
+                );
+            }
+            _ => {}
+        }
+    }
+    for hit in hits {
+        let mut suppressed = false;
+        for a in allows.iter_mut() {
+            if a.rule == hit.rule && (a.line == hit.line || a.line + 1 == hit.line) {
+                a.used = true;
+                suppressed = true;
+            }
+        }
+        if !suppressed {
+            report.push(&file.rel_path, hit.line, hit.rule, hit.message);
+        }
+    }
+    for a in &allows {
+        if !a.used {
+            report.push(
+                &file.rel_path,
+                a.line,
+                rules::UNUSED_SUPPRESSION,
+                format!(
+                    "tidy:allow({}) suppresses nothing on this or the next line",
+                    a.rule
+                ),
+            );
+        }
+    }
+}
+
+/// Lex and scan the real `src/` + `tests/` trees of this crate, plus
+/// the repo-root DESIGN.md. Usable from both the `tidy` binary and the
+/// `tests/tidy.rs` self-scan (`CARGO_MANIFEST_DIR` anchors both).
+pub fn run_repo_scan() -> io::Result<Report> {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let mut listed: Vec<(String, PathBuf)> = Vec::new();
+    for top in ["src", "tests"] {
+        collect_rs_files(&root.join(top), top, &mut listed)?;
+    }
+    let mut sources = Vec::with_capacity(listed.len());
+    for (rel, path) in &listed {
+        let text = fs::read_to_string(path)?;
+        sources.push(SourceFile::lex(rel, &text));
+    }
+    let design = fs::read_to_string(root.join("..").join("DESIGN.md"))?;
+    Ok(scan_sources(&sources, Some(&design)))
+}
+
+/// Recursively list `.rs` files under `dir`, sorted by name at every
+/// level so the scan order (and therefore the report) is stable across
+/// filesystems.
+fn collect_rs_files(
+    dir: &Path,
+    rel: &str,
+    out: &mut Vec<(String, PathBuf)>,
+) -> io::Result<()> {
+    let mut entries = fs::read_dir(dir)?.collect::<io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let rel_child = format!("{rel}/{name}");
+        if path.is_dir() {
+            collect_rs_files(&path, &rel_child, out)?;
+        } else if name.ends_with(".rs") {
+            out.push((rel_child, path));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan_one(path: &str, src: &str) -> Report {
+        scan_sources(&[SourceFile::lex(path, src)], None)
+    }
+
+    #[test]
+    fn allow_suppresses_and_is_marked_used() {
+        let src = "\
+// tidy:allow(no-wallclock): imaginary timing cell justified here
+let t = Instant::now();
+";
+        let report = scan_one("src/sim/engine.rs", src);
+        assert!(report.is_clean(), "{}", report.render());
+
+        let same_line = "let t = Instant::now(); // tidy:allow(no-wallclock): justified\n";
+        let report = scan_one("src/sim/engine.rs", same_line);
+        assert!(report.is_clean(), "{}", report.render());
+    }
+
+    #[test]
+    fn unused_allow_is_an_error() {
+        let src = "// tidy:allow(no-wallclock): nothing here needs this\nlet x = 1;\n";
+        let report = scan_one("src/sim/engine.rs", src);
+        assert_eq!(report.len(), 1);
+        assert_eq!(report.count_rule(rules::UNUSED_SUPPRESSION), 1);
+    }
+
+    #[test]
+    fn allow_for_wrong_rule_does_not_suppress() {
+        let src = "// tidy:allow(no-nan-order): wrong rule\nlet t = Instant::now();\n";
+        let report = scan_one("src/sim/engine.rs", src);
+        // The wallclock hit survives and the allow is unused.
+        assert_eq!(report.count_rule(rules::NO_WALLCLOCK), 1);
+        assert_eq!(report.count_rule(rules::UNUSED_SUPPRESSION), 1);
+    }
+
+    #[test]
+    fn unknown_rule_and_malformed_directives_error() {
+        let src = "\
+// tidy:allow(no-such-rule): bad name
+// tidy:allow(no-wallclock)
+// tidy:hot-path:open
+";
+        let report = scan_one("src/sim/engine.rs", src);
+        assert_eq!(report.count_rule(rules::TIDY_DIRECTIVE), 3);
+    }
+
+    #[test]
+    fn violations_render_in_expected_format() {
+        let report = scan_one("src/sim/engine.rs", "let t = Instant::now();\n");
+        let rendered = report.render();
+        assert!(
+            rendered.starts_with("src/sim/engine.rs:1: no-wallclock: "),
+            "{rendered}"
+        );
+    }
+}

@@ -1,0 +1,106 @@
+//! Violation collection and rendering for the tidy pass.
+
+use std::fmt;
+
+/// One rule violation, reported as `file:line: rule: message`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: {}: {}",
+            self.file, self.line, self.rule, self.message
+        )
+    }
+}
+
+/// The outcome of a scan: every violation, deterministically ordered.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    violations: Vec<Violation>,
+}
+
+impl Report {
+    pub fn new() -> Report {
+        Report::default()
+    }
+
+    pub fn push(&mut self, file: &str, line: usize, rule: &'static str, message: String) {
+        self.violations.push(Violation {
+            file: file.to_string(),
+            line,
+            rule,
+            message,
+        });
+    }
+
+    /// Violations sorted by (file, line, rule, message) — stable across
+    /// filesystem iteration order and rule execution order.
+    pub fn violations(&self) -> Vec<Violation> {
+        let mut out = self.violations.clone();
+        out.sort_by(|a, b| {
+            a.file
+                .cmp(&b.file)
+                .then(a.line.cmp(&b.line))
+                .then(a.rule.cmp(b.rule))
+                .then(a.message.cmp(&b.message))
+        });
+        out
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.violations.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// One `file:line: rule: message` per line, sorted.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for v in self.violations() {
+            out.push_str(&v.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Count of violations for a given rule.
+    pub fn count_rule(&self, rule: &str) -> usize {
+        self.violations.iter().filter(|v| v.rule == rule).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_is_sorted_and_formatted() {
+        let mut r = Report::new();
+        r.push("src/b.rs", 3, "no-wallclock", "msg b".to_string());
+        r.push("src/a.rs", 9, "no-wallclock", "msg a".to_string());
+        r.push("src/a.rs", 2, "no-nan-order", "msg c".to_string());
+        assert_eq!(
+            r.render(),
+            "src/a.rs:2: no-nan-order: msg c\n\
+             src/a.rs:9: no-wallclock: msg a\n\
+             src/b.rs:3: no-wallclock: msg b\n"
+        );
+        assert_eq!(r.len(), 3);
+        assert!(!r.is_clean());
+        assert_eq!(r.count_rule("no-wallclock"), 2);
+    }
+}

@@ -1,0 +1,186 @@
+//! `env-registry`: every `JANUS_*` environment variable must be
+//! documented in [`crate::analysis::env_registry`], every registry
+//! entry must still be read somewhere, and the DESIGN.md table must be
+//! the generated one. Together these keep the env surface discoverable
+//! — an undocumented knob is how a CI matrix silently stops covering a
+//! code path.
+
+use super::{Hit, ENV_REGISTRY};
+use crate::analysis::env_registry;
+use crate::analysis::report::Report;
+use crate::analysis::scanner::SourceFile;
+use std::collections::BTreeMap;
+
+/// Where the registry lives (reported against for stale entries, and
+/// excluded from the usage count — definitions are not usages).
+pub const REGISTRY_PATH: &str = "src/analysis/env_registry.rs";
+
+/// Whether a string literal is exactly an env-var name in this repo's
+/// `JANUS_*` convention.
+pub fn is_env_name(s: &str) -> bool {
+    match s.strip_prefix("JANUS_") {
+        Some(rest) => {
+            !rest.is_empty()
+                && rest
+                    .chars()
+                    .all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_')
+        }
+        None => false,
+    }
+}
+
+/// Per-file half: record usages, flag unregistered names. Literals in
+/// `#[cfg(test)]` blocks are ignored — test fixtures spell made-up
+/// names, and a var read *only* by unit tests has no real consumer.
+pub fn check(file: &SourceFile, usage: &mut BTreeMap<String, usize>, hits: &mut Vec<Hit>) {
+    if file.rel_path == REGISTRY_PATH {
+        return;
+    }
+    for lit in &file.strings {
+        if !is_env_name(&lit.text) || file.is_test_line(lit.line) {
+            continue;
+        }
+        *usage.entry(lit.text.clone()).or_insert(0) += 1;
+        if !env_registry::contains(&lit.text) {
+            hits.push(Hit {
+                line: lit.line,
+                rule: ENV_REGISTRY,
+                message: format!(
+                    "env var `{}` is not in analysis::env_registry::REGISTRY; \
+                     register it (and regenerate the DESIGN.md table)",
+                    lit.text
+                ),
+            });
+        }
+    }
+}
+
+/// Whole-tree half: stale registry entries and DESIGN.md table drift.
+/// `full_tree` says the scan covered all of `src/` + `tests/` (it
+/// included the registry file itself); the stale-entry audit is
+/// meaningless on a fixture subset and only runs when it is true.
+pub fn check_global(
+    full_tree: bool,
+    usage: &BTreeMap<String, usize>,
+    design_md: Option<&str>,
+    report: &mut Report,
+) {
+    for var in env_registry::REGISTRY {
+        if full_tree && usage.get(var.name).copied().unwrap_or(0) == 0 {
+            report.push(
+                REGISTRY_PATH,
+                1,
+                ENV_REGISTRY,
+                format!(
+                    "registry entry `{}` is read nowhere in src/ or tests/; \
+                     remove it or wire it back up",
+                    var.name
+                ),
+            );
+        }
+    }
+    let md = match design_md {
+        Some(md) => md,
+        None => return,
+    };
+    let begin = md.find(env_registry::TABLE_BEGIN);
+    let end = md.find(env_registry::TABLE_END);
+    let (begin, end) = match (begin, end) {
+        (Some(b), Some(e)) if b < e => (b, e),
+        _ => {
+            report.push(
+                "DESIGN.md",
+                1,
+                ENV_REGISTRY,
+                "missing or misordered janus-env table markers; add \
+                 `janus-env:begin`/`janus-env:end` HTML comments around the \
+                 generated env table"
+                    .to_string(),
+            );
+            return;
+        }
+    };
+    let body_start = begin + env_registry::TABLE_BEGIN.len();
+    let body = md[body_start..end].trim();
+    if body != env_registry::markdown_table().trim() {
+        let line = md[..begin].matches('\n').count() + 1;
+        report.push(
+            "DESIGN.md",
+            line,
+            ENV_REGISTRY,
+            "env table is out of date; regenerate with \
+             `cargo run --bin tidy -- --env-table`"
+                .to_string(),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_name_convention() {
+        assert!(is_env_name("JANUS_THREADS"));
+        assert!(is_env_name("JANUS_A_B2"));
+        assert!(!is_env_name("JANUS_"));
+        assert!(!is_env_name("JANUS_lower"));
+        assert!(!is_env_name("OTHER_VAR"));
+        assert!(!is_env_name("set JANUS_BLESS=1 to bless"));
+    }
+
+    #[test]
+    fn unregistered_var_fires_and_usage_is_counted() {
+        let bogus = ["JANUS", "NOT_REGISTERED"].join("_");
+        let src = format!("let v = std::env::var(\"{bogus}\");\n");
+        let f = SourceFile::lex("src/sim/engine.rs", &src);
+        let mut usage = BTreeMap::new();
+        let mut hits = Vec::new();
+        check(&f, &mut usage, &mut hits);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].line, 1);
+        assert_eq!(usage.get(&bogus).copied(), Some(1));
+    }
+
+    #[test]
+    fn stale_registry_entry_fires_only_on_full_tree_scans() {
+        let usage = BTreeMap::new();
+        let mut report = Report::new();
+        check_global(true, &usage, None, &mut report);
+        assert_eq!(report.len(), env_registry::REGISTRY.len());
+
+        let mut report = Report::new();
+        check_global(false, &usage, None, &mut report);
+        assert!(report.is_clean(), "{}", report.render());
+    }
+
+    #[test]
+    fn design_table_drift_fires_and_generated_table_passes() {
+        let mut usage = BTreeMap::new();
+        for var in env_registry::REGISTRY {
+            usage.insert(var.name.to_string(), 1);
+        }
+        let good = format!(
+            "# Doc\n\n{}\n{}{}\n\nrest\n",
+            env_registry::TABLE_BEGIN,
+            env_registry::markdown_table(),
+            env_registry::TABLE_END
+        );
+        let mut report = Report::new();
+        check_global(true, &usage, Some(&good), &mut report);
+        assert!(report.is_clean(), "{}", report.render());
+
+        let stale = format!(
+            "{}\n| old table |\n{}",
+            env_registry::TABLE_BEGIN,
+            env_registry::TABLE_END
+        );
+        let mut report = Report::new();
+        check_global(true, &usage, Some(&stale), &mut report);
+        assert_eq!(report.len(), 1);
+
+        let mut report = Report::new();
+        check_global(true, &usage, Some("no markers here"), &mut report);
+        assert_eq!(report.len(), 1);
+    }
+}

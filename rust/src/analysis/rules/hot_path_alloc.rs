@@ -1,0 +1,116 @@
+//! `no-alloc-in-hot-path`: the steady-state decode step paths were
+//! made zero-alloc (see `tests/alloc_regression.rs`, which proves it
+//! with a counting allocator for sampled configs); `tidy:hot-path`
+//! regions give that property static, line-level coverage — every
+//! allocation idiom inside a marked region is a violation.
+
+use super::{Hit, NO_ALLOC_IN_HOT_PATH};
+use crate::analysis::scanner::{DirectiveKind, SourceFile};
+
+/// Allocation idioms (token-boundary matched on masked text).
+const ALLOC_TOKENS: &[&str] = &[
+    "Vec::new",
+    "vec!",
+    "format!",
+    "Box::new",
+    "String::from",
+    ".collect",
+    ".to_vec",
+];
+
+pub fn check(file: &SourceFile, hits: &mut Vec<Hit>) {
+    let mut regions: Vec<(usize, usize)> = Vec::new();
+    let mut stack: Vec<usize> = Vec::new();
+    for d in &file.directives {
+        match d.kind {
+            DirectiveKind::HotPathBegin => stack.push(d.line),
+            DirectiveKind::HotPathEnd => match stack.pop() {
+                Some(begin) => regions.push((begin, d.line)),
+                None => hits.push(Hit {
+                    line: d.line,
+                    rule: NO_ALLOC_IN_HOT_PATH,
+                    message: "tidy:hot-path:end without a matching begin".to_string(),
+                }),
+            },
+            _ => {}
+        }
+    }
+    for begin in stack {
+        hits.push(Hit {
+            line: begin,
+            rule: NO_ALLOC_IN_HOT_PATH,
+            message: "tidy:hot-path:begin without a matching end".to_string(),
+        });
+    }
+    if regions.is_empty() {
+        return;
+    }
+    for token in ALLOC_TOKENS {
+        for line in file.token_lines(token) {
+            if regions.iter().any(|&(b, e)| line >= b && line <= e) {
+                hits.push(Hit {
+                    line,
+                    rule: NO_ALLOC_IN_HOT_PATH,
+                    message: format!(
+                        "`{token}` allocates inside a tidy:hot-path region; \
+                         reuse a preallocated buffer (see scheduler::aebs::Workspace)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(src: &str) -> Vec<Hit> {
+        let f = SourceFile::lex("src/baselines/system.rs", src);
+        let mut hits = Vec::new();
+        check(&f, &mut hits);
+        hits
+    }
+
+    #[test]
+    fn fires_inside_region_only() {
+        let src = "let warm = vec![0.0; n];\n\
+                   // tidy:hot-path:begin step\n\
+                   let xs = Vec::new();\n\
+                   let s = format!(\"x\");\n\
+                   // tidy:hot-path:end\n\
+                   let cold = data.to_vec();\n";
+        let hits = scan(src);
+        assert_eq!(hits.len(), 2);
+        assert_eq!(
+            hits.iter().map(|h| h.line).collect::<Vec<_>>(),
+            vec![3, 4]
+        );
+        assert_eq!(hits[0].rule, NO_ALLOC_IN_HOT_PATH);
+    }
+
+    #[test]
+    fn collect_and_boxing_fire() {
+        let src = "// tidy:hot-path:begin\n\
+                   let v: Vec<_> = xs.iter().collect();\n\
+                   let b = Box::new(1);\n\
+                   let s = String::from(\"x\");\n\
+                   // tidy:hot-path:end\n";
+        assert_eq!(scan(src).len(), 3);
+    }
+
+    #[test]
+    fn unbalanced_markers_fire() {
+        assert_eq!(scan("// tidy:hot-path:begin\n").len(), 1);
+        assert_eq!(scan("// tidy:hot-path:end\n").len(), 1);
+    }
+
+    #[test]
+    fn alloc_free_region_passes() {
+        let src = "// tidy:hot-path:begin\n\
+                   for x in xs.iter_mut() {\n    *x += 1.0;\n}\n\
+                   buf.clear();\n\
+                   // tidy:hot-path:end\n";
+        assert!(scan(src).is_empty());
+    }
+}

@@ -1,0 +1,90 @@
+//! The tidy rule modules and shared lexical helpers.
+//!
+//! Each rule exposes `check(file, hits)` which appends raw [`Hit`]s for
+//! one [`SourceFile`](crate::analysis::scanner::SourceFile); suppression
+//! (`tidy:allow`) is applied afterwards by the driver in
+//! [`analysis`](crate::analysis), so rules stay oblivious to it.
+
+pub mod env_vars;
+pub mod hot_path_alloc;
+pub mod nan_order;
+pub mod panic_lib;
+pub mod unordered_iter;
+pub mod wallclock;
+
+/// Rule names, as written in `tidy:allow(<rule>)` and in output lines.
+pub const NO_WALLCLOCK: &str = "no-wallclock";
+pub const NO_UNORDERED_ITER: &str = "no-unordered-iter";
+pub const NO_NAN_ORDER: &str = "no-nan-order";
+pub const NO_PANIC_IN_LIB: &str = "no-panic-in-lib";
+pub const NO_ALLOC_IN_HOT_PATH: &str = "no-alloc-in-hot-path";
+pub const ENV_REGISTRY: &str = "env-registry";
+
+/// Meta-rules: not suppressible, not valid in `tidy:allow`.
+pub const UNUSED_SUPPRESSION: &str = "unused-suppression";
+pub const TIDY_DIRECTIVE: &str = "tidy-directive";
+
+/// The rules a `tidy:allow` may name.
+pub const RULE_NAMES: &[&str] = &[
+    NO_WALLCLOCK,
+    NO_UNORDERED_ITER,
+    NO_NAN_ORDER,
+    NO_PANIC_IN_LIB,
+    NO_ALLOC_IN_HOT_PATH,
+    ENV_REGISTRY,
+];
+
+/// A raw rule finding, before suppression is applied.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Hit {
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+pub(crate) fn is_ident_char(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// First non-whitespace offset at or after `i` (crosses newlines).
+pub(crate) fn skip_ws(bytes: &[u8], mut i: usize) -> usize {
+    while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// Last non-whitespace offset strictly before `i`, plus one (i.e. the
+/// end of the preceding token); 0 when only whitespace precedes.
+pub(crate) fn rskip_ws(bytes: &[u8], mut i: usize) -> usize {
+    while i > 0 && bytes[i - 1].is_ascii_whitespace() {
+        i -= 1;
+    }
+    i
+}
+
+/// The identifier ending exactly at `end` (exclusive), if any.
+pub(crate) fn ident_before(bytes: &[u8], end: usize) -> Option<&[u8]> {
+    let mut start = end;
+    while start > 0 && is_ident_char(bytes[start - 1]) {
+        start -= 1;
+    }
+    if start == end {
+        None
+    } else {
+        Some(&bytes[start..end])
+    }
+}
+
+/// The identifier starting exactly at `start`, if any.
+pub(crate) fn ident_at(bytes: &[u8], start: usize) -> Option<&[u8]> {
+    let mut end = start;
+    while end < bytes.len() && is_ident_char(bytes[end]) {
+        end += 1;
+    }
+    if end == start {
+        None
+    } else {
+        Some(&bytes[start..end])
+    }
+}

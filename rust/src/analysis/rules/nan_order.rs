@@ -1,0 +1,104 @@
+//! `no-nan-order`: `partial_cmp(..).unwrap()` / `.expect(..)` on floats
+//! is a latent panic (NaN) *and* a non-total order; `f64::total_cmp`
+//! is bit-identical for non-NaN inputs and totally ordered otherwise.
+
+use super::{ident_at, rskip_ws, skip_ws, Hit, NO_NAN_ORDER};
+use crate::analysis::scanner::SourceFile;
+
+pub fn check(file: &SourceFile, hits: &mut Vec<Hit>) {
+    let bytes = file.masked.as_bytes();
+    for pos in file.token_offsets("partial_cmp") {
+        // Must be a method call `.partial_cmp(`, not an impl of the
+        // trait method (`fn partial_cmp`).
+        let before = rskip_ws(bytes, pos);
+        if before == 0 || bytes[before - 1] != b'.' {
+            continue;
+        }
+        let mut i = skip_ws(bytes, pos + "partial_cmp".len());
+        if i >= bytes.len() || bytes[i] != b'(' {
+            continue;
+        }
+        // Balance the argument parens (masked text, so strings cannot
+        // skew the count).
+        let mut depth = 0usize;
+        while i < bytes.len() {
+            match bytes[i] {
+                b'(' => depth += 1,
+                b')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        if i >= bytes.len() {
+            continue;
+        }
+        let after = skip_ws(bytes, i + 1);
+        if after >= bytes.len() || bytes[after] != b'.' {
+            continue;
+        }
+        let next = skip_ws(bytes, after + 1);
+        match ident_at(bytes, next) {
+            Some(id) if id == b"unwrap" || id == b"expect" => {
+                let method = if id == b"unwrap" { "unwrap" } else { "expect" };
+                hits.push(Hit {
+                    line: file.line_of(pos),
+                    rule: NO_NAN_ORDER,
+                    message: format!(
+                        "`partial_cmp(..).{method}(..)` panics on NaN and is \
+                         not a total order; use `total_cmp`"
+                    ),
+                });
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(src: &str) -> Vec<Hit> {
+        let f = SourceFile::lex("src/util/stats.rs", src);
+        let mut hits = Vec::new();
+        check(&f, &mut hits);
+        hits
+    }
+
+    #[test]
+    fn fires_on_unwrap_and_expect() {
+        let src = "v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n\
+                   v.sort_by(|a, b| a.partial_cmp(b).expect(\"nan\"));\n";
+        let hits = scan(src);
+        assert_eq!(hits.len(), 2);
+        assert_eq!(hits[0].line, 1);
+        assert_eq!(hits[1].line, 2);
+    }
+
+    #[test]
+    fn fires_across_line_breaks() {
+        let src = "v.sort_by(|a, b| {\n    b.load\n        .partial_cmp(&a.load)\n        .unwrap()\n        .then(a.id.cmp(&b.id))\n});\n";
+        let hits = scan(src);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].line, 3);
+    }
+
+    #[test]
+    fn total_cmp_and_propagated_partial_cmp_pass() {
+        let src = "v.sort_by(f64::total_cmp);\n\
+                   let o = a.partial_cmp(&b)?;\n\
+                   let p = a.partial_cmp(&b).unwrap_or(Ordering::Equal);\n";
+        assert!(scan(src).is_empty());
+    }
+
+    #[test]
+    fn trait_impl_definition_passes() {
+        let src = "fn partial_cmp(&self, other: &Self) -> Option<Ordering> {\n    None\n}\n";
+        assert!(scan(src).is_empty());
+    }
+}

@@ -1,0 +1,96 @@
+//! `no-panic-in-lib`: panicking calls in library/scenario paths take
+//! down a whole sweep worker pool; they are allowed only with an
+//! inline `tidy:allow(no-panic-in-lib): reason` justification (or in
+//! binaries, tests, and `#[cfg(test)]` modules, where a panic is the
+//! error-reporting mechanism).
+
+use super::{skip_ws, Hit, NO_PANIC_IN_LIB};
+use crate::analysis::scanner::SourceFile;
+
+/// (token, needs an immediately-following `(`).
+const TOKENS: &[(&str, bool)] = &[
+    (".unwrap", true),
+    (".expect", true),
+    ("panic!", false),
+    ("unreachable!", false),
+    ("todo!", false),
+    ("unimplemented!", false),
+];
+
+pub fn check(file: &SourceFile, hits: &mut Vec<Hit>) {
+    if file.top_dir() != "src"
+        || file.src_module() == Some("bin")
+        || file.rel_path == "src/main.rs"
+    {
+        return;
+    }
+    let bytes = file.masked.as_bytes();
+    for &(token, needs_call) in TOKENS {
+        for pos in file.token_offsets(token) {
+            if needs_call {
+                let open = skip_ws(bytes, pos + token.len());
+                if open >= bytes.len() || bytes[open] != b'(' {
+                    continue;
+                }
+            }
+            let line = file.line_of(pos);
+            if file.is_test_line(line) {
+                continue;
+            }
+            let what = token.trim_start_matches('.');
+            hits.push(Hit {
+                line,
+                rule: NO_PANIC_IN_LIB,
+                message: format!(
+                    "`{what}` can panic in a library path; handle the case \
+                     or justify with tidy:allow(no-panic-in-lib)"
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(path: &str, src: &str) -> Vec<Hit> {
+        let f = SourceFile::lex(path, src);
+        let mut hits = Vec::new();
+        check(&f, &mut hits);
+        hits
+    }
+
+    #[test]
+    fn fires_on_each_panicking_idiom() {
+        let src = "let a = x.unwrap();\n\
+                   let b = y.expect(\"reason\");\n\
+                   panic!(\"boom\");\n\
+                   unreachable!();\n";
+        let hits = scan("src/sim/engine.rs", src);
+        assert_eq!(hits.len(), 4);
+        assert_eq!(
+            hits.iter().map(|h| h.line).collect::<Vec<_>>(),
+            vec![1, 2, 3, 4]
+        );
+    }
+
+    #[test]
+    fn non_panicking_lookalikes_pass() {
+        let src = "let a = x.unwrap_or(0);\n\
+                   let b = x.unwrap_or_else(|| 1);\n\
+                   let c = r.expect_err;\n\
+                   let d = x.unwrap_or_default();\n";
+        assert!(scan("src/sim/engine.rs", src).is_empty());
+    }
+
+    #[test]
+    fn bins_main_and_test_modules_pass() {
+        let src = "let a = x.unwrap();\n";
+        assert!(scan("src/bin/figures.rs", src).is_empty());
+        assert!(scan("src/main.rs", src).is_empty());
+        assert!(scan("tests/integration.rs", src).is_empty());
+        let in_tests = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n";
+        assert!(scan("src/sim/engine.rs", in_tests).is_empty());
+    }
+}

@@ -1,0 +1,248 @@
+//! `no-unordered-iter`: `HashMap`/`HashSet` iteration order varies
+//! run-to-run (SipHash keys), so any iteration in a deterministic
+//! module can leak nondeterminism into results. The rule is lexical:
+//! it collects identifiers *declared* with a hash-collection type in
+//! the file, then flags iteration idioms over those names.
+
+use super::{ident_at, ident_before, rskip_ws, skip_ws, Hit, NO_UNORDERED_ITER};
+use crate::analysis::scanner::SourceFile;
+use std::collections::BTreeSet;
+
+/// Modules whose outputs feed golden snapshots / figures and therefore
+/// must be bit-identical across runs.
+pub const DETERMINISTIC_MODULES: &[&str] = &[
+    "sim",
+    "scaling",
+    "routing",
+    "placement",
+    "scheduler",
+    "workload",
+    "metrics",
+    "comm",
+];
+
+const HASH_TYPES: &[&str] = &["HashMap", "HashSet"];
+
+/// Iteration methods with nondeterministic order on hash collections.
+const BAD_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "into_iter",
+    "keys",
+    "into_keys",
+    "values",
+    "values_mut",
+    "into_values",
+    "drain",
+];
+
+pub fn check(file: &SourceFile, hits: &mut Vec<Hit>) {
+    let applies = match file.src_module() {
+        Some(m) => DETERMINISTIC_MODULES.contains(&m),
+        None => false,
+    };
+    if !applies {
+        return;
+    }
+    let names = collect_hash_bindings(file);
+    let bytes = file.masked.as_bytes();
+    for name in &names {
+        for pos in file.token_offsets(name) {
+            if let Some(method) = iterated_via_method(bytes, pos + name.len()) {
+                hits.push(Hit {
+                    line: file.line_of(pos),
+                    rule: NO_UNORDERED_ITER,
+                    message: format!(
+                        "`{name}.{method}()` iterates a hash collection in a \
+                         deterministic module; iterate a sorted key list or \
+                         switch to BTreeMap/BTreeSet"
+                    ),
+                });
+            } else if iterated_via_for(bytes, pos) {
+                hits.push(Hit {
+                    line: file.line_of(pos),
+                    rule: NO_UNORDERED_ITER,
+                    message: format!(
+                        "`for _ in {name}` iterates a hash collection in a \
+                         deterministic module; iterate a sorted key list or \
+                         switch to BTreeMap/BTreeSet"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Identifiers bound to a `HashMap`/`HashSet` in this file, found via
+/// `name: HashMap<..>` (lets, fields, params) and `name = HashMap::..`.
+fn collect_hash_bindings(file: &SourceFile) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for ty in HASH_TYPES {
+        for pos in file.token_offsets(ty) {
+            let line_start = file.masked[..pos].rfind('\n').map(|p| p + 1).unwrap_or(0);
+            if let Some(name) = binding_name(&file.masked[line_start..pos]) {
+                names.insert(name);
+            }
+        }
+    }
+    names
+}
+
+/// Given the masked line text before a hash-type token, extract the
+/// identifier it is bound to, walking back over `: `/`= ` and any
+/// `&`, `mut`, or lifetime tokens in between.
+fn binding_name(prefix: &str) -> Option<String> {
+    let b = prefix.as_bytes();
+    let mut i = b.len();
+    loop {
+        while i > 0 && b[i - 1].is_ascii_whitespace() {
+            i -= 1;
+        }
+        if i > 0 && b[i - 1] == b'&' {
+            i -= 1;
+            continue;
+        }
+        // A lifetime (`'a`) or the `mut` keyword also sits between the
+        // separator and the type in `name: &'a mut HashMap<..>`.
+        if let Some(id) = ident_before(b, i) {
+            let start = i - id.len();
+            if start > 0 && b[start - 1] == b'\'' {
+                i = start - 1;
+                continue;
+            }
+            if id == b"mut" {
+                i = start;
+                continue;
+            }
+        }
+        break;
+    }
+    if i == 0 {
+        return None;
+    }
+    match b[i - 1] {
+        // `name: HashMap<..>` — but not a `::HashMap` path segment.
+        b':' if i < 2 || b[i - 2] != b':' => i -= 1,
+        b'=' => i -= 1,
+        _ => return None,
+    }
+    while i > 0 && b[i - 1].is_ascii_whitespace() {
+        i -= 1;
+    }
+    let id = ident_before(b, i)?;
+    if id[0].is_ascii_digit() || id == b"let" || id == b"mut" || id == b"return" {
+        return None;
+    }
+    String::from_utf8(id.to_vec()).ok()
+}
+
+/// After a binding name ending at `after`, detect `.iter()`-style calls
+/// (possibly split across lines by rustfmt).
+fn iterated_via_method(bytes: &[u8], after: usize) -> Option<&'static str> {
+    let dot = skip_ws(bytes, after);
+    if dot >= bytes.len() || bytes[dot] != b'.' {
+        return None;
+    }
+    let id = ident_at(bytes, skip_ws(bytes, dot + 1))?;
+    let method = BAD_METHODS.iter().find(|m| m.as_bytes() == id)?;
+    let open = skip_ws(bytes, skip_ws(bytes, dot + 1) + id.len());
+    if open < bytes.len() && bytes[open] == b'(' {
+        Some(method)
+    } else {
+        None
+    }
+}
+
+/// Detect `for _ in name` with the name possibly behind `&`, `&mut`,
+/// or a field-access chain (`for _ in &self.name`).
+fn iterated_via_for(bytes: &[u8], name_pos: usize) -> bool {
+    let mut i = name_pos;
+    while i > 0 && bytes[i - 1] == b'.' {
+        match ident_before(bytes, i - 1) {
+            Some(id) => i = i - 1 - id.len(),
+            None => return false,
+        }
+    }
+    i = rskip_ws(bytes, i);
+    if let Some(id) = ident_before(bytes, i) {
+        if id == b"mut" {
+            i = rskip_ws(bytes, i - 3);
+        }
+    }
+    if i > 0 && bytes[i - 1] == b'&' {
+        i = rskip_ws(bytes, i - 1);
+    }
+    matches!(ident_before(bytes, i), Some(id) if id == b"in")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(path: &str, src: &str) -> Vec<Hit> {
+        let f = SourceFile::lex(path, src);
+        let mut hits = Vec::new();
+        check(&f, &mut hits);
+        hits
+    }
+
+    #[test]
+    fn fires_on_method_iteration() {
+        let src = "let mut load: HashMap<u32, f64> = HashMap::new();\n\
+                   for (k, v) in load.iter() {\n}\n\
+                   let ks: Vec<_> = load.keys().collect();\n\
+                   load.drain();\n";
+        let hits = scan("src/sim/engine.rs", src);
+        assert_eq!(hits.len(), 3);
+        assert_eq!(hits[0].rule, NO_UNORDERED_ITER);
+        assert_eq!(
+            hits.iter().map(|h| h.line).collect::<Vec<_>>(),
+            vec![2, 4, 5]
+        );
+    }
+
+    #[test]
+    fn fires_on_for_in_reference() {
+        let direct = "let seen: HashSet<u64> = HashSet::new();\nfor x in &seen {\n}\n";
+        let hits = scan("src/scaling/signal.rs", direct);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].line, 2);
+
+        let field = "struct S {\n    seen: HashSet<u64>,\n}\n\
+                     fn f(s: &S) {\n    for x in &s.seen {\n}\n}\n";
+        let hits = scan("src/scaling/signal.rs", field);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].line, 5);
+    }
+
+    #[test]
+    fn non_deterministic_modules_and_lookups_pass() {
+        let src = "let mut load: HashMap<u32, f64> = HashMap::new();\n\
+                   for (k, v) in load.iter() {\n}\n";
+        assert!(scan("src/runtime/engine.rs", src).is_empty());
+        let lookups = "let load: HashMap<u32, f64> = HashMap::new();\n\
+                       let x = load.get(&3);\nload.insert(1, 2.0);\n\
+                       if load.contains_key(&1) {\n}\n";
+        assert!(scan("src/sim/engine.rs", lookups).is_empty());
+    }
+
+    #[test]
+    fn vec_iteration_passes() {
+        let src = "let xs: Vec<u32> = Vec::new();\nfor x in xs.iter() {\n}\n";
+        assert!(scan("src/sim/engine.rs", src).is_empty());
+    }
+
+    #[test]
+    fn binding_name_variants() {
+        assert_eq!(
+            binding_name("    let mut load: "),
+            Some("load".to_string())
+        );
+        assert_eq!(binding_name("fn f(map: &'a mut "), Some("map".to_string()));
+        assert_eq!(binding_name("    let seen = "), Some("seen".to_string()));
+        assert_eq!(binding_name("    pub field: "), Some("field".to_string()));
+        assert_eq!(binding_name("use std::collections::"), None);
+        assert_eq!(binding_name("fn f() -> "), None);
+        assert_eq!(binding_name("Vec<"), None);
+    }
+}

@@ -1,0 +1,71 @@
+//! `no-wallclock`: the simulator is a virtual-time system; a wall-clock
+//! read anywhere in a result path makes same-seed runs diverge. Only
+//! the bench harness, the figure timing cells, and the (pjrt-gated)
+//! coordinator leader may touch real time.
+
+use super::{Hit, NO_WALLCLOCK};
+use crate::analysis::scanner::SourceFile;
+
+/// Files allowed to read wall-clock time.
+const EXEMPT: &[&str] = &[
+    "src/util/bench.rs",
+    "src/bin/figures.rs",
+    "src/coordinator/leader.rs",
+];
+
+const TOKENS: &[&str] = &["Instant::now", "SystemTime"];
+
+pub fn check(file: &SourceFile, hits: &mut Vec<Hit>) {
+    if EXEMPT.contains(&file.rel_path.as_str()) {
+        return;
+    }
+    for token in TOKENS {
+        for line in file.token_lines(token) {
+            hits.push(Hit {
+                line,
+                rule: NO_WALLCLOCK,
+                message: format!(
+                    "`{token}` reads wall-clock time; the simulator is \
+                     virtual-time — use the event clock, or move timing \
+                     into util::bench"
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(path: &str, src: &str) -> Vec<Hit> {
+        let f = SourceFile::lex(path, src);
+        let mut hits = Vec::new();
+        check(&f, &mut hits);
+        hits
+    }
+
+    #[test]
+    fn fires_on_instant_and_systemtime() {
+        let src = "let t = std::time::Instant::now();\nlet s = SystemTime::now();\n";
+        let hits = scan("src/sim/engine.rs", src);
+        assert_eq!(hits.len(), 2);
+        assert_eq!(hits[0].line, 1);
+        assert_eq!(hits[1].line, 2);
+        assert_eq!(hits[0].rule, NO_WALLCLOCK);
+    }
+
+    #[test]
+    fn exempt_files_pass() {
+        let src = "let t = Instant::now();\n";
+        assert!(scan("src/util/bench.rs", src).is_empty());
+        assert!(scan("src/bin/figures.rs", src).is_empty());
+        assert!(scan("src/coordinator/leader.rs", src).is_empty());
+    }
+
+    #[test]
+    fn clean_code_passes() {
+        let src = "let t = clock.now_virtual();\n// Instant::now in a comment\n";
+        assert!(scan("src/sim/engine.rs", src).is_empty());
+    }
+}

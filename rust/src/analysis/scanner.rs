@@ -1,0 +1,619 @@
+//! Comment/string-aware lexical scanner for the tidy pass.
+//!
+//! The rule modules must never fire on pattern text that only appears
+//! inside a comment or a string literal (the rules themselves spell
+//! their patterns as string literals, and fixtures embed whole source
+//! files as raw strings), so rules never look at raw source. Instead
+//! this scanner produces, per file:
+//!
+//! - a **masked** copy of the text — comments and string/char-literal
+//!   *contents* replaced by spaces, line structure preserved — that
+//!   rules pattern-match against;
+//! - the collected **string literals** (line + raw inner text), for the
+//!   env-registry rule;
+//! - the parsed **tidy directives** (`tidy:allow(rule): reason`,
+//!   `tidy:hot-path:begin` / `tidy:hot-path:end`) from plain `//`
+//!   comments — doc comments (`///`, `//!`) are prose and never carry
+//!   directives;
+//! - a per-line **`#[cfg(test)]` map**, so rules that only bind on
+//!   library code (no-panic-in-lib) can skip unit-test modules.
+//!
+//! This is a lexer, not a parser: it understands nested block comments,
+//! escaped and raw strings (`r"…"`, `r#"…"#`, byte variants), char
+//! literals vs lifetimes, and nothing more. That is exactly enough for
+//! line-granular lexical rules in the spirit of rust-lang's
+//! `tools/tidy`, with zero dependencies.
+
+/// One string literal: the 1-indexed line it starts on and its raw
+/// inner text (escape sequences left unresolved).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StrLit {
+    pub line: usize,
+    pub text: String,
+}
+
+/// One parsed `tidy:` directive.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DirectiveKind {
+    /// `tidy:allow(rule): reason` — suppresses `rule` on this line and
+    /// the next (so the comment can sit on its own line above the code).
+    Allow { rule: String, reason: String },
+    /// `tidy:hot-path:begin [label]` — opens a no-alloc region.
+    HotPathBegin,
+    /// `tidy:hot-path:end` — closes the innermost open region.
+    HotPathEnd,
+    /// A comment starting with `tidy:` that parses as none of the
+    /// above; surfaced as a violation so typos cannot silently disable
+    /// enforcement.
+    Malformed { message: String },
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Directive {
+    pub line: usize,
+    pub kind: DirectiveKind,
+}
+
+/// A lexed source file, ready for the rule modules.
+#[derive(Clone, Debug)]
+pub struct SourceFile {
+    /// Path relative to the crate root, with `/` separators
+    /// (e.g. `src/sim/engine.rs`, `tests/tidy.rs`).
+    pub rel_path: String,
+    /// Source with comments and string/char contents blanked to spaces;
+    /// same length in lines as the original.
+    pub masked: String,
+    pub strings: Vec<StrLit>,
+    pub directives: Vec<Directive>,
+    /// `test_lines[i]` is true when 1-indexed line `i + 1` sits inside a
+    /// `#[cfg(test)]` block.
+    test_lines: Vec<bool>,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+impl SourceFile {
+    /// Lex `text` into a [`SourceFile`].
+    pub fn lex(rel_path: &str, text: &str) -> SourceFile {
+        let chars: Vec<char> = text.chars().collect();
+        let mut masked = String::with_capacity(text.len());
+        let mut strings = Vec::new();
+        let mut directives = Vec::new();
+        let mut line = 1usize;
+        let mut i = 0usize;
+        let n = chars.len();
+        while i < n {
+            let c = chars[i];
+            let next = chars.get(i + 1).copied();
+            if c == '/' && next == Some('/') {
+                i = lex_line_comment(&chars, i, line, &mut masked, &mut directives);
+            } else if c == '/' && next == Some('*') {
+                i = lex_block_comment(&chars, i, &mut line, &mut masked);
+            } else if c == '"' {
+                i = lex_string(&chars, i, true, &mut line, &mut masked, &mut strings);
+            } else if c == '\'' {
+                i = lex_quote(&chars, i, &mut masked);
+            } else if is_ident(c) {
+                let start = i;
+                while i < n && is_ident(chars[i]) {
+                    masked.push(chars[i]);
+                    i += 1;
+                }
+                let ident: String = chars[start..i].iter().collect();
+                i = lex_after_ident(&chars, i, &ident, &mut line, &mut masked, &mut strings);
+            } else {
+                if c == '\n' {
+                    line += 1;
+                }
+                masked.push(c);
+                i += 1;
+            }
+        }
+        let test_lines = compute_test_lines(&masked);
+        SourceFile {
+            rel_path: rel_path.to_string(),
+            masked,
+            strings,
+            directives,
+            test_lines,
+        }
+    }
+
+    /// Whether 1-indexed `line` is inside a `#[cfg(test)]` block.
+    pub fn is_test_line(&self, line: usize) -> bool {
+        line >= 1 && self.test_lines.get(line - 1).copied().unwrap_or(false)
+    }
+
+    /// First path component under the crate root: `src`, `tests`, …
+    pub fn top_dir(&self) -> &str {
+        self.rel_path.split('/').next().unwrap_or("")
+    }
+
+    /// For `src/<module>/…` or `src/<module>.rs`, the module name.
+    pub fn src_module(&self) -> Option<&str> {
+        let rest = self.rel_path.strip_prefix("src/")?;
+        let first = rest.split('/').next().unwrap_or(rest);
+        Some(first.strip_suffix(".rs").unwrap_or(first))
+    }
+
+    /// 1-indexed line number of byte offset `pos` in `masked`.
+    pub fn line_of(&self, pos: usize) -> usize {
+        self.masked.as_bytes()[..pos.min(self.masked.len())]
+            .iter()
+            .filter(|&&b| b == b'\n')
+            .count()
+            + 1
+    }
+
+    /// Byte offsets of `token` in the masked text, with identifier
+    /// boundaries enforced on whichever ends of the token are
+    /// identifier characters (so `Instant::now` does not match inside
+    /// `MyInstant::nowhere`).
+    pub fn token_offsets(&self, token: &str) -> Vec<usize> {
+        let bytes = self.masked.as_bytes();
+        let first_is_ident = token.chars().next().map(|c| is_ident(c)).unwrap_or(false);
+        let last_is_ident = token.chars().last().map(|c| is_ident(c)).unwrap_or(false);
+        self.masked
+            .match_indices(token)
+            .filter(|&(pos, _)| {
+                let before_ok = !first_is_ident
+                    || pos == 0
+                    || !is_ident(bytes[pos - 1] as char);
+                let end = pos + token.len();
+                let after_ok = !last_is_ident
+                    || end >= bytes.len()
+                    || !is_ident(bytes[end] as char);
+                before_ok && after_ok
+            })
+            .map(|(pos, _)| pos)
+            .collect()
+    }
+
+    /// Like [`Self::token_offsets`], but returning 1-indexed lines.
+    pub fn token_lines(&self, token: &str) -> Vec<usize> {
+        self.token_offsets(token)
+            .into_iter()
+            .map(|pos| self.line_of(pos))
+            .collect()
+    }
+}
+
+/// Consume a `//` comment (returns the index after it, excluding the
+/// newline). Plain comments whose body starts with `tidy:` become
+/// directives; doc comments never do.
+fn lex_line_comment(
+    chars: &[char],
+    start: usize,
+    line: usize,
+    masked: &mut String,
+    directives: &mut Vec<Directive>,
+) -> usize {
+    let mut i = start;
+    let n = chars.len();
+    let mut body = String::new();
+    while i < n && chars[i] != '\n' {
+        body.push(chars[i]);
+        masked.push(' ');
+        i += 1;
+    }
+    // body = "//..." — strip the slashes, detect doc comments.
+    let after = &body[2..];
+    let is_doc = after.starts_with('/') || after.starts_with('!');
+    if !is_doc {
+        let trimmed = after.trim();
+        if let Some(directive) = trimmed.strip_prefix("tidy:") {
+            directives.push(Directive {
+                line,
+                kind: parse_directive(directive),
+            });
+        }
+    }
+    i
+}
+
+/// Parse the text after `tidy:` into a directive kind.
+fn parse_directive(s: &str) -> DirectiveKind {
+    if let Some(rest) = s.strip_prefix("hot-path:") {
+        let word = rest.split_whitespace().next().unwrap_or("");
+        return match word {
+            "begin" => DirectiveKind::HotPathBegin,
+            "end" => DirectiveKind::HotPathEnd,
+            other => DirectiveKind::Malformed {
+                message: format!(
+                    "unknown hot-path marker `{other}` (expected begin/end)"
+                ),
+            },
+        };
+    }
+    if let Some(rest) = s.strip_prefix("allow(") {
+        let close = match rest.find(')') {
+            Some(c) => c,
+            None => {
+                return DirectiveKind::Malformed {
+                    message: "tidy:allow missing closing `)`".to_string(),
+                }
+            }
+        };
+        let rule = rest[..close].trim().to_string();
+        let tail = rest[close + 1..].trim_start();
+        let reason = match tail.strip_prefix(':') {
+            Some(r) => r.trim().to_string(),
+            None => String::new(),
+        };
+        if rule.is_empty() {
+            return DirectiveKind::Malformed {
+                message: "tidy:allow with empty rule name".to_string(),
+            };
+        }
+        if reason.is_empty() {
+            return DirectiveKind::Malformed {
+                message: format!(
+                    "tidy:allow({rule}) requires a `: reason` justification"
+                ),
+            };
+        }
+        return DirectiveKind::Allow { rule, reason };
+    }
+    DirectiveKind::Malformed {
+        message: format!("unknown tidy directive `tidy:{s}`"),
+    }
+}
+
+/// Consume a nested `/* … */` comment.
+fn lex_block_comment(
+    chars: &[char],
+    start: usize,
+    line: &mut usize,
+    masked: &mut String,
+) -> usize {
+    let n = chars.len();
+    let mut i = start + 2;
+    masked.push_str("  ");
+    let mut depth = 1usize;
+    while i < n && depth > 0 {
+        let c = chars[i];
+        if c == '/' && chars.get(i + 1) == Some(&'*') {
+            depth += 1;
+            masked.push_str("  ");
+            i += 2;
+        } else if c == '*' && chars.get(i + 1) == Some(&'/') {
+            depth -= 1;
+            masked.push_str("  ");
+            i += 2;
+        } else {
+            if c == '\n' {
+                *line += 1;
+                masked.push('\n');
+            } else {
+                masked.push(' ');
+            }
+            i += 1;
+        }
+    }
+    i
+}
+
+/// Consume a `"…"` literal starting at `start`. `escapes` is false for
+/// raw strings. Records the literal and masks its contents.
+fn lex_string(
+    chars: &[char],
+    start: usize,
+    escapes: bool,
+    line: &mut usize,
+    masked: &mut String,
+    strings: &mut Vec<StrLit>,
+) -> usize {
+    let n = chars.len();
+    let start_line = *line;
+    let mut i = start + 1;
+    masked.push('"');
+    let mut text = String::new();
+    while i < n {
+        let c = chars[i];
+        if escapes && c == '\\' {
+            text.push(c);
+            masked.push(' ');
+            i += 1;
+            if i < n {
+                if chars[i] == '\n' {
+                    *line += 1;
+                    masked.push('\n');
+                } else {
+                    masked.push(' ');
+                }
+                text.push(chars[i]);
+                i += 1;
+            }
+            continue;
+        }
+        if c == '"' {
+            masked.push('"');
+            i += 1;
+            break;
+        }
+        if c == '\n' {
+            *line += 1;
+            masked.push('\n');
+        } else {
+            masked.push(' ');
+        }
+        text.push(c);
+        i += 1;
+    }
+    strings.push(StrLit {
+        line: start_line,
+        text,
+    });
+    i
+}
+
+/// Consume a raw string `r##"…"##` whose `r`/`br` prefix has already
+/// been emitted; `start` points at the first `#` or the opening `"`.
+fn lex_raw_string(
+    chars: &[char],
+    start: usize,
+    line: &mut usize,
+    masked: &mut String,
+    strings: &mut Vec<StrLit>,
+) -> usize {
+    let n = chars.len();
+    let start_line = *line;
+    let mut i = start;
+    let mut hashes = 0usize;
+    while i < n && chars[i] == '#' {
+        masked.push('#');
+        hashes += 1;
+        i += 1;
+    }
+    if i >= n || chars[i] != '"' {
+        // Not actually a raw string (e.g. `r#ident` raw identifier);
+        // nothing consumed beyond the hashes.
+        return i;
+    }
+    masked.push('"');
+    i += 1;
+    let mut text = String::new();
+    while i < n {
+        if chars[i] == '"' {
+            // Check for the closing `"` + hashes.
+            let mut ok = true;
+            for k in 0..hashes {
+                if chars.get(i + 1 + k) != Some(&'#') {
+                    ok = false;
+                    break;
+                }
+            }
+            if ok {
+                masked.push('"');
+                for _ in 0..hashes {
+                    masked.push('#');
+                }
+                i += 1 + hashes;
+                break;
+            }
+        }
+        if chars[i] == '\n' {
+            *line += 1;
+            masked.push('\n');
+        } else {
+            masked.push(' ');
+        }
+        text.push(chars[i]);
+        i += 1;
+    }
+    strings.push(StrLit {
+        line: start_line,
+        text,
+    });
+    i
+}
+
+/// After emitting identifier `ident` ending at index `i`, consume any
+/// string literal the identifier prefixes (`r"…"`, `b"…"`, `br#"…"#`).
+fn lex_after_ident(
+    chars: &[char],
+    i: usize,
+    ident: &str,
+    line: &mut usize,
+    masked: &mut String,
+    strings: &mut Vec<StrLit>,
+) -> usize {
+    let next = chars.get(i).copied();
+    match ident {
+        "r" | "br" => {
+            if next == Some('"') {
+                lex_raw_string(chars, i, line, masked, strings)
+            } else if next == Some('#') {
+                lex_raw_string(chars, i, line, masked, strings)
+            } else {
+                i
+            }
+        }
+        "b" => {
+            if next == Some('"') {
+                lex_string(chars, i, true, line, masked, strings)
+            } else {
+                i
+            }
+        }
+        _ => i,
+    }
+}
+
+/// Consume a `'` at `start`: a char literal (masked) or a lifetime
+/// (passed through).
+fn lex_quote(chars: &[char], start: usize, masked: &mut String) -> usize {
+    let n = chars.len();
+    if start + 1 < n && chars[start + 1] == '\\' {
+        // Escaped char literal: consume to the closing quote.
+        let mut i = start + 1;
+        masked.push('\'');
+        while i < n && chars[i] != '\'' {
+            masked.push(' ');
+            i += 1;
+        }
+        if i < n {
+            masked.push('\'');
+            i += 1;
+        }
+        return i;
+    }
+    if start + 2 < n && chars[start + 2] == '\'' && chars[start + 1] != '\'' {
+        // Plain one-char literal 'x'.
+        masked.push_str("' '");
+        return start + 3;
+    }
+    // Lifetime (or stray quote): pass through.
+    masked.push('\'');
+    start + 1
+}
+
+/// Per-line `#[cfg(test)]`-block membership, computed on masked text so
+/// braces inside strings/comments cannot skew the depth count.
+fn compute_test_lines(masked: &str) -> Vec<bool> {
+    let lines: Vec<&str> = masked.split('\n').collect();
+    let mut flags = vec![false; lines.len()];
+    let mut i = 0usize;
+    while i < lines.len() {
+        if !lines[i].contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        let mut depth = 0i64;
+        let mut started = false;
+        let mut j = i;
+        while j < lines.len() {
+            for ch in lines[j].chars() {
+                if ch == '{' {
+                    depth += 1;
+                    started = true;
+                } else if ch == '}' {
+                    depth -= 1;
+                }
+            }
+            if started && depth <= 0 {
+                break;
+            }
+            j += 1;
+        }
+        let end = j.min(lines.len() - 1);
+        for flag in flags.iter_mut().take(end + 1).skip(start) {
+            *flag = true;
+        }
+        i = end + 1;
+    }
+    flags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_comments_and_strings() {
+        let src = "let x = \"Instant::now\"; // Instant::now\nlet y = 1;\n";
+        let f = SourceFile::lex("src/a.rs", src);
+        assert!(f.token_offsets("Instant::now").is_empty());
+        assert_eq!(f.strings.len(), 1);
+        assert_eq!(f.strings[0].text, "Instant::now");
+        assert_eq!(f.strings[0].line, 1);
+    }
+
+    #[test]
+    fn finds_code_tokens_with_boundaries() {
+        let src = "let t = Instant::now();\nlet u = MyInstant::nowhere();\n";
+        let f = SourceFile::lex("src/a.rs", src);
+        assert_eq!(f.token_lines("Instant::now"), vec![1]);
+    }
+
+    #[test]
+    fn raw_strings_and_chars_masked() {
+        let src = "let s = r#\"panic!(\"x\")\"#;\nlet c = '\"';\nlet l: &'static str = \"y\";\n";
+        let f = SourceFile::lex("src/a.rs", src);
+        assert!(f.token_offsets("panic!").is_empty());
+        assert_eq!(f.strings.len(), 2);
+        assert!(f.strings[0].text.contains("panic!"));
+        assert_eq!(f.line_of(f.masked.len() - 2), 3);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* a /* panic! */ still comment */ let x = 1;\nInstant::now();\n";
+        let f = SourceFile::lex("src/a.rs", src);
+        assert!(f.token_offsets("panic!").is_empty());
+        assert_eq!(f.token_lines("Instant::now"), vec![2]);
+    }
+
+    #[test]
+    fn parses_allow_directives_from_plain_comments_only() {
+        let src = "\
+/// doc: tidy:allow(no-wallclock): not a directive
+let a = 1; // tidy:allow(no-wallclock): bench harness measures intervals
+// tidy:hot-path:begin decode
+// tidy:hot-path:end
+";
+        let f = SourceFile::lex("src/a.rs", src);
+        assert_eq!(f.directives.len(), 3);
+        assert_eq!(
+            f.directives[0].kind,
+            DirectiveKind::Allow {
+                rule: "no-wallclock".to_string(),
+                reason: "bench harness measures intervals".to_string(),
+            }
+        );
+        assert_eq!(f.directives[0].line, 2);
+        assert_eq!(f.directives[1].kind, DirectiveKind::HotPathBegin);
+        assert_eq!(f.directives[2].kind, DirectiveKind::HotPathEnd);
+    }
+
+    #[test]
+    fn malformed_directives_are_surfaced() {
+        let src = "// tidy:allow(no-wallclock)\n// tidy:frobnicate\n";
+        let f = SourceFile::lex("src/a.rs", src);
+        assert_eq!(f.directives.len(), 2);
+        assert!(matches!(
+            f.directives[0].kind,
+            DirectiveKind::Malformed { .. }
+        ));
+        assert!(matches!(
+            f.directives[1].kind,
+            DirectiveKind::Malformed { .. }
+        ));
+    }
+
+    #[test]
+    fn cfg_test_blocks_are_tracked() {
+        let src = "\
+fn lib() {}
+#[cfg(test)]
+mod tests {
+    fn t() {}
+}
+fn lib2() {}
+";
+        let f = SourceFile::lex("src/a.rs", src);
+        assert!(!f.is_test_line(1));
+        assert!(f.is_test_line(2));
+        assert!(f.is_test_line(3));
+        assert!(f.is_test_line(4));
+        assert!(f.is_test_line(5));
+        assert!(!f.is_test_line(6));
+    }
+
+    #[test]
+    fn module_classification() {
+        let f = SourceFile::lex("src/sim/engine.rs", "");
+        assert_eq!(f.src_module(), Some("sim"));
+        assert_eq!(f.top_dir(), "src");
+        let t = SourceFile::lex("tests/tidy.rs", "");
+        assert_eq!(t.src_module(), None);
+        assert_eq!(t.top_dir(), "tests");
+        let m = SourceFile::lex("src/metrics/mod.rs", "");
+        assert_eq!(m.src_module(), Some("metrics"));
+        let b = SourceFile::lex("src/bin/figures.rs", "");
+        assert_eq!(b.src_module(), Some("bin"));
+    }
+}

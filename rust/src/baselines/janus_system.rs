@@ -35,6 +35,16 @@ pub struct JanusSystem {
     base_n_max: usize,
 }
 
+impl std::fmt::Debug for JanusSystem {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("JanusSystem")
+            .field("deployment", &self.deployment)
+            .field("s_ctx", &self.s_ctx)
+            .field("base_n_max", &self.base_n_max)
+            .finish_non_exhaustive()
+    }
+}
+
 impl JanusSystem {
     /// Build from a model + hardware, warming the â_max table from a
     /// synthetic activation trace under the given popularity skew.
@@ -119,6 +129,7 @@ impl JanusSystem {
                     .iter()
                     .copied()
                     .min()
+                    // tidy:allow(no-panic-in-lib): AmaxTable::build always emits >= 1 candidate
                     .expect("â_max table has at least one candidate")
             });
         Deployment::new(n_max, n_e)
@@ -216,8 +227,11 @@ impl ServingSystem for JanusSystem {
     }
 
     fn step(&mut self, batch: usize, rng: &mut Rng) -> StepOutcome {
+        // tidy:hot-path:begin
+        // tidy:allow(no-panic-in-lib): ServingSystem contract — configure() precedes step()
         let d = self.deployment.expect("configure before step");
         self.gate.sample_batch_into(rng, batch, &mut self.routing);
+        // tidy:allow(no-panic-in-lib): adopt() installs a placement with every deployment
         let placement = self.placement.as_ref().expect("placement");
         let a_max = aebs::a_max_only(&mut self.ws, &self.routing, placement);
         let lat = self.scaler.tpot_model.tpot_with(
@@ -232,6 +246,7 @@ impl ServingSystem for JanusSystem {
             tpot: lat.tpot,
             a_max,
         }
+        // tidy:hot-path:end
     }
 
     fn gpus(&self) -> usize {

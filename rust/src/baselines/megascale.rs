@@ -56,6 +56,16 @@ pub struct MegaScaleInfer {
     hw: HardwareProfile,
 }
 
+impl std::fmt::Debug for MegaScaleInfer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MegaScaleInfer")
+            .field("deployment", &self.deployment)
+            .field("n_max", &self.n_max)
+            .field("s_ctx", &self.s_ctx)
+            .finish_non_exhaustive()
+    }
+}
+
 impl MegaScaleInfer {
     pub fn build(
         model: MoeModel,
@@ -113,7 +123,9 @@ impl MegaScaleInfer {
     /// â_max table's candidates are contiguous (n_e_min..=base_n_max),
     /// so the clamped n_e always has a placement.
     fn fallback_deployment(&self) -> Deployment {
+        // tidy:allow(no-panic-in-lib): AmaxTable::build always emits >= 1 candidate
         let lo = *self.amax.n_e_values.first().expect("candidates");
+        // tidy:allow(no-panic-in-lib): AmaxTable::build always emits >= 1 candidate
         let hi = *self.amax.n_e_values.last().expect("candidates");
         Deployment::new((self.n_max / 2).max(1), self.n_max.clamp(lo, hi))
     }
@@ -209,6 +221,7 @@ impl MegaScaleInfer {
             });
         }
         let cfg = search(self);
+        // tidy:allow(no-panic-in-lib): every search() path above installs a deployment
         let applied = self.deployment.expect("configure always deploys");
         self.decisions.insert(key, (applied, cfg.is_some()));
         cfg
@@ -260,6 +273,7 @@ impl MegaScaleInfer {
                     let fp = littles_law::solve(lambda, b_max, |b| self.tpot_at(b, d));
                     let b_star = match fp {
                         FixedPoint::Saturated => continue,
+                        // tidy:allow(no-panic-in-lib): non-Saturated fixed points carry a batch
                         other => other.batch().unwrap(),
                     };
                     if require_balance && !self.balanced(b_star, d) {
@@ -325,8 +339,11 @@ impl ServingSystem for MegaScaleInfer {
     }
 
     fn step(&mut self, batch: usize, rng: &mut Rng) -> StepOutcome {
+        // tidy:hot-path:begin
+        // tidy:allow(no-panic-in-lib): ServingSystem contract — configure() precedes step()
         let d = self.deployment.expect("configure before step");
         self.gate.sample_batch_into(rng, batch, &mut self.routing);
+        // tidy:allow(no-panic-in-lib): apply() installs a placement with every deployment
         let placement = self.placement.as_ref().expect("placement");
         let a_max = sched::random_a_max(&mut self.sched_ws, &self.routing, placement, rng);
         let lat = self.tpot_model.tpot_with(
@@ -341,6 +358,7 @@ impl ServingSystem for MegaScaleInfer {
             tpot: lat.tpot,
             a_max,
         }
+        // tidy:hot-path:end
     }
 
     fn gpus(&self) -> usize {

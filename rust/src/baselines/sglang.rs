@@ -64,6 +64,16 @@ pub struct SgLang {
     s_ctx: f64,
 }
 
+impl std::fmt::Debug for SgLang {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SgLang")
+            .field("gpus", &self.gpus)
+            .field("pool_gpus", &self.pool_gpus)
+            .field("s_ctx", &self.s_ctx)
+            .finish_non_exhaustive()
+    }
+}
+
 impl SgLang {
     pub fn build(
         model: MoeModel,
@@ -87,6 +97,7 @@ impl SgLang {
             gate,
             placement: None,
             gpus: 0,
+            // tidy:allow(no-panic-in-lib): TIERS is a non-empty const
             pool_gpus: *TIERS.last().unwrap(),
             routing,
             sched_ws: sched::BaselineWorkspace::new(),
@@ -224,6 +235,7 @@ impl SgLang {
         }
         // Nothing fits: run the largest usable tier (and violate).
         self.placement = None;
+        // tidy:allow(no-panic-in-lib): tiers slice derives from the non-empty TIERS const
         self.gpus = *tiers.last().unwrap();
         None
     }
@@ -259,6 +271,7 @@ impl SgLang {
             if let FixedPoint::Saturated = fp {
                 continue;
             }
+            // tidy:allow(no-panic-in-lib): Saturated was filtered out just above
             let b = fp.batch().unwrap();
             let a = self.sample_a_max(tier, b as usize, &mut rng);
             if self.tier_tpot(tier, b, a) <= slo.tpot {
@@ -269,6 +282,7 @@ impl SgLang {
                 });
             }
         }
+        // tidy:allow(no-panic-in-lib): tiers slice derives from the non-empty TIERS const
         self.gpus = *tiers.last().unwrap();
         None
     }
@@ -310,16 +324,19 @@ impl ServingSystem for SgLang {
     }
 
     fn restore_gpus(&mut self, gpus: usize) {
+        // tidy:allow(no-panic-in-lib): TIERS is a non-empty const
         self.pool_gpus = (self.pool_gpus + gpus).min(*TIERS.last().unwrap());
     }
 
     fn step(&mut self, batch: usize, rng: &mut Rng) -> StepOutcome {
+        // tidy:hot-path:begin
         let gpus = self.gpus.max(TIERS[0]);
         let a_max = self.sample_a_max(gpus, batch, rng);
         StepOutcome {
             tpot: self.tier_tpot(gpus, batch as f64, a_max),
             a_max,
         }
+        // tidy:hot-path:end
     }
 
     fn gpus(&self) -> usize {

@@ -57,6 +57,16 @@ pub struct XDeepServe {
     s_ctx: f64,
 }
 
+impl std::fmt::Debug for XDeepServe {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XDeepServe")
+            .field("deployment", &self.deployment)
+            .field("failed_gpus", &self.failed_gpus)
+            .field("s_ctx", &self.s_ctx)
+            .finish_non_exhaustive()
+    }
+}
+
 impl XDeepServe {
     pub fn build(
         model: MoeModel,
@@ -163,6 +173,7 @@ impl XDeepServe {
             });
         }
         let cfg = search(self);
+        // tidy:allow(no-panic-in-lib): every search() path above installs a deployment
         let applied = self.deployment.expect("configure always deploys");
         self.decisions.insert(key, (applied, cfg.is_some()));
         cfg
@@ -193,6 +204,7 @@ impl XDeepServe {
                 least_bad = Some((tpot, d));
             }
         }
+        // tidy:allow(no-panic-in-lib): the candidate loop is non-empty, so least_bad is set
         let d = least_bad.map(|(_, d)| d).unwrap();
         self.apply(d);
         None
@@ -210,6 +222,7 @@ impl XDeepServe {
             let fp = littles_law::solve(lambda, 8192.0, |b| self.tpot_at(b, d));
             let b = match fp {
                 FixedPoint::Saturated => continue,
+                // tidy:allow(no-panic-in-lib): non-Saturated fixed points carry a batch
                 other => other.batch().unwrap(),
             };
             if self.tpot_at(b, d) <= slo.tpot {
@@ -266,8 +279,11 @@ impl ServingSystem for XDeepServe {
     }
 
     fn step(&mut self, batch: usize, rng: &mut Rng) -> StepOutcome {
+        // tidy:hot-path:begin
+        // tidy:allow(no-panic-in-lib): ServingSystem contract — configure() precedes step()
         let d = self.deployment.expect("configure before step");
         self.gate.sample_batch_into(rng, batch, &mut self.routing);
+        // tidy:allow(no-panic-in-lib): apply() installs a placement with every deployment
         let placement = self.placement.as_ref().expect("placement");
         let a_max = sched::token_balanced_a_max(&mut self.sched_ws, &self.routing, placement);
         let lat = self.tpot_model.tpot_with(
@@ -282,6 +298,7 @@ impl ServingSystem for XDeepServe {
             tpot: lat.tpot,
             a_max,
         }
+        // tidy:hot-path:end
     }
 
     fn gpus(&self) -> usize {

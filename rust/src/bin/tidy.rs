@@ -1,0 +1,43 @@
+//! Standalone tidy driver for CI and local runs.
+//!
+//! ```text
+//! cargo run --release --bin tidy               # scan, exit 1 on violations
+//! cargo run --release --bin tidy -- --env-table # print the DESIGN.md env table
+//! ```
+//!
+//! The same scan runs inside `cargo test` via `tests/tidy.rs`; this
+//! binary exists so CI gets a fast, snapshot-free job with the plain
+//! `file:line: rule: message` report.
+
+use janus::analysis;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--env-table") {
+        print!(
+            "{}\n{}{}\n",
+            analysis::env_registry::TABLE_BEGIN,
+            analysis::env_registry::markdown_table(),
+            analysis::env_registry::TABLE_END
+        );
+        return;
+    }
+    if !args.is_empty() {
+        eprintln!("usage: tidy [--env-table]");
+        std::process::exit(2);
+    }
+    match analysis::run_repo_scan() {
+        Ok(report) if report.is_clean() => {
+            println!("tidy: clean");
+        }
+        Ok(report) => {
+            print!("{}", report.render());
+            eprintln!("tidy: {} violation(s)", report.len());
+            std::process::exit(1);
+        }
+        Err(err) => {
+            eprintln!("tidy: failed to read sources: {err}");
+            std::process::exit(2);
+        }
+    }
+}

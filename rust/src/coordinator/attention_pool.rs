@@ -8,6 +8,7 @@ use crate::runtime::literal_util as lu;
 use crate::runtime::Engine;
 
 /// One attention instance (one slot-batch of `batch_tokens` sequences).
+#[derive(Debug)]
 pub struct AttentionWorker {
     /// Host-side KV caches: per layer, (T, S, Hkv, dh) f32, flat.
     k_cache: Vec<Vec<f32>>,

@@ -46,6 +46,16 @@ pub struct Leader {
     pub queue: RequestQueue,
 }
 
+impl std::fmt::Debug for Leader {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Leader")
+            .field("engine", &self.engine)
+            .field("moe_instances", &self.moe_pool.len())
+            .field("slots", &self.slots.len())
+            .finish_non_exhaustive()
+    }
+}
+
 impl Leader {
     /// Bring up the full stack: load artifacts, compile blocks, build the
     /// worker pools for `n_moe` MoE instances under `placement`.

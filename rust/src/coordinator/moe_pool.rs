@@ -9,6 +9,7 @@ use crate::runtime::literal_util as lu;
 use crate::runtime::Engine;
 
 /// One MoE instance.
+#[derive(Debug)]
 pub struct MoeWorker {
     pub id: u32,
     /// (E, max_moe_instances) replica-layout matrix fed to the artifact's

@@ -14,8 +14,14 @@
 //!   and executed by the Rust runtime through PJRT; the expert FFN, gate,
 //!   attention, and AEBS hot spots are authored as Pallas kernels.
 //!
-//! See DESIGN.md for the system inventory and the per-experiment index.
+//! See DESIGN.md for the system inventory and the per-experiment index;
+//! the "Static invariants" section there documents the `janus-tidy`
+//! rules ([`analysis`]) that `cargo test` enforces over this tree.
 
+#![forbid(unsafe_code)]
+#![warn(missing_debug_implementations)]
+
+pub mod analysis;
 pub mod baselines;
 pub mod comm;
 pub mod coordinator;

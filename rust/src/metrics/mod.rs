@@ -50,7 +50,7 @@ impl TpotStats {
         if sorted.len() != self.samples.len() {
             sorted.clear();
             sorted.extend_from_slice(&self.samples);
-            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            sorted.sort_by(f64::total_cmp);
         }
         f(&sorted)
     }

@@ -48,6 +48,7 @@ impl ExpertPlacement {
         let mut p = Self::empty(experts, n_instances, capacity);
         for e in 0..experts {
             let g = (e / per) as u32;
+            // tidy:allow(no-panic-in-lib): per <= capacity was asserted above
             p.seat(e as u16, g).expect("contiguous seat");
         }
         p
@@ -73,6 +74,7 @@ impl ExpertPlacement {
             for off in 0..n_instances {
                 let cand = (g as usize + off) % n_instances;
                 if p.free_slots(cand as u32) > 0 && !p.hosts(expert).contains(&(cand as u32)) {
+                    // tidy:allow(no-panic-in-lib): guarded by the free_slots/hosts check above
                     p.seat(expert, cand as u32).unwrap();
                     g = ((cand + 1) % n_instances) as u32;
                     placed = true;

@@ -70,11 +70,13 @@ impl WeightStore {
             if dtype == 0 {
                 t.data = bytes
                     .chunks_exact(4)
+                    // tidy:allow(no-panic-in-lib): chunks_exact(4) yields 4-byte slices
                     .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
                     .collect();
             } else {
                 t.i32_data = bytes
                     .chunks_exact(4)
+                    // tidy:allow(no-panic-in-lib): chunks_exact(4) yields 4-byte slices
                     .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
                     .collect();
             }

@@ -13,6 +13,17 @@ pub struct Engine {
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut keys: Vec<&String> = self.executables.keys().collect();
+        keys.sort();
+        f.debug_struct("Engine")
+            .field("platform", &self.client.platform_name())
+            .field("executables", &keys)
+            .finish_non_exhaustive()
+    }
+}
+
 impl Engine {
     /// CPU PJRT client.
     pub fn cpu() -> Result<Self> {

@@ -41,6 +41,7 @@ pub struct CandidateEval {
 
 /// The SLO-aware scaler: owns the TPOT model, â_max table, and memory
 /// model for one (model, hardware) pair.
+#[derive(Debug)]
 pub struct Scaler {
     pub model: MoeModel,
     pub hw: HardwareProfile,
@@ -112,6 +113,7 @@ impl Scaler {
                 });
                 let b_star = match fp {
                     FixedPoint::Saturated => continue,
+                    // tidy:allow(no-panic-in-lib): non-Saturated fixed points carry a batch
                     other => other.batch().unwrap(),
                 };
                 let tpot = self.tpot(b_star, n_a, n_e, s_ctx);

@@ -98,13 +98,16 @@ impl AmaxTable {
             .n_e_values
             .iter()
             .position(|&v| v == n_e)
+            // tidy:allow(no-panic-in-lib): lookup outside the built table is a caller bug
             .unwrap_or_else(|| panic!("n_e {n_e} not in table {:?}", self.n_e_values));
         let row = &self.table[i];
         let grid = &self.batch_grid;
         if b <= grid[0] as f64 {
             return row[0];
         }
+        // tidy:allow(no-panic-in-lib): batch_grid is non-empty by construction
         if b >= *grid.last().unwrap() as f64 {
+            // tidy:allow(no-panic-in-lib): rows have batch_grid's length
             return *row.last().unwrap();
         }
         let j = grid.partition_point(|&g| (g as f64) < b);

@@ -28,6 +28,7 @@ use crate::routing::RoutingBatch;
 use super::assignment::Assignment;
 
 /// Reusable buffers for repeated AEBS runs (avoids per-layer allocation).
+#[derive(Debug)]
 pub struct Workspace {
     /// Epoch-stamped "seen" marks per expert (epoch trick avoids clearing).
     seen_epoch: Vec<u32>,
@@ -116,6 +117,7 @@ pub fn assign_with(
         let g_star = *hosts
             .iter()
             .min_by_key(|&&g| (ws.loads[g as usize], g))
+            // tidy:allow(no-panic-in-lib): hosts.len() > 1 was checked above
             .unwrap();
         ws.chosen[e as usize] = g_star;
         ws.loads[g_star as usize] += 1;
@@ -194,6 +196,7 @@ pub fn a_max_only(ws: &mut Workspace, batch: &RoutingBatch, placement: &ExpertPl
             let g_star = *hosts
                 .iter()
                 .min_by_key(|&&g| (ws.loads[g as usize], g))
+                // tidy:allow(no-panic-in-lib): hosts.len() > 1 was checked above
                 .unwrap();
             ws.loads[g_star as usize] += 1;
             a_max = a_max.max(ws.loads[g_star as usize]);

@@ -110,6 +110,7 @@ impl Assignment {
             .map(|(&e, &g)| {
                 placement
                     .physical_id(e, g)
+                    // tidy:allow(no-panic-in-lib): assignments only name hosting instances
                     .unwrap_or_else(|| panic!("no replica of {e} on {g}"))
             })
             .collect()

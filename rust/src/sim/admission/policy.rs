@@ -399,6 +399,7 @@ impl AdmissionPolicy for KvAware {
             let Some(rank) = self.queues.best_rank(now) else {
                 break;
             };
+            // tidy:allow(no-panic-in-lib): best_rank() only returns non-empty queues
             let head = self.queues.front(rank).expect("best rank has a head");
             // Reserve against committed KV (resident + pending
             // prefill), not just what has materialized so far.
@@ -406,6 +407,7 @@ impl AdmissionPolicy for KvAware {
             if !(batch.is_empty() || batch.kv_reserved() + need <= caps.kv_capacity_tokens) {
                 break;
             }
+            // tidy:allow(no-panic-in-lib): best_rank() only returns non-empty queues
             let req = self.queues.pop_rank(rank).expect("best rank has a head");
             if req.fresh {
                 out.joined.push(JoinInfo {

@@ -18,6 +18,7 @@ use crate::workload::trace::DiurnalTrace;
 pub use crate::sim::engine::{AutoscaleResult, IntervalRecord};
 
 /// The autoscaling simulator.
+#[derive(Debug)]
 pub struct AutoscaleSim {
     /// Decision interval, seconds (paper: 900).
     pub interval: f64,

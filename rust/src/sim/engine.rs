@@ -340,7 +340,9 @@ impl EventQueue {
             .enumerate()
             .filter_map(|(i, b)| b.last().map(|e| (i, e)))
             .min_by(|(_, a), (_, b)| a.key_cmp(b))
+            // tidy:allow(no-panic-in-lib): len was checked nonzero by the caller
             .expect("len > 0 but no bucket has events");
+        // tidy:allow(no-panic-in-lib): idx came from the filter_map over non-empty buckets
         let min_time = self.buckets[idx].last().unwrap().time;
         self.cur_v = self.virtual_bucket(min_time);
         Some(self.take_from(idx))
@@ -349,6 +351,7 @@ impl EventQueue {
     /// Remove and return the minimum of bucket `idx` (its back element),
     /// shrinking the calendar when the population has thinned out.
     fn take_from(&mut self, idx: usize) -> Event {
+        // tidy:allow(no-panic-in-lib): take_from is only called with a non-empty bucket
         let e = self.buckets[idx].pop().expect("bucket min present");
         self.len -= 1;
         if self.buckets.len() > MIN_BUCKETS && self.len < self.buckets.len() / 4 {
@@ -1324,6 +1327,7 @@ pub fn autoscale<S: ServingSystem + ?Sized>(
                 }
             }
             EventKind::Failure { .. } | EventKind::Recovery { .. } => {
+                // tidy:allow(no-panic-in-lib): this scenario never schedules these events
                 unreachable!("autoscale scenario schedules no failure events")
             }
         }

@@ -9,6 +9,7 @@ use crate::config::serving::Slo;
 use crate::util::rng::Rng;
 
 /// Deterministic mock: every knob the engine consults is a field.
+#[derive(Debug)]
 pub struct MockServingSystem {
     pub gpus: usize,
     /// Batch slots (`batch_capacity`).

@@ -37,6 +37,7 @@ pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(name: &str, cases: u64
                 .cloned()
                 .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
                 .unwrap_or_else(|| "<non-string panic>".to_string());
+            // tidy:allow(no-panic-in-lib): test harness — failure reporting is its job
             panic!(
                 "property '{name}' failed at case {i} (seed {seed:#x}): {msg}\n\
                  replay with janus::testing::prop::check_one({seed:#x}, ..)"

@@ -76,7 +76,7 @@ pub fn bench_cfg<F: FnMut()>(
         sample_ns.push(t.elapsed().as_nanos() as f64 / per_sample as f64);
         total_iters += per_sample;
     }
-    sample_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sample_ns.sort_by(f64::total_cmp);
     let mean = sample_ns.iter().sum::<f64>() / sample_ns.len() as f64;
     let result = BenchResult {
         name: name.to_string(),

@@ -30,6 +30,7 @@ impl Args {
                     .map(|next| !next.starts_with("--"))
                     .unwrap_or(false)
                 {
+                    // tidy:allow(no-panic-in-lib): peek() just proved a next element exists
                     let v = iter.next().unwrap();
                     out.options.insert(stripped.to_string(), v);
                 } else {
@@ -59,24 +60,28 @@ impl Args {
     pub fn usize_opt(&self, name: &str) -> Option<usize> {
         self.get(name).map(|v| {
             v.parse()
+                // tidy:allow(no-panic-in-lib): CLI arg errors abort by design
                 .unwrap_or_else(|_| panic!("--{name} expects an integer, got {v}"))
         })
     }
 
     pub fn usize_or(&self, name: &str, default: usize) -> usize {
         self.get(name)
+            // tidy:allow(no-panic-in-lib): CLI arg errors abort by design
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v}")))
             .unwrap_or(default)
     }
 
     pub fn u64_or(&self, name: &str, default: u64) -> u64 {
         self.get(name)
+            // tidy:allow(no-panic-in-lib): CLI arg errors abort by design
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v}")))
             .unwrap_or(default)
     }
 
     pub fn f64_or(&self, name: &str, default: f64) -> f64 {
         self.get(name)
+            // tidy:allow(no-panic-in-lib): CLI arg errors abort by design
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v}")))
             .unwrap_or(default)
     }

@@ -431,7 +431,7 @@ mod tests {
                 let z = Zipf::new(n, s);
                 let mut rng = Rng::seed_from_u64(991);
                 let reference = |u: f64| -> usize {
-                    match z.cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+                    match z.cdf.binary_search_by(|p| p.total_cmp(&u)) {
                         Ok(i) => i,
                         Err(i) => i.min(z.cdf.len() - 1),
                     }

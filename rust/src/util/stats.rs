@@ -29,7 +29,7 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
         return 0.0;
     }
     let mut sorted: Vec<f64> = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp);
     percentile_sorted(&sorted, q)
 }
 
@@ -159,6 +159,49 @@ mod tests {
     fn percentile_edge_cases() {
         assert_eq!(percentile(&[], 50.0), 0.0);
         assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn percentile_nan_inputs_do_not_panic() {
+        // total_cmp sorts NaN above +inf (positive NaN bit patterns),
+        // so NaN-poisoned input degrades gracefully instead of
+        // panicking mid-sweep: low percentiles still reflect the real
+        // samples, and the max percentile surfaces the NaN.
+        let xs = [f64::NAN, 30.0, 10.0, 20.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert!((percentile(&xs, 100.0 / 3.0) - 20.0).abs() < 1e-9);
+        assert!(percentile(&xs, 100.0).is_nan());
+        let all_nan = [f64::NAN, f64::NAN];
+        assert!(percentile(&all_nan, 50.0).is_nan());
+    }
+
+    #[test]
+    fn total_cmp_sort_matches_partial_cmp_for_non_nan() {
+        // The total_cmp sweep must not change behavior for ordinary
+        // inputs: for NaN-free data (duplicates and infinities
+        // included), a total_cmp sort is bit-identical to the old
+        // partial_cmp().unwrap() sort.
+        let xs = [
+            3.5,
+            -2.0,
+            3.5,
+            0.0,
+            f64::INFINITY,
+            1e-300,
+            -1e300,
+            f64::NEG_INFINITY,
+            7.25,
+        ];
+        let mut by_total: Vec<f64> = xs.to_vec();
+        by_total.sort_by(f64::total_cmp);
+        let mut by_partial: Vec<f64> = xs.to_vec();
+        by_partial.sort_by(|a, b| {
+            // tidy:allow(no-nan-order): the old ordering is the reference here
+            a.partial_cmp(b).unwrap()
+        });
+        let total_bits: Vec<u64> = by_total.iter().map(|x| x.to_bits()).collect();
+        let partial_bits: Vec<u64> = by_partial.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(total_bits, partial_bits);
     }
 
     #[test]

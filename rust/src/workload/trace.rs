@@ -217,7 +217,7 @@ impl DiurnalTrace {
                 });
             }
         }
-        out.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        out.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         out
     }
 }

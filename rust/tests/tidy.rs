@@ -1,0 +1,184 @@
+//! The repo's own static-analysis gate, run as a tier-1 test.
+//!
+//! `repo_is_tidy` is the load-bearing case: it scans `rust/src` +
+//! `rust/tests` with the same `analysis::run_repo_scan` the `tidy` bin
+//! uses and fails on any violation or unused suppression, so the
+//! invariants in DESIGN.md §"Static invariants" bind on every `cargo
+//! test`, not just in the CI tidy job. The remaining cases feed
+//! synthetic fixtures through the full `scan_sources` pipeline to prove
+//! each rule is live end-to-end (the per-rule unit tests exercise the
+//! matchers; these pin the wiring).
+//!
+//! Fixture sources live in raw strings: the scanner masks string
+//! contents before any rule runs, so the violating tokens below never
+//! fire on this file during the self-scan.
+
+use janus::analysis::{run_repo_scan, scan_sources, SourceFile};
+
+/// Lex one fixture and scan it (no DESIGN.md — env table drift is
+/// exercised separately).
+fn scan_one(rel_path: &str, text: &str) -> janus::analysis::Report {
+    scan_sources(&[SourceFile::lex(rel_path, text)], None)
+}
+
+#[test]
+fn repo_is_tidy() {
+    let report = run_repo_scan().expect("walking rust/src + rust/tests");
+    assert!(
+        report.is_clean(),
+        "tidy violations in the repo:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn seeded_wallclock_violation_is_caught() {
+    let report = scan_one(
+        "src/sim/engine.rs",
+        r#"
+pub fn now_seconds() -> f64 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_secs_f64()
+}
+"#,
+    );
+    assert_eq!(report.count_rule("no-wallclock"), 1, "{}", report.render());
+}
+
+#[test]
+fn seeded_unordered_iter_violation_is_caught() {
+    let report = scan_one(
+        "src/sim/engine.rs",
+        r#"
+use std::collections::HashMap;
+pub fn total(m: &HashMap<u32, f64>) -> f64 {
+    let mut sum = 0.0;
+    for (_, v) in m.iter() {
+        sum += v;
+    }
+    sum
+}
+"#,
+    );
+    assert_eq!(
+        report.count_rule("no-unordered-iter"),
+        1,
+        "{}",
+        report.render()
+    );
+}
+
+#[test]
+fn seeded_nan_order_violation_is_caught() {
+    let report = scan_one(
+        "src/util/stats.rs",
+        r#"
+pub fn sort(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+"#,
+    );
+    assert_eq!(report.count_rule("no-nan-order"), 1, "{}", report.render());
+}
+
+#[test]
+fn seeded_panic_violation_is_caught() {
+    let report = scan_one(
+        "src/workload/trace.rs",
+        r#"
+pub fn first(xs: &[f64]) -> f64 {
+    *xs.first().unwrap()
+}
+"#,
+    );
+    assert_eq!(
+        report.count_rule("no-panic-in-lib"),
+        1,
+        "{}",
+        report.render()
+    );
+}
+
+#[test]
+fn seeded_hot_path_alloc_violation_is_caught() {
+    let report = scan_one(
+        "src/scheduler/aebs.rs",
+        r#"
+pub fn step() -> Vec<u32> {
+    // tidy:hot-path:begin
+    let out = Vec::new();
+    // tidy:hot-path:end
+    out
+}
+"#,
+    );
+    assert_eq!(
+        report.count_rule("no-alloc-in-hot-path"),
+        1,
+        "{}",
+        report.render()
+    );
+}
+
+#[test]
+fn seeded_env_violation_is_caught() {
+    // Assembled at runtime so the name never appears as a literal in
+    // this file (the self-scan reads string contents for env names).
+    let bogus = ["JANUS", "BOGUS"].join("_");
+    let src = format!(
+        r#"
+pub fn knob() -> bool {{
+    std::env::var("{bogus}").is_ok()
+}}
+"#
+    );
+    let report = scan_one("src/sim/engine.rs", &src);
+    assert_eq!(report.count_rule("env-registry"), 1, "{}", report.render());
+}
+
+#[test]
+fn suppression_silences_and_unused_suppression_errors() {
+    let suppressed = scan_one(
+        "src/workload/trace.rs",
+        r#"
+pub fn first(xs: &[f64]) -> f64 {
+    // tidy:allow(no-panic-in-lib): caller guarantees non-empty
+    *xs.first().unwrap()
+}
+"#,
+    );
+    assert!(suppressed.is_clean(), "{}", suppressed.render());
+
+    let unused = scan_one(
+        "src/workload/trace.rs",
+        r#"
+// tidy:allow(no-panic-in-lib): nothing here panics
+pub fn id(x: f64) -> f64 {
+    x
+}
+"#,
+    );
+    assert_eq!(
+        unused.count_rule("unused-suppression"),
+        1,
+        "{}",
+        unused.render()
+    );
+}
+
+#[test]
+fn violation_lines_render_as_file_line_rule() {
+    let report = scan_one(
+        "src/util/stats.rs",
+        r#"
+pub fn sort(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+"#,
+    );
+    let rendered = report.render();
+    assert!(
+        rendered.contains("src/util/stats.rs:3: no-nan-order:"),
+        "rendered:\n{rendered}"
+    );
+}
