@@ -53,6 +53,13 @@ pub const REGISTRY: &[EnvVar] = &[
                   never observable in results.",
     },
     EnvVar {
+        name: "JANUS_FAULTS",
+        values: "`off` / `shed` / `replica` (default `off`)",
+        read_by: "`sim::faults`",
+        purpose: "Default degradation policy for fault plans that do \
+                  not pin one; CI runs a matrix leg per policy.",
+    },
+    EnvVar {
         name: "JANUS_PROP_SEED",
         values: "u64 (default fixed base seed)",
         read_by: "`testing::prop`",

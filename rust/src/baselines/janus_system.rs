@@ -7,8 +7,9 @@ use crate::config::serving::{self, Deployment, SchedulerKind, Slo};
 use crate::placement::ExpertPlacement;
 use crate::routing::gate::{ExpertPopularity, GateSim};
 use crate::routing::trace::{ActivationTrace, RoutingBatch};
-use crate::scaling::{AmaxTable, DecisionCache, DecisionKind, Scaler, ScalingSignal};
+use crate::scaling::{pool_tag, AmaxTable, DecisionCache, DecisionKind, Scaler, ScalingSignal};
 use crate::scheduler::aebs;
+use crate::sim::faults::{DegradationPolicy, RecoveryAction};
 use crate::util::rng::Rng;
 
 use super::system::{ConfigInfo, ServingSystem, StepOutcome};
@@ -162,6 +163,19 @@ impl JanusSystem {
         }
     }
 
+    /// Pool fingerprint for decision keys: the per-side budget, tagged
+    /// with any live straggler slowdown (a degraded pool must never
+    /// replay a healthy decision and vice versa).
+    fn pool_key(&self) -> u64 {
+        pool_tag(self.scaler.n_max as u64, self.scaler.tpot_model.slowdown())
+    }
+
+    /// One expert's weights across every MoE layer, BF16 — the unit the
+    /// fault plane charges per re-placed replica.
+    fn expert_bytes(&self) -> f64 {
+        self.scaler.model.params_per_expert() * self.scaler.model.moe_layers() as f64 * 2.0
+    }
+
     /// Adopt a (possibly replayed) decision: deploy it, or — when the
     /// search found nothing feasible — keep the live deployment /
     /// fall back per `ensure_deployed` and report infeasibility.
@@ -188,7 +202,7 @@ impl ServingSystem for JanusSystem {
     }
 
     fn configure(&mut self, batch: usize, slo: Slo) -> Option<ConfigInfo> {
-        let pool = self.scaler.n_max as u64;
+        let pool = self.pool_key();
         let key = self.decisions.key(DecisionKind::FixedBatch, batch as f64, slo, pool);
         let s_ctx = self.s_ctx;
         let decision = self.decide(key, |sc| {
@@ -199,7 +213,7 @@ impl ServingSystem for JanusSystem {
     }
 
     fn configure_for_demand(&mut self, lambda: f64, slo: Slo) -> Option<ConfigInfo> {
-        let pool = self.scaler.n_max as u64;
+        let pool = self.pool_key();
         let key = self.decisions.key(DecisionKind::Demand, lambda, slo, pool);
         let s_ctx = self.s_ctx;
         let decision = self.decide(key, |sc| {
@@ -211,7 +225,7 @@ impl ServingSystem for JanusSystem {
     fn configure_with_signal(&mut self, signal: &ScalingSignal, slo: Slo) -> Option<ConfigInfo> {
         let lambda = signal.planned_demand();
         let slo = signal.effective_slo(slo);
-        let pool = self.scaler.n_max as u64;
+        let pool = self.pool_key();
         let key = self.decisions.key_with_signal(
             DecisionKind::Demand,
             lambda,
@@ -321,13 +335,120 @@ impl ServingSystem for JanusSystem {
         // cache, so post-failure pools never replay healthy decisions.
         self.deployment = None;
         self.placement = None;
-        let pool = self.scaler.n_max as u64;
+        let pool = self.pool_key();
         let key = self.decisions.key(DecisionKind::Demand, lambda, slo, pool);
         let s_ctx = self.s_ctx;
         let decision = self.decide(key, |sc| {
             sc.optimize(lambda, slo, s_ctx).map(|plan| plan.deployment)
         });
         self.adopt(decision)
+    }
+
+    /// Narrowed recovery — the disaggregation payoff: a dead MoE
+    /// instance re-places only its hosted experts onto survivors'
+    /// free slots (placement surgery), keeping the live deployment and
+    /// every other instance's weights untouched. Under `replica`, an
+    /// expert with a surviving replica is merely routed around; only
+    /// sole-replica experts transfer. When no slot can take a
+    /// zero-replica expert it is dropped (AEBS ignores zero-replica
+    /// experts) and the event reported infeasible.
+    fn crash_instance(
+        &mut self,
+        instance: u32,
+        policy: DegradationPolicy,
+        lambda: f64,
+        slo: Slo,
+    ) -> RecoveryAction {
+        self.fail_gpus(1);
+        let Some(mut placement) = self.placement.take() else {
+            // Nothing deployed yet: only the whole-pool path applies.
+            return RecoveryAction::whole_pool(self.reconfigure_for_pool(lambda, slo).is_some());
+        };
+        if (instance as usize) >= placement.n_instances {
+            self.placement = Some(placement);
+            return RecoveryAction::expert_replacement(0, 0, 0.0);
+        }
+        let mut drained = Vec::new();
+        placement.drain_instance(instance, &mut drained);
+        let mut moved = 0usize;
+        let mut dropped = 0usize;
+        for &e in &drained {
+            let needs_move = match policy {
+                DegradationPolicy::Replica => placement.replica_count(e) == 0,
+                DegradationPolicy::Off | DegradationPolicy::Shed => true,
+            };
+            if !needs_move {
+                continue; // route-to-replica: survivors keep serving e
+            }
+            // Most free slots, lowest index; never the dead instance or
+            // a host already holding a replica of e.
+            let target = (0..placement.n_instances as u32)
+                .filter(|&g| {
+                    g != instance
+                        && placement.free_slots(g) > 0
+                        && !placement.hosts(e).contains(&g)
+                })
+                .max_by_key(|&g| (placement.free_slots(g), std::cmp::Reverse(g)));
+            match target {
+                Some(g) => {
+                    // tidy:allow(no-panic-in-lib): target was filtered to have a free slot and no replica of e
+                    placement.seat(e, g).expect("narrowed re-seat");
+                    moved += 1;
+                }
+                None if placement.replica_count(e) == 0 => dropped += 1,
+                None => {} // redundancy reduced, expert still served
+            }
+        }
+        self.placement = Some(placement);
+        let transfer = self
+            .scaler
+            .tpot_model
+            .comm
+            .transfer_time(moved as f64 * self.expert_bytes());
+        RecoveryAction::expert_replacement(moved, dropped, transfer)
+    }
+
+    fn restore_instance(&mut self, instance: u32, _lambda: f64, _slo: Slo) -> RecoveryAction {
+        self.restore_gpus(1);
+        let Some(d) = self.deployment else {
+            return RecoveryAction::degradation();
+        };
+        // Re-sync the canonical â_max-table layout for the live
+        // deployment: the restored instance streams its experts back
+        // and crowded survivors relax to their normal seats.
+        self.placement = self.scaler.amax.placement_for(d.n_moe).cloned();
+        let restored = self
+            .placement
+            .as_ref()
+            .map(|p| {
+                if (instance as usize) < p.n_instances {
+                    p.seated(instance).len()
+                } else {
+                    0
+                }
+            })
+            .unwrap_or(0);
+        let transfer = self
+            .scaler
+            .tpot_model
+            .comm
+            .transfer_time(restored as f64 * self.expert_bytes());
+        RecoveryAction::expert_replacement(restored, 0, transfer)
+    }
+
+    fn attention_hosts(&self) -> usize {
+        self.deployment.map(|d| d.n_attn).unwrap_or(1).max(1)
+    }
+
+    fn kv_migration_cost(&mut self, tokens: u64) -> f64 {
+        self.scaler
+            .tpot_model
+            .comm
+            .transfer_time(tokens as f64 * self.scaler.mem.kv_bytes_per_token)
+    }
+
+    fn set_straggler(&mut self, factor: f64) {
+        self.scaler.tpot_model.set_slowdown(factor);
     }
 }
 
@@ -412,6 +533,95 @@ mod tests {
         sys.restore_gpus(12);
         let again = sys.configure_for_demand(2000.0, slo).expect("feasible");
         assert_eq!(healthy, again);
+    }
+
+    #[test]
+    fn narrowed_crash_moves_only_dead_instance_experts() {
+        let mut sys = JanusSystem::build(
+            deepseek_v2(),
+            paper_testbed(),
+            &ExpertPopularity::Uniform,
+            16,
+            47,
+        );
+        let slo = Slo::from_ms(200.0);
+        sys.configure_for_demand(2000.0, slo).expect("feasible");
+        let d = sys.deployment().expect("deployed");
+        let experts = sys.scaler.model.experts;
+        let action = sys.crash_instance(0, DegradationPolicy::Off, 2000.0, slo);
+        assert!(action.narrowed, "Janus recovers via placement surgery");
+        assert!(action.moved_experts > 0);
+        assert!(
+            action.moved_experts < experts,
+            "only the dead instance's experts move ({} of {experts})",
+            action.moved_experts
+        );
+        assert!(action.transfer_secs > 0.0, "weight transfer is charged");
+        // The live deployment survives the narrowed repair.
+        assert_eq!(sys.deployment(), Some(d));
+        let mut rng = Rng::seed_from_u64(2);
+        assert!(sys.step(64, &mut rng).tpot > 0.0);
+        // Restore re-syncs the canonical layout.
+        let back = sys.restore_instance(0, 2000.0, slo);
+        assert!(back.narrowed);
+        assert_eq!(back.moved_experts, action.moved_experts);
+    }
+
+    #[test]
+    fn replica_policy_moves_fewer_experts_than_off() {
+        let build = || {
+            JanusSystem::build(
+                deepseek_v2(),
+                paper_testbed(),
+                &ExpertPopularity::Uniform,
+                16,
+                48,
+            )
+        };
+        let slo = Slo::from_ms(200.0);
+        // A large batch forces a redundant (multi-replica) layout so the
+        // replica policy has survivors to route to.
+        let mut off = build();
+        off.configure(512, slo);
+        let mut replica = build();
+        replica.configure(512, slo);
+        let a_off = off.crash_instance(0, DegradationPolicy::Off, 4000.0, slo);
+        let a_rep = replica.crash_instance(0, DegradationPolicy::Replica, 4000.0, slo);
+        assert!(a_off.narrowed && a_rep.narrowed);
+        assert!(
+            a_rep.moved_experts <= a_off.moved_experts,
+            "replica ({}) must not move more than off ({})",
+            a_rep.moved_experts,
+            a_off.moved_experts
+        );
+        assert!(a_rep.transfer_secs <= a_off.transfer_secs);
+    }
+
+    #[test]
+    fn straggler_slows_step_and_separates_decision_keys() {
+        let mut sys = JanusSystem::build(
+            deepseek_v2(),
+            paper_testbed(),
+            &ExpertPopularity::Uniform,
+            16,
+            49,
+        );
+        let slo = Slo::from_ms(200.0);
+        sys.configure_for_demand(2000.0, slo).expect("feasible");
+        let mut rng = Rng::seed_from_u64(3);
+        let healthy = sys.step(64, &mut rng);
+        sys.set_straggler(2.0);
+        let mut rng = Rng::seed_from_u64(3);
+        let degraded = sys.step(64, &mut rng);
+        assert!(degraded.tpot > healthy.tpot, "the scheduler sees the straggler");
+        // The straggler-tagged pool must not replay the healthy decision
+        // blindly; after clearing, the healthy key replays again.
+        let (h0, _) = sys.decision_cache_stats();
+        sys.configure_for_demand(2000.0, slo);
+        sys.set_straggler(1.0);
+        sys.configure_for_demand(2000.0, slo);
+        let (h1, _) = sys.decision_cache_stats();
+        assert!(h1 > h0, "healthy key replays after the straggler clears");
     }
 
     #[test]

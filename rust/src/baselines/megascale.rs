@@ -19,7 +19,7 @@ use crate::routing::gate::{ExpertPopularity, GateSim};
 use crate::routing::trace::{ActivationTrace, RoutingBatch};
 use crate::scaling::littles_law::{self, FixedPoint};
 use crate::scaling::memory::AttnMemoryModel;
-use crate::scaling::{AmaxTable, DecisionCache, DecisionKind, ScalingSignal};
+use crate::scaling::{pool_tag, AmaxTable, DecisionCache, DecisionKind, ScalingSignal};
 use crate::scheduler::baselines as sched;
 use crate::util::rng::Rng;
 
@@ -305,13 +305,13 @@ impl ServingSystem for MegaScaleInfer {
     }
 
     fn configure(&mut self, batch: usize, slo: Slo) -> Option<ConfigInfo> {
-        let pool = self.n_max as u64;
+        let pool = pool_tag(self.n_max as u64, self.tpot_model.slowdown());
         let key = self.decisions.key(DecisionKind::FixedBatch, batch as f64, slo, pool);
         self.decide(key, |sys| sys.configure_uncached(batch, slo))
     }
 
     fn configure_for_demand(&mut self, lambda: f64, slo: Slo) -> Option<ConfigInfo> {
-        let pool = self.n_max as u64;
+        let pool = pool_tag(self.n_max as u64, self.tpot_model.slowdown());
         let key = self.decisions.key(DecisionKind::Demand, lambda, slo, pool);
         self.decide(key, |sys| sys.configure_for_demand_uncached(lambda, slo))
     }
@@ -319,7 +319,7 @@ impl ServingSystem for MegaScaleInfer {
     fn configure_with_signal(&mut self, signal: &ScalingSignal, slo: Slo) -> Option<ConfigInfo> {
         let lambda = signal.planned_demand();
         let slo = signal.effective_slo(slo);
-        let pool = self.n_max as u64;
+        let pool = pool_tag(self.n_max as u64, self.tpot_model.slowdown());
         let key = self.decisions.key_with_signal(
             DecisionKind::Demand,
             lambda,
@@ -393,6 +393,20 @@ impl ServingSystem for MegaScaleInfer {
         self.deployment
             .map(|d| d.label())
             .unwrap_or_else(|| "-".to_string())
+    }
+
+    fn attention_hosts(&self) -> usize {
+        self.deployment.map(|d| d.n_attn).unwrap_or(1).max(1)
+    }
+
+    fn kv_migration_cost(&mut self, tokens: u64) -> f64 {
+        self.tpot_model
+            .comm
+            .transfer_time(tokens as f64 * self.mem.kv_bytes_per_token)
+    }
+
+    fn set_straggler(&mut self, factor: f64) {
+        self.tpot_model.set_slowdown(factor);
     }
 }
 

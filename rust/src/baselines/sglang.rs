@@ -15,7 +15,7 @@ use crate::routing::gate::{ExpertPopularity, GateSim};
 use crate::routing::trace::RoutingBatch;
 use crate::scheduler::baselines as sched;
 use crate::scaling::littles_law::{self, FixedPoint};
-use crate::scaling::{DecisionCache, DecisionKind, ScalingSignal};
+use crate::scaling::{pool_tag, DecisionCache, DecisionKind, ScalingSignal};
 use crate::util::rng::Rng;
 
 use super::system::{ConfigInfo, ServingSystem, StepOutcome};
@@ -62,6 +62,8 @@ pub struct SgLang {
     /// Memoized tier decisions keyed on (batch-or-demand, SLO, pool).
     decisions: DecisionCache<TierDecision>,
     s_ctx: f64,
+    /// Straggler slowdown on the expert phase (fault plane); 1.0 healthy.
+    straggler: f64,
 }
 
 impl std::fmt::Debug for SgLang {
@@ -103,6 +105,7 @@ impl SgLang {
             sched_ws: sched::BaselineWorkspace::new(),
             decisions: DecisionCache::default(),
             s_ctx: 512.0,
+            straggler: 1.0,
         }
     }
 
@@ -136,12 +139,17 @@ impl SgLang {
             self.hw.node.nvlink_bw,
             self.hw.node.nvlink_latency,
         );
-        let t_moe = moe::moe_layer_latency(
+        let mut t_moe = moe::moe_layer_latency(
             &self.coeffs,
             a_max,
             (b_total * self.model.top_k as f64) as u32,
             gpus as u32,
         );
+        // Straggler fault: the degraded GPU gates the EP phase. Guarded
+        // so healthy runs stay bit-identical.
+        if self.straggler != 1.0 {
+            t_moe *= self.straggler;
+        }
         // EP all-to-all: token activations cross nodes; volume per GPU ≈
         // B/gpus tokens × d_model × 2 dirs; inter-node share grows with
         // node count.
@@ -294,13 +302,13 @@ impl ServingSystem for SgLang {
     }
 
     fn configure(&mut self, batch: usize, slo: Slo) -> Option<ConfigInfo> {
-        let pool = self.pool_gpus as u64;
+        let pool = pool_tag(self.pool_gpus as u64, self.straggler);
         let key = self.decisions.key(DecisionKind::FixedBatch, batch as f64, slo, pool);
         self.decide(key, |sys| sys.configure_uncached(batch, slo))
     }
 
     fn configure_for_demand(&mut self, lambda: f64, slo: Slo) -> Option<ConfigInfo> {
-        let pool = self.pool_gpus as u64;
+        let pool = pool_tag(self.pool_gpus as u64, self.straggler);
         let key = self.decisions.key(DecisionKind::Demand, lambda, slo, pool);
         self.decide(key, |sys| sys.configure_for_demand_uncached(lambda, slo))
     }
@@ -308,7 +316,7 @@ impl ServingSystem for SgLang {
     fn configure_with_signal(&mut self, signal: &ScalingSignal, slo: Slo) -> Option<ConfigInfo> {
         let lambda = signal.planned_demand();
         let slo = signal.effective_slo(slo);
-        let pool = self.pool_gpus as u64;
+        let pool = pool_tag(self.pool_gpus as u64, self.straggler);
         let key = self.decisions.key_with_signal(
             DecisionKind::Demand,
             lambda,
@@ -370,6 +378,14 @@ impl ServingSystem for SgLang {
 
     fn label(&self) -> String {
         format!("{}G", self.gpus)
+    }
+
+    fn set_straggler(&mut self, factor: f64) {
+        self.straggler = if factor.is_finite() && factor > 1.0 {
+            factor
+        } else {
+            1.0
+        };
     }
 }
 

@@ -2,6 +2,7 @@
 
 use crate::config::serving::Slo;
 use crate::scaling::ScalingSignal;
+use crate::sim::faults::{DegradationPolicy, RecoveryAction};
 use crate::util::rng::Rng;
 
 /// A system's chosen resource configuration.
@@ -110,4 +111,66 @@ pub trait ServingSystem {
     fn reconfigure_for_pool(&mut self, lambda: f64, slo: Slo) -> Option<ConfigInfo> {
         self.configure_for_demand(lambda, slo)
     }
+
+    // --- fine-grained fault plane (sim::faults) -------------------------
+    //
+    // The defaults below reduce every fine-grained fault to the legacy
+    // whole-pool path above, so a system that implements nothing extra
+    // behaves exactly like today's `FailureScenario` — monolithic
+    // baselines pay a full reconfiguration for a single dead instance.
+    // Systems with per-instance expert placement override
+    // `crash_instance`/`restore_instance` to repair only the blast
+    // radius.
+
+    /// A named MoE instance died. Recover per `policy` and report what
+    /// the recovery did. Default: whole-pool `fail_gpus(1)` +
+    /// `reconfigure_for_pool`.
+    fn crash_instance(
+        &mut self,
+        _instance: u32,
+        _policy: DegradationPolicy,
+        lambda: f64,
+        slo: Slo,
+    ) -> RecoveryAction {
+        self.fail_gpus(1);
+        RecoveryAction::whole_pool(self.reconfigure_for_pool(lambda, slo).is_some())
+    }
+
+    /// The instance from a prior [`Self::crash_instance`] came back.
+    /// Default: whole-pool restore + reconfiguration.
+    fn restore_instance(&mut self, _instance: u32, lambda: f64, slo: Slo) -> RecoveryAction {
+        self.restore_gpus(1);
+        RecoveryAction::whole_pool(self.reconfigure_for_pool(lambda, slo).is_some())
+    }
+
+    /// An attention host died (its KV fate — migration vs recompute —
+    /// is handled by the engine against the admission batch). Default:
+    /// whole-pool degradation.
+    fn lose_attention_host(&mut self, _host: u32, lambda: f64, slo: Slo) -> RecoveryAction {
+        self.fail_gpus(1);
+        RecoveryAction::whole_pool(self.reconfigure_for_pool(lambda, slo).is_some())
+    }
+
+    /// The attention host came back. Default: whole-pool restore.
+    fn restore_attention_host(&mut self, _host: u32, lambda: f64, slo: Slo) -> RecoveryAction {
+        self.restore_gpus(1);
+        RecoveryAction::whole_pool(self.reconfigure_for_pool(lambda, slo).is_some())
+    }
+
+    /// Attention hosts the engine may spread in-flight KV over (used to
+    /// pick which slots die with a host). Default: every GPU hosts KV.
+    fn attention_hosts(&self) -> usize {
+        self.gpus().max(1)
+    }
+
+    /// Modeled seconds to migrate `tokens` of KV cache to surviving
+    /// hosts. Deterministic; default is a flat per-token NIC estimate.
+    fn kv_migration_cost(&mut self, tokens: u64) -> f64 {
+        tokens as f64 * 2e-6
+    }
+
+    /// A degraded GPU slows the expert side by `factor` (≥ 1; 1.0
+    /// clears it). Implementations fold it into their latency model so
+    /// the scheduler sees the straggler. Default: not modeled.
+    fn set_straggler(&mut self, _factor: f64) {}
 }

@@ -88,6 +88,18 @@ impl CommModel {
         }
     }
 
+    /// Modeled seconds to bulk-transfer `bytes` over one NIC: the
+    /// link's base latency plus wire time. The fault plane prices
+    /// expert-weight re-placement and KV-cache migration through this,
+    /// so repair cost scales with the same link model as dispatch and
+    /// combine.
+    pub fn transfer_time(&self, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        self.node.nic_latency + bytes / self.node.nic_bw
+    }
+
     /// Evaluate a plan: the slowest source NIC's serialization, plus the
     /// slowest receiver's inbound serialization, plus intra-node phases.
     ///
@@ -390,6 +402,17 @@ mod tests {
 
     fn model() -> CommModel {
         CommModel::new(paper_testbed().node, 5120, 6)
+    }
+
+    #[test]
+    fn transfer_time_is_latency_plus_wire() {
+        let m = model();
+        assert_eq!(m.transfer_time(0.0), 0.0);
+        assert_eq!(m.transfer_time(-1.0), 0.0);
+        let t = m.transfer_time(1e9);
+        let expect = m.node.nic_latency + 1e9 / m.node.nic_bw;
+        assert!((t - expect).abs() < 1e-15);
+        assert!(m.transfer_time(2e9) > t, "monotone in bytes");
     }
 
     #[test]

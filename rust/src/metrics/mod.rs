@@ -236,6 +236,19 @@ pub struct ClassStats {
     pub tokens: u64,
     /// Of those, how many in steps within the TPOT SLO.
     pub tokens_ok: u64,
+    /// Decode tokens generated while the system was degraded (a fault
+    /// window open or GPUs failed). Subset of `tokens`.
+    pub degraded_tokens: u64,
+    /// Of those, how many in steps within the TPOT SLO.
+    pub degraded_tokens_ok: u64,
+    /// Arrivals shed by the fault plane's admission-shedding degradation
+    /// policy (distinct from `rejected`: the queue had room, the policy
+    /// refused).
+    pub shed: u64,
+    /// Output tokens those shed arrivals would have generated — charged
+    /// to the degraded-window denominator so shedding cannot buy
+    /// attainment for free.
+    pub shed_tokens: u64,
 }
 
 impl ClassStats {
@@ -258,6 +271,16 @@ impl ClassStats {
     /// Whether any attainment signal exists for this class at all.
     pub fn has_samples(&self) -> bool {
         self.first_tokens > 0 || self.tokens > 0
+    }
+
+    /// Fraction of degraded-window decode tokens within the TPOT SLO,
+    /// with shed arrivals' would-be tokens charged to the denominator —
+    /// so an admission-shedding policy pays for the work it refused, and
+    /// route-to-replica can strictly beat it by actually serving the
+    /// tokens. `None` when the class saw no degraded window at all.
+    pub fn degraded_token_attainment(&self) -> Option<f64> {
+        let denom = self.degraded_tokens + self.shed_tokens;
+        (denom > 0).then(|| self.degraded_tokens_ok as f64 / denom as f64)
     }
 }
 
@@ -398,6 +421,27 @@ mod tests {
         assert!(c.has_samples());
         assert!((c.ttft_attainment().unwrap() - 0.75).abs() < 1e-12);
         assert!((c.token_attainment().unwrap() - 0.99).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degraded_attainment_charges_shed_tokens() {
+        let mut c = ClassStats::default();
+        assert_eq!(c.degraded_token_attainment(), None, "no degraded window");
+        c.degraded_tokens = 80;
+        c.degraded_tokens_ok = 60;
+        assert!((c.degraded_token_attainment().unwrap() - 0.75).abs() < 1e-12);
+        // Shedding 20 would-be tokens drags the fraction down: the
+        // refused work counts against the window.
+        c.shed = 1;
+        c.shed_tokens = 20;
+        assert!((c.degraded_token_attainment().unwrap() - 0.60).abs() < 1e-12);
+        // A shed-everything window reads as 0.0, not absent.
+        let all_shed = ClassStats {
+            shed: 5,
+            shed_tokens: 100,
+            ..ClassStats::default()
+        };
+        assert_eq!(all_shed.degraded_token_attainment(), Some(0.0));
     }
 
     #[test]

@@ -29,6 +29,10 @@ pub struct TpotModel {
     pub moe_layers: usize,
     pub scheme: CommScheme,
     pub gating: GatingSide,
+    /// Straggler slowdown on the expert side (fault plane): the MoE
+    /// layer latency is multiplied by this factor. 1.0 = healthy; kept
+    /// private so the multiply is skipped exactly when no fault set it.
+    slowdown: f64,
 }
 
 impl TpotModel {
@@ -45,7 +49,23 @@ impl TpotModel {
             moe_layers: model.moe_layers(),
             scheme,
             gating,
+            slowdown: 1.0,
         }
+    }
+
+    /// Install (factor > 1) or clear (factor = 1) a straggler slowdown
+    /// on the expert side. Non-finite or sub-1 factors clamp to 1.
+    pub fn set_slowdown(&mut self, factor: f64) {
+        self.slowdown = if factor.is_finite() && factor > 1.0 {
+            factor
+        } else {
+            1.0
+        };
+    }
+
+    /// Current expert-side straggler factor (1.0 = healthy).
+    pub fn slowdown(&self) -> f64 {
+        self.slowdown
     }
 
     /// TPOT for a deployment (n_a, n_e) at total in-flight batch B with
@@ -80,13 +100,19 @@ impl TpotModel {
         assert!(n_attn > 0 && n_moe > 0);
         let b_local = b_total / n_attn as f64;
         let t_attn = attention::attn_latency(&self.coeffs, b_local, s_ctx);
-        let t_moe = moe::moe_layer_latency(
+        let mut t_moe = moe::moe_layer_latency(
             &self.coeffs,
             a_max,
             // Token-activations crossing to the MoE side per layer.
             (b_total * self.comm.top_k as f64) as u32,
             n_moe as u32,
         );
+        // Straggler fault: the slowest expert GPU gates the MoE phase.
+        // Guarded so healthy runs perform no extra float op and stay
+        // bit-identical to the pre-fault-plane model.
+        if self.slowdown != 1.0 {
+            t_moe *= self.slowdown;
+        }
         let t_comm = self
             .comm
             .layer_cost_with(scratch, self.scheme, self.gating, n_attn, n_moe, b_total)
@@ -149,6 +175,25 @@ mod tests {
             "TPOT {} out of plausible range",
             lat.tpot
         );
+    }
+
+    #[test]
+    fn slowdown_scales_moe_term_only() {
+        let mut m = model();
+        let healthy = m.tpot(256.0, 2, 6, 512.0, 20);
+        m.set_slowdown(2.0);
+        assert_eq!(m.slowdown(), 2.0);
+        let slow = m.tpot(256.0, 2, 6, 512.0, 20);
+        assert!((slow.moe - 2.0 * healthy.moe).abs() < 1e-12);
+        assert_eq!(slow.attn.to_bits(), healthy.attn.to_bits());
+        assert!(slow.tpot > healthy.tpot);
+        // Clearing (and degenerate factors) restore bit-identity.
+        m.set_slowdown(1.0);
+        assert_eq!(m.tpot(256.0, 2, 6, 512.0, 20), healthy);
+        m.set_slowdown(0.5);
+        assert_eq!(m.slowdown(), 1.0);
+        m.set_slowdown(f64::NAN);
+        assert_eq!(m.slowdown(), 1.0);
     }
 
     #[test]

@@ -151,6 +151,26 @@ impl ExpertPlacement {
             .count()
     }
 
+    /// Evacuate `instance` (fault plane: the instance died): unseat
+    /// every expert it hosted and append them to `out` in slot order.
+    /// The layout may be left invalid (zero-replica experts) — the
+    /// caller re-seats or deliberately drops each drained expert.
+    pub fn drain_instance(&mut self, instance: u32, out: &mut Vec<u16>) {
+        let g = instance as usize;
+        if g >= self.n_instances {
+            return;
+        }
+        for slot in 0..self.capacity {
+            let e = self.slots[g][slot];
+            if e == EMPTY_SLOT {
+                continue;
+            }
+            self.slots[g][slot] = EMPTY_SLOT;
+            self.hosts[e as usize].retain(|&h| h != instance);
+            out.push(e);
+        }
+    }
+
     /// P(e,g): stable physical replica id for expert `e` on instance `g`.
     pub fn physical_id(&self, expert: u16, instance: u32) -> Option<u32> {
         let g = instance as usize;
@@ -256,6 +276,33 @@ mod tests {
         assert_eq!(p.replica_count(3), 0);
         assert!(p.validate().is_err()); // expert 3 now unseated
         p.seat(3, 1).unwrap();
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn drain_instance_evacuates_in_slot_order() {
+        let mut p = ExpertPlacement::round_robin(8, 4, 4);
+        let seated = p.seated(1);
+        let mut drained = Vec::new();
+        p.drain_instance(1, &mut drained);
+        assert_eq!(drained, seated, "slot order preserved");
+        assert_eq!(p.seated(1), Vec::<u16>::new());
+        assert_eq!(p.free_slots(1), 4);
+        for &e in &drained {
+            assert!(!p.hosts(e).contains(&1), "hosts updated for expert {e}");
+        }
+        // Out-of-range and re-drain are no-ops.
+        p.drain_instance(99, &mut drained);
+        let before = drained.len();
+        p.drain_instance(1, &mut drained);
+        assert_eq!(drained.len(), before);
+        // Drained experts can be re-seated on survivors.
+        for &e in &drained {
+            if p.replica_count(e) == 0 {
+                let host = (0..4u32).find(|&g| g != 1 && p.free_slots(g) > 0).unwrap();
+                p.seat(e, host).unwrap();
+            }
+        }
         p.validate().unwrap();
     }
 

@@ -58,6 +58,20 @@ pub struct DecisionKey {
     signal: u64,
 }
 
+/// Fold a straggler slowdown factor into a pool fingerprint. The
+/// healthy case (`slowdown == 1.0`) returns `base` unchanged, so every
+/// pre-fault-plane key is bit-identical; a degraded pool sets the top
+/// bit (healthy fingerprints are small counts, so tagged and untagged
+/// keys never collide) and mixes the factor's bits, so decisions made
+/// under one slowdown never replay under another.
+pub fn pool_tag(base: u64, slowdown: f64) -> u64 {
+    if slowdown == 1.0 {
+        base
+    } else {
+        (base ^ slowdown.to_bits().rotate_left(17)) | (1 << 63)
+    }
+}
+
 /// Bounded deterministic memo table for scaling decisions.
 #[derive(Clone, Debug)]
 pub struct DecisionCache<V> {
@@ -210,6 +224,17 @@ mod tests {
         assert_eq!(c.get(&k), Some(7));
         assert_eq!(c.hits(), 1);
         assert_eq!(c.misses(), 1);
+    }
+
+    #[test]
+    fn pool_tag_is_identity_when_healthy_and_separates_factors() {
+        assert_eq!(pool_tag(16, 1.0), 16, "healthy pools keep legacy keys");
+        let a = pool_tag(16, 2.0);
+        let b = pool_tag(16, 3.0);
+        assert_ne!(a, 16);
+        assert_ne!(a, b, "distinct slowdowns get distinct fingerprints");
+        assert_ne!(pool_tag(12, 2.0), a, "base still separates pools");
+        assert!(a & (1 << 63) != 0, "degraded fingerprints are tagged");
     }
 
     #[test]

@@ -23,5 +23,5 @@ pub mod signal;
 
 pub use algorithm2::{CandidateEval, ScalePlan, Scaler};
 pub use amax::{amax_bound, AmaxTable};
-pub use decision_cache::{DecisionCache, DecisionKey, DecisionKind};
+pub use decision_cache::{pool_tag, DecisionCache, DecisionKey, DecisionKind};
 pub use signal::{ScalingMode, ScalingSignal, SCALING_ENV};

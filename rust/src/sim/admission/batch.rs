@@ -179,6 +179,39 @@ impl InFlightBatch {
         Some(slot)
     }
 
+    /// KV tokens resident on attention host `host` under a deterministic
+    /// `seq % n_hosts` slot→host assignment (the fault plane's migration
+    /// cost base when an attention host dies).
+    pub fn host_kv_tokens(&self, host: u32, n_hosts: u32) -> u64 {
+        let n = n_hosts.max(1) as u64;
+        self.slots
+            .iter()
+            .filter(|s| s.seq % n == host as u64)
+            .map(|s| s.kv_tokens as u64)
+            .sum()
+    }
+
+    /// Evict every request resident on attention host `host` (the host
+    /// died and its KV was not migrated). Removed slots are appended to
+    /// `out` in slot (= admission) order with the same bookkeeping as
+    /// [`Self::preempt_victim`]; the caller re-queues each victim with
+    /// its lost context charged as recompute prefill.
+    pub fn evict_host(&mut self, host: u32, n_hosts: u32, out: &mut Vec<Slot>) {
+        let n = n_hosts.max(1) as u64;
+        let kv = &mut self.kv_tokens;
+        let outstanding = &mut self.prefill_outstanding;
+        self.slots.retain(|slot| {
+            if slot.seq % n == host as u64 {
+                *kv -= slot.kv_tokens as u64;
+                *outstanding -= slot.prefill_remaining as u64;
+                out.push(*slot);
+                false
+            } else {
+                true
+            }
+        });
+    }
+
     /// One engine step of duration `step_time`: prefilling slots consume
     /// one `chunk` of prompt tokens (KV grows by the chunk), decoding
     /// slots emit one token (KV grows by one) and leave when their
@@ -295,6 +328,31 @@ mod tests {
         assert_eq!(v3.class, Priority::Interactive);
         assert!(b.preempt_victim().is_none(), "prefilling slot not preemptible");
         assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn evict_host_removes_exactly_the_hosts_slots_with_bookkeeping() {
+        let mut b = InFlightBatch::new();
+        // seq 0..4 over 2 hosts: host 0 gets seq {0, 2}, host 1 gets {1, 3}.
+        b.join(&fresh(0.0, Priority::Standard, 10, 5), 0.0, 0);
+        b.join(&fresh(0.0, Priority::Standard, 20, 5), 0.0, 0);
+        b.join(&fresh(0.0, Priority::Standard, 30, 5), 0.0, 0);
+        b.join(&fresh(0.0, Priority::Standard, 40, 5), 0.0, 40);
+        assert_eq!(b.host_kv_tokens(0, 2), 10 + 30);
+        assert_eq!(b.host_kv_tokens(1, 2), 20 + 0, "prefilling slot has no KV yet");
+        let mut evicted = Vec::new();
+        b.evict_host(1, 2, &mut evicted);
+        assert_eq!(evicted.len(), 2, "both host-1 slots evicted, once each");
+        assert_eq!(evicted[0].seq, 1);
+        assert_eq!(evicted[1].seq, 3);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.kv_tokens(), 40.0, "survivors' KV only");
+        assert_eq!(b.kv_reserved(), 40.0, "outstanding prefill released");
+        assert_eq!(b.host_kv_tokens(1, 2), 0);
+        // Re-evicting the same host is a no-op.
+        let before = evicted.len();
+        b.evict_host(1, 2, &mut evicted);
+        assert_eq!(evicted.len(), before);
     }
 
     #[test]

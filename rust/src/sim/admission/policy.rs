@@ -111,6 +111,13 @@ pub trait AdmissionPolicy {
     /// Requests currently waiting.
     fn queue_len(&self) -> usize;
 
+    /// Forced re-entry (preemption victims, fault-plane evictions):
+    /// the request was already admitted once, so it bypasses the
+    /// capacity check and is never dropped. Callers set `fresh: false`
+    /// so the later re-join is counted once as a rejoin, not a second
+    /// fresh admission.
+    fn requeue(&mut self, req: Queued);
+
     /// The admission phase of one decode step at simulated time `now`:
     /// fill free batch slots (and, for `KvAware`, first resolve KV
     /// pressure by preempting). Everything done is reported in `out`.
@@ -162,6 +169,10 @@ impl AdmissionPolicy for Fifo {
         self.queue.len()
     }
 
+    fn requeue(&mut self, req: Queued) {
+        self.queue.push_back(req);
+    }
+
     fn admit(
         &mut self,
         now: f64,
@@ -172,10 +183,14 @@ impl AdmissionPolicy for Fifo {
         while batch.len() < caps.batch_capacity {
             match self.queue.pop_front() {
                 Some(req) => {
-                    out.joined.push(JoinInfo {
-                        delay: now - req.arrived,
-                        class: req.class,
-                    });
+                    if req.fresh {
+                        out.joined.push(JoinInfo {
+                            delay: now - req.arrived,
+                            class: req.class,
+                        });
+                    } else {
+                        out.rejoined += 1;
+                    }
                     batch.join(&req, now, 0);
                 }
                 None => break,
@@ -304,6 +319,10 @@ impl AdmissionPolicy for SloClass {
         self.queues.len()
     }
 
+    fn requeue(&mut self, req: Queued) {
+        self.queues.requeue(req);
+    }
+
     fn admit(
         &mut self,
         now: f64,
@@ -314,10 +333,14 @@ impl AdmissionPolicy for SloClass {
         while batch.len() < caps.batch_capacity {
             match self.queues.pop_best(now) {
                 Some(req) => {
-                    out.joined.push(JoinInfo {
-                        delay: now - req.arrived,
-                        class: req.class,
-                    });
+                    if req.fresh {
+                        out.joined.push(JoinInfo {
+                            delay: now - req.arrived,
+                            class: req.class,
+                        });
+                    } else {
+                        out.rejoined += 1;
+                    }
                     batch.join(&req, now, 0);
                 }
                 None => break,
@@ -365,6 +388,10 @@ impl AdmissionPolicy for KvAware {
 
     fn queue_len(&self) -> usize {
         self.queues.len()
+    }
+
+    fn requeue(&mut self, req: Queued) {
+        self.queues.requeue(req);
     }
 
     fn admit(
@@ -494,6 +521,38 @@ mod tests {
         // Chunked: the join is a prefill join.
         assert_eq!(batch.decoding_count(), 0);
         assert_eq!(batch.pending_prefill_tokens(32), 32);
+    }
+
+    #[test]
+    fn requeued_victims_rejoin_exactly_once_under_every_policy() {
+        // Drain-path audit (fault plane): a request evicted by a host
+        // loss re-enters via `requeue` with `fresh: false` and must be
+        // counted as one rejoin — never a second fresh admission, never
+        // dropped by a full queue.
+        let victim = Queued {
+            arrived: 0.0,
+            class: Priority::Standard,
+            input_tokens: 16,
+            remaining_output: 4,
+            recompute_tokens: 16,
+            emitted_first: true,
+            fresh: false,
+        };
+        let policies: Vec<Box<dyn AdmissionPolicy>> = vec![
+            Box::new(Fifo::new(0)), // zero capacity: requeue must bypass it
+            Box::new(SloClass::new(0, 30.0)),
+            Box::new(KvAware::new(0, 30.0)),
+        ];
+        for mut p in policies {
+            p.requeue(victim);
+            assert_eq!(p.queue_len(), 1, "{}: requeue bypasses capacity", p.name());
+            let mut batch = InFlightBatch::new();
+            let mut out = AdmitOutcome::new();
+            p.admit(1.0, &caps(8, 1e9, 64), &mut batch, &mut out);
+            assert_eq!(out.joined.len(), 0, "{}: no fresh admission", p.name());
+            assert_eq!(out.rejoined, 1, "{}: exactly one rejoin", p.name());
+            assert_eq!(batch.len(), 1, "{}: victim is back in flight", p.name());
+        }
     }
 
     #[test]

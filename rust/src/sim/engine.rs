@@ -59,6 +59,7 @@ use crate::scaling::{ScalingMode, ScalingSignal};
 use crate::sim::admission::{
     AdmissionConfig, AdmissionPolicy, AdmitOutcome, EngineCaps, InFlightBatch, Queued, StepBook,
 };
+use crate::sim::faults::{FaultController, FaultKind, FaultPlan, FaultStats, RecoveryAction};
 use crate::util::rng::Rng;
 use crate::util::stats::{Accumulator, WeightedAccumulator};
 use crate::workload::arrivals::{ArrivalProcess, BurstyPoisson};
@@ -109,6 +110,12 @@ pub enum EventKind {
     Failure { gpus: usize, downtime: f64 },
     /// Previously failed GPUs return to the pool.
     Recovery { gpus: usize },
+    /// Fine-grained fault window `idx` of the scenario's
+    /// [`FaultPlan`] timeline opens (instance crash, attention-host
+    /// loss, straggler, transient-comm window).
+    Fault { idx: usize },
+    /// Fault window `idx` closes: the faulted resource returns.
+    FaultClear { idx: usize },
 }
 
 impl EventKind {
@@ -445,6 +452,20 @@ pub enum ScenarioError {
     EmptyTrace,
     /// A failure plan has a non-finite or negative time/downtime.
     InvalidFailurePlan { at: f64, downtime: f64 },
+    /// A planned outage starts at or beyond the scenario horizon —
+    /// it could never fire, so the scenario is misconfigured.
+    FailureBeyondHorizon { at: f64, horizon: f64 },
+    /// Two planned outages overlap: the second fails before the first
+    /// restores, which the whole-pool fail/restore bookkeeping cannot
+    /// represent (use a [`FaultPlan`] for concurrent fine-grained
+    /// faults).
+    OverlappingFailures { first_at: f64, second_at: f64 },
+    /// An outage's restore does not land strictly after its failure
+    /// (zero downtime), so the fail/restore pair would be a no-op tie.
+    RestoreNotAfterFailure { at: f64 },
+    /// The scenario's fine-grained [`FaultPlan`] is degenerate (bad
+    /// times, bad factors, empty stochastic kinds, …).
+    InvalidFaultPlan(String),
     /// The admission configuration is degenerate (bad class mix, zero
     /// aging, zero prefill chunk, …).
     InvalidAdmission(String),
@@ -480,6 +501,22 @@ impl fmt::Display for ScenarioError {
                 f,
                 "failure plan needs finite non-negative times, got at={at}s downtime={downtime}s"
             ),
+            ScenarioError::FailureBeyondHorizon { at, horizon } => write!(
+                f,
+                "failure at {at}s starts at or beyond the {horizon}s horizon and could never fire"
+            ),
+            ScenarioError::OverlappingFailures { first_at, second_at } => write!(
+                f,
+                "failure at {second_at}s overlaps the outage that started at {first_at}s \
+                 (whole-pool outages must not overlap; use a FaultPlan for concurrent faults)"
+            ),
+            ScenarioError::RestoreNotAfterFailure { at } => write!(
+                f,
+                "failure at {at}s restores at the same instant it fails (zero downtime)"
+            ),
+            ScenarioError::InvalidFaultPlan(why) => {
+                write!(f, "fault plan invalid: {why}")
+            }
             ScenarioError::InvalidAdmission(why) => {
                 write!(f, "admission configuration invalid: {why}")
             }
@@ -627,6 +664,13 @@ pub struct FailureScenario {
     /// just changed, so the measured interval no longer describes it.
     pub scaling: ScalingMode,
     pub failures: Vec<FailurePlan>,
+    /// Optional fine-grained fault plane (`sim::faults`): instance
+    /// crashes with narrowed expert re-placement, attention-host losses
+    /// with KV migration/recompute, stragglers, and transient
+    /// dispatch/combine windows. `None` (the default) leaves every
+    /// legacy scenario bit-identical — the engine adds no events, no
+    /// draws, and no per-step checks.
+    pub faults: Option<FaultPlan>,
 }
 
 impl FailureScenario {
@@ -644,12 +688,19 @@ impl FailureScenario {
             admission: AdmissionConfig::from_env(),
             scaling: ScalingMode::from_env(),
             failures: Vec::new(),
+            faults: None,
         }
     }
 
     /// Add one outage.
     pub fn with_failure(mut self, at: f64, gpus: usize, downtime: f64) -> Self {
         self.failures.push(FailurePlan { at, gpus, downtime });
+        self
+    }
+
+    /// Install a fine-grained [`FaultPlan`] (see `sim::faults`).
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
         self
     }
 
@@ -687,6 +738,34 @@ impl FailureScenario {
                     downtime: f.downtime,
                 });
             }
+            if f.at >= self.horizon {
+                return Err(ScenarioError::FailureBeyondHorizon {
+                    at: f.at,
+                    horizon: self.horizon,
+                });
+            }
+            if f.downtime == 0.0 {
+                return Err(ScenarioError::RestoreNotAfterFailure { at: f.at });
+            }
+        }
+        // Whole-pool outages must be disjoint: the scalar
+        // failed-GPU/restore bookkeeping cannot represent a second
+        // outage opening inside the first's downtime window.
+        if self.failures.len() > 1 {
+            let mut sorted = self.failures.clone();
+            sorted.sort_by(|a, b| a.at.total_cmp(&b.at).then(a.downtime.total_cmp(&b.downtime)));
+            for w in sorted.windows(2) {
+                if w[1].at < w[0].at + w[0].downtime {
+                    return Err(ScenarioError::OverlappingFailures {
+                        first_at: w[0].at,
+                        second_at: w[1].at,
+                    });
+                }
+            }
+        }
+        if let Some(plan) = &self.faults {
+            plan.validate(self.horizon)
+                .map_err(ScenarioError::InvalidFaultPlan)?;
         }
         self.admission
             .validate()
@@ -828,11 +907,24 @@ pub struct FailureResult {
     pub max_gpus: usize,
     /// Admission policy the run used (`fifo` / `slo` / `kv`).
     pub policy: &'static str,
-    /// Decodes preempted out of the batch under KV pressure (KvAware).
+    /// Decodes preempted out of the batch under KV pressure (KvAware)
+    /// or evicted by an attention-host loss.
     pub preemptions: usize,
     /// Per-SLO-class flow and attainment counters, indexed by
     /// [`Priority::rank`].
     pub per_class: [ClassStats; NUM_CLASSES],
+    /// Arrivals shed by the fault plane's admission-shedding policy.
+    pub shed_requests: u64,
+    /// Fraction of the horizon with no degraded condition open (legacy
+    /// whole-pool outages and fault-plan windows both count; 1.0 on a
+    /// fault-free run).
+    pub availability: f64,
+    /// Mean time-to-recovery over the fault plan's events (narrowed
+    /// recoveries repair in their transfer time, whole-pool recoveries
+    /// in the full window). 0.0 with no fault events.
+    pub mttr_mean: f64,
+    /// Per-event fault accounting (empty without a [`FaultPlan`]).
+    pub faults: FaultStats,
 }
 
 /// Outcome of [`run`], tagged by scenario.
@@ -918,6 +1010,20 @@ fn track(gpus: usize, min_g: &mut usize, max_g: &mut usize) {
     if gpus > 0 {
         *min_g = (*min_g).min(gpus);
         *max_g = (*max_g).max(gpus);
+    }
+}
+
+/// Track the union of degraded conditions (whole-pool outage open or
+/// any fault-plan window open) as an open/close interval accumulator;
+/// called at every capacity-changing event with the post-event state.
+fn sample_degraded(since: &mut Option<f64>, total: &mut f64, now: f64, degraded: bool) {
+    match (*since, degraded) {
+        (None, true) => *since = Some(now),
+        (Some(s), false) => {
+            *total += (now - s).max(0.0);
+            *since = None;
+        }
+        _ => {}
     }
 }
 
@@ -1326,9 +1432,12 @@ pub fn autoscale<S: ServingSystem + ?Sized>(
                     queue.push(t_end, EventKind::ScalingDecision);
                 }
             }
-            EventKind::Failure { .. } | EventKind::Recovery { .. } => {
+            EventKind::Failure { .. }
+            | EventKind::Recovery { .. }
+            | EventKind::Fault { .. }
+            | EventKind::FaultClear { .. } => {
                 // tidy:allow(no-panic-in-lib): this scenario never schedules these events
-                unreachable!("autoscale scenario schedules no failure events")
+                unreachable!("autoscale scenario schedules no failure or fault events")
             }
         }
     }
@@ -1409,6 +1518,27 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
             },
         );
     }
+
+    // Fine-grained fault plane: materialize the plan's timeline
+    // (scripted + seeded-stochastic on the dedicated fault RNG stream)
+    // and schedule one open/close event pair per window. With no plan
+    // installed, nothing here runs — no events, no draws, no controller
+    // — so legacy scenarios stay bit-identical.
+    let mut faultctl: Option<FaultController> =
+        sc.faults.as_ref().map(|p| FaultController::new(p, seed, sc.horizon));
+    if let Some(ctl) = &faultctl {
+        for (idx, f) in ctl.timeline().iter().enumerate() {
+            queue.push(f.at, EventKind::Fault { idx });
+            // A close past the horizon never fires; finish() settles it.
+            queue.push(f.at + f.duration, EventKind::FaultClear { idx });
+        }
+    }
+    // Union of all degraded conditions (whole-pool outage open, or any
+    // fault-plan window open) for the availability metric; transitions
+    // are sampled at the four capacity-changing event kinds.
+    let mut degraded_since: Option<f64> = None;
+    let mut degraded_time = 0.0f64;
+    let mut evict_buf: Vec<crate::sim::admission::Slot> = Vec::new();
 
     // The arrival stream is sampled lazily, one 1-second window at a
     // time (`ArrivalWindow` events), through the bursty (Cox) process;
@@ -1510,7 +1640,21 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                 output_tokens,
                 class,
             } => {
-                if policy.offer(Queued::fresh(ev.time, class, input_tokens, output_tokens)) {
+                // Degradation policy `shed`: inside any open fault
+                // window, fresh arrivals are refused at the door. Their
+                // would-be output tokens are charged to the degraded
+                // attainment denominator, so shedding cannot buy SLO
+                // attainment for free.
+                if faultctl.as_ref().is_some_and(|c| c.shedding()) {
+                    let cs = &mut class_stats[class.rank()];
+                    cs.shed += 1;
+                    cs.shed_tokens += output_tokens as u64;
+                    if let Some(ctl) = faultctl.as_mut() {
+                        ctl.stats.shed_requests += 1;
+                        ctl.stats.lost_tokens += output_tokens as u64;
+                    }
+                } else if policy.offer(Queued::fresh(ev.time, class, input_tokens, output_tokens))
+                {
                     queue_depth_max = queue_depth_max.max(policy.queue_len());
                     if !step_pending {
                         step_pending = true;
@@ -1549,7 +1693,7 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                 }
                 let decoding = batch.decoding_count();
                 let chunk_tokens = batch.pending_prefill_tokens(caps.prefill_chunk);
-                let step_time = if decoding > 0 {
+                let mut step_time = if decoding > 0 {
                     let out = system.step(decoding, &mut rng);
                     steps += 1;
                     if chunk_tokens > 0 {
@@ -1560,6 +1704,22 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                 } else {
                     system.prefill_cost(chunk_tokens).max(MIN_PREFILL_STEP)
                 };
+                // Fault plane per-step charge: pending repair stalls
+                // (weight transfer, KV migration) plus transient
+                // dispatch/combine retries (bounded, deterministic,
+                // fault-RNG only). Zero — and skipped entirely — with
+                // no plan installed.
+                // tidy:hot-path:begin faults-step-charge
+                let degraded = if let Some(ctl) = faultctl.as_mut() {
+                    let extra = ctl.step_extra();
+                    if extra > 0.0 {
+                        step_time += extra;
+                    }
+                    failed_gpus > 0 || ctl.fault_active()
+                } else {
+                    failed_gpus > 0
+                };
+                // tidy:hot-path:end
                 if decoding > 0 {
                     stats.push(step_time);
                     generated += decoding;
@@ -1567,7 +1727,7 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                     if ok {
                         ok_steps += 1;
                     }
-                    if failed_gpus > 0 {
+                    if degraded {
                         degraded_steps += 1;
                         if ok {
                             degraded_ok += 1;
@@ -1593,8 +1753,15 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                         // scenario's global SLO, preserving the legacy
                         // accounting bit-for-bit).
                         let target = sc.admission.tpot_slo_class[rank].unwrap_or(sc.slo.tpot);
-                        if step_time <= target {
+                        let ok = step_time <= target;
+                        if ok {
                             class_stats[rank].tokens_ok += n;
+                        }
+                        if degraded {
+                            class_stats[rank].degraded_tokens += n;
+                            if ok {
+                                class_stats[rank].degraded_tokens_ok += n;
+                            }
                         }
                     }
                 }
@@ -1652,6 +1819,7 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                 }
                 track(system.gpus(), &mut min_gpus, &mut max_gpus);
                 queue.push(ev.time + downtime, EventKind::Recovery { gpus });
+                sample_degraded(&mut degraded_since, &mut degraded_time, ev.time, true);
             }
             EventKind::Recovery { gpus } => {
                 account(&mut hours, &mut last_account, ev.time, system.gpus());
@@ -1665,10 +1833,182 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                     feasible_decisions += 1;
                 }
                 track(system.gpus(), &mut min_gpus, &mut max_gpus);
+                let still = failed_gpus > 0
+                    || faultctl.as_ref().is_some_and(|c| c.fault_active());
+                sample_degraded(&mut degraded_since, &mut degraded_time, ev.time, still);
+            }
+            EventKind::Fault { idx } => {
+                // tidy:allow(no-panic-in-lib): Fault events are only scheduled from an installed plan
+                let ctl = faultctl.as_mut().expect("Fault event without a FaultPlan");
+                let f = ctl.fault_at(idx);
+                ctl.on_fault(idx, ev.time);
+                let t_end = (ev.time + sc.decision_interval).min(sc.horizon);
+                match f.kind {
+                    FaultKind::InstanceCrash { instance } => {
+                        // The system recovers at its own granularity:
+                        // Janus re-places only the dead instance's
+                        // experts (narrowed); monolithic baselines pay a
+                        // whole-pool fail + reconfigure.
+                        account(&mut hours, &mut last_account, ev.time, system.gpus());
+                        let action = system.crash_instance(
+                            instance,
+                            ctl.policy(),
+                            demand_at(ev.time, t_end),
+                            sc.slo,
+                        );
+                        decisions += 1;
+                        reconfigurations += 1;
+                        if action.feasible {
+                            feasible_decisions += 1;
+                        }
+                        track(system.gpus(), &mut min_gpus, &mut max_gpus);
+                        ctl.note_recovery(ev.time, f.kind.label(), action, f.duration, 0, 0, 0);
+                        ctl.add_stall(action.transfer_secs);
+                    }
+                    FaultKind::AttentionHostLoss { host, migrate_kv } => {
+                        account(&mut hours, &mut last_account, ev.time, system.gpus());
+                        let n_hosts = (system.attention_hosts() as u32).max(1);
+                        let h = host % n_hosts;
+                        let (evicted, migrated, recompute, stall) = if migrate_kv {
+                            // Migrate the dead host's resident KV to
+                            // survivors at modeled transfer cost.
+                            let tokens = batch.host_kv_tokens(h, n_hosts);
+                            (0usize, tokens, 0u64, system.kv_migration_cost(tokens))
+                        } else {
+                            // Recompute path: evict the host's in-flight
+                            // requests; each re-enters admission exactly
+                            // once (`fresh: false`) with its lost
+                            // context charged as recompute prefill.
+                            evict_buf.clear();
+                            batch.evict_host(h, n_hosts, &mut evict_buf);
+                            let mut recompute = 0u64;
+                            for slot in &evict_buf {
+                                preemptions += 1;
+                                class_stats[slot.class.rank()].preempted += 1;
+                                recompute += slot.kv_tokens as u64;
+                                policy.requeue(Queued {
+                                    arrived: slot.arrived,
+                                    class: slot.class,
+                                    input_tokens: slot.input_tokens,
+                                    remaining_output: slot.remaining_output,
+                                    recompute_tokens: slot.kv_tokens,
+                                    emitted_first: slot.emitted_first,
+                                    fresh: false,
+                                });
+                            }
+                            queue_depth_max = queue_depth_max.max(policy.queue_len());
+                            (evict_buf.len(), 0u64, recompute, 0.0)
+                        };
+                        let action =
+                            system.lose_attention_host(h, demand_at(ev.time, t_end), sc.slo);
+                        decisions += 1;
+                        reconfigurations += 1;
+                        if action.feasible {
+                            feasible_decisions += 1;
+                        }
+                        track(system.gpus(), &mut min_gpus, &mut max_gpus);
+                        ctl.note_recovery(
+                            ev.time,
+                            f.kind.label(),
+                            action,
+                            f.duration,
+                            evicted,
+                            migrated,
+                            recompute,
+                        );
+                        ctl.add_stall(stall);
+                    }
+                    FaultKind::Straggler { .. } => {
+                        // Aggregate (max over open windows) flows into
+                        // the perf model, so every scheduler's decisions
+                        // and decision-cache keys see the slowdown.
+                        system.set_straggler(ctl.straggler());
+                        ctl.note_recovery(
+                            ev.time,
+                            f.kind.label(),
+                            RecoveryAction::degradation(),
+                            f.duration,
+                            0,
+                            0,
+                            0,
+                        );
+                    }
+                    FaultKind::TransientComm { .. } => {
+                        // Retry/backoff latency is charged per decode
+                        // step via `step_extra` while the window is open.
+                        ctl.note_recovery(
+                            ev.time,
+                            f.kind.label(),
+                            RecoveryAction::degradation(),
+                            f.duration,
+                            0,
+                            0,
+                            0,
+                        );
+                    }
+                }
+                let now_degraded = failed_gpus > 0 || ctl.fault_active();
+                sample_degraded(&mut degraded_since, &mut degraded_time, ev.time, now_degraded);
+            }
+            EventKind::FaultClear { idx } => {
+                // tidy:allow(no-panic-in-lib): FaultClear events are only scheduled from an installed plan
+                let ctl = faultctl.as_mut().expect("FaultClear event without a FaultPlan");
+                let f = ctl.fault_at(idx);
+                ctl.on_clear(idx, ev.time);
+                let t_end = (ev.time + sc.decision_interval).min(sc.horizon);
+                match f.kind {
+                    FaultKind::InstanceCrash { instance } => {
+                        account(&mut hours, &mut last_account, ev.time, system.gpus());
+                        let action =
+                            system.restore_instance(instance, demand_at(ev.time, t_end), sc.slo);
+                        decisions += 1;
+                        reconfigurations += 1;
+                        if action.feasible {
+                            feasible_decisions += 1;
+                        }
+                        track(system.gpus(), &mut min_gpus, &mut max_gpus);
+                        ctl.add_stall(action.transfer_secs);
+                    }
+                    FaultKind::AttentionHostLoss { host, .. } => {
+                        account(&mut hours, &mut last_account, ev.time, system.gpus());
+                        let n_hosts = (system.attention_hosts() as u32).max(1);
+                        let action = system.restore_attention_host(
+                            host % n_hosts,
+                            demand_at(ev.time, t_end),
+                            sc.slo,
+                        );
+                        decisions += 1;
+                        reconfigurations += 1;
+                        if action.feasible {
+                            feasible_decisions += 1;
+                        }
+                        track(system.gpus(), &mut min_gpus, &mut max_gpus);
+                    }
+                    FaultKind::Straggler { .. } => {
+                        // Back to the max over the remaining open
+                        // windows (1.0 when none).
+                        system.set_straggler(ctl.straggler());
+                    }
+                    FaultKind::TransientComm { .. } => {}
+                }
+                let now_degraded = failed_gpus > 0 || ctl.fault_active();
+                sample_degraded(&mut degraded_since, &mut degraded_time, ev.time, now_degraded);
             }
         }
     }
     account(&mut hours, &mut last_account, sc.horizon, system.gpus());
+    // Close any degraded window still open at the horizon and settle
+    // the controller's own accounting.
+    sample_degraded(&mut degraded_since, &mut degraded_time, sc.horizon, false);
+    let mut fault_stats = match faultctl {
+        Some(ctl) => ctl.finish(sc.horizon),
+        None => FaultStats::default(),
+    };
+    // The stats carry the union of all degraded conditions (fault-plan
+    // windows and legacy whole-pool outages), so `FaultStats::availability`
+    // agrees with the result's `availability` field — and a run with an
+    // empty plan reports the same stats as one with no plan at all.
+    fault_stats.degraded_time = degraded_time.min(sc.horizon.max(0.0));
 
     let att = |ok: usize, total: usize| {
         if total == 0 {
@@ -1698,6 +2038,14 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
         policy: policy.name(),
         preemptions,
         per_class: class_stats,
+        shed_requests: fault_stats.shed_requests,
+        availability: if sc.horizon > 0.0 {
+            (1.0 - degraded_time / sc.horizon).clamp(0.0, 1.0)
+        } else {
+            1.0
+        },
+        mttr_mean: fault_stats.mttr_mean(),
+        faults: fault_stats,
         tpot: stats,
     })
 }
@@ -1710,6 +2058,8 @@ mod tests {
     use crate::config::hardware::{autoscale_pool, paper_testbed};
     use crate::config::models::deepseek_v2;
     use crate::routing::gate::ExpertPopularity;
+    use crate::sim::faults::DegradationPolicy;
+    use crate::testing::MockServingSystem;
     use crate::workload::trace::{DiurnalTrace, TraceConfig};
 
     #[test]
@@ -2290,6 +2640,265 @@ mod tests {
             )
         };
         assert_eq!(run_once(), run_once());
+    }
+
+    #[test]
+    fn fault_schedule_validation_rejects_degenerate_scenarios() {
+        let slo = Slo::from_ms(200.0);
+        let base = FailureScenario::new(slo, 2.0, 32.0, 100.0);
+        // A second outage opening inside the first's downtime window.
+        let sc = base
+            .clone()
+            .with_failure(20.0, 4, 50.0)
+            .with_failure(60.0, 2, 10.0);
+        assert_eq!(
+            sc.validate(),
+            Err(ScenarioError::OverlappingFailures {
+                first_at: 20.0,
+                second_at: 60.0,
+            })
+        );
+        // Back-to-back outages (restore exactly at the next failure) are
+        // fine — the windows are disjoint.
+        let sc = base
+            .clone()
+            .with_failure(20.0, 4, 30.0)
+            .with_failure(50.0, 2, 10.0);
+        assert!(sc.validate().is_ok());
+        // A failure at or beyond the horizon could never fire.
+        let sc = base.clone().with_failure(100.0, 4, 10.0);
+        assert_eq!(
+            sc.validate(),
+            Err(ScenarioError::FailureBeyondHorizon {
+                at: 100.0,
+                horizon: 100.0,
+            })
+        );
+        // Zero downtime: the restore would tie with its own failure.
+        let sc = base.clone().with_failure(20.0, 4, 0.0);
+        assert_eq!(
+            sc.validate(),
+            Err(ScenarioError::RestoreNotAfterFailure { at: 20.0 })
+        );
+        // Degenerate fault plans surface descriptively, not as panics.
+        let sc = base
+            .clone()
+            .with_faults(FaultPlan::new().with_instance_crash(-1.0, 10.0, 0));
+        assert!(matches!(
+            sc.validate(),
+            Err(ScenarioError::InvalidFaultPlan(_))
+        ));
+        let sc = base
+            .clone()
+            .with_faults(FaultPlan::new().with_straggler(5.0, 10.0, 0.25));
+        let msg = sc.validate().unwrap_err().to_string();
+        assert!(msg.contains("straggler"), "{msg}");
+        // A well-formed plan passes.
+        let sc = base.with_faults(FaultPlan::new().with_instance_crash(10.0, 30.0, 1));
+        assert!(sc.validate().is_ok());
+    }
+
+    #[test]
+    fn empty_fault_plan_is_bit_identical_to_no_plan() {
+        // Installing a FaultPlan that schedules nothing must not perturb
+        // a single bit of the run — no RNG draws, no extra step work.
+        let mut base = FailureScenario::new(Slo::from_ms(200.0), 3.0, 48.0, 300.0)
+            .with_failure(60.0, 12, 120.0);
+        base.admission = AdmissionConfig::fifo();
+        base.scaling = ScalingMode::Reactive;
+        let run_with = |faults: Option<FaultPlan>| {
+            let mut sc = base.clone();
+            sc.faults = faults;
+            let mut sys = janus(16, 21);
+            failure_injection(&mut sys, &sc, 33).expect("valid scenario")
+        };
+        let a = run_with(None);
+        let b = run_with(Some(FaultPlan::new().with_policy(DegradationPolicy::Off)));
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.admitted_requests, b.admitted_requests);
+        assert_eq!(a.completed_requests, b.completed_requests);
+        assert_eq!(a.rejected_requests, b.rejected_requests);
+        assert_eq!(a.generated_tokens, b.generated_tokens);
+        assert_eq!(a.preemptions, b.preemptions);
+        assert_eq!(a.shed_requests, b.shed_requests);
+        assert_eq!(a.tpot.mean().to_bits(), b.tpot.mean().to_bits());
+        assert_eq!(a.tpot.p99().to_bits(), b.tpot.p99().to_bits());
+        assert_eq!(a.gpu_hours.to_bits(), b.gpu_hours.to_bits());
+        assert_eq!(a.slo_attainment.to_bits(), b.slo_attainment.to_bits());
+        assert_eq!(a.availability.to_bits(), b.availability.to_bits());
+        assert_eq!(a.mttr_mean.to_bits(), b.mttr_mean.to_bits());
+        assert_eq!(a.faults, b.faults);
+        assert!(a.availability < 1.0, "the legacy outage window must count");
+    }
+
+    #[test]
+    fn instance_crash_is_narrowed_for_janus_whole_pool_for_baselines() {
+        // The disaggregation payoff under faults: Janus re-places only
+        // the dead instance's experts (repairing in the weight-transfer
+        // time), while the monolithic baselines pay a whole-pool
+        // reconfiguration for the entire outage window.
+        let model = deepseek_v2();
+        let hw = paper_testbed();
+        let pop = ExpertPopularity::Uniform;
+        let plan = FaultPlan::new()
+            .with_instance_crash(60.0, 120.0, 0)
+            .with_policy(DegradationPolicy::Off);
+        let mut sc =
+            FailureScenario::new(Slo::from_ms(200.0), 2.0, 32.0, 300.0).with_faults(plan);
+        sc.admission = AdmissionConfig::fifo();
+        sc.scaling = ScalingMode::Reactive;
+
+        let mut j = JanusSystem::build(model.clone(), hw.clone(), &pop, 16, 1);
+        let r = failure_injection(&mut j, &sc, 9).expect("valid scenario");
+        assert_eq!(r.faults.events.len(), 1, "one fault, one event record");
+        let e = &r.faults.events[0];
+        assert!(e.narrowed, "Janus must repair only the dead instance");
+        assert!(
+            e.mttr < 120.0,
+            "narrowed MTTR is the transfer time, not the window: {}",
+            e.mttr
+        );
+        assert_eq!(r.reconfigurations, 2, "crash + restore");
+        assert_eq!(r.mttr_mean.to_bits(), e.mttr.to_bits());
+
+        let mut s = SgLang::build(model.clone(), hw.clone(), &pop, 2);
+        let mut m = MegaScaleInfer::build(model.clone(), hw.clone(), &pop, 16, 3);
+        let mut x = XDeepServe::build(model, hw, &pop, 32, 4);
+        let baselines: Vec<&mut dyn ServingSystem> = vec![&mut s, &mut m, &mut x];
+        for sys in baselines {
+            let r = failure_injection(sys, &sc, 9).expect("valid scenario");
+            assert_eq!(r.faults.events.len(), 1, "{}", r.system);
+            let e = &r.faults.events[0];
+            assert!(
+                !e.narrowed,
+                "{} has no per-instance placement to narrow with",
+                r.system
+            );
+            assert_eq!(e.moved_experts, 0, "{}", r.system);
+            assert_eq!(
+                e.mttr, 120.0,
+                "{}: whole-pool MTTR is the full window",
+                r.system
+            );
+        }
+    }
+
+    #[test]
+    fn replica_policy_beats_shedding_on_degraded_interactive_attainment() {
+        // Same straggler window, same arrival stream: `shed` refuses
+        // fresh arrivals inside the window (their would-be tokens charge
+        // the degraded denominator), `replica` keeps serving everything.
+        // The mock's 10 ms steps always meet the 200 ms target, so the
+        // only attainment loss is the shed tokens — replica must win
+        // strictly on interactive-class degraded attainment.
+        let run_with = |policy: DegradationPolicy| {
+            let plan = FaultPlan::new()
+                .with_straggler(20.0, 90.0, 3.0)
+                .with_policy(policy);
+            let mut sc =
+                FailureScenario::new(Slo::from_ms(200.0), 8.0, 32.0, 120.0).with_faults(plan);
+            sc.admission = AdmissionConfig::fifo();
+            sc.scaling = ScalingMode::Reactive;
+            let mut sys = MockServingSystem::new(4, 64, 0.01);
+            failure_injection(&mut sys, &sc, 7).expect("valid scenario")
+        };
+        let shed = run_with(DegradationPolicy::Shed);
+        let replica = run_with(DegradationPolicy::Replica);
+        assert!(shed.shed_requests > 0, "no arrivals shed inside the window");
+        assert_eq!(replica.shed_requests, 0);
+        assert!(shed.faults.lost_tokens > 0);
+        let att = |r: &FailureResult| {
+            r.per_class[Priority::Interactive.rank()]
+                .degraded_token_attainment()
+                .expect("degraded window saw interactive traffic")
+        };
+        assert_eq!(att(&replica), 1.0);
+        assert!(
+            att(&shed) < att(&replica),
+            "shed {} must strictly trail replica {}",
+            att(&shed),
+            att(&replica)
+        );
+        // Both runs saw the same single fault; shedding cannot shorten it.
+        assert_eq!(shed.faults.events.len(), 1);
+        assert_eq!(replica.faults.events.len(), 1);
+        assert!(replica.availability < 1.0);
+    }
+
+    #[test]
+    fn host_loss_evictions_requeue_exactly_once() {
+        // Drain-path audit: every in-flight request evicted by an
+        // attention-host loss re-enters admission exactly once and
+        // completes exactly once. Arrivals stop at t = 80 s so both runs
+        // fully drain well before the 150 s horizon, making the
+        // admitted == completed conservation exact.
+        let envelope: Vec<f64> = (0..150).map(|i| if i < 80 { 12.0 } else { 0.0 }).collect();
+        let trace = DiurnalTrace {
+            config: TraceConfig {
+                hours: 150.0 / 3600.0,
+                mean_rate: 6.4,
+                peak_to_mean: 1.0,
+                burst_cv2: 1.0,
+                step: 1.0,
+                seed: 0,
+            },
+            envelope,
+        };
+        let mut base = FailureScenario::new(Slo::from_ms(200.0), 12.0, 32.0, 150.0);
+        base.admission = AdmissionConfig::fifo();
+        base.scaling = ScalingMode::Reactive;
+        base.queue_capacity = 10_000;
+        base.rate_trace = Some(trace);
+        let mut faulty = base.clone();
+        faulty.faults = Some(
+            FaultPlan::new()
+                .with_attention_host_loss(40.0, 30.0, 1, false)
+                .with_policy(DegradationPolicy::Off),
+        );
+        let run = |sc: &FailureScenario| {
+            let mut sys = MockServingSystem::new(2, 64, 0.05);
+            failure_injection(&mut sys, sc, 13).expect("valid scenario")
+        };
+        let clean = run(&base);
+        let fault = run(&faulty);
+        assert_eq!(clean.preemptions, 0);
+        assert_eq!(clean.rejected_requests, 0);
+        assert_eq!(fault.rejected_requests, 0);
+        assert!(fault.preemptions > 0, "host loss evicted nothing");
+        assert_eq!(fault.faults.events.len(), 1);
+        // FIFO never preempts on its own, so every preemption is an
+        // eviction from this one event.
+        assert_eq!(fault.faults.events[0].evicted, fault.preemptions);
+        assert!(fault.faults.recompute_tokens > 0);
+        assert_eq!(
+            fault.faults.events[0].recompute_tokens,
+            fault.faults.recompute_tokens
+        );
+        assert_eq!(fault.faults.migrated_kv_tokens, 0, "recompute path");
+        // Exactly-once: both runs drain completely, and the fault run
+        // admits and completes the same request population — evictions
+        // are neither dropped nor double-counted.
+        assert_eq!(clean.admitted_requests, clean.completed_requests);
+        assert_eq!(fault.admitted_requests, fault.completed_requests);
+        assert_eq!(fault.admitted_requests, clean.admitted_requests);
+    }
+
+    #[test]
+    fn kv_migration_charges_cost_without_evictions() {
+        // The migrate-KV alternative: no preemptions, tokens move at a
+        // modeled stall instead.
+        let plan = FaultPlan::new()
+            .with_attention_host_loss(40.0, 30.0, 0, true)
+            .with_policy(DegradationPolicy::Off);
+        let mut sc =
+            FailureScenario::new(Slo::from_ms(200.0), 12.0, 32.0, 120.0).with_faults(plan);
+        sc.admission = AdmissionConfig::fifo();
+        sc.scaling = ScalingMode::Reactive;
+        let mut sys = MockServingSystem::new(2, 64, 0.05);
+        let r = failure_injection(&mut sys, &sc, 13).expect("valid scenario");
+        assert_eq!(r.preemptions, 0, "migration keeps the batch intact");
+        assert!(r.faults.migrated_kv_tokens > 0, "no resident KV migrated");
+        assert_eq!(r.faults.recompute_tokens, 0);
     }
 
     #[test]

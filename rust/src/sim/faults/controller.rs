@@ -1,0 +1,390 @@
+//! Run-time fault state: which windows are open, the aggregate
+//! straggler/transient effect, and per-event accounting.
+
+use crate::util::rng::Rng;
+
+use super::plan::{FaultKind, FaultPlan, RetryConfig, ScriptedFault};
+use super::stats::{FaultEvent, FaultStats};
+use super::{DegradationPolicy, FAULT_STREAM_SALT};
+
+/// What a `ServingSystem` did to recover from one fault.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RecoveryAction {
+    /// True when the system repaired only the fault's blast radius
+    /// (placement surgery) instead of a whole-pool reconfiguration.
+    pub narrowed: bool,
+    /// Whether the post-recovery state is feasible (SLO-solvable and,
+    /// for narrowed recoveries, with no expert dropped).
+    pub feasible: bool,
+    /// Experts re-seated onto surviving instances.
+    pub moved_experts: usize,
+    /// Experts dropped (no surviving replica and no free slot).
+    pub dropped_experts: usize,
+    /// Modeled weight/KV transfer time of the repair, seconds.
+    pub transfer_secs: f64,
+}
+
+impl RecoveryAction {
+    /// Legacy whole-pool `fail_gpus` + `reconfigure_for_pool` recovery.
+    pub fn whole_pool(feasible: bool) -> Self {
+        RecoveryAction {
+            narrowed: false,
+            feasible,
+            moved_experts: 0,
+            dropped_experts: 0,
+            transfer_secs: 0.0,
+        }
+    }
+
+    /// Narrowed recovery that re-seated `moved` experts (and dropped
+    /// the ones with no surviving replica and no free slot).
+    pub fn expert_replacement(moved: usize, dropped: usize, transfer_secs: f64) -> Self {
+        RecoveryAction {
+            narrowed: true,
+            feasible: dropped == 0,
+            moved_experts: moved,
+            dropped_experts: dropped,
+            transfer_secs,
+        }
+    }
+
+    /// Narrowed recovery that changed no placement (pure degradation:
+    /// straggler, transient window, attention-side bookkeeping).
+    pub fn degradation() -> Self {
+        RecoveryAction {
+            narrowed: true,
+            feasible: true,
+            moved_experts: 0,
+            dropped_experts: 0,
+            transfer_secs: 0.0,
+        }
+    }
+}
+
+/// Per-run fault state machine. Owns the materialized fault timeline,
+/// the dedicated fault RNG, and the aggregate view the engine reads on
+/// every decode step (`straggler()`, `step_extra()`, `shedding()`).
+#[derive(Clone, Debug)]
+pub struct FaultController {
+    timeline: Vec<ScriptedFault>,
+    active: Vec<bool>,
+    policy: DegradationPolicy,
+    retry: RetryConfig,
+    rng: Rng,
+    /// Max slowdown factor over the active straggler windows (1.0 when
+    /// none is open).
+    straggler: f64,
+    /// Max per-attempt failure probability over the active transient
+    /// windows (0.0 when none is open).
+    transient_prob: f64,
+    /// Pending repair stall (KV migration, weight transfer) charged to
+    /// the next decode step.
+    stall: f64,
+    active_count: usize,
+    degraded_since: Option<f64>,
+    /// Aggregate accounting, surfaced via `FailureResult`.
+    pub stats: FaultStats,
+}
+
+impl FaultController {
+    /// Materialize `plan` over `[0, horizon)`. The RNG is salted with
+    /// [`FAULT_STREAM_SALT`] so fault draws never perturb the arrival,
+    /// class, or decode streams.
+    pub fn new(plan: &FaultPlan, seed: u64, horizon: f64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed ^ FAULT_STREAM_SALT);
+        let mut timeline = plan.scripted.clone();
+        if let Some(s) = &plan.stochastic {
+            s.materialize(&mut rng, horizon, &mut timeline);
+        }
+        let active = vec![false; timeline.len()];
+        FaultController {
+            timeline,
+            active,
+            policy: plan.policy.unwrap_or_else(DegradationPolicy::from_env),
+            retry: plan.retry,
+            rng,
+            straggler: 1.0,
+            transient_prob: 0.0,
+            stall: 0.0,
+            active_count: 0,
+            degraded_since: None,
+            stats: FaultStats::default(),
+        }
+    }
+
+    /// The materialized fault windows (scripted then stochastic), in
+    /// plan order; the engine schedules one `Fault`/`FaultClear` event
+    /// pair per entry by index.
+    pub fn timeline(&self) -> &[ScriptedFault] {
+        &self.timeline
+    }
+
+    pub fn fault_at(&self, idx: usize) -> ScriptedFault {
+        self.timeline[idx]
+    }
+
+    pub fn policy(&self) -> DegradationPolicy {
+        self.policy
+    }
+
+    pub fn retry(&self) -> RetryConfig {
+        self.retry
+    }
+
+    /// Open fault window `idx` at time `now`.
+    pub fn on_fault(&mut self, idx: usize, now: f64) {
+        if self.active[idx] {
+            return;
+        }
+        self.active[idx] = true;
+        self.active_count += 1;
+        if self.active_count == 1 {
+            self.degraded_since = Some(now);
+        }
+        self.recompute_aggregates();
+    }
+
+    /// Close fault window `idx` at time `now`.
+    pub fn on_clear(&mut self, idx: usize, now: f64) {
+        if !self.active[idx] {
+            return;
+        }
+        self.active[idx] = false;
+        self.active_count -= 1;
+        if self.active_count == 0 {
+            if let Some(since) = self.degraded_since.take() {
+                self.stats.degraded_time += (now - since).max(0.0);
+            }
+        }
+        self.recompute_aggregates();
+    }
+
+    fn recompute_aggregates(&mut self) {
+        let mut straggler = 1.0f64;
+        let mut prob = 0.0f64;
+        for (f, active) in self.timeline.iter().zip(&self.active) {
+            if !active {
+                continue;
+            }
+            match f.kind {
+                FaultKind::Straggler { factor } => straggler = straggler.max(factor),
+                FaultKind::TransientComm { fail_prob } => prob = prob.max(fail_prob),
+                FaultKind::InstanceCrash { .. } | FaultKind::AttentionHostLoss { .. } => {}
+            }
+        }
+        self.straggler = straggler;
+        self.transient_prob = prob;
+    }
+
+    /// Record the recovery the serving system performed for one fault
+    /// event. `duration` is the fault's full window length — the MTTR
+    /// of a whole-pool recovery; narrowed recoveries repair in their
+    /// transfer time.
+    #[allow(clippy::too_many_arguments)]
+    pub fn note_recovery(
+        &mut self,
+        at: f64,
+        kind: &'static str,
+        action: RecoveryAction,
+        duration: f64,
+        evicted: usize,
+        migrated_kv_tokens: u64,
+        recompute_tokens: u64,
+    ) {
+        self.stats.migrated_kv_tokens += migrated_kv_tokens;
+        self.stats.recompute_tokens += recompute_tokens;
+        self.stats.events.push(FaultEvent {
+            at,
+            kind,
+            narrowed: action.narrowed,
+            feasible: action.feasible,
+            moved_experts: action.moved_experts,
+            dropped_experts: action.dropped_experts,
+            transfer_secs: action.transfer_secs,
+            mttr: if action.narrowed {
+                action.transfer_secs
+            } else {
+                duration
+            },
+            evicted,
+            migrated_kv_tokens,
+            recompute_tokens,
+        });
+    }
+
+    /// Charge a repair stall (weight transfer, KV migration) against
+    /// the next decode step.
+    pub fn add_stall(&mut self, secs: f64) {
+        if secs > 0.0 {
+            self.stall += secs;
+        }
+    }
+
+    /// Whether fresh arrivals are shed right now (`shed` policy inside
+    /// any open fault window).
+    pub fn shedding(&self) -> bool {
+        self.policy == DegradationPolicy::Shed && self.active_count > 0
+    }
+
+    /// Whether any fault window is open (the degraded condition the
+    /// engine folds into per-class degraded-window accounting).
+    pub fn fault_active(&self) -> bool {
+        self.active_count > 0
+    }
+
+    /// Current aggregate slowdown factor for the expert side.
+    pub fn straggler(&self) -> f64 {
+        self.straggler
+    }
+
+    /// Extra per-step latency: pending repair stalls plus transient
+    /// dispatch/combine retries (bounded deterministic retry, timeout +
+    /// exponential backoff per failed attempt). Called once per decode
+    /// step only while a plan is installed; performs RNG draws only
+    /// inside transient windows.
+    pub fn step_extra(&mut self) -> f64 {
+        // tidy:hot-path:begin faults-step-extra
+        let mut extra = self.stall;
+        self.stall = 0.0;
+        if self.transient_prob > 0.0 {
+            let mut backoff = self.retry.backoff;
+            let mut attempt = 0u32;
+            while attempt < self.retry.max_retries && self.rng.f64() < self.transient_prob {
+                let penalty = self.retry.timeout + backoff;
+                extra += penalty;
+                self.stats.retry_rounds += 1;
+                self.stats.retry_latency += penalty;
+                backoff *= 2.0;
+                attempt += 1;
+            }
+        }
+        extra
+        // tidy:hot-path:end
+    }
+
+    /// Close any window still open at the horizon and hand the
+    /// accounting back.
+    pub fn finish(mut self, horizon: f64) -> FaultStats {
+        if let Some(since) = self.degraded_since.take() {
+            self.stats.degraded_time += (horizon - since).max(0.0);
+        }
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::plan::StochasticFaults;
+    use super::*;
+
+    #[test]
+    fn recovery_action_ctors() {
+        let wp = RecoveryAction::whole_pool(true);
+        assert!(!wp.narrowed && wp.feasible);
+        let er = RecoveryAction::expert_replacement(5, 0, 0.25);
+        assert!(er.narrowed && er.feasible && er.moved_experts == 5);
+        let dropped = RecoveryAction::expert_replacement(3, 2, 0.1);
+        assert!(!dropped.feasible, "dropped experts make the event infeasible");
+        assert!(RecoveryAction::degradation().narrowed);
+    }
+
+    #[test]
+    fn windows_track_degraded_time_and_aggregates() {
+        let plan = FaultPlan::new()
+            .with_straggler(10.0, 20.0, 2.0)
+            .with_straggler(15.0, 10.0, 3.0)
+            .with_transient_comm(40.0, 5.0, 0.5)
+            .with_policy(DegradationPolicy::Shed);
+        let mut ctl = FaultController::new(&plan, 7, 100.0);
+        assert_eq!(ctl.timeline().len(), 3);
+        assert_eq!(ctl.straggler(), 1.0);
+        assert!(!ctl.fault_active() && !ctl.shedding());
+
+        ctl.on_fault(0, 10.0);
+        assert!(ctl.fault_active() && ctl.shedding());
+        assert_eq!(ctl.straggler(), 2.0);
+        ctl.on_fault(1, 15.0);
+        assert_eq!(ctl.straggler(), 3.0, "max over open windows");
+        ctl.on_clear(1, 25.0);
+        assert_eq!(ctl.straggler(), 2.0);
+        ctl.on_clear(0, 30.0);
+        assert_eq!(ctl.straggler(), 1.0);
+        assert!(!ctl.fault_active());
+
+        ctl.on_fault(2, 40.0);
+        let stats = ctl.finish(100.0);
+        // [10, 30) closed + [40, 100) open at horizon.
+        assert!((stats.degraded_time - 80.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn step_extra_drains_stall_and_bounds_retries() {
+        let plan = FaultPlan::new().with_transient_comm(0.0, 10.0, 1.0);
+        let mut ctl = FaultController::new(&plan, 11, 100.0);
+        ctl.add_stall(0.5);
+        // Window closed: stall drains, no retry draws.
+        assert!((ctl.step_extra() - 0.5).abs() < 1e-12);
+        assert_eq!(ctl.step_extra(), 0.0);
+        assert_eq!(ctl.stats.retry_rounds, 0);
+
+        // fail_prob = 1.0 ⇒ exactly max_retries failures per step:
+        // (timeout+b) + (timeout+2b) + (timeout+4b).
+        ctl.on_fault(0, 0.0);
+        let r = ctl.retry();
+        let expect = 3.0 * r.timeout + 7.0 * r.backoff;
+        assert!((ctl.step_extra() - expect).abs() < 1e-12);
+        assert_eq!(ctl.stats.retry_rounds, u64::from(r.max_retries));
+        assert!((ctl.stats.retry_latency - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn same_seed_same_timeline_and_draws() {
+        let plan = FaultPlan::new()
+            .with_instance_crash(5.0, 30.0, 1)
+            .with_stochastic(StochasticFaults {
+                rate_per_hour: 720.0,
+                mean_duration: 10.0,
+                kinds: vec![FaultKind::TransientComm { fail_prob: 0.5 }],
+            })
+            .with_policy(DegradationPolicy::Off);
+        let mut a = FaultController::new(&plan, 42, 600.0);
+        let mut b = FaultController::new(&plan, 42, 600.0);
+        assert_eq!(a.timeline(), b.timeline());
+        assert!(a.timeline().len() > 1, "stochastic stream materialized");
+        a.on_fault(1, a.fault_at(1).at);
+        b.on_fault(1, b.fault_at(1).at);
+        for _ in 0..100 {
+            assert_eq!(a.step_extra().to_bits(), b.step_extra().to_bits());
+        }
+    }
+
+    #[test]
+    fn note_recovery_accumulates_stats() {
+        let plan = FaultPlan::new().with_instance_crash(1.0, 60.0, 0);
+        let mut ctl = FaultController::new(&plan, 3, 100.0);
+        ctl.note_recovery(
+            1.0,
+            "instance-crash",
+            RecoveryAction::expert_replacement(4, 0, 0.2),
+            60.0,
+            2,
+            128,
+            64,
+        );
+        ctl.note_recovery(
+            1.0,
+            "attention-host-loss",
+            RecoveryAction::whole_pool(true),
+            60.0,
+            0,
+            0,
+            0,
+        );
+        assert_eq!(ctl.stats.events.len(), 2);
+        assert!((ctl.stats.events[0].mttr - 0.2).abs() < 1e-12, "narrowed mttr");
+        assert!((ctl.stats.events[1].mttr - 60.0).abs() < 1e-12, "whole-pool mttr");
+        assert_eq!(ctl.stats.migrated_kv_tokens, 128);
+        assert_eq!(ctl.stats.recompute_tokens, 64);
+        assert!((ctl.stats.mttr_mean() - 30.1).abs() < 1e-12);
+    }
+}

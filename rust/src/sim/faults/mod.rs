@@ -1,0 +1,124 @@
+//! `sim::faults` — the fine-grained fault plane of the failure scenario.
+//!
+//! [`super::engine::FailureScenario`]'s legacy schedule kills and
+//! restores whole anonymous GPU counts. Disaggregation changes the
+//! blast radius — when one MoE instance dies only its hosted experts
+//! must re-place, and when an attention host dies only its KV caches
+//! are at stake — so this module adds a deterministic fault plane with
+//! four fault kinds ([`FaultKind`]):
+//!
+//! - **instance crash** — a *named* MoE instance dies. Systems with
+//!   per-instance expert placement re-place only the dead instance's
+//!   experts (transfer cost charged through `comm::cost`); everyone
+//!   else falls back to the legacy whole-pool
+//!   `fail_gpus`/`reconfigure_for_pool` path.
+//! - **attention-host loss** — in-flight requests on the dead host
+//!   either migrate their KV at a modeled cost (charged as a stall on
+//!   the next decode step) or re-enter admission as recompute prefill,
+//!   reusing the KV-aware preemption accounting.
+//! - **degraded GPU / straggler** — a per-GPU slowdown factor flowing
+//!   into `perfmodel::tpot`'s expert term, so AEBS and the baseline
+//!   schedulers all see the straggler.
+//! - **transient dispatch/combine faults** — bounded deterministic
+//!   retry with timeout + exponential backoff, charged as extra comm
+//!   latency on every decode step inside the fault window.
+//!
+//! A [`FaultPlan`] composes scripted faults with an optional
+//! seeded-stochastic stream. The stochastic stream (and the transient
+//! retry draws) run on a dedicated RNG salted with
+//! [`FAULT_STREAM_SALT`], so a scenario without a plan performs zero
+//! fault-RNG draws and stays bit-identical to the legacy path.
+//!
+//! Graceful degradation is selected by [`DegradationPolicy`]
+//! (`JANUS_FAULTS`): `off` re-places every lost expert and never
+//! touches admission; `shed` additionally sheds fresh arrivals during
+//! each re-placement window; `replica` routes around the loss — only
+//! sole-replica experts re-place (and when no replica survives and no
+//! slot is free, the expert is dropped and the event reported
+//! infeasible).
+
+pub mod controller;
+pub mod plan;
+pub mod stats;
+
+pub use controller::{FaultController, RecoveryAction};
+pub use plan::{FaultKind, FaultPlan, RetryConfig, ScriptedFault, StochasticFaults};
+pub use stats::{FaultEvent, FaultStats};
+
+/// Environment variable selecting the default degradation policy for
+/// fault plans that do not pin one (`off` | `shed` | `replica`).
+pub const FAULTS_ENV: &str = "JANUS_FAULTS";
+
+/// Seed salt for the dedicated fault RNG ("FAULTRNG" bytes): the
+/// stochastic fault stream and transient-retry draws live on their own
+/// stream, so runs without a [`FaultPlan`] draw nothing from it and
+/// every other stream (arrivals, classes, decode) is untouched by the
+/// fault plane.
+pub const FAULT_STREAM_SALT: u64 = 0x4641_554C_5452_4E47;
+
+/// How the serving stack degrades while a fault is being repaired.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DegradationPolicy {
+    /// Full re-placement, no admission changes (the baseline).
+    Off,
+    /// Shed fresh arrivals during each re-placement window, so the
+    /// surviving pool only serves already-admitted work.
+    Shed,
+    /// Route to surviving replicas: only sole-replica experts re-place,
+    /// shrinking the repair transfer (and its degraded window).
+    Replica,
+}
+
+impl DegradationPolicy {
+    pub const ALL: [DegradationPolicy; 3] = [
+        DegradationPolicy::Off,
+        DegradationPolicy::Shed,
+        DegradationPolicy::Replica,
+    ];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "none" => Some(DegradationPolicy::Off),
+            "shed" => Some(DegradationPolicy::Shed),
+            "replica" | "route" => Some(DegradationPolicy::Replica),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DegradationPolicy::Off => "off",
+            DegradationPolicy::Shed => "shed",
+            DegradationPolicy::Replica => "replica",
+        }
+    }
+
+    /// Default for plans that do not pin a policy: `JANUS_FAULTS`
+    /// (unset/unparsable ⇒ `Off`). Golden surfaces pin a policy
+    /// explicitly instead of resolving the environment.
+    pub fn from_env() -> Self {
+        std::env::var(FAULTS_ENV)
+            .ok()
+            .and_then(|s| Self::parse(&s))
+            .unwrap_or(DegradationPolicy::Off)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parses_all_spellings() {
+        assert_eq!(DegradationPolicy::parse("off"), Some(DegradationPolicy::Off));
+        assert_eq!(DegradationPolicy::parse("SHED"), Some(DegradationPolicy::Shed));
+        assert_eq!(
+            DegradationPolicy::parse(" replica "),
+            Some(DegradationPolicy::Replica)
+        );
+        assert_eq!(DegradationPolicy::parse("nope"), None);
+        for p in DegradationPolicy::ALL {
+            assert_eq!(DegradationPolicy::parse(p.name()), Some(p));
+        }
+    }
+}

@@ -1,0 +1,319 @@
+//! Fault-plan configuration: scripted faults, the seeded-stochastic
+//! stream, and transient-retry tuning.
+
+use crate::util::rng::Rng;
+
+use super::DegradationPolicy;
+
+/// One kind of fine-grained fault.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// A named MoE instance dies; only its hosted experts need a new
+    /// home (systems without per-instance placement fall back to the
+    /// whole-pool path).
+    InstanceCrash { instance: u32 },
+    /// An attention host dies. `migrate_kv` moves the host's resident
+    /// KV to survivors at a modeled transfer cost; otherwise every
+    /// in-flight request on the host re-enters admission as recompute
+    /// prefill (the KV-aware preemption accounting).
+    AttentionHostLoss { host: u32, migrate_kv: bool },
+    /// A degraded GPU slows the expert side by `factor` (≥ 1) for the
+    /// fault's duration.
+    Straggler { factor: f64 },
+    /// Transient dispatch/combine faults: each decode step inside the
+    /// window retries with probability `fail_prob` per attempt, paying
+    /// timeout + exponential backoff as extra comm latency.
+    TransientComm { fail_prob: f64 },
+}
+
+impl FaultKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            FaultKind::InstanceCrash { .. } => "instance-crash",
+            FaultKind::AttentionHostLoss { .. } => "attention-host-loss",
+            FaultKind::Straggler { .. } => "straggler",
+            FaultKind::TransientComm { .. } => "transient-comm",
+        }
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        match *self {
+            FaultKind::Straggler { factor } => {
+                if !factor.is_finite() || factor < 1.0 {
+                    return Err(format!(
+                        "straggler factor must be finite and >= 1, got {factor}"
+                    ));
+                }
+            }
+            FaultKind::TransientComm { fail_prob } => {
+                if !fail_prob.is_finite() || !(0.0..=1.0).contains(&fail_prob) || fail_prob == 0.0 {
+                    return Err(format!(
+                        "transient fail_prob must be in (0, 1], got {fail_prob}"
+                    ));
+                }
+            }
+            FaultKind::InstanceCrash { .. } | FaultKind::AttentionHostLoss { .. } => {}
+        }
+        Ok(())
+    }
+}
+
+/// One scheduled fault window.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScriptedFault {
+    /// Fault time, seconds from scenario start.
+    pub at: f64,
+    /// Window length, seconds (the fault clears at `at + duration`).
+    pub duration: f64,
+    pub kind: FaultKind,
+}
+
+impl ScriptedFault {
+    fn validate(&self, horizon: f64) -> Result<(), String> {
+        if !self.at.is_finite() || self.at < 0.0 {
+            return Err(format!(
+                "fault time must be finite and non-negative, got {}s",
+                self.at
+            ));
+        }
+        if !self.duration.is_finite() || self.duration <= 0.0 {
+            return Err(format!(
+                "fault duration must be positive finite seconds, got {}s",
+                self.duration
+            ));
+        }
+        if self.at >= horizon {
+            return Err(format!(
+                "fault at {}s lies beyond the {horizon}s horizon",
+                self.at
+            ));
+        }
+        self.kind.validate()
+    }
+}
+
+/// A seeded-stochastic fault stream: Poisson fault arrivals at
+/// `rate_per_hour`, exponential window lengths of mean `mean_duration`
+/// seconds, cycling through `kinds`. Materialized once per run on the
+/// dedicated fault RNG stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StochasticFaults {
+    pub rate_per_hour: f64,
+    pub mean_duration: f64,
+    pub kinds: Vec<FaultKind>,
+}
+
+impl StochasticFaults {
+    fn validate(&self) -> Result<(), String> {
+        if !self.rate_per_hour.is_finite() || self.rate_per_hour <= 0.0 {
+            return Err(format!(
+                "stochastic rate_per_hour must be positive finite, got {}",
+                self.rate_per_hour
+            ));
+        }
+        if !self.mean_duration.is_finite() || self.mean_duration <= 0.0 {
+            return Err(format!(
+                "stochastic mean_duration must be positive finite seconds, got {}",
+                self.mean_duration
+            ));
+        }
+        if self.kinds.is_empty() {
+            return Err("stochastic stream needs at least one fault kind".to_string());
+        }
+        for k in &self.kinds {
+            k.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Draw the stream over `[0, horizon)` into `out` (exponential
+    /// inter-arrivals, exponential durations, kinds cycling in order).
+    pub fn materialize(&self, rng: &mut Rng, horizon: f64, out: &mut Vec<ScriptedFault>) {
+        let rate = self.rate_per_hour / 3600.0;
+        let mut t = rng.exponential(rate);
+        let mut next_kind = 0usize;
+        while t < horizon {
+            let duration = rng.exponential(1.0 / self.mean_duration).max(1e-3);
+            out.push(ScriptedFault {
+                at: t,
+                duration,
+                kind: self.kinds[next_kind % self.kinds.len()],
+            });
+            next_kind += 1;
+            t += rng.exponential(rate);
+        }
+    }
+}
+
+/// Bounded deterministic retry for transient dispatch/combine faults.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryConfig {
+    /// Retry attempts per decode step inside a transient window.
+    pub max_retries: u32,
+    /// Per-failed-attempt timeout charged as comm latency, seconds.
+    pub timeout: f64,
+    /// First backoff delay, seconds; doubles per failed attempt.
+    pub backoff: f64,
+}
+
+impl Default for RetryConfig {
+    fn default() -> Self {
+        RetryConfig {
+            max_retries: 3,
+            timeout: 2e-3,
+            backoff: 1e-3,
+        }
+    }
+}
+
+impl RetryConfig {
+    fn validate(&self) -> Result<(), String> {
+        if !self.timeout.is_finite() || self.timeout < 0.0 {
+            return Err(format!(
+                "retry timeout must be finite non-negative seconds, got {}",
+                self.timeout
+            ));
+        }
+        if !self.backoff.is_finite() || self.backoff < 0.0 {
+            return Err(format!(
+                "retry backoff must be finite non-negative seconds, got {}",
+                self.backoff
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// The composed fault plane of one failure-injection run.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct FaultPlan {
+    /// Scripted fault windows.
+    pub scripted: Vec<ScriptedFault>,
+    /// Optional seeded-stochastic stream merged on top.
+    pub stochastic: Option<StochasticFaults>,
+    /// Degradation policy; `None` resolves `JANUS_FAULTS` at run time
+    /// (golden surfaces pin one explicitly).
+    pub policy: Option<DegradationPolicy>,
+    /// Transient-retry tuning.
+    pub retry: RetryConfig,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Whether the plan schedules nothing at all (such a plan must run
+    /// bit-identically to no plan).
+    pub fn is_empty(&self) -> bool {
+        self.scripted.is_empty() && self.stochastic.is_none()
+    }
+
+    pub fn with_policy(mut self, policy: DegradationPolicy) -> Self {
+        self.policy = Some(policy);
+        self
+    }
+
+    pub fn with_fault(mut self, at: f64, duration: f64, kind: FaultKind) -> Self {
+        self.scripted.push(ScriptedFault { at, duration, kind });
+        self
+    }
+
+    pub fn with_instance_crash(self, at: f64, duration: f64, instance: u32) -> Self {
+        self.with_fault(at, duration, FaultKind::InstanceCrash { instance })
+    }
+
+    pub fn with_attention_host_loss(
+        self,
+        at: f64,
+        duration: f64,
+        host: u32,
+        migrate_kv: bool,
+    ) -> Self {
+        self.with_fault(at, duration, FaultKind::AttentionHostLoss { host, migrate_kv })
+    }
+
+    pub fn with_straggler(self, at: f64, duration: f64, factor: f64) -> Self {
+        self.with_fault(at, duration, FaultKind::Straggler { factor })
+    }
+
+    pub fn with_transient_comm(self, at: f64, duration: f64, fail_prob: f64) -> Self {
+        self.with_fault(at, duration, FaultKind::TransientComm { fail_prob })
+    }
+
+    pub fn with_stochastic(mut self, stream: StochasticFaults) -> Self {
+        self.stochastic = Some(stream);
+        self
+    }
+
+    /// Reject degenerate plans with a descriptive message (the engine
+    /// wraps this in `ScenarioError::InvalidFaultPlan`).
+    pub fn validate(&self, horizon: f64) -> Result<(), String> {
+        for f in &self.scripted {
+            f.validate(horizon)?;
+        }
+        if let Some(s) = &self.stochastic {
+            s.validate()?;
+        }
+        self.retry.validate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validation_rejects_degenerate_plans() {
+        let ok = FaultPlan::new().with_instance_crash(10.0, 30.0, 2);
+        assert!(ok.validate(100.0).is_ok());
+        assert!(ok.validate(10.0).is_err(), "at == horizon is past it");
+        let neg = FaultPlan::new().with_instance_crash(-1.0, 30.0, 2);
+        assert!(neg.validate(100.0).is_err());
+        let zero = FaultPlan::new().with_straggler(5.0, 0.0, 2.0);
+        assert!(zero.validate(100.0).is_err());
+        let factor = FaultPlan::new().with_straggler(5.0, 10.0, 0.5);
+        assert!(factor.validate(100.0).is_err());
+        let prob = FaultPlan::new().with_transient_comm(5.0, 10.0, 0.0);
+        assert!(prob.validate(100.0).is_err());
+        let mut bad_retry = FaultPlan::new().with_instance_crash(1.0, 2.0, 0);
+        bad_retry.retry.timeout = f64::NAN;
+        assert!(bad_retry.validate(100.0).is_err());
+        let empty_stream = FaultPlan::new().with_stochastic(StochasticFaults {
+            rate_per_hour: 1.0,
+            mean_duration: 10.0,
+            kinds: vec![],
+        });
+        assert!(empty_stream.validate(100.0).is_err());
+    }
+
+    #[test]
+    fn stochastic_stream_is_deterministic_and_bounded() {
+        let s = StochasticFaults {
+            rate_per_hour: 3600.0, // one per second on average
+            mean_duration: 5.0,
+            kinds: vec![
+                FaultKind::Straggler { factor: 2.0 },
+                FaultKind::TransientComm { fail_prob: 0.5 },
+            ],
+        };
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        s.materialize(&mut Rng::seed_from_u64(9), 60.0, &mut a);
+        s.materialize(&mut Rng::seed_from_u64(9), 60.0, &mut b);
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "same seed, same stream");
+        assert!(a.iter().all(|f| f.at < 60.0 && f.duration > 0.0));
+        // Kinds cycle in order.
+        assert_eq!(a[0].kind.label(), "straggler");
+        if a.len() > 1 {
+            assert_eq!(a[1].kind.label(), "transient-comm");
+        }
+    }
+
+    #[test]
+    fn empty_plan_is_empty() {
+        assert!(FaultPlan::new().is_empty());
+        assert!(!FaultPlan::new().with_straggler(1.0, 2.0, 3.0).is_empty());
+    }
+}

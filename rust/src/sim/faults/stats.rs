@@ -1,0 +1,116 @@
+//! Per-fault-event accounting carried into
+//! [`crate::sim::engine::FailureResult`].
+
+/// What one fault event did to the serving stack.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// Fault time, seconds from scenario start.
+    pub at: f64,
+    /// [`super::FaultKind::label`] of the fault.
+    pub kind: &'static str,
+    /// Whether the system performed a narrowed recovery (placement
+    /// surgery / deployment patch) instead of the whole-pool fallback.
+    pub narrowed: bool,
+    /// Whether the recovery left an SLO-feasible (and fully-replicated)
+    /// serving state.
+    pub feasible: bool,
+    /// Experts re-seated onto survivors.
+    pub moved_experts: usize,
+    /// Experts dropped because no replica survived and no slot was free
+    /// (the expert-drop fallback).
+    pub dropped_experts: usize,
+    /// Modeled weight/KV transfer time of the repair, seconds.
+    pub transfer_secs: f64,
+    /// Mean-time-to-repair of this event: the transfer time for
+    /// narrowed recoveries, the full fault window for whole-pool ones.
+    pub mttr: f64,
+    /// In-flight requests evicted back to admission.
+    pub evicted: usize,
+    /// KV tokens migrated to surviving hosts.
+    pub migrated_kv_tokens: u64,
+    /// KV tokens to rebuild as recompute prefill.
+    pub recompute_tokens: u64,
+}
+
+/// Aggregate fault accounting of one failure-injection run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultStats {
+    /// One record per fault event, in firing order.
+    pub events: Vec<FaultEvent>,
+    /// KV tokens queued for recompute prefill across all evictions.
+    pub recompute_tokens: u64,
+    /// KV tokens discarded at eviction (work thrown away).
+    pub lost_tokens: u64,
+    /// KV tokens migrated at modeled cost instead of recomputed.
+    pub migrated_kv_tokens: u64,
+    /// Fresh arrivals shed during re-placement windows (`shed` policy).
+    pub shed_requests: u64,
+    /// Failed dispatch/combine attempts retried inside transient
+    /// windows.
+    pub retry_rounds: u64,
+    /// Total extra comm latency charged by transient retries, seconds.
+    pub retry_latency: f64,
+    /// Seconds with at least one fault window active (legacy whole-pool
+    /// outage windows are added by the engine), clamped to the horizon.
+    pub degraded_time: f64,
+}
+
+impl FaultStats {
+    /// Mean time-to-repair across fault events (0.0 with no events).
+    pub fn mttr_mean(&self) -> f64 {
+        if self.events.is_empty() {
+            return 0.0;
+        }
+        self.events.iter().map(|e| e.mttr).sum::<f64>() / self.events.len() as f64
+    }
+
+    /// Fraction of the horizon with no degraded window active.
+    pub fn availability(&self, horizon: f64) -> f64 {
+        if horizon <= 0.0 {
+            return 1.0;
+        }
+        (1.0 - self.degraded_time / horizon).clamp(0.0, 1.0)
+    }
+
+    /// Fault events recovered by narrowed (non-whole-pool) recovery.
+    pub fn narrowed_events(&self) -> usize {
+        self.events.iter().filter(|e| e.narrowed).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn event(mttr: f64, narrowed: bool) -> FaultEvent {
+        FaultEvent {
+            at: 0.0,
+            kind: "instance-crash",
+            narrowed,
+            feasible: true,
+            moved_experts: 0,
+            dropped_experts: 0,
+            transfer_secs: 0.0,
+            mttr,
+            evicted: 0,
+            migrated_kv_tokens: 0,
+            recompute_tokens: 0,
+        }
+    }
+
+    #[test]
+    fn mttr_and_availability() {
+        let mut s = FaultStats::default();
+        assert_eq!(s.mttr_mean(), 0.0);
+        assert_eq!(s.availability(100.0), 1.0);
+        s.events.push(event(2.0, true));
+        s.events.push(event(10.0, false));
+        assert!((s.mttr_mean() - 6.0).abs() < 1e-12);
+        assert_eq!(s.narrowed_events(), 1);
+        s.degraded_time = 25.0;
+        assert!((s.availability(100.0) - 0.75).abs() < 1e-12);
+        s.degraded_time = 1e9;
+        assert_eq!(s.availability(100.0), 0.0, "clamped");
+        assert_eq!(s.availability(0.0), 1.0, "degenerate horizon");
+    }
+}

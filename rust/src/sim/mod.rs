@@ -21,6 +21,14 @@
 //!   preemption) implementations, selected per scenario or via
 //!   `JANUS_ADMISSION`.
 //!
+//! - [`faults`] — the fine-grained fault plane: a [`faults::FaultPlan`]
+//!   composes scripted and seeded-stochastic fault windows (instance
+//!   crash, attention-host loss, straggler, transient dispatch/combine
+//!   faults) on a dedicated RNG stream, with per-system narrowed
+//!   recovery, graceful-degradation policies (`JANUS_FAULTS`), and
+//!   per-fault-event MTTR/availability accounting in
+//!   [`engine::FailureResult`].
+//!
 //! - [`sweep`] — the deterministic parallel sweep engine: independent
 //!   (system ctor × scenario × seed) cells drained by scoped workers
 //!   over one atomic claim index (claims are chunked — K cells per
@@ -42,9 +50,14 @@ pub mod admission;
 pub mod autoscale_sim;
 pub mod decode_sim;
 pub mod engine;
+pub mod faults;
 pub mod sweep;
 
 pub use admission::{AdmissionConfig, AdmissionPolicy, PolicyKind};
+pub use faults::{
+    DegradationPolicy, FaultController, FaultEvent, FaultKind, FaultPlan, FaultStats,
+    RecoveryAction, RetryConfig, ScriptedFault, StochasticFaults,
+};
 pub use autoscale_sim::{AutoscaleResult, AutoscaleSim};
 pub use decode_sim::{evaluate_fixed_batch, FixedBatchResult};
 pub use engine::{

@@ -6,6 +6,7 @@
 
 use crate::baselines::system::{ConfigInfo, ServingSystem, StepOutcome};
 use crate::config::serving::Slo;
+use crate::sim::faults::{DegradationPolicy, RecoveryAction};
 use crate::util::rng::Rng;
 
 /// Deterministic mock: every knob the engine consults is a field.
@@ -22,6 +23,17 @@ pub struct MockServingSystem {
     pub prefill_per_token: f64,
     /// Scripted per-decision feasibility (true once exhausted).
     pub feasibility: Vec<bool>,
+    /// Current straggler slowdown the fault plane last set (1.0 = none).
+    pub straggler: f64,
+    /// When set, `crash_instance` reports this scripted narrowed
+    /// recovery `(moved_experts, transfer_secs)` instead of the default
+    /// whole-pool path — lets engine tests pin the narrowed accounting
+    /// without building a real placement.
+    pub narrowed_crash: Option<(usize, f64)>,
+    /// Instances `crash_instance` was called with, in order.
+    pub crash_log: Vec<u32>,
+    /// Instances `restore_instance` was called with, in order.
+    pub restore_log: Vec<u32>,
     /// Optional demand response: `(tokens_per_slot, max_capacity)`. When
     /// set, each `configure_for_demand(lambda, ..)` resizes `capacity`
     /// to `ceil(lambda / tokens_per_slot)` clamped to
@@ -40,9 +52,22 @@ impl MockServingSystem {
             kv_capacity: capacity as f64 * 512.0,
             prefill_per_token: 5e-6,
             feasibility: Vec::new(),
+            straggler: 1.0,
+            narrowed_crash: None,
+            crash_log: Vec::new(),
+            restore_log: Vec::new(),
             demand_response: None,
             decisions: 0,
         }
+    }
+
+    /// Builder-style scripted narrowed crash recovery: `crash_instance`
+    /// returns `expert_replacement(moved, 0, transfer)` without touching
+    /// capacity, mimicking a system that re-places only the dead
+    /// instance's experts.
+    pub fn with_narrowed_crash(mut self, moved: usize, transfer: f64) -> Self {
+        self.narrowed_crash = Some((moved, transfer));
+        self
     }
 
     /// Builder-style KV capacity override (tokens).
@@ -114,6 +139,38 @@ impl ServingSystem for MockServingSystem {
     fn label(&self) -> String {
         "mock".into()
     }
+
+    fn crash_instance(
+        &mut self,
+        instance: u32,
+        _policy: DegradationPolicy,
+        lambda: f64,
+        slo: Slo,
+    ) -> RecoveryAction {
+        self.crash_log.push(instance);
+        match self.narrowed_crash {
+            Some((moved, transfer)) => RecoveryAction::expert_replacement(moved, 0, transfer),
+            None => {
+                self.fail_gpus(1);
+                RecoveryAction::whole_pool(self.reconfigure_for_pool(lambda, slo).is_some())
+            }
+        }
+    }
+
+    fn restore_instance(&mut self, instance: u32, lambda: f64, slo: Slo) -> RecoveryAction {
+        self.restore_log.push(instance);
+        match self.narrowed_crash {
+            Some((moved, transfer)) => RecoveryAction::expert_replacement(moved, 0, transfer),
+            None => {
+                self.restore_gpus(1);
+                RecoveryAction::whole_pool(self.reconfigure_for_pool(lambda, slo).is_some())
+            }
+        }
+    }
+
+    fn set_straggler(&mut self, factor: f64) {
+        self.straggler = if factor.is_finite() { factor.max(1.0) } else { 1.0 };
+    }
 }
 
 #[cfg(test)]
@@ -155,5 +212,32 @@ mod tests {
         assert!(m.configure_for_demand(1e9, slo).is_some());
         assert_eq!(m.batch_capacity(), 64); // clamped to max
         assert_eq!(m.gpus(), 4); // GPU count never moves
+    }
+
+    #[test]
+    fn fault_hooks_log_and_script_narrowed_recovery() {
+        let slo = Slo::from_ms(200.0);
+        // Default path: whole-pool recovery, crash/restore logged.
+        let mut m = MockServingSystem::new(4, 8, 0.05);
+        let a = m.crash_instance(2, DegradationPolicy::Off, 10.0, slo);
+        assert!(!a.narrowed);
+        let b = m.restore_instance(2, 10.0, slo);
+        assert!(!b.narrowed);
+        assert_eq!(m.crash_log, vec![2]);
+        assert_eq!(m.restore_log, vec![2]);
+
+        // Scripted narrowed path: expert replacement, capacity untouched.
+        let mut n = MockServingSystem::new(4, 8, 0.05).with_narrowed_crash(3, 0.25);
+        let c = n.crash_instance(1, DegradationPolicy::Replica, 10.0, slo);
+        assert!(c.narrowed);
+        assert_eq!(c.moved_experts, 3);
+        assert!((c.transfer_secs - 0.25).abs() < 1e-12);
+        assert_eq!(n.batch_capacity(), 8);
+
+        // Straggler factor is stored, clamped to >= 1, cleared at 1.0.
+        n.set_straggler(2.5);
+        assert_eq!(n.straggler, 2.5);
+        n.set_straggler(0.3);
+        assert_eq!(n.straggler, 1.0);
     }
 }

@@ -20,6 +20,14 @@
 //!   enumerated explicitly, so the snapshot is identical under every
 //!   `JANUS_SCALING` matrix leg — and the other generators pin
 //!   `ScalingMode::Reactive` for the same reason.
+//! - `faults.tsv` — the fault-plane surface: one row per (system ×
+//!   degradation policy ∈ {off, shed, replica}) under a plan exercising
+//!   every fault kind. Pins availability, MTTR, narrowed-recovery and
+//!   shed counters, and interactive degraded-window attainment; the
+//!   fresh rows must show Janus recovering narrowed where the baselines
+//!   cannot, and replica strictly beating shed on the scripted mock.
+//!   Policies are enumerated explicitly, so the snapshot is identical
+//!   under every `JANUS_FAULTS` matrix leg.
 //!
 //! Bootstrap: on a machine without a snapshot (first run after a clone,
 //! or after deleting it), the test writes the file and passes with a
@@ -370,6 +378,86 @@ fn current_flash_crowd_snapshot() -> String {
     current_flash_crowd_snapshot_at(sweep::resolve_threads(None))
 }
 
+/// One row per (system × degradation policy) under a fault plan that
+/// exercises every fault kind: an instance crash (narrowed for Janus,
+/// whole-pool for the baselines), a straggler window, a transient
+/// dispatch/combine window, and an attention-host loss on the recompute
+/// path. Policies are enumerated explicitly (never from `JANUS_FAULTS`),
+/// so one committed snapshot pins all three and the CI faults matrix
+/// compares against the same bytes. The fifth "system" is the scripted
+/// mock (constant 10 ms steps), whose shed-vs-replica rows carry the
+/// degradation acceptance invariant: replica must strictly beat shed on
+/// interactive degraded-window attainment.
+fn current_faults_snapshot_at(threads: usize) -> String {
+    let model = models::deepseek_v2();
+    let hw = paper_testbed();
+    let pop = ExpertPopularity::Zipf { s: 0.4 };
+    let mut out = String::from(
+        "# Golden fault-plane snapshot (DeepSeek-V2, paper testbed, zipf 0.4,\n\
+         # SLO 200 ms, 180 s horizon at 4 req/s x 32 tok/req, seed 424242).\n\
+         # Plan: instance crash @30s/60s, straggler x2 @50s/40s, transient\n\
+         # p=0.5 @100s/20s, attention-host loss (recompute) @140s/20s.\n\
+         # One row per system x degradation policy. Regenerate: JANUS_BLESS=1.\n\
+         # system/policy\tavailability\tmttr_mean\tdegr_att_interactive\ttpot_mean\
+\tsteps\tadmitted\tcompleted\tpreempted\tshed\tnarrowed\trecompute_tokens\n",
+    );
+    let cells: Vec<(usize, janus::sim::faults::DegradationPolicy)> = (0..SYSTEMS + 1)
+        .flat_map(|s| {
+            janus::sim::faults::DegradationPolicy::ALL
+                .into_iter()
+                .map(move |p| (s, p))
+        })
+        .collect();
+    let rows = sweep::sweep(&cells, threads, |_, &(which, policy)| {
+        let plan = janus::sim::faults::FaultPlan::new()
+            .with_instance_crash(30.0, 60.0, 0)
+            .with_straggler(50.0, 40.0, 2.0)
+            .with_transient_comm(100.0, 20.0, 0.5)
+            .with_attention_host_loss(140.0, 20.0, 1, false)
+            .with_policy(policy);
+        let mut scenario = janus::sim::engine::FailureScenario::new(
+            Slo::from_ms(200.0),
+            4.0,
+            32.0,
+            180.0,
+        )
+        .with_faults(plan);
+        scenario.admission = AdmissionConfig::fifo();
+        scenario.scaling = ScalingMode::Reactive;
+        let mut sys: Box<dyn ServingSystem> = if which < SYSTEMS {
+            build_system(which, &model, &hw, &pop)
+        } else {
+            Box::new(MockServingSystem::new(4, 64, 0.01))
+        };
+        let r = engine::failure_injection(sys.as_mut(), &scenario, SEED)
+            .expect("valid scenario");
+        format!(
+            "{}/{}\t{:.17e}\t{:.17e}\t{}\t{:.17e}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\n",
+            r.system,
+            policy.name(),
+            r.availability,
+            r.mttr_mean,
+            fmt_att(r.per_class[Priority::Interactive.rank()].degraded_token_attainment()),
+            r.tpot.mean(),
+            r.steps,
+            r.admitted_requests,
+            r.completed_requests,
+            r.preemptions,
+            r.shed_requests,
+            r.faults.narrowed_events(),
+            r.faults.recompute_tokens
+        )
+    });
+    for row in rows {
+        out.push_str(&row);
+    }
+    out
+}
+
+fn current_faults_snapshot() -> String {
+    current_faults_snapshot_at(sweep::resolve_threads(None))
+}
+
 #[test]
 fn fixed_batch_metrics_match_snapshot() {
     let path = snapshot_path("fixed_batch.tsv");
@@ -461,6 +549,67 @@ fn flash_crowd_scaling_matches_snapshot() {
     );
 }
 
+#[test]
+fn fault_plane_matches_snapshot() {
+    let path = snapshot_path("faults.tsv");
+    let fresh = current_faults_snapshot();
+    let rows = parse_rows(&fresh, 4, 7);
+    assert_eq!(rows.len(), (SYSTEMS + 1) * 3, "5 systems x 3 policies");
+    // Acceptance invariants, checked on the fresh rows themselves (not
+    // just against committed bytes):
+    // 1. Janus recovers the instance crash narrowed; the monolithic
+    //    baselines never do.
+    for (key, _, ints) in &rows {
+        let narrowed = ints[5];
+        if key.starts_with("janus/") {
+            assert!(narrowed > 0, "{key}: Janus must repair narrowed");
+        }
+        if key.starts_with("sglang/") {
+            assert_eq!(narrowed, 0, "{key}: no per-instance placement");
+        }
+    }
+    // 2. On the scripted mock (steps always meet the target, so the only
+    //    attainment loss is shed tokens): replica strictly beats shed on
+    //    interactive degraded-window attainment, and only shed sheds.
+    let find = |key: &str| {
+        rows.iter()
+            .find(|(k, _, _)| k == key)
+            .unwrap_or_else(|| panic!("missing row {key}"))
+    };
+    let shed = find("mock/shed");
+    let replica = find("mock/replica");
+    assert!(shed.2[4] > 0, "shed policy never shed an arrival");
+    assert_eq!(replica.2[4], 0, "replica policy must not shed");
+    assert!(
+        replica.1[2] > shed.1[2],
+        "replica interactive degraded attainment {} must strictly exceed shed's {}",
+        replica.1[2],
+        shed.1[2]
+    );
+    let Some(committed) = committed_or_bootstrap(&path, &fresh) else {
+        return;
+    };
+    compare_rows(
+        &parse_rows(&committed, 4, 7),
+        &parse_rows(&fresh, 4, 7),
+        &[
+            "availability",
+            "mttr_mean",
+            "degr_att_interactive",
+            "tpot_mean",
+        ],
+        &[
+            "steps",
+            "admitted",
+            "completed",
+            "preempted",
+            "shed",
+            "narrowed",
+            "recompute_tokens",
+        ],
+    );
+}
+
 /// The snapshot generators are bit-deterministic — the precondition for
 /// the golden files being meaningful across machines and runs — and the
 /// sweep's worker count is not an observable: the serial (threads=1)
@@ -471,6 +620,8 @@ fn snapshot_generation_is_deterministic() {
     assert_eq!(current_autoscale_snapshot(), current_autoscale_snapshot());
     assert_eq!(current_admission_snapshot(), current_admission_snapshot());
     assert_eq!(current_flash_crowd_snapshot(), current_flash_crowd_snapshot());
+    assert_eq!(current_faults_snapshot(), current_faults_snapshot());
+    assert_eq!(current_faults_snapshot_at(1), current_faults_snapshot());
     assert_eq!(
         current_fixed_batch_snapshot_at(1),
         current_fixed_batch_snapshot()

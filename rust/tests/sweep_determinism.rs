@@ -14,7 +14,12 @@ use janus::config::hardware::paper_testbed;
 use janus::config::models;
 use janus::config::serving::Slo;
 use janus::scaling::ScalingMode;
-use janus::sim::engine::{AutoscaleScenario, FixedBatchScenario, Scenario, ScenarioOutcome};
+use janus::sim::admission::AdmissionConfig;
+use janus::sim::engine::{
+    failure_injection, AutoscaleScenario, FailureResult, FailureScenario, FixedBatchScenario,
+    Scenario, ScenarioOutcome,
+};
+use janus::sim::faults::{DegradationPolicy, FaultPlan};
 use janus::sim::sweep::{self, run_cells, sweep, sweep_chunked, SweepCell};
 use janus::util::rng::{split_seed, Rng};
 use janus::workload::trace::DiurnalTrace;
@@ -118,6 +123,104 @@ fn sweep_is_byte_identical_across_thread_counts() {
     assert_eq!(serial, sweep_snapshot(parallel), "threads={parallel}");
     assert_eq!(serial, sweep_snapshot(2), "threads=2");
     assert_eq!(serial, sweep_snapshot(64), "threads=64 (oversubscribed)");
+}
+
+/// Bit-level serialization of one failure-injection outcome, shared by
+/// the fault-plan determinism and legacy-pin tests below.
+fn fault_row(r: &FailureResult) -> String {
+    format!(
+        "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{:016x}\t{:016x}\t{:016x}\t{:016x}\t{}\t{:016x}\n",
+        r.steps,
+        r.admitted_requests,
+        r.completed_requests,
+        r.rejected_requests,
+        r.generated_tokens,
+        r.preemptions,
+        r.shed_requests,
+        r.availability.to_bits(),
+        r.mttr_mean.to_bits(),
+        r.tpot.mean().to_bits(),
+        r.gpu_hours.to_bits(),
+        r.faults.events.len(),
+        r.faults.degraded_time.to_bits(),
+    )
+}
+
+/// Serialize a fault-plane sweep — all four systems × all three
+/// degradation policies, each cell exercising every fault kind —
+/// at a given worker count. Policies are pinned per cell (never
+/// `from_env`), so the bytes are identical under every `JANUS_FAULTS`
+/// CI leg.
+fn fault_sweep_snapshot(threads: usize) -> String {
+    let model = models::deepseek_v2();
+    let hw = paper_testbed();
+    let pop = janus::routing::gate::ExpertPopularity::Zipf { s: 0.4 };
+    let names = ["janus", "sglang", "msi", "xds"];
+    let mut cells: Vec<SweepCell> = Vec::new();
+    for s in 0..4usize {
+        for (p_i, policy) in DegradationPolicy::ALL.into_iter().enumerate() {
+            let plan = FaultPlan::new()
+                .with_instance_crash(30.0, 60.0, 0)
+                .with_straggler(50.0, 40.0, 2.0)
+                .with_transient_comm(100.0, 20.0, 0.5)
+                .with_attention_host_loss(140.0, 20.0, 1, p_i % 2 == 0)
+                .with_policy(policy);
+            let mut sc =
+                FailureScenario::new(Slo::from_ms(200.0), 2.0, 32.0, 180.0).with_faults(plan);
+            sc.admission = AdmissionConfig::fifo();
+            sc.scaling = ScalingMode::Reactive;
+            cells.push(SweepCell {
+                label: format!("{}/{}", names[s], policy.name()),
+                build: Box::new({
+                    let (model, hw, pop) = (model.clone(), hw.clone(), pop.clone());
+                    move || -> Box<dyn ServingSystem> {
+                        build_eval_system(s, model.clone(), hw.clone(), &pop)
+                    }
+                }),
+                scenario: Scenario::FailureInjection(sc),
+                seed: 31,
+            });
+        }
+    }
+    run_cells(&cells, threads)
+        .iter()
+        .map(|cell| match cell.outcome.as_ref().expect("valid scenario") {
+            ScenarioOutcome::FailureInjection(r) => {
+                format!("{}\t{}", cell.label, fault_row(r))
+            }
+            _ => unreachable!("fault sweep only holds failure cells"),
+        })
+        .collect()
+}
+
+#[test]
+fn fault_plan_cells_are_byte_identical_across_thread_counts() {
+    let serial = fault_sweep_snapshot(1);
+    assert_eq!(serial.lines().count(), 12, "4 systems x 3 policies");
+    let parallel = if sweep::hardware_threads() >= 4 { 4 } else { 2 };
+    assert_eq!(serial, fault_sweep_snapshot(parallel), "threads={parallel}");
+    assert_eq!(serial, fault_sweep_snapshot(2), "threads=2");
+}
+
+#[test]
+fn empty_fault_plan_run_matches_legacy_bytes() {
+    // The bit-identity contract at the sweep surface: installing a
+    // FaultPlan that schedules nothing must serialize to exactly the
+    // legacy scenario's bytes (no extra RNG draws, no per-step charges).
+    let model = models::deepseek_v2();
+    let hw = paper_testbed();
+    let pop = janus::routing::gate::ExpertPopularity::Zipf { s: 0.4 };
+    let mut legacy = FailureScenario::new(Slo::from_ms(200.0), 2.0, 32.0, 240.0)
+        .with_failure(60.0, 8, 90.0);
+    legacy.admission = AdmissionConfig::fifo();
+    legacy.scaling = ScalingMode::Reactive;
+    let mut pinned = legacy.clone();
+    pinned.faults = Some(FaultPlan::new().with_policy(DegradationPolicy::Off));
+    let row = |sc: &FailureScenario| -> String {
+        let mut sys = build_eval_system(0, model.clone(), hw.clone(), &pop);
+        fault_row(&failure_injection(sys.as_mut(), sc, 47).expect("valid scenario"))
+    };
+    assert_eq!(row(&legacy), row(&pinned));
 }
 
 #[test]
