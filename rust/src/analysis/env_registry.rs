@@ -67,6 +67,14 @@ pub const REGISTRY: &[EnvVar] = &[
                   sweep.",
     },
     EnvVar {
+        name: "JANUS_REPLICATION",
+        values: "`static` / `coact` (default `static`)",
+        read_by: "`placement::dynamics`",
+        purpose: "Default expert-replication mode for env-resolved \
+                  system builds (golden surfaces pin `static` \
+                  explicitly); CI runs a matrix leg per mode.",
+    },
+    EnvVar {
         name: "JANUS_REQUIRE_GOLDEN",
         values: "set / unset (default unset)",
         read_by: "`tests/golden_regression.rs`",

@@ -4,6 +4,9 @@ use crate::comm::CommScratch;
 use crate::config::hardware::HardwareProfile;
 use crate::config::models::MoeModel;
 use crate::config::serving::{self, Deployment, SchedulerKind, Slo};
+use crate::placement::dynamics::{
+    plan_re_replication, plan_rebalance, DemandForecaster, DynamicsConfig, ReplicationMode,
+};
 use crate::placement::ExpertPlacement;
 use crate::routing::gate::{ExpertPopularity, GateSim};
 use crate::routing::trace::{ActivationTrace, RoutingBatch};
@@ -13,6 +16,14 @@ use crate::sim::faults::{DegradationPolicy, RecoveryAction};
 use crate::util::rng::Rng;
 
 use super::system::{ConfigInfo, ServingSystem, StepOutcome};
+
+/// Most prefetch replicas staged per scaling decision (coact mode).
+const PREFETCH_PER_DECISION: usize = 2;
+/// Most background re-replication copies per crash recovery (coact
+/// mode) — bounds the background transfer stall a single crash charges.
+const MAX_RECOVERY_COPIES: usize = 8;
+/// Most rebalance moves per scaling decision (coact mode).
+const REBALANCE_MOVES_PER_DECISION: usize = 2;
 
 /// Fully-assembled Janus (the paper's system).
 pub struct JanusSystem {
@@ -34,6 +45,20 @@ pub struct JanusSystem {
     /// Full per-side instance budget; `scaler.n_max` shrinks below this
     /// while GPUs are failed (see `fail_gpus`/`restore_gpus`).
     base_n_max: usize,
+    /// Replica-placement mode. `Static` is byte-identical to the
+    /// pre-dynamics system; `Coact` enables availability-aware
+    /// replication, post-crash re-replication, and predictive prefetch.
+    mode: ReplicationMode,
+    /// Tunables for the availability-aware pipeline (coact mode).
+    dyn_cfg: DynamicsConfig,
+    /// Per-expert activation counts from the build trace — orders
+    /// eviction victims, re-replication, and prefetch staging.
+    expert_counts: Vec<u64>,
+    /// Arrival-rate extrapolator driving predictive prefetch.
+    forecaster: DemandForecaster,
+    /// Accumulated background weight-copy seconds (prefetch staging,
+    /// rebalance moves), drained by `placement_maintenance`.
+    pending_background: f64,
 }
 
 impl std::fmt::Debug for JanusSystem {
@@ -42,19 +67,38 @@ impl std::fmt::Debug for JanusSystem {
             .field("deployment", &self.deployment)
             .field("s_ctx", &self.s_ctx)
             .field("base_n_max", &self.base_n_max)
+            .field("mode", &self.mode)
             .finish_non_exhaustive()
     }
 }
 
 impl JanusSystem {
     /// Build from a model + hardware, warming the â_max table from a
-    /// synthetic activation trace under the given popularity skew.
+    /// synthetic activation trace under the given popularity skew. The
+    /// replica-placement mode resolves from `JANUS_REPLICATION` (default
+    /// `static`, the legacy pipeline); golden and determinism surfaces
+    /// pin a mode explicitly via [`Self::build_with_replication`].
     pub fn build(
         model: MoeModel,
         hw: HardwareProfile,
         pop: &ExpertPopularity,
         n_max: usize,
         seed: u64,
+    ) -> Self {
+        Self::build_with_replication(model, hw, pop, n_max, seed, ReplicationMode::from_env())
+    }
+
+    /// [`build`](Self::build) with an explicit replica-placement mode.
+    /// `Static` is byte-identical to the pre-dynamics build (same RNG
+    /// draw order, same placements); `Coact` builds availability-aware
+    /// placements for every candidate n_e.
+    pub fn build_with_replication(
+        model: MoeModel,
+        hw: HardwareProfile,
+        pop: &ExpertPopularity,
+        n_max: usize,
+        seed: u64,
+        mode: ReplicationMode,
     ) -> Self {
         let mut rng = Rng::seed_from_u64(seed);
         let capacity = serving::default_capacity(&model, &hw);
@@ -63,7 +107,8 @@ impl JanusSystem {
         trace.record_batch(&gate.sample_batch(&mut rng, 8192));
         let n_e_min = model.experts.div_ceil(capacity);
         let n_e_values: Vec<usize> = (n_e_min..=n_max).collect();
-        let amax = AmaxTable::build(
+        let dyn_cfg = DynamicsConfig::default();
+        let amax = AmaxTable::build_with_mode(
             &trace,
             &n_e_values,
             &AmaxTable::default_grid(4096),
@@ -71,7 +116,10 @@ impl JanusSystem {
             SchedulerKind::Aebs,
             8,
             &mut rng,
+            mode,
+            &dyn_cfg,
         );
+        let expert_counts = trace.expert_counts();
         let ws = aebs::Workspace::new(model.experts, n_max);
         let routing = RoutingBatch::zeroed(0, model.top_k, model.experts);
         let scaler = Scaler::new(model, hw, amax, n_max);
@@ -86,7 +134,26 @@ impl JanusSystem {
             decisions: DecisionCache::default(),
             s_ctx: 512.0,
             base_n_max: n_max,
+            mode,
+            dyn_cfg,
+            expert_counts,
+            forecaster: DemandForecaster::default(),
+            pending_background: 0.0,
         }
+    }
+
+    /// The active replica-placement mode.
+    pub fn replication_mode(&self) -> ReplicationMode {
+        self.mode
+    }
+
+    /// Deterministically install a specific deployment with its
+    /// â_max-table placement, exactly as an adopted scaling decision
+    /// would — the harness seam tests and figures use to pin n_moe
+    /// instead of going through Algorithm 2. `d.n_moe` must be one of
+    /// the table's candidates or no placement is installed.
+    pub fn deploy(&mut self, d: Deployment) {
+        self.apply(d);
     }
 
     fn apply(&mut self, d: Deployment) {
@@ -176,6 +243,93 @@ impl JanusSystem {
         self.scaler.model.params_per_expert() * self.scaler.model.moe_layers() as f64 * 2.0
     }
 
+    /// Coact live-migration eviction: the survivor slot whose occupant
+    /// is the most redundant (then coldest) expert. Sacrificing that
+    /// replica frees a seat for a zero-replica expert, so every expert
+    /// stays served after a crash whenever the survivors' slots can hold
+    /// one replica of everything. Deterministic: ties break to the
+    /// lowest instance, then lowest expert id.
+    fn eviction_target(
+        placement: &ExpertPlacement,
+        dead: u32,
+        counts: &[u64],
+    ) -> Option<(u32, u16)> {
+        (0..placement.n_instances as u32)
+            .filter(|&g| g != dead)
+            .flat_map(|g| placement.seated(g).into_iter().map(move |f| (g, f)))
+            .filter(|&(_, f)| placement.replica_count(f) >= 2)
+            .min_by_key(|&(g, f)| {
+                (
+                    std::cmp::Reverse(placement.replica_count(f)),
+                    counts[f as usize],
+                    g,
+                    f,
+                )
+            })
+    }
+
+    /// Coact background placement maintenance at a scaling decision:
+    /// with the demand forecast rising, stage extra replicas of the
+    /// hottest under-covered experts into free slots ahead of the
+    /// crossover (predictive prefetch); otherwise spend the quiet window
+    /// on bounded load rebalancing. The weight copies accumulate as
+    /// background transfer seconds, drained by `placement_maintenance`
+    /// and charged by the engine as stalls — never on the decode path.
+    /// A no-op in static mode: no forecaster observation, no float work.
+    fn stage_prefetch(&mut self, lambda: f64) {
+        if self.mode != ReplicationMode::Coact {
+            return;
+        }
+        self.forecaster.observe(lambda);
+        let rising = self.forecaster.rising();
+        let e_bytes = self.expert_bytes();
+        let cov_target = self.dyn_cfg.hot_coverage;
+        let counts = &self.expert_counts;
+        let Some(p) = self.placement.as_mut() else {
+            return;
+        };
+        let mut transfers = 0usize;
+        if rising {
+            let cov = cov_target.min(p.n_instances).max(1);
+            let mut order: Vec<u16> = (0..p.experts as u16)
+                .filter(|&e| {
+                    counts[e as usize] > 0 && {
+                        let r = p.replica_count(e);
+                        r >= 1 && r < cov
+                    }
+                })
+                .collect();
+            order.sort_by(|&a, &b| counts[b as usize].cmp(&counts[a as usize]).then(a.cmp(&b)));
+            for e in order {
+                if transfers >= PREFETCH_PER_DECISION {
+                    break;
+                }
+                let target = (0..p.n_instances as u32)
+                    .filter(|&g| p.free_slots(g) > 0 && !p.hosts(e).contains(&g))
+                    .max_by_key(|&g| (p.free_slots(g), std::cmp::Reverse(g)));
+                if let Some(g) = target {
+                    // tidy:allow(no-panic-in-lib): target was filtered to have a free slot and no replica of e
+                    p.seat(e, g).expect("prefetch seat");
+                    transfers += 1;
+                }
+            }
+        } else if self.forecaster.has_history() {
+            let plan = plan_rebalance(p, counts, REBALANCE_MOVES_PER_DECISION);
+            if !plan.is_empty() {
+                // tidy:allow(no-panic-in-lib): the plan was built against this same layout
+                plan.apply(p).expect("rebalance plan applies");
+                transfers = plan.transfers();
+            }
+        }
+        if transfers > 0 {
+            self.pending_background += self
+                .scaler
+                .tpot_model
+                .comm
+                .transfer_time(transfers as f64 * e_bytes);
+        }
+    }
+
     /// Adopt a (possibly replayed) decision: deploy it, or — when the
     /// search found nothing feasible — keep the live deployment /
     /// fall back per `ensure_deployed` and report infeasibility.
@@ -219,7 +373,9 @@ impl ServingSystem for JanusSystem {
         let decision = self.decide(key, |sc| {
             sc.optimize(lambda, slo, s_ctx).map(|plan| plan.deployment)
         });
-        self.adopt(decision)
+        let cfg = self.adopt(decision);
+        self.stage_prefetch(lambda);
+        cfg
     }
 
     fn configure_with_signal(&mut self, signal: &ScalingSignal, slo: Slo) -> Option<ConfigInfo> {
@@ -237,7 +393,9 @@ impl ServingSystem for JanusSystem {
         let decision = self.decide(key, |sc| {
             sc.optimize(lambda, slo, s_ctx).map(|plan| plan.deployment)
         });
-        self.adopt(decision)
+        let cfg = self.adopt(decision);
+        self.stage_prefetch(lambda);
+        cfg
     }
 
     fn step(&mut self, batch: usize, rng: &mut Rng) -> StepOutcome {
@@ -395,17 +553,69 @@ impl ServingSystem for JanusSystem {
                     placement.seat(e, g).expect("narrowed re-seat");
                     moved += 1;
                 }
-                None if placement.replica_count(e) == 0 => dropped += 1,
+                None if placement.replica_count(e) == 0 => {
+                    // Coact live migration: no free slot, so evict a
+                    // redundant replica on a survivor and seat the
+                    // orphaned expert there — redundancy degrades
+                    // gracefully instead of dropping service.
+                    match if self.mode == ReplicationMode::Coact {
+                        Self::eviction_target(&placement, instance, &self.expert_counts)
+                    } else {
+                        None
+                    } {
+                        Some((g, f)) => {
+                            // tidy:allow(no-panic-in-lib): (f, g) was read from the layout just above
+                            placement.unseat(f, g).expect("eviction unseat");
+                            // tidy:allow(no-panic-in-lib): the slot was freed and e has no replica anywhere
+                            placement.seat(e, g).expect("eviction re-seat");
+                            moved += 1;
+                        }
+                        None => dropped += 1,
+                    }
+                }
                 None => {} // redundancy reduced, expert still served
             }
         }
-        self.placement = Some(placement);
+        let e_bytes = self.expert_bytes();
         let transfer = self
             .scaler
             .tpot_model
             .comm
-            .transfer_time(moved as f64 * self.expert_bytes());
-        RecoveryAction::expert_replacement(moved, dropped, transfer)
+            .transfer_time(moved as f64 * e_bytes);
+        let mut action = RecoveryAction::expert_replacement(moved, dropped, transfer);
+        if self.mode == ReplicationMode::Coact {
+            // Post-crash re-replication: give sole-replica experts a
+            // second copy on the survivors (background transfer, off the
+            // critical path), restoring the replication invariant the
+            // coverage-first allocation established.
+            let plan = plan_re_replication(
+                &placement,
+                &self.expert_counts,
+                self.dyn_cfg.n_domains,
+                MAX_RECOVERY_COPIES,
+                Some(instance),
+            );
+            if !plan.is_empty() {
+                let bg = self
+                    .scaler
+                    .tpot_model
+                    .comm
+                    .transfer_time(plan.transfer_bytes(e_bytes));
+                // tidy:allow(no-panic-in-lib): the plan was built against this same layout
+                plan.apply(&mut placement).expect("re-replication plan applies");
+                action = action.with_re_replication(plan.transfers(), bg);
+            }
+            if policy == DegradationPolicy::Replica && dropped == 0 {
+                // Every expert is served again once the critical
+                // re-seats and background copies land: declare the
+                // service restored so the degradation window can close
+                // ahead of the scripted repair.
+                action = action
+                    .with_service_restored(action.transfer_secs + action.background_secs);
+            }
+        }
+        self.placement = Some(placement);
+        action
     }
 
     fn restore_instance(&mut self, instance: u32, _lambda: f64, _slo: Slo) -> RecoveryAction {
@@ -449,6 +659,12 @@ impl ServingSystem for JanusSystem {
 
     fn set_straggler(&mut self, factor: f64) {
         self.scaler.tpot_model.set_slowdown(factor);
+    }
+
+    fn placement_maintenance(&mut self) -> f64 {
+        let pending = self.pending_background;
+        self.pending_background = 0.0;
+        pending
     }
 }
 
@@ -536,35 +752,138 @@ mod tests {
     }
 
     #[test]
-    fn narrowed_crash_moves_only_dead_instance_experts() {
-        let mut sys = JanusSystem::build(
+    fn static_crash_has_no_headroom_and_drops_sole_experts() {
+        // The static allocator saturates every slot, so after a crash no
+        // survivor can absorb a re-seated expert: sole replicas on the
+        // dead instance are dropped — the failure mode the coact
+        // pipeline exists to fix.
+        let mut sys = JanusSystem::build_with_replication(
             deepseek_v2(),
             paper_testbed(),
             &ExpertPopularity::Uniform,
             16,
             47,
+            ReplicationMode::Static,
         );
         let slo = Slo::from_ms(200.0);
-        sys.configure_for_demand(2000.0, slo).expect("feasible");
+        sys.deploy(Deployment::new(4, 8));
         let d = sys.deployment().expect("deployed");
-        let experts = sys.scaler.model.experts;
-        let action = sys.crash_instance(0, DegradationPolicy::Off, 2000.0, slo);
+        let p = sys.placement.as_ref().expect("placement");
+        let free: usize = (0..8u32).map(|g| p.free_slots(g)).sum();
+        assert_eq!(free, 0, "static placement saturates every slot");
+        // 8 × 27 slots < 2 × 160 experts → sole replicas exist; crash an
+        // instance hosting one so the drop is certain.
+        let victim = (0..8u32)
+            .find(|&g| p.seated(g).iter().any(|&e| p.replica_count(e) == 1))
+            .expect("some instance hosts a sole-replica expert");
+        let action = sys.crash_instance(victim, DegradationPolicy::Replica, 2000.0, slo);
         assert!(action.narrowed, "Janus recovers via placement surgery");
-        assert!(action.moved_experts > 0);
-        assert!(
-            action.moved_experts < experts,
-            "only the dead instance's experts move ({} of {experts})",
-            action.moved_experts
-        );
-        assert!(action.transfer_secs > 0.0, "weight transfer is charged");
-        // The live deployment survives the narrowed repair.
+        assert_eq!(action.moved_experts, 0, "no free slot anywhere to re-seat into");
+        assert!(action.dropped_experts > 0, "sole replicas die with the instance");
+        assert!(!action.feasible);
+        assert_eq!(action.restored_secs, None, "static mode never self-restores");
+        assert_eq!(action.re_replicated_experts, 0);
+        // The live deployment survives the narrowed repair and still steps.
         assert_eq!(sys.deployment(), Some(d));
         let mut rng = Rng::seed_from_u64(2);
         assert!(sys.step(64, &mut rng).tpot > 0.0);
         // Restore re-syncs the canonical layout.
-        let back = sys.restore_instance(0, 2000.0, slo);
+        let back = sys.restore_instance(victim, 2000.0, slo);
         assert!(back.narrowed);
-        assert_eq!(back.moved_experts, action.moved_experts);
+        assert!(back.moved_experts > 0, "the restored instance streams its experts back");
+    }
+
+    #[test]
+    fn coact_crash_restores_service_where_static_drops() {
+        let mut sys = JanusSystem::build_with_replication(
+            deepseek_v2(),
+            paper_testbed(),
+            &ExpertPopularity::Zipf { s: 1.2 },
+            16,
+            47,
+            ReplicationMode::Coact,
+        );
+        assert_eq!(sys.replication_mode(), ReplicationMode::Coact);
+        let slo = Slo::from_ms(200.0);
+        sys.deploy(Deployment::new(4, 8));
+        let p = sys.placement.as_ref().expect("placement");
+        let free: usize = (0..8u32).map(|g| p.free_slots(g)).sum();
+        assert!(free >= 8, "coact reserves per-instance headroom, got {free}");
+        let victim = (0..8u32)
+            .find(|&g| p.seated(g).iter().any(|&e| p.replica_count(e) == 1))
+            .expect("some instance hosts a sole-replica expert");
+        let action = sys.crash_instance(victim, DegradationPolicy::Replica, 2000.0, slo);
+        assert!(action.narrowed);
+        assert!(action.moved_experts > 0, "sole replicas re-seat into headroom");
+        assert_eq!(
+            action.dropped_experts, 0,
+            "7 × 27 surviving slots seat all 160 experts: headroom + eviction drop nothing"
+        );
+        assert!(action.feasible);
+        let restored = action
+            .restored_secs
+            .expect("availability-aware recovery declares a restore time");
+        assert!(restored > 0.0, "restoring costs real transfer time");
+        assert!(
+            (restored - (action.transfer_secs + action.background_secs)).abs() < 1e-12,
+            "restore = critical re-seat + background re-replication"
+        );
+        // The post-crash layout serves every expert from the survivors.
+        let p = sys.placement.as_ref().unwrap();
+        for e in 0..160u16 {
+            assert!(p.replica_count(e) >= 1, "expert {e} lost its last replica");
+            assert!(!p.hosts(e).contains(&victim), "expert {e} still on the dead instance");
+        }
+    }
+
+    #[test]
+    fn coact_prefetch_stages_background_work_on_rising_demand() {
+        let slo = Slo::from_ms(200.0);
+        let build = |mode| {
+            JanusSystem::build_with_replication(
+                deepseek_v2(),
+                paper_testbed(),
+                &ExpertPopularity::Zipf { s: 1.2 },
+                16,
+                45,
+                mode,
+            )
+        };
+        let mut coact = build(ReplicationMode::Coact);
+        // Pin an under-covered deployment, then drive demand through
+        // infeasible territory so scaling keeps the pinned placement.
+        coact.deploy(Deployment::new(4, 8));
+        assert!(
+            coact.configure_for_demand(1e12, slo).is_none(),
+            "absurd demand is infeasible on a bounded pool"
+        );
+        assert_eq!(
+            coact.placement_maintenance(),
+            0.0,
+            "a first observation cannot be rising"
+        );
+        assert!(coact.configure_for_demand(2e12, slo).is_none());
+        let staged = coact.placement_maintenance();
+        assert!(staged > 0.0, "rising demand stages prefetch weight copies");
+        assert_eq!(coact.placement_maintenance(), 0.0, "maintenance drains once");
+        // Static mode never stages background placement work.
+        let mut stat = build(ReplicationMode::Static);
+        stat.deploy(Deployment::new(4, 8));
+        stat.configure_for_demand(1e12, slo);
+        stat.configure_for_demand(2e12, slo);
+        assert_eq!(stat.placement_maintenance(), 0.0);
+    }
+
+    #[test]
+    fn default_build_mode_resolves_from_env() {
+        let sys = JanusSystem::build(
+            deepseek_v2(),
+            paper_testbed(),
+            &ExpertPopularity::Uniform,
+            16,
+            42,
+        );
+        assert_eq!(sys.replication_mode(), ReplicationMode::from_env());
     }
 
     #[test]

@@ -24,6 +24,7 @@ pub use xdeepserve::XDeepServe;
 
 use crate::config::hardware::HardwareProfile;
 use crate::config::models::MoeModel;
+use crate::placement::dynamics::ReplicationMode;
 use crate::routing::gate::ExpertPopularity;
 
 /// Number of systems in the canonical evaluation lineup.
@@ -42,7 +43,19 @@ pub fn build_eval_system(
     pop: &ExpertPopularity,
 ) -> Box<dyn ServingSystem> {
     match which {
-        0 => Box::new(JanusSystem::build(model, hw, pop, 16, 42)),
+        // Replica placement is pinned to the legacy static mode — never
+        // resolved from `JANUS_REPLICATION` — so every golden and
+        // determinism surface built through this helper emits identical
+        // bytes under every CI env leg. Replication comparisons build
+        // their systems explicitly via `build_with_replication`.
+        0 => Box::new(JanusSystem::build_with_replication(
+            model,
+            hw,
+            pop,
+            16,
+            42,
+            ReplicationMode::Static,
+        )),
         1 => Box::new(SgLang::build(model, hw, pop, 43)),
         2 => Box::new(MegaScaleInfer::build(model, hw, pop, 16, 44)),
         3 => Box::new(XDeepServe::build(model, hw, pop, 32, 45)),

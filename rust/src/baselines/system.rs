@@ -173,4 +173,13 @@ pub trait ServingSystem {
     /// clears it). Implementations fold it into their latency model so
     /// the scheduler sees the straggler. Default: not modeled.
     fn set_straggler(&mut self, _factor: f64) {}
+
+    /// Drain pending background placement work (predictive prefetch
+    /// staging, live-migration copies) and return its modeled transfer
+    /// time in seconds; the engine charges it as a stall at scaling
+    /// decision points. Must be deterministic and return 0.0 when
+    /// nothing is pending. Default: no background placement work.
+    fn placement_maintenance(&mut self) -> f64 {
+        0.0
+    }
 }

@@ -176,7 +176,7 @@ mod tests {
     #[test]
     fn placement_is_valid_and_complete() {
         let (counts, coact) = make_stats(32, 4, 1.0, 7);
-        let r = allocate_replicas(&counts, 8, 6); // 48 slots for 32 experts
+        let r = allocate_replicas(&counts, 8, 6).unwrap(); // 48 slots for 32 experts
         let p = place_replicas(&r, &counts, &coact, 8, 6);
         p.validate().unwrap();
         assert_eq!(p.total_replicas(), 48);
@@ -188,7 +188,7 @@ mod tests {
     #[test]
     fn beats_round_robin_on_coactivation() {
         let (counts, coact) = make_stats(64, 6, 1.2, 11);
-        let r = allocate_replicas(&counts, 8, 10);
+        let r = allocate_replicas(&counts, 8, 10).unwrap();
         let smart = place_replicas(&r, &counts, &coact, 8, 10);
         let naive = ExpertPlacement::round_robin(64, 8, 10);
         let smart_load = max_coactivation_load(&smart, &coact);
@@ -203,7 +203,7 @@ mod tests {
     fn tight_layout_uses_swaps_if_needed() {
         // Exactly one slot per expert: any ordering must still complete.
         let (counts, coact) = make_stats(24, 3, 0.8, 13);
-        let r = allocate_replicas(&counts, 6, 4); // 24 slots = E exactly
+        let r = allocate_replicas(&counts, 6, 4).unwrap(); // 24 slots = E exactly
         let p = place_replicas(&r, &counts, &coact, 6, 4);
         p.validate().unwrap();
         assert_eq!(p.total_replicas(), 24);
@@ -213,7 +213,7 @@ mod tests {
     fn full_redundancy_layout() {
         // Slots = 2E: every expert gets exactly 2 replicas under uniform load.
         let (counts, coact) = make_stats(16, 2, 0.0, 17);
-        let r = allocate_replicas(&counts, 8, 4);
+        let r = allocate_replicas(&counts, 8, 4).unwrap();
         assert_eq!(r.iter().sum::<usize>(), 32);
         let p = place_replicas(&r, &counts, &coact, 8, 4);
         p.validate().unwrap();
@@ -222,7 +222,7 @@ mod tests {
     #[test]
     fn deterministic_given_same_inputs() {
         let (counts, coact) = make_stats(32, 4, 1.0, 23);
-        let r = allocate_replicas(&counts, 8, 6);
+        let r = allocate_replicas(&counts, 8, 6).unwrap();
         let p1 = place_replicas(&r, &counts, &coact, 8, 6);
         let p2 = place_replicas(&r, &counts, &coact, 8, 6);
         assert_eq!(p1, p2);

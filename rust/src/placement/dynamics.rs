@@ -1,0 +1,681 @@
+//! Availability-aware placement dynamics: replication driven by the
+//! live popularity/co-activation trace, anti-affinity across failure
+//! domains, deterministic live migration, and demand forecasting for
+//! predictive prefetch.
+//!
+//! The static pipeline (`allocate_replicas` + Algorithm 3) optimizes
+//! per-replica load and co-activation pressure but is blind to failures:
+//! it fills every slot, so after an instance crash the survivors have no
+//! free capacity to re-seat or re-replicate lost experts, and a hot
+//! expert's only replica can die with its instance. This module adds the
+//! availability-aware variant used when `JANUS_REPLICATION=coact`:
+//!
+//! 1. **Coverage-first allocation** ([`allocate_replicas_coact`]) grants
+//!    second (… k-th) replicas to the hottest experts *before*
+//!    load-equalizing, and reserves per-instance slot headroom, so a
+//!    single crash leaves ≥ 1 live replica of every hot expert and the
+//!    survivors can absorb re-seated replicas.
+//! 2. **Anti-affinity repair** ([`spread_across_domains`]) relocates
+//!    replicas so each multi-replica expert spans ≥ 2 failure domains
+//!    (instance `g` lives in domain `g % n_domains`).
+//! 3. **Live migration planning** ([`plan_re_replication`],
+//!    [`plan_rebalance`]) emits a deterministic [`MigrationPlan`] — copy
+//!    steps that restore the replication invariant after `sim::faults`
+//!    narrows the placement, and bounded move steps for load rebalancing
+//!    — priced by the caller through `comm::cost` as explicit transfer
+//!    stalls.
+//! 4. **Demand forecasting** ([`DemandForecaster`]) linearly
+//!    extrapolates the diurnal arrival rate so about-to-be-hot experts
+//!    can be staged (prefetched) ahead of the demand crossover.
+//!
+//! Everything here is deterministic: iteration is in index order, float
+//! orderings use `total_cmp`, and no RNG is consulted, so the coact mode
+//! preserves the sweep bit-identity contract and the static mode stays
+//! byte-for-byte the legacy pipeline.
+
+use crate::placement::algorithm3::place_replicas;
+use crate::placement::layout::ExpertPlacement;
+use crate::placement::replicas::PlacementError;
+use crate::routing::coactivation::CoactivationStats;
+
+/// Env knob selecting the default replica-placement mode for
+/// env-resolved builds (`JanusSystem::build`). Golden and determinism
+/// surfaces always pin a mode explicitly.
+pub const REPLICATION_ENV: &str = "JANUS_REPLICATION";
+
+/// How Janus allocates and places expert replicas.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicationMode {
+    /// The legacy pipeline: load-equalizing `allocate_replicas` +
+    /// Algorithm 3. Bit-identical to pre-dynamics behavior.
+    Static,
+    /// Availability-aware: coverage-first replication with headroom,
+    /// anti-affinity across failure domains, post-crash re-replication,
+    /// and predictive prefetch.
+    Coact,
+}
+
+impl ReplicationMode {
+    pub const ALL: [ReplicationMode; 2] = [ReplicationMode::Static, ReplicationMode::Coact];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "static" => Some(ReplicationMode::Static),
+            "coact" => Some(ReplicationMode::Coact),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ReplicationMode::Static => "static",
+            ReplicationMode::Coact => "coact",
+        }
+    }
+
+    /// Resolve from `JANUS_REPLICATION`; unset or unparseable → `Static`
+    /// (the legacy behavior).
+    pub fn from_env() -> Self {
+        std::env::var(REPLICATION_ENV)
+            .ok()
+            .and_then(|v| Self::parse(&v))
+            .unwrap_or(ReplicationMode::Static)
+    }
+}
+
+/// Tunables for the availability-aware pipeline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DynamicsConfig {
+    /// Replication floor for hot (nonzero-count) experts: coverage
+    /// grants up to this many replicas, hottest first, before any
+    /// load-equalizing grant. ≥ 2 means a single crash cannot take out
+    /// every replica of a covered expert.
+    pub hot_coverage: usize,
+    /// Free slots reserved per instance so survivors can absorb
+    /// re-seated and re-replicated experts after a crash (and staged
+    /// prefetch replicas during diurnal shift).
+    pub headroom: usize,
+    /// Failure-domain count; instance `g` belongs to domain
+    /// `g % n_domains`.
+    pub n_domains: usize,
+    /// Half-life (in windows) for co-activation decay; non-finite or
+    /// ≤ 0 disables decay.
+    pub half_life_windows: f64,
+}
+
+impl Default for DynamicsConfig {
+    fn default() -> Self {
+        DynamicsConfig {
+            hot_coverage: 2,
+            headroom: 1,
+            n_domains: 2,
+            half_life_windows: 256.0,
+        }
+    }
+}
+
+/// Coverage-first replica counts: one replica each, then second (…
+/// `hot_coverage`-th) replicas hottest-first, then the legacy
+/// load-equalizing greedy over whatever budget remains — all within
+/// `slots − headroom·n_instances` so the placement keeps free capacity.
+/// Headroom shrinks (down to zero) rather than violating the
+/// one-slot-per-expert floor.
+pub fn allocate_replicas_coact(
+    counts: &[u64],
+    n_instances: usize,
+    capacity: usize,
+    cfg: &DynamicsConfig,
+) -> Result<Vec<usize>, PlacementError> {
+    let experts = counts.len();
+    let slots = n_instances * capacity;
+    if slots < experts {
+        return Err(PlacementError::InsufficientSlots { slots, experts });
+    }
+    let reserved = (cfg.headroom * n_instances).min(slots - experts);
+    let usable = slots - reserved;
+    let mut r = vec![1usize; experts];
+    let mut extra = usable - experts;
+
+    // Coverage pass: hottest-first, one tier at a time, so the budget
+    // buys breadth (many experts at 2 replicas) before depth.
+    let mut order: Vec<usize> = (0..experts).collect();
+    order.sort_by(|&a, &b| counts[b].cmp(&counts[a]).then(a.cmp(&b)));
+    let target = cfg.hot_coverage.min(n_instances).max(1);
+    'coverage: for tier in 2..=target {
+        for &e in &order {
+            if extra == 0 {
+                break 'coverage;
+            }
+            if counts[e] == 0 {
+                continue; // cold experts keep their singleton
+            }
+            if r[e] < tier {
+                r[e] += 1;
+                extra -= 1;
+            }
+        }
+    }
+
+    // Equalize pass: identical greedy to the static allocator, over the
+    // remaining budget (ties to the lowest expert id).
+    while extra > 0 {
+        let mut best: Option<(f64, usize)> = None;
+        for e in 0..experts {
+            if r[e] >= n_instances {
+                continue;
+            }
+            let load = counts[e] as f64 / r[e] as f64;
+            let better = match best {
+                None => true,
+                Some((bl, _)) => load > bl,
+            };
+            if better {
+                best = Some((load, e));
+            }
+        }
+        match best {
+            Some((_, e)) => {
+                r[e] += 1;
+                extra -= 1;
+            }
+            None => break,
+        }
+    }
+    Ok(r)
+}
+
+/// The failure domain of an instance.
+#[inline]
+pub fn domain_of(instance: u32, n_domains: usize) -> usize {
+    if n_domains == 0 {
+        0
+    } else {
+        instance as usize % n_domains
+    }
+}
+
+/// Anti-affinity repair: for every expert whose ≥ 2 replicas all sit in
+/// one failure domain, move one replica into a free slot in another
+/// domain (lowest instance id first). Each move can free a slot an
+/// earlier-skipped expert needed, so passes repeat until a fixpoint
+/// (bounded: every move un-sticks exactly one expert and sticks none,
+/// so at most E passes run). Returns the number of moves performed.
+pub fn spread_across_domains(placement: &mut ExpertPlacement, n_domains: usize) -> usize {
+    if n_domains < 2 {
+        return 0;
+    }
+    let mut total = 0usize;
+    loop {
+        let moves = spread_pass(placement, n_domains);
+        total += moves;
+        if moves == 0 {
+            return total;
+        }
+    }
+}
+
+/// One repair pass over all experts; see [`spread_across_domains`].
+fn spread_pass(placement: &mut ExpertPlacement, n_domains: usize) -> usize {
+    let n = placement.n_instances as u32;
+    let mut moves = 0usize;
+    for e in 0..placement.experts as u16 {
+        let hosts = placement.hosts(e).to_vec();
+        if hosts.len() < 2 {
+            continue;
+        }
+        let d0 = domain_of(hosts[0], n_domains);
+        if hosts.iter().any(|&g| domain_of(g, n_domains) != d0) {
+            continue; // already spread
+        }
+        // Find a free slot in a different domain.
+        let target = (0..n).find(|&h| {
+            domain_of(h, n_domains) != d0
+                && placement.free_slots(h) > 0
+                && !placement.hosts(e).contains(&h)
+        });
+        if let Some(h) = target {
+            // Move the highest-id co-domain replica (keeps the sorted
+            // host list's head stable for determinism).
+            // tidy:allow(no-panic-in-lib): hosts[last] was just read from the layout
+            let from = *hosts.last().expect("len >= 2 checked above");
+            // tidy:allow(no-panic-in-lib): (e, from) is seated and h has a free slot
+            placement.unseat(e, from).expect("anti-affinity unseat");
+            // tidy:allow(no-panic-in-lib): h was verified free and not hosting e
+            placement.seat(e, h).expect("anti-affinity seat");
+            moves += 1;
+        }
+    }
+    moves
+}
+
+/// The full availability-aware placement pipeline: coverage-first
+/// counts → Algorithm 3 (co-activation-aware seating) → anti-affinity
+/// domain repair.
+pub fn place_replicas_coact(
+    counts: &[u64],
+    coact: &CoactivationStats,
+    n_instances: usize,
+    capacity: usize,
+    cfg: &DynamicsConfig,
+) -> Result<ExpertPlacement, PlacementError> {
+    let r = allocate_replicas_coact(counts, n_instances, capacity, cfg)?;
+    let mut placement = place_replicas(&r, counts, coact, n_instances, capacity);
+    spread_across_domains(&mut placement, cfg.n_domains);
+    Ok(placement)
+}
+
+/// One live-migration step. `from == None` is a *copy* (a new replica is
+/// staged on `to`); `from == Some(g)` is a *move* (the replica leaves
+/// `g`). Either way exactly one expert-weight transfer crosses the
+/// network, so a plan's cost is `steps.len() × expert_bytes` through
+/// `comm::cost`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MigrationStep {
+    pub expert: u16,
+    pub from: Option<u32>,
+    pub to: u32,
+}
+
+/// A deterministic batch of migration steps, applied atomically between
+/// decode steps and priced as explicit transfer stalls.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MigrationPlan {
+    pub steps: Vec<MigrationStep>,
+}
+
+impl MigrationPlan {
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// Number of expert-weight transfers the plan performs.
+    pub fn transfers(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Total bytes moved, given the per-expert weight size.
+    pub fn transfer_bytes(&self, expert_bytes: f64) -> f64 {
+        self.steps.len() as f64 * expert_bytes
+    }
+
+    /// Apply every step to the layout. Fails (leaving a partial
+    /// application) only if the plan was built against a different
+    /// layout state — callers plan and apply against the same placement.
+    pub fn apply(&self, placement: &mut ExpertPlacement) -> Result<(), String> {
+        for s in &self.steps {
+            if let Some(g) = s.from {
+                placement.unseat(s.expert, g)?;
+            }
+            placement.seat(s.expert, s.to)?;
+        }
+        Ok(())
+    }
+}
+
+/// Plan post-crash re-replication: every expert left with a single live
+/// replica gets one copy staged into a free slot, hottest expert first,
+/// preferring a target instance in a different failure domain than the
+/// surviving replica (then most-free, then lowest id). Bounded by
+/// `max_copies` and by available free slots. `avoid` excludes a target
+/// instance — the crashed instance still shows free slots after the
+/// drain, but staging onto it would be copying weights to a dead host.
+pub fn plan_re_replication(
+    placement: &ExpertPlacement,
+    counts: &[u64],
+    n_domains: usize,
+    max_copies: usize,
+    avoid: Option<u32>,
+) -> MigrationPlan {
+    let n = placement.n_instances as u32;
+    let mut free: Vec<usize> = (0..n).map(|g| placement.free_slots(g)).collect();
+    // Planned additions per instance (the plan isn't applied yet).
+    let mut planned: Vec<Vec<u16>> = vec![Vec::new(); n as usize];
+    let mut sole: Vec<u16> = (0..placement.experts as u16)
+        .filter(|&e| placement.replica_count(e) == 1)
+        .collect();
+    sole.sort_by(|&a, &b| {
+        counts[b as usize]
+            .cmp(&counts[a as usize])
+            .then(a.cmp(&b))
+    });
+    let mut plan = MigrationPlan::default();
+    for e in sole {
+        if plan.steps.len() >= max_copies {
+            break;
+        }
+        let hosts = placement.hosts(e);
+        if hosts.is_empty() {
+            continue; // dropped entirely; re-seating is the crash path's job
+        }
+        let home_domain = domain_of(hosts[0], n_domains);
+        let candidate = (0..n)
+            .filter(|&h| {
+                Some(h) != avoid
+                    && free[h as usize] > 0
+                    && !hosts.contains(&h)
+                    && !planned[h as usize].contains(&e)
+            })
+            .min_by_key(|&h| {
+                (
+                    usize::from(domain_of(h, n_domains) == home_domain),
+                    std::cmp::Reverse(free[h as usize]),
+                    h,
+                )
+            });
+        if let Some(h) = candidate {
+            free[h as usize] -= 1;
+            planned[h as usize].push(e);
+            plan.steps.push(MigrationStep {
+                expert: e,
+                from: None,
+                to: h,
+            });
+        }
+    }
+    plan
+}
+
+/// Plan bounded load rebalancing: repeatedly move the heaviest
+/// movable replica off the most-loaded instance onto the least-loaded
+/// instance with a free slot, while each move strictly reduces the
+/// max/min spread (per-replica load `counts[e] / R(e)`). Deterministic;
+/// at most `max_moves` steps.
+pub fn plan_rebalance(
+    placement: &ExpertPlacement,
+    counts: &[u64],
+    max_moves: usize,
+) -> MigrationPlan {
+    let n = placement.n_instances;
+    let per_replica = |e: u16| -> f64 {
+        let r = placement.replica_count(e);
+        if r == 0 {
+            0.0
+        } else {
+            counts[e as usize] as f64 / r as f64
+        }
+    };
+    let mut seated: Vec<Vec<u16>> = (0..n as u32).map(|g| placement.seated(g)).collect();
+    let mut free: Vec<usize> = (0..n as u32).map(|g| placement.free_slots(g)).collect();
+    let mut load: Vec<f64> = seated
+        .iter()
+        .map(|s| s.iter().map(|&e| per_replica(e)).sum())
+        .collect();
+    let mut plan = MigrationPlan::default();
+    while plan.steps.len() < max_moves {
+        let (mut g_max, mut g_min) = (0usize, 0usize);
+        for g in 1..n {
+            if load[g] > load[g_max] {
+                g_max = g;
+            }
+            if load[g] < load[g_min] {
+                g_min = g;
+            }
+        }
+        if g_max == g_min || free[g_min] == 0 {
+            break;
+        }
+        let diff = load[g_max] - load[g_min];
+        // Heaviest replica on g_max that g_min doesn't already host and
+        // whose move strictly shrinks the spread.
+        let mover = seated[g_max]
+            .iter()
+            .copied()
+            .filter(|&e| {
+                !seated[g_min].contains(&e) && {
+                    let l = per_replica(e);
+                    l > 0.0 && 2.0 * l < diff
+                }
+            })
+            .max_by(|&a, &b| {
+                per_replica(a)
+                    .total_cmp(&per_replica(b))
+                    .then(b.cmp(&a))
+            });
+        let Some(e) = mover else { break };
+        let l = per_replica(e);
+        load[g_max] -= l;
+        load[g_min] += l;
+        seated[g_max].retain(|&x| x != e);
+        seated[g_min].push(e);
+        free[g_max] += 1;
+        free[g_min] -= 1;
+        plan.steps.push(MigrationStep {
+            expert: e,
+            from: Some(g_max as u32),
+            to: g_min as u32,
+        });
+    }
+    plan
+}
+
+/// Linear demand extrapolation for predictive prefetch: observing the
+/// arrival rate λ_t yields the forecast λ̂ = max(0, 2λ_t − λ_{t−1}) for
+/// the next scaling interval, and `rising()` reports whether the last
+/// observation increased — the trigger for staging about-to-be-hot
+/// expert weights ahead of the demand crossover.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DemandForecaster {
+    prev: Option<f64>,
+    last: Option<f64>,
+}
+
+impl DemandForecaster {
+    /// Record λ_t and return the one-step-ahead forecast.
+    pub fn observe(&mut self, lambda: f64) -> f64 {
+        let prev = self.last.unwrap_or(lambda);
+        self.prev = self.last;
+        self.last = Some(lambda);
+        (2.0 * lambda - prev).max(0.0)
+    }
+
+    /// Whether demand rose at the last observation.
+    pub fn rising(&self) -> bool {
+        match (self.prev, self.last) {
+            (Some(p), Some(l)) => l > p,
+            _ => false,
+        }
+    }
+
+    /// Whether at least two observations have been recorded — the
+    /// point from which `rising()`/falling is meaningful.
+    pub fn has_history(&self) -> bool {
+        self.prev.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::gate::{ExpertPopularity, GateSim};
+    use crate::routing::trace::ActivationTrace;
+    use crate::util::rng::Rng;
+
+    fn zipf_counts(experts: usize, seed: u64) -> (Vec<u64>, CoactivationStats) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let g = GateSim::new(experts, 4, &ExpertPopularity::Zipf { s: 1.2 }, &mut rng);
+        let mut trace = ActivationTrace::new(experts, 4, 8192);
+        for _ in 0..48 {
+            trace.record_batch(&g.sample_batch(&mut rng, 128));
+        }
+        let coact = CoactivationStats::from_trace(&trace, 64);
+        (trace.expert_counts(), coact)
+    }
+
+    #[test]
+    fn mode_parse_and_names_round_trip() {
+        for m in ReplicationMode::ALL {
+            assert_eq!(ReplicationMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(ReplicationMode::parse("COACT"), Some(ReplicationMode::Coact));
+        assert_eq!(ReplicationMode::parse("bogus"), None);
+        assert_eq!(REPLICATION_ENV, "JANUS_REPLICATION");
+    }
+
+    #[test]
+    fn coverage_first_gives_hot_experts_two_replicas() {
+        let (counts, _) = zipf_counts(32, 3);
+        let cfg = DynamicsConfig::default();
+        let r = allocate_replicas_coact(&counts, 8, 6, &cfg).unwrap();
+        // Budget: 48 slots − 8 headroom = 40 usable for 32 experts →
+        // 8 coverage grants to the 8 hottest experts.
+        assert_eq!(r.iter().sum::<usize>(), 40);
+        let mut order: Vec<usize> = (0..32).collect();
+        order.sort_by(|&a, &b| counts[b].cmp(&counts[a]).then(a.cmp(&b)));
+        for &e in order.iter().take(8) {
+            assert!(r[e] >= 2, "hot expert {e} (count {}) uncovered", counts[e]);
+        }
+    }
+
+    #[test]
+    fn headroom_never_starves_the_one_slot_floor() {
+        // 4 experts, 4 slots: headroom must collapse to zero.
+        let r = allocate_replicas_coact(&[5, 4, 3, 2], 2, 2, &DynamicsConfig::default()).unwrap();
+        assert_eq!(r, vec![1, 1, 1, 1]);
+        let err = allocate_replicas_coact(&[1, 1, 1], 1, 2, &DynamicsConfig::default());
+        assert_eq!(
+            err.unwrap_err(),
+            PlacementError::InsufficientSlots {
+                slots: 2,
+                experts: 3
+            }
+        );
+    }
+
+    #[test]
+    fn coact_placement_keeps_headroom_and_spreads_domains() {
+        let (counts, coact) = zipf_counts(32, 5);
+        let cfg = DynamicsConfig::default();
+        let stuck_count = |p: &ExpertPlacement| -> usize {
+            (0..32u16)
+                .filter(|&e| {
+                    let hosts = p.hosts(e);
+                    hosts.len() >= 2 && {
+                        let d0 = domain_of(hosts[0], cfg.n_domains);
+                        hosts.iter().all(|&g| domain_of(g, cfg.n_domains) == d0)
+                    }
+                })
+                .count()
+        };
+        let r = allocate_replicas_coact(&counts, 8, 6, &cfg).unwrap();
+        let mut p = place_replicas(&r, &counts, &coact, 8, 6);
+        let before = stuck_count(&p);
+        let moves = spread_across_domains(&mut p, cfg.n_domains);
+        p.validate().unwrap();
+        let after = stuck_count(&p);
+        assert_eq!(before - after, moves, "each move un-sticks one expert");
+        // Repair is exhaustive given capacity: any still-stuck expert has
+        // no free slot left in the opposite domain.
+        for e in 0..32u16 {
+            let hosts = p.hosts(e);
+            if hosts.len() >= 2 {
+                let d0 = domain_of(hosts[0], cfg.n_domains);
+                if hosts.iter().all(|&g| domain_of(g, cfg.n_domains) == d0) {
+                    let free_elsewhere = (0..8u32).any(|h| {
+                        domain_of(h, cfg.n_domains) != d0 && p.free_slots(h) > 0
+                    });
+                    assert!(!free_elsewhere, "expert {e} was repairable but left stuck");
+                }
+            }
+        }
+        // Headroom is preserved: repair moves replicas, never adds them.
+        let free: usize = (0..8u32).map(|g| p.free_slots(g)).sum();
+        assert_eq!(free, 8, "headroom of 1 slot × 8 instances survives placement");
+        // The end-to-end pipeline agrees with the staged construction.
+        let q = place_replicas_coact(&counts, &coact, 8, 6, &cfg).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn spread_repair_is_deterministic_and_bounded() {
+        // Hand-build: expert 0 has replicas on instances 0 and 2 (both
+        // domain 0 of 2); instance 1 (domain 1) has a free slot.
+        let mut p = ExpertPlacement::empty(3, 4, 2);
+        p.seat(0, 0).unwrap();
+        p.seat(0, 2).unwrap();
+        p.seat(1, 1).unwrap();
+        p.seat(2, 3).unwrap();
+        let mut q = p.clone();
+        assert_eq!(spread_across_domains(&mut p, 2), 1);
+        assert_eq!(spread_across_domains(&mut q, 2), 1);
+        assert_eq!(p, q);
+        let hosts = p.hosts(0);
+        assert!(hosts.iter().any(|&g| g % 2 == 1), "{hosts:?}");
+        assert_eq!(spread_across_domains(&mut p, 2), 0, "idempotent once spread");
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn re_replication_restores_sole_replica_coverage() {
+        let (counts, coact) = zipf_counts(32, 7);
+        let cfg = DynamicsConfig::default();
+        let mut p = place_replicas_coact(&counts, &coact, 8, 6, &cfg).unwrap();
+        let mut drained = Vec::new();
+        p.drain_instance(0, &mut drained);
+        let sole_before = (0..32u16).filter(|&e| p.replica_count(e) == 1).count();
+        assert!(sole_before > 0, "crash should create sole replicas");
+        let plan = plan_re_replication(&p, &counts, cfg.n_domains, 16, Some(0));
+        assert!(!plan.is_empty());
+        assert!(plan.steps.iter().all(|s| s.from.is_none()), "copies only");
+        assert!(
+            plan.steps.iter().all(|s| s.to != 0),
+            "never stage onto the crashed instance"
+        );
+        plan.apply(&mut p).unwrap();
+        p.validate().unwrap();
+        let sole_after = (0..32u16).filter(|&e| p.replica_count(e) == 1).count();
+        assert!(
+            sole_after < sole_before,
+            "re-replication must shrink the sole-replica set: {sole_after} vs {sole_before}"
+        );
+        // Deterministic: planning twice against the same layout agrees.
+        let mut p2 = place_replicas_coact(&counts, &coact, 8, 6, &cfg).unwrap();
+        let mut d2 = Vec::new();
+        p2.drain_instance(0, &mut d2);
+        assert_eq!(
+            plan,
+            plan_re_replication(&p2, &counts, cfg.n_domains, 16, Some(0))
+        );
+    }
+
+    #[test]
+    fn rebalance_shrinks_the_load_spread_within_bounds() {
+        // Instance 0 hosts the two hottest experts; instance 1 is empty.
+        let mut p = ExpertPlacement::empty(4, 2, 4);
+        for e in 0..4u16 {
+            p.seat(e, 0).unwrap();
+        }
+        let counts = [400u64, 300, 10, 5];
+        let plan = plan_rebalance(&p, &counts, 8);
+        assert!(!plan.is_empty() && plan.transfers() <= 8);
+        let spread = |p: &ExpertPlacement| -> f64 {
+            let l = |g: u32| -> f64 {
+                p.seated(g)
+                    .iter()
+                    .map(|&e| counts[e as usize] as f64 / p.replica_count(e) as f64)
+                    .sum()
+            };
+            (l(0) - l(1)).abs()
+        };
+        let before = spread(&p);
+        plan.apply(&mut p).unwrap();
+        p.validate().unwrap();
+        assert!(spread(&p) < before, "{} !< {before}", spread(&p));
+        assert_eq!(plan.transfer_bytes(100.0), plan.transfers() as f64 * 100.0);
+    }
+
+    #[test]
+    fn forecaster_extrapolates_and_flags_rising_demand() {
+        let mut f = DemandForecaster::default();
+        assert!(!f.has_history());
+        assert_eq!(f.observe(1.0), 1.0, "first observation: no history");
+        assert!(!f.rising());
+        assert!(!f.has_history());
+        assert_eq!(f.observe(2.0), 3.0, "2·2 − 1");
+        assert!(f.rising());
+        assert!(f.has_history());
+        assert_eq!(f.observe(3.0), 4.0);
+        assert!(f.rising());
+        assert_eq!(f.observe(1.0), 0.0, "forecast clamps at zero");
+        assert!(!f.rising());
+    }
+}

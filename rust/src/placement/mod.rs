@@ -7,11 +7,20 @@
 //!   (Appendix B "Replica count").
 //! - `algorithm3` places replicas minimizing co-activation pressure
 //!   (Appendix B Algorithm 3: greedy + bounded swap).
+//! - `dynamics` makes the pipeline availability-aware: coverage-first
+//!   replication with headroom, anti-affinity across failure domains,
+//!   deterministic live migration (post-crash re-replication + load
+//!   rebalancing), and demand forecasting for predictive prefetch.
 
 pub mod algorithm3;
+pub mod dynamics;
 pub mod layout;
 pub mod replicas;
 
 pub use algorithm3::place_replicas;
+pub use dynamics::{
+    DemandForecaster, DynamicsConfig, MigrationPlan, MigrationStep, ReplicationMode,
+    REPLICATION_ENV,
+};
 pub use layout::ExpertPlacement;
-pub use replicas::allocate_replicas;
+pub use replicas::{allocate_replicas, PlacementError};

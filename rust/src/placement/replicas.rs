@@ -5,20 +5,50 @@
 //! iteratively to the expert with the highest per-replica load
 //! l(e) = c(e)/R(e), equalizing per-replica activation pressure.
 
+use std::fmt;
+
+/// Structural errors from replica allocation/placement. Mirrors the
+/// `ScenarioError` style: a descriptive value the caller can surface,
+/// instead of an `assert!` that takes the whole process down (the tidy
+/// `no-panic-in-lib` invariant).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PlacementError {
+    /// Fewer slots than logical experts: no placement can seat one
+    /// replica of every expert.
+    InsufficientSlots { slots: usize, experts: usize },
+}
+
+impl fmt::Display for PlacementError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlacementError::InsufficientSlots { slots, experts } => write!(
+                f,
+                "need at least one slot per expert: {slots} slots < {experts} experts"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PlacementError {}
+
 /// Compute R(e) for every expert.
 ///
 /// * `counts` — activation counts c(e) over a sliding window.
 /// * `n_instances`, `capacity` — MoE-side shape (S = n_e·C).
 ///
 /// Returns per-expert replica counts, each in [1, n_instances]
-/// (an instance hosts an expert at most once, so R(e) ≤ n_e).
-pub fn allocate_replicas(counts: &[u64], n_instances: usize, capacity: usize) -> Vec<usize> {
+/// (an instance hosts an expert at most once, so R(e) ≤ n_e), or
+/// [`PlacementError::InsufficientSlots`] when S < E.
+pub fn allocate_replicas(
+    counts: &[u64],
+    n_instances: usize,
+    capacity: usize,
+) -> Result<Vec<usize>, PlacementError> {
     let experts = counts.len();
     let slots = n_instances * capacity;
-    assert!(
-        slots >= experts,
-        "need at least one slot per expert: {slots} < {experts}"
-    );
+    if slots < experts {
+        return Err(PlacementError::InsufficientSlots { slots, experts });
+    }
     let mut r = vec![1usize; experts];
     let mut extra = slots - experts;
 
@@ -48,7 +78,7 @@ pub fn allocate_replicas(counts: &[u64], n_instances: usize, capacity: usize) ->
             None => break, // every expert is fully replicated
         }
     }
-    r
+    Ok(r)
 }
 
 #[cfg(test)]
@@ -57,14 +87,14 @@ mod tests {
 
     #[test]
     fn every_expert_gets_one() {
-        let r = allocate_replicas(&[0, 0, 0, 0], 2, 2);
+        let r = allocate_replicas(&[0, 0, 0, 0], 2, 2).unwrap();
         assert_eq!(r, vec![1, 1, 1, 1]);
     }
 
     #[test]
     fn hot_expert_gets_extras() {
         // 4 experts, 8 slots → 4 extra replicas; expert 0 is 10× hotter.
-        let r = allocate_replicas(&[1000, 100, 100, 100], 4, 2);
+        let r = allocate_replicas(&[1000, 100, 100, 100], 4, 2).unwrap();
         assert_eq!(r.iter().sum::<usize>(), 8);
         assert!(r[0] > r[1], "{r:?}");
         assert_eq!(r[0], 4, "hot expert saturates at n_instances: {r:?}");
@@ -75,13 +105,13 @@ mod tests {
         // counts 90/30/30/30, 6 slots → 2 extra.
         // grant1: e0 (90) → R=[2,1,1,1]; loads 45/30/30/30
         // grant2: e0 (45) → R=[3,1,1,1]
-        let r = allocate_replicas(&[90, 30, 30, 30], 3, 2);
+        let r = allocate_replicas(&[90, 30, 30, 30], 3, 2).unwrap();
         assert_eq!(r, vec![3, 1, 1, 1]);
     }
 
     #[test]
     fn replica_cap_is_n_instances() {
-        let r = allocate_replicas(&[1_000_000, 1], 2, 4);
+        let r = allocate_replicas(&[1_000_000, 1], 2, 4).unwrap();
         assert!(r[0] <= 2 && r[1] <= 2, "{r:?}");
     }
 
@@ -90,7 +120,7 @@ mod tests {
         let mut counts = vec![1u64; 16];
         counts[0] = 100_000;
         counts[1] = 90_000;
-        let r = allocate_replicas(&counts, 4, 5); // 20 slots, 4 extra
+        let r = allocate_replicas(&counts, 4, 5).unwrap(); // 20 slots, 4 extra
         for e in 2..16 {
             assert_eq!(r[e], 1, "cold expert {e} should stay singleton");
         }
@@ -98,8 +128,16 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn too_few_slots_panics() {
-        allocate_replicas(&[1, 1, 1], 1, 2);
+    fn too_few_slots_is_a_descriptive_error() {
+        let err = allocate_replicas(&[1, 1, 1], 1, 2).unwrap_err();
+        assert_eq!(
+            err,
+            PlacementError::InsufficientSlots {
+                slots: 2,
+                experts: 3
+            }
+        );
+        let msg = err.to_string();
+        assert!(msg.contains("2 slots < 3 experts"), "{msg}");
     }
 }

@@ -19,6 +19,11 @@ pub struct CoactivationStats {
     pub counts: Vec<f64>,
     /// Number of windows accumulated.
     pub windows: u64,
+    /// Per-window retention multiplier λ = 0.5^(1/half_life). `None`
+    /// disables decay entirely: the accumulation path then performs no
+    /// floating-point scaling at all, so stats are bit-identical to the
+    /// pre-decay implementation.
+    decay: Option<f64>,
 }
 
 impl CoactivationStats {
@@ -28,7 +33,29 @@ impl CoactivationStats {
             pairs: vec![0.0; experts * (experts - 1) / 2],
             counts: vec![0.0; experts],
             windows: 0,
+            decay: None,
         }
+    }
+
+    /// Enable exponential decay with the given half-life, measured in
+    /// windows: after `half_life` further windows, previously recorded
+    /// traffic carries half its original weight, so stale traffic stops
+    /// pinning stale placement. Non-finite or non-positive half-lives
+    /// disable decay (equivalent to an infinite window).
+    pub fn with_half_life(mut self, half_life_windows: f64) -> Self {
+        self.set_half_life(half_life_windows);
+        self
+    }
+
+    /// In-place form of [`with_half_life`](Self::with_half_life);
+    /// applies prospectively (already-accumulated weight is untouched
+    /// until the next recorded window).
+    pub fn set_half_life(&mut self, half_life_windows: f64) {
+        self.decay = if half_life_windows.is_finite() && half_life_windows > 0.0 {
+            Some(0.5f64.powf(1.0 / half_life_windows))
+        } else {
+            None
+        };
     }
 
     #[inline]
@@ -48,8 +75,18 @@ impl CoactivationStats {
     }
 
     /// Accumulate one batch-window: every pair of distinct experts
-    /// activated in the window co-activates once.
+    /// activated in the window co-activates once. With a half-life set,
+    /// all previously accumulated weight is scaled by λ first, so a
+    /// window recorded w windows ago carries weight λ^w.
     pub fn record_window(&mut self, batch: &RoutingBatch) {
+        if let Some(lambda) = self.decay {
+            for c in &mut self.counts {
+                *c *= lambda;
+            }
+            for p in &mut self.pairs {
+                *p *= lambda;
+            }
+        }
         let (seen, _) = batch.activated_set();
         let active: Vec<usize> = seen
             .iter()
@@ -69,8 +106,26 @@ impl CoactivationStats {
     /// Build from a trace, slicing it into consecutive windows of
     /// `window_tokens` tokens.
     pub fn from_trace(trace: &ActivationTrace, window_tokens: usize) -> Self {
+        CoactivationStats::new(trace.experts).accumulated(trace, window_tokens)
+    }
+
+    /// [`from_trace`](Self::from_trace) with exponential decay: recent
+    /// windows dominate the statistics (half-life measured in windows),
+    /// so availability-aware placement tracks diurnal drift instead of
+    /// the all-time average.
+    pub fn from_trace_decayed(
+        trace: &ActivationTrace,
+        window_tokens: usize,
+        half_life_windows: f64,
+    ) -> Self {
+        CoactivationStats::new(trace.experts)
+            .with_half_life(half_life_windows)
+            .accumulated(trace, window_tokens)
+    }
+
+    /// Shared trace-slicing accumulation behind the `from_trace*` ctors.
+    fn accumulated(mut self, trace: &ActivationTrace, window_tokens: usize) -> Self {
         assert!(window_tokens > 0);
-        let mut stats = CoactivationStats::new(trace.experts);
         let n = trace.len_tokens();
         let mut start = 0;
         while start + window_tokens <= n {
@@ -79,10 +134,10 @@ impl CoactivationStats {
             for t in 0..window_tokens {
                 batch.token_mut(t).copy_from_slice(trace.token(start + t));
             }
-            stats.record_window(&batch);
+            self.record_window(&batch);
             start += window_tokens;
         }
-        stats
+        self
     }
 
     /// Co-activation load a placement set imposes: Σ_{e<e' ∈ set} a(e,e')
@@ -150,6 +205,71 @@ mod tests {
             s.set_load(&v)
         };
         assert!((with - s.set_load(&set) - s.incremental_load(9, &set)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn half_life_decays_old_windows() {
+        // half-life of exactly one window → λ = 0.5.
+        let mut s = CoactivationStats::new(6).with_half_life(1.0);
+        s.record_window(&RoutingBatch::from_rows(&[vec![0, 1]], 6));
+        s.record_window(&RoutingBatch::from_rows(&[vec![2, 3]], 6));
+        assert_eq!(s.coact(0, 1), 0.5, "first window decayed once");
+        assert_eq!(s.coact(2, 3), 1.0, "fresh window at full weight");
+        assert_eq!(s.counts[0], 0.5);
+        assert_eq!(s.counts[2], 1.0);
+        assert_eq!(s.windows, 2, "decay does not change window counting");
+    }
+
+    #[test]
+    fn decay_off_is_bit_identical_to_legacy_integer_accumulation() {
+        // Without a half-life the accumulation path performs no scaling:
+        // after any number of windows every cell is an exactly
+        // representable integer, pinned at the bit level. Non-positive /
+        // non-finite half-lives mean "off" too.
+        let mut plain = CoactivationStats::new(6);
+        let mut disabled = CoactivationStats::new(6)
+            .with_half_life(f64::INFINITY)
+            .with_half_life(0.0);
+        for _ in 0..3 {
+            let b = RoutingBatch::from_rows(&[vec![0, 1], vec![2, 1]], 6);
+            plain.record_window(&b);
+            disabled.record_window(&b);
+        }
+        assert_eq!(plain.coact(0, 1).to_bits(), 3.0f64.to_bits());
+        assert_eq!(plain.counts[1].to_bits(), 3.0f64.to_bits());
+        assert_eq!(disabled.coact(0, 1).to_bits(), plain.coact(0, 1).to_bits());
+        assert_eq!(disabled.counts[1].to_bits(), plain.counts[1].to_bits());
+    }
+
+    #[test]
+    fn set_half_life_applies_prospectively() {
+        let mut s = CoactivationStats::new(6);
+        s.record_window(&RoutingBatch::from_rows(&[vec![0, 1]], 6));
+        s.set_half_life(1.0);
+        assert_eq!(s.coact(0, 1), 1.0, "no retroactive decay");
+        s.record_window(&RoutingBatch::from_rows(&[vec![2, 3]], 6));
+        assert_eq!(s.coact(0, 1), 0.5);
+    }
+
+    #[test]
+    fn from_trace_decayed_weights_recent_windows() {
+        use crate::routing::trace::ActivationTrace;
+        let mut tr = ActivationTrace::new(4, 1, 100);
+        // Window 1: expert 0 four times; window 2: expert 1 four times.
+        for _ in 0..4 {
+            tr.record_token(&[0]);
+        }
+        for _ in 0..4 {
+            tr.record_token(&[1]);
+        }
+        let s = CoactivationStats::from_trace_decayed(&tr, 4, 1.0);
+        assert_eq!(s.windows, 2);
+        assert_eq!(s.counts[0], 0.5, "older window decayed once");
+        assert_eq!(s.counts[1], 1.0, "latest window at full weight");
+        // Decay off reproduces from_trace bit-for-bit.
+        let plain = CoactivationStats::from_trace(&tr, 4);
+        let off = CoactivationStats::from_trace_decayed(&tr, 4, f64::INFINITY);
+        assert_eq!(off.counts[0].to_bits(), plain.counts[0].to_bits());
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! balls-into-bins upper bound (Appendix A, Eq. 5).
 
 use crate::config::serving::SchedulerKind;
+use crate::placement::dynamics::{place_replicas_coact, DynamicsConfig, ReplicationMode};
 use crate::placement::{allocate_replicas, place_replicas, ExpertPlacement};
 use crate::routing::coactivation::CoactivationStats;
 use crate::routing::trace::ActivationTrace;
@@ -31,6 +32,8 @@ pub struct AmaxTable {
 
 impl AmaxTable {
     /// Build from a trace. `samples` batches are drawn per (n_e, B) cell.
+    /// Uses the legacy static replica pipeline — bit-identical to the
+    /// pre-dynamics estimator.
     #[allow(clippy::too_many_arguments)]
     pub fn build(
         trace: &ActivationTrace,
@@ -41,10 +44,46 @@ impl AmaxTable {
         samples: usize,
         rng: &mut Rng,
     ) -> Self {
+        Self::build_with_mode(
+            trace,
+            n_e_values,
+            batch_grid,
+            capacity,
+            scheduler,
+            samples,
+            rng,
+            ReplicationMode::Static,
+            &DynamicsConfig::default(),
+        )
+    }
+
+    /// [`build`](Self::build) with an explicit replica-placement mode.
+    /// `Static` reproduces the legacy pipeline byte-for-byte; `Coact`
+    /// builds availability-aware placements (coverage-first replication
+    /// with headroom + anti-affinity, over decayed co-activation stats)
+    /// for every candidate n_e.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_with_mode(
+        trace: &ActivationTrace,
+        n_e_values: &[usize],
+        batch_grid: &[usize],
+        capacity: usize,
+        scheduler: SchedulerKind,
+        samples: usize,
+        rng: &mut Rng,
+        mode: ReplicationMode,
+        dyn_cfg: &DynamicsConfig,
+    ) -> Self {
         assert!(!trace.is_empty(), "â_max estimation needs a trace");
         let counts = trace.expert_counts();
         // Co-activation windows at a typical online batch size.
-        let coact = CoactivationStats::from_trace(trace, 64.min(trace.len_tokens()));
+        let window = 64.min(trace.len_tokens());
+        let coact = match mode {
+            ReplicationMode::Static => CoactivationStats::from_trace(trace, window),
+            ReplicationMode::Coact => {
+                CoactivationStats::from_trace_decayed(trace, window, dyn_cfg.half_life_windows)
+            }
+        };
         let mut table = Vec::with_capacity(n_e_values.len());
         let mut placements = Vec::with_capacity(n_e_values.len());
         for &n_e in n_e_values {
@@ -53,8 +92,19 @@ impl AmaxTable {
                 "n_e {n_e} × C {capacity} cannot seat {} experts",
                 trace.experts
             );
-            let replicas = allocate_replicas(&counts, n_e, capacity);
-            let placement = place_replicas(&replicas, &counts, &coact, n_e, capacity);
+            let placement = match mode {
+                ReplicationMode::Static => {
+                    let replicas = allocate_replicas(&counts, n_e, capacity)
+                        // tidy:allow(no-panic-in-lib): n_e × C ≥ experts asserted just above
+                        .expect("slot shape asserted above");
+                    place_replicas(&replicas, &counts, &coact, n_e, capacity)
+                }
+                ReplicationMode::Coact => {
+                    place_replicas_coact(&counts, &coact, n_e, capacity, dyn_cfg)
+                        // tidy:allow(no-panic-in-lib): n_e × C ≥ experts asserted just above
+                        .expect("slot shape asserted above")
+                }
+            };
             let mut ws = aebs::Workspace::new(trace.experts, n_e);
             let mut row = Vec::with_capacity(batch_grid.len());
             for &b in batch_grid {
@@ -277,6 +327,57 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn coact_mode_keeps_headroom_and_static_matches_build() {
+        let (tr, _) = trace(64, 6, 0.8, 21);
+        let cfg = DynamicsConfig::default();
+        let mut rng_a = Rng::seed_from_u64(22);
+        let a = AmaxTable::build(
+            &tr,
+            &[8, 10],
+            &[16, 64],
+            12,
+            SchedulerKind::Aebs,
+            4,
+            &mut rng_a,
+        );
+        let mut rng_b = Rng::seed_from_u64(22);
+        let b = AmaxTable::build_with_mode(
+            &tr,
+            &[8, 10],
+            &[16, 64],
+            12,
+            SchedulerKind::Aebs,
+            4,
+            &mut rng_b,
+            ReplicationMode::Static,
+            &cfg,
+        );
+        assert_eq!(a.placements, b.placements, "build == build_with_mode(Static)");
+        assert_eq!(a.table, b.table);
+        let mut rng_c = Rng::seed_from_u64(22);
+        let c = AmaxTable::build_with_mode(
+            &tr,
+            &[8, 10],
+            &[16, 64],
+            12,
+            SchedulerKind::Aebs,
+            4,
+            &mut rng_c,
+            ReplicationMode::Coact,
+            &cfg,
+        );
+        for &n_e in &[8usize, 10] {
+            let p = c.placement_for(n_e).unwrap();
+            p.validate().unwrap();
+            let free: usize = (0..n_e as u32).map(|g| p.free_slots(g)).sum();
+            assert!(
+                free >= n_e,
+                "coact placement keeps crash headroom: {free} free slots for n_e={n_e}"
+            );
         }
     }
 

@@ -116,6 +116,12 @@ pub enum EventKind {
     Fault { idx: usize },
     /// Fault window `idx` closes: the faulted resource returns.
     FaultClear { idx: usize },
+    /// An availability-aware recovery finished restoring full service
+    /// (re-seating + re-replication complete) before fault window `idx`
+    /// was scripted to clear: the degradation window ends now, while
+    /// the faulted resource itself still returns at `FaultClear`. Only
+    /// scheduled when a recovery reports `restored_secs`.
+    FaultRepaired { idx: usize },
 }
 
 impl EventKind {
@@ -1435,7 +1441,8 @@ pub fn autoscale<S: ServingSystem + ?Sized>(
             EventKind::Failure { .. }
             | EventKind::Recovery { .. }
             | EventKind::Fault { .. }
-            | EventKind::FaultClear { .. } => {
+            | EventKind::FaultClear { .. }
+            | EventKind::FaultRepaired { .. } => {
                 // tidy:allow(no-panic-in-lib): this scenario never schedules these events
                 unreachable!("autoscale scenario schedules no failure or fault events")
             }
@@ -1801,6 +1808,14 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                     feasible_decisions += 1;
                 }
                 track(system.gpus(), &mut min_gpus, &mut max_gpus);
+                // Background placement maintenance (predictive prefetch
+                // staging of about-to-be-hot expert weights) surfaces as
+                // an explicit transfer stall on the next decode step.
+                // Systems with nothing pending return 0.0 and `add_stall`
+                // charges nothing, so legacy paths stay bit-identical.
+                if let Some(ctl) = faultctl.as_mut() {
+                    ctl.add_stall(system.placement_maintenance());
+                }
                 if t_end < sc.horizon {
                     queue.push(t_end, EventKind::ScalingDecision);
                 }
@@ -1864,6 +1879,19 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                         track(system.gpus(), &mut min_gpus, &mut max_gpus);
                         ctl.note_recovery(ev.time, f.kind.label(), action, f.duration, 0, 0, 0);
                         ctl.add_stall(action.transfer_secs);
+                        // Background re-replication copies (restoring the
+                        // replication invariant on the survivors) are
+                        // charged as transfer stalls off the critical path.
+                        ctl.add_stall(action.background_secs);
+                        // An availability-aware recovery that restored
+                        // full service ends the degradation window early;
+                        // the instance itself still returns at FaultClear.
+                        if let Some(r) = action.restored_secs {
+                            let done = ev.time + r.max(0.0);
+                            if done < ev.time + f.duration {
+                                queue.push(done, EventKind::FaultRepaired { idx });
+                            }
+                        }
                     }
                     FaultKind::AttentionHostLoss { host, migrate_kv } => {
                         account(&mut hours, &mut last_account, ev.time, system.gpus());
@@ -1991,6 +2019,15 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                     }
                     FaultKind::TransientComm { .. } => {}
                 }
+                let now_degraded = failed_gpus > 0 || ctl.fault_active();
+                sample_degraded(&mut degraded_since, &mut degraded_time, ev.time, now_degraded);
+            }
+            EventKind::FaultRepaired { idx } => {
+                // tidy:allow(no-panic-in-lib): FaultRepaired events are only scheduled from an installed plan
+                let ctl = faultctl
+                    .as_mut()
+                    .expect("FaultRepaired event without a FaultPlan");
+                ctl.on_early_repair(idx, ev.time);
                 let now_degraded = failed_gpus > 0 || ctl.fault_active();
                 sample_degraded(&mut degraded_since, &mut degraded_time, ev.time, now_degraded);
             }

@@ -22,6 +22,18 @@ pub struct RecoveryAction {
     pub dropped_experts: usize,
     /// Modeled weight/KV transfer time of the repair, seconds.
     pub transfer_secs: f64,
+    /// Replicas copied in the background (post-crash re-replication
+    /// restoring the replication invariant on the survivors).
+    pub re_replicated_experts: usize,
+    /// Background weight-copy time, seconds — charged as a stall but
+    /// off the critical repair path.
+    pub background_secs: f64,
+    /// When `Some(r)`, the system restored *full* service `r` seconds
+    /// after the fault (every expert live again, replication invariant
+    /// restored): the engine ends the degradation window early and the
+    /// event's MTTR is `r` (capped at the fault window). `None` keeps
+    /// the legacy degraded-for-the-whole-window semantics.
+    pub restored_secs: Option<f64>,
 }
 
 impl RecoveryAction {
@@ -33,6 +45,9 @@ impl RecoveryAction {
             moved_experts: 0,
             dropped_experts: 0,
             transfer_secs: 0.0,
+            re_replicated_experts: 0,
+            background_secs: 0.0,
+            restored_secs: None,
         }
     }
 
@@ -45,6 +60,9 @@ impl RecoveryAction {
             moved_experts: moved,
             dropped_experts: dropped,
             transfer_secs,
+            re_replicated_experts: 0,
+            background_secs: 0.0,
+            restored_secs: None,
         }
     }
 
@@ -57,7 +75,25 @@ impl RecoveryAction {
             moved_experts: 0,
             dropped_experts: 0,
             transfer_secs: 0.0,
+            re_replicated_experts: 0,
+            background_secs: 0.0,
+            restored_secs: None,
         }
+    }
+
+    /// Attach background re-replication work: `copies` replicas staged
+    /// onto survivors over `background_secs` of modeled transfer.
+    pub fn with_re_replication(mut self, copies: usize, background_secs: f64) -> Self {
+        self.re_replicated_experts = copies;
+        self.background_secs = background_secs;
+        self
+    }
+
+    /// Declare full service restored `secs` after the fault, ending
+    /// the degradation window early (availability-aware recoveries).
+    pub fn with_service_restored(mut self, secs: f64) -> Self {
+        self.restored_secs = Some(secs.max(0.0));
+        self
     }
 }
 
@@ -177,9 +213,13 @@ impl FaultController {
     }
 
     /// Record the recovery the serving system performed for one fault
-    /// event. `duration` is the fault's full window length — the MTTR
-    /// of a whole-pool recovery; narrowed recoveries repair in their
-    /// transfer time.
+    /// event. `duration` is the fault's full window length. Per-event
+    /// MTTR: a recovery that declared `restored_secs` repaired in that
+    /// time (capped at the window); a *feasible* narrowed recovery
+    /// repaired in its transfer time; everything else — whole-pool
+    /// recoveries, and narrowed recoveries that dropped experts (the
+    /// serving state stays broken until the resource returns) — costs
+    /// the full window.
     #[allow(clippy::too_many_arguments)]
     pub fn note_recovery(
         &mut self,
@@ -193,6 +233,8 @@ impl FaultController {
     ) {
         self.stats.migrated_kv_tokens += migrated_kv_tokens;
         self.stats.recompute_tokens += recompute_tokens;
+        self.stats.re_replicated_experts += action.re_replicated_experts as u64;
+        self.stats.background_transfer_secs += action.background_secs;
         self.stats.events.push(FaultEvent {
             at,
             kind,
@@ -201,15 +243,27 @@ impl FaultController {
             moved_experts: action.moved_experts,
             dropped_experts: action.dropped_experts,
             transfer_secs: action.transfer_secs,
-            mttr: if action.narrowed {
-                action.transfer_secs
-            } else {
-                duration
+            mttr: match action.restored_secs {
+                Some(r) => r.min(duration),
+                None if action.narrowed && action.feasible => action.transfer_secs,
+                None => duration,
             },
             evicted,
             migrated_kv_tokens,
             recompute_tokens,
         });
+    }
+
+    /// An availability-aware recovery finished restoring full service
+    /// before fault window `idx`'s scripted end: close the degradation
+    /// window now. The eventual `FaultClear` still runs the system-side
+    /// restore (`on_clear` is idempotent). No-op if the window already
+    /// closed.
+    pub fn on_early_repair(&mut self, idx: usize, now: f64) {
+        if self.active[idx] {
+            self.stats.early_repairs += 1;
+            self.on_clear(idx, now);
+        }
     }
 
     /// Charge a repair stall (weight transfer, KV migration) against
@@ -386,5 +440,73 @@ mod tests {
         assert_eq!(ctl.stats.migrated_kv_tokens, 128);
         assert_eq!(ctl.stats.recompute_tokens, 64);
         assert!((ctl.stats.mttr_mean() - 30.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dropped_experts_cost_the_full_window() {
+        // A narrowed recovery that dropped experts leaves the serving
+        // state broken until the instance returns: its MTTR is the
+        // whole fault window, not the (possibly zero) transfer time.
+        let plan = FaultPlan::new().with_instance_crash(1.0, 60.0, 0);
+        let mut ctl = FaultController::new(&plan, 5, 100.0);
+        ctl.note_recovery(
+            1.0,
+            "instance-crash",
+            RecoveryAction::expert_replacement(0, 3, 0.0),
+            60.0,
+            0,
+            0,
+            0,
+        );
+        assert!((ctl.stats.events[0].mttr - 60.0).abs() < 1e-12);
+        assert!(!ctl.stats.events[0].feasible);
+    }
+
+    #[test]
+    fn restored_secs_overrides_and_caps_mttr() {
+        let plan = FaultPlan::new().with_instance_crash(1.0, 60.0, 0);
+        let mut ctl = FaultController::new(&plan, 5, 100.0);
+        let action = RecoveryAction::expert_replacement(4, 0, 0.2)
+            .with_re_replication(3, 0.15)
+            .with_service_restored(0.35);
+        assert_eq!(action.re_replicated_experts, 3);
+        ctl.note_recovery(1.0, "instance-crash", action, 60.0, 0, 0, 0);
+        assert!((ctl.stats.events[0].mttr - 0.35).abs() < 1e-12);
+        assert_eq!(ctl.stats.re_replicated_experts, 3);
+        assert!((ctl.stats.background_transfer_secs - 0.15).abs() < 1e-12);
+        // Declared restore times never exceed the fault window.
+        ctl.note_recovery(
+            1.0,
+            "instance-crash",
+            RecoveryAction::whole_pool(true).with_service_restored(120.0),
+            60.0,
+            0,
+            0,
+            0,
+        );
+        assert!((ctl.stats.events[1].mttr - 60.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn early_repair_closes_the_window_once() {
+        let plan = FaultPlan::new()
+            .with_instance_crash(10.0, 50.0, 0)
+            .with_policy(DegradationPolicy::Replica);
+        let mut ctl = FaultController::new(&plan, 9, 100.0);
+        ctl.on_fault(0, 10.0);
+        assert!(ctl.fault_active());
+        ctl.on_early_repair(0, 12.5);
+        assert!(!ctl.fault_active(), "early repair closes the window");
+        assert_eq!(ctl.stats.early_repairs, 1);
+        // The scripted clear (and repeated repairs) are no-ops.
+        ctl.on_early_repair(0, 13.0);
+        ctl.on_clear(0, 60.0);
+        assert_eq!(ctl.stats.early_repairs, 1);
+        let stats = ctl.finish(100.0);
+        assert!(
+            (stats.degraded_time - 2.5).abs() < 1e-12,
+            "degraded only [10, 12.5): {}",
+            stats.degraded_time
+        );
     }
 }

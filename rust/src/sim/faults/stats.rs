@@ -21,8 +21,11 @@ pub struct FaultEvent {
     pub dropped_experts: usize,
     /// Modeled weight/KV transfer time of the repair, seconds.
     pub transfer_secs: f64,
-    /// Mean-time-to-repair of this event: the transfer time for
-    /// narrowed recoveries, the full fault window for whole-pool ones.
+    /// Mean-time-to-repair of this event: the declared restore time for
+    /// availability-aware recoveries (capped at the window), the
+    /// transfer time for feasible narrowed recoveries, the full fault
+    /// window for whole-pool recoveries and for narrowed recoveries
+    /// that dropped experts.
     pub mttr: f64,
     /// In-flight requests evicted back to admission.
     pub evicted: usize,
@@ -53,6 +56,16 @@ pub struct FaultStats {
     /// Seconds with at least one fault window active (legacy whole-pool
     /// outage windows are added by the engine), clamped to the horizon.
     pub degraded_time: f64,
+    /// Replicas copied onto survivors by post-crash re-replication
+    /// (availability-aware placement restoring the replication
+    /// invariant).
+    pub re_replicated_experts: u64,
+    /// Total background weight-copy time (re-replication, prefetch
+    /// staging), seconds — charged as stalls off the critical path.
+    pub background_transfer_secs: f64,
+    /// Fault windows closed early because the recovery restored full
+    /// service before the scripted clear.
+    pub early_repairs: u64,
 }
 
 impl FaultStats {

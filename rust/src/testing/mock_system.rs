@@ -30,6 +30,17 @@ pub struct MockServingSystem {
     /// whole-pool path — lets engine tests pin the narrowed accounting
     /// without building a real placement.
     pub narrowed_crash: Option<(usize, f64)>,
+    /// Experts the scripted narrowed crash *drops* (loses every replica
+    /// of). Nonzero makes the scripted recovery infeasible — the engine
+    /// then charges the full fault duration as MTTR, mimicking a static
+    /// placement whose saturated instances cannot re-seat anything.
+    pub crash_dropped: usize,
+    /// When set alongside [`narrowed_crash`](Self::narrowed_crash), the
+    /// scripted crash recovery declares service restored this many
+    /// seconds after the crash — mimicking an availability-aware
+    /// placement that re-seats every lost expert and closes the
+    /// degraded window early.
+    pub restored_secs: Option<f64>,
     /// Instances `crash_instance` was called with, in order.
     pub crash_log: Vec<u32>,
     /// Instances `restore_instance` was called with, in order.
@@ -54,6 +65,8 @@ impl MockServingSystem {
             feasibility: Vec::new(),
             straggler: 1.0,
             narrowed_crash: None,
+            crash_dropped: 0,
+            restored_secs: None,
             crash_log: Vec::new(),
             restore_log: Vec::new(),
             demand_response: None,
@@ -67,6 +80,25 @@ impl MockServingSystem {
     /// instance's experts.
     pub fn with_narrowed_crash(mut self, moved: usize, transfer: f64) -> Self {
         self.narrowed_crash = Some((moved, transfer));
+        self
+    }
+
+    /// Script `dropped` lost experts into the narrowed crash recovery
+    /// (making it infeasible): a stand-in for a *static* placement with
+    /// zero free slots, where a crash permanently drops every expert
+    /// whose sole replica lived on the dead instance.
+    pub fn with_crash_dropped(mut self, dropped: usize) -> Self {
+        self.crash_dropped = dropped;
+        self
+    }
+
+    /// Script an early service-restored declaration into the narrowed
+    /// crash recovery: a stand-in for an *availability-aware* placement
+    /// that re-seats every lost expert from surviving replicas and ends
+    /// the degraded window `secs` after the crash instead of waiting out
+    /// the full fault duration.
+    pub fn with_restored_secs(mut self, secs: f64) -> Self {
+        self.restored_secs = Some(secs);
         self
     }
 
@@ -149,7 +181,14 @@ impl ServingSystem for MockServingSystem {
     ) -> RecoveryAction {
         self.crash_log.push(instance);
         match self.narrowed_crash {
-            Some((moved, transfer)) => RecoveryAction::expert_replacement(moved, 0, transfer),
+            Some((moved, transfer)) => {
+                let mut action =
+                    RecoveryAction::expert_replacement(moved, self.crash_dropped, transfer);
+                if let Some(secs) = self.restored_secs {
+                    action = action.with_service_restored(secs);
+                }
+                action
+            }
             None => {
                 self.fail_gpus(1);
                 RecoveryAction::whole_pool(self.reconfigure_for_pool(lambda, slo).is_some())
@@ -239,5 +278,32 @@ mod tests {
         assert_eq!(n.straggler, 2.5);
         n.set_straggler(0.3);
         assert_eq!(n.straggler, 1.0);
+    }
+
+    #[test]
+    fn scripted_drops_and_restoration_shape_the_recovery() {
+        let slo = Slo::from_ms(200.0);
+        // Static stand-in: narrowed but dropping experts → infeasible,
+        // and no early restoration is declared.
+        let mut s = MockServingSystem::new(4, 8, 0.05)
+            .with_narrowed_crash(0, 0.0)
+            .with_crash_dropped(3);
+        let a = s.crash_instance(0, DegradationPolicy::Replica, 10.0, slo);
+        assert!(a.narrowed && !a.feasible);
+        assert_eq!(a.dropped_experts, 3);
+        assert_eq!(a.restored_secs, None);
+
+        // Coact stand-in: every expert re-seated, service restored early.
+        let mut c = MockServingSystem::new(4, 8, 0.05)
+            .with_narrowed_crash(5, 0.4)
+            .with_restored_secs(1.5);
+        let b = c.crash_instance(0, DegradationPolicy::Replica, 10.0, slo);
+        assert!(b.narrowed && b.feasible);
+        assert_eq!(b.dropped_experts, 0);
+        assert_eq!(b.restored_secs, Some(1.5));
+        // Restore path stays on the plain scripted shape.
+        let r = c.restore_instance(0, 10.0, slo);
+        assert_eq!(r.restored_secs, None);
+        assert_eq!(r.dropped_experts, 0);
     }
 }

@@ -28,6 +28,15 @@
 //!   cannot, and replica strictly beating shed on the scripted mock.
 //!   Policies are enumerated explicitly, so the snapshot is identical
 //!   under every `JANUS_FAULTS` matrix leg.
+//! - `replication.tsv` — the replication-dynamics surface: two
+//!   engine-level rows on the scripted mock (identical crash plan,
+//!   static-style vs coact-style recovery) plus one crash-action row per
+//!   (replication mode × victim instance) on the real JanusSystem at a
+//!   pinned 8-instance MoE pool. The fresh rows must show coact beating
+//!   static strictly on MTTR and availability, dropping zero experts,
+//!   and declaring restoration where static never can. Modes are
+//!   enumerated explicitly, so the snapshot is identical under every
+//!   `JANUS_REPLICATION` matrix leg.
 //!
 //! Bootstrap: on a machine without a snapshot (first run after a clone,
 //! or after deleting it), the test writes the file and passes with a
@@ -48,10 +57,11 @@
 
 use std::path::{Path, PathBuf};
 
-use janus::baselines::{build_eval_system, ServingSystem, EVAL_SYSTEMS};
+use janus::baselines::{build_eval_system, JanusSystem, ServingSystem, EVAL_SYSTEMS};
 use janus::config::hardware::{paper_testbed, HardwareProfile};
 use janus::config::models::{self, MoeModel};
-use janus::config::serving::Slo;
+use janus::config::serving::{Deployment, Slo};
+use janus::placement::ReplicationMode;
 use janus::routing::gate::ExpertPopularity;
 use janus::scaling::ScalingMode;
 use janus::sim::admission::{AdmissionConfig, PolicyKind};
@@ -458,6 +468,111 @@ fn current_faults_snapshot() -> String {
     current_faults_snapshot_at(sweep::resolve_threads(None))
 }
 
+/// The replication-dynamics surface. Two engine-level rows run the same
+/// seeded crash plan on the scripted mock with a static-style recovery
+/// (zero free slots, dropped experts, no restoration) vs a coact-style
+/// one (every expert re-seated, restored 2 s after the crash). Sixteen
+/// crash-action rows crash each of the 8 MoE instances of a real
+/// JanusSystem pinned to `Deployment::new(4, 8)` — the regime where a
+/// static placement saturates every slot (216 < 2 × 160) while the
+/// coact placement keeps headroom — under both replication modes.
+/// Engine-only columns (`availability`, `mttr_mean`) are `nan` on the
+/// action rows; `restored` counts early repairs on engine rows and the
+/// restored-declaration flag on action rows. Modes are enumerated
+/// explicitly (never from `JANUS_REPLICATION`), so one committed
+/// snapshot pins both and the CI replication matrix compares against
+/// the same bytes.
+fn current_replication_snapshot_at(threads: usize) -> String {
+    use janus::sim::faults::{DegradationPolicy, FaultPlan};
+    let mut out = String::from(
+        "# Golden replication snapshot. Engine rows: scripted mock, crash\n\
+         # @30s/60s, replica policy, 180 s horizon at 2 req/s x 32 tok/req,\n\
+         # seed 424242. Action rows: JanusSystem (DeepSeek-V2, paper\n\
+         # testbed, zipf 1.2, ctor seed 47) pinned to 4 attn + 8 MoE\n\
+         # instances, one crash per victim per mode. Regenerate:\n\
+         # JANUS_BLESS=1.\n\
+         # key\tavailability\tmttr_mean\trepair_secs\trestored\tdropped\tre_replicated\n",
+    );
+    #[derive(Clone, Copy)]
+    enum Cell {
+        Engine(&'static str),
+        Crash(ReplicationMode, u32),
+    }
+    let mut cells: Vec<Cell> = vec![Cell::Engine("static"), Cell::Engine("coact")];
+    for mode in ReplicationMode::ALL {
+        for victim in 0..8u32 {
+            cells.push(Cell::Crash(mode, victim));
+        }
+    }
+    let rows = sweep::sweep(&cells, threads, |_, &cell| match cell {
+        Cell::Engine(style) => {
+            let plan = FaultPlan::new()
+                .with_instance_crash(30.0, 60.0, 0)
+                .with_policy(DegradationPolicy::Replica);
+            let mut scenario = janus::sim::engine::FailureScenario::new(
+                Slo::from_ms(200.0),
+                2.0,
+                32.0,
+                180.0,
+            )
+            .with_faults(plan);
+            scenario.admission = AdmissionConfig::fifo();
+            scenario.scaling = ScalingMode::Reactive;
+            let base = MockServingSystem::new(4, 64, 0.01);
+            let mut sys = if style == "static" {
+                base.with_narrowed_crash(0, 0.0).with_crash_dropped(3)
+            } else {
+                base.with_narrowed_crash(5, 0.4).with_restored_secs(2.0)
+            };
+            let r = engine::failure_injection(&mut sys, &scenario, SEED)
+                .expect("valid scenario");
+            let ev = &r.faults.events[0];
+            format!(
+                "mock-{style}/engine\t{:.17e}\t{:.17e}\t{:.17e}\t{}\t{}\t{}\n",
+                r.availability,
+                r.mttr_mean,
+                ev.transfer_secs + r.faults.background_transfer_secs,
+                r.faults.early_repairs,
+                ev.dropped_experts,
+                r.faults.re_replicated_experts,
+            )
+        }
+        Cell::Crash(mode, victim) => {
+            let mut sys = JanusSystem::build_with_replication(
+                models::deepseek_v2(),
+                paper_testbed(),
+                &ExpertPopularity::Zipf { s: 1.2 },
+                16,
+                47,
+                mode,
+            );
+            sys.deploy(Deployment::new(4, 8));
+            let a = sys.crash_instance(
+                victim,
+                DegradationPolicy::Replica,
+                2.0,
+                Slo::from_ms(200.0),
+            );
+            format!(
+                "{}/v{victim}\tnan\tnan\t{:.17e}\t{}\t{}\t{}\n",
+                mode.name(),
+                a.transfer_secs + a.background_secs,
+                u64::from(a.restored_secs.is_some()),
+                a.dropped_experts,
+                a.re_replicated_experts,
+            )
+        }
+    });
+    for row in rows {
+        out.push_str(&row);
+    }
+    out
+}
+
+fn current_replication_snapshot() -> String {
+    current_replication_snapshot_at(sweep::resolve_threads(None))
+}
+
 #[test]
 fn fixed_batch_metrics_match_snapshot() {
     let path = snapshot_path("fixed_batch.tsv");
@@ -610,6 +725,79 @@ fn fault_plane_matches_snapshot() {
     );
 }
 
+#[test]
+fn replication_dynamics_match_snapshot() {
+    let path = snapshot_path("replication.tsv");
+    let fresh = current_replication_snapshot();
+    let rows = parse_rows(&fresh, 3, 3);
+    assert_eq!(rows.len(), 2 + 2 * 8, "2 engine rows + 2 modes x 8 victims");
+    // Acceptance invariants, checked on the fresh rows themselves (not
+    // just against committed bytes):
+    // 1. Engine level: under the identical crash plan and replica
+    //    policy, coact-style recovery strictly beats static-style on
+    //    both MTTR and availability, and only coact closes the fault
+    //    window early.
+    let find = |key: &str| {
+        rows.iter()
+            .find(|(k, _, _)| k == key)
+            .unwrap_or_else(|| panic!("missing row {key}"))
+    };
+    let st = find("mock-static/engine");
+    let co = find("mock-coact/engine");
+    assert!(
+        co.1[1] < st.1[1],
+        "coact mttr_mean {} must be strictly below static's {}",
+        co.1[1],
+        st.1[1]
+    );
+    assert!(
+        co.1[0] > st.1[0],
+        "coact availability {} must strictly exceed static's {}",
+        co.1[0],
+        st.1[0]
+    );
+    assert!(co.2[0] >= 1, "coact must repair early");
+    assert_eq!(st.2[0], 0, "static must never repair early");
+    // 2. Crash-action level: a static placement drops at least one
+    //    sole-replica expert somewhere and never declares restoration or
+    //    re-replicates; the coact placement recovers EVERY victim with
+    //    zero drops and a restored declaration.
+    let mut static_drops = 0u64;
+    for (key, floats, ints) in &rows {
+        if let Some(v) = key.strip_prefix("static/v") {
+            assert!(v.parse::<u32>().is_ok(), "malformed key {key}");
+            static_drops += ints[1];
+            assert_eq!(ints[0], 0, "{key}: static never declares restoration");
+            assert_eq!(ints[2], 0, "{key}: static never re-replicates");
+            assert_eq!(floats[2], 0.0, "{key}: static repairs move nothing");
+        }
+        if key.starts_with("coact/v") {
+            assert_eq!(ints[1], 0, "{key}: coact must not drop experts");
+            assert_eq!(ints[0], 1, "{key}: coact must declare restoration");
+        }
+    }
+    assert!(static_drops > 0, "static crashes must drop experts somewhere");
+    assert!(
+        rows.iter()
+            .any(|(k, f, _)| k.starts_with("coact/v") && f[2] > 0.0),
+        "at least one coact repair must model transfer work"
+    );
+    assert!(
+        rows.iter()
+            .any(|(k, _, i)| k.starts_with("coact/v") && i[2] > 0),
+        "at least one coact repair must re-replicate onto survivors"
+    );
+    let Some(committed) = committed_or_bootstrap(&path, &fresh) else {
+        return;
+    };
+    compare_rows(
+        &parse_rows(&committed, 3, 3),
+        &parse_rows(&fresh, 3, 3),
+        &["availability", "mttr_mean", "repair_secs"],
+        &["restored", "dropped", "re_replicated"],
+    );
+}
+
 /// The snapshot generators are bit-deterministic — the precondition for
 /// the golden files being meaningful across machines and runs — and the
 /// sweep's worker count is not an observable: the serial (threads=1)
@@ -622,6 +810,11 @@ fn snapshot_generation_is_deterministic() {
     assert_eq!(current_flash_crowd_snapshot(), current_flash_crowd_snapshot());
     assert_eq!(current_faults_snapshot(), current_faults_snapshot());
     assert_eq!(current_faults_snapshot_at(1), current_faults_snapshot());
+    assert_eq!(current_replication_snapshot(), current_replication_snapshot());
+    assert_eq!(
+        current_replication_snapshot_at(1),
+        current_replication_snapshot()
+    );
     assert_eq!(
         current_fixed_batch_snapshot_at(1),
         current_fixed_batch_snapshot()

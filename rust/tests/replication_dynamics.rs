@@ -1,0 +1,224 @@
+//! Replication-dynamics acceptance (tier-1): availability-aware
+//! replication must be *provably* better through the fault plane, not
+//! just plausibly different.
+//!
+//! - Engine level (scripted mock, so the contrast is pure recovery
+//!   semantics): under an identical seeded `FaultPlan` and the `replica`
+//!   degradation policy, a coact-style recovery (every lost expert
+//!   re-seated, service restored early) yields strictly lower
+//!   `mttr_mean` and strictly higher `availability` than a static-style
+//!   recovery (saturated placement, dropped experts, full-window
+//!   outage). The rows are bit-identical across sweep worker counts.
+//! - System level (real `JanusSystem` at a pinned 8-instance MoE pool):
+//!   a static placement saturates every slot, so some crash drops a
+//!   sole-replica expert and can never declare restoration; the coact
+//!   placement keeps headroom and recovers *every* crash with zero
+//!   drops and an early service-restored declaration.
+//! - `JANUS_REPLICATION` resolution: default builds follow the env knob
+//!   (the CI replication matrix runs this suite under both legs), while
+//!   golden/determinism surfaces pin `Static` explicitly elsewhere.
+
+use janus::baselines::{JanusSystem, ServingSystem};
+use janus::config::hardware::paper_testbed;
+use janus::config::models;
+use janus::config::serving::{Deployment, Slo};
+use janus::placement::{ReplicationMode, REPLICATION_ENV};
+use janus::routing::gate::ExpertPopularity;
+use janus::scaling::ScalingMode;
+use janus::sim::admission::AdmissionConfig;
+use janus::sim::engine::{failure_injection, FailureScenario};
+use janus::sim::faults::{DegradationPolicy, FaultPlan};
+use janus::sim::sweep::{self, sweep};
+use janus::testing::MockServingSystem;
+
+const SEED: u64 = 424242;
+const CRASH_AT: f64 = 30.0;
+const CRASH_DURATION: f64 = 60.0;
+const HORIZON: f64 = 180.0;
+
+/// One instance crash under the `replica` policy — the scenario both
+/// recovery styles run against, identically.
+fn replica_crash_scenario() -> FailureScenario {
+    let plan = FaultPlan::new()
+        .with_instance_crash(CRASH_AT, CRASH_DURATION, 0)
+        .with_policy(DegradationPolicy::Replica);
+    let mut sc =
+        FailureScenario::new(Slo::from_ms(200.0), 2.0, 32.0, HORIZON).with_faults(plan);
+    sc.admission = AdmissionConfig::fifo();
+    sc.scaling = ScalingMode::Reactive;
+    sc
+}
+
+/// Static stand-in: narrowed recovery with zero free slots — nothing
+/// moves, three sole-replica experts drop, no restoration is declared.
+fn static_style_mock() -> MockServingSystem {
+    MockServingSystem::new(4, 64, 0.01)
+        .with_narrowed_crash(0, 0.0)
+        .with_crash_dropped(3)
+}
+
+/// Coact stand-in: every lost expert re-seated from survivors and
+/// service declared restored 2 s after the crash.
+fn coact_style_mock() -> MockServingSystem {
+    MockServingSystem::new(4, 64, 0.01)
+        .with_narrowed_crash(5, 0.4)
+        .with_restored_secs(2.0)
+}
+
+#[test]
+fn coact_recovery_strictly_beats_static_on_mttr_and_availability() {
+    let sc = replica_crash_scenario();
+    let mut st_sys = static_style_mock();
+    let st = failure_injection(&mut st_sys, &sc, SEED).expect("valid scenario");
+    let mut co_sys = coact_style_mock();
+    let co = failure_injection(&mut co_sys, &sc, SEED).expect("valid scenario");
+
+    // Both runs saw exactly the one scripted crash, recovered narrowed.
+    assert_eq!(st.faults.events.len(), 1);
+    assert_eq!(co.faults.events.len(), 1);
+    assert!(st.faults.events[0].narrowed && !st.faults.events[0].feasible);
+    assert!(co.faults.events[0].narrowed && co.faults.events[0].feasible);
+
+    // Static pays the full fault window as MTTR; coact pays its declared
+    // restore time and closes the degraded window early.
+    assert!((st.mttr_mean - CRASH_DURATION).abs() < 1e-9);
+    assert!((co.mttr_mean - 2.0).abs() < 1e-9);
+    assert_eq!(st.faults.early_repairs, 0);
+    assert_eq!(co.faults.early_repairs, 1);
+
+    // The headline invariants, strict.
+    assert!(
+        co.mttr_mean < st.mttr_mean,
+        "coact mttr {} must be strictly below static's {}",
+        co.mttr_mean,
+        st.mttr_mean
+    );
+    assert!(
+        co.availability > st.availability,
+        "coact availability {} must strictly exceed static's {}",
+        co.availability,
+        st.availability
+    );
+}
+
+/// The comparison rows are a pure function of (mode, scenario, seed):
+/// serializing both cells through `sim::sweep` is byte-identical at any
+/// worker count, so the CI thread matrix pins one set of bytes.
+#[test]
+fn replication_rows_are_byte_identical_across_thread_counts() {
+    fn rows(threads: usize) -> String {
+        let modes = ["static", "coact"];
+        sweep(&modes, threads, |_, &mode| {
+            let sc = replica_crash_scenario();
+            let mut sys = if mode == "static" {
+                static_style_mock()
+            } else {
+                coact_style_mock()
+            };
+            let r = failure_injection(&mut sys, &sc, SEED).expect("valid scenario");
+            format!(
+                "{mode}\t{:016x}\t{:016x}\t{:016x}\t{}\t{}\t{}\n",
+                r.availability.to_bits(),
+                r.mttr_mean.to_bits(),
+                r.faults.degraded_time.to_bits(),
+                r.faults.early_repairs,
+                r.faults.events.len(),
+                r.steps,
+            )
+        })
+        .concat()
+    }
+    let serial = rows(1);
+    assert_eq!(serial.lines().count(), 2);
+    assert_eq!(serial, rows(2), "threads=2");
+    let parallel = if sweep::hardware_threads() >= 4 { 4 } else { 2 };
+    assert_eq!(serial, rows(parallel), "threads={parallel}");
+}
+
+/// Real Janus at a pinned 8-instance MoE pool (27 expert slots each,
+/// 160 logical experts — the coact zero-drop regime).
+fn build_janus(mode: ReplicationMode) -> JanusSystem {
+    let model = models::deepseek_v2();
+    let hw = paper_testbed();
+    let pop = ExpertPopularity::Zipf { s: 1.2 };
+    let mut sys = JanusSystem::build_with_replication(model, hw, &pop, 16, 47, mode);
+    sys.deploy(Deployment::new(4, 8));
+    sys
+}
+
+#[test]
+fn static_placement_drops_where_coact_restores_every_crash() {
+    let slo = Slo::from_ms(200.0);
+    let n_moe = 8u32;
+
+    // Static saturates every slot: no crash can re-seat anything, and
+    // at least one victim instance hosts a sole-replica expert whose
+    // loss is permanent (216 slots < 2 x 160 experts, pigeonhole).
+    let mut static_dropped = false;
+    for victim in 0..n_moe {
+        let mut sys = build_janus(ReplicationMode::Static);
+        let a = sys.crash_instance(victim, DegradationPolicy::Replica, 2.0, slo);
+        assert!(a.narrowed, "victim {victim}: Janus recovers narrowed");
+        assert_eq!(a.moved_experts, 0, "victim {victim}: zero free slots");
+        assert_eq!(a.re_replicated_experts, 0, "victim {victim}: static never re-replicates");
+        assert_eq!(a.restored_secs, None, "victim {victim}: static never declares restore");
+        if a.dropped_experts > 0 {
+            assert!(!a.feasible, "victim {victim}: dropped experts => infeasible");
+            static_dropped = true;
+        }
+    }
+    assert!(
+        static_dropped,
+        "no static crash dropped an expert — headroom appeared where none should exist"
+    );
+
+    // Coact keeps headroom and an eviction fallback: EVERY crash
+    // recovers with zero dropped experts and declares restoration.
+    let mut restored_early = false;
+    for victim in 0..n_moe {
+        let mut sys = build_janus(ReplicationMode::Coact);
+        let a = sys.crash_instance(victim, DegradationPolicy::Replica, 2.0, slo);
+        assert!(a.narrowed && a.feasible, "victim {victim}: coact crash must stay feasible");
+        assert_eq!(a.dropped_experts, 0, "victim {victim}: coact must not drop");
+        let restored = a
+            .restored_secs
+            .unwrap_or_else(|| panic!("victim {victim}: coact must declare restoration"));
+        assert!(
+            (restored - (a.transfer_secs + a.background_secs)).abs() < 1e-12,
+            "victim {victim}: restore time is the repair transfer total"
+        );
+        if restored > 0.0 {
+            restored_early = true;
+        }
+    }
+    assert!(
+        restored_early,
+        "every coact crash restored in zero time — no repair work was modeled"
+    );
+}
+
+#[test]
+fn replication_mode_resolves_from_env_consistently() {
+    assert_eq!(ReplicationMode::Static.name(), "static");
+    assert_eq!(ReplicationMode::Coact.name(), "coact");
+    assert_eq!(
+        ReplicationMode::ALL,
+        [ReplicationMode::Static, ReplicationMode::Coact]
+    );
+
+    // Default builds follow JANUS_REPLICATION (the CI matrix runs this
+    // suite under both legs); unset or unparseable means static.
+    let want = match std::env::var(REPLICATION_ENV).ok().as_deref() {
+        Some(v) if v.trim().eq_ignore_ascii_case("coact") => ReplicationMode::Coact,
+        _ => ReplicationMode::Static,
+    };
+    assert_eq!(ReplicationMode::from_env(), want);
+    let sys = JanusSystem::build(
+        models::deepseek_v2(),
+        paper_testbed(),
+        &ExpertPopularity::Zipf { s: 0.4 },
+        16,
+        42,
+    );
+    assert_eq!(sys.replication_mode(), want);
+}

@@ -9,10 +9,11 @@
 //! chunked work claiming (K cells per `fetch_add`, `JANUS_CHUNK`)
 //! is equally unobservable for K ∈ {1, 3, grid-size}.
 
-use janus::baselines::{build_eval_system, ServingSystem};
+use janus::baselines::{build_eval_system, JanusSystem, ServingSystem};
 use janus::config::hardware::paper_testbed;
 use janus::config::models;
 use janus::config::serving::Slo;
+use janus::placement::ReplicationMode;
 use janus::scaling::ScalingMode;
 use janus::sim::admission::AdmissionConfig;
 use janus::sim::engine::{
@@ -200,6 +201,103 @@ fn fault_plan_cells_are_byte_identical_across_thread_counts() {
     let parallel = if sweep::hardware_threads() >= 4 { 4 } else { 2 };
     assert_eq!(serial, fault_sweep_snapshot(parallel), "threads={parallel}");
     assert_eq!(serial, fault_sweep_snapshot(2), "threads=2");
+}
+
+/// Serialize a replication-mode fault sweep — the real JanusSystem
+/// built under each [`ReplicationMode`], run through the engine against
+/// an identical crash-plus-straggler plan under the replica policy.
+/// Modes are pinned per cell (never `from_env`), so the bytes are
+/// identical under every `JANUS_REPLICATION` CI leg — and the coact
+/// cell drives the full dynamic pipeline (decayed stats, headroom
+/// placement, eviction recovery, re-replication, prefetch staging)
+/// through the same determinism contract as everything else.
+fn replication_sweep_snapshot(threads: usize) -> String {
+    let model = models::deepseek_v2();
+    let hw = paper_testbed();
+    let pop = janus::routing::gate::ExpertPopularity::Zipf { s: 0.4 };
+    let mut cells: Vec<SweepCell> = Vec::new();
+    for mode in ReplicationMode::ALL {
+        let plan = FaultPlan::new()
+            .with_instance_crash(30.0, 60.0, 0)
+            .with_straggler(50.0, 40.0, 2.0)
+            .with_policy(DegradationPolicy::Replica);
+        let mut sc =
+            FailureScenario::new(Slo::from_ms(200.0), 2.0, 32.0, 180.0).with_faults(plan);
+        sc.admission = AdmissionConfig::fifo();
+        sc.scaling = ScalingMode::Reactive;
+        cells.push(SweepCell {
+            label: format!("janus/{}", mode.name()),
+            build: Box::new({
+                let (model, hw, pop) = (model.clone(), hw.clone(), pop.clone());
+                move || -> Box<dyn ServingSystem> {
+                    Box::new(JanusSystem::build_with_replication(
+                        model.clone(),
+                        hw.clone(),
+                        &pop,
+                        16,
+                        31,
+                        mode,
+                    ))
+                }
+            }),
+            scenario: Scenario::FailureInjection(sc),
+            seed: 31,
+        });
+    }
+    run_cells(&cells, threads)
+        .iter()
+        .map(|cell| match cell.outcome.as_ref().expect("valid scenario") {
+            ScenarioOutcome::FailureInjection(r) => {
+                format!("{}\t{}", cell.label, fault_row(r))
+            }
+            _ => unreachable!("replication sweep only holds failure cells"),
+        })
+        .collect()
+}
+
+#[test]
+fn replication_cells_are_byte_identical_across_thread_counts() {
+    let serial = replication_sweep_snapshot(1);
+    assert_eq!(serial.lines().count(), 2, "one cell per replication mode");
+    assert_eq!(serial, replication_sweep_snapshot(2), "threads=2");
+    let parallel = if sweep::hardware_threads() >= 4 { 4 } else { 2 };
+    assert_eq!(serial, replication_sweep_snapshot(parallel), "threads={parallel}");
+}
+
+#[test]
+fn static_replication_build_matches_legacy_eval_bytes() {
+    // The bit-identity contract at the constructor surface: building
+    // Janus with `ReplicationMode::Static` pinned explicitly must
+    // serialize a whole engine run to exactly the bytes of the
+    // env-immune canonical eval build (same ctor seed 42 / n_max 16) —
+    // the static path performs no extra RNG draws, no forecaster
+    // observations, and no float work.
+    let model = models::deepseek_v2();
+    let hw = paper_testbed();
+    let pop = janus::routing::gate::ExpertPopularity::Zipf { s: 0.4 };
+    let plan = FaultPlan::new()
+        .with_instance_crash(30.0, 60.0, 0)
+        .with_policy(DegradationPolicy::Replica);
+    let mut sc =
+        FailureScenario::new(Slo::from_ms(200.0), 2.0, 32.0, 180.0).with_faults(plan);
+    sc.admission = AdmissionConfig::fifo();
+    sc.scaling = ScalingMode::Reactive;
+    let legacy = {
+        let mut sys = build_eval_system(0, model.clone(), hw.clone(), &pop);
+        fault_row(&failure_injection(sys.as_mut(), &sc, 47).expect("valid scenario"))
+    };
+    let explicit = {
+        let mut sys = JanusSystem::build_with_replication(
+            model,
+            hw,
+            &pop,
+            16,
+            42,
+            ReplicationMode::Static,
+        );
+        fault_row(&failure_injection(&mut sys, &sc, 47).expect("valid scenario"))
+    };
+    assert_eq!(legacy, explicit);
 }
 
 #[test]
