@@ -22,10 +22,17 @@
 //! asserted ≤ 10% (the KV accounting and class queues must stay noise
 //! next to the per-slot bookkeeping both policies share).
 //!
+//! The observability plane's overhead is measured in the same grid: one
+//! observed decode step (simulate + phase attribution + record) under an
+//! off-, counters-, and full-mode recorder, with the counters-vs-off
+//! ratio asserted ≤ 5% — the cost of leaving telemetry on must stay
+//! noise next to the step itself.
+//!
 //! Besides the human-readable report, this bench (re)writes the
 //! machine-readable snapshot `BENCH_sim.json` at the repo root (schema
-//! `janus-bench-v3`: per-bench mean ns + steps/s, sweep worker counts,
-//! admission-policy tags, hardware threads, caller-supplied timestamp);
+//! `janus-bench-v4`: per-bench mean ns + steps/s, sweep worker counts,
+//! admission-policy and obs-mode tags, hardware threads,
+//! caller-supplied timestamp);
 //! CI uploads one such snapshot per run as an artifact, and that per-PR
 //! series of artifacts is the perf trajectory. The repo-root file is deliberately tracked:
 //! a PR that touches the hot path is expected to refresh and commit it
@@ -40,6 +47,7 @@ use janus::baselines::{build_eval_system, JanusSystem, ServingSystem};
 use janus::config::hardware::paper_testbed;
 use janus::config::models;
 use janus::config::serving::Slo;
+use janus::obs::{ObsMode, Recorder};
 use janus::routing::gate::ExpertPopularity;
 use janus::sim::admission::{
     AdmissionConfig, AdmissionPolicy, AdmitOutcome, EngineCaps, InFlightBatch, PolicyKind, Queued,
@@ -54,6 +62,9 @@ const FLOOR_STEPS_PER_S: f64 = 50_000.0;
 const SWEEP_SPEEDUP_FLOOR: f64 = 2.0;
 /// KvAware may cost at most 10% more than FIFO on the admission cycle.
 const ADMISSION_OVERHEAD_CEILING: f64 = 1.10;
+/// Counters-mode recording may cost at most 5% over an off-mode
+/// recorder on the observed decode step — "cheap enough to leave on".
+const OBS_COUNTERS_OVERHEAD_CEILING: f64 = 1.05;
 
 /// One admission decode-loop cycle, steady state: offer one request,
 /// run the policy's admit phase against a full batch, advance every
@@ -88,6 +99,35 @@ fn bench_admission_cycle(kind: PolicyKind) -> BenchResult {
         book.clear();
         batch.advance(caps.prefill_chunk, 0.01, &mut book);
         std::hint::black_box(batch.len());
+    })
+}
+
+/// One observed decode step — simulate, attribute phases, record — with
+/// the recorder mode as the only variable. Full mode runs against a
+/// fixed-capacity event buffer: once it fills, events drop-and-count,
+/// so the measurement stays steady state instead of timing the growth
+/// of an unbounded buffer.
+fn bench_obs_step(mode: ObsMode) -> BenchResult {
+    let mut sys = JanusSystem::build(
+        models::deepseek_v2(),
+        paper_testbed(),
+        &ExpertPopularity::Zipf { s: 0.4 },
+        16,
+        42,
+    );
+    sys.configure(256, Slo::from_ms(200.0))
+        .expect("janus feasible at B=256");
+    let mut rec = Recorder::with_capacity(mode, 65_536);
+    let mut rng = Rng::seed_from_u64(0x0B5);
+    let mut now = 0.0f64;
+    bench(&format!("obs/step+record B=256 {}", mode.name()), || {
+        let out = sys.step(256, &mut rng);
+        now += out.tpot;
+        if rec.enabled() {
+            let phases = sys.step_phases().reconciled(out.tpot);
+            rec.decode_step(now, out.tpot, 256, out.a_max, &phases, 0.0, 0.0, 0.0);
+        }
+        std::hint::black_box(out.tpot);
     })
 }
 
@@ -210,6 +250,21 @@ fn main() {
         overhead <= ADMISSION_OVERHEAD_CEILING,
         "KvAware admission cycle {overhead:.3}x over FIFO exceeds the \
          {ADMISSION_OVERHEAD_CEILING:.2}x ceiling"
+    );
+
+    println!("\nObservability recorder overhead (step + phase attribution + record)");
+    let obs_off = bench_obs_step(ObsMode::Off);
+    let obs_counters = bench_obs_step(ObsMode::Counters);
+    let obs_full = bench_obs_step(ObsMode::Full);
+    records.push(BenchRecord::from_result(&obs_off).with_obs("off"));
+    records.push(BenchRecord::from_result(&obs_counters).with_obs("counters"));
+    records.push(BenchRecord::from_result(&obs_full).with_obs("full"));
+    let obs_overhead = obs_counters.mean_ns / obs_off.mean_ns;
+    println!("    -> counters / off observed-step ratio: {obs_overhead:.3}x");
+    assert!(
+        obs_overhead <= OBS_COUNTERS_OVERHEAD_CEILING,
+        "counters-mode recording {obs_overhead:.3}x over off exceeds the \
+         {OBS_COUNTERS_OVERHEAD_CEILING:.2}x ceiling"
     );
 
     println!("\nParallel sweep engine: figures-grid wall time by worker count");

@@ -60,6 +60,15 @@ pub const REGISTRY: &[EnvVar] = &[
                   not pin one; CI runs a matrix leg per policy.",
     },
     EnvVar {
+        name: "JANUS_OBS",
+        values: "`off` / `counters` / `full` (default `off`)",
+        read_by: "`obs`",
+        purpose: "Observability mode for recorder-carrying entry points \
+                  (`bin/trace`, `run_cells_traced`); never observable \
+                  in simulation results — `off` is bit-identical and \
+                  zero-alloc; CI runs a matrix leg per mode.",
+    },
+    EnvVar {
         name: "JANUS_PROP_SEED",
         values: "u64 (default fixed base seed)",
         read_by: "`testing::prop`",

@@ -4,8 +4,10 @@ use crate::comm::CommScratch;
 use crate::config::hardware::HardwareProfile;
 use crate::config::models::MoeModel;
 use crate::config::serving::{self, Deployment, SchedulerKind, Slo};
+use crate::obs::StepPhases;
 use crate::placement::dynamics::{
-    plan_re_replication, plan_rebalance, DemandForecaster, DynamicsConfig, ReplicationMode,
+    plan_re_replication, plan_rebalance, DemandForecaster, DynamicsConfig, PlacementActivity,
+    ReplicationMode,
 };
 use crate::placement::ExpertPlacement;
 use crate::routing::gate::{ExpertPopularity, GateSim};
@@ -59,6 +61,10 @@ pub struct JanusSystem {
     /// Accumulated background weight-copy seconds (prefetch staging,
     /// rebalance moves), drained by `placement_maintenance`.
     pending_background: f64,
+    /// Phase attribution of the latest step (obs plane scratch).
+    phases: StepPhases,
+    /// Cumulative placement-dynamics action counts (obs plane).
+    activity: PlacementActivity,
 }
 
 impl std::fmt::Debug for JanusSystem {
@@ -139,6 +145,8 @@ impl JanusSystem {
             expert_counts,
             forecaster: DemandForecaster::default(),
             pending_background: 0.0,
+            phases: StepPhases::default(),
+            activity: PlacementActivity::default(),
         }
     }
 
@@ -322,6 +330,11 @@ impl JanusSystem {
             }
         }
         if transfers > 0 {
+            if rising {
+                self.activity.prefetch_staged += transfers as u64;
+            } else {
+                self.activity.rebalance_moves += transfers as u64;
+            }
             self.pending_background += self
                 .scaler
                 .tpot_model
@@ -414,11 +427,27 @@ impl ServingSystem for JanusSystem {
             self.s_ctx,
             a_max,
         );
+        // Obs-plane phase scratch: a struct assignment over already-
+        // computed lanes — no allocation, and `lat.tpot` is returned
+        // untouched so the charged arithmetic is mode-independent.
+        self.phases = StepPhases::from_lanes(lat.tpot, lat.dispatch, lat.moe, lat.combine, 0.0, 0.0);
         StepOutcome {
             tpot: lat.tpot,
             a_max,
         }
         // tidy:hot-path:end
+    }
+
+    fn step_phases(&self) -> StepPhases {
+        self.phases
+    }
+
+    fn decision_cache_stats(&self) -> (u64, u64) {
+        (self.decisions.hits(), self.decisions.misses())
+    }
+
+    fn placement_activity(&self) -> PlacementActivity {
+        self.activity
     }
 
     fn gpus(&self) -> usize {
@@ -603,6 +632,7 @@ impl ServingSystem for JanusSystem {
                     .transfer_time(plan.transfer_bytes(e_bytes));
                 // tidy:allow(no-panic-in-lib): the plan was built against this same layout
                 plan.apply(&mut placement).expect("re-replication plan applies");
+                self.activity.re_replicated += plan.transfers() as u64;
                 action = action.with_re_replication(plan.transfers(), bg);
             }
             if policy == DegradationPolicy::Replica && dropped == 0 {

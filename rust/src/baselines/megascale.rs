@@ -13,6 +13,7 @@ use crate::config::models::MoeModel;
 use crate::config::serving::{
     self, CommScheme, Deployment, GatingSide, SchedulerKind, Slo,
 };
+use crate::obs::StepPhases;
 use crate::perfmodel::TpotModel;
 use crate::placement::ExpertPlacement;
 use crate::routing::gate::{ExpertPopularity, GateSim};
@@ -54,6 +55,8 @@ pub struct MegaScaleInfer {
     capacity: usize,
     s_ctx: f64,
     hw: HardwareProfile,
+    /// Phase attribution of the latest step (obs plane scratch).
+    phases: StepPhases,
 }
 
 impl std::fmt::Debug for MegaScaleInfer {
@@ -116,6 +119,7 @@ impl MegaScaleInfer {
             capacity,
             s_ctx: 512.0,
             hw,
+            phases: StepPhases::default(),
         }
     }
 
@@ -354,11 +358,22 @@ impl ServingSystem for MegaScaleInfer {
             self.s_ctx,
             a_max,
         );
+        // Obs-plane phase scratch: struct assignment only, `lat.tpot`
+        // is returned untouched.
+        self.phases = StepPhases::from_lanes(lat.tpot, lat.dispatch, lat.moe, lat.combine, 0.0, 0.0);
         StepOutcome {
             tpot: lat.tpot,
             a_max,
         }
         // tidy:hot-path:end
+    }
+
+    fn step_phases(&self) -> StepPhases {
+        self.phases
+    }
+
+    fn decision_cache_stats(&self) -> (u64, u64) {
+        (self.decisions.hits(), self.decisions.misses())
     }
 
     fn gpus(&self) -> usize {

@@ -9,6 +9,7 @@
 use crate::config::hardware::HardwareProfile;
 use crate::config::models::MoeModel;
 use crate::config::serving::Slo;
+use crate::obs::StepPhases;
 use crate::perfmodel::{attention, coeffs::LayerCoeffs, moe};
 use crate::placement::ExpertPlacement;
 use crate::routing::gate::{ExpertPopularity, GateSim};
@@ -64,6 +65,8 @@ pub struct SgLang {
     s_ctx: f64,
     /// Straggler slowdown on the expert phase (fault plane); 1.0 healthy.
     straggler: f64,
+    /// Phase attribution of the latest step (obs plane scratch).
+    phases: StepPhases,
 }
 
 impl std::fmt::Debug for SgLang {
@@ -106,6 +109,7 @@ impl SgLang {
             decisions: DecisionCache::default(),
             s_ctx: 512.0,
             straggler: 1.0,
+            phases: StepPhases::default(),
         }
     }
 
@@ -125,6 +129,15 @@ impl SgLang {
     /// replicas across nodes, static EP over all GPUs with an intra-
     /// cluster all-to-all per MoE layer.
     fn tier_tpot(&self, gpus: usize, b_total: f64, a_max: u32) -> f64 {
+        self.tier_tpot_phases(gpus, b_total, a_max).0
+    }
+
+    /// [`Self::tier_tpot`] plus its phase attribution: the TPOT value is
+    /// computed with the exact float ops and order of the original
+    /// closed form; the lanes (EP a2a/collective split symmetrically
+    /// into dispatch+combine, framework overhead charged as stall) are
+    /// extra reads that never feed back into the returned latency.
+    fn tier_tpot_phases(&self, gpus: usize, b_total: f64, a_max: u32) -> (f64, StepPhases) {
         let per_node = self.hw.node.gpus_per_node;
         let tp = per_node.min(gpus) as f64;
         let dp = (gpus as f64 / tp).max(1.0);
@@ -168,7 +181,18 @@ impl SgLang {
         let t_coll = 2.0 * 20e-6 * (gpus as f64).log2().max(1.0);
         let dense = self.model.dense_layers as f64;
         let moe_l = self.model.moe_layers() as f64;
-        (t_attn) * (dense + moe_l) + (t_moe + t_a2a + t_coll) * moe_l + step_overhead(b_total)
+        let tpot =
+            (t_attn) * (dense + moe_l) + (t_moe + t_a2a + t_coll) * moe_l + step_overhead(b_total);
+        let wire = ((t_a2a + t_coll) * 0.5) * moe_l;
+        let phases = StepPhases::from_lanes(
+            tpot,
+            wire,
+            t_moe * moe_l,
+            wire,
+            0.0,
+            step_overhead(b_total),
+        );
+        (tpot, phases)
     }
 
     /// Max in-flight batch a tier can hold: KV caches share HBM with the
@@ -340,11 +364,18 @@ impl ServingSystem for SgLang {
         // tidy:hot-path:begin
         let gpus = self.gpus.max(TIERS[0]);
         let a_max = self.sample_a_max(gpus, batch, rng);
-        StepOutcome {
-            tpot: self.tier_tpot(gpus, batch as f64, a_max),
-            a_max,
-        }
+        let (tpot, phases) = self.tier_tpot_phases(gpus, batch as f64, a_max);
+        self.phases = phases;
+        StepOutcome { tpot, a_max }
         // tidy:hot-path:end
+    }
+
+    fn step_phases(&self) -> StepPhases {
+        self.phases
+    }
+
+    fn decision_cache_stats(&self) -> (u64, u64) {
+        (self.decisions.hits(), self.decisions.misses())
     }
 
     fn gpus(&self) -> usize {

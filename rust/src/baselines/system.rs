@@ -1,6 +1,8 @@
 //! The common serving-system interface the simulator drives.
 
 use crate::config::serving::Slo;
+use crate::obs::StepPhases;
+use crate::placement::dynamics::PlacementActivity;
 use crate::scaling::ScalingSignal;
 use crate::sim::faults::{DegradationPolicy, RecoveryAction};
 use crate::util::rng::Rng;
@@ -54,6 +56,33 @@ pub trait ServingSystem {
     /// Simulate one decode step at total batch `batch` under the current
     /// configuration.
     fn step(&mut self, batch: usize, rng: &mut Rng) -> StepOutcome;
+
+    /// Phase attribution of the most recent [`Self::step`]: lanes whose
+    /// [`StepPhases::total`] reproduces that step's `tpot` bit-for-bit
+    /// (see `rust/src/obs`). Implementations fill a pre-allocated
+    /// scratch field inside the step hot path — a handful of float ops,
+    /// no allocation — in every mode, so observability toggles can
+    /// never perturb the charged arithmetic. The default (systems
+    /// without a cost-model breakdown, e.g. test mocks) reports no
+    /// attribution; the engine reconciles whatever comes back against
+    /// the actual charge and collapses on mismatch.
+    fn step_phases(&self) -> StepPhases {
+        StepPhases::default()
+    }
+
+    /// Scaling decision-cache totals `(hits, misses)` since build, for
+    /// the observability plane's per-decision cache delta. Default: no
+    /// cache (always `(0, 0)`).
+    fn decision_cache_stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
+
+    /// Cumulative placement-dynamics action counts (prefetch staging,
+    /// rebalance moves, post-crash re-replication) for the
+    /// observability plane. Default: no placement dynamics.
+    fn placement_activity(&self) -> PlacementActivity {
+        PlacementActivity::default()
+    }
 
     /// GPUs in the current configuration.
     fn gpus(&self) -> usize;

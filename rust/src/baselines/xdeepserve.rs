@@ -11,6 +11,7 @@ use crate::config::models::MoeModel;
 use crate::config::serving::{
     self, CommScheme, Deployment, GatingSide, SchedulerKind, Slo,
 };
+use crate::obs::StepPhases;
 use crate::perfmodel::TpotModel;
 use crate::placement::ExpertPlacement;
 use crate::routing::gate::{ExpertPopularity, GateSim};
@@ -55,6 +56,8 @@ pub struct XDeepServe {
     failed_gpus: usize,
     capacity: usize,
     s_ctx: f64,
+    /// Phase attribution of the latest step (obs plane scratch).
+    phases: StepPhases,
 }
 
 impl std::fmt::Debug for XDeepServe {
@@ -115,6 +118,7 @@ impl XDeepServe {
             failed_gpus: 0,
             capacity,
             s_ctx: 512.0,
+            phases: StepPhases::default(),
         }
     }
 
@@ -294,11 +298,22 @@ impl ServingSystem for XDeepServe {
             self.s_ctx,
             a_max,
         );
+        // Obs-plane phase scratch: struct assignment only, `lat.tpot`
+        // is returned untouched.
+        self.phases = StepPhases::from_lanes(lat.tpot, lat.dispatch, lat.moe, lat.combine, 0.0, 0.0);
         StepOutcome {
             tpot: lat.tpot,
             a_max,
         }
         // tidy:hot-path:end
+    }
+
+    fn step_phases(&self) -> StepPhases {
+        self.phases
+    }
+
+    fn decision_cache_stats(&self) -> (u64, u64) {
+        (self.decisions.hits(), self.decisions.misses())
     }
 
     fn gpus(&self) -> usize {

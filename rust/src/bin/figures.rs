@@ -1,9 +1,10 @@
 //! Regenerates every table and figure of the paper's evaluation.
 //!
 //! Usage: `figures <id> [--steps N] [--seed S] [--threads N]
-//! [--cells SUBSTR]`, where `<id>` is one of `table1 table2 fig1 fig2
-//! fig3 fig4 fig8 fig9 fig10 fig11 fig12 fig13 fig14 fig15 fig16 fig17
-//! admission flashcrowd faults replication all`.
+//! [--cells SUBSTR] [--trace-out PATH]`, where `<id>` is one of `table1
+//! table2 fig1 fig2 fig3 fig4 fig8 fig9 fig10 fig11 fig12 fig13 fig14
+//! fig15 fig16 fig17 admission flashcrowd faults replication phases
+//! all`.
 //!
 //! `--cells SUBSTR` regenerates only the sweep cells whose label
 //! contains SUBSTR in panels built on labeled cells (currently the
@@ -33,6 +34,7 @@ use std::time::Instant;
 use janus::baselines::{
     build_eval_system, JanusSystem, MegaScaleInfer, ServingSystem, SgLang,
 };
+use janus::obs::{ObsMode, Recorder, LANE_NAMES, NUM_LANES};
 use janus::comm::CommModel;
 use janus::config::hardware::{autoscale_pool, h100, paper_testbed, HardwareProfile};
 use janus::config::models::{self, MoeModel};
@@ -48,7 +50,9 @@ use janus::scheduler::{self, aebs};
 use janus::sim::admission::{AdmissionConfig, PolicyKind, Priority};
 use janus::sim::autoscale_sim::AutoscaleSim;
 use janus::sim::decode_sim::evaluate_fixed_batch;
-use janus::sim::engine::{AutoscaleScenario, FailureScenario, Scenario, ScenarioOutcome};
+use janus::sim::engine::{
+    run_with_recorder, AutoscaleScenario, FailureScenario, Scenario, ScenarioOutcome,
+};
 use janus::sim::faults::{DegradationPolicy, FaultPlan};
 use janus::sim::sweep::{self, SweepCell};
 use janus::testing::MockServingSystem;
@@ -113,6 +117,7 @@ fn main() {
         ("flashcrowd", flashcrowd, false),
         ("faults", faults, false),
         ("replication", replication, false),
+        ("phases", phases, false),
     ];
     if which == "all" {
         // Panel-level sweep: each non-timing panel is one cell rendering
@@ -1557,4 +1562,58 @@ fn pipelining(_: &Args, threads: usize, out: &mut String) {
     wl!(out, "a_max barely shrinks (distinct experts are not token-divisible),");
     wl!(out, "so pipelining repeats near-full MoE passes — the paper's §6");
     wl!(out, "observation. Gains only appear far beyond the online regime.");
+}
+
+// --------------------------------------- extension: phase attribution
+
+/// Observability-plane panel (`obs` + `sim::tracegen`): the canonical
+/// sample grid with one counters-mode recorder per cell, each decode
+/// step's charged cost split into the attention / dispatch / expert /
+/// combine / retry / stall / prefill lanes (the split is bit-exact —
+/// lanes sum to the charged step time, pinned in `tests/obs_trace.rs`).
+/// `--trace-out PATH` additionally runs the grid in full mode and
+/// writes the merged Perfetto/Chrome-trace JSON to PATH.
+fn phases(args: &Args, threads: usize, out: &mut String) {
+    wl!(out, "Per-phase latency attribution over the canonical sample grid");
+    wl!(out, "(one row per cell; lane shares of total attributed seconds).");
+    wl!(out, "Open --trace-out's JSON in Perfetto for the span view.\n");
+    let cells = janus::sim::tracegen::sample_cells();
+    let recs = sweep::sweep(&cells, threads, |i, cell| {
+        let mut sys = (cell.build)();
+        let mut rec = Recorder::new(ObsMode::Counters);
+        rec.set_pid(i as u32);
+        let outcome = run_with_recorder(sys.as_mut(), &cell.scenario, cell.seed, &mut rec);
+        (rec, outcome.is_ok())
+    });
+    let mut header = vec!["cell".to_string(), "steps".to_string()];
+    header.extend(LANE_NAMES.iter().map(|n| format!("{n} %")));
+    header.push("total s".to_string());
+    let width = header.len();
+    let mut t = Table::new(header);
+    for (cell, (rec, ok)) in cells.iter().zip(&recs) {
+        let mut row = vec![cell.label.clone()];
+        if !ok {
+            row.push("ERR".to_string());
+            row.resize(width, "-".to_string());
+            t.row(row);
+            continue;
+        }
+        let ledger = rec.ledger();
+        let total = ledger.total();
+        row.push((ledger.decode_steps() + ledger.prefill_steps()).to_string());
+        for &lane in ledger.lanes().iter().take(NUM_LANES) {
+            let share = if total > 0.0 { lane / total * 100.0 } else { 0.0 };
+            row.push(fnum(share, 1));
+        }
+        row.push(fnum(total, 3));
+        t.row(row);
+    }
+    out.push_str(&t.render());
+    if let Some(path) = args.get("trace-out") {
+        let bundle = janus::sim::tracegen::sample_bundle(ObsMode::Full, threads);
+        match std::fs::write(path, &bundle.trace_json) {
+            Ok(()) => wl!(out, "\nwrote full-mode Perfetto trace to {path}"),
+            Err(e) => wl!(out, "\ncannot write {path}: {e}"),
+        }
+    }
 }

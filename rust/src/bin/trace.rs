@@ -1,0 +1,75 @@
+//! Exports the canonical observability bundle (`sim::tracegen`).
+//!
+//! Usage: `trace [--mode off|counters|full] [--threads N]
+//! [--out PATH] [--tsv PATH]`.
+//!
+//! Runs the pinned sample grid (fixed-batch lineup, autoscale ramp
+//! under both scaling modes, golden fault plan) with the recorder at
+//! `--mode` (default: `JANUS_OBS`, i.e. `off` unless the env overrides
+//! it), then writes the Chrome-trace JSON to `--out` and the metrics
+//! TSV to `--tsv`. With no output path the TSV prints to stdout, so a
+//! bare `trace --mode counters` is a quick counters report. The bundle
+//! bytes are deterministic: identical across reruns, `--threads`
+//! values, and env matrix legs (every scenario knob is pinned inside
+//! `tracegen::sample_cells`).
+//!
+//! Open the JSON with Perfetto (<https://ui.perfetto.dev>) or
+//! `chrome://tracing`; CI uploads one as the `obs` job's artifact.
+
+use janus::obs::ObsMode;
+use janus::sim::sweep;
+use janus::sim::tracegen::sample_bundle;
+use janus::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let mode = match args.get("mode") {
+        Some(s) => match ObsMode::parse(s) {
+            Some(m) => m,
+            None => {
+                eprintln!("--mode expects off|counters|full, got {s}");
+                std::process::exit(2);
+            }
+        },
+        None => ObsMode::from_env(),
+    };
+    let threads = sweep::resolve_threads(args.usize_opt("threads"));
+    let bundle = sample_bundle(mode, threads);
+
+    let failed = bundle
+        .results
+        .iter()
+        .filter(|r| r.outcome.is_err())
+        .count();
+    eprintln!(
+        "trace: mode={} cells={} ({} failed) events={} bytes",
+        mode.name(),
+        bundle.results.len(),
+        failed,
+        bundle.trace_json.len(),
+    );
+
+    if let Some(path) = args.get("out") {
+        if let Err(e) = std::fs::write(path, &bundle.trace_json) {
+            eprintln!("trace: cannot write {path}: {e}");
+            std::process::exit(1);
+        }
+        eprintln!("trace: wrote {path}");
+    }
+    match args.get("tsv") {
+        Some(path) => {
+            if let Err(e) = std::fs::write(path, &bundle.metrics_tsv) {
+                eprintln!("trace: cannot write {path}: {e}");
+                std::process::exit(1);
+            }
+            eprintln!("trace: wrote {path}");
+        }
+        None => print!("{}", bundle.metrics_tsv),
+    }
+    if mode == ObsMode::Off {
+        eprintln!("trace: mode=off records nothing; pass --mode counters or --mode full");
+    }
+    if failed > 0 {
+        std::process::exit(1);
+    }
+}

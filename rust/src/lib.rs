@@ -28,6 +28,7 @@ pub mod coordinator;
 pub mod scaling;
 pub mod config;
 pub mod metrics;
+pub mod obs;
 pub mod perfmodel;
 pub mod placement;
 pub mod routing;

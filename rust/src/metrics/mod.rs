@@ -7,6 +7,10 @@ use std::cell::RefCell;
 
 use crate::util::stats;
 
+pub mod sketch;
+
+pub use sketch::P2Quantile;
+
 /// TPOT sample collection with percentile reporting.
 ///
 /// Percentile queries run against a lazily maintained sorted view: the
@@ -100,6 +104,14 @@ pub struct WeightedLatency {
     weighted_sum: f64,
     /// Cached value-sorted copy of `samples`; stale iff lengths differ.
     sorted: RefCell<Vec<(f64, u64)>>,
+    /// Opt-in streaming backing ([`Self::streaming`]): one P² sketch per
+    /// tracked percentile instead of the per-record sample vector.
+    /// Empty = exact backing (the default everywhere the goldens pin
+    /// bytes).
+    sketches: Vec<(f64, P2Quantile)>,
+    /// Largest value recorded (streaming backing only; the exact path
+    /// derives max from the samples).
+    max_value: f64,
 }
 
 impl WeightedLatency {
@@ -107,14 +119,49 @@ impl WeightedLatency {
         Self::default()
     }
 
+    /// Opt-in O(1)-memory backing: track only the given percentiles
+    /// (`qs` in percent, e.g. `&[50.0, 99.0]`) with one [`P2Quantile`]
+    /// sketch each, storing no per-record samples. [`Self::percentile`]
+    /// then serves the nearest tracked sketch's estimate, and
+    /// [`Self::attainment`] interpolates across the tracked quantiles —
+    /// both approximate, within a few percent on smooth distributions
+    /// (pinned in the accuracy test below). `mean`, `count`, and `max`
+    /// stay exact. An empty `qs` tracks P50/P99.
+    pub fn streaming(qs: &[f64]) -> Self {
+        let qs: &[f64] = if qs.is_empty() { &[50.0, 99.0] } else { qs };
+        let mut sketches: Vec<(f64, P2Quantile)> = qs
+            .iter()
+            .map(|&q| (q, P2Quantile::new(q / 100.0)))
+            .collect();
+        sketches.sort_by(|a, b| a.0.total_cmp(&b.0));
+        WeightedLatency {
+            sketches,
+            ..Self::default()
+        }
+    }
+
+    /// Whether this instance uses the streaming (sketch) backing.
+    pub fn is_streaming(&self) -> bool {
+        !self.sketches.is_empty()
+    }
+
     /// Record `weight` observations of `value` seconds.
     pub fn record(&mut self, value: f64, weight: u64) {
         if weight == 0 {
             return;
         }
-        self.samples.push((value, weight));
         self.total_weight += weight;
         self.weighted_sum += value * weight as f64;
+        if self.sketches.is_empty() {
+            self.samples.push((value, weight));
+        } else {
+            for (_, sk) in &mut self.sketches {
+                sk.record(value, weight);
+            }
+            if value > self.max_value {
+                self.max_value = value;
+            }
+        }
     }
 
     /// Total observation weight (e.g. tokens).
@@ -160,18 +207,37 @@ impl WeightedLatency {
     /// whose cumulative weight reaches `q`% of the total. 0.0 on empty
     /// input. Deterministic for identical record sequences. Served from
     /// the cached sorted view, so single-quantile calls no longer pay a
-    /// clone + sort each.
+    /// clone + sort each. Streaming instances serve the nearest tracked
+    /// sketch's estimate instead (approximate).
     pub fn percentile(&self, q: f64) -> f64 {
         if self.total_weight == 0 {
             return 0.0;
         }
+        if !self.sketches.is_empty() {
+            return self.sketch_percentile(q);
+        }
         self.with_sorted(|sorted| self.percentile_of_sorted(sorted, q))
+    }
+
+    /// The tracked sketch nearest to `q` (ties resolve to the lower
+    /// tracked quantile — the list is sorted, so this is deterministic).
+    fn sketch_percentile(&self, q: f64) -> f64 {
+        let mut best = &self.sketches[0];
+        for s in &self.sketches[1..] {
+            if (s.0 - q).abs() < (best.0 - q).abs() {
+                best = s;
+            }
+        }
+        best.1.estimate()
     }
 
     /// Several percentiles from one sorted view.
     pub fn percentiles(&self, qs: &[f64]) -> Vec<f64> {
         if self.total_weight == 0 {
             return vec![0.0; qs.len()];
+        }
+        if !self.sketches.is_empty() {
+            return qs.iter().map(|&q| self.sketch_percentile(q)).collect();
         }
         self.with_sorted(|sorted| {
             qs.iter()
@@ -189,6 +255,9 @@ impl WeightedLatency {
     }
 
     pub fn max(&self) -> f64 {
+        if !self.sketches.is_empty() {
+            return self.max_value.max(0.0);
+        }
         self.samples
             .iter()
             .map(|(v, _)| *v)
@@ -196,10 +265,15 @@ impl WeightedLatency {
             .max(0.0)
     }
 
-    /// Fraction of weight within the SLO (1.0 when empty).
+    /// Fraction of weight within the SLO (1.0 when empty). Exact on the
+    /// default backing; streaming instances interpolate linearly across
+    /// the tracked quantile estimates (approximate).
     pub fn attainment(&self, slo_seconds: f64) -> f64 {
         if self.total_weight == 0 {
             return 1.0;
+        }
+        if !self.sketches.is_empty() {
+            return self.sketch_attainment(slo_seconds);
         }
         let ok: u64 = self
             .samples
@@ -208,6 +282,34 @@ impl WeightedLatency {
             .map(|(_, w)| *w)
             .sum();
         ok as f64 / self.total_weight as f64
+    }
+
+    /// Attainment from the sketch backing: piecewise-linear CDF through
+    /// (0, 0), each tracked `(estimate, q/100)` point, and
+    /// `(max recorded, 1)`.
+    fn sketch_attainment(&self, slo: f64) -> f64 {
+        if slo >= self.max_value {
+            return 1.0;
+        }
+        let mut prev = (0.0f64, 0.0f64);
+        for (q, sk) in &self.sketches {
+            let e = sk.estimate();
+            let f = q / 100.0;
+            if slo < e {
+                if e <= prev.0 {
+                    return f.clamp(0.0, 1.0);
+                }
+                let t = (slo - prev.0) / (e - prev.0);
+                return (prev.1 + t * (f - prev.1)).clamp(0.0, 1.0);
+            }
+            prev = (e, f);
+        }
+        let (e_top, f_top) = prev;
+        if self.max_value <= e_top {
+            return 1.0;
+        }
+        let t = (slo - e_top) / (self.max_value - e_top);
+        (f_top + t * (1.0 - f_top)).clamp(0.0, 1.0)
     }
 }
 
@@ -406,6 +508,54 @@ mod tests {
         }
         assert_eq!(t.p99(), t_fresh.p99());
         assert_eq!(t.percentile(37.5), t_fresh.percentile(37.5));
+    }
+
+    #[test]
+    fn streaming_backing_tracks_exact_within_tolerance() {
+        use crate::util::rng::Rng;
+        let mut exact = WeightedLatency::new();
+        let mut stream = WeightedLatency::streaming(&[50.0, 90.0, 99.0]);
+        assert!(stream.is_streaming());
+        assert!(!exact.is_streaming());
+        let mut rng = Rng::seed_from_u64(4242);
+        for _ in 0..20_000 {
+            // Lognormal latencies (~50ms body, heavy right tail), token
+            // weights like a decode batch.
+            let v = rng.lognormal(-3.0, 0.5);
+            let w = 1 + rng.next_u64() % 8;
+            exact.record(v, w);
+            stream.record(v, w);
+        }
+        assert_eq!(exact.count(), stream.count());
+        assert!((exact.mean() - stream.mean()).abs() < 1e-12, "mean stays exact");
+        assert_eq!(exact.max().to_bits(), stream.max().to_bits(), "max stays exact");
+        for q in [50.0, 90.0, 99.0] {
+            let e = exact.percentile(q);
+            let s = stream.percentile(q);
+            assert!(
+                ((s - e) / e).abs() < 0.05,
+                "q={q}: exact {e} vs sketch {s}"
+            );
+        }
+        // The interpolated CDF lands near the true attainment in the
+        // body, and saturates exactly at/beyond the recorded max.
+        let a = stream.attainment(exact.percentile(90.0));
+        assert!((a - 0.9).abs() < 0.05, "attainment at exact P90: {a}");
+        assert_eq!(stream.attainment(stream.max()), 1.0);
+        assert_eq!(stream.attainment(0.0), 0.0);
+    }
+
+    #[test]
+    fn streaming_percentile_serves_nearest_tracked_sketch() {
+        let mut w = WeightedLatency::streaming(&[]);
+        for i in 1..=100u64 {
+            w.record(i as f64, 1);
+        }
+        // Default tracks P50/P99; an untracked query snaps to the
+        // nearest tracked quantile rather than returning garbage.
+        assert_eq!(w.percentile(60.0).to_bits(), w.percentile(50.0).to_bits());
+        assert_eq!(w.percentile(95.0).to_bits(), w.percentile(99.0).to_bits());
+        assert_eq!(w.p99(), w.percentile(99.0));
     }
 
     #[test]

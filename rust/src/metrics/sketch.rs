@@ -1,0 +1,234 @@
+//! Streaming quantile estimation: the P² (piecewise-parabolic) sketch
+//! of Jain & Chlamtac (CACM 1985).
+//!
+//! Five markers track (min, q/2, q, (1+q)/2, max); each observation
+//! nudges the inner markers toward their desired ranks with a parabolic
+//! height update (linear fallback when the parabola would break
+//! monotonicity). O(1) memory and O(1) per observation — the alternate
+//! backing for [`super::WeightedLatency`] when a run is too long to
+//! store one `(value, weight)` pair per decode step.
+//!
+//! Determinism: the sketch is a pure fold over the observation
+//! sequence — identical record sequences yield bit-identical marker
+//! state. It is NOT invariant under reordering (unlike the exact
+//! sorted-view backing), which is why the exact path stays the default
+//! everywhere the goldens pin bytes.
+
+/// One-quantile P² estimator. Weights replay the classical
+/// per-observation update `weight` times, so a weighted stream matches
+/// the unweighted stream it abbreviates exactly.
+#[derive(Clone, Debug)]
+pub struct P2Quantile {
+    /// Target quantile as a fraction in (0, 1).
+    q: f64,
+    /// Marker heights (estimates of the tracked quantiles).
+    heights: [f64; 5],
+    /// Actual marker positions (1-based ranks).
+    positions: [f64; 5],
+    /// Desired marker positions.
+    desired: [f64; 5],
+    /// Per-observation desired-position increments.
+    dn: [f64; 5],
+    /// Observations seen while still initializing (< 5 total weight).
+    initial: [f64; 5],
+    /// Total observation weight.
+    count: u64,
+}
+
+impl P2Quantile {
+    /// Sketch for quantile `q` (fraction; clamped into [0.001, 0.999] so
+    /// the marker layout stays non-degenerate).
+    pub fn new(q: f64) -> Self {
+        let q = if q.is_finite() { q.clamp(0.001, 0.999) } else { 0.5 };
+        P2Quantile {
+            q,
+            heights: [0.0; 5],
+            positions: [1.0, 2.0, 3.0, 4.0, 5.0],
+            desired: [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q, 5.0],
+            dn: [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0],
+            initial: [0.0; 5],
+            count: 0,
+        }
+    }
+
+    /// The tracked quantile (fraction).
+    pub fn quantile(&self) -> f64 {
+        self.q
+    }
+
+    /// Total observation weight recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Record `weight` observations of `value`. Non-finite values and
+    /// zero weights are ignored (the exact backing never records them
+    /// either, so the two stay comparable).
+    pub fn record(&mut self, value: f64, weight: u64) {
+        if weight == 0 || !value.is_finite() {
+            return;
+        }
+        for _ in 0..weight {
+            self.observe(value);
+        }
+    }
+
+    /// Current estimate of the tracked quantile: the middle marker once
+    /// initialized, the exact order statistic while fewer than five
+    /// observations have arrived, 0.0 when empty.
+    pub fn estimate(&self) -> f64 {
+        let n = self.count as usize;
+        if n == 0 {
+            return 0.0;
+        }
+        if n < 5 {
+            let mut head = self.initial;
+            let head = &mut head[..n];
+            head.sort_by(f64::total_cmp);
+            // Nearest-rank on the tiny prefix, matching the exact
+            // backing's ceil(q·n) convention.
+            let rank = (self.q * n as f64).ceil().max(1.0) as usize;
+            return head[rank.min(n) - 1];
+        }
+        self.heights[2]
+    }
+
+    fn observe(&mut self, x: f64) {
+        let n = self.count as usize;
+        self.count += 1;
+        if n < 5 {
+            self.initial[n] = x;
+            if n == 4 {
+                self.initial.sort_by(f64::total_cmp);
+                self.heights = self.initial;
+            }
+            return;
+        }
+        // Locate the cell, extending the extremes when x escapes them.
+        let k = if x < self.heights[0] {
+            self.heights[0] = x;
+            0
+        } else if x >= self.heights[4] {
+            self.heights[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            while k < 3 && x >= self.heights[k + 1] {
+                k += 1;
+            }
+            k
+        };
+        for p in self.positions[k + 1..].iter_mut() {
+            *p += 1.0;
+        }
+        for (d, dn) in self.desired.iter_mut().zip(self.dn) {
+            *d += dn;
+        }
+        // Nudge each inner marker at most one rank toward its desired
+        // position (piecewise-parabolic height prediction).
+        for i in 1..4 {
+            let d = self.desired[i] - self.positions[i];
+            let room_up = self.positions[i + 1] - self.positions[i] > 1.0;
+            let room_down = self.positions[i - 1] - self.positions[i] < -1.0;
+            if (d >= 1.0 && room_up) || (d <= -1.0 && room_down) {
+                let s = if d >= 0.0 { 1.0 } else { -1.0 };
+                let h = self.parabolic(i, s);
+                self.heights[i] = if self.heights[i - 1] < h && h < self.heights[i + 1] {
+                    h
+                } else {
+                    self.linear(i, s)
+                };
+                self.positions[i] += s;
+            }
+        }
+    }
+
+    /// The P² parabolic height prediction for moving marker `i` by `s`.
+    fn parabolic(&self, i: usize, s: f64) -> f64 {
+        let (n_prev, n, n_next) =
+            (self.positions[i - 1], self.positions[i], self.positions[i + 1]);
+        let (h_prev, h, h_next) = (self.heights[i - 1], self.heights[i], self.heights[i + 1]);
+        h + s / (n_next - n_prev)
+            * ((n - n_prev + s) * (h_next - h) / (n_next - n)
+                + (n_next - n - s) * (h - h_prev) / (n - n_prev))
+    }
+
+    /// Linear fallback when the parabola would break height monotonicity.
+    fn linear(&self, i: usize, s: f64) -> f64 {
+        let j = if s >= 0.0 { i + 1 } else { i - 1 };
+        self.heights[i]
+            + s * (self.heights[j] - self.heights[i]) / (self.positions[j] - self.positions[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn empty_and_tiny_streams() {
+        let s = P2Quantile::new(0.5);
+        assert_eq!(s.estimate(), 0.0);
+        assert_eq!(s.count(), 0);
+        let mut s = P2Quantile::new(0.5);
+        s.record(3.0, 1);
+        assert_eq!(s.estimate(), 3.0);
+        s.record(1.0, 1);
+        s.record(2.0, 1);
+        assert_eq!(s.estimate(), 2.0, "exact order statistic before init");
+        assert_eq!(s.count(), 3);
+    }
+
+    #[test]
+    fn ignores_degenerate_records() {
+        let mut s = P2Quantile::new(0.9);
+        s.record(1.0, 0);
+        s.record(f64::NAN, 3);
+        s.record(f64::INFINITY, 3);
+        assert_eq!(s.count(), 0);
+    }
+
+    #[test]
+    fn weighted_record_matches_repeated_record() {
+        let mut a = P2Quantile::new(0.9);
+        let mut b = P2Quantile::new(0.9);
+        let mut rng = Rng::seed_from_u64(7);
+        for _ in 0..200 {
+            let v = rng.f64();
+            let w = 1 + (rng.next_u64() % 5);
+            a.record(v, w);
+            for _ in 0..w {
+                b.record(v, 1);
+            }
+        }
+        assert_eq!(a.estimate().to_bits(), b.estimate().to_bits());
+        assert_eq!(a.count(), b.count());
+    }
+
+    #[test]
+    fn converges_on_uniform_stream() {
+        for q in [0.5, 0.9, 0.99] {
+            let mut s = P2Quantile::new(q);
+            let mut rng = Rng::seed_from_u64(42);
+            for _ in 0..20_000 {
+                s.record(rng.f64(), 1);
+            }
+            let err = (s.estimate() - q).abs();
+            assert!(err < 0.03, "q={q}: estimate {} off by {err}", s.estimate());
+        }
+    }
+
+    #[test]
+    fn deterministic_for_identical_streams() {
+        let run = || {
+            let mut s = P2Quantile::new(0.99);
+            let mut rng = Rng::seed_from_u64(9);
+            for _ in 0..5000 {
+                s.record(rng.f64() * 0.2, 1 + (rng.next_u64() % 8));
+            }
+            s.estimate()
+        };
+        assert_eq!(run().to_bits(), run().to_bits());
+    }
+}

@@ -1,0 +1,270 @@
+//! Trace and metrics serialization.
+//!
+//! [`ChromeTrace`] writes the Chrome trace-event JSON array format
+//! (loadable by Perfetto and `chrome://tracing`), one event per line.
+//! [`TsvTrace`] writes the same stream as flat TSV rows, and
+//! [`metrics_tsv`] dumps a recorder's counters and phase ledger.
+//!
+//! Determinism: all numbers are formatted with Rust's `Display`
+//! (shortest round-trip decimal, never locale- or platform-dependent),
+//! and events are serialized in recording order — so equal event
+//! streams produce byte-equal output.
+
+use std::fmt::Write;
+
+use super::sink::{ArgVal, EventPhase, TraceEvent, TraceSink};
+use super::{Recorder, COUNTER_NAMES, LANE_NAMES};
+
+/// Format a sim-time f64 (seconds or microseconds) as a JSON number:
+/// `Display` for finite values, `0` for the non-finite ones a defective
+/// cost model could produce (JSON has no NaN/Infinity).
+fn json_num(out: &mut String, x: f64) {
+    if x.is_finite() {
+        let _ = write!(out, "{x}");
+    } else {
+        out.push('0');
+    }
+}
+
+/// Chrome trace-event serializer: a JSON array with one event object
+/// per line, `ts`/`dur` in microseconds of sim time.
+#[derive(Debug)]
+pub struct ChromeTrace {
+    out: String,
+    first: bool,
+}
+
+impl ChromeTrace {
+    pub fn new() -> Self {
+        ChromeTrace {
+            out: String::from("[\n"),
+            first: true,
+        }
+    }
+
+    /// Close the array and return the serialized trace.
+    pub fn finish(mut self) -> String {
+        self.out.push_str("\n]\n");
+        self.out
+    }
+}
+
+impl Default for ChromeTrace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceSink for ChromeTrace {
+    fn event(&mut self, ev: &TraceEvent) {
+        if self.first {
+            self.first = false;
+        } else {
+            self.out.push_str(",\n");
+        }
+        let ph = match ev.phase {
+            EventPhase::Span => "X",
+            EventPhase::Instant => "i",
+        };
+        let _ = write!(
+            self.out,
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"{}\",\"pid\":{},\"tid\":{},\"ts\":",
+            ev.name, ev.cat, ph, ev.pid, ev.tid
+        );
+        json_num(&mut self.out, ev.ts * 1e6);
+        match ev.phase {
+            EventPhase::Span => {
+                self.out.push_str(",\"dur\":");
+                json_num(&mut self.out, ev.dur * 1e6);
+            }
+            // Instant events need a scope; "t" = thread.
+            EventPhase::Instant => self.out.push_str(",\"s\":\"t\""),
+        }
+        let args = ev.args();
+        if !args.is_empty() {
+            self.out.push_str(",\"args\":{");
+            for (i, (k, v)) in args.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                let _ = write!(self.out, "\"{k}\":");
+                match v {
+                    ArgVal::U64(u) => {
+                        let _ = write!(self.out, "{u}");
+                    }
+                    ArgVal::F64(f) => json_num(&mut self.out, *f),
+                    ArgVal::Str(s) => {
+                        let _ = write!(self.out, "\"{s}\"");
+                    }
+                }
+            }
+            self.out.push('}');
+        }
+        self.out.push('}');
+    }
+}
+
+/// Serialize an event stream as a Chrome trace (see [`ChromeTrace`]).
+pub fn chrome_trace(events: &[TraceEvent]) -> String {
+    let mut sink = ChromeTrace::new();
+    for ev in events {
+        sink.event(ev);
+    }
+    sink.finish()
+}
+
+/// Flat TSV serializer for event streams: one row per event,
+/// `pid tid ts dur phase cat name k=v...`.
+#[derive(Debug, Default)]
+pub struct TsvTrace {
+    out: String,
+}
+
+impl TsvTrace {
+    pub fn new() -> Self {
+        TsvTrace {
+            out: String::from("# pid\ttid\tts\tdur\tphase\tcat\tname\targs\n"),
+        }
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+impl TraceSink for TsvTrace {
+    fn event(&mut self, ev: &TraceEvent) {
+        let ph = match ev.phase {
+            EventPhase::Span => "span",
+            EventPhase::Instant => "instant",
+        };
+        let _ = write!(
+            self.out,
+            "{}\t{}\t{}\t{}\t{}\t{}\t{}",
+            ev.pid, ev.tid, ev.ts, ev.dur, ph, ev.cat, ev.name
+        );
+        for (i, (k, v)) in ev.args().iter().enumerate() {
+            self.out.push(if i == 0 { '\t' } else { ' ' });
+            match v {
+                ArgVal::U64(u) => {
+                    let _ = write!(self.out, "{k}={u}");
+                }
+                ArgVal::F64(f) => {
+                    let _ = write!(self.out, "{k}={f}");
+                }
+                ArgVal::Str(s) => {
+                    let _ = write!(self.out, "{k}={s}");
+                }
+            }
+        }
+        self.out.push('\n');
+    }
+}
+
+/// Dump a recorder's counters and phase ledger as TSV: one
+/// `counter\tname\tvalue` row per registered counter (fixed order) and
+/// one `lane\tname\tseconds` row per ledger lane.
+pub fn metrics_tsv(rec: &Recorder) -> String {
+    let mut out = String::from("# janus-obs metrics\n# kind\tname\tvalue\n");
+    let _ = writeln!(out, "mode\t{}\t1", rec.mode().name());
+    for (name, value) in COUNTER_NAMES.iter().zip(rec.counters().iter()) {
+        let _ = writeln!(out, "counter\t{name}\t{value}");
+    }
+    let ledger = rec.ledger();
+    for (name, secs) in LANE_NAMES.iter().zip(ledger.lanes().iter()) {
+        let _ = writeln!(out, "lane\t{name}\t{secs}");
+    }
+    let _ = writeln!(out, "ledger\tdecode_steps\t{}", ledger.decode_steps());
+    let _ = writeln!(out, "ledger\tprefill_steps\t{}", ledger.prefill_steps());
+    let _ = writeln!(out, "ledger\ttotal_seconds\t{}", ledger.total());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{ObsMode, StepPhases, TRACK_ENGINE, TRACK_FAULTS};
+
+    fn sample_events() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::span("decode", "engine", 0.5, 0.0923, TRACK_ENGINE)
+                .arg("batch", ArgVal::U64(64))
+                .arg("attention", ArgVal::F64(0.03125)),
+            TraceEvent::instant("recovery", "faults", 1.25, TRACK_FAULTS)
+                .arg("kind", ArgVal::Str("instance-crash")),
+        ]
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let t = chrome_trace(&sample_events());
+        assert!(t.starts_with("[\n"));
+        assert!(t.ends_with("\n]\n"));
+        assert!(t.contains("\"name\":\"decode\""));
+        assert!(t.contains("\"ph\":\"X\""));
+        assert!(t.contains("\"ts\":500000"));
+        assert!(t.contains("\"dur\":92300.00000000001") || t.contains("\"dur\":92300"));
+        assert!(t.contains("\"ph\":\"i\""));
+        assert!(t.contains("\"s\":\"t\""));
+        assert!(t.contains("\"kind\":\"instance-crash\""));
+        // One event per line: 2 events + 2 bracket lines.
+        assert_eq!(t.lines().count(), 4);
+        // No trailing comma before the closing bracket (strict JSON).
+        assert!(!t.contains(",\n]"));
+    }
+
+    #[test]
+    fn chrome_trace_is_deterministic() {
+        let evs = sample_events();
+        assert_eq!(chrome_trace(&evs), chrome_trace(&evs));
+    }
+
+    #[test]
+    fn non_finite_args_serialize_as_zero() {
+        let ev = TraceEvent::span("x", "c", 0.0, f64::NAN, TRACK_ENGINE)
+            .arg("v", ArgVal::F64(f64::INFINITY));
+        let t = chrome_trace(&[ev]);
+        assert!(t.contains("\"dur\":0"));
+        assert!(t.contains("\"v\":0"));
+        assert!(!t.contains("NaN") && !t.contains("inf"));
+    }
+
+    #[test]
+    fn tsv_trace_rows() {
+        let mut sink = TsvTrace::new();
+        for ev in sample_events() {
+            sink.event(&ev);
+        }
+        let t = sink.finish();
+        assert_eq!(t.lines().count(), 3);
+        assert!(t.contains("span\tengine\tdecode\tbatch=64 attention=0.03125"));
+        assert!(t.contains("instant\tfaults\trecovery\tkind=instance-crash"));
+    }
+
+    #[test]
+    fn metrics_tsv_covers_counters_and_lanes() {
+        let mut rec = Recorder::new(ObsMode::Counters);
+        rec.decode_step(
+            0.0,
+            0.1,
+            16,
+            4,
+            &StepPhases::from_lanes(0.1, 0.01, 0.05, 0.01, 0.0, 0.0),
+            0.002,
+            0.0,
+            0.0,
+        );
+        let t = metrics_tsv(&rec);
+        assert!(t.contains("counter\tdecode_steps\t1"));
+        assert!(t.contains("counter\tgenerated_tokens\t16"));
+        assert!(t.contains("lane\texpert\t0.05"));
+        assert!(t.contains("lane\tprefill\t0.002"));
+        assert!(t.contains("ledger\tdecode_steps\t1"));
+        // Every registered counter and lane appears exactly once.
+        assert_eq!(
+            t.matches("counter\t").count(),
+            crate::obs::NUM_COUNTERS
+        );
+        assert_eq!(t.matches("lane\t").count(), crate::obs::NUM_LANES);
+    }
+}

@@ -1,0 +1,693 @@
+//! Deterministic observability plane: sim-time tracing, per-phase
+//! latency attribution, and a counters/gauges registry.
+//!
+//! Three levels, selected by `JANUS_OBS` (see
+//! [`crate::analysis::env_registry`]):
+//!
+//! - `off` — provably free. The engine's recorder-carrying paths take a
+//!   [`Recorder::disabled`] value whose every method is an early-out;
+//!   the charged step arithmetic is never touched in any mode, so `off`
+//!   output is bit-identical to a build without this module (pinned by
+//!   the golden snapshots) and the steady-state decode step stays
+//!   zero-allocation (pinned by `tests/alloc_regression.rs`).
+//! - `counters` — the fixed-size counter array and the per-step
+//!   [`PhaseLedger`] accumulate; no events. Still allocation-free and
+//!   within a ≤5% step-throughput overhead (asserted by `bench_sim`).
+//! - `full` — additionally emits [`TraceEvent`]s (request lifecycle,
+//!   decode/prefill step spans with phase lanes, scaling decisions with
+//!   the `ScalingSignal` snapshot, fault windows, recovery and
+//!   placement actions) into a pre-sized buffer. Export via
+//!   [`export::chrome_trace`] (Perfetto-loadable JSON) and
+//!   [`export::metrics_tsv`].
+//!
+//! **Determinism contract.** Every recorded value derives from sim
+//! state; events are appended in the engine's `(time, seq)` processing
+//! order; sweeps merge per-cell recorders in cell-submission order
+//! ([`crate::sim::sweep::run_cells_traced`]). Trace bytes are therefore
+//! identical across reruns and across any sweep worker count
+//! (`tests/sweep_determinism.rs` pins this).
+//!
+//! **Phase attribution.** [`StepPhases`] splits one decode step's cost
+//! into attention / dispatch / expert / combine / retry / stall lanes
+//! whose sum reproduces the charged latency *to the bit*
+//! ([`StepPhases::from_lanes`] constructs the attention lane as the
+//! remainder and repairs the final rounding by at most a few ulps, or
+//! collapses to an unattributed single lane — so the invariant holds by
+//! construction, never by float luck). `tests/obs_trace.rs` asserts it
+//! for all four serving systems.
+
+pub mod export;
+pub mod sink;
+
+pub use sink::{
+    ArgVal, EventPhase, TraceEvent, TraceSink, MAX_ARGS, TRACK_ENGINE, TRACK_FAULTS,
+    TRACK_PLACEMENT, TRACK_REQUESTS, TRACK_SCALING,
+};
+
+/// Environment variable selecting the telemetry level.
+pub const OBS_ENV: &str = "JANUS_OBS";
+
+/// Telemetry level. See the module docs for the cost of each.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ObsMode {
+    #[default]
+    Off,
+    Counters,
+    Full,
+}
+
+impl ObsMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "off" => Some(ObsMode::Off),
+            "counters" => Some(ObsMode::Counters),
+            "full" => Some(ObsMode::Full),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ObsMode::Off => "off",
+            ObsMode::Counters => "counters",
+            ObsMode::Full => "full",
+        }
+    }
+
+    /// Resolve from `JANUS_OBS` (default `off`; garbage reads as `off`
+    /// rather than aborting a sweep worker).
+    pub fn from_env() -> Self {
+        std::env::var(OBS_ENV)
+            .ok()
+            .and_then(|v| Self::parse(&v))
+            .unwrap_or_default()
+    }
+}
+
+/// Per-decode-step cost attribution: six lanes whose sum reproduces the
+/// step's charged latency bit-for-bit (see [`Self::from_lanes`]).
+///
+/// The serving systems fill dispatch/expert/combine (and SGLang its
+/// scheduling overhead into `stall`) from their cost models; the
+/// attention lane is the constructed remainder, so it also absorbs
+/// whatever ran overlapped under it (the shared expert, or the
+/// dispatch/combine round trip when the shared expert is longer — an
+/// overlapped phase is not on the critical path and charges nothing).
+/// The engine adds fault-plane retry/backoff penalties and re-placement
+/// stalls into `retry`/`stall` at the ledger level.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StepPhases {
+    pub attention: f64,
+    pub dispatch: f64,
+    pub expert: f64,
+    pub combine: f64,
+    pub retry: f64,
+    pub stall: f64,
+}
+
+/// Next representable f64 above `x` (callers pass finite, non-negative,
+/// non-MAX latencies only).
+fn ulp_up(x: f64) -> f64 {
+    f64::from_bits(x.to_bits() + 1)
+}
+
+/// Next representable f64 below `x`; negative when `x` is already at or
+/// below zero, which the repair loop treats as "give up and collapse".
+fn ulp_down(x: f64) -> f64 {
+    if x <= 0.0 {
+        -1.0
+    } else {
+        f64::from_bits(x.to_bits() - 1)
+    }
+}
+
+impl StepPhases {
+    /// The non-attention lanes folded in the one canonical association
+    /// [`Self::total`] uses.
+    fn rest(&self) -> f64 {
+        (((self.dispatch + self.expert) + self.combine) + self.retry) + self.stall
+    }
+
+    /// Lane sum in the canonical association. For any value built by
+    /// [`Self::from_lanes`] / [`Self::collapsed`] / reconciled by
+    /// [`Self::reconciled`], `total().to_bits()` equals the charged
+    /// latency's bits.
+    pub fn total(&self) -> f64 {
+        self.attention + self.rest()
+    }
+
+    /// The unattributed fallback: the whole charge on the attention
+    /// lane. Trivially bit-exact.
+    pub fn collapsed(charged: f64) -> Self {
+        StepPhases {
+            attention: charged,
+            ..StepPhases::default()
+        }
+    }
+
+    /// Whether any lane beyond attention carries time (false for
+    /// [`Self::collapsed`] values and for zero-cost steps).
+    pub fn attributed(&self) -> bool {
+        self.rest() != 0.0
+    }
+
+    /// Build lanes that sum to `charged` exactly: attention is the
+    /// remainder `charged - rest`, then a bounded one-ulp repair walks
+    /// it until the canonical fold reproduces `charged`'s bits (the
+    /// remainder identity `(c - r) + r == c` can be one rounding step
+    /// off when `r < c/2`). Degenerate inputs (non-finite charge,
+    /// negative lanes, rest exceeding the charge) collapse instead of
+    /// producing a lane set that lies about the sum.
+    pub fn from_lanes(
+        charged: f64,
+        dispatch: f64,
+        expert: f64,
+        combine: f64,
+        retry: f64,
+        stall: f64,
+    ) -> Self {
+        if !charged.is_finite()
+            || !(dispatch >= 0.0 && expert >= 0.0 && combine >= 0.0 && retry >= 0.0 && stall >= 0.0)
+        {
+            return Self::collapsed(charged);
+        }
+        let mut p = StepPhases {
+            attention: 0.0,
+            dispatch,
+            expert,
+            combine,
+            retry,
+            stall,
+        };
+        let rest = p.rest();
+        if !rest.is_finite() || rest > charged {
+            return Self::collapsed(charged);
+        }
+        let mut attention = charged - rest;
+        for _ in 0..4 {
+            if attention < 0.0 {
+                break;
+            }
+            p.attention = attention;
+            let total = p.total();
+            if total.to_bits() == charged.to_bits() {
+                return p;
+            }
+            attention = if total < charged {
+                ulp_up(attention)
+            } else {
+                ulp_down(attention)
+            };
+        }
+        Self::collapsed(charged)
+    }
+
+    /// Accept `self` when its canonical sum already reproduces
+    /// `charged`'s bits; otherwise collapse. The engine runs every
+    /// system-reported lane set through this against the step's actual
+    /// charge, so a system that forgot to refresh its scratch can never
+    /// corrupt the ledger invariant.
+    pub fn reconciled(self, charged: f64) -> Self {
+        if self.total().to_bits() == charged.to_bits() {
+            self
+        } else {
+            Self::collapsed(charged)
+        }
+    }
+}
+
+/// Aggregated phase lanes: the six [`StepPhases`] lanes plus the
+/// engine-charged chunked-prefill lane.
+pub const NUM_LANES: usize = 7;
+/// Lane names, indexed like [`PhaseLedger::lanes`].
+pub const LANE_NAMES: [&str; NUM_LANES] = [
+    "attention", "dispatch", "expert", "combine", "retry", "stall", "prefill",
+];
+const LANE_PREFILL: usize = 6;
+
+/// Run-level phase-attribution ledger: per-lane summed seconds across
+/// every recorded step, accumulated in event order (deterministic).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseLedger {
+    lanes: [f64; NUM_LANES],
+    decode_steps: u64,
+    prefill_steps: u64,
+}
+
+impl PhaseLedger {
+    /// Record one decode step: the system's lanes, the engine's prefill
+    /// charge, and the fault plane's stall/retry charges.
+    pub fn record_decode(&mut self, p: &StepPhases, prefill: f64, stall: f64, retry: f64) {
+        self.lanes[0] += p.attention;
+        self.lanes[1] += p.dispatch;
+        self.lanes[2] += p.expert;
+        self.lanes[3] += p.combine;
+        self.lanes[4] += p.retry + retry;
+        self.lanes[5] += p.stall + stall;
+        self.lanes[LANE_PREFILL] += prefill;
+        self.decode_steps += 1;
+    }
+
+    /// Record a prefill-only step (no decode slots active).
+    pub fn record_prefill(&mut self, dur: f64) {
+        self.lanes[LANE_PREFILL] += dur;
+        self.prefill_steps += 1;
+    }
+
+    /// Per-lane summed seconds, indexed like [`LANE_NAMES`].
+    pub fn lanes(&self) -> &[f64; NUM_LANES] {
+        &self.lanes
+    }
+
+    pub fn decode_steps(&self) -> u64 {
+        self.decode_steps
+    }
+
+    pub fn prefill_steps(&self) -> u64 {
+        self.prefill_steps
+    }
+
+    /// All-lane sum (left-to-right over [`Self::lanes`]).
+    pub fn total(&self) -> f64 {
+        let mut t = 0.0;
+        for l in &self.lanes {
+            t += l;
+        }
+        t
+    }
+
+    /// Fold another ledger in (sweep merge, submission order).
+    pub fn merge(&mut self, other: &PhaseLedger) {
+        for (a, b) in self.lanes.iter_mut().zip(other.lanes.iter()) {
+            *a += b;
+        }
+        self.decode_steps += other.decode_steps;
+        self.prefill_steps += other.prefill_steps;
+    }
+}
+
+/// The counters/gauges registry: fixed set, fixed order, so snapshots
+/// and merges are deterministic by construction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    DecodeSteps = 0,
+    PrefillOnlySteps,
+    GeneratedTokens,
+    Arrivals,
+    Admitted,
+    Rejoined,
+    Rejected,
+    Shed,
+    Preempted,
+    Completed,
+    FirstTokens,
+    Evicted,
+    ScalingDecisions,
+    InfeasibleDecisions,
+    CacheHits,
+    CacheMisses,
+    FaultsOpened,
+    FaultsCleared,
+    EarlyRepairs,
+    Recoveries,
+    RetryRounds,
+    PlacementStalls,
+    /// Events dropped because the full-mode buffer was at capacity —
+    /// a nonzero value marks a truncated (still deterministic) trace.
+    DroppedEvents,
+    /// Steps whose reported lanes failed reconciliation and collapsed.
+    UnattributedSteps,
+}
+
+/// Number of registered counters.
+pub const NUM_COUNTERS: usize = 24;
+
+/// Counter names, indexed by `Counter as usize`.
+pub const COUNTER_NAMES: [&str; NUM_COUNTERS] = [
+    "decode_steps",
+    "prefill_only_steps",
+    "generated_tokens",
+    "arrivals",
+    "admitted",
+    "rejoined",
+    "rejected",
+    "shed",
+    "preempted",
+    "completed",
+    "first_tokens",
+    "evicted",
+    "scaling_decisions",
+    "infeasible_decisions",
+    "cache_hits",
+    "cache_misses",
+    "faults_opened",
+    "faults_cleared",
+    "early_repairs",
+    "recoveries",
+    "retry_rounds",
+    "placement_stalls",
+    "dropped_events",
+    "unattributed_steps",
+];
+
+/// Default full-mode event-buffer capacity (events beyond it are
+/// dropped and counted, never reallocated mid-run).
+pub const DEFAULT_EVENT_CAPACITY: usize = 1 << 16;
+
+/// The per-run telemetry collector the engine threads through its
+/// scenario loops. All hot-path methods are early-outs in `off` mode
+/// and allocation-free in every mode (the event buffer is pre-sized).
+#[derive(Clone, Debug)]
+pub struct Recorder {
+    mode: ObsMode,
+    pid: u32,
+    counters: [u64; NUM_COUNTERS],
+    ledger: PhaseLedger,
+    events: Vec<TraceEvent>,
+}
+
+impl Recorder {
+    /// A recorder with a pre-sized event buffer (`full` mode only uses
+    /// it; other modes keep it empty).
+    pub fn with_capacity(mode: ObsMode, capacity: usize) -> Self {
+        let cap = if mode == ObsMode::Full { capacity } else { 0 };
+        Recorder {
+            mode,
+            pid: 0,
+            counters: [0; NUM_COUNTERS],
+            ledger: PhaseLedger::default(),
+            events: Vec::with_capacity(cap),
+        }
+    }
+
+    pub fn new(mode: ObsMode) -> Self {
+        Self::with_capacity(mode, DEFAULT_EVENT_CAPACITY)
+    }
+
+    /// The provably-free recorder `engine::run` uses internally: every
+    /// method is a no-op behind one branch.
+    pub fn disabled() -> Self {
+        Self::with_capacity(ObsMode::Off, 0)
+    }
+
+    /// Resolve the mode from `JANUS_OBS`. Only recorder-carrying
+    /// entrypoints (`bin/trace`, `figures --trace-out`, the bench obs
+    /// records) call this; golden/determinism surfaces construct their
+    /// recorders explicitly, so engine bytes never depend on the env.
+    pub fn from_env() -> Self {
+        Self::new(ObsMode::from_env())
+    }
+
+    pub fn mode(&self) -> ObsMode {
+        self.mode
+    }
+
+    /// Whether any recording happens (`counters` or `full`).
+    pub fn enabled(&self) -> bool {
+        self.mode != ObsMode::Off
+    }
+
+    /// Whether events are collected (`full`).
+    pub fn full(&self) -> bool {
+        self.mode == ObsMode::Full
+    }
+
+    /// Tag subsequently recorded events with a sweep-cell id (Chrome
+    /// `pid`), so merged multi-cell traces keep their rows separate.
+    pub fn set_pid(&mut self, pid: u32) {
+        self.pid = pid;
+    }
+
+    pub fn add(&mut self, c: Counter, n: u64) {
+        if self.mode != ObsMode::Off {
+            self.counters[c as usize] += n;
+        }
+    }
+
+    pub fn bump(&mut self, c: Counter) {
+        self.add(c, 1);
+    }
+
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c as usize]
+    }
+
+    /// The counter array, indexed like [`COUNTER_NAMES`].
+    pub fn counters(&self) -> &[u64; NUM_COUNTERS] {
+        &self.counters
+    }
+
+    pub fn ledger(&self) -> &PhaseLedger {
+        &self.ledger
+    }
+
+    /// Append an event (full mode). Within the pre-sized capacity this
+    /// never allocates; beyond it the event is dropped and counted.
+    pub fn event(&mut self, mut ev: TraceEvent) {
+        if self.mode != ObsMode::Full {
+            return;
+        }
+        if self.events.len() == self.events.capacity() {
+            self.counters[Counter::DroppedEvents as usize] += 1;
+            return;
+        }
+        ev.pid = self.pid;
+        self.events.push(ev);
+    }
+
+    /// Recorded events, in emission (= engine processing) order.
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// Feed every recorded event, in order, to a sink.
+    pub fn replay(&self, sink: &mut dyn TraceSink) {
+        for ev in &self.events {
+            sink.event(ev);
+        }
+    }
+
+    /// Record one decode step: counters, ledger lanes, and (full mode)
+    /// a step span carrying the lane values. `charged` is the step's
+    /// full charged latency (tpot + prefill + fault extra); `phases`
+    /// must already be reconciled against the system's tpot.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_step(
+        &mut self,
+        ts: f64,
+        charged: f64,
+        batch: usize,
+        a_max: u32,
+        phases: &StepPhases,
+        prefill: f64,
+        stall: f64,
+        retry: f64,
+    ) {
+        if self.mode == ObsMode::Off {
+            return;
+        }
+        self.counters[Counter::DecodeSteps as usize] += 1;
+        self.counters[Counter::GeneratedTokens as usize] += batch as u64;
+        if !phases.attributed() && phases.attention != 0.0 {
+            self.counters[Counter::UnattributedSteps as usize] += 1;
+        }
+        self.ledger.record_decode(phases, prefill, stall, retry);
+        if self.mode == ObsMode::Full {
+            self.event(
+                TraceEvent::span("decode", "engine", ts, charged, TRACK_ENGINE)
+                    .arg("batch", ArgVal::U64(batch as u64))
+                    .arg("a_max", ArgVal::U64(a_max as u64))
+                    .arg("attention", ArgVal::F64(phases.attention))
+                    .arg("dispatch", ArgVal::F64(phases.dispatch))
+                    .arg("expert", ArgVal::F64(phases.expert))
+                    .arg("combine", ArgVal::F64(phases.combine))
+                    .arg("prefill", ArgVal::F64(prefill))
+                    .arg("overhead", ArgVal::F64((phases.retry + retry) + (phases.stall + stall))),
+            );
+        }
+    }
+
+    /// Record a prefill-only step (no decode slots active this event).
+    pub fn prefill_step(&mut self, ts: f64, dur: f64, chunk_tokens: u32) {
+        if self.mode == ObsMode::Off {
+            return;
+        }
+        self.counters[Counter::PrefillOnlySteps as usize] += 1;
+        self.ledger.record_prefill(dur);
+        if self.mode == ObsMode::Full {
+            self.event(
+                TraceEvent::span("prefill", "engine", ts, dur, TRACK_ENGINE)
+                    .arg("chunk_tokens", ArgVal::U64(chunk_tokens as u64)),
+            );
+        }
+    }
+
+    /// Fold another recorder in: counters and lanes sum, events append
+    /// in the other's order. Sweeps call this cell-by-cell in
+    /// submission order, which is what makes merged output independent
+    /// of the worker count. (Cold path — the event buffer may grow.)
+    pub fn merge(&mut self, other: &Recorder) {
+        for (a, b) in self.counters.iter_mut().zip(other.counters.iter()) {
+            *a += b;
+        }
+        self.ledger.merge(&other.ledger);
+        self.events.extend_from_slice(&other.events);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parses_and_defaults() {
+        assert_eq!(ObsMode::parse("off"), Some(ObsMode::Off));
+        assert_eq!(ObsMode::parse("counters"), Some(ObsMode::Counters));
+        assert_eq!(ObsMode::parse("full"), Some(ObsMode::Full));
+        assert_eq!(ObsMode::parse("FULL"), None);
+        assert_eq!(ObsMode::default(), ObsMode::Off);
+        assert_eq!(ObsMode::Counters.name(), "counters");
+    }
+
+    #[test]
+    fn counter_names_cover_the_enum() {
+        assert_eq!(Counter::UnattributedSteps as usize, NUM_COUNTERS - 1);
+        assert_eq!(COUNTER_NAMES.len(), NUM_COUNTERS);
+        for w in COUNTER_NAMES.windows(2) {
+            assert_ne!(w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn from_lanes_is_bit_exact_or_collapsed() {
+        // Well-scaled lanes reconstruct exactly.
+        let charged = 0.0923417;
+        let p = StepPhases::from_lanes(charged, 0.011, 0.031, 0.012, 0.0, 0.002);
+        assert_eq!(p.total().to_bits(), charged.to_bits());
+        assert!(p.attributed());
+        assert!(p.attention > 0.0);
+
+        // Adversarial magnitudes either repair or collapse — the sum
+        // invariant holds every time.
+        let cases = [
+            (1.0, 1e-17, 3e-17, 2e-17, 0.0, 0.0),
+            (1e-9, 2.5e-10, 2.5e-10, 2.5e-10, 0.0, 0.0),
+            (3.0 + 1e-15, 1.0, 1.0, 1.0, 0.0, 0.0),
+            (0.1 + 0.2, 0.1, 0.05, 0.05, 0.0, 0.0),
+        ];
+        for (c, d, e, k, r, s) in cases {
+            let p = StepPhases::from_lanes(c, d, e, k, r, s);
+            assert_eq!(p.total().to_bits(), c.to_bits(), "case charged={c}");
+        }
+
+        // Degenerate inputs collapse but still sum exactly.
+        let p = StepPhases::from_lanes(0.01, 0.02, 0.0, 0.0, 0.0, 0.0);
+        assert!(!p.attributed());
+        assert_eq!(p.total().to_bits(), 0.01f64.to_bits());
+        let p = StepPhases::from_lanes(0.01, -1.0, 0.0, 0.0, 0.0, 0.0);
+        assert!(!p.attributed());
+        let p = StepPhases::from_lanes(f64::INFINITY, 0.1, 0.1, 0.1, 0.0, 0.0);
+        assert_eq!(p.attention, f64::INFINITY);
+    }
+
+    #[test]
+    fn exhaustive_random_lanes_hold_the_invariant() {
+        // A cheap LCG sweep over magnitudes: every constructed value
+        // must reproduce the charge bit-for-bit, attributed or not.
+        let mut state = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 11) as f64 / (1u64 << 53) as f64
+        };
+        for i in 0..10_000 {
+            let scale = 10f64.powi((i % 13) as i32 - 6);
+            let d = next() * scale;
+            let e = next() * scale;
+            let k = next() * scale;
+            let a = next() * scale;
+            let charged = ((a + d) + e) + k;
+            let p = StepPhases::from_lanes(charged, d, e, k, 0.0, 0.0);
+            assert_eq!(p.total().to_bits(), charged.to_bits(), "iter {i}");
+        }
+    }
+
+    #[test]
+    fn reconcile_accepts_exact_and_collapses_stale() {
+        let charged = 0.25;
+        let good = StepPhases::from_lanes(charged, 0.05, 0.1, 0.02, 0.0, 0.0);
+        assert_eq!(good.reconciled(charged), good);
+        let stale = StepPhases::from_lanes(0.5, 0.05, 0.1, 0.02, 0.0, 0.0);
+        let fixed = stale.reconciled(charged);
+        assert!(!fixed.attributed());
+        assert_eq!(fixed.total().to_bits(), charged.to_bits());
+    }
+
+    #[test]
+    fn ledger_accumulates_and_merges() {
+        let mut a = PhaseLedger::default();
+        let p = StepPhases::from_lanes(0.1, 0.02, 0.05, 0.01, 0.0, 0.0);
+        a.record_decode(&p, 0.003, 0.0, 0.0);
+        a.record_prefill(0.004);
+        assert_eq!(a.decode_steps(), 1);
+        assert_eq!(a.prefill_steps(), 1);
+        assert!((a.lanes()[LANE_PREFILL] - 0.007).abs() < 1e-15);
+        let mut b = a;
+        b.merge(&a);
+        assert_eq!(b.decode_steps(), 2);
+        assert!((b.total() - 2.0 * a.total()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn recorder_off_is_inert() {
+        let mut r = Recorder::disabled();
+        assert!(!r.enabled());
+        r.bump(Counter::Arrivals);
+        r.event(TraceEvent::instant("x", "c", 0.0, TRACK_ENGINE));
+        r.decode_step(0.0, 0.1, 4, 2, &StepPhases::collapsed(0.1), 0.0, 0.0, 0.0);
+        assert_eq!(r.counter(Counter::Arrivals), 0);
+        assert_eq!(r.counter(Counter::DecodeSteps), 0);
+        assert!(r.events().is_empty());
+        assert_eq!(r.ledger().decode_steps(), 0);
+    }
+
+    #[test]
+    fn recorder_counters_mode_skips_events() {
+        let mut r = Recorder::new(ObsMode::Counters);
+        r.decode_step(1.0, 0.1, 8, 3, &StepPhases::collapsed(0.1), 0.0, 0.0, 0.0);
+        assert_eq!(r.counter(Counter::DecodeSteps), 1);
+        assert_eq!(r.counter(Counter::GeneratedTokens), 8);
+        assert!(r.events().is_empty());
+        assert_eq!(r.events.capacity(), 0, "no event buffer outside full mode");
+    }
+
+    #[test]
+    fn recorder_full_buffer_is_bounded() {
+        let mut r = Recorder::with_capacity(ObsMode::Full, 2);
+        let cap = r.events.capacity();
+        for _ in 0..(cap + 3) {
+            r.event(TraceEvent::instant("x", "c", 0.0, TRACK_ENGINE));
+        }
+        assert_eq!(r.events().len(), cap);
+        assert_eq!(r.counter(Counter::DroppedEvents), 3);
+    }
+
+    #[test]
+    fn merge_sums_in_order() {
+        let mut a = Recorder::new(ObsMode::Full);
+        a.set_pid(0);
+        a.event(TraceEvent::instant("a", "c", 1.0, TRACK_ENGINE));
+        a.bump(Counter::Arrivals);
+        let mut b = Recorder::new(ObsMode::Full);
+        b.set_pid(1);
+        b.event(TraceEvent::instant("b", "c", 0.5, TRACK_ENGINE));
+        b.add(Counter::Arrivals, 2);
+        let mut m = Recorder::new(ObsMode::Full);
+        m.merge(&a);
+        m.merge(&b);
+        assert_eq!(m.counter(Counter::Arrivals), 3);
+        assert_eq!(m.events().len(), 2);
+        assert_eq!(m.events()[0].name, "a");
+        assert_eq!(m.events()[0].pid, 0);
+        assert_eq!(m.events()[1].pid, 1);
+    }
+}

@@ -1,0 +1,144 @@
+//! Span/event model and the [`TraceSink`] consumer trait.
+//!
+//! Every field of a [`TraceEvent`] derives from simulated state — sim
+//! time, the engine's `(time, seq)` event ordering, exact counters —
+//! never the wall clock, so a serialized trace is bit-identical across
+//! reruns and sweep thread counts (the tidy `no-wallclock` rule holds
+//! over this module like everywhere else).
+//!
+//! Events are fixed-size `Copy` values: names and string args are
+//! `&'static str`, and args live in a bounded inline array. That keeps
+//! the recorder's pre-sized event buffer allocation-free while the
+//! engine is stepping (see `tests/alloc_regression.rs`), and keeps
+//! serialization trivially deterministic.
+
+/// Upper bound on per-event args (inline array, no allocation).
+pub const MAX_ARGS: usize = 8;
+
+/// One argument value. Strings are `&'static str` only, so events stay
+/// `Copy` and recording never allocates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArgVal {
+    U64(u64),
+    F64(f64),
+    Str(&'static str),
+}
+
+/// Chrome-trace phase of an event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventPhase {
+    /// Complete event (`"ph":"X"`): a span with a duration.
+    Span,
+    /// Instant event (`"ph":"i"`).
+    Instant,
+}
+
+/// Track (Chrome `tid`) for engine decode/prefill step spans.
+pub const TRACK_ENGINE: u32 = 1;
+/// Track for request-lifecycle spans (queue wait, completions).
+pub const TRACK_REQUESTS: u32 = 2;
+/// Track for scaling-decision spans and signal snapshots.
+pub const TRACK_SCALING: u32 = 3;
+/// Track for fault windows and recovery actions.
+pub const TRACK_FAULTS: u32 = 4;
+/// Track for placement actions (replication, prefetch, migration).
+pub const TRACK_PLACEMENT: u32 = 5;
+
+/// One trace event, keyed on sim time. `ts`/`dur` are sim seconds; the
+/// exporters convert to Chrome's microseconds. `pid` identifies the
+/// sweep cell the event came from (set by the recorder), `tid` the
+/// subsystem track.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    pub cat: &'static str,
+    pub phase: EventPhase,
+    /// Sim-time start, seconds.
+    pub ts: f64,
+    /// Sim-time duration, seconds (0.0 for instants).
+    pub dur: f64,
+    pub pid: u32,
+    pub tid: u32,
+    args: [(&'static str, ArgVal); MAX_ARGS],
+    n_args: u8,
+}
+
+const EMPTY_ARG: (&str, ArgVal) = ("", ArgVal::U64(0));
+
+impl TraceEvent {
+    /// A complete-event span at sim time `ts` lasting `dur` seconds.
+    pub fn span(name: &'static str, cat: &'static str, ts: f64, dur: f64, tid: u32) -> Self {
+        TraceEvent {
+            name,
+            cat,
+            phase: EventPhase::Span,
+            ts,
+            dur,
+            pid: 0,
+            tid,
+            args: [EMPTY_ARG; MAX_ARGS],
+            n_args: 0,
+        }
+    }
+
+    /// An instant event at sim time `ts`.
+    pub fn instant(name: &'static str, cat: &'static str, ts: f64, tid: u32) -> Self {
+        TraceEvent {
+            phase: EventPhase::Instant,
+            ..Self::span(name, cat, ts, 0.0, tid)
+        }
+    }
+
+    /// Attach an argument. Args beyond [`MAX_ARGS`] are dropped
+    /// silently — the bounded inline array is what keeps events `Copy`
+    /// and the hot path allocation-free, and every call site stays
+    /// within the budget by construction.
+    pub fn arg(mut self, key: &'static str, value: ArgVal) -> Self {
+        let n = self.n_args as usize;
+        if n < MAX_ARGS {
+            self.args[n] = (key, value);
+            self.n_args = n as u8 + 1;
+        }
+        self
+    }
+
+    /// The populated args, in attachment order.
+    pub fn args(&self) -> &[(&'static str, ArgVal)] {
+        &self.args[..self.n_args as usize]
+    }
+}
+
+/// Consumer of a recorded event stream.
+///
+/// The recorder collects events into its pre-sized buffer during the
+/// run (emission must not allocate); sinks consume the finished stream
+/// afterwards — `Recorder::replay` feeds every event, in recording
+/// order, to any sink. [`crate::obs::export::ChromeTrace`] and
+/// [`crate::obs::export::TsvTrace`] are the built-in serializers.
+pub trait TraceSink {
+    fn event(&mut self, ev: &TraceEvent);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arg_builder_saturates_at_max() {
+        let mut ev = TraceEvent::span("s", "c", 1.0, 2.0, TRACK_ENGINE);
+        for i in 0..(MAX_ARGS + 3) {
+            ev = ev.arg("k", ArgVal::U64(i as u64));
+        }
+        assert_eq!(ev.args().len(), MAX_ARGS);
+        assert_eq!(ev.args()[MAX_ARGS - 1].1, ArgVal::U64(MAX_ARGS as u64 - 1));
+    }
+
+    #[test]
+    fn instant_has_zero_duration() {
+        let ev = TraceEvent::instant("i", "c", 3.5, TRACK_FAULTS);
+        assert_eq!(ev.phase, EventPhase::Instant);
+        assert_eq!(ev.dur, 0.0);
+        assert_eq!(ev.ts, 3.5);
+        assert!(ev.args().is_empty());
+    }
+}

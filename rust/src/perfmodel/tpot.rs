@@ -17,6 +17,13 @@ pub struct DisaggLatency {
     pub moe: f64,
     pub comm: f64,
     pub overlapped_shared: f64,
+    /// Dispatch-direction wire time summed over MoE layers when the
+    /// communication round trip is on the critical path; 0.0 when the
+    /// shared expert overlaps (hides) it. Observability lane only —
+    /// `tpot` never reads it.
+    pub dispatch: f64,
+    /// Combine-direction counterpart of `dispatch`.
+    pub combine: f64,
     pub tpot: f64,
 }
 
@@ -113,10 +120,10 @@ impl TpotModel {
         if self.slowdown != 1.0 {
             t_moe *= self.slowdown;
         }
-        let t_comm = self
+        let bd = self
             .comm
-            .layer_cost_with(scratch, self.scheme, self.gating, n_attn, n_moe, b_total)
-            .total();
+            .layer_cost_with(scratch, self.scheme, self.gating, n_attn, n_moe, b_total);
+        let t_comm = bd.total();
         let t_shared = moe::shared_expert_latency(&self.coeffs, b_local);
         // Shared expert overlaps with communication.
         let comm_or_shared = t_comm.max(t_shared);
@@ -130,11 +137,26 @@ impl TpotModel {
         let dense_layers = self.layers - self.moe_layers;
         let tpot =
             per_moe_layer * self.moe_layers as f64 + per_dense_layer * dense_layers as f64;
+        // Phase-attribution lanes (obs plane): when the dispatch/combine
+        // round trip won the overlap it is the charged critical path and
+        // splits into its two directions; when the shared expert won,
+        // the wire time is hidden and charges nothing.
+        let comm_won = t_comm >= t_shared;
         DisaggLatency {
             attn: t_attn * self.layers as f64,
             moe: t_moe * self.moe_layers as f64,
             comm: comm_or_shared * self.moe_layers as f64,
             overlapped_shared: t_shared,
+            dispatch: if comm_won {
+                bd.dispatch * self.moe_layers as f64
+            } else {
+                0.0
+            },
+            combine: if comm_won {
+                bd.combine * self.moe_layers as f64
+            } else {
+                0.0
+            },
             tpot,
         }
     }
@@ -220,6 +242,23 @@ mod tests {
         let compact = m.tpg(64.0, 1, 6, 512.0, 18);
         let padded = m.tpg(64.0, 4, 12, 512.0, 12);
         assert!(compact > padded, "compact {compact} vs padded {padded}");
+    }
+
+    #[test]
+    fn dispatch_combine_lanes_split_comm_when_on_critical_path() {
+        let m = model();
+        let lat = m.tpot(256.0, 2, 6, 512.0, 20);
+        if lat.dispatch > 0.0 || lat.combine > 0.0 {
+            // Comm won the overlap: the two directions sum to the comm
+            // lane (up to rounding) and neither is negative.
+            assert!(lat.dispatch >= 0.0 && lat.combine >= 0.0);
+            let sum = lat.dispatch + lat.combine;
+            assert!((sum - lat.comm).abs() / lat.comm < 1e-9, "split {sum} vs comm {}", lat.comm);
+        } else {
+            // Shared expert won: the wire time is hidden, comm lane
+            // charges the shared-expert time instead.
+            assert_eq!(lat.comm, lat.overlapped_shared * m.moe_layers as f64);
+        }
     }
 
     #[test]

@@ -83,6 +83,40 @@ impl ReplicationMode {
     }
 }
 
+/// Cumulative placement-dynamics action counts, reported by
+/// [`crate::baselines::ServingSystem::placement_activity`] so the
+/// observability plane can attach per-interval deltas (prefetch
+/// staging, rebalance moves, post-crash re-replication) to scaling and
+/// fault trace events. Plain counters — incrementing them is alloc-free
+/// and never feeds back into placement decisions.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlacementActivity {
+    /// Predictive-prefetch stagings (replicas staged ahead of a
+    /// forecast demand crossover).
+    pub prefetch_staged: u64,
+    /// Bounded load-rebalance replica moves planned.
+    pub rebalance_moves: u64,
+    /// Replicas re-created after a crash narrowed the placement.
+    pub re_replicated: u64,
+}
+
+impl PlacementActivity {
+    /// Component-wise difference vs an earlier snapshot (saturating, so
+    /// a stale snapshot can never underflow).
+    pub fn delta_since(&self, earlier: &PlacementActivity) -> PlacementActivity {
+        PlacementActivity {
+            prefetch_staged: self.prefetch_staged.saturating_sub(earlier.prefetch_staged),
+            rebalance_moves: self.rebalance_moves.saturating_sub(earlier.rebalance_moves),
+            re_replicated: self.re_replicated.saturating_sub(earlier.re_replicated),
+        }
+    }
+
+    /// True when any counter moved.
+    pub fn any(&self) -> bool {
+        self.prefetch_staged != 0 || self.rebalance_moves != 0 || self.re_replicated != 0
+    }
+}
+
 /// Tunables for the availability-aware pipeline.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DynamicsConfig {

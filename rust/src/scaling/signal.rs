@@ -172,6 +172,22 @@ impl ScalingSignal {
         h
     }
 
+    /// The signal's scalar fields as named trace args for the
+    /// observability plane's per-decision "signal" instant (counts cast
+    /// to f64 — they are interval deltas, far below 2^53).
+    pub fn obs_args(&self) -> [(&'static str, f64); 8] {
+        [
+            ("envelope_demand", self.envelope_demand),
+            ("measured_demand", self.measured_demand),
+            ("backlog_tokens", self.backlog_tokens),
+            ("window", self.window),
+            ("kv_utilization", self.kv_utilization),
+            ("queue_occupancy", self.queue_occupancy),
+            ("preemptions", self.preemptions as f64),
+            ("rejections", self.rejections as f64),
+        ]
+    }
+
     /// An idle signal (everything zero, targets inherited): the state
     /// before any traffic has been observed.
     pub fn idle(window: f64) -> Self {

@@ -66,12 +66,18 @@ pub struct EngineCaps {
     pub prefill_chunk: u32,
 }
 
-/// One fresh admission, for the engine's delay bookkeeping.
+/// One fresh admission, for the engine's delay bookkeeping (and the
+/// observability plane's queue-wait spans, which carry the request
+/// size).
 #[derive(Clone, Copy, Debug)]
 pub struct JoinInfo {
     /// Queue wait (join time − arrival time).
     pub delay: f64,
     pub class: Priority,
+    /// Prompt length of the admitted request.
+    pub input_tokens: u32,
+    /// Output tokens it still has to emit.
+    pub output_tokens: u32,
 }
 
 /// What one [`AdmissionPolicy::admit`] call did (buffers reused).
@@ -187,6 +193,8 @@ impl AdmissionPolicy for Fifo {
                         out.joined.push(JoinInfo {
                             delay: now - req.arrived,
                             class: req.class,
+                            input_tokens: req.input_tokens,
+                            output_tokens: req.remaining_output,
                         });
                     } else {
                         out.rejoined += 1;
@@ -337,6 +345,8 @@ impl AdmissionPolicy for SloClass {
                         out.joined.push(JoinInfo {
                             delay: now - req.arrived,
                             class: req.class,
+                            input_tokens: req.input_tokens,
+                            output_tokens: req.remaining_output,
                         });
                     } else {
                         out.rejoined += 1;
@@ -440,6 +450,8 @@ impl AdmissionPolicy for KvAware {
                 out.joined.push(JoinInfo {
                     delay: now - req.arrived,
                     class: req.class,
+                    input_tokens: req.input_tokens,
+                    output_tokens: req.remaining_output,
                 });
             } else {
                 out.rejoined += 1;

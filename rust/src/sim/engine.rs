@@ -55,6 +55,11 @@ use std::fmt;
 use crate::baselines::system::ServingSystem;
 use crate::config::serving::Slo;
 use crate::metrics::{ClassStats, GpuHours, TpotStats, WeightedLatency};
+use crate::obs::{
+    ArgVal, Counter, Recorder, TraceEvent, TRACK_FAULTS, TRACK_PLACEMENT, TRACK_REQUESTS,
+    TRACK_SCALING,
+};
+use crate::placement::dynamics::PlacementActivity;
 use crate::scaling::{ScalingMode, ScalingSignal};
 use crate::sim::admission::{
     AdmissionConfig, AdmissionPolicy, AdmitOutcome, EngineCaps, InFlightBatch, Queued, StepBook,
@@ -945,16 +950,37 @@ pub enum ScenarioOutcome {
 
 /// Run any scenario for any system from one entry point. Degenerate
 /// scenario configurations come back as [`ScenarioError`]s.
+///
+/// Telemetry-free: internally threads a disabled [`Recorder`], whose
+/// every hot-path method is a no-op behind one branch, so results are
+/// bit-identical to the pre-observability engine regardless of
+/// `JANUS_OBS` (the env is never consulted here).
 pub fn run<S: ServingSystem + ?Sized>(
     system: &mut S,
     scenario: &Scenario,
     seed: u64,
 ) -> Result<ScenarioOutcome, ScenarioError> {
+    run_with_recorder(system, scenario, seed, &mut Recorder::disabled())
+}
+
+/// [`run`] with a live telemetry [`Recorder`]: counters, the per-phase
+/// latency ledger, and (in full mode) the sim-time event trace are
+/// collected into `rec` alongside the scenario result. The recorder
+/// never feeds back into the simulation — scenario results are
+/// bit-identical across `off`/`counters`/`full`.
+pub fn run_with_recorder<S: ServingSystem + ?Sized>(
+    system: &mut S,
+    scenario: &Scenario,
+    seed: u64,
+    rec: &mut Recorder,
+) -> Result<ScenarioOutcome, ScenarioError> {
     Ok(match scenario {
-        Scenario::FixedBatch(sc) => ScenarioOutcome::FixedBatch(fixed_batch(system, sc, seed)),
-        Scenario::Autoscale(sc) => ScenarioOutcome::Autoscale(autoscale(system, sc, seed)?),
+        Scenario::FixedBatch(sc) => {
+            ScenarioOutcome::FixedBatch(fixed_batch_rec(system, sc, seed, rec))
+        }
+        Scenario::Autoscale(sc) => ScenarioOutcome::Autoscale(autoscale_rec(system, sc, seed, rec)?),
         Scenario::FailureInjection(sc) => {
-            ScenarioOutcome::FailureInjection(failure_injection(system, sc, seed)?)
+            ScenarioOutcome::FailureInjection(failure_injection_rec(system, sc, seed, rec)?)
         }
     })
 }
@@ -965,6 +991,15 @@ pub fn fixed_batch<S: ServingSystem + ?Sized>(
     system: &mut S,
     sc: &FixedBatchScenario,
     seed: u64,
+) -> FixedBatchResult {
+    fixed_batch_rec(system, sc, seed, &mut Recorder::disabled())
+}
+
+fn fixed_batch_rec<S: ServingSystem + ?Sized>(
+    system: &mut S,
+    sc: &FixedBatchScenario,
+    seed: u64,
+    rec: &mut Recorder,
 ) -> FixedBatchResult {
     let cfg = system.configure(sc.batch, sc.slo);
     let feasible = cfg.is_some();
@@ -982,6 +1017,10 @@ pub fn fixed_batch<S: ServingSystem + ?Sized>(
         stats.push(out.tpot);
         a_sum += out.a_max as f64;
         done += 1;
+        if rec.enabled() {
+            let phases = system.step_phases().reconciled(out.tpot);
+            rec.decode_step(ev.time, out.tpot, sc.batch, out.a_max, &phases, 0.0, 0.0, 0.0);
+        }
         if done < sc.steps {
             queue.push(ev.time + out.tpot, EventKind::DecodeStep);
         }
@@ -1017,6 +1056,63 @@ fn track(gpus: usize, min_g: &mut usize, max_g: &mut usize) {
         *min_g = (*min_g).min(gpus);
         *max_g = (*max_g).max(gpus);
     }
+}
+
+/// Record one scaling/re-placement decision into the telemetry plane:
+/// decision counters, the decision-cache delta since the previous
+/// decision, a full-mode span covering the elapsed interval (tagged
+/// with the new decision's outcome), and any placement activity the
+/// system performed since last time. Telemetry only — the system reads
+/// (`decision_cache_stats`, `placement_activity`) are pure accessors,
+/// so skipping this call entirely (off mode) changes nothing.
+#[allow(clippy::too_many_arguments)]
+fn record_decision<S: ServingSystem + ?Sized>(
+    rec: &mut Recorder,
+    system: &S,
+    now: f64,
+    gpus: usize,
+    feasible: bool,
+    last_decision: &mut f64,
+    last_cache: &mut (u64, u64),
+    last_activity: &mut PlacementActivity,
+) {
+    rec.bump(Counter::ScalingDecisions);
+    if !feasible {
+        rec.bump(Counter::InfeasibleDecisions);
+    }
+    let cache = system.decision_cache_stats();
+    let hits = cache.0.saturating_sub(last_cache.0);
+    let misses = cache.1.saturating_sub(last_cache.1);
+    rec.add(Counter::CacheHits, hits);
+    rec.add(Counter::CacheMisses, misses);
+    let activity = system.placement_activity();
+    let delta = activity.delta_since(last_activity);
+    if rec.full() {
+        rec.event(
+            TraceEvent::span(
+                "decision",
+                "scaling",
+                *last_decision,
+                now - *last_decision,
+                TRACK_SCALING,
+            )
+            .arg("gpus", ArgVal::U64(gpus as u64))
+            .arg("feasible", ArgVal::U64(feasible as u64))
+            .arg("cache_hits", ArgVal::U64(hits))
+            .arg("cache_misses", ArgVal::U64(misses)),
+        );
+        if delta.any() {
+            rec.event(
+                TraceEvent::instant("placement", "placement", now, TRACK_PLACEMENT)
+                    .arg("prefetch_staged", ArgVal::U64(delta.prefetch_staged))
+                    .arg("rebalance_moves", ArgVal::U64(delta.rebalance_moves))
+                    .arg("re_replicated", ArgVal::U64(delta.re_replicated)),
+            );
+        }
+    }
+    *last_cache = cache;
+    *last_activity = activity;
+    *last_decision = now;
 }
 
 /// Track the union of degraded conditions (whole-pool outage open or
@@ -1142,6 +1238,15 @@ pub fn autoscale<S: ServingSystem + ?Sized>(
     sc: &AutoscaleScenario,
     seed: u64,
 ) -> Result<AutoscaleResult, ScenarioError> {
+    autoscale_rec(system, sc, seed, &mut Recorder::disabled())
+}
+
+fn autoscale_rec<S: ServingSystem + ?Sized>(
+    system: &mut S,
+    sc: &AutoscaleScenario,
+    seed: u64,
+    rec: &mut Recorder,
+) -> Result<AutoscaleResult, ScenarioError> {
     sc.validate()?;
     let horizon = sc.trace.config.hours * 3600.0;
     let mut queue = EventQueue::new();
@@ -1190,6 +1295,12 @@ pub fn autoscale<S: ServingSystem + ?Sized>(
     let mut depth_acc = WeightedAccumulator::new();
     let mut queue_depth_max = 0usize;
     let mut signal_tracker = SignalTracker::new();
+    // Telemetry-only interval anchors (previous decision time, lifetime
+    // decision-cache and placement-activity readings); never read by
+    // the simulation itself.
+    let mut obs_last_decision = 0.0f64;
+    let mut obs_last_cache = (0u64, 0u64);
+    let mut obs_last_activity = PlacementActivity::default();
 
     // Per-interval accumulator, flushed into an IntervalRecord at the
     // next scaling decision (or at the horizon).
@@ -1272,6 +1383,7 @@ pub fn autoscale<S: ServingSystem + ?Sized>(
                 output_tokens,
                 class,
             } => {
+                rec.bump(Counter::Arrivals);
                 if policy.offer(Queued::fresh(ev.time, class, input_tokens, output_tokens)) {
                     queue_depth_max = queue_depth_max.max(policy.queue_len());
                     if let Some(iv) = open.as_mut() {
@@ -1284,6 +1396,7 @@ pub fn autoscale<S: ServingSystem + ?Sized>(
                 } else {
                     rejected += 1;
                     class_stats[class.rank()].rejected += 1;
+                    rec.bump(Counter::Rejected);
                 }
             }
             EventKind::DecodeStep => {
@@ -1304,10 +1417,29 @@ pub fn autoscale<S: ServingSystem + ?Sized>(
                     }
                     admitted += 1;
                     class_stats[j.class.rank()].admitted += 1;
+                    if rec.enabled() {
+                        rec.bump(Counter::Admitted);
+                        if rec.full() {
+                            rec.event(
+                                TraceEvent::span(
+                                    "queue_wait",
+                                    "request",
+                                    ev.time - j.delay,
+                                    j.delay,
+                                    TRACK_REQUESTS,
+                                )
+                                .arg("class", ArgVal::U64(j.class.rank() as u64))
+                                .arg("input_tokens", ArgVal::U64(j.input_tokens as u64))
+                                .arg("output_tokens", ArgVal::U64(j.output_tokens as u64)),
+                            );
+                        }
+                    }
                 }
+                rec.add(Counter::Rejoined, admit_out.rejoined as u64);
                 for &c in &admit_out.preempted {
                     preemptions += 1;
                     class_stats[c.rank()].preempted += 1;
+                    rec.bump(Counter::Preempted);
                 }
                 // Preemption requeues can grow the queue between
                 // arrivals; fold the post-admit depth into the max (for
@@ -1329,13 +1461,27 @@ pub fn autoscale<S: ServingSystem + ?Sized>(
                 let step_time = if decoding > 0 {
                     let out = system.step(decoding, &mut decode_rng);
                     steps += 1;
+                    // The prefill charge is bound separately only so the
+                    // recorder can attribute it; `tpot + p` is the exact
+                    // float expression the pre-observability engine used.
                     if chunk_tokens > 0 {
-                        out.tpot + system.prefill_cost(chunk_tokens).max(MIN_PREFILL_STEP)
+                        let p = system.prefill_cost(chunk_tokens).max(MIN_PREFILL_STEP);
+                        if rec.enabled() {
+                            let phases = system.step_phases().reconciled(out.tpot);
+                            rec.decode_step(ev.time, out.tpot + p, decoding, out.a_max, &phases, p, 0.0, 0.0);
+                        }
+                        out.tpot + p
                     } else {
+                        if rec.enabled() {
+                            let phases = system.step_phases().reconciled(out.tpot);
+                            rec.decode_step(ev.time, out.tpot, decoding, out.a_max, &phases, 0.0, 0.0, 0.0);
+                        }
                         out.tpot
                     }
                 } else {
-                    system.prefill_cost(chunk_tokens).max(MIN_PREFILL_STEP)
+                    let dur = system.prefill_cost(chunk_tokens).max(MIN_PREFILL_STEP);
+                    rec.prefill_step(ev.time, dur, chunk_tokens);
+                    dur
                 };
                 if decoding > 0 {
                     generated += decoding;
@@ -1350,6 +1496,34 @@ pub fn autoscale<S: ServingSystem + ?Sized>(
                 }
                 step_book.clear();
                 completed += batch.advance(caps.prefill_chunk, step_time, &mut step_book);
+                if rec.enabled() {
+                    rec.add(Counter::FirstTokens, step_book.first_tokens.len() as u64);
+                    rec.add(Counter::Completed, step_book.completed.len() as u64);
+                    if rec.full() {
+                        if !step_book.first_tokens.is_empty() {
+                            rec.event(
+                                TraceEvent::instant(
+                                    "first_tokens",
+                                    "request",
+                                    ev.time + step_time,
+                                    TRACK_REQUESTS,
+                                )
+                                .arg("count", ArgVal::U64(step_book.first_tokens.len() as u64)),
+                            );
+                        }
+                        if !step_book.completed.is_empty() {
+                            rec.event(
+                                TraceEvent::instant(
+                                    "completed",
+                                    "request",
+                                    ev.time + step_time,
+                                    TRACK_REQUESTS,
+                                )
+                                .arg("count", ArgVal::U64(step_book.completed.len() as u64)),
+                            );
+                        }
+                    }
+                }
                 // TTFT = queue wait + chunked-prefill residency + the
                 // first decode step (the middle term is zero for the
                 // instant-prefill policies).
@@ -1413,6 +1587,14 @@ pub fn autoscale<S: ServingSystem + ?Sized>(
                                 tpot_targets: sc.admission.tpot_slo_class,
                             },
                         );
+                        if rec.full() {
+                            let mut sig_ev =
+                                TraceEvent::instant("signal", "scaling", ev.time, TRACK_SCALING);
+                            for (k, v) in sig.obs_args() {
+                                sig_ev = sig_ev.arg(k, ArgVal::F64(v));
+                            }
+                            rec.event(sig_ev);
+                        }
                         (
                             sig.planned_demand(),
                             system.configure_with_signal(&sig, sc.slo),
@@ -1422,6 +1604,18 @@ pub fn autoscale<S: ServingSystem + ?Sized>(
                 let feasible = cfg.is_some();
                 let gpus = system.gpus();
                 track(gpus, &mut min_gpus, &mut max_gpus);
+                if rec.enabled() {
+                    record_decision(
+                        rec,
+                        system,
+                        ev.time,
+                        gpus,
+                        feasible,
+                        &mut obs_last_decision,
+                        &mut obs_last_cache,
+                        &mut obs_last_activity,
+                    );
+                }
                 open = Some(OpenInterval {
                     t_start: ev.time,
                     t_end,
@@ -1507,6 +1701,15 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
     system: &mut S,
     sc: &FailureScenario,
     seed: u64,
+) -> Result<FailureResult, ScenarioError> {
+    failure_injection_rec(system, sc, seed, &mut Recorder::disabled())
+}
+
+fn failure_injection_rec<S: ServingSystem + ?Sized>(
+    system: &mut S,
+    sc: &FailureScenario,
+    seed: u64,
+    rec: &mut Recorder,
 ) -> Result<FailureResult, ScenarioError> {
     sc.validate()?;
     let mut rng = Rng::seed_from_u64(seed);
@@ -1602,6 +1805,10 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
     let mut adm_delay = Accumulator::new();
     let mut queue_depth_max = 0usize;
     let mut signal_tracker = SignalTracker::new();
+    // Telemetry-only anchors (see `autoscale_rec`).
+    let mut obs_last_decision = 0.0f64;
+    let mut obs_last_cache = (0u64, 0u64);
+    let mut obs_last_activity = PlacementActivity::default();
     let mut decisions = 0usize;
     let mut feasible_decisions = 0usize;
     let mut reconfigurations = 0usize;
@@ -1652,6 +1859,7 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                 // would-be output tokens are charged to the degraded
                 // attainment denominator, so shedding cannot buy SLO
                 // attainment for free.
+                rec.bump(Counter::Arrivals);
                 if faultctl.as_ref().is_some_and(|c| c.shedding()) {
                     let cs = &mut class_stats[class.rank()];
                     cs.shed += 1;
@@ -1660,6 +1868,7 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                         ctl.stats.shed_requests += 1;
                         ctl.stats.lost_tokens += output_tokens as u64;
                     }
+                    rec.bump(Counter::Shed);
                 } else if policy.offer(Queued::fresh(ev.time, class, input_tokens, output_tokens))
                 {
                     queue_depth_max = queue_depth_max.max(policy.queue_len());
@@ -1670,6 +1879,7 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                 } else {
                     rejected += 1;
                     class_stats[class.rank()].rejected += 1;
+                    rec.bump(Counter::Rejected);
                 }
             }
             EventKind::DecodeStep => {
@@ -1686,10 +1896,29 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                     adm_delay.push(j.delay);
                     admitted += 1;
                     class_stats[j.class.rank()].admitted += 1;
+                    if rec.enabled() {
+                        rec.bump(Counter::Admitted);
+                        if rec.full() {
+                            rec.event(
+                                TraceEvent::span(
+                                    "queue_wait",
+                                    "request",
+                                    ev.time - j.delay,
+                                    j.delay,
+                                    TRACK_REQUESTS,
+                                )
+                                .arg("class", ArgVal::U64(j.class.rank() as u64))
+                                .arg("input_tokens", ArgVal::U64(j.input_tokens as u64))
+                                .arg("output_tokens", ArgVal::U64(j.output_tokens as u64)),
+                            );
+                        }
+                    }
                 }
+                rec.add(Counter::Rejoined, admit_out.rejoined as u64);
                 for &c in &admit_out.preempted {
                     preemptions += 1;
                     class_stats[c.rank()].preempted += 1;
+                    rec.bump(Counter::Preempted);
                 }
                 // Preemption requeues can grow the queue between
                 // arrivals (no-op for FIFO, which only shrinks here).
@@ -1700,11 +1929,23 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                 }
                 let decoding = batch.decoding_count();
                 let chunk_tokens = batch.pending_prefill_tokens(caps.prefill_chunk);
+                // Telemetry scratch: the system's tpot/a_max and the
+                // engine's prefill charge, held so the recorder can
+                // attribute them after the fault plane's extra lands.
+                // Plain scalar copies — nothing here feeds back into
+                // the charged arithmetic.
+                let mut rec_tpot = 0.0f64;
+                let mut rec_a_max = 0u32;
+                let mut rec_prefill = 0.0f64;
                 let mut step_time = if decoding > 0 {
                     let out = system.step(decoding, &mut rng);
                     steps += 1;
+                    rec_tpot = out.tpot;
+                    rec_a_max = out.a_max;
                     if chunk_tokens > 0 {
-                        out.tpot + system.prefill_cost(chunk_tokens).max(MIN_PREFILL_STEP)
+                        let p = system.prefill_cost(chunk_tokens).max(MIN_PREFILL_STEP);
+                        rec_prefill = p;
+                        out.tpot + p
                     } else {
                         out.tpot
                     }
@@ -1715,18 +1956,49 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                 // (weight transfer, KV migration) plus transient
                 // dispatch/combine retries (bounded, deterministic,
                 // fault-RNG only). Zero — and skipped entirely — with
-                // no plan installed.
+                // no plan installed. The retry/round deltas are read
+                // off the controller's lifetime accumulators so the
+                // charge itself stays one un-split `step_extra` call.
                 // tidy:hot-path:begin faults-step-charge
+                let mut fault_extra = 0.0f64;
+                let mut fault_retry = 0.0f64;
+                let mut fault_rounds = 0u64;
                 let degraded = if let Some(ctl) = faultctl.as_mut() {
+                    let retry0 = ctl.stats.retry_latency;
+                    let rounds0 = ctl.stats.retry_rounds;
                     let extra = ctl.step_extra();
                     if extra > 0.0 {
                         step_time += extra;
                     }
+                    fault_extra = extra;
+                    fault_retry = ctl.stats.retry_latency - retry0;
+                    fault_rounds = ctl.stats.retry_rounds - rounds0;
                     failed_gpus > 0 || ctl.fault_active()
                 } else {
                     failed_gpus > 0
                 };
                 // tidy:hot-path:end
+                if rec.enabled() {
+                    if decoding > 0 {
+                        // Split the fault extra into retry vs. stall
+                        // lanes; if the split does not reproduce the
+                        // extra bit-for-bit, charge it all as stall.
+                        let mut retry = fault_retry;
+                        let mut stall = fault_extra - retry;
+                        if stall < 0.0 || (stall + retry).to_bits() != fault_extra.to_bits() {
+                            stall = fault_extra;
+                            retry = 0.0;
+                        }
+                        let phases = system.step_phases().reconciled(rec_tpot);
+                        rec.add(Counter::RetryRounds, fault_rounds);
+                        rec.decode_step(
+                            ev.time, step_time, decoding, rec_a_max, &phases, rec_prefill, stall,
+                            retry,
+                        );
+                    } else {
+                        rec.prefill_step(ev.time, step_time, chunk_tokens);
+                    }
+                }
                 if decoding > 0 {
                     stats.push(step_time);
                     generated += decoding;
@@ -1743,6 +2015,34 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                 }
                 step_book.clear();
                 completed += batch.advance(caps.prefill_chunk, step_time, &mut step_book);
+                if rec.enabled() {
+                    rec.add(Counter::FirstTokens, step_book.first_tokens.len() as u64);
+                    rec.add(Counter::Completed, step_book.completed.len() as u64);
+                    if rec.full() {
+                        if !step_book.first_tokens.is_empty() {
+                            rec.event(
+                                TraceEvent::instant(
+                                    "first_tokens",
+                                    "request",
+                                    ev.time + step_time,
+                                    TRACK_REQUESTS,
+                                )
+                                .arg("count", ArgVal::U64(step_book.first_tokens.len() as u64)),
+                            );
+                        }
+                        if !step_book.completed.is_empty() {
+                            rec.event(
+                                TraceEvent::instant(
+                                    "completed",
+                                    "request",
+                                    ev.time + step_time,
+                                    TRACK_REQUESTS,
+                                )
+                                .arg("count", ArgVal::U64(step_book.completed.len() as u64)),
+                            );
+                        }
+                    }
+                }
                 for &(ttft_v, class) in &step_book.first_tokens {
                     let cs = &mut class_stats[class.rank()];
                     cs.first_tokens += 1;
@@ -1800,6 +2100,14 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                                 tpot_targets: sc.admission.tpot_slo_class,
                             },
                         );
+                        if rec.full() {
+                            let mut sig_ev =
+                                TraceEvent::instant("signal", "scaling", ev.time, TRACK_SCALING);
+                            for (k, v) in sig.obs_args() {
+                                sig_ev = sig_ev.arg(k, ArgVal::F64(v));
+                            }
+                            rec.event(sig_ev);
+                        }
                         system.configure_with_signal(&sig, sc.slo)
                     }
                 };
@@ -1808,13 +2116,41 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                     feasible_decisions += 1;
                 }
                 track(system.gpus(), &mut min_gpus, &mut max_gpus);
+                if rec.enabled() {
+                    let gpus_now = system.gpus();
+                    record_decision(
+                        rec,
+                        system,
+                        ev.time,
+                        gpus_now,
+                        cfg.is_some(),
+                        &mut obs_last_decision,
+                        &mut obs_last_cache,
+                        &mut obs_last_activity,
+                    );
+                }
                 // Background placement maintenance (predictive prefetch
                 // staging of about-to-be-hot expert weights) surfaces as
                 // an explicit transfer stall on the next decode step.
                 // Systems with nothing pending return 0.0 and `add_stall`
                 // charges nothing, so legacy paths stay bit-identical.
                 if let Some(ctl) = faultctl.as_mut() {
-                    ctl.add_stall(system.placement_maintenance());
+                    let maintenance = system.placement_maintenance();
+                    if rec.enabled() && maintenance > 0.0 {
+                        rec.bump(Counter::PlacementStalls);
+                        if rec.full() {
+                            rec.event(
+                                TraceEvent::instant(
+                                    "maintenance",
+                                    "placement",
+                                    ev.time,
+                                    TRACK_PLACEMENT,
+                                )
+                                .arg("transfer_secs", ArgVal::F64(maintenance)),
+                            );
+                        }
+                    }
+                    ctl.add_stall(maintenance);
                 }
                 if t_end < sc.horizon {
                     queue.push(t_end, EventKind::ScalingDecision);
@@ -1833,6 +2169,20 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                     feasible_decisions += 1;
                 }
                 track(system.gpus(), &mut min_gpus, &mut max_gpus);
+                if rec.enabled() {
+                    rec.bump(Counter::FaultsOpened);
+                    rec.bump(Counter::ScalingDecisions);
+                    if cfg.is_none() {
+                        rec.bump(Counter::InfeasibleDecisions);
+                    }
+                    if rec.full() {
+                        rec.event(
+                            TraceEvent::span("outage", "fault", ev.time, downtime, TRACK_FAULTS)
+                                .arg("gpus", ArgVal::U64(gpus as u64))
+                                .arg("feasible", ArgVal::U64(cfg.is_some() as u64)),
+                        );
+                    }
+                }
                 queue.push(ev.time + downtime, EventKind::Recovery { gpus });
                 sample_degraded(&mut degraded_since, &mut degraded_time, ev.time, true);
             }
@@ -1848,6 +2198,20 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                     feasible_decisions += 1;
                 }
                 track(system.gpus(), &mut min_gpus, &mut max_gpus);
+                if rec.enabled() {
+                    rec.bump(Counter::Recoveries);
+                    rec.bump(Counter::ScalingDecisions);
+                    if cfg.is_none() {
+                        rec.bump(Counter::InfeasibleDecisions);
+                    }
+                    if rec.full() {
+                        rec.event(
+                            TraceEvent::instant("pool_restored", "fault", ev.time, TRACK_FAULTS)
+                                .arg("gpus", ArgVal::U64(gpus as u64))
+                                .arg("feasible", ArgVal::U64(cfg.is_some() as u64)),
+                        );
+                    }
+                }
                 let still = failed_gpus > 0
                     || faultctl.as_ref().is_some_and(|c| c.fault_active());
                 sample_degraded(&mut degraded_since, &mut degraded_time, ev.time, still);
@@ -1857,6 +2221,15 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                 let ctl = faultctl.as_mut().expect("Fault event without a FaultPlan");
                 let f = ctl.fault_at(idx);
                 ctl.on_fault(idx, ev.time);
+                if rec.enabled() {
+                    rec.bump(Counter::FaultsOpened);
+                    if rec.full() {
+                        rec.event(
+                            TraceEvent::span(f.kind.label(), "fault", ev.time, f.duration, TRACK_FAULTS)
+                                .arg("idx", ArgVal::U64(idx as u64)),
+                        );
+                    }
+                }
                 let t_end = (ev.time + sc.decision_interval).min(sc.horizon);
                 match f.kind {
                     FaultKind::InstanceCrash { instance } => {
@@ -1883,6 +2256,29 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                         // replication invariant on the survivors) are
                         // charged as transfer stalls off the critical path.
                         ctl.add_stall(action.background_secs);
+                        if rec.enabled() {
+                            rec.bump(Counter::Recoveries);
+                            rec.bump(Counter::ScalingDecisions);
+                            if !action.feasible {
+                                rec.bump(Counter::InfeasibleDecisions);
+                            }
+                            if rec.full() {
+                                rec.event(
+                                    TraceEvent::instant("recovery", "fault", ev.time, TRACK_FAULTS)
+                                        .arg("kind", ArgVal::Str(f.kind.label()))
+                                        .arg("narrowed", ArgVal::U64(action.narrowed as u64))
+                                        .arg("feasible", ArgVal::U64(action.feasible as u64))
+                                        .arg("moved_experts", ArgVal::U64(action.moved_experts as u64))
+                                        .arg("dropped_experts", ArgVal::U64(action.dropped_experts as u64))
+                                        .arg("transfer_secs", ArgVal::F64(action.transfer_secs))
+                                        .arg(
+                                            "re_replicated",
+                                            ArgVal::U64(action.re_replicated_experts as u64),
+                                        )
+                                        .arg("background_secs", ArgVal::F64(action.background_secs)),
+                                );
+                            }
+                        }
                         // An availability-aware recovery that restored
                         // full service ends the degradation window early;
                         // the instance itself still returns at FaultClear.
@@ -1945,6 +2341,26 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                             recompute,
                         );
                         ctl.add_stall(stall);
+                        if rec.enabled() {
+                            rec.bump(Counter::Recoveries);
+                            rec.bump(Counter::ScalingDecisions);
+                            if !action.feasible {
+                                rec.bump(Counter::InfeasibleDecisions);
+                            }
+                            rec.add(Counter::Evicted, evicted as u64);
+                            if rec.full() {
+                                rec.event(
+                                    TraceEvent::instant("recovery", "fault", ev.time, TRACK_FAULTS)
+                                        .arg("kind", ArgVal::Str(f.kind.label()))
+                                        .arg("narrowed", ArgVal::U64(action.narrowed as u64))
+                                        .arg("feasible", ArgVal::U64(action.feasible as u64))
+                                        .arg("evicted", ArgVal::U64(evicted as u64))
+                                        .arg("migrated_kv_tokens", ArgVal::U64(migrated))
+                                        .arg("recompute_tokens", ArgVal::U64(recompute))
+                                        .arg("transfer_secs", ArgVal::F64(action.transfer_secs)),
+                                );
+                            }
+                        }
                     }
                     FaultKind::Straggler { .. } => {
                         // Aggregate (max over open windows) flows into
@@ -1983,6 +2399,16 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                 let ctl = faultctl.as_mut().expect("FaultClear event without a FaultPlan");
                 let f = ctl.fault_at(idx);
                 ctl.on_clear(idx, ev.time);
+                if rec.enabled() {
+                    rec.bump(Counter::FaultsCleared);
+                    if rec.full() {
+                        rec.event(
+                            TraceEvent::instant("fault_clear", "fault", ev.time, TRACK_FAULTS)
+                                .arg("idx", ArgVal::U64(idx as u64))
+                                .arg("kind", ArgVal::Str(f.kind.label())),
+                        );
+                    }
+                }
                 let t_end = (ev.time + sc.decision_interval).min(sc.horizon);
                 match f.kind {
                     FaultKind::InstanceCrash { instance } => {
@@ -1996,6 +2422,12 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                         }
                         track(system.gpus(), &mut min_gpus, &mut max_gpus);
                         ctl.add_stall(action.transfer_secs);
+                        if rec.enabled() {
+                            rec.bump(Counter::ScalingDecisions);
+                            if !action.feasible {
+                                rec.bump(Counter::InfeasibleDecisions);
+                            }
+                        }
                     }
                     FaultKind::AttentionHostLoss { host, .. } => {
                         account(&mut hours, &mut last_account, ev.time, system.gpus());
@@ -2011,6 +2443,12 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                             feasible_decisions += 1;
                         }
                         track(system.gpus(), &mut min_gpus, &mut max_gpus);
+                        if rec.enabled() {
+                            rec.bump(Counter::ScalingDecisions);
+                            if !action.feasible {
+                                rec.bump(Counter::InfeasibleDecisions);
+                            }
+                        }
                     }
                     FaultKind::Straggler { .. } => {
                         // Back to the max over the remaining open
@@ -2027,7 +2465,20 @@ pub fn failure_injection<S: ServingSystem + ?Sized>(
                 let ctl = faultctl
                     .as_mut()
                     .expect("FaultRepaired event without a FaultPlan");
+                // `on_early_repair` is a no-op when the window already
+                // cleared; diff the controller's counter so telemetry
+                // only records repairs that actually landed.
+                let repairs0 = ctl.stats.early_repairs;
                 ctl.on_early_repair(idx, ev.time);
+                if rec.enabled() && ctl.stats.early_repairs > repairs0 {
+                    rec.bump(Counter::EarlyRepairs);
+                    if rec.full() {
+                        rec.event(
+                            TraceEvent::instant("early_repair", "fault", ev.time, TRACK_FAULTS)
+                                .arg("idx", ArgVal::U64(idx as u64)),
+                        );
+                    }
+                }
                 let now_degraded = failed_gpus > 0 || ctl.fault_active();
                 sample_degraded(&mut degraded_since, &mut degraded_time, ev.time, now_degraded);
             }

@@ -29,6 +29,13 @@
 //!   per-fault-event MTTR/availability accounting in
 //!   [`engine::FailureResult`].
 //!
+//! - [`tracegen`] — the canonical pinned trace bundle for the
+//!   observability plane: a fixed cell grid (fixed-batch lineup,
+//!   autoscale ramp under both scaling modes, golden fault plan) run
+//!   through [`sweep::run_cells_traced`] and serialized to
+//!   Chrome-trace JSON + metrics TSV. Byte-identical across reruns,
+//!   thread counts, and env matrix legs; `bin/trace` writes it to disk.
+//!
 //! - [`sweep`] — the deterministic parallel sweep engine: independent
 //!   (system ctor × scenario × seed) cells drained by scoped workers
 //!   over one atomic claim index (claims are chunked — K cells per
@@ -52,6 +59,7 @@ pub mod decode_sim;
 pub mod engine;
 pub mod faults;
 pub mod sweep;
+pub mod tracegen;
 
 pub use admission::{AdmissionConfig, AdmissionPolicy, PolicyKind};
 pub use faults::{
@@ -66,6 +74,7 @@ pub use engine::{
     DEFAULT_QUEUE_CAPACITY,
 };
 pub use sweep::{
-    hardware_threads, resolve_chunk, resolve_threads, run_cells, run_cells_filtered, CellResult,
-    SweepCell,
+    hardware_threads, resolve_chunk, resolve_threads, run_cells, run_cells_filtered,
+    run_cells_traced, CellResult, SweepCell,
 };
+pub use tracegen::{sample_bundle, sample_cells, TraceBundle};

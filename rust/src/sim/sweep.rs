@@ -32,6 +32,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::baselines::system::ServingSystem;
+use crate::obs::{ObsMode, Recorder};
 use crate::sim::engine::{self, Scenario, ScenarioError, ScenarioOutcome};
 
 /// Environment variable consulted when no explicit `--threads` is given.
@@ -214,6 +215,41 @@ pub fn run_cells_filtered(
             outcome: engine::run(sys.as_mut(), &cell.scenario, cell.seed),
         }
     })
+}
+
+/// [`run_cells`] with the telemetry plane live: every cell records into
+/// its own [`Recorder`] at `mode` (tagged with the cell's submission
+/// index as the trace `pid`), and the per-cell recorders are merged in
+/// submission order after the sweep joins. Both the result rows and the
+/// merged recorder — counters, phase ledger, and full-mode event bytes —
+/// are therefore independent of the worker count, exactly like
+/// [`run_cells`] itself. `mode` is always passed explicitly; consulting
+/// `JANUS_OBS` is the caller's decision, never this function's.
+pub fn run_cells_traced(
+    cells: &[SweepCell<'_>],
+    threads: usize,
+    mode: ObsMode,
+) -> (Vec<CellResult>, Recorder) {
+    let pairs = sweep(cells, threads, |i, cell| {
+        let mut sys = (cell.build)();
+        let mut rec = Recorder::new(mode);
+        rec.set_pid(i as u32);
+        let outcome = engine::run_with_recorder(sys.as_mut(), &cell.scenario, cell.seed, &mut rec);
+        (
+            CellResult {
+                label: cell.label.clone(),
+                outcome,
+            },
+            rec,
+        )
+    });
+    let mut merged = Recorder::new(mode);
+    let mut results = Vec::with_capacity(pairs.len());
+    for (res, rec) in pairs {
+        merged.merge(&rec);
+        results.push(res);
+    }
+    (results, merged)
 }
 
 #[cfg(test)]

@@ -1,0 +1,169 @@
+//! Canonical pinned trace bundle for the observability plane.
+//!
+//! One fixed cell grid — every mode, policy, and seed pinned explicitly,
+//! nothing resolved from the environment — run through
+//! [`crate::sim::sweep::run_cells_traced`] and serialized with the
+//! [`crate::obs::export`] writers. Because the cells, the engine, and
+//! the exporters are all deterministic, the bundle's bytes are a pure
+//! function of `(mode,)`: identical across reruns, thread counts, and
+//! CI env legs. `bin/trace` writes it to disk, `bin/figures
+//! --trace-out` attaches it to a figures run, and
+//! `tests/sweep_determinism.rs` pins the byte-identity claim.
+
+use crate::baselines::{build_eval_system, EVAL_SYSTEMS};
+use crate::config::hardware::paper_testbed;
+use crate::config::models;
+use crate::config::serving::Slo;
+use crate::obs::export::{chrome_trace, metrics_tsv};
+use crate::obs::{ObsMode, Recorder};
+use crate::routing::gate::ExpertPopularity;
+use crate::scaling::ScalingMode;
+use crate::sim::admission::AdmissionConfig;
+use crate::sim::engine::{AutoscaleScenario, FailureScenario, FixedBatchScenario, Scenario};
+use crate::sim::faults::{DegradationPolicy, FaultPlan};
+use crate::sim::sweep::{run_cells_traced, CellResult, SweepCell};
+use crate::workload::trace::DiurnalTrace;
+
+/// Seed of every sample cell (the goldens' canonical seed).
+pub const SAMPLE_SEED: u64 = 424242;
+
+/// A serialized telemetry bundle: the Chrome-trace JSON and the
+/// counters/ledger TSV, plus the cell results the run produced.
+#[derive(Debug)]
+pub struct TraceBundle {
+    /// Chrome-trace-event JSON (open with Perfetto / `chrome://tracing`).
+    /// In `counters` mode the event stream is empty but still valid JSON.
+    pub trace_json: String,
+    /// Counters, phase lanes, and ledger summary as TSV.
+    pub metrics_tsv: String,
+    /// Per-cell scenario results, in submission order.
+    pub results: Vec<CellResult>,
+}
+
+/// The pinned sample grid: one fixed-batch cell per evaluation system,
+/// an autoscale ramp on Janus under both scaling modes (reactive and
+/// closed-loop — the latter exercises the signal-snapshot instants),
+/// and a failure-injection cell with the golden fault plan (crash,
+/// straggler, transient comm, attention-host loss) under the replica
+/// degradation policy. Every knob is pinned explicitly so the grid is
+/// immune to `JANUS_ADMISSION` / `JANUS_SCALING` / `JANUS_FAULTS`.
+pub fn sample_cells() -> Vec<SweepCell<'static>> {
+    let model = models::deepseek_v2();
+    let hw = paper_testbed();
+    let pop = ExpertPopularity::Zipf { s: 0.4 };
+    let slo = Slo::from_ms(200.0);
+    let mut cells: Vec<SweepCell<'static>> = Vec::new();
+    for which in 0..EVAL_SYSTEMS {
+        let (model, hw, pop) = (model.clone(), hw.clone(), pop.clone());
+        cells.push(SweepCell {
+            label: format!("fixed/{which}/B64"),
+            build: Box::new(move || build_eval_system(which, model.clone(), hw.clone(), &pop)),
+            scenario: Scenario::FixedBatch(FixedBatchScenario {
+                batch: 64,
+                slo,
+                steps: 40,
+            }),
+            seed: SAMPLE_SEED,
+        });
+    }
+    for (name, mode) in [
+        ("reactive", ScalingMode::Reactive),
+        ("closed", ScalingMode::Closed),
+    ] {
+        let trace = DiurnalTrace::ramp(720.0 / 3600.0, 30.0, 1.0, 8.0, 4242);
+        let mut scenario = AutoscaleScenario::new(300.0, 64.0, slo, trace);
+        scenario.admission = AdmissionConfig::fifo();
+        scenario.scaling = mode;
+        let (model, hw, pop) = (model.clone(), hw.clone(), pop.clone());
+        cells.push(SweepCell {
+            label: format!("autoscale/janus/{name}"),
+            build: Box::new(move || build_eval_system(0, model.clone(), hw.clone(), &pop)),
+            scenario: Scenario::Autoscale(scenario),
+            seed: SAMPLE_SEED,
+        });
+    }
+    {
+        let plan = FaultPlan::new()
+            .with_instance_crash(30.0, 60.0, 0)
+            .with_straggler(50.0, 40.0, 2.0)
+            .with_transient_comm(100.0, 20.0, 0.5)
+            .with_attention_host_loss(140.0, 20.0, 1, false)
+            .with_policy(DegradationPolicy::Replica);
+        let mut scenario = FailureScenario::new(slo, 4.0, 32.0, 180.0).with_faults(plan);
+        scenario.admission = AdmissionConfig::fifo();
+        scenario.scaling = ScalingMode::Reactive;
+        let (model, hw, pop) = (model.clone(), hw.clone(), pop.clone());
+        cells.push(SweepCell {
+            label: "faults/janus/replica".to_string(),
+            build: Box::new(move || build_eval_system(0, model.clone(), hw.clone(), &pop)),
+            scenario: Scenario::FailureInjection(scenario),
+            seed: SAMPLE_SEED,
+        });
+    }
+    cells
+}
+
+/// Run the pinned sample grid at `mode` over `threads` workers and
+/// serialize the merged recorder. The bundle's bytes depend only on
+/// `mode` — never on `threads`, rerun count, or the environment.
+pub fn sample_bundle(mode: ObsMode, threads: usize) -> TraceBundle {
+    let cells = sample_cells();
+    let (results, rec) = run_cells_traced(&cells, threads, mode);
+    bundle_from(&rec, results)
+}
+
+/// Serialize an already-merged recorder into a [`TraceBundle`].
+pub fn bundle_from(rec: &Recorder, results: Vec<CellResult>) -> TraceBundle {
+    TraceBundle {
+        trace_json: chrome_trace(rec.events()),
+        metrics_tsv: metrics_tsv(rec),
+        results,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Counter;
+
+    #[test]
+    fn sample_bundle_is_rerun_and_thread_invariant() {
+        let a = sample_bundle(ObsMode::Full, 1);
+        let b = sample_bundle(ObsMode::Full, 2);
+        assert_eq!(a.trace_json, b.trace_json, "thread count leaked into trace bytes");
+        assert_eq!(a.metrics_tsv, b.metrics_tsv, "thread count leaked into metrics bytes");
+        let c = sample_bundle(ObsMode::Full, 1);
+        assert_eq!(a.trace_json, c.trace_json, "rerun changed trace bytes");
+    }
+
+    #[test]
+    fn counters_mode_has_metrics_but_no_events() {
+        let cells = sample_cells();
+        let (results, rec) = run_cells_traced(&cells, 2, ObsMode::Counters);
+        assert_eq!(results.len(), cells.len());
+        assert!(rec.events().is_empty(), "counters mode must not buffer events");
+        assert!(rec.counter(Counter::DecodeSteps) > 0);
+        assert!(rec.counter(Counter::FaultsOpened) >= 4, "fault plan has 4 windows");
+        assert!(rec.ledger().total() > 0.0);
+    }
+
+    #[test]
+    fn full_mode_trace_covers_every_track() {
+        let bundle = sample_bundle(ObsMode::Full, 2);
+        for needle in [
+            "\"decode\"",
+            "\"queue_wait\"",
+            "\"decision\"",
+            "\"signal\"",
+            "\"recovery\"",
+        ] {
+            assert!(
+                bundle.trace_json.contains(needle),
+                "trace missing {needle}"
+            );
+        }
+        for row in ["counter\tdecode_steps", "lane\tattention", "lane\tprefill"] {
+            assert!(bundle.metrics_tsv.contains(row), "metrics missing {row}");
+        }
+    }
+}

@@ -104,6 +104,10 @@ pub struct BenchRecord {
     /// `None` for benches that don't go through admission (absent in
     /// the JSON).
     pub policy: Option<String>,
+    /// Observability mode of the measurement (`off` / `counters` /
+    /// `full`); `None` for benches that don't drive a recorder (absent
+    /// in the JSON).
+    pub obs: Option<String>,
 }
 
 impl BenchRecord {
@@ -115,6 +119,7 @@ impl BenchRecord {
             steps_per_s: if r.mean_ns > 0.0 { 1e9 / r.mean_ns } else { 0.0 },
             threads: None,
             policy: None,
+            obs: None,
         }
     }
 
@@ -127,6 +132,12 @@ impl BenchRecord {
     /// Tag the record with the admission policy it was measured under.
     pub fn with_policy(mut self, policy: &str) -> Self {
         self.policy = Some(policy.to_string());
+        self
+    }
+
+    /// Tag the record with the observability mode it was measured under.
+    pub fn with_obs(mut self, obs: &str) -> Self {
+        self.obs = Some(obs.to_string());
         self
     }
 }
@@ -149,8 +160,8 @@ fn json_escape(s: &str) -> String {
     out
 }
 
-/// Render a `BENCH_*.json` trajectory document (schema `janus-bench-v3`:
-/// v2 plus an optional per-record `policy` field for admission-path
+/// Render a `BENCH_*.json` trajectory document (schema `janus-bench-v4`:
+/// v3 plus an optional per-record `obs` field for recorder-overhead
 /// benches). `timestamp_unix_s` and `hardware_threads` are passed in by
 /// the caller (the bench binary) — the harness itself never reads a
 /// clock for anything but interval measurement, and simulation code
@@ -169,7 +180,7 @@ pub fn bench_json(
         }
     };
     let mut out = String::from("{\n");
-    out.push_str("  \"schema\": \"janus-bench-v3\",\n");
+    out.push_str("  \"schema\": \"janus-bench-v4\",\n");
     out.push_str(&format!("  \"generated_unix_s\": {timestamp_unix_s},\n"));
     out.push_str(&format!("  \"hardware_threads\": {hardware_threads},\n"));
     out.push_str("  \"benches\": [\n");
@@ -183,13 +194,19 @@ pub fn bench_json(
             .as_ref()
             .map(|p| format!(", \"policy\": \"{}\"", json_escape(p)))
             .unwrap_or_default();
+        let obs = r
+            .obs
+            .as_ref()
+            .map(|o| format!(", \"obs\": \"{}\"", json_escape(o)))
+            .unwrap_or_default();
         out.push_str(&format!(
-            "    {{\"name\": \"{}\", \"mean_ns\": {}, \"steps_per_s\": {}{}{}}}{}\n",
+            "    {{\"name\": \"{}\", \"mean_ns\": {}, \"steps_per_s\": {}{}{}{}}}{}\n",
             json_escape(&r.name),
             num(r.mean_ns),
             num(r.steps_per_s),
             threads,
             policy,
+            obs,
             if i + 1 < records.len() { "," } else { "" }
         ));
     }
@@ -235,6 +252,7 @@ mod tests {
                 steps_per_s: 81_000.5,
                 threads: None,
                 policy: None,
+                obs: None,
             },
             BenchRecord {
                 name: "sweep/figures-grid".to_string(),
@@ -242,6 +260,7 @@ mod tests {
                 steps_per_s: 1e3,
                 threads: Some(4),
                 policy: None,
+                obs: None,
             },
             BenchRecord {
                 name: "quote\"and\\slash".to_string(),
@@ -249,6 +268,7 @@ mod tests {
                 steps_per_s: f64::INFINITY,
                 threads: None,
                 policy: None,
+                obs: None,
             },
             BenchRecord {
                 name: "admission/decode-loop".to_string(),
@@ -256,10 +276,19 @@ mod tests {
                 steps_per_s: 5e5,
                 threads: None,
                 policy: Some("kv".to_string()),
+                obs: None,
+            },
+            BenchRecord {
+                name: "obs/step+record".to_string(),
+                mean_ns: 4e3,
+                steps_per_s: 2.5e5,
+                threads: None,
+                policy: None,
+                obs: Some("counters".to_string()),
             },
         ];
         let doc = bench_json(1_753_000_000, 8, &records);
-        assert!(doc.contains("\"schema\": \"janus-bench-v3\""));
+        assert!(doc.contains("\"schema\": \"janus-bench-v4\""));
         assert!(doc.contains("\"generated_unix_s\": 1753000000"));
         assert!(doc.contains("\"hardware_threads\": 8"));
         assert!(doc.contains("\"mean_ns\": 12345.678"));
@@ -270,6 +299,9 @@ mod tests {
         // Admission records carry their policy; everything else doesn't.
         assert!(doc.contains("\"steps_per_s\": 500000.000, \"policy\": \"kv\""));
         assert_eq!(doc.matches("\"policy\":").count(), 1);
+        // Recorder-overhead records carry their obs mode; others don't.
+        assert!(doc.contains("\"steps_per_s\": 250000.000, \"obs\": \"counters\""));
+        assert_eq!(doc.matches("\"obs\":").count(), 1);
         // Escaping + non-finite fallback keep the document valid.
         assert!(doc.contains("quote\\\"and\\\\slash"));
         assert!(doc.contains("\"mean_ns\": 0, \"steps_per_s\": 0"));

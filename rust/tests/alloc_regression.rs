@@ -20,6 +20,7 @@ use janus::baselines::{
 use janus::config::hardware::paper_testbed;
 use janus::config::models;
 use janus::config::serving::Slo;
+use janus::obs::{ObsMode, Recorder};
 use janus::routing::gate::ExpertPopularity;
 use janus::util::rng::Rng;
 
@@ -114,4 +115,67 @@ fn steady_state_decode_steps_do_not_allocate() {
             2 * STEPS
         );
     }
+
+    // Observability plane: recording every step into a counters-mode
+    // recorder, a pre-sized full-mode recorder, AND an off-mode one adds
+    // ZERO allocations to the steady-state loop — counters/ledger are
+    // fixed arrays, the phase split is pure float arithmetic, and the
+    // full-mode event buffer never grows past its pre-sized capacity.
+    let mut off = Recorder::new(ObsMode::Off);
+    let mut counters = Recorder::new(ObsMode::Counters);
+    let mut full = Recorder::with_capacity(ObsMode::Full, 2 * STEPS);
+    let mut rng = Rng::seed_from_u64(9);
+    let mut record_all = |janus: &mut JanusSystem, t: f64, rng: &mut Rng| {
+        let out = janus.step(BATCH, rng);
+        let phases = janus.step_phases().reconciled(out.tpot);
+        for rec in [&mut off, &mut counters, &mut full] {
+            if rec.enabled() {
+                rec.decode_step(t, out.tpot, BATCH, out.a_max, &phases, 0.0, 0.0, 0.0);
+            }
+        }
+        out.tpot
+    };
+    for i in 0..20 {
+        std::hint::black_box(record_all(&mut janus, i as f64, &mut rng));
+    }
+    let before = allocations();
+    for i in 0..STEPS {
+        std::hint::black_box(record_all(&mut janus, (20 + i) as f64, &mut rng));
+    }
+    let obs_allocs = allocations() - before;
+    assert_eq!(
+        obs_allocs, 0,
+        "recording {STEPS} decode steps (off + counters + pre-sized full) \
+         allocated {obs_allocs} times — the zero-alloc telemetry contract \
+         is broken"
+    );
+    assert!(counters.counter(janus::obs::Counter::DecodeSteps) >= STEPS as u64);
+    assert_eq!(full.events().len(), 20 + STEPS, "one span per recorded step");
+
+    // Off stays provably inert: nothing counted, nothing buffered, and
+    // the same seeded step sequence with and without an off recorder in
+    // the loop yields bit-identical charges.
+    assert!(off.counters().iter().all(|&c| c == 0));
+    assert!(off.events().is_empty());
+    assert_eq!(off.ledger().total(), 0.0);
+    let replay = |with_recorder: bool| -> Vec<u64> {
+        let model = models::deepseek_v2();
+        let hw = paper_testbed();
+        let pop = ExpertPopularity::Zipf { s: 0.4 };
+        let mut sys = JanusSystem::build(model, hw, &pop, 16, 42);
+        sys.configure(BATCH, Slo::from_ms(200.0)).expect("feasible");
+        let mut rec = Recorder::new(ObsMode::Off);
+        let mut rng = Rng::seed_from_u64(21);
+        (0..50)
+            .map(|i| {
+                let out = sys.step(BATCH, &mut rng);
+                if with_recorder && rec.enabled() {
+                    let phases = sys.step_phases().reconciled(out.tpot);
+                    rec.decode_step(i as f64, out.tpot, BATCH, out.a_max, &phases, 0.0, 0.0, 0.0);
+                }
+                out.tpot.to_bits()
+            })
+            .collect()
+    };
+    assert_eq!(replay(false), replay(true), "off-mode recorder perturbed the floats");
 }

@@ -1,0 +1,183 @@
+//! Tier-1 pins for the observability plane (`rust/src/obs`):
+//!
+//! - **Bit-exact phase attribution**: for every evaluation system, the
+//!   step's phase lanes sum to the step's charged TPOT to the bit
+//!   (`StepPhases::total().to_bits() == out.tpot.to_bits()`), and the
+//!   attribution is real (not the collapsed fallback).
+//! - **Mode transparency**: `run_with_recorder` at off / counters /
+//!   full produces bit-identical scenario outcomes — the recorder can
+//!   never perturb the simulated floats.
+//! - **Ledger conservation**: the phase ledger's total equals the sum
+//!   of charged step times.
+//! - **Trace byte determinism**: rerunning the same cell grid yields
+//!   byte-identical Chrome-trace JSON and metrics TSV (thread-count
+//!   invariance is pinned in `tests/sweep_determinism.rs`).
+//!
+//! Every cell pins its modes explicitly, so this file passes
+//! identically under every `JANUS_OBS` / `JANUS_ADMISSION` /
+//! `JANUS_SCALING` / `JANUS_FAULTS` CI leg.
+
+use janus::baselines::{build_eval_system, EVAL_SYSTEMS};
+use janus::config::hardware::paper_testbed;
+use janus::config::models;
+use janus::config::serving::Slo;
+use janus::obs::{Counter, ObsMode, Recorder};
+use janus::routing::gate::ExpertPopularity;
+use janus::sim::engine::{
+    run_with_recorder, FixedBatchScenario, Scenario, ScenarioOutcome,
+};
+use janus::sim::tracegen::{sample_bundle, sample_cells};
+use janus::util::rng::Rng;
+
+fn pop() -> ExpertPopularity {
+    ExpertPopularity::Zipf { s: 0.4 }
+}
+
+/// The acceptance-criterion pin: per-step phase lanes sum exactly (to
+/// the bit) to the step's charged latency, for all four systems.
+#[test]
+fn step_phases_total_is_bit_exact_for_every_system() {
+    let model = models::deepseek_v2();
+    let hw = paper_testbed();
+    let slo = Slo::from_ms(200.0);
+    for which in 0..EVAL_SYSTEMS {
+        let mut sys = build_eval_system(which, model.clone(), hw.clone(), &pop());
+        let cfg = sys.configure(64, slo);
+        assert!(cfg.is_some(), "system {which} infeasible at B=64/200ms");
+        let mut rng = Rng::seed_from_u64(7);
+        for step in 0..25 {
+            let out = sys.step(64, &mut rng);
+            let phases = sys.step_phases();
+            assert_eq!(
+                phases.total().to_bits(),
+                out.tpot.to_bits(),
+                "system {which} step {step}: lanes {phases:?} do not sum to tpot {}",
+                out.tpot,
+            );
+            assert!(
+                phases.attributed(),
+                "system {which} step {step}: attribution collapsed to a single lane"
+            );
+            assert!(
+                phases.attention > 0.0 && phases.expert > 0.0,
+                "system {which} step {step}: empty attention/expert lanes in {phases:?}"
+            );
+        }
+    }
+}
+
+/// `reconciled` must accept a bit-exact attribution unchanged and
+/// collapse a mismatched one rather than misreport.
+#[test]
+fn reconcile_accepts_exact_and_collapses_mismatch() {
+    let model = models::deepseek_v2();
+    let hw = paper_testbed();
+    let mut sys = build_eval_system(0, model, hw, &pop());
+    sys.configure(64, Slo::from_ms(200.0));
+    let mut rng = Rng::seed_from_u64(11);
+    let out = sys.step(64, &mut rng);
+    let phases = sys.step_phases();
+    let kept = phases.reconciled(out.tpot);
+    assert_eq!(kept.attention.to_bits(), phases.attention.to_bits());
+    assert!(kept.attributed());
+    let collapsed = phases.reconciled(out.tpot * 2.0);
+    assert!(!collapsed.attributed());
+    assert_eq!(collapsed.total().to_bits(), (out.tpot * 2.0).to_bits());
+}
+
+/// Scenario outcomes are bit-identical across observability modes: the
+/// recorder observes, it never participates.
+#[test]
+fn outcomes_identical_across_obs_modes() {
+    let cells = sample_cells();
+    for cell in &cells {
+        let mut outs = Vec::new();
+        for mode in [ObsMode::Off, ObsMode::Counters, ObsMode::Full] {
+            let mut sys = (cell.build)();
+            let mut rec = Recorder::new(mode);
+            let out = run_with_recorder(sys.as_mut(), &cell.scenario, cell.seed, &mut rec)
+                .expect("sample cells are valid scenarios");
+            outs.push(format!("{out:?}"));
+        }
+        assert_eq!(outs[0], outs[1], "{}: off vs counters outcome drift", cell.label);
+        assert_eq!(outs[0], outs[2], "{}: off vs full outcome drift", cell.label);
+    }
+}
+
+/// Off-mode recorders record literally nothing.
+#[test]
+fn off_mode_records_nothing() {
+    let cells = sample_cells();
+    let cell = &cells[0];
+    let mut sys = (cell.build)();
+    let mut rec = Recorder::new(ObsMode::Off);
+    run_with_recorder(sys.as_mut(), &cell.scenario, cell.seed, &mut rec)
+        .expect("valid scenario");
+    assert!(!rec.enabled());
+    assert!(rec.counters().iter().all(|&c| c == 0));
+    assert!(rec.events().is_empty());
+    assert_eq!(rec.ledger().decode_steps(), 0);
+    assert_eq!(rec.ledger().total(), 0.0);
+}
+
+/// The ledger conserves charged time: its lane total equals the sum of
+/// every step's charged duration, and the decode-step counter matches
+/// the scenario's reported step count.
+#[test]
+fn ledger_total_matches_charged_step_time() {
+    let model = models::deepseek_v2();
+    let hw = paper_testbed();
+    let scenario = Scenario::FixedBatch(FixedBatchScenario {
+        batch: 64,
+        slo: Slo::from_ms(200.0),
+        steps: 30,
+    });
+    for which in 0..EVAL_SYSTEMS {
+        // Reference run: same seed, recorder off — sum the charged tpots.
+        let mut sys = build_eval_system(which, model.clone(), hw.clone(), &pop());
+        let mut off = Recorder::disabled();
+        let reference = run_with_recorder(sys.as_mut(), &scenario, 77, &mut off)
+            .expect("fixed batch always valid");
+        let mut sys = build_eval_system(which, model.clone(), hw.clone(), &pop());
+        let mut rec = Recorder::new(ObsMode::Counters);
+        let outcome = run_with_recorder(sys.as_mut(), &scenario, 77, &mut rec)
+            .expect("fixed batch always valid");
+        assert_eq!(format!("{reference:?}"), format!("{outcome:?}"));
+        let r = match outcome {
+            ScenarioOutcome::FixedBatch(r) => r,
+            other => panic!("unexpected outcome {other:?}"),
+        };
+        assert_eq!(rec.counter(Counter::DecodeSteps), 30);
+        assert_eq!(rec.ledger().decode_steps(), 30);
+        // Lane total ≈ steps × mean tpot (the result's mean is the same
+        // accumulation divided by the count, so agreement here is tight).
+        let charged = r.tpot_mean * 30.0;
+        let total = rec.ledger().total();
+        assert!(
+            (total - charged).abs() <= 1e-9 * charged.max(1.0),
+            "system {which}: ledger {total} vs charged {charged}"
+        );
+        assert_eq!(
+            rec.counter(Counter::UnattributedSteps),
+            0,
+            "system {which}: collapsed attributions in a clean fixed-batch run"
+        );
+    }
+}
+
+/// Rerunning the canonical grid reproduces the trace and metrics bytes
+/// exactly — the foundation of the CI artifact's stability.
+#[test]
+fn trace_bytes_are_rerun_identical() {
+    let a = sample_bundle(ObsMode::Full, 2);
+    let b = sample_bundle(ObsMode::Full, 2);
+    assert_eq!(a.trace_json, b.trace_json);
+    assert_eq!(a.metrics_tsv, b.metrics_tsv);
+    assert!(!a.trace_json.is_empty());
+    // Spot-check the export shape: valid Chrome-trace JSON array and a
+    // TSV metrics block with the lane rows.
+    assert!(a.trace_json.starts_with("[\n"));
+    assert!(a.trace_json.ends_with("\n]\n"));
+    assert!(a.metrics_tsv.contains("counter\tdecode_steps"));
+    assert!(a.metrics_tsv.contains("lane\tattention"));
+}

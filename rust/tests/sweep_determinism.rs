@@ -441,6 +441,41 @@ fn scaling_signal_assembly_is_pure_across_thread_counts() {
 }
 
 #[test]
+fn trace_bytes_are_byte_identical_across_thread_counts() {
+    // The observability plane rides the same contract as the results:
+    // the merged recorder is assembled in cell-submission order, so the
+    // serialized Chrome-trace JSON and metrics TSV from the canonical
+    // sample grid are byte-identical at every worker count — including
+    // an oversubscribed one — and across reruns at the same seed.
+    use janus::obs::ObsMode;
+    use janus::sim::tracegen::sample_bundle;
+    let serial = sample_bundle(ObsMode::Full, 1);
+    assert!(!serial.trace_json.is_empty());
+    assert!(serial.results.iter().all(|c| c.outcome.is_ok()));
+    let parallel = if sweep::hardware_threads() >= 4 { 4 } else { 2 };
+    for threads in [2usize, parallel, 64] {
+        let run = sample_bundle(ObsMode::Full, threads);
+        assert_eq!(
+            serial.trace_json, run.trace_json,
+            "trace bytes drifted at threads={threads}"
+        );
+        assert_eq!(
+            serial.metrics_tsv, run.metrics_tsv,
+            "metrics bytes drifted at threads={threads}"
+        );
+    }
+    let rerun = sample_bundle(ObsMode::Full, 1);
+    assert_eq!(serial.trace_json, rerun.trace_json, "rerun drifted");
+    assert_eq!(serial.metrics_tsv, rerun.metrics_tsv, "rerun drifted");
+    // Counters mode shares the byte-identity claim for its TSV (its
+    // event stream is empty by construction).
+    let c1 = sample_bundle(ObsMode::Counters, 1);
+    let c4 = sample_bundle(ObsMode::Counters, parallel);
+    assert_eq!(c1.metrics_tsv, c4.metrics_tsv);
+    assert_eq!(c1.trace_json, "[\n\n]\n", "counters mode buffered events");
+}
+
+#[test]
 fn janus_threads_env_is_parsed_not_trusted_blindly() {
     // resolve_threads: explicit wins over everything and is clamped to
     // ≥ 1; the environment fallback path is covered by the CI matrix
